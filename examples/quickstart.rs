@@ -1,0 +1,88 @@
+//! Quickstart: HyperAttention vs exact attention on one workload.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Generates an LSH-friendly clustered workload, runs the exact
+//! (FlashAttention-structured) baseline and HyperAttention, and reports
+//! the paper's quantities: wall-clock speedup, the Eq. (1) spectral
+//! error, and the fine-grained hardness parameters α and κ.
+
+use std::time::Instant;
+
+use hyperattention::attention::causal::{causal_hyper_attention, CausalParams};
+use hyperattention::attention::exact;
+use hyperattention::attention::hyper::{hyper_attention, HyperParams};
+use hyperattention::attention::measure;
+use hyperattention::bench::clustered_qkv;
+use hyperattention::lsh::{BlockMask, Lsh};
+use hyperattention::rng::Rng;
+
+fn main() {
+    let (n, d) = (4096usize, 64usize);
+    let (q, k, v) = clustered_qkv(0, n, d, 32, 0.4);
+    println!("workload: n={n}, d={d}, 32 clusters (LSH-friendly)\n");
+
+    // ---- exact baseline (FlashAttention structure) ----
+    let t0 = Instant::now();
+    let exact_out = exact::flash_attention(&q, &k, &v, false, None, 64);
+    let t_exact = t0.elapsed();
+
+    // ---- HyperAttention (Algorithm 3) ----
+    let params = HyperParams { block: 256, samples: 256, ..Default::default() };
+    let t0 = Instant::now();
+    let hyper_out = hyper_attention(&q, &k, &v, &params, &mut Rng::new(7));
+    let t_hyper = t0.elapsed();
+
+    let rel_fro = {
+        let mut diff = hyper_out.clone();
+        for (a, b) in diff.data.iter_mut().zip(&exact_out.data) {
+            *a -= b;
+        }
+        diff.fro_norm() / exact_out.fro_norm()
+    };
+    let spectral = measure::spectral_error(&hyper_out, &q, &k, &v, false, None);
+
+    println!("exact (flash) forward : {t_exact:>10.2?}");
+    println!("hyper forward         : {t_hyper:>10.2?}");
+    println!(
+        "speedup               : {:>9.2}x",
+        t_exact.as_secs_f64() / t_hyper.as_secs_f64()
+    );
+    println!("relative Frobenius err: {rel_fro:>10.4}");
+    println!("Eq. (1) spectral err  : {spectral:>10.4}\n");
+
+    // ---- causal variant (Algorithm 4) ----
+    let t0 = Instant::now();
+    let exact_c = exact::flash_attention(&q, &k, &v, true, None, 64);
+    let t_exact_c = t0.elapsed();
+    let cp = CausalParams { base: 512, hyper: params, flash_block: 64 };
+    let t0 = Instant::now();
+    let hyper_c = causal_hyper_attention(&q, &k, &v, &cp, &mut Rng::new(7));
+    let t_hyper_c = t0.elapsed();
+    let rel_c = {
+        let mut diff = hyper_c.clone();
+        for (a, b) in diff.data.iter_mut().zip(&exact_c.data) {
+            *a -= b;
+        }
+        diff.fro_norm() / exact_c.fro_norm()
+    };
+    println!("causal exact          : {t_exact_c:>10.2?}");
+    println!("causal hyper (Alg. 4) : {t_hyper_c:>10.2?}");
+    println!(
+        "causal speedup        : {:>9.2}x",
+        t_exact_c.as_secs_f64() / t_hyper_c.as_secs_f64()
+    );
+    println!("causal rel Fro err    : {rel_c:>10.4}\n");
+
+    // ---- the paper's hardness parameters ----
+    let mut rng = Rng::new(1);
+    let alpha = measure::alpha_sampled(&q, &k, None, 128, &mut rng);
+    let lsh = Lsh::new(d, 8, &mut rng);
+    let mask = BlockMask::from_lsh(&lsh, &q, &k, 256);
+    let kappa = measure::kappa(&q, &k, &mask, None);
+    println!("alpha (n·max col norm²): {alpha:.2}  (n = {n}; sublinear ⇒ assumption holds)");
+    println!("kappa (unmasked row-sum ratio): {kappa:.2}");
+    println!("mask nnz = {} = n·b (n^(1+o(1)) sparse by design)", mask.nnz());
+}

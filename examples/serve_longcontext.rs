@@ -1,0 +1,107 @@
+//! End-to-end serving driver (the E2E validation run in EXPERIMENTS.md).
+//!
+//! ```bash
+//! cargo run --release --example serve_longcontext            # substrate only
+//! cargo run --release --example serve_longcontext artifacts  # + PJRT artifacts
+//! ```
+//!
+//! Proves all layers compose: starts the coordinator (router → dynamic
+//! batcher → engine with PJRT runtime + Rust substrate), submits a mixed
+//! long-context workload (short exact-routed jobs at artifact shapes,
+//! long hyper-routed jobs on the substrate, causal and non-causal,
+//! bursty arrivals from many client threads), and reports latency
+//! percentiles, throughput, batch statistics, and per-backend counts.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use hyperattention::coordinator::{
+    AttnJob, Backend, ModePreference, Server, ServerConfig,
+};
+use hyperattention::rng::Rng;
+
+fn mk_job(heads: usize, n: usize, d: usize, causal: bool, seed: i32) -> AttnJob {
+    let mut rng = Rng::new(seed as u64);
+    let len = heads * n * d;
+    AttnJob {
+        id: 0,
+        heads,
+        n,
+        d,
+        q: rng.normal_vec(len),
+        k: rng.normal_vec(len),
+        v: rng.normal_vec(len),
+        causal,
+        mode: ModePreference::Auto,
+        seed,
+    }
+}
+
+fn main() {
+    let artifacts = std::env::args().nth(1);
+    let mut cfg = match &artifacts {
+        Some(dir) => ServerConfig::with_artifacts(dir.clone()),
+        None => ServerConfig::substrate_only(),
+    };
+    // long-context policy: hyper above 1024; artifact shapes are exact 128-512
+    cfg.router.hyper_threshold = 1024;
+    cfg.router.block = 128;
+    cfg.router.samples = 128;
+    cfg.router.causal_base = 512;
+    cfg.batch.max_batch = 8;
+    cfg.batch.max_wait = std::time::Duration::from_millis(2);
+
+    let server = Arc::new(Server::start(cfg));
+    println!(
+        "coordinator up ({} mode)",
+        if artifacts.is_some() { "artifacts + substrate" } else { "substrate-only" }
+    );
+
+    // Mixed workload: 3 client classes, bursty.
+    //   A: short non-causal jobs at the 128-artifact shape (h=4, d=64)
+    //   B: medium causal jobs (off-artifact shape -> substrate exact)
+    //   C: long-context jobs (n = 2048/4096 -> hyper substrate)
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for c in 0..12u32 {
+        let s = server.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut lat = Vec::new();
+            for i in 0..6u32 {
+                let seed = (c * 100 + i) as i32;
+                let job = match c % 3 {
+                    0 => mk_job(4, 128, 64, false, seed),
+                    1 => mk_job(2, 384, 32, true, seed),
+                    _ => mk_job(2, if i % 2 == 0 { 2048 } else { 4096 }, 64, i % 3 == 0, seed),
+                };
+                let t = Instant::now();
+                let resp = s.submit_wait(job).expect("job failed");
+                lat.push((resp.backend.clone(), t.elapsed()));
+            }
+            lat
+        }));
+    }
+
+    let mut artifact_jobs = 0usize;
+    let mut substrate_jobs = 0usize;
+    let mut total = 0usize;
+    for cthread in clients {
+        for (backend, _) in cthread.join().unwrap() {
+            total += 1;
+            match backend {
+                Backend::Artifact(_) => artifact_jobs += 1,
+                Backend::Substrate => substrate_jobs += 1,
+            }
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+
+    println!("\n=== E2E serving run ===");
+    println!("jobs completed : {total} in {dt:.2}s  ({:.1} jobs/s)", total as f64 / dt);
+    println!("backends       : artifact={artifact_jobs} substrate={substrate_jobs}");
+    println!("{}", server.metrics().report());
+
+    // Throughput in attention-tokens/s (each job processes h·n rows)
+    let tokens: usize = 24 * 128 * 4 + 24 * 384 * 2 + 12 * 2048 * 2 + 12 * 4096 * 2;
+    println!("approx attention rows/s: {:.0}", tokens as f64 / dt);
+}

@@ -1,0 +1,152 @@
+"""AOT bridge: lower every serving artifact to HLO TEXT + a JSON manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/load_hlo/ for the smoke-verified pattern.
+
+Artifacts (all pure functions of their inputs; randomness enters as an
+int32 seed input, so the Rust coordinator controls reproducibility):
+
+  attn_exact_{n}            (q,k,v: f32[h,n,d])          -> f32[h,n,d]
+  attn_exact_causal_{n}     (q,k,v)                      -> f32[h,n,d]
+  attn_hyper_{n}            (q,k,v, seed: i32)           -> f32[h,n,d]
+  attn_hyper_causal_{n}     (q,k,v, seed: i32)           -> f32[h,n,d]
+  lm_loss_{n}_p{l}          (tokens: i32[n], seed: i32)  -> f32[] CE loss
+                            (model params baked in as constants)
+
+`make artifacts` runs this once; Python never runs at serve time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .kernels import block_attn, causal as causal_k, hyper, ref
+
+# Serving-artifact geometry: PJRT-CPU with interpret-mode Pallas is the
+# correctness path, so shapes stay modest; the Rust substrate covers the
+# large-n performance path (DESIGN.md section 6).
+HEADS = 4
+DIM = 64
+ATTN_SIZES = (128, 256, 512)
+HYPER_BLOCK = 32
+HYPER_SAMPLES = 64
+HYPER_BASE = 128
+LM_N = 256
+LM_PATCH = (0, 2, 4)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _attn_exact_mh(q, k, v, *, causal: bool):
+    fn = functools.partial(block_attn.flash_attention, causal=causal)
+    return (jax.vmap(fn)(q, k, v),)
+
+
+def _attn_hyper_mh(q, k, v, seed):
+    return (hyper.hyper_attention_mh(
+        q, k, v, seed, block=HYPER_BLOCK, n_samples=HYPER_SAMPLES),)
+
+
+def _attn_hyper_causal_mh(q, k, v, seed):
+    return (causal_k.causal_hyper_attention_mh(
+        q, k, v, seed, base=HYPER_BASE, block=HYPER_BLOCK,
+        n_samples=HYPER_SAMPLES),)
+
+
+def build_artifacts():
+    """Yield (name, lowered, meta) for every artifact."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    for n in ATTN_SIZES:
+        spec = jax.ShapeDtypeStruct((HEADS, n, DIM), f32)
+        seed_spec = jax.ShapeDtypeStruct((), i32)
+        meta_common = {"heads": HEADS, "n": n, "d": DIM}
+
+        yield (f"attn_exact_{n}",
+               jax.jit(functools.partial(_attn_exact_mh, causal=False), keep_unused=True)
+               .lower(spec, spec, spec),
+               {"kind": "attn_exact", "causal": False,
+                "inputs": ["q", "k", "v"], **meta_common})
+        yield (f"attn_exact_causal_{n}",
+               jax.jit(functools.partial(_attn_exact_mh, causal=True), keep_unused=True)
+               .lower(spec, spec, spec),
+               {"kind": "attn_exact", "causal": True,
+                "inputs": ["q", "k", "v"], **meta_common})
+        yield (f"attn_hyper_{n}",
+               jax.jit(_attn_hyper_mh, keep_unused=True).lower(spec, spec, spec, seed_spec),
+               {"kind": "attn_hyper", "causal": False,
+                "inputs": ["q", "k", "v", "seed"],
+                "block": HYPER_BLOCK, "samples": HYPER_SAMPLES,
+                **meta_common})
+        yield (f"attn_hyper_causal_{n}",
+               jax.jit(_attn_hyper_causal_mh, keep_unused=True).lower(spec, spec, spec, seed_spec),
+               {"kind": "attn_hyper", "causal": True,
+                "inputs": ["q", "k", "v", "seed"],
+                "block": HYPER_BLOCK, "samples": HYPER_SAMPLES,
+                "base": HYPER_BASE, **meta_common})
+
+    # LM loss artifacts: params baked in as constants (weights are
+    # deterministic from seed 0; the Rust model substrate mirrors them).
+    cfg = model_mod.ModelConfig(
+        d_model=64, n_heads=4, n_layers=4, d_ff=256, max_seq=LM_N,
+        hyper_block=32, hyper_samples=32, hyper_base=64)
+    params = model_mod.init_params(cfg, seed=0)
+    tok_spec = jax.ShapeDtypeStruct((LM_N,), jnp.int32)
+    seed_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    for n_patched in LM_PATCH:
+        def lm_fn(tokens, seed, _np=n_patched):
+            return (model_mod.loss_fn(cfg, params, tokens, n_patched=_np,
+                                      seed=seed),)
+
+        yield (f"lm_loss_{LM_N}_p{n_patched}",
+               jax.jit(lm_fn, keep_unused=True).lower(tok_spec, seed_spec),
+               {"kind": "lm_loss", "n": LM_N, "patched": n_patched,
+                "layers": cfg.n_layers, "inputs": ["tokens", "seed"],
+                "d_model": cfg.d_model, "vocab": cfg.vocab})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact-name prefixes to build")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = args.only.split(",") if args.only else None
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for name, lowered, meta in build_artifacts():
+        if only and not any(name.startswith(p) for p in only):
+            continue
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({"name": name, "path": path, **meta})
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

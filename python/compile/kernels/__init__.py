@@ -1,0 +1,3 @@
+"""Layer-1 kernels: Pallas hot-spots + pure-jnp oracles for HyperAttention."""
+
+from . import approx_d, block_attn, causal, hyper, lsh, ref, sampled  # noqa: F401

@@ -1,0 +1,79 @@
+"""Algorithm 2 (ApproxD): spectral estimation of the diagonal matrix D.
+
+This is the *faithful* transcription of the paper's Algorithm 2, kept in
+unnormalized exp space (valid for test-scale logits; the production path
+in hyper.py uses the numerically-safe streaming-triple formulation, which
+is algebraically the same estimator).  It exists so that (a) the Lemma 1
+guarantee can be tested directly against the exact D, and (b) the Rust
+substrate's approx_d module has a cross-language oracle.
+
+Steps (line numbers match the paper):
+  3: tau   = max unmasked row sum over a random row subset T, |T| = m
+  4: l_1..l_m ~ Unif([n]) shared sample columns
+  6: C_i  = cap = theta * (masked row sum + tau/kappa),
+             theta = eps^2 m / (n log n)
+  7: d_i  = (n/m) * sum_j (1 - M_{i,l_j}) min(exp(<q_i, k_{l_j}>), C_i)
+  8: d~_i = masked row sum + max(d_i, tau/kappa)
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+
+def masked_row_sums(q, k, mask, *, scale: float | None = None):
+    """<M_i, exp(K q_i)> for all i — exact sums over the masked entries."""
+    sc = ref.softmax_scale(q.shape[1], scale)
+    a = jnp.exp((q @ k.T) * sc)
+    return jnp.sum(mask * a, axis=-1)
+
+
+def approx_d(key, q, k, mask, *, kappa: float, eps: float, m: int,
+             scale: float | None = None, theta_const: float = 1.0):
+    """Algorithm 2.  mask: dense (n, n) in {0,1} (test scale).
+
+    Returns d_tilde (n,) — the estimated row sums of A (the D diagonal).
+    """
+    n, d = q.shape
+    sc = ref.softmax_scale(d, scale)
+    key_t, key_l = jax.random.split(key)
+
+    a = jnp.exp((q @ k.T) * sc)                    # (n, n) — test scale only
+    unmasked = (1.0 - mask) * a
+
+    # line 3: tau from a random row subset of size m
+    rows = jax.random.choice(key_t, n, shape=(min(m, n),), replace=False)
+    tau = jnp.max(jnp.sum(unmasked[rows], axis=-1))
+
+    # line 4: shared uniform column samples
+    samp = jax.random.randint(key_l, (m,), 0, n)
+
+    masked_sums = jnp.sum(mask * a, axis=-1)       # <M_i, A_i>
+
+    # line 6: per-row cap
+    theta = theta_const * (eps * eps * m) / (n * math.log(max(n, 2)))
+    c = theta * (masked_sums + tau / kappa)        # (n,)
+
+    # line 7: capped uniform estimate of the unmasked row sum
+    vals = a[:, samp]                              # (n, m)
+    keep = 1.0 - mask[:, samp]
+    capped = jnp.minimum(vals, c[:, None])
+    d_est = (n / m) * jnp.sum(keep * capped, axis=-1)
+
+    # line 8: lower capping at tau/kappa
+    return masked_sums + jnp.maximum(d_est, tau / kappa)
+
+
+def approx_d_error(d_tilde, q, k, *, scale: float | None = None):
+    """Spectral error of Eq. (2): ||(D~^-1 - D^-1) A||_op / ||D^-1 A||_op."""
+    sc = ref.softmax_scale(q.shape[1], scale)
+    a = jnp.exp((q @ k.T) * sc)
+    dd = jnp.sum(a, axis=-1)
+    lhs = (1.0 / d_tilde - 1.0 / dd)[:, None] * a
+    rhs = a / dd[:, None]
+    return jnp.linalg.norm(lhs, ord=2) / jnp.maximum(jnp.linalg.norm(rhs, ord=2), 1e-30)

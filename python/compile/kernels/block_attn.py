@@ -1,0 +1,211 @@
+"""Pallas kernels: block-diagonal attention and streaming (flash) exact attention.
+
+These are the Layer-1 compute hot-spots.  Both kernels are written for the
+TPU mental model (tiles pulled HBM->VMEM via BlockSpec, MXU-shaped block
+matmuls) but are lowered with interpret=True so they execute as plain HLO
+on the CPU PJRT backend (see DESIGN.md section 7, Hardware-Adaptation).
+
+Kernels return streaming-softmax triples (m, s, N) per query row (see
+ref.py) so the coordinator / callers can merge parts across key subsets.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Block-diagonal attention (the sortLSH "heavy entries" part of Algorithm 3)
+# ---------------------------------------------------------------------------
+
+def _block_diag_kernel(q_ref, k_ref, v_ref, m_ref, s_ref, n_ref, *, scale):
+    """One grid step = one diagonal block: full attention inside the block.
+
+    q_ref/k_ref/v_ref: (b, d) VMEM tiles of the LSH-sorted Q, K, V.
+    The (b, d) x (d, b) product is the MXU-shaped hot matmul.
+    """
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    logits = jnp.dot(q, k.T) * scale  # (b, b)
+    m = jnp.max(logits, axis=-1)
+    p = jnp.exp(logits - m[:, None])
+    m_ref[...] = m
+    s_ref[...] = jnp.sum(p, axis=-1)
+    n_ref[...] = jnp.dot(p, v)
+
+
+def block_diag_parts(qs, ks, vs, *, block: int, scale: float | None = None,
+                     interpret: bool = True):
+    """Streaming triples of the block-diagonal attention over sorted inputs.
+
+    qs, ks, vs: (n, d) rows already sorted by LSH bucket; n % block == 0.
+    Returns (m, s, num) with shapes ((n,), (n,), (n, d)) in sorted order.
+    """
+    n, d = qs.shape
+    assert n % block == 0, f"n={n} not divisible by block={block}"
+    nb = n // block
+    sc = ref.softmax_scale(d, scale)
+    kern = functools.partial(_block_diag_kernel, scale=sc)
+    grid = (nb,)
+    row_spec = pl.BlockSpec((block, d), lambda i: (i, 0))
+    vec_spec = pl.BlockSpec((block,), lambda i: (i,))
+    m, s, num = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[row_spec, row_spec, row_spec],
+        out_specs=[vec_spec, vec_spec, row_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), qs.dtype),
+            jax.ShapeDtypeStruct((n,), qs.dtype),
+            jax.ShapeDtypeStruct((n, d), qs.dtype),
+        ],
+        interpret=interpret,
+    )(qs, ks, vs)
+    return m, s, num
+
+
+# ---------------------------------------------------------------------------
+# Streaming-softmax exact attention (the FlashAttention stand-in)
+# ---------------------------------------------------------------------------
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_q, block_k,
+                  causal, nk):
+    """One grid step = one query tile; stream all key tiles through VMEM.
+
+    On TPU the fori_loop body is the double-buffered HBM->VMEM pipeline
+    over K/V tiles; the (block_q, d) x (d, block_k) products hit the MXU.
+    """
+    i = pl.program_id(0)
+    q = q_ref[...]  # (block_q, d)
+    d = q.shape[1]
+    nblk = nk // block_k
+
+    def body(j, carry):
+        m, s, num = carry
+        ks = pl.load(k_ref, (pl.dslice(j * block_k, block_k), pl.dslice(0, d)))
+        vs = pl.load(v_ref, (pl.dslice(j * block_k, block_k), pl.dslice(0, d)))
+        logits = jnp.dot(q, ks.T) * scale
+        if causal:
+            qi = i * block_q + jnp.arange(block_q)[:, None]
+            kj = j * block_k + jnp.arange(block_k)[None, :]
+            logits = jnp.where(qi >= kj, logits, NEG_INF)
+        bm = jnp.max(logits, axis=-1)
+        m2 = jnp.maximum(m, bm)
+        e_old = jnp.exp(m - m2)
+        p = jnp.exp(logits - m2[:, None])
+        s2 = s * e_old + jnp.sum(p, axis=-1)
+        num2 = num * e_old[:, None] + jnp.dot(p, vs)
+        return m2, s2, num2
+
+    m0 = jnp.full((block_q,), NEG_INF, q.dtype)
+    s0 = jnp.zeros((block_q,), q.dtype)
+    n0 = jnp.zeros_like(q)
+    m, s, num = jax.lax.fori_loop(0, nblk, body, (m0, s0, n0))
+    o_ref[...] = num / jnp.maximum(s, 1e-30)[:, None]
+
+
+def flash_attention(q, k, v, *, block_q: int = 64, block_k: int = 64,
+                    causal: bool = False, scale: float | None = None,
+                    interpret: bool = True):
+    """Exact attention with FlashAttention's streaming-softmax structure.
+
+    q: (n, d); k, v: (nk, d).  Returns (n, d).
+    """
+    n, d = q.shape
+    nk = k.shape[0]
+    block_q = min(block_q, n)
+    block_k = min(block_k, nk)
+    assert n % block_q == 0 and nk % block_k == 0
+    sc = ref.softmax_scale(d, scale)
+    kern = functools.partial(
+        _flash_kernel, scale=sc, block_q=block_q, block_k=block_k,
+        causal=causal, nk=nk)
+    out = pl.pallas_call(
+        kern,
+        grid=(n // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            # K/V stay whole-array resident; the fori_loop streams tiles.
+            pl.BlockSpec((nk, d), lambda i: (0, 0)),
+            pl.BlockSpec((nk, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+    return out
+
+
+def flash_attention_parts(q, k, v, *, block_q: int = 64, block_k: int = 64,
+                          causal: bool = False, scale: float | None = None,
+                          interpret: bool = True):
+    """Triple-form flash attention: like flash_attention but returns (m,s,N).
+
+    Used as the causal-recursion base case, where the caller still needs to
+    merge with the off-diagonal parts.
+    """
+    n, d = q.shape
+    nk = k.shape[0]
+    block_q = min(block_q, n)
+    block_k = min(block_k, nk)
+    assert n % block_q == 0 and nk % block_k == 0
+    sc = ref.softmax_scale(d, scale)
+
+    def kern(q_ref, k_ref, v_ref, m_ref, s_ref, n_ref):
+        i = pl.program_id(0)
+        qt = q_ref[...]
+        nblk = nk // block_k
+
+        def body(j, carry):
+            m, s, num = carry
+            ks = pl.load(k_ref, (pl.dslice(j * block_k, block_k), pl.dslice(0, d)))
+            vs = pl.load(v_ref, (pl.dslice(j * block_k, block_k), pl.dslice(0, d)))
+            logits = jnp.dot(qt, ks.T) * sc
+            if causal:
+                qi = i * block_q + jnp.arange(block_q)[:, None]
+                kj = j * block_k + jnp.arange(block_k)[None, :]
+                logits = jnp.where(qi >= kj, logits, NEG_INF)
+            bm = jnp.max(logits, axis=-1)
+            m2 = jnp.maximum(m, bm)
+            e_old = jnp.exp(m - m2)
+            p = jnp.exp(logits - m2[:, None])
+            return m2, s * e_old + jnp.sum(p, -1), num * e_old[:, None] + jnp.dot(p, vs)
+
+        m0 = jnp.full((block_q,), NEG_INF, qt.dtype)
+        s0 = jnp.zeros((block_q,), qt.dtype)
+        n0 = jnp.zeros_like(qt)
+        m, s, num = jax.lax.fori_loop(0, nblk, body, (m0, s0, n0))
+        m_ref[...] = m
+        s_ref[...] = s
+        n_ref[...] = num
+
+    m, s, num = pl.pallas_call(
+        kern,
+        grid=(n // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((nk, d), lambda i: (0, 0)),
+            pl.BlockSpec((nk, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), q.dtype),
+            jax.ShapeDtypeStruct((n,), q.dtype),
+            jax.ShapeDtypeStruct((n, d), q.dtype),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return m, s, num

@@ -1,0 +1,107 @@
+"""Algorithm 4: recursive causal HyperAttention.
+
+The causal attention matrix splits into three equal-sized non-zero
+sections (Fig. 2 of the paper): two half-size *causal* diagonal blocks
+(recurse) and one *unmasked* off-diagonal block A_21 (handled by the
+non-causal HyperAttention of Algorithm 3).  The recursion bottoms out at
+`base`, where the exact streaming (flash) kernel runs with a causal mask.
+
+All parts are streaming-softmax triples, so the second half's output is
+the exact merge of its off-diagonal part (queries Q2 vs keys K1) and its
+recursive causal part (Q2 vs K2) — no denominator bookkeeping beyond the
+triples themselves.
+
+The recursion unrolls at trace time (n is static), giving a single fused
+HLO for the AOT artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import block_attn, hyper, ref
+
+
+def _concat_parts(p1, p2):
+    """Stack triples of the two query halves (disjoint query rows)."""
+    m1, s1, n1 = p1
+    m2, s2, n2 = p2
+    return (jnp.concatenate([m1, m2]), jnp.concatenate([s1, s2]),
+            jnp.concatenate([n1, n2]))
+
+
+def causal_hyper_parts(q, k, v, seed, *, base: int, block: int,
+                       n_samples: int, lsh_bits: int = 8,
+                       scale: float | None = None,
+                       interpret: bool = True, _level: int = 0):
+    """Triple of causal HyperAttention over (q, k, v): (n, d) each."""
+    n, d = q.shape
+    if n <= base:
+        return block_attn.flash_attention_parts(
+            q, k, v, causal=True, scale=scale, interpret=interpret,
+            block_q=min(64, n), block_k=min(64, n))
+
+    half = n // 2
+    q1, q2 = q[:half], q[half:]
+    k1, k2 = k[:half], k[half:]
+    v1, v2 = v[:half], v[half:]
+
+    # Distinct derived seeds per recursion site so samples decorrelate.
+    s11 = seed * 3 + 1 + _level
+    s22 = seed * 3 + 2 + _level
+    s21 = seed * 3 + 3 + _level
+
+    p11 = causal_hyper_parts(
+        q1, k1, v1, s11, base=base, block=block, n_samples=n_samples,
+        lsh_bits=lsh_bits, scale=scale, interpret=interpret,
+        _level=_level + 1)
+    p22 = causal_hyper_parts(
+        q2, k2, v2, s22, base=base, block=block, n_samples=n_samples,
+        lsh_bits=lsh_bits, scale=scale, interpret=interpret,
+        _level=_level + 1)
+
+    # Off-diagonal block A_21 is unmasked: non-causal HyperAttention.
+    import jax
+
+    key = jax.random.PRNGKey(s21)
+    kp, ksamp = jax.random.split(key)
+    from . import lsh as _lsh
+
+    proj = _lsh.projections(kp, d, lsh_bits, dtype=q.dtype)
+    m_eff = min(n_samples, half)
+    sample_idx = jax.random.randint(ksamp, (m_eff,), 0, half)
+    p21 = hyper.hyper_attention_parts(
+        q2, k1, v1, proj, sample_idx, block=min(block, half),
+        scale=scale, interpret=interpret)
+
+    p2 = ref.merge_parts(p21, p22)
+    return _concat_parts(p11, p2)
+
+
+def causal_hyper_attention(q, k, v, seed, *, base: int, block: int,
+                           n_samples: int, lsh_bits: int = 8,
+                           scale: float | None = None,
+                           interpret: bool = True):
+    """Normalized causal HyperAttention output (n, d)."""
+    parts = causal_hyper_parts(
+        q, k, v, seed, base=base, block=block, n_samples=n_samples,
+        lsh_bits=lsh_bits, scale=scale, interpret=interpret)
+    return ref.finalize(parts)
+
+
+def causal_hyper_attention_mh(q, k, v, seed, *, base: int, block: int,
+                              n_samples: int, lsh_bits: int = 8,
+                              scale: float | None = None,
+                              interpret: bool = True):
+    """Multi-head causal wrapper: (h, n, d) inputs, per-head seeds."""
+    import jax
+
+    h = q.shape[0]
+    seeds = seed + 1000 * jnp.arange(h, dtype=jnp.int32)
+
+    def one(qh, kh, vh, sh):
+        return causal_hyper_attention(
+            qh, kh, vh, sh, base=base, block=block, n_samples=n_samples,
+            lsh_bits=lsh_bits, scale=scale, interpret=interpret)
+
+    return jax.vmap(one)(q, k, v, seeds)

@@ -1,0 +1,115 @@
+"""Algorithm 3: HyperAttention forward (non-causal), practical variant.
+
+Pipeline (the paper's Section 4 "Implementation Detail"):
+  1. Hash Q and K rows with Hamming-sorted LSH; sort each by bucket.
+  2. Exact attention inside equal-sized diagonal blocks of the sorted
+     attention matrix (the mask M^H of Algorithm 1) — Pallas kernel.
+  3. Estimate the unmasked remainder of each row (both the D row sum and
+     the product with V) from m uniformly sampled key/value rows shared
+     across queries — Pallas kernel with per-row weights that drop
+     samples falling in the query's own block.
+  4. Merge the two streaming-softmax triples and normalize.
+
+All functions take explicit randomness (projection matrix + sample
+indices) so the AOT artifacts are pure functions of their inputs; the
+seed-based wrapper generates both from an int32 seed inside the trace.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import block_attn, lsh, ref, sampled
+
+
+def hyper_attention_parts(q, k, v, proj, sample_idx, *, block: int,
+                          scale: float | None = None,
+                          sample_mode: str = "uniform",
+                          interpret: bool = True):
+    """Streaming triple (m, s, N) of HyperAttention, in original row order.
+
+    q, k, v: (n, d) (n divisible by block); proj: (d, r) LSH hyperplanes;
+    sample_idx: (m,) int32 indices into the original key rows.
+    """
+    n, d = q.shape
+    assert k.shape[0] == n, "hyper attention requires len(q) == len(k)"
+    assert n % block == 0
+
+    perm_q, _ = lsh.sort_permutation(q, proj)
+    perm_k, _ = lsh.sort_permutation(k, proj)
+    pos_q = jnp.argsort(perm_q)  # original row -> sorted position
+    pos_k = jnp.argsort(perm_k)
+
+    qs = q[perm_q]
+    ks = k[perm_k]
+    vs = v[perm_k]
+
+    # (2) exact block-diagonal part, in sorted order -> back to original.
+    mb, sb, nb = block_attn.block_diag_parts(
+        qs, ks, vs, block=block, scale=scale, interpret=interpret)
+    mb, sb, nb = mb[pos_q], sb[pos_q], nb[pos_q]
+
+    # (3) sampled residual over the unmasked columns.
+    w = sampled.residual_weights(
+        sample_idx, pos_q, pos_k, n, block,
+        v=v if sample_mode == "vnorm" else None, mode=sample_mode)
+    ms, ss, ns = sampled.sampled_parts(
+        q, k[sample_idx], v[sample_idx], w, scale=scale, interpret=interpret)
+
+    # (4) merge.
+    return ref.merge_parts((mb, sb, nb), (ms, ss, ns))
+
+
+def hyper_attention(q, k, v, proj, sample_idx, *, block: int,
+                    scale: float | None = None,
+                    sample_mode: str = "uniform",
+                    interpret: bool = True):
+    """HyperAttention output (n, d): normalized Algorithm 3."""
+    parts = hyper_attention_parts(
+        q, k, v, proj, sample_idx, block=block, scale=scale,
+        sample_mode=sample_mode, interpret=interpret)
+    return ref.finalize(parts)
+
+
+def hyper_attention_seeded(q, k, v, seed, *, block: int, n_samples: int,
+                           lsh_bits: int = 8, scale: float | None = None,
+                           sample_mode: str = "uniform",
+                           interpret: bool = True):
+    """Seed-based entry point used by the AOT artifacts.
+
+    seed: int32 scalar.  LSH projections and sample indices are derived
+    from it inside the trace (threefry), so the artifact signature is
+    (q, k, v, seed) with fixed shapes.
+    """
+    n, d = q.shape
+    key = jax.random.PRNGKey(seed)
+    kp, ks = jax.random.split(key)
+    proj = lsh.projections(kp, d, lsh_bits, dtype=q.dtype)
+    if sample_mode == "vnorm":
+        vn = jnp.sum(v * v, axis=-1)
+        probs = vn / jnp.maximum(jnp.sum(vn), 1e-30)
+        sample_idx = jax.random.choice(ks, n, shape=(n_samples,), p=probs)
+    else:
+        sample_idx = jax.random.randint(ks, (n_samples,), 0, n)
+    return hyper_attention(
+        q, k, v, proj, sample_idx, block=block, scale=scale,
+        sample_mode=sample_mode, interpret=interpret)
+
+
+def hyper_attention_mh(q, k, v, seed, *, block: int, n_samples: int,
+                       lsh_bits: int = 8, scale: float | None = None,
+                       interpret: bool = True):
+    """Multi-head wrapper: q, k, v of shape (h, n, d); vmapped over heads.
+
+    Each head gets a distinct derived seed so LSH projections differ.
+    """
+    h = q.shape[0]
+    seeds = seed + jnp.arange(h, dtype=jnp.int32)
+
+    def one(qh, kh, vh, sh):
+        return hyper_attention_seeded(
+            qh, kh, vh, sh, block=block, n_samples=n_samples,
+            lsh_bits=lsh_bits, scale=scale, interpret=interpret)
+
+    return jax.vmap(one)(q, k, v, seeds)

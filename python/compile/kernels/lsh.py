@@ -1,0 +1,80 @@
+"""Hamming-sorted LSH (Definition 1 of the paper).
+
+Hash function: r random hyperplanes P in R^{d x r}; the sign pattern of
+x @ P is read as a *Gray code*, and the bucket id is the Gray code's rank
+(binary value of the Gray-decoded bits).  Gray decoding is what gives the
+"Hamming sorted" property: buckets whose ids differ by 1 correspond to
+sign patterns at Hamming distance 1, i.e. geometrically adjacent cells,
+which is exactly what lets sortLSH concentrate large attention entries
+near the diagonal after sorting (Fig. 1 of the paper).
+
+Collision probability for a single hyperplane is 1 - theta/pi; with r
+planes, P[H(x) = H(y)] = (1 - theta/pi)^r as in Definition 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def projections(key, d: int, r: int, dtype=jnp.float32):
+    """r random hyperplane normals, shape (d, r)."""
+    return jax.random.normal(key, (d, r), dtype=dtype)
+
+
+def gray_to_binary(bits):
+    """Decode Gray-code bits (..., r), MSB first, to binary bits.
+
+    b_0 = g_0;  b_i = b_{i-1} XOR g_i.  Implemented as a cumulative XOR,
+    i.e. parity of the prefix sum.
+    """
+    csum = jnp.cumsum(bits.astype(jnp.int32), axis=-1)
+    return jnp.mod(csum, 2)
+
+
+def bucket_ids(x, proj):
+    """Hamming-sorted bucket id for each row of x.  Returns (n,) int32.
+
+    x: (n, d), proj: (d, r).  Bucket ids lie in [0, 2^r).
+    """
+    bits = (x @ proj > 0).astype(jnp.int32)  # (n, r) sign pattern = Gray code
+    bin_bits = gray_to_binary(bits)
+    r = proj.shape[1]
+    weights = (2 ** jnp.arange(r - 1, -1, -1)).astype(jnp.int32)
+    return jnp.sum(bin_bits * weights, axis=-1)
+
+
+def sort_permutation(x, proj):
+    """Permutation sorting rows of x by Hamming-sorted bucket id.
+
+    Returns (perm, buckets): x[perm] is sorted by bucket.  Stable, so ties
+    keep input order (deterministic given proj).
+    """
+    b = bucket_ids(x, proj)
+    perm = jnp.argsort(b, stable=True)
+    return perm, b
+
+
+def collision_probability(theta, r: int):
+    """Definition 1: P[H(x)=H(y)] = (1 - theta/pi)^r."""
+    return (1.0 - theta / jnp.pi) ** r
+
+
+def adjacent_probability(theta, r: int):
+    """Definition 1: P[H(x)=H(y) +- 1 mod 2^r]."""
+    t = theta / jnp.pi
+    return 2.0 * t * (1.0 - t) ** (r - 1)
+
+
+def block_mask_dense(perm_q, perm_k, n: int, block: int):
+    """Dense n x n mask M^H of Algorithm 1 (test-scale only).
+
+    M[i, j] = 1 iff floor(P_Q(i)/b) == floor(P_K(j)/b), where P_Q(i) is the
+    *position* of row i after sorting.
+    """
+    pos_q = jnp.argsort(perm_q)  # inverse permutation: row -> sorted position
+    pos_k = jnp.argsort(perm_k)
+    gq = pos_q // block
+    gk = pos_k // block
+    return (gq[:, None] == gk[None, :]).astype(jnp.float32)

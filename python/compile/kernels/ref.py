@@ -1,0 +1,171 @@
+"""Pure-jnp reference oracles for HyperAttention kernels.
+
+Everything in this module is the ground truth the Pallas kernels and the
+Rust substrate are tested against.  All attention parts are expressed in
+the *streaming-softmax triple* representation
+
+    part = (m, s, N)   with, per query row i:
+        m_i = max_j logit_ij          (running max, for stability)
+        s_i = sum_j w_j exp(logit_ij - m_i)
+        N_i = sum_j w_j exp(logit_ij - m_i) * V_j
+
+so that partial results over disjoint key sets can be merged exactly
+(`merge_parts`) and the final output is N / s.  This matches the paper's
+unnormalized A = exp(QK^T) with D = row sums: s * exp(m) estimates the
+row sum of A restricted to the part's key set.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def softmax_scale(d: int, scale: float | None = None) -> float:
+    """Default logit scale 1/sqrt(d), overridable."""
+    return 1.0 / math.sqrt(d) if scale is None else scale
+
+
+def attention_exact(q, k, v, *, causal: bool = False, scale: float | None = None):
+    """Exact attention D^{-1} A V with A = exp(scale * QK^T).
+
+    q, k, v: (n, d).  Returns (n, d).  Numerically stable softmax.
+    """
+    _, d = q.shape
+    s = softmax_scale(d, scale)
+    logits = (q @ k.T) * s
+    if causal:
+        mask = jnp.tril(jnp.ones((q.shape[0], k.shape[0]), dtype=bool))
+        logits = jnp.where(mask, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    a = jnp.exp(logits - m)
+    return (a @ v) / jnp.sum(a, axis=-1, keepdims=True)
+
+
+def attention_parts_exact(q, k, v, *, causal: bool = False, scale: float | None = None):
+    """Exact attention in (m, s, N) triple form over the full key set."""
+    _, d = q.shape
+    sc = softmax_scale(d, scale)
+    logits = (q @ k.T) * sc
+    if causal:
+        mask = jnp.tril(jnp.ones((q.shape[0], k.shape[0]), dtype=bool))
+        logits = jnp.where(mask, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)
+    a = jnp.exp(logits - m[:, None])
+    s = jnp.sum(a, axis=-1)
+    num = a @ v
+    return m, s, num
+
+
+def merge_parts(p1, p2):
+    """Merge two streaming-softmax triples over disjoint key sets."""
+    m1, s1, n1 = p1
+    m2, s2, n2 = p2
+    m = jnp.maximum(m1, m2)
+    e1 = jnp.exp(m1 - m)
+    e2 = jnp.exp(m2 - m)
+    s = s1 * e1 + s2 * e2
+    num = n1 * e1[:, None] + n2 * e2[:, None]
+    return m, s, num
+
+
+def finalize(part, eps: float = 1e-30):
+    """Normalize a triple to attention output N / s."""
+    _, s, num = part
+    return num / jnp.maximum(s, eps)[:, None]
+
+
+def row_sums_exact(q, k, *, causal: bool = False, scale: float | None = None):
+    """Exact D diagonal: row sums of A = exp(scale * QK^T) (masked if causal)."""
+    _, d = q.shape
+    sc = softmax_scale(d, scale)
+    a = jnp.exp((q @ k.T) * sc)
+    if causal:
+        mask = jnp.tril(jnp.ones((q.shape[0], k.shape[0]), dtype=q.dtype))
+        a = a * mask
+    return jnp.sum(a, axis=-1)
+
+
+def softmax_matrix(q, k, *, causal: bool = False, scale: float | None = None):
+    """D^{-1} A, the row-stochastic softmax matrix (for alpha/kappa checks)."""
+    _, d = q.shape
+    sc = softmax_scale(d, scale)
+    logits = (q @ k.T) * sc
+    if causal:
+        mask = jnp.tril(jnp.ones((q.shape[0], k.shape[0]), dtype=bool))
+        logits = jnp.where(mask, logits, NEG_INF)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def alpha_param(q, k, *, causal: bool = False, scale: float | None = None,
+                exclude_cols: int = 0):
+    """Paper's alpha = n * max_i ||D^{-1} A e^{(i)}||_2^2 (Section 4.3).
+
+    exclude_cols drops the first columns (the paper excludes 32 sink
+    columns for LM-derived inputs).
+    """
+    p = softmax_matrix(q, k, causal=causal, scale=scale)
+    col_sq = jnp.sum(p * p, axis=0)
+    if exclude_cols:
+        col_sq = col_sq[exclude_cols:]
+    return q.shape[0] * jnp.max(col_sq)
+
+
+def kappa_param(q, k, mask, *, scale: float | None = None):
+    """Paper's kappa: max/min unmasked row sums of A.  mask: (n,n) in {0,1}."""
+    _, d = q.shape
+    sc = softmax_scale(d, scale)
+    a = jnp.exp((q @ k.T) * sc)
+    unmasked = jnp.sum((1.0 - mask) * a, axis=-1)
+    return jnp.max(unmasked) / jnp.maximum(jnp.min(unmasked), 1e-30)
+
+
+def flash_exact(q, k, v, *, block: int = 64, causal: bool = False,
+                scale: float | None = None):
+    """Blocked streaming-softmax exact attention (FlashAttention structure).
+
+    Numerically identical (up to fp error) to attention_exact; exists as
+    the oracle for the blocked/streaming formulation the Pallas kernel
+    and the Rust flash baseline use.
+    """
+    n, d = q.shape
+    nk = k.shape[0]
+    assert nk % block == 0, "key length must be divisible by block"
+    sc = softmax_scale(d, scale)
+    nblocks = nk // block
+
+    def body(carry, j):
+        m, s, num = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, j * block, block, axis=0)
+        vs = jax.lax.dynamic_slice_in_dim(v, j * block, block, axis=0)
+        logits = (q @ ks.T) * sc
+        if causal:
+            qi = jnp.arange(n)[:, None]
+            kj = j * block + jnp.arange(block)[None, :]
+            logits = jnp.where(qi >= kj, logits, NEG_INF)
+        bm = jnp.max(logits, axis=-1)
+        m2 = jnp.maximum(m, bm)
+        e_old = jnp.exp(m - m2)
+        p = jnp.exp(logits - m2[:, None])
+        s2 = s * e_old + jnp.sum(p, axis=-1)
+        num2 = num * e_old[:, None] + p @ vs
+        return (m2, s2, num2), None
+
+    init = (jnp.full((n,), NEG_INF, q.dtype), jnp.zeros((n,), q.dtype),
+            jnp.zeros((n, d), q.dtype))
+    (m, s, num), _ = jax.lax.scan(body, init, jnp.arange(nblocks))
+    return num / jnp.maximum(s, 1e-30)[:, None]
+
+
+def spectral_error(out_approx, q, k, v, *, causal: bool = False,
+                   scale: float | None = None):
+    """Relative operator-norm error of Eq. (1), via exact SVD (test sizes)."""
+    exact = attention_exact(q, k, v, causal=causal, scale=scale)
+    err = jnp.linalg.norm(out_approx - exact, ord=2)
+    p = softmax_matrix(q, k, causal=causal, scale=scale)
+    denom = jnp.linalg.norm(p, ord=2) * jnp.linalg.norm(v, ord=2)
+    return err / jnp.maximum(denom, 1e-30)

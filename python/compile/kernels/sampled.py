@@ -1,0 +1,108 @@
+"""Pallas kernel: weighted column-sampled attention residual.
+
+This is the "uniform sampling" half of Algorithm 3 / Lemma 2: the row sum
+of the unmasked part of A and the product with V are estimated from m
+sampled key/value rows shared across all queries (the paper's
+Implementation Detail in Section 4).  Per-query weights w_ij (zero for
+samples that fall inside the query's own sortLSH diagonal block, an
+inverse-probability scale otherwise) are computed by the caller and
+passed in, so the kernel itself is a pure weighted streaming-softmax.
+
+TPU mapping: the grid tiles the query rows; the m sampled K/V rows stay
+VMEM-resident across all grid steps (the analogue of the paper keeping
+the sample in SRAM); the (tile, d) x (d, m) product is MXU-shaped.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _sampled_kernel(q_ref, ks_ref, vs_ref, w_ref, m_ref, s_ref, n_ref, *, scale):
+    q = q_ref[...]        # (tile, d)
+    ks = ks_ref[...]      # (m, d) — VMEM resident
+    vs = vs_ref[...]      # (m, d)
+    w = w_ref[...]        # (tile, m) — per-(row, sample) weights
+    logits = jnp.dot(q, ks.T) * scale  # (tile, m)
+    m = jnp.max(logits, axis=-1)
+    p = w * jnp.exp(logits - m[:, None])
+    m_ref[...] = m
+    s_ref[...] = jnp.sum(p, axis=-1)
+    n_ref[...] = jnp.dot(p, vs)
+
+
+def sampled_parts(q, k_samp, v_samp, weights, *, tile: int = 64,
+                  scale: float | None = None, interpret: bool = True):
+    """Streaming triples of the weighted sampled residual.
+
+    q: (n, d); k_samp, v_samp: (m, d) sampled rows; weights: (n, m).
+    Returns (m, s, num) per query row.  Note: m is the max over ALL sampled
+    logits (including zero-weight ones) — still a valid triple since s and
+    num are weighted consistently; merging with other parts stays exact.
+    """
+    n, d = q.shape
+    msamp = k_samp.shape[0]
+    tile = min(tile, n)
+    assert n % tile == 0
+    sc = ref.softmax_scale(d, scale)
+    kern = functools.partial(_sampled_kernel, scale=sc)
+    m, s, num = pl.pallas_call(
+        kern,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((msamp, d), lambda i: (0, 0)),
+            pl.BlockSpec((msamp, d), lambda i: (0, 0)),
+            pl.BlockSpec((tile, msamp), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), q.dtype),
+            jax.ShapeDtypeStruct((n,), q.dtype),
+            jax.ShapeDtypeStruct((n, d), q.dtype),
+        ],
+        interpret=interpret,
+    )(q, k_samp, v_samp, weights)
+    return m, s, num
+
+
+def residual_weights(sample_idx, pos_q, pos_k, n: int, block: int,
+                     v: jnp.ndarray | None = None,
+                     mode: str = "uniform"):
+    """Per-(query, sample) weights for the unmasked-residual estimator.
+
+    sample_idx: (m,) indices into the ORIGINAL key rows (shared across
+    queries).  pos_q/pos_k: (n,) sorted positions of each original row
+    (inverse sortLSH permutations).  A sample j is dropped for query i when
+    it falls in i's diagonal block (those entries are counted exactly by
+    the block kernel).
+
+    mode="uniform": ratio estimator; kept samples are scaled by
+        (n - block) / (#kept for that row), estimating the sum over the
+        n - block unmasked columns.
+    mode="vnorm": Lemma 2 row-norm sampling; the caller sampled idx with
+        probability p_j ∝ ||V_j||²; weight is 1/(m p_j) (Horvitz-Thompson).
+    """
+    gq = pos_q // block                       # (n,) query block ids
+    gk_samp = pos_k[sample_idx] // block      # (m,) sampled-key block ids
+    keep = (gq[:, None] != gk_samp[None, :]).astype(jnp.float32)  # (n, m)
+    if mode == "uniform":
+        cnt = jnp.maximum(jnp.sum(keep, axis=-1, keepdims=True), 1.0)
+        return keep * (n - block) / cnt
+    elif mode == "vnorm":
+        assert v is not None
+        vn = jnp.sum(v * v, axis=-1)
+        probs = vn / jnp.maximum(jnp.sum(vn), 1e-30)
+        w = 1.0 / (sample_idx.shape[0] * jnp.maximum(probs[sample_idx], 1e-30))
+        return keep * w[None, :]
+    raise ValueError(f"unknown sampling mode {mode!r}")

@@ -1,0 +1,154 @@
+"""Layer-2 JAX model: tiny causal transformer LM with patchable attention.
+
+Mirrors the paper's monkey-patching experiment (Section 4.1): a standard
+pre-LN transformer where the FINAL `n_patched` attention layers run
+causal HyperAttention (Algorithm 4) instead of exact attention.  The
+Rust model substrate (rust/src/model/) implements the same architecture
+with the same initialization scheme so artifacts and the pure-Rust path
+agree structurally.
+
+Build-time only: lowered by aot.py to HLO text; never imported at serve
+time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import block_attn, causal as causal_k
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256            # byte-level tokenizer
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 512
+    max_seq: int = 2048
+    # HyperAttention parameters for patched layers
+    hyper_block: int = 64
+    hyper_samples: int = 64
+    hyper_base: int = 128       # causal recursion base case
+    lsh_bits: int = 8
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, Any]:
+    """Deterministic init; scheme mirrored structure-wise in Rust."""
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, 4 + 6 * cfg.n_layers)
+    it = iter(keys)
+
+    def dense(k, fan_in, fan_out):
+        return jax.random.normal(k, (fan_in, fan_out)) / math.sqrt(fan_in)
+
+    params: dict[str, Any] = {
+        "tok_emb": jax.random.normal(next(it), (cfg.vocab, cfg.d_model)) * 0.02,
+        "pos_emb": jax.random.normal(next(it), (cfg.max_seq, cfg.d_model)) * 0.02,
+        "ln_f": {"g": jnp.ones(cfg.d_model), "b": jnp.zeros(cfg.d_model)},
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append({
+            "ln1": {"g": jnp.ones(cfg.d_model), "b": jnp.zeros(cfg.d_model)},
+            "ln2": {"g": jnp.ones(cfg.d_model), "b": jnp.zeros(cfg.d_model)},
+            "wqkv": dense(next(it), cfg.d_model, 3 * cfg.d_model),
+            "wo": dense(next(it), cfg.d_model, cfg.d_model),
+            "w1": dense(next(it), cfg.d_model, cfg.d_ff),
+            "w2": dense(next(it), cfg.d_ff, cfg.d_model),
+            # biases kept explicit (zero-init) to match the Rust layout
+            "b1": jnp.zeros(cfg.d_ff),
+            "b2": jnp.zeros(cfg.d_model),
+        })
+    return params
+
+
+def layer_norm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(cfg: ModelConfig, x, layer, *, use_hyper: bool, seed,
+               interpret: bool = True, attn_impl: str = "pallas"):
+    """Multi-head causal attention; exact (flash) or HyperAttention.
+
+    attn_impl="pallas" uses the L1 kernels (serving artifacts);
+    attn_impl="jnp" uses the differentiable oracle (training path —
+    interpret-mode pallas_call has no VJP).
+    """
+    n, _ = x.shape
+    qkv = x @ layer["wqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def split_heads(t):
+        return t.reshape(n, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+
+    q, k, v = split_heads(q), split_heads(k), split_heads(v)  # (h, n, dh)
+
+    if use_hyper and n > cfg.hyper_base:
+        out = causal_k.causal_hyper_attention_mh(
+            q, k, v, seed, base=cfg.hyper_base, block=cfg.hyper_block,
+            n_samples=cfg.hyper_samples, lsh_bits=cfg.lsh_bits,
+            interpret=interpret)
+    elif attn_impl == "jnp":
+        from .kernels import ref as _ref
+
+        out = jax.vmap(
+            lambda qh, kh, vh: _ref.attention_exact(qh, kh, vh, causal=True)
+        )(q, k, v)
+    else:
+        out = jax.vmap(
+            lambda qh, kh, vh: block_attn.flash_attention(
+                qh, kh, vh, causal=True, interpret=interpret))(q, k, v)
+
+    out = out.transpose(1, 0, 2).reshape(n, cfg.d_model)
+    return out @ layer["wo"]
+
+
+def forward(cfg: ModelConfig, params, tokens, *, n_patched: int = 0,
+            seed: int = 0, interpret: bool = True, attn_impl: str = "pallas"):
+    """Logits (n, vocab) for a token sequence (n,) int32.
+
+    The FINAL n_patched layers use causal HyperAttention, matching the
+    paper's patch-from-the-end protocol.
+    """
+    n = tokens.shape[0]
+    x = params["tok_emb"][tokens] + params["pos_emb"][:n]
+    first_patched = cfg.n_layers - n_patched
+    for li, layer in enumerate(params["layers"]):
+        use_hyper = li >= first_patched
+        h = layer_norm(x, layer["ln1"]["g"], layer["ln1"]["b"])
+        x = x + _attention(cfg, h, layer, use_hyper=use_hyper,
+                           seed=seed + 131 * li, interpret=interpret,
+                           attn_impl=attn_impl)
+        h = layer_norm(x, layer["ln2"]["g"], layer["ln2"]["b"])
+        h = jax.nn.gelu(h @ layer["w1"] + layer["b1"]) @ layer["w2"] + layer["b2"]
+        x = x + h
+    x = layer_norm(x, params["ln_f"]["g"], params["ln_f"]["b"])
+    return x @ params["tok_emb"].T
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, *, n_patched: int = 0,
+            seed: int = 0, interpret: bool = True, attn_impl: str = "pallas"):
+    """Next-token cross-entropy (mean over positions)."""
+    logits = forward(cfg, params, tokens, n_patched=n_patched, seed=seed,
+                     interpret=interpret, attn_impl=attn_impl)
+    logp = jax.nn.log_softmax(logits[:-1], axis=-1)
+    tgt = tokens[1:]
+    nll = -jnp.take_along_axis(logp, tgt[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def perplexity(cfg: ModelConfig, params, tokens, **kw):
+    return jnp.exp(loss_fn(cfg, params, tokens, **kw))

@@ -1,0 +1,101 @@
+"""Algorithm 2 (ApproxD) vs exact D, and the Lemma 1 / Eq. (2) bound."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import approx_d, lsh, ref
+from .conftest import clustered_qkv, rand_qkv
+
+
+def _mask_for(q, k, block):
+    proj = lsh.projections(jax.random.PRNGKey(99), q.shape[1], 8)
+    pq, _ = lsh.sort_permutation(q, proj)
+    pk, _ = lsh.sort_permutation(k, proj)
+    return lsh.block_mask_dense(pq, pk, q.shape[0], block)
+
+
+def test_masked_row_sums_exact():
+    q, k, _ = rand_qkv(41, 64, 16)
+    mask = _mask_for(q, k, 16)
+    got = np.asarray(approx_d.masked_row_sums(q, k, mask))
+    sc = ref.softmax_scale(16)
+    a = np.exp(np.asarray(q @ k.T) * sc)
+    np.testing.assert_allclose(got, (np.asarray(mask) * a).sum(-1), rtol=1e-5)
+
+
+def test_approx_d_with_full_sampling_tight():
+    """m = n with uniform columns: estimate concentrates around exact D."""
+    n = 128
+    q, k, _ = rand_qkv(42, n, 16)
+    mask = _mask_for(q, k, 32)
+    ds = [approx_d.approx_d(jax.random.PRNGKey(s), q, k, mask,
+                            kappa=4.0, eps=1.0, m=n)
+          for s in range(8)]
+    dt = np.mean(np.stack([np.asarray(x) for x in ds]), axis=0)
+    de = np.asarray(ref.row_sums_exact(q, k))
+    rel = np.abs(dt - de) / de
+    assert np.median(rel) < 0.25, f"median rel {np.median(rel)}"
+
+
+def test_approx_d_error_decreases_with_m():
+    q, k, _ = clustered_qkv(43, 256, 16)
+    mask = _mask_for(q, k, 64)
+    errs = []
+    for m in [32, 128, 512]:
+        es = [float(approx_d.approx_d_error(
+            approx_d.approx_d(jax.random.PRNGKey(s), q, k, mask,
+                              kappa=8.0, eps=1.0, m=m), q, k))
+            for s in range(3)]
+        errs.append(np.mean(es))
+    assert errs[2] < errs[0], f"not decreasing: {errs}"
+
+
+def test_approx_d_lower_cap_positive():
+    """d~ must be strictly positive (lower capping at tau/kappa)."""
+    q, k, _ = rand_qkv(44, 64, 8)
+    mask = jnp.zeros((64, 64))  # no mask at all
+    dt = np.asarray(approx_d.approx_d(jax.random.PRNGKey(0), q, k, mask,
+                                      kappa=2.0, eps=0.5, m=8))
+    assert np.all(dt > 0)
+
+
+def test_approx_d_includes_masked_part_exactly():
+    """With kappa huge and m tiny, d~ ~= masked row sums (+ tiny floor):
+    the masked contribution enters exactly, never estimated."""
+    q, k, _ = clustered_qkv(45, 128, 16, spread=0.05)
+    mask = _mask_for(q, k, 64)
+    dt = np.asarray(approx_d.approx_d(jax.random.PRNGKey(1), q, k, mask,
+                                      kappa=1e9, eps=1e-3, m=4))
+    masked = np.asarray(approx_d.masked_row_sums(q, k, mask))
+    assert np.all(dt >= masked - 1e-5)
+
+
+def test_kappa_param_definition():
+    q, k, _ = rand_qkv(46, 32, 8)
+    mask = jnp.zeros((32, 32))
+    kp = float(ref.kappa_param(q, k, mask))
+    sc = ref.softmax_scale(8)
+    a = np.exp(np.asarray(q @ k.T) * sc)
+    rs = a.sum(-1)
+    np.testing.assert_allclose(kp, rs.max() / rs.min(), rtol=1e-5)
+
+
+def test_alpha_param_uniform_softmax_is_one():
+    """For a perfectly uniform softmax matrix, alpha = n * n * (1/n^2) = 1."""
+    n = 64
+    q = jnp.zeros((n, 8))
+    k = jnp.zeros((n, 8))
+    assert abs(float(ref.alpha_param(q, k)) - 1.0) < 1e-4
+
+
+def test_alpha_param_one_hot_is_n():
+    """A softmax matrix concentrated on one column has alpha = n."""
+    n, d = 32, 8
+    q = 10.0 * jnp.ones((n, d))
+    k = jnp.zeros((n, d)).at[0].set(10.0 * jnp.ones(d))
+    a = float(ref.alpha_param(q, k))
+    assert a > 0.9 * n

@@ -1,0 +1,90 @@
+"""Algorithm 4 (recursive causal HyperAttention) correctness."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import causal, ref
+from .conftest import clustered_qkv, rand_qkv
+
+
+def test_base_case_is_exact_causal():
+    """n <= base short-circuits to the exact causal flash kernel."""
+    q, k, v = rand_qkv(31, 64, 16)
+    out = causal.causal_hyper_attention(q, k, v, 0, base=64, block=16,
+                                        n_samples=16)
+    exp = ref.attention_exact(q, k, v, causal=True)
+    assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+def test_one_level_recursion_structure():
+    """With one split, the first half must be EXACT causal attention (it
+    recurses straight into the base case), independent of sampling."""
+    n = 128
+    q, k, v = rand_qkv(32, n, 16)
+    out = causal.causal_hyper_attention(q, k, v, 3, base=64, block=16,
+                                        n_samples=16)
+    exp = ref.attention_exact(q, k, v, causal=True)
+    assert_allclose(np.asarray(out[: n // 2]), np.asarray(exp[: n // 2]),
+                    atol=2e-5, rtol=2e-5)
+
+
+def test_causal_never_attends_future():
+    """Make future values NaN-poison: output must stay finite, because a
+    causal estimator never touches keys/values above the diagonal...
+    except that position i may only use v[<=i]."""
+    n = 128
+    q, k, v = rand_qkv(33, n, 8)
+    # Poison the last quarter of V; rows < n/2 must be unaffected vs
+    # the clean run (they can never sample from the second half).
+    v_bad = v.at[3 * n // 4:].set(jnp.nan)
+    out_clean = causal.causal_hyper_attention(q, k, v, 1, base=32, block=16,
+                                              n_samples=16)
+    out_bad = causal.causal_hyper_attention(q, k, v_bad, 1, base=32, block=16,
+                                            n_samples=16)
+    assert_allclose(np.asarray(out_bad[: n // 2]),
+                    np.asarray(out_clean[: n // 2]), atol=1e-6)
+
+
+def test_causal_accuracy_on_clustered():
+    q, k, v = clustered_qkv(34, 256, 32)
+    out = causal.causal_hyper_attention(q, k, v, 7, base=64, block=32,
+                                        n_samples=128)
+    exp = ref.attention_exact(q, k, v, causal=True)
+    # first half exact-by-construction + approximate second half
+    rel = float(jnp.linalg.norm(out - exp) / jnp.linalg.norm(exp))
+    assert rel < 0.6, f"rel error {rel}"
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.sampled_from([128, 256]), d=st.sampled_from([8, 16]),
+       base=st.sampled_from([32, 64]), seed=st.integers(0, 500))
+def test_causal_hypothesis_finite(n, d, base, seed):
+    q, k, v = rand_qkv(seed, n, d)
+    out = causal.causal_hyper_attention(q, k, v, seed, base=base, block=16,
+                                        n_samples=16)
+    assert out.shape == (n, d)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_causal_multihead_shapes():
+    q, k, v = rand_qkv(35, 128, 16)
+    qh = jnp.stack([q] * 3)
+    out = causal.causal_hyper_attention_mh(qh, qh, qh, 0, base=64, block=16,
+                                           n_samples=16)
+    assert out.shape == (3, 128, 16)
+
+
+def test_concat_parts_roundtrip():
+    q, k, v = rand_qkv(36, 64, 8)
+    p = ref.attention_parts_exact(q, k, v, causal=True)
+    p1 = (p[0][:32], p[1][:32], p[2][:32])
+    p2 = (p[0][32:], p[1][32:], p[2][32:])
+    m, s, num = causal._concat_parts(p1, p2)
+    assert_allclose(np.asarray(m), np.asarray(p[0]))
+    assert_allclose(np.asarray(s), np.asarray(p[1]))
+    assert_allclose(np.asarray(num), np.asarray(p[2]))

@@ -1,0 +1,137 @@
+"""Algorithm 3 (HyperAttention) end-to-end correctness & statistics."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import block_attn, hyper, lsh, ref, sampled
+from .conftest import clustered_qkv, rand_qkv
+
+
+def _run_hyper(q, k, v, *, block, m, seed=0, mode="uniform"):
+    d = q.shape[1]
+    proj = lsh.projections(jax.random.PRNGKey(seed), d, 8)
+    if mode == "vnorm":
+        vn = jnp.sum(v * v, axis=-1)
+        p = vn / jnp.sum(vn)
+        idx = jax.random.choice(jax.random.PRNGKey(seed + 1), q.shape[0],
+                                shape=(m,), p=p)
+    else:
+        idx = jax.random.randint(jax.random.PRNGKey(seed + 1), (m,), 0,
+                                 q.shape[0])
+    return hyper.hyper_attention(q, k, v, proj, idx, block=block,
+                                 sample_mode=mode)
+
+
+def test_hyper_block_plus_exact_residual_is_exact():
+    """Replacing the sampled residual with the dense unmasked part must
+    reproduce exact attention to machine precision — validates every
+    permutation, mask, and merge in the pipeline."""
+    n, d, b = 128, 16, 32
+    q, k, v = rand_qkv(21, n, d)
+    proj = lsh.projections(jax.random.PRNGKey(22), d, 8)
+    perm_q, _ = lsh.sort_permutation(q, proj)
+    perm_k, _ = lsh.sort_permutation(k, proj)
+    pos_q, pos_k = jnp.argsort(perm_q), jnp.argsort(perm_k)
+
+    mb, sb, nb = block_attn.block_diag_parts(
+        q[perm_q], k[perm_k], v[perm_k], block=b)
+    p_blk = (mb[pos_q], sb[pos_q], nb[pos_q])
+
+    mask = lsh.block_mask_dense(perm_q, perm_k, n, b)
+    sc = ref.softmax_scale(d)
+    logits = (q @ k.T) * sc
+    me = jnp.max(jnp.where(mask == 0, logits, -1e30), axis=-1)
+    pe = (1 - mask) * jnp.exp(logits - me[:, None])
+    p_res = (me, jnp.sum(pe, -1), pe @ v)
+
+    out = ref.finalize(ref.merge_parts(p_blk, p_res))
+    exp = ref.attention_exact(q, k, v)
+    assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["uniform", "vnorm"])
+def test_hyper_spectral_error_decreases_with_m(mode):
+    """Lemma 2: more samples => tighter Eq. (1) spectral error (on average)."""
+    q, k, v = clustered_qkv(23, 256, 32)
+    errs = []
+    for m in [16, 64, 256]:
+        # average over seeds to tame sampling noise
+        es = [float(ref.spectral_error(
+            _run_hyper(q, k, v, block=32, m=m, seed=s, mode=mode), q, k, v))
+            for s in range(3)]
+        errs.append(np.mean(es))
+    assert errs[2] < errs[0], f"errors not decreasing: {errs}"
+
+
+def test_hyper_spectral_guarantee_moderate_m():
+    """Eq. (1) holds with a practical epsilon at m = n/2 on clustered data."""
+    q, k, v = clustered_qkv(24, 256, 32)
+    out = _run_hyper(q, k, v, block=64, m=128)
+    err = float(ref.spectral_error(out, q, k, v))
+    assert err < 0.5, f"spectral error {err}"
+
+
+def test_hyper_full_sampling_near_exact():
+    """With every column sampled many times the estimate concentrates."""
+    n = 128
+    q, k, v = clustered_qkv(25, n, 16, n_clusters=4, spread=0.1)
+    outs = [_run_hyper(q, k, v, block=32, m=4 * n, seed=s) for s in range(4)]
+    out = jnp.mean(jnp.stack(outs), axis=0)
+    exp = ref.attention_exact(q, k, v)
+    rel = float(jnp.linalg.norm(out - exp) / jnp.linalg.norm(exp))
+    assert rel < 0.35, f"rel error {rel}"
+
+
+def test_hyper_preserves_shape_dtype():
+    q, k, v = rand_qkv(26, 64, 8)
+    out = _run_hyper(q, k, v, block=16, m=16)
+    assert out.shape == (64, 8)
+    assert out.dtype == q.dtype
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_hyper_rows_are_convex_combinations():
+    """Each output row must lie in the convex hull of V rows (all weights
+    positive and normalized) — holds for the estimator by construction."""
+    q, k, v = rand_qkv(27, 64, 4)
+    out = np.asarray(_run_hyper(q, k, v, block=16, m=64))
+    vmin, vmax = np.asarray(v).min(0), np.asarray(v).max(0)
+    assert np.all(out >= vmin - 1e-4)
+    assert np.all(out <= vmax + 1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([64, 128]), d=st.sampled_from([8, 16, 32]),
+       block=st.sampled_from([16, 32]), seed=st.integers(0, 1000))
+def test_hyper_hypothesis_finite_and_shaped(n, d, block, seed):
+    q, k, v = rand_qkv(seed, n, d)
+    out = _run_hyper(q, k, v, block=block, m=32, seed=seed)
+    assert out.shape == (n, d)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_hyper_seeded_wrapper_deterministic():
+    q, k, v = rand_qkv(28, 64, 16)
+    a = hyper.hyper_attention_seeded(q, k, v, 42, block=16, n_samples=32)
+    b = hyper.hyper_attention_seeded(q, k, v, 42, block=16, n_samples=32)
+    assert_allclose(np.asarray(a), np.asarray(b))
+    c = hyper.hyper_attention_seeded(q, k, v, 43, block=16, n_samples=32)
+    assert not np.allclose(np.asarray(a), np.asarray(c))
+
+
+def test_hyper_multihead_matches_per_head():
+    q, k, v = rand_qkv(29, 64, 16)
+    qh = jnp.stack([q, q + 0.1])
+    kh = jnp.stack([k, k - 0.1])
+    vh = jnp.stack([v, v * 2])
+    out = hyper.hyper_attention_mh(qh, kh, vh, 5, block=16, n_samples=32)
+    one = hyper.hyper_attention_seeded(qh[0], kh[0], vh[0], 5, block=16,
+                                       n_samples=32)
+    assert out.shape == (2, 64, 16)
+    assert_allclose(np.asarray(out[0]), np.asarray(one), atol=1e-5)

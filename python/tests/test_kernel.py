@@ -1,0 +1,196 @@
+"""Core kernel-vs-oracle correctness: flash, block-diag, sampled kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import block_attn, ref, sampled
+from .conftest import rand_qkv
+
+
+# ---------------------------------------------------------------------------
+# flash (streaming exact) kernel vs naive exact oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [64, 128, 256])
+@pytest.mark.parametrize("causal", [False, True])
+def test_flash_matches_exact(n, causal):
+    q, k, v = rand_qkv(7, n, 32)
+    out = block_attn.flash_attention(q, k, v, causal=causal)
+    exp = ref.attention_exact(q, k, v, causal=causal)
+    assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("bq,bk", [(16, 16), (32, 64), (64, 32), (128, 128)])
+def test_flash_block_shape_invariance(bq, bk):
+    """Output must not depend on the tiling."""
+    q, k, v = rand_qkv(8, 128, 16)
+    out = block_attn.flash_attention(q, k, v, block_q=bq, block_k=bk)
+    exp = ref.attention_exact(q, k, v)
+    assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("causal", [False, True])
+def test_flash_parts_match_exact_parts(causal):
+    q, k, v = rand_qkv(9, 128, 16)
+    m, s, num = block_attn.flash_attention_parts(q, k, v, causal=causal)
+    out = np.asarray(num / np.maximum(np.asarray(s), 1e-30)[:, None])
+    exp = ref.attention_exact(q, k, v, causal=causal)
+    assert_allclose(out, np.asarray(exp), atol=2e-5, rtol=2e-5)
+    # the unnormalized row sums must match exp-space row sums
+    rs = np.asarray(s) * np.exp(np.asarray(m))
+    exp_rs = np.asarray(ref.row_sums_exact(q, k, causal=causal))
+    assert_allclose(rs, exp_rs, rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([32, 64, 128]),
+    d=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**16),
+    causal=st.booleans(),
+    scale=st.sampled_from([None, 0.5, 1.0]),
+)
+def test_flash_hypothesis_sweep(n, d, seed, causal, scale):
+    """Hypothesis sweep over shapes/seeds/scales: flash == exact always."""
+    q, k, v = rand_qkv(seed, n, d)
+    out = block_attn.flash_attention(q, k, v, causal=causal, scale=scale)
+    exp = ref.attention_exact(q, k, v, causal=causal, scale=scale)
+    assert_allclose(np.asarray(out), np.asarray(exp), atol=5e-5, rtol=5e-5)
+
+
+def test_flash_rectangular_kv():
+    """Queries shorter than keys (the causal off-diagonal block shape)."""
+    q, _, _ = rand_qkv(1, 64, 16)
+    _, k, v = rand_qkv(2, 128, 16)
+    out = block_attn.flash_attention(q, k, v)
+    exp = ref.attention_exact(q, k, v)
+    assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_extreme_logits_stable():
+    """Large-magnitude inputs must not overflow (streaming max shift)."""
+    q, k, v = rand_qkv(3, 64, 16, scale=20.0)
+    out = np.asarray(block_attn.flash_attention(q, k, v))
+    assert np.all(np.isfinite(out))
+    exp = np.asarray(ref.attention_exact(q, k, v))
+    assert_allclose(out, exp, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# block-diagonal kernel vs dense masked oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,b", [(64, 16), (128, 32), (256, 64), (64, 64)])
+def test_block_diag_matches_dense_mask(n, b):
+    q, k, v = rand_qkv(11, n, 16)
+    m, s, num = block_attn.block_diag_parts(q, k, v, block=b)
+    sc = ref.softmax_scale(16)
+    logits = np.asarray((q @ k.T)) * sc
+    groups = np.arange(n) // b
+    mask = (groups[:, None] == groups[None, :])
+    lm = np.where(mask, logits, -1e30)
+    em = lm.max(-1)
+    p = np.where(mask, np.exp(lm - em[:, None]), 0.0)
+    assert_allclose(np.asarray(m), em, atol=1e-5)
+    assert_allclose(np.asarray(s), p.sum(-1), rtol=1e-5)
+    assert_allclose(np.asarray(num), p @ np.asarray(v), rtol=1e-4, atol=1e-5)
+
+
+def test_block_diag_requires_divisible():
+    q, k, v = rand_qkv(0, 96, 8)
+    with pytest.raises(AssertionError):
+        block_attn.block_diag_parts(q, k, v, block=64)
+
+
+# ---------------------------------------------------------------------------
+# sampled residual kernel vs dense weighted oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m", [(64, 16), (128, 64), (128, 128)])
+def test_sampled_kernel_matches_dense(n, m):
+    q, k, v = rand_qkv(13, n, 16)
+    key = jax.random.PRNGKey(5)
+    idx = jax.random.randint(key, (m,), 0, n)
+    w = jax.random.uniform(jax.random.PRNGKey(6), (n, m))
+    mm, ss, nn = sampled.sampled_parts(q, k[idx], v[idx], w)
+    sc = ref.softmax_scale(16)
+    logits = np.asarray(q @ k[idx].T) * sc
+    em = logits.max(-1)
+    p = np.asarray(w) * np.exp(logits - em[:, None])
+    assert_allclose(np.asarray(mm), em, atol=1e-5)
+    assert_allclose(np.asarray(ss), p.sum(-1), rtol=1e-4)
+    assert_allclose(np.asarray(nn), p @ np.asarray(v[idx]), rtol=1e-3, atol=1e-4)
+
+
+def test_sampled_zero_weights_give_zero():
+    q, k, v = rand_qkv(14, 64, 8)
+    idx = jnp.arange(16)
+    w = jnp.zeros((64, 16))
+    _, ss, nn = sampled.sampled_parts(q, k[idx], v[idx], w)
+    assert float(jnp.max(jnp.abs(ss))) == 0.0
+    assert float(jnp.max(jnp.abs(nn))) == 0.0
+
+
+def test_residual_weights_drop_own_block():
+    """Samples landing in the query's own block must get weight zero."""
+    n, b, m = 64, 16, 32
+    pos = jnp.arange(n)  # identity permutations
+    idx = jnp.arange(m)
+    w = sampled.residual_weights(idx, pos, pos, n, b)
+    w = np.asarray(w)
+    for i in range(n):
+        for j in range(m):
+            same_block = (i // b) == (int(idx[j]) // b)
+            if same_block:
+                assert w[i, j] == 0.0
+            else:
+                assert w[i, j] > 0.0
+
+
+def test_residual_weights_uniform_scale():
+    """Kept weights of one row must sum to ~(n - b)."""
+    n, b, m = 128, 32, 64
+    pos = jnp.arange(n)
+    idx = jax.random.randint(jax.random.PRNGKey(0), (m,), 0, n)
+    w = np.asarray(sampled.residual_weights(idx, pos, pos, n, b))
+    sums = w.sum(-1)
+    assert_allclose(sums[sums > 0], n - b, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# triple merge algebra
+# ---------------------------------------------------------------------------
+
+def test_merge_parts_exact_split():
+    """Splitting the key set and merging must equal the unsplit triple."""
+    q, k, v = rand_qkv(17, 64, 16)
+    p_full = ref.attention_parts_exact(q, k, v)
+    p1 = ref.attention_parts_exact(q, k[:32], v[:32])
+    p2 = ref.attention_parts_exact(q, k[32:], v[32:])
+    merged = ref.merge_parts(p1, p2)
+    out_a = np.asarray(ref.finalize(merged))
+    out_b = np.asarray(ref.finalize(p_full))
+    assert_allclose(out_a, out_b, atol=2e-5, rtol=2e-5)
+
+
+def test_merge_parts_commutative():
+    q, k, v = rand_qkv(18, 32, 8)
+    p1 = ref.attention_parts_exact(q, k[:16], v[:16])
+    p2 = ref.attention_parts_exact(q, k[16:], v[16:])
+    a = np.asarray(ref.finalize(ref.merge_parts(p1, p2)))
+    b = np.asarray(ref.finalize(ref.merge_parts(p2, p1)))
+    assert_allclose(a, b, atol=1e-6)
+
+
+def test_finalize_zero_denominator_safe():
+    m = jnp.zeros(4)
+    s = jnp.zeros(4)
+    num = jnp.ones((4, 8))
+    out = np.asarray(ref.finalize((m, s, num)))
+    assert np.all(np.isfinite(out))

@@ -1,0 +1,119 @@
+"""Hamming-sorted LSH: Gray-code properties and collision statistics."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lsh
+
+
+def test_gray_to_binary_roundtrip():
+    """Gray decode of the standard Gray sequence is 0,1,2,..."""
+    r = 6
+    n = 2 ** r
+    binary = np.array([[(i >> (r - 1 - b)) & 1 for b in range(r)]
+                       for i in range(n)])
+    gray = np.array([[((i ^ (i >> 1)) >> (r - 1 - b)) & 1 for b in range(r)]
+                     for i in range(n)])
+    dec = np.asarray(lsh.gray_to_binary(jnp.asarray(gray)))
+    assert np.array_equal(dec, binary)
+
+
+def test_adjacent_buckets_hamming_one():
+    """Consecutive bucket ids must correspond to sign patterns at Hamming
+    distance exactly 1 (the 'Hamming sorted' property of Definition 1)."""
+    r = 8
+    n = 2 ** r
+    gray = np.array([[((i ^ (i >> 1)) >> (r - 1 - b)) & 1 for b in range(r)]
+                     for i in range(n)])
+    for i in range(n - 1):
+        assert np.sum(gray[i] != gray[i + 1]) == 1
+
+
+def test_bucket_ids_range_and_determinism():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256, 16))
+    proj = lsh.projections(jax.random.PRNGKey(1), 16, 8)
+    b1 = np.asarray(lsh.bucket_ids(x, proj))
+    b2 = np.asarray(lsh.bucket_ids(x, proj))
+    assert np.array_equal(b1, b2)
+    assert b1.min() >= 0 and b1.max() < 2 ** 8
+
+
+def test_identical_points_collide():
+    x = jax.random.normal(jax.random.PRNGKey(2), (32, 16))
+    proj = lsh.projections(jax.random.PRNGKey(3), 16, 10)
+    b = lsh.bucket_ids(jnp.concatenate([x, x]), proj)
+    assert np.array_equal(np.asarray(b[:32]), np.asarray(b[32:]))
+
+
+def test_collision_probability_formula_montecarlo():
+    """Empirical collisions over random projections match Definition 1."""
+    d, r, trials = 8, 4, 400
+    theta = 0.3
+    x = jnp.zeros(d).at[0].set(1.0)
+    y = jnp.zeros(d).at[0].set(jnp.cos(theta)).at[1].set(jnp.sin(theta))
+    hits = 0
+    for t in range(trials):
+        proj = lsh.projections(jax.random.PRNGKey(t), d, r)
+        bx = lsh.bucket_ids(x[None, :], proj)
+        by = lsh.bucket_ids(y[None, :], proj)
+        hits += int(bx[0] == by[0])
+    expected = float(lsh.collision_probability(theta, r))
+    assert abs(hits / trials - expected) < 0.08
+
+
+def test_sort_permutation_is_permutation():
+    x = jax.random.normal(jax.random.PRNGKey(4), (128, 8))
+    proj = lsh.projections(jax.random.PRNGKey(5), 8, 6)
+    perm, buckets = lsh.sort_permutation(x, proj)
+    perm = np.asarray(perm)
+    assert sorted(perm.tolist()) == list(range(128))
+    sorted_buckets = np.asarray(buckets)[perm]
+    assert np.all(np.diff(sorted_buckets) >= 0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([32, 64, 128]), d=st.sampled_from([4, 8, 16]),
+       r=st.integers(2, 10), seed=st.integers(0, 2**16))
+def test_sort_permutation_hypothesis(n, d, r, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    proj = lsh.projections(jax.random.PRNGKey(seed + 1), d, r)
+    perm, _ = lsh.sort_permutation(x, proj)
+    assert sorted(np.asarray(perm).tolist()) == list(range(n))
+
+
+def test_block_mask_dense_structure():
+    """Mask rows/cols must each contain exactly `block` ones."""
+    n, b = 64, 16
+    x = jax.random.normal(jax.random.PRNGKey(6), (n, 8))
+    y = jax.random.normal(jax.random.PRNGKey(7), (n, 8))
+    proj = lsh.projections(jax.random.PRNGKey(8), 8, 6)
+    pq, _ = lsh.sort_permutation(x, proj)
+    pk, _ = lsh.sort_permutation(y, proj)
+    mask = np.asarray(lsh.block_mask_dense(pq, pk, n, b))
+    assert mask.shape == (n, n)
+    assert np.allclose(mask.sum(axis=1), b)
+    assert np.allclose(mask.sum(axis=0), b)
+    # nnz = n * b — the paper's sparse-by-design n^{1+o(1)} mask
+    assert mask.sum() == n * b
+
+
+def test_clustered_inputs_concentrate_in_blocks():
+    """On clustered inputs the mask should capture most attention mass."""
+    from .conftest import clustered_qkv
+    from compile.kernels import ref
+
+    q, k, _ = clustered_qkv(9, 256, 16, n_clusters=4, spread=0.1)
+    proj = lsh.projections(jax.random.PRNGKey(10), 16, 8)
+    pq, _ = lsh.sort_permutation(q, proj)
+    pk, _ = lsh.sort_permutation(k, proj)
+    mask = lsh.block_mask_dense(pq, pk, 256, 64)
+    p = ref.softmax_matrix(q, k)
+    captured = float(jnp.sum(mask * p) / 256)
+    # random blocks would capture 0.25 of the mass; LSH should beat that
+    assert captured > 0.5, f"captured only {captured:.3f}"

@@ -1,0 +1,98 @@
+//! Bench: ablations over the design choices DESIGN.md calls out.
+//!
+//! `cargo bench --bench ablations`
+//!
+//! 1. block size b: accuracy/time trade-off at fixed n (Alg. 1 mask).
+//! 2. sample count m: Lemma 2 error scaling.
+//! 3. sampling mode: uniform (practical) vs V-row-norm (Lemma 2).
+//! 4. LSH bits r: mask mass captured vs bucket granularity.
+//! 5. causal recursion base: exact-base size vs time/accuracy.
+
+use std::time::Instant;
+
+use hyperattention::attention::causal::{causal_hyper_attention, CausalParams};
+use hyperattention::attention::exact;
+use hyperattention::attention::hyper::{hyper_attention, HyperParams, SampleMode};
+use hyperattention::attention::measure;
+use hyperattention::bench::clustered_qkv;
+use hyperattention::lsh::{BlockMask, Lsh};
+use hyperattention::rng::Rng;
+
+fn rel_err(a: &hyperattention::linalg::Mat, b: &hyperattention::linalg::Mat) -> f32 {
+    let mut diff = a.clone();
+    for (x, y) in diff.data.iter_mut().zip(&b.data) {
+        *x -= y;
+    }
+    diff.fro_norm() / b.fro_norm()
+}
+
+fn main() {
+    let (n, d) = (4096usize, 64usize);
+    let (q, k, v) = clustered_qkv(1, n, d, 32, 0.4);
+    let exact_nc = exact::flash_attention(&q, &k, &v, false, None, 64);
+    let exact_c = exact::flash_attention(&q, &k, &v, true, None, 64);
+
+    println!("=== ablation 1: block size (m=256 fixed, n={n}) ===");
+    println!("{:>7} {:>10} {:>10} {:>10}", "block", "time (s)", "rel err", "spectral");
+    for b in [64usize, 128, 256, 512] {
+        let p = HyperParams { block: b, samples: 256, ..Default::default() };
+        let t0 = Instant::now();
+        let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(5));
+        let dt = t0.elapsed().as_secs_f64();
+        let spec = measure::spectral_error(&out, &q, &k, &v, false, None);
+        println!("{b:>7} {dt:>10.4} {:>10.4} {spec:>10.4}", rel_err(&out, &exact_nc));
+    }
+
+    println!("\n=== ablation 2: sample count m (b=256 fixed) ===");
+    println!("{:>7} {:>10} {:>10} {:>10}", "m", "time (s)", "rel err", "spectral");
+    for m in [64usize, 128, 256, 512, 1024] {
+        let p = HyperParams { block: 256, samples: m, ..Default::default() };
+        let t0 = Instant::now();
+        let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(5));
+        let dt = t0.elapsed().as_secs_f64();
+        let spec = measure::spectral_error(&out, &q, &k, &v, false, None);
+        println!("{m:>7} {dt:>10.4} {:>10.4} {spec:>10.4}", rel_err(&out, &exact_nc));
+    }
+
+    println!("\n=== ablation 3: sampling mode (b=256, m=256) ===");
+    for (name, mode) in [("uniform", SampleMode::Uniform), ("vnorm", SampleMode::VNorm)] {
+        let p = HyperParams { block: 256, samples: 256, mode, ..Default::default() };
+        let mut errs = 0.0;
+        for s in 0..3u64 {
+            let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(s));
+            errs += measure::spectral_error(&out, &q, &k, &v, false, None) / 3.0;
+        }
+        println!("  {name:>8}: mean spectral err {errs:.4}");
+    }
+
+    println!("\n=== ablation 4: LSH bits (mask mass captured, n=2048) ===");
+    let (q2, k2, _) = clustered_qkv(2, 2048, d, 32, 0.4);
+    let p2048 = measure::softmax_matrix(&q2, &k2, false, None);
+    for bits in [4usize, 6, 8, 10] {
+        let lsh = Lsh::new(d, bits, &mut Rng::new(9));
+        let mask = BlockMask::from_lsh(&lsh, &q2, &k2, 128);
+        let mut captured = 0.0f64;
+        for i in 0..2048 {
+            for j in 0..2048 {
+                if mask.contains(i, j) {
+                    captured += p2048.get(i, j) as f64;
+                }
+            }
+        }
+        println!("  r={bits:>2}: mask captures {:.1}% of softmax mass", 100.0 * captured / 2048.0);
+    }
+
+    println!("\n=== ablation 5: causal recursion base (n={n}) ===");
+    println!("{:>7} {:>10} {:>10}", "base", "time (s)", "rel err");
+    for base in [256usize, 512, 1024, 2048] {
+        let cp = CausalParams {
+            base,
+            hyper: HyperParams { block: 256, samples: 256, ..Default::default() },
+            flash_block: 64,
+        };
+        let t0 = Instant::now();
+        let out = causal_hyper_attention(&q, &k, &v, &cp, &mut Rng::new(5));
+        let dt = t0.elapsed().as_secs_f64();
+        println!("{base:>7} {dt:>10.4} {:>10.4}", rel_err(&out, &exact_c));
+    }
+}

@@ -1,0 +1,31 @@
+//! Bench: Fig 3 — perplexity & speedup of the (trained) tiny LM vs
+//! number of final attention layers replaced by HyperAttention.
+//!
+//! `cargo bench --bench fig3_patching [-- --full]`
+
+use hyperattention::bench::{print_fig3, run_fig3};
+use hyperattention::model::ModelConfig;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let (steps, seq_len) = if full { (300, 512) } else { (80, 128) };
+    let cfg = ModelConfig {
+        vocab: 64,
+        d_model: 64,
+        n_heads: 2,
+        n_layers: 4,
+        d_ff: 128,
+        max_seq: seq_len,
+        hyper_block: 32,
+        hyper_samples: 32,
+        hyper_base: 64,
+    };
+    println!("Fig 3: train {steps} steps @ n={seq_len}, then patch-sweep");
+    let (_, curve, rows) = run_fig3(cfg, steps, seq_len, 6, false);
+    println!(
+        "trained: loss {:.3} -> {:.3}",
+        curve.first().unwrap(),
+        curve.last().unwrap()
+    );
+    print_fig3(&rows);
+}

@@ -1,0 +1,34 @@
+//! Bench: Fig 4 — single attention layer, exact (flash) vs hyper,
+//! forward and forward+backward, causal and non-causal, over n.
+//!
+//! `cargo bench --bench fig4_speedup [-- --full]`
+//!
+//! Default sweep keeps CI fast (n ≤ 16k); `--full` runs the paper's
+//! n = 4k..131k grid with d = 64 and b = m = 256 (Section 4.2 setup).
+
+use hyperattention::bench::{print_fig4, run_fig4};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let sizes: Vec<usize> = if full {
+        vec![4096, 8192, 16384, 32768, 65536, 131072]
+    } else {
+        vec![2048, 4096, 8192]
+    };
+    let reps = 1;
+    println!(
+        "Fig 4 sweep: d=64, heads folded, b=m=256, sizes={sizes:?} (reps={reps})"
+    );
+    let rows = run_fig4(&sizes, 64, 256, 256, true, reps);
+    print_fig4(&rows);
+
+    // paper's headline shape for quick eyeballing
+    if let Some(r) = rows.iter().filter(|r| !r.causal && !r.backward).last() {
+        println!("\nnon-causal fwd speedup at n={}: {:.1}x (paper @131k: ~54x)",
+                 r.n, r.speedup());
+    }
+    if let Some(r) = rows.iter().filter(|r| r.causal && !r.backward).last() {
+        println!("causal    fwd speedup at n={}: {:.1}x (paper @131k: ~5.4x)",
+                 r.n, r.speedup());
+    }
+}

@@ -1,0 +1,23 @@
+//! Bench: Fig 5 — empirical α (and α/n) vs sequence length.
+//!
+//! `cargo bench --bench fig5_alpha [-- --full]`
+
+use hyperattention::bench::{print_fig5, run_fig5};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let sizes: Vec<usize> = if full {
+        vec![1024, 2048, 4096, 8192, 16384]
+    } else {
+        vec![512, 1024, 2048, 4096]
+    };
+    println!("Fig 5: alpha vs n on clustered inputs, d=64");
+    let rows = run_fig5(&sizes, 64, None);
+    print_fig5(&rows);
+    let first = rows.first().unwrap().2;
+    let last = rows.last().unwrap().2;
+    println!(
+        "\nalpha/n {first:.5} -> {last:.5} ({})",
+        if last < first { "decreasing ⇒ assumption holds" } else { "NOT decreasing" }
+    );
+}

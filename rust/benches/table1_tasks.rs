@@ -1,0 +1,25 @@
+//! Bench: Table 1 — six LongBench-like task scores vs patched layers.
+//!
+//! `cargo bench --bench table1_tasks [-- --full]`
+
+use hyperattention::bench::{print_table1, run_table1};
+use hyperattention::model::ModelConfig;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let (steps, seq_len, reps) = if full { (300, 128, 40) } else { (80, 96, 10) };
+    let cfg = ModelConfig {
+        vocab: 64,
+        d_model: 64,
+        n_heads: 2,
+        n_layers: 4,
+        d_ff: 128,
+        max_seq: seq_len,
+        hyper_block: 32,
+        hyper_samples: 32,
+        hyper_base: 64,
+    };
+    println!("Table 1: train {steps} steps on the task mixture @ n={seq_len}");
+    let (_, table) = run_table1(cfg, steps, seq_len, reps, false);
+    print_table1(&table);
+}

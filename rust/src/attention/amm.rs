@@ -1,0 +1,160 @@
+//! Lemma 2: approximate matrix multiplication by row-norm sampling.
+//!
+//! For the product P·V (P the softmax matrix), sample m rows of V with
+//! probability p_ℓ = ‖V_ℓ‖²/‖V‖_F² and set row r of S to
+//! ‖V‖_F / (√m · ‖V_ℓr‖) · e^(ℓr); then P Sᵀ S V ≈ P V with operator-norm
+//! error ε‖P‖‖V‖ once m = Ω(ε⁻² d · srank(P)) — the standard
+//! Drineas–Kannan bound the paper cites.
+//!
+//! This module provides the sampling-matrix constructor and an explicit
+//! applier used by the tests and the ablation benches; the fused serving
+//! path in [`super::hyper`] consumes the same indices/weights directly.
+
+use crate::linalg::{matmul, Mat};
+use crate::rng::Rng;
+
+/// A row-sampling sketch S (factored: indices + per-row scales).
+#[derive(Clone, Debug)]
+pub struct RowSample {
+    pub idx: Vec<usize>,
+    /// scale of row r of S: ‖V‖_F / (√m ‖V_ℓr‖) (or the uniform analogue)
+    pub scale: Vec<f32>,
+}
+
+impl RowSample {
+    /// Lemma 2 sampling from the squared row norms of `v`.
+    pub fn by_row_norms(v: &Mat, m: usize, rng: &mut Rng) -> Self {
+        let sq = v.row_sq_norms();
+        let fro2: f32 = sq.iter().sum();
+        let idx = rng.sample_weighted(&sq, m);
+        let scale = idx
+            .iter()
+            .map(|&l| (fro2 / (m as f32 * sq[l].max(1e-30))).sqrt())
+            .collect();
+        RowSample { idx, scale }
+    }
+
+    /// Uniform sampling (the paper's "in practice" simplification):
+    /// p_ℓ = 1/n, scale √(n/m).
+    pub fn uniform(n: usize, m: usize, rng: &mut Rng) -> Self {
+        let idx = rng.sample_uniform(n, m);
+        let scale = vec![(n as f32 / m as f32).sqrt(); m];
+        RowSample { idx, scale }
+    }
+
+    pub fn m(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Materialize S·X (m × cols): scaled gather of X rows.
+    pub fn apply(&self, x: &Mat) -> Mat {
+        let mut out = x.gather_rows(&self.idx);
+        for r in 0..out.rows {
+            let s = self.scale[r];
+            for val in out.row_mut(r) {
+                *val *= s;
+            }
+        }
+        out
+    }
+
+    /// A Sᵀ for a dense A (n × n): scaled gather of A *columns*.
+    pub fn apply_t_right(&self, a: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows, self.m());
+        for i in 0..a.rows {
+            let arow = a.row(i);
+            let orow = out.row_mut(i);
+            for (r, (&l, &s)) in self.idx.iter().zip(&self.scale).enumerate() {
+                orow[r] = arow[l] * s;
+            }
+        }
+        out
+    }
+}
+
+/// Explicit AMM estimate: A Sᵀ · S V (test scale; the serving path fuses).
+pub fn amm_product(a: &Mat, v: &Mat, s: &RowSample) -> Mat {
+    matmul(&s.apply_t_right(a), &s.apply(v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::op_norm;
+
+    #[test]
+    fn sampling_matrix_unbiased() {
+        // E[A Sᵀ S V] = A V: check the mean over many draws converges.
+        let mut rng = Rng::new(0);
+        let a = Mat::randn(16, 32, &mut rng);
+        let v = Mat::randn(32, 8, &mut rng);
+        let exact = matmul(&a, &v);
+        let mut mean = Mat::zeros(16, 8);
+        let reps = 600;
+        for s in 0..reps {
+            let samp = RowSample::by_row_norms(&v, 16, &mut Rng::new(1000 + s));
+            mean.add_assign(&amm_product(&a, &v, &samp));
+        }
+        mean.scale(1.0 / reps as f32);
+        let rel = mean.max_abs_diff(&exact) / exact.fro_norm() * (16.0f32 * 8.0).sqrt();
+        assert!(rel < 0.2, "bias check failed: rel {rel}");
+    }
+
+    #[test]
+    fn error_scales_inverse_sqrt_m() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(64, 64, &mut rng);
+        let v = Mat::randn(64, 16, &mut rng);
+        let exact = matmul(&a, &v);
+        let mut errs = Vec::new();
+        for &m in &[8usize, 32, 128] {
+            let mut e = 0.0;
+            for s in 0..5u64 {
+                let samp = RowSample::by_row_norms(&v, m, &mut Rng::new(42 + s));
+                let approx = amm_product(&a, &v, &samp);
+                let mut diff = approx.clone();
+                for (d, &x) in diff.data.iter_mut().zip(&exact.data) {
+                    *d -= x;
+                }
+                e += op_norm(&diff, 20, &mut Rng::new(7)) / 5.0;
+            }
+            errs.push(e);
+        }
+        // 16x more samples should shrink the op-norm error ~4x; accept 2x
+        assert!(errs[2] < errs[0] / 2.0, "errors {errs:?}");
+    }
+
+    #[test]
+    fn uniform_sampler_scales() {
+        let mut rng = Rng::new(2);
+        let s = RowSample::uniform(100, 25, &mut rng);
+        assert_eq!(s.m(), 25);
+        assert!(s.scale.iter().all(|&x| (x - 2.0).abs() < 1e-6));
+        assert!(s.idx.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn row_norm_sampler_prefers_heavy_rows() {
+        let mut rng = Rng::new(3);
+        let mut v = Mat::zeros(10, 4);
+        for j in 0..4 {
+            v.set(0, j, 10.0); // row 0 dominates
+            v.set(5, j, 0.01);
+        }
+        let s = RowSample::by_row_norms(&v, 200, &mut rng);
+        let c0 = s.idx.iter().filter(|&&i| i == 0).count();
+        assert!(c0 > 190, "heavy row sampled {c0}/200");
+    }
+
+    #[test]
+    fn apply_shapes() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(8, 12, &mut rng);
+        let v = Mat::randn(12, 3, &mut rng);
+        let s = RowSample::uniform(12, 5, &mut rng);
+        assert_eq!(s.apply(&v).rows, 5);
+        assert_eq!(s.apply_t_right(&a).cols, 5);
+        let prod = amm_product(&a, &v, &s);
+        assert_eq!((prod.rows, prod.cols), (8, 3));
+    }
+}

@@ -1,0 +1,213 @@
+//! Algorithm 2 (ApproxD): near-linear spectral estimation of the
+//! diagonal D (row sums of A = exp(QKᵀ)).
+//!
+//! Line-by-line transcription of the paper's pseudocode against the
+//! factored [`BlockMask`]: the masked part of each row sum is computed
+//! exactly over the ≤ `block` keys in the query's sortLSH block; the
+//! unmasked remainder is estimated from `m` shared uniform column
+//! samples, upper-capped at C_i (line 6) and lower-capped at τ/κ
+//! (line 8).  Total Θ((n + m)·m·d) ⊂ n^{1+o(1)} for m = n^{o(1)}.
+
+use super::softmax_scale;
+use crate::linalg::{dot, Mat};
+use crate::lsh::BlockMask;
+use crate::par;
+use crate::rng::Rng;
+
+/// ApproxD parameters (ε, κ as in Lemma 1; m the sample count).
+#[derive(Clone, Copy, Debug)]
+pub struct ApproxDParams {
+    pub kappa: f32,
+    pub eps: f32,
+    pub m: usize,
+    pub scale: Option<f32>,
+    /// the Θ(·) constant of line 6
+    pub theta_const: f32,
+}
+
+impl Default for ApproxDParams {
+    fn default() -> Self {
+        ApproxDParams { kappa: 8.0, eps: 0.5, m: 256, scale: None, theta_const: 1.0 }
+    }
+}
+
+/// Exact masked row sum ⟨M_i, exp(K q_i)⟩ using the factored block mask.
+fn masked_row_sum(
+    q: &Mat,
+    k: &Mat,
+    mask: &BlockMask,
+    block_keys: &[Vec<usize>],
+    i: usize,
+    sc: f32,
+) -> f32 {
+    let g = mask.pos_q[i] / mask.block;
+    block_keys[g]
+        .iter()
+        .map(|&j| (dot(q.row(i), k.row(j)) * sc).exp())
+        .sum()
+}
+
+/// Exact unmasked row sum (used only for τ over the sampled row subset —
+/// O(n·d) per row, O(m·n·d) total, as the paper prescribes).
+fn unmasked_row_sum(q: &Mat, k: &Mat, mask: &BlockMask, i: usize, sc: f32) -> f32 {
+    let g = mask.pos_q[i] / mask.block;
+    (0..k.rows)
+        .filter(|&j| mask.pos_k[j] / mask.block != g)
+        .map(|j| (dot(q.row(i), k.row(j)) * sc).exp())
+        .sum()
+}
+
+/// Algorithm 2.  Returns the estimated diagonal d̃ (length n).
+pub fn approx_d(
+    q: &Mat,
+    k: &Mat,
+    mask: &BlockMask,
+    p: &ApproxDParams,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let n = q.rows;
+    let sc = softmax_scale(q.cols, p.scale);
+    let m = p.m.min(n).max(1);
+
+    // key lists per sorted block (factored mask -> sparse support)
+    let nb = n / mask.block;
+    let mut block_keys: Vec<Vec<usize>> = vec![Vec::with_capacity(mask.block); nb];
+    for j in 0..k.rows {
+        block_keys[mask.pos_k[j] / mask.block].push(j);
+    }
+
+    // line 2-3: τ = max unmasked row sum over a random subset T, |T| = m
+    let subset = rng.sample_distinct(n, m);
+    let tau = par::par_max(subset.len(), |t| unmasked_row_sum(q, k, mask, subset[t], sc))
+        .max(1e-30);
+
+    // line 4: shared uniform column samples
+    let samp = rng.sample_uniform(n, m);
+    let samp_block: Vec<usize> = samp.iter().map(|&j| mask.pos_k[j] / mask.block).collect();
+
+    // lines 5-8
+    let theta = p.theta_const * p.eps * p.eps * (m as f32) / (n as f32 * (n as f32).ln().max(1.0));
+    let floor = tau / p.kappa;
+    par::par_map(n, |i| {
+        let masked = masked_row_sum(q, k, mask, &block_keys, i, sc);
+        let c_i = theta * (masked + floor); // line 6
+        let g = mask.pos_q[i] / mask.block;
+        // line 7: capped uniform estimate of the unmasked row sum
+        let mut acc = 0.0f32;
+        for (t, &j) in samp.iter().enumerate() {
+            if samp_block[t] != g {
+                acc += (dot(q.row(i), k.row(j)) * sc).exp().min(c_i);
+            }
+        }
+        let d_i = (n as f32 / m as f32) * acc;
+        masked + d_i.max(floor) // line 8
+    })
+}
+
+/// Exact D row sums (O(n²d) — oracle for tests and figures).
+pub fn exact_d(q: &Mat, k: &Mat, scale: Option<f32>) -> Vec<f32> {
+    let sc = softmax_scale(q.cols, scale);
+    par::par_map(q.rows, |i| {
+        (0..k.rows)
+            .map(|j| (dot(q.row(i), k.row(j)) * sc).exp())
+            .sum()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::Lsh;
+
+    fn setup(seed: u64, n: usize, d: usize, block: usize) -> (Mat, Mat, BlockMask) {
+        let mut rng = Rng::new(seed);
+        let q = Mat::randn(n, d, &mut rng);
+        let k = Mat::randn(n, d, &mut rng);
+        let lsh = Lsh::new(d, 6, &mut rng);
+        let mask = BlockMask::from_lsh(&lsh, &q, &k, block);
+        (q, k, mask)
+    }
+
+    #[test]
+    fn estimates_positive() {
+        let (q, k, mask) = setup(0, 64, 8, 16);
+        let d = approx_d(&q, &k, &mask, &ApproxDParams::default(), &mut Rng::new(1));
+        assert!(d.iter().all(|&x| x > 0.0 && x.is_finite()));
+    }
+
+    #[test]
+    fn full_sampling_concentrates() {
+        let (q, k, mask) = setup(1, 128, 16, 32);
+        let exact = exact_d(&q, &k, None);
+        // average several independent estimates with m = n
+        let mut avg = vec![0.0f32; 128];
+        let reps = 8;
+        for s in 0..reps {
+            let p = ApproxDParams { m: 128, kappa: 4.0, eps: 1.0, ..Default::default() };
+            let d = approx_d(&q, &k, &mask, &p, &mut Rng::new(100 + s));
+            for i in 0..128 {
+                avg[i] += d[i] / reps as f32;
+            }
+        }
+        let med_rel = {
+            let mut rels: Vec<f32> = (0..128)
+                .map(|i| (avg[i] - exact[i]).abs() / exact[i])
+                .collect();
+            rels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            rels[64]
+        };
+        assert!(med_rel < 0.25, "median rel err {med_rel}");
+    }
+
+    #[test]
+    fn error_decreases_with_m() {
+        let (q, k, mask) = setup(2, 128, 16, 32);
+        let exact = exact_d(&q, &k, None);
+        let mut errs = Vec::new();
+        for &m in &[8usize, 32, 128] {
+            let mut e = 0.0;
+            for s in 0..4u64 {
+                let p = ApproxDParams { m, kappa: 4.0, eps: 1.0, ..Default::default() };
+                let d = approx_d(&q, &k, &mask, &p, &mut Rng::new(200 + s));
+                e += (0..128)
+                    .map(|i| ((d[i] - exact[i]) / exact[i]).abs())
+                    .sum::<f32>()
+                    / 128.0;
+            }
+            errs.push(e / 4.0);
+        }
+        assert!(errs[2] < errs[0], "not decreasing: {errs:?}");
+    }
+
+    #[test]
+    fn includes_masked_part_at_least() {
+        // d̃_i ≥ masked row sum by construction (line 8 adds a max(…, floor))
+        let (q, k, mask) = setup(3, 64, 8, 16);
+        let sc = softmax_scale(8, None);
+        let nb = 64 / mask.block;
+        let mut block_keys: Vec<Vec<usize>> = vec![Vec::new(); nb];
+        for j in 0..64 {
+            block_keys[mask.pos_k[j] / mask.block].push(j);
+        }
+        let d = approx_d(&q, &k, &mask, &ApproxDParams::default(), &mut Rng::new(4));
+        for i in 0..64 {
+            let masked = masked_row_sum(&q, &k, &mask, &block_keys, i, sc);
+            assert!(d[i] >= masked - 1e-4, "row {i}: {} < {masked}", d[i]);
+        }
+    }
+
+    #[test]
+    fn exact_d_matches_naive() {
+        let mut rng = Rng::new(5);
+        let q = Mat::randn(16, 4, &mut rng);
+        let k = Mat::randn(16, 4, &mut rng);
+        let d = exact_d(&q, &k, None);
+        let sc = softmax_scale(4, None);
+        for i in 0..16 {
+            let want: f32 = (0..16)
+                .map(|j| (dot(q.row(i), k.row(j)) * sc).exp())
+                .sum();
+            assert!((d[i] - want).abs() / want < 1e-5);
+        }
+    }
+}

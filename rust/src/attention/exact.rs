@@ -1,0 +1,343 @@
+//! Exact attention: naive reference + FlashAttention-style streaming
+//! baseline (forward and backward).
+//!
+//! `flash_attention` is the "FlashAttention 2" stand-in used as the Fig 4
+//! baseline: two-level blocking, online softmax (never materializes the
+//! n×n matrix), rayon-parallel over query tiles, and causal tile
+//! skipping (upper-triangular key tiles are never touched, giving the
+//! familiar ~2× causal saving).  Θ(n²d) work — the quadratic wall the
+//! paper's algorithm beats.
+
+use super::{softmax_scale, Parts, NEG_INF};
+use crate::linalg::{dot, Mat};
+use crate::par;
+
+/// Naive exact attention (materializes logits; O(n²) memory — reference
+/// and test oracle only).
+pub fn naive_attention(q: &Mat, k: &Mat, v: &Mat, causal: bool, scale: Option<f32>) -> Mat {
+    naive_parts(q, k, v, causal, scale).finalize()
+}
+
+/// Naive exact attention in triple form.
+pub fn naive_parts(q: &Mat, k: &Mat, v: &Mat, causal: bool, scale: Option<f32>) -> Parts {
+    let (n, d) = (q.rows, q.cols);
+    let nk = k.rows;
+    let sc = softmax_scale(d, scale);
+    let mut parts = Parts::empty(n, v.cols);
+    for i in 0..n {
+        let qi = q.row(i);
+        let lim = if causal { (i + 1).min(nk) } else { nk };
+        let mut mx = NEG_INF;
+        let logits: Vec<f32> = (0..lim)
+            .map(|j| {
+                let l = dot(qi, k.row(j)) * sc;
+                mx = mx.max(l);
+                l
+            })
+            .collect();
+        let mut s = 0.0;
+        for (j, &l) in logits.iter().enumerate() {
+            let p = (l - mx).exp();
+            s += p;
+            let vr = v.row(j);
+            let nr = parts.num.row_mut(i);
+            for (o, &vv) in nr.iter_mut().zip(vr) {
+                *o += p * vv;
+            }
+        }
+        parts.m[i] = mx;
+        parts.s[i] = s;
+    }
+    parts
+}
+
+/// Streaming blocked exact attention.  Returns the normalized output.
+pub fn flash_attention(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    causal: bool,
+    scale: Option<f32>,
+    block: usize,
+) -> Mat {
+    flash_parts(q, k, v, causal, scale, block).finalize()
+}
+
+/// Streaming blocked exact attention in triple form (for merging).
+pub fn flash_parts(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    causal: bool,
+    scale: Option<f32>,
+    block: usize,
+) -> Parts {
+    let (n, d) = (q.rows, q.cols);
+    let nk = k.rows;
+    assert_eq!(k.cols, d);
+    assert_eq!(v.rows, nk);
+    let dv = v.cols;
+    let sc = softmax_scale(d, scale);
+    let block = block.max(1);
+
+    let mut parts = Parts::empty(n, dv);
+    // Parallel over query tiles: each tile owns disjoint slices of the
+    // output triple, streamed over key tiles with the online softmax.
+    let m_ptr = parts.m.as_mut_ptr() as usize;
+    let s_ptr = parts.s.as_mut_ptr() as usize;
+    let num_ptr = parts.num.data.as_mut_ptr() as usize;
+
+    let tiles: Vec<usize> = (0..n).step_by(block).collect();
+    par::par_for(tiles.len(), |t| {
+        let i0 = tiles[t];
+        let i1 = (i0 + block).min(n);
+        // SAFETY: tiles are disjoint row ranges of the output buffers.
+        let m_out =
+            unsafe { std::slice::from_raw_parts_mut((m_ptr as *mut f32).add(i0), i1 - i0) };
+        let s_out =
+            unsafe { std::slice::from_raw_parts_mut((s_ptr as *mut f32).add(i0), i1 - i0) };
+        let num_out = unsafe {
+            std::slice::from_raw_parts_mut((num_ptr as *mut f32).add(i0 * dv), (i1 - i0) * dv)
+        };
+        m_out.fill(NEG_INF);
+        s_out.fill(0.0);
+        num_out.fill(0.0);
+
+        let mut logits = vec![0.0f32; block];
+        for j0 in (0..nk).step_by(block) {
+            if causal && j0 > i1 - 1 {
+                break; // tile fully above the diagonal: skip
+            }
+            let j1 = (j0 + block).min(nk);
+            for (ti, i) in (i0..i1).enumerate() {
+                let qi = q.row(i);
+                let jlim = if causal { j1.min(i + 1) } else { j1 };
+                if jlim <= j0 {
+                    continue;
+                }
+                let cnt = jlim - j0;
+                let mut bm = NEG_INF;
+                for (t, j) in (j0..jlim).enumerate() {
+                    let l = dot(qi, k.row(j)) * sc;
+                    logits[t] = l;
+                    bm = bm.max(l);
+                }
+                let m_new = m_out[ti].max(bm);
+                let e_old = (m_out[ti] - m_new).exp();
+                s_out[ti] *= e_old;
+                let nrow = &mut num_out[ti * dv..(ti + 1) * dv];
+                if e_old != 1.0 {
+                    for x in nrow.iter_mut() {
+                        *x *= e_old;
+                    }
+                }
+                for t in 0..cnt {
+                    let p = (logits[t] - m_new).exp();
+                    s_out[ti] += p;
+                    let vr = v.row(j0 + t);
+                    for (o, &vv) in nrow.iter_mut().zip(vr) {
+                        *o += p * vv;
+                    }
+                }
+                m_out[ti] = m_new;
+            }
+        }
+    });
+    parts
+}
+
+/// Gradients of exact attention wrt (q, k, v) given upstream `dout`.
+///
+/// FlashAttention-style backward: recompute probabilities blockwise from
+/// the saved per-row (max, denom) statistics; never materializes the
+/// full n×n matrix.  `delta_i = dout_i · out_i` is the softmax-Jacobian
+/// correction term.
+pub fn flash_backward(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    dout: &Mat,
+    causal: bool,
+    scale: Option<f32>,
+    block: usize,
+) -> (Mat, Mat, Mat) {
+    let (n, d) = (q.rows, q.cols);
+    let nk = k.rows;
+    let sc = softmax_scale(d, scale);
+
+    // Forward statistics (recomputed, streaming).
+    let parts = flash_parts(q, k, v, causal, scale, block);
+    let out = parts.finalize();
+    let delta: Vec<f32> = (0..n).map(|i| dot(dout.row(i), out.row(i))).collect();
+    // log-denominator per row for stable p_ij recomputation
+    let lse: Vec<f32> = (0..n)
+        .map(|i| parts.m[i] + parts.s[i].max(1e-30).ln())
+        .collect();
+
+    // dq: parallel over query rows (each row's gradient is independent).
+    let mut dq = Mat::zeros(n, d);
+    par::par_rows(&mut dq.data, d, |i, dqr| {
+        let qi = q.row(i);
+        let lim = if causal { (i + 1).min(nk) } else { nk };
+        for j in 0..lim {
+            let p = (dot(qi, k.row(j)) * sc - lse[i]).exp();
+            let dl = p * (dot(dout.row(i), v.row(j)) - delta[i]) * sc;
+            for (o, &kv) in dqr.iter_mut().zip(k.row(j)) {
+                *o += dl * kv;
+            }
+        }
+    });
+
+    // dk, dv: parallel over key rows (each key row's grads independent).
+    let mut dk = Mat::zeros(nk, d);
+    let mut dv = Mat::zeros(nk, v.cols);
+    let dk_ptr = dk.data.as_mut_ptr() as usize;
+    let dv_ptr = dv.data.as_mut_ptr() as usize;
+    let dvc = v.cols;
+    par::par_for(nk, |j| {
+        // SAFETY: each iteration writes only key-row j.
+        let dkr = unsafe { std::slice::from_raw_parts_mut((dk_ptr as *mut f32).add(j * d), d) };
+        let dvr =
+            unsafe { std::slice::from_raw_parts_mut((dv_ptr as *mut f32).add(j * dvc), dvc) };
+        let kj = k.row(j);
+        let start = if causal { j } else { 0 };
+        for i in start..n {
+            let p = (dot(q.row(i), kj) * sc - lse[i]).exp();
+            for (o, &dvv) in dvr.iter_mut().zip(dout.row(i)) {
+                *o += p * dvv;
+            }
+            let dl = p * (dot(dout.row(i), v.row(j)) - delta[i]) * sc;
+            for (o, &qv) in dkr.iter_mut().zip(q.row(i)) {
+                *o += dl * qv;
+            }
+        }
+    });
+
+    (dq, dk, dv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_qkv(seed: u64, n: usize, d: usize) -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        (
+            Mat::randn(n, d, &mut rng),
+            Mat::randn(n, d, &mut rng),
+            Mat::randn(n, d, &mut rng),
+        )
+    }
+
+    #[test]
+    fn flash_matches_naive() {
+        let (q, k, v) = rand_qkv(0, 97, 16); // non-divisible n on purpose
+        for causal in [false, true] {
+            let a = naive_attention(&q, &k, &v, causal, None);
+            let b = flash_attention(&q, &k, &v, causal, None, 32);
+            assert!(a.max_abs_diff(&b) < 1e-5, "causal={causal}");
+        }
+    }
+
+    #[test]
+    fn flash_block_size_invariant() {
+        let (q, k, v) = rand_qkv(1, 64, 8);
+        let base = flash_attention(&q, &k, &v, false, None, 64);
+        for b in [1, 7, 16, 33, 128] {
+            let out = flash_attention(&q, &k, &v, false, None, b);
+            assert!(base.max_abs_diff(&out) < 1e-5, "block={b}");
+        }
+    }
+
+    #[test]
+    fn flash_rectangular_kv() {
+        let mut rng = Rng::new(2);
+        let q = Mat::randn(32, 8, &mut rng);
+        let k = Mat::randn(64, 8, &mut rng);
+        let v = Mat::randn(64, 8, &mut rng);
+        let a = naive_attention(&q, &k, &v, false, None);
+        let b = flash_attention(&q, &k, &v, false, None, 16);
+        assert!(a.max_abs_diff(&b) < 1e-5);
+    }
+
+    #[test]
+    fn flash_extreme_logits_stable() {
+        let mut rng = Rng::new(3);
+        let mut q = Mat::randn(32, 8, &mut rng);
+        let mut k = Mat::randn(32, 8, &mut rng);
+        q.scale(30.0);
+        k.scale(30.0);
+        let v = Mat::randn(32, 8, &mut rng);
+        let out = flash_attention(&q, &k, &v, false, None, 8);
+        assert!(out.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn causal_first_row_attends_self_only() {
+        let (q, k, v) = rand_qkv(4, 16, 4);
+        let out = flash_attention(&q, &k, &v, true, None, 4);
+        assert!(
+            out.row(0)
+                .iter()
+                .zip(v.row(0))
+                .all(|(a, b)| (a - b).abs() < 1e-5),
+            "row 0 must equal v[0]"
+        );
+    }
+
+    #[test]
+    fn parts_row_sums_match_exp_space() {
+        let (q, k, v) = rand_qkv(5, 24, 8);
+        let parts = flash_parts(&q, &k, &v, false, None, 8);
+        let sc = softmax_scale(8, None);
+        for i in 0..24 {
+            let exact: f32 = (0..24)
+                .map(|j| (dot(q.row(i), k.row(j)) * sc).exp())
+                .sum();
+            let got = parts.s[i] * parts.m[i].exp();
+            assert!(
+                (got - exact).abs() / exact < 1e-4,
+                "row {i}: {got} vs {exact}"
+            );
+        }
+    }
+
+    /// Central-difference check of the analytic backward.
+    #[test]
+    fn backward_matches_finite_difference() {
+        let (q, k, v) = rand_qkv(6, 12, 4);
+        let mut rng = Rng::new(7);
+        let dout = Mat::randn(12, 4, &mut rng);
+        for causal in [false, true] {
+            let (dq, dk, dv) = flash_backward(&q, &k, &v, &dout, causal, None, 4);
+            let loss = |q: &Mat, k: &Mat, v: &Mat| -> f32 {
+                let out = flash_attention(q, k, v, causal, None, 4);
+                out.data.iter().zip(&dout.data).map(|(a, b)| a * b).sum()
+            };
+            let eps = 3e-3;
+            // spot-check a handful of coordinates in each gradient
+            for &(mat, grad, name) in
+                &[(&q, &dq, "dq"), (&k, &dk, "dk"), (&v, &dv, "dv")]
+            {
+                for &(i, j) in &[(0usize, 0usize), (3, 2), (11, 3), (7, 1)] {
+                    let mut plus = (*mat).clone();
+                    plus.set(i, j, plus.get(i, j) + eps);
+                    let mut minus = (*mat).clone();
+                    minus.set(i, j, minus.get(i, j) - eps);
+                    let (lp, lm) = match name {
+                        "dq" => (loss(&plus, &k, &v), loss(&minus, &k, &v)),
+                        "dk" => (loss(&q, &plus, &v), loss(&q, &minus, &v)),
+                        _ => (loss(&q, &k, &plus), loss(&q, &k, &minus)),
+                    };
+                    let fd = (lp - lm) / (2.0 * eps);
+                    let an = grad.get(i, j);
+                    assert!(
+                        (fd - an).abs() < 2e-2 * (1.0 + fd.abs().max(an.abs())),
+                        "{name}[{i},{j}] causal={causal}: fd {fd} vs analytic {an}"
+                    );
+                }
+            }
+        }
+    }
+}

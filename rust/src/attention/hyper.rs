@@ -1,0 +1,517 @@
+//! Algorithm 3: HyperAttention forward (non-causal), practical variant.
+//!
+//! Mirrors `python/compile/kernels/hyper.py`:
+//!   1. Hamming-sorted LSH on Q and K rows; sort both by bucket.
+//!   2. Exact attention inside equal-sized diagonal blocks of the sorted
+//!      attention matrix (the Algorithm 1 mask M^H) — Θ(n·b·d).
+//!   3. Estimate the unmasked remainder from `samples` shared key/value
+//!      rows (uniform, or Lemma 2 row-norm sampling), dropping samples
+//!      that land in the query's own block — Θ(n·m·d).
+//!   4. Merge the streaming triples; normalize.
+//!
+//! Total Θ(n·(b + m)·d) — the near-linear path of the paper.
+
+use super::{softmax_scale, Parts, NEG_INF};
+use crate::linalg::{dot, invert_permutation, Mat};
+use crate::lsh::Lsh;
+use crate::par;
+use crate::rng::Rng;
+
+/// Sampling distribution for the residual estimator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SampleMode {
+    /// Shared uniform column samples (the paper's practical choice).
+    Uniform,
+    /// Lemma 2: sample by squared row norms of V (Horvitz–Thompson).
+    VNorm,
+}
+
+/// HyperAttention hyper-parameters (paper defaults: block = samples = 256).
+#[derive(Clone, Copy, Debug)]
+pub struct HyperParams {
+    pub block: usize,
+    pub samples: usize,
+    pub lsh_bits: usize,
+    pub mode: SampleMode,
+    pub scale: Option<f32>,
+}
+
+impl Default for HyperParams {
+    fn default() -> Self {
+        HyperParams {
+            block: 256,
+            samples: 256,
+            lsh_bits: 8,
+            mode: SampleMode::Uniform,
+            scale: None,
+        }
+    }
+}
+
+/// Internal: everything the forward pass derives from randomness, kept so
+/// the backward pass can replay the identical estimator.
+pub struct HyperPlan {
+    pub perm_q: Vec<usize>,
+    pub perm_k: Vec<usize>,
+    pub pos_q: Vec<usize>,
+    pub pos_k: Vec<usize>,
+    pub sample_idx: Vec<usize>,
+    /// per-sample base weight (1 for uniform — the per-row rescale is
+    /// applied on the fly; Horvitz–Thompson factor for VNorm)
+    pub sample_w: Vec<f32>,
+    pub block: usize,
+}
+
+impl HyperPlan {
+    /// Draw LSH permutations and column samples.
+    pub fn build(q: &Mat, k: &Mat, v: &Mat, p: &HyperParams, rng: &mut Rng) -> Self {
+        let n = q.rows;
+        assert_eq!(k.rows, n, "hyper attention requires len(q) == len(k)");
+        let block = p.block.min(n);
+        assert_eq!(n % block, 0, "n={n} not divisible by block={block}");
+        let lsh = Lsh::new(q.cols, p.lsh_bits, rng);
+        let perm_q = lsh.sort_permutation(q);
+        let perm_k = lsh.sort_permutation(k);
+        let pos_q = invert_permutation(&perm_q);
+        let pos_k = invert_permutation(&perm_k);
+        let m = p.samples.min(n);
+        let (sample_idx, sample_w) = match p.mode {
+            SampleMode::Uniform => (rng.sample_uniform(n, m), vec![1.0; m]),
+            SampleMode::VNorm => {
+                let w = v.row_sq_norms();
+                let tot: f32 = w.iter().sum();
+                let idx = rng.sample_weighted(&w, m);
+                let wts = idx
+                    .iter()
+                    .map(|&j| tot / (m as f32 * w[j].max(1e-30)))
+                    .collect();
+                (idx, wts)
+            }
+        };
+        HyperPlan { perm_q, perm_k, pos_q, pos_k, sample_idx, sample_w, block }
+    }
+}
+
+/// HyperAttention triple (original row order).
+pub fn hyper_parts(q: &Mat, k: &Mat, v: &Mat, p: &HyperParams, rng: &mut Rng) -> Parts {
+    let plan = HyperPlan::build(q, k, v, p, rng);
+    hyper_parts_with_plan(q, k, v, p, &plan)
+}
+
+/// Deterministic forward given a pre-built plan (shared with backward).
+pub fn hyper_parts_with_plan(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    p: &HyperParams,
+    plan: &HyperPlan,
+) -> Parts {
+    let n = q.rows;
+    let dv = v.cols;
+    let sc = softmax_scale(q.cols, p.scale);
+    let block = plan.block;
+    let nb = n / block;
+
+    // ---- (2) exact block-diagonal part, computed in sorted order -------
+    let qs = q.gather_rows(&plan.perm_q);
+    let ks = k.gather_rows(&plan.perm_k);
+    let vs = v.gather_rows(&plan.perm_k);
+
+    let mut blk = Parts::empty(n, dv);
+    let m_ptr = blk.m.as_mut_ptr() as usize;
+    let s_ptr = blk.s.as_mut_ptr() as usize;
+    let n_ptr = blk.num.data.as_mut_ptr() as usize;
+    par::par_for(nb, |g| {
+        let lo = g * block;
+        // SAFETY: disjoint row ranges per block.
+        let ms =
+            unsafe { std::slice::from_raw_parts_mut((m_ptr as *mut f32).add(lo), block) };
+        let ss =
+            unsafe { std::slice::from_raw_parts_mut((s_ptr as *mut f32).add(lo), block) };
+        let ns = unsafe {
+            std::slice::from_raw_parts_mut((n_ptr as *mut f32).add(lo * dv), block * dv)
+        };
+        let mut logits = vec![0.0f32; block];
+        for ti in 0..block {
+            let qi = qs.row(lo + ti);
+            let mut mx = NEG_INF;
+            for tj in 0..block {
+                let l = dot(qi, ks.row(lo + tj)) * sc;
+                logits[tj] = l;
+                mx = mx.max(l);
+            }
+            let mut s = 0.0;
+            let nrow = &mut ns[ti * dv..(ti + 1) * dv];
+            for tj in 0..block {
+                let pij = (logits[tj] - mx).exp();
+                s += pij;
+                for (o, &vv) in nrow.iter_mut().zip(vs.row(lo + tj)) {
+                    *o += pij * vv;
+                }
+            }
+            ms[ti] = mx;
+            ss[ti] = s;
+        }
+    });
+    // back to original row order: original row i lives at sorted pos_q[i]
+    let mut parts = blk.gather_rows(&plan.pos_q);
+
+    // ---- (3) sampled residual over the unmasked columns ----------------
+    let m = plan.sample_idx.len();
+    if m > 0 {
+        let ksamp = k.gather_rows(&plan.sample_idx);
+        let vsamp = v.gather_rows(&plan.sample_idx);
+        let samp_block: Vec<usize> =
+            plan.sample_idx.iter().map(|&j| plan.pos_k[j] / block).collect();
+
+        let mut res = Parts::empty(n, dv);
+        let rm = res.m.as_mut_ptr() as usize;
+        let rs = res.s.as_mut_ptr() as usize;
+        let rn = res.num.data.as_mut_ptr() as usize;
+        par::par_for(n, |i| {
+            // SAFETY: one row per iteration.
+            let mi = unsafe { &mut *(rm as *mut f32).add(i) };
+            let si = unsafe { &mut *(rs as *mut f32).add(i) };
+            let ni =
+                unsafe { std::slice::from_raw_parts_mut((rn as *mut f32).add(i * dv), dv) };
+            let gq = plan.pos_q[i] / block;
+            let qi = q.row(i);
+            let mut logits = vec![NEG_INF; m];
+            let mut mx = NEG_INF;
+            let mut kept = 0usize;
+            for j in 0..m {
+                if samp_block[j] != gq {
+                    let l = dot(qi, ksamp.row(j)) * sc;
+                    logits[j] = l;
+                    mx = mx.max(l);
+                    kept += 1;
+                }
+            }
+            if kept == 0 {
+                *mi = NEG_INF;
+                *si = 0.0;
+                return;
+            }
+            // uniform: ratio estimator scaling to the (n - block) unmasked
+            // columns; vnorm: Horvitz–Thompson base weights.
+            let uniform_scale = (n - block) as f32 / kept as f32;
+            let mut s = 0.0;
+            for j in 0..m {
+                if logits[j] == NEG_INF {
+                    continue;
+                }
+                let w = match /* mode */ plan.sample_w[j] {
+                    w if w == 1.0 => uniform_scale,
+                    w => w,
+                };
+                let pij = w * (logits[j] - mx).exp();
+                s += pij;
+                for (o, &vv) in ni.iter_mut().zip(vsamp.row(j)) {
+                    *o += pij * vv;
+                }
+            }
+            *mi = mx;
+            *si = s;
+        });
+        parts.merge(&res);
+    }
+    parts
+}
+
+/// HyperAttention output (n × d), Algorithm 3 normalized.
+pub fn hyper_attention(q: &Mat, k: &Mat, v: &Mat, p: &HyperParams, rng: &mut Rng) -> Mat {
+    hyper_parts(q, k, v, p, rng).finalize()
+}
+
+/// Backward through the HyperAttention estimator (sampling held fixed).
+///
+/// The output is `O_i = Σ_j w_ij e^{l_ij} v_j / Σ_j w_ij e^{l_ij}` over the
+/// union of block-diagonal keys (w = 1) and sampled keys (w = residual
+/// weight), so `∂L/∂l_ij = p̃_ij · (dout_i · (v_j − O_i))` with p̃ the
+/// normalized weights — same structure as exact attention restricted to
+/// the touched entries.  Cost matches the forward: Θ(n(b+m)d).
+pub fn hyper_backward(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    dout: &Mat,
+    p: &HyperParams,
+    plan: &HyperPlan,
+) -> (Mat, Mat, Mat) {
+    let n = q.rows;
+    let d = q.cols;
+    let dv = v.cols;
+    let sc = softmax_scale(d, p.scale);
+    let block = plan.block;
+
+    let parts = hyper_parts_with_plan(q, k, v, p, plan);
+    let out = parts.finalize();
+    let lse: Vec<f32> = (0..n)
+        .map(|i| parts.m[i] + parts.s[i].max(1e-30).ln())
+        .collect();
+    let delta: Vec<f32> = (0..n).map(|i| dot(dout.row(i), out.row(i))).collect();
+
+    let mut dq = Mat::zeros(n, d);
+    let mut dk = Mat::zeros(n, d);
+    let mut dvm = Mat::zeros(n, dv);
+
+    let m = plan.sample_idx.len();
+    let samp_block: Vec<usize> =
+        plan.sample_idx.iter().map(|&j| plan.pos_k[j] / block).collect();
+    // kept-count per query block (for the uniform rescale), precomputed
+    let nb = n / block;
+    let kept_per_block: Vec<usize> = (0..nb)
+        .map(|g| samp_block.iter().filter(|&&b| b != g).count())
+        .collect();
+
+    // dq is row-parallel; dk/dv accumulate per key, so serialize those
+    // (hyper backward is cheap enough; coordinator batches across heads).
+    // key lists per sorted block, in original indices
+    let mut block_keys: Vec<Vec<usize>> = vec![Vec::with_capacity(block); nb];
+    for j in 0..n {
+        block_keys[plan.pos_k[j] / block].push(j);
+    }
+
+    par::par_rows(&mut dq.data, d, |i, dqr| {
+        let qi = q.row(i);
+        let gq = plan.pos_q[i] / block;
+        // block-diagonal keys (weight 1)
+        for &j in &block_keys[gq] {
+            let p_ij = (dot(qi, k.row(j)) * sc - lse[i]).exp();
+            let dl = p_ij * (dot(dout.row(i), v.row(j)) - delta[i]) * sc;
+            for (o, &kv) in dqr.iter_mut().zip(k.row(j)) {
+                *o += dl * kv;
+            }
+        }
+        // sampled keys
+        if m > 0 {
+            let uniform_scale = (n - block) as f32 / kept_per_block[gq].max(1) as f32;
+            for t in 0..m {
+                if samp_block[t] == gq {
+                    continue;
+                }
+                let j = plan.sample_idx[t];
+                let w = if plan.sample_w[t] == 1.0 { uniform_scale } else { plan.sample_w[t] };
+                let p_ij = w * (dot(qi, k.row(j)) * sc - lse[i]).exp();
+                let dl = p_ij * (dot(dout.row(i), v.row(j)) - delta[i]) * sc;
+                for (o, &kv) in dqr.iter_mut().zip(k.row(j)) {
+                    *o += dl * kv;
+                }
+            }
+        }
+    });
+
+    // dk/dv: sequential accumulation over the same sparse support.
+    for g in 0..nb {
+        let keys = &block_keys[g];
+        for i in 0..n {
+            if plan.pos_q[i] / block != g {
+                continue;
+            }
+            let qi = q.row(i);
+            for &j in keys {
+                let p_ij = (dot(qi, k.row(j)) * sc - lse[i]).exp();
+                let dl = p_ij * (dot(dout.row(i), v.row(j)) - delta[i]) * sc;
+                for (o, &qv) in dk.row_mut(j).iter_mut().zip(qi) {
+                    *o += dl * qv;
+                }
+                for (o, &dov) in dvm.row_mut(j).iter_mut().zip(dout.row(i)) {
+                    *o += p_ij * dov;
+                }
+            }
+        }
+    }
+    for t in 0..m {
+        let j = plan.sample_idx[t];
+        for i in 0..n {
+            let gq = plan.pos_q[i] / block;
+            if samp_block[t] == gq {
+                continue;
+            }
+            let w = if plan.sample_w[t] == 1.0 {
+                (n - block) as f32 / kept_per_block[gq].max(1) as f32
+            } else {
+                plan.sample_w[t]
+            };
+            let p_ij = w * (dot(q.row(i), k.row(j)) * sc - lse[i]).exp();
+            let dl = p_ij * (dot(dout.row(i), v.row(j)) - delta[i]) * sc;
+            for (o, &qv) in dk.row_mut(j).iter_mut().zip(q.row(i)) {
+                *o += dl * qv;
+            }
+            for (o, &dov) in dvm.row_mut(j).iter_mut().zip(dout.row(i)) {
+                *o += p_ij * dov;
+            }
+        }
+    }
+
+    (dq, dk, dvm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::exact;
+    use crate::attention::measure;
+
+    fn clustered(seed: u64, n: usize, d: usize, clusters: usize, spread: f32) -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let centers = Mat::randn(clusters, d, &mut rng);
+        let mut q = Mat::zeros(n, d);
+        let mut k = Mat::zeros(n, d);
+        for i in 0..n {
+            let c = centers.row(i % clusters);
+            for j in 0..d {
+                q.set(i, j, 2.0 * c[j] + spread * rng.normal());
+                k.set(i, j, 2.0 * c[j] + spread * rng.normal());
+            }
+        }
+        let v = Mat::randn(n, d, &mut rng);
+        (q, k, v)
+    }
+
+    #[test]
+    fn output_shape_and_finite() {
+        let (q, k, v) = clustered(0, 128, 16, 4, 0.3);
+        let p = HyperParams { block: 32, samples: 32, ..Default::default() };
+        let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(1));
+        assert_eq!((out.rows, out.cols), (128, 16));
+        assert!(out.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn rows_in_value_hull() {
+        // every output row is a convex combination of V rows
+        let (q, k, v) = clustered(1, 64, 8, 4, 0.3);
+        let p = HyperParams { block: 16, samples: 32, ..Default::default() };
+        let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(2));
+        for j in 0..8 {
+            let (mut lo, mut hi) = (f32::MAX, f32::MIN);
+            for i in 0..64 {
+                lo = lo.min(v.get(i, j));
+                hi = hi.max(v.get(i, j));
+            }
+            for i in 0..64 {
+                assert!(out.get(i, j) >= lo - 1e-4 && out.get(i, j) <= hi + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn spectral_error_decreases_with_samples() {
+        let (q, k, v) = clustered(2, 256, 32, 8, 0.25);
+        let mut errs = Vec::new();
+        for &m in &[16usize, 64, 256] {
+            let mut es = 0.0;
+            for s in 0..3u64 {
+                let p = HyperParams { block: 32, samples: m, ..Default::default() };
+                let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(100 + s));
+                es += measure::spectral_error(&out, &q, &k, &v, false, None);
+            }
+            errs.push(es / 3.0);
+        }
+        assert!(
+            errs[2] < errs[0],
+            "spectral errors not decreasing: {errs:?}"
+        );
+    }
+
+    #[test]
+    fn full_block_equals_exact() {
+        // block == n: the "block diagonal" is the whole matrix and the
+        // residual is empty => exact attention.
+        let (q, k, v) = clustered(3, 64, 8, 4, 0.3);
+        let p = HyperParams { block: 64, samples: 0, ..Default::default() };
+        let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(5));
+        let exact = exact::naive_attention(&q, &k, &v, false, None);
+        assert!(out.max_abs_diff(&exact) < 1e-4);
+    }
+
+    #[test]
+    fn vnorm_mode_runs_and_weights_sane() {
+        let (q, k, v) = clustered(4, 128, 16, 4, 0.3);
+        let p = HyperParams {
+            block: 32,
+            samples: 64,
+            mode: SampleMode::VNorm,
+            ..Default::default()
+        };
+        let plan = HyperPlan::build(&q, &k, &v, &p, &mut Rng::new(6));
+        assert!(plan.sample_w.iter().all(|&w| w > 0.0 && w.is_finite()));
+        let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(6));
+        assert!(out.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (q, k, v) = clustered(5, 64, 8, 4, 0.3);
+        let p = HyperParams { block: 16, samples: 32, ..Default::default() };
+        let a = hyper_attention(&q, &k, &v, &p, &mut Rng::new(9));
+        let b = hyper_attention(&q, &k, &v, &p, &mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn matches_python_structure_block_only_unsorted() {
+        // With an identity-friendly setup (block = n), parts equal naive
+        // parts exactly — checks the gather/scatter bookkeeping.
+        let (q, k, v) = clustered(6, 32, 8, 2, 0.2);
+        let p = HyperParams { block: 32, samples: 0, ..Default::default() };
+        let parts = hyper_parts(&q, &k, &v, &p, &mut Rng::new(11));
+        let naive = exact::naive_parts(&q, &k, &v, false, None);
+        let rs_a = parts.row_sums();
+        let rs_b = naive.row_sums();
+        for i in 0..32 {
+            assert!((rs_a[i] - rs_b[i]).abs() / rs_b[i] < 1e-4);
+        }
+    }
+
+    #[test]
+    fn backward_finite_difference() {
+        let (q, k, v) = clustered(7, 32, 4, 2, 0.3);
+        let p = HyperParams { block: 8, samples: 16, ..Default::default() };
+        let plan = HyperPlan::build(&q, &k, &v, &p, &mut Rng::new(13));
+        let mut rng = Rng::new(14);
+        let dout = Mat::randn(32, 4, &mut rng);
+        let (dq, dk, dv) = hyper_backward(&q, &k, &v, &dout, &p, &plan);
+        let loss = |q: &Mat, k: &Mat, v: &Mat| -> f32 {
+            let out = hyper_parts_with_plan(q, k, v, &p, &plan).finalize();
+            out.data.iter().zip(&dout.data).map(|(a, b)| a * b).sum()
+        };
+        let eps = 3e-3;
+        for &(i, j) in &[(0usize, 0usize), (5, 2), (31, 3)] {
+            // dq check
+            let mut plus = q.clone();
+            plus.set(i, j, plus.get(i, j) + eps);
+            let mut minus = q.clone();
+            minus.set(i, j, minus.get(i, j) - eps);
+            let fd = (loss(&plus, &k, &v) - loss(&minus, &k, &v)) / (2.0 * eps);
+            let an = dq.get(i, j);
+            assert!(
+                (fd - an).abs() < 3e-2 * (1.0 + fd.abs().max(an.abs())),
+                "dq[{i},{j}]: fd {fd} vs {an}"
+            );
+            // dv check
+            let mut plus = v.clone();
+            plus.set(i, j, plus.get(i, j) + eps);
+            let mut minus = v.clone();
+            minus.set(i, j, minus.get(i, j) - eps);
+            let fd = (loss(&q, &k, &plus) - loss(&q, &k, &minus)) / (2.0 * eps);
+            let an = dv.get(i, j);
+            assert!(
+                (fd - an).abs() < 3e-2 * (1.0 + fd.abs().max(an.abs())),
+                "dv[{i},{j}]: fd {fd} vs {an}"
+            );
+            // dk check
+            let mut plus = k.clone();
+            plus.set(i, j, plus.get(i, j) + eps);
+            let mut minus = k.clone();
+            minus.set(i, j, minus.get(i, j) - eps);
+            let fd = (loss(&q, &plus, &v) - loss(&q, &minus, &v)) / (2.0 * eps);
+            let an = dk.get(i, j);
+            assert!(
+                (fd - an).abs() < 3e-2 * (1.0 + fd.abs().max(an.abs())),
+                "dk[{i},{j}]: fd {fd} vs {an}"
+            );
+        }
+    }
+}

@@ -1,0 +1,244 @@
+//! The paper's fine-grained hardness parameters and error functionals.
+//!
+//! * `alpha` — n · maxᵢ ‖D⁻¹A e⁽ⁱ⁾‖₂² (Theorem 1 precondition; Fig 5 /
+//!   §4.3 measure this empirically).
+//! * `kappa` — max/min unmasked row-sum ratio after mask removal
+//!   (Lemma 1's condition number).
+//! * `spectral_error` — the relative operator-norm error of Eq. (1).
+//! * `stable_rank` — ‖M‖_F²/‖M‖², bounding the Lemma 2 sample count.
+//!
+//! Exact versions are Θ(n²d) and intended for figures/tests; sampled
+//! column variants cover large n.
+
+use super::softmax_scale;
+use crate::linalg::{dot, op_norm, Mat};
+use crate::lsh::BlockMask;
+use crate::par;
+use crate::rng::Rng;
+
+/// Dense softmax matrix D⁻¹A (test/figure scale).
+pub fn softmax_matrix(q: &Mat, k: &Mat, causal: bool, scale: Option<f32>) -> Mat {
+    let sc = softmax_scale(q.cols, scale);
+    let n = q.rows;
+    let nk = k.rows;
+    let mut p = Mat::zeros(n, nk);
+    par::par_rows(&mut p.data, nk, |i, row| {
+        let lim = if causal { (i + 1).min(nk) } else { nk };
+        let mut mx = f32::NEG_INFINITY;
+        for (j, r) in row.iter_mut().enumerate().take(lim) {
+            *r = dot(q.row(i), k.row(j)) * sc;
+            mx = mx.max(*r);
+        }
+        let mut s = 0.0;
+        for r in row.iter_mut().take(lim) {
+            *r = (*r - mx).exp();
+            s += *r;
+        }
+        let inv = 1.0 / s.max(1e-30);
+        for r in row.iter_mut().take(lim) {
+            *r *= inv;
+        }
+        for r in row.iter_mut().skip(lim) {
+            *r = 0.0;
+        }
+    });
+    p
+}
+
+/// α = n · maxᵢ ‖D⁻¹A e⁽ⁱ⁾‖₂², optionally excluding the first
+/// `exclude_cols` columns (the paper drops 32 attention-sink columns for
+/// LM inputs in §4.3).
+pub fn alpha(q: &Mat, k: &Mat, causal: bool, scale: Option<f32>, exclude_cols: usize) -> f32 {
+    let p = softmax_matrix(q, k, causal, scale);
+    let nk = k.rows;
+    let mut col_sq = vec![0.0f32; nk];
+    for i in 0..p.rows {
+        for (j, &x) in p.row(i).iter().enumerate() {
+            col_sq[j] += x * x;
+        }
+    }
+    let max = col_sq[exclude_cols..]
+        .iter()
+        .cloned()
+        .fold(0.0f32, f32::max);
+    q.rows as f32 * max
+}
+
+/// Column-sampled α estimator for large n: evaluates `cols` random
+/// columns exactly (each costs O(n·d)), returning n · max over sampled
+/// squared column norms — a lower bound converging to α.
+pub fn alpha_sampled(
+    q: &Mat,
+    k: &Mat,
+    scale: Option<f32>,
+    cols: usize,
+    rng: &mut Rng,
+) -> f32 {
+    let sc = softmax_scale(q.cols, scale);
+    let n = q.rows;
+    // row log-sum-exp denominators, streaming
+    let lse: Vec<f32> = par::par_map(n, |i| {
+        let mut mx = f32::NEG_INFINITY;
+        let logits: Vec<f32> = (0..k.rows)
+            .map(|j| {
+                let l = dot(q.row(i), k.row(j)) * sc;
+                mx = mx.max(l);
+                l
+            })
+            .collect();
+        mx + logits.iter().map(|&l| (l - mx).exp()).sum::<f32>().ln()
+    });
+    let samples = rng.sample_distinct(k.rows, cols.min(k.rows));
+    let max_sq = par::par_max(samples.len(), |t| {
+        let j = samples[t];
+        (0..n)
+            .map(|i| {
+                let p = (dot(q.row(i), k.row(j)) * sc - lse[i]).exp();
+                p * p
+            })
+            .sum::<f32>()
+    });
+    n as f32 * max_sq
+}
+
+/// κ for a factored block mask: max/min unmasked row sums of A.
+pub fn kappa(q: &Mat, k: &Mat, mask: &BlockMask, scale: Option<f32>) -> f32 {
+    let sc = softmax_scale(q.cols, scale);
+    let sums: Vec<f32> = par::par_map(q.rows, |i| {
+        let g = mask.pos_q[i] / mask.block;
+        (0..k.rows)
+            .filter(|&j| mask.pos_k[j] / mask.block != g)
+            .map(|j| (dot(q.row(i), k.row(j)) * sc).exp())
+            .sum()
+    });
+    let mx = sums.iter().cloned().fold(f32::MIN, f32::max);
+    let mn = sums.iter().cloned().fold(f32::MAX, f32::min);
+    mx / mn.max(1e-30)
+}
+
+/// Relative operator-norm error of Eq. (1):
+/// ‖out − Att‖ / (‖D⁻¹A‖·‖V‖), all norms spectral (power iteration).
+pub fn spectral_error(
+    out: &Mat,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    causal: bool,
+    scale: Option<f32>,
+) -> f32 {
+    let p = softmax_matrix(q, k, causal, scale);
+    let exact = crate::linalg::matmul(&p, v);
+    let mut diff = out.clone();
+    for (d, &e) in diff.data.iter_mut().zip(&exact.data) {
+        *d -= e;
+    }
+    let mut rng = Rng::new(0xA11A);
+    let err = op_norm(&diff, 30, &mut rng);
+    let denom = op_norm(&p, 30, &mut rng) * op_norm(v, 30, &mut rng);
+    err / denom.max(1e-30)
+}
+
+/// Stable rank ‖M‖_F² / ‖M‖²₂.
+pub fn stable_rank(m: &Mat) -> f32 {
+    let f2 = m.fro_norm().powi(2);
+    let s = op_norm(m, 40, &mut Rng::new(0x5AB1E));
+    f2 / (s * s).max(1e-30)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_matrix_row_stochastic() {
+        let mut rng = Rng::new(0);
+        let q = Mat::randn(32, 8, &mut rng);
+        let k = Mat::randn(32, 8, &mut rng);
+        for causal in [false, true] {
+            let p = softmax_matrix(&q, &k, causal, None);
+            for i in 0..32 {
+                let s: f32 = p.row(i).iter().sum();
+                assert!((s - 1.0).abs() < 1e-5, "row {i} causal={causal}");
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_uniform_is_one() {
+        // identical rows => perfectly uniform softmax => alpha = 1
+        let q = Mat::zeros(64, 8);
+        let k = Mat::zeros(64, 8);
+        let a = alpha(&q, &k, false, None, 0);
+        assert!((a - 1.0).abs() < 1e-3, "alpha {a}");
+    }
+
+    #[test]
+    fn alpha_concentrated_is_n() {
+        // all queries attend to key 0 => column 0 norm² = n => alpha ≈ n²/n = n
+        let n = 32;
+        let mut q = Mat::zeros(n, 4);
+        let mut k = Mat::zeros(n, 4);
+        for j in 0..4 {
+            k.set(0, j, 10.0);
+        }
+        for i in 0..n {
+            for j in 0..4 {
+                q.set(i, j, 10.0);
+            }
+        }
+        let a = alpha(&q, &k, false, None, 0);
+        assert!(a > 0.9 * n as f32, "alpha {a}");
+    }
+
+    #[test]
+    fn alpha_sampled_lower_bounds_exact() {
+        let mut rng = Rng::new(1);
+        let q = Mat::randn(64, 8, &mut rng);
+        let k = Mat::randn(64, 8, &mut rng);
+        let exact = alpha(&q, &k, false, None, 0);
+        let sampled = alpha_sampled(&q, &k, None, 64, &mut rng);
+        assert!((sampled - exact).abs() / exact < 1e-3, "{sampled} vs {exact}");
+        let partial = alpha_sampled(&q, &k, None, 8, &mut Rng::new(2));
+        assert!(partial <= exact * (1.0 + 1e-4));
+    }
+
+    #[test]
+    fn spectral_error_zero_for_exact() {
+        let mut rng = Rng::new(3);
+        let q = Mat::randn(32, 8, &mut rng);
+        let k = Mat::randn(32, 8, &mut rng);
+        let v = Mat::randn(32, 8, &mut rng);
+        let exact = crate::attention::exact::naive_attention(&q, &k, &v, false, None);
+        let e = spectral_error(&exact, &q, &k, &v, false, None);
+        assert!(e < 1e-4, "err {e}");
+    }
+
+    #[test]
+    fn stable_rank_bounds() {
+        let mut rng = Rng::new(4);
+        // rank-1 matrix: stable rank ~ 1
+        let u = Mat::randn(16, 1, &mut rng);
+        let vt = Mat::randn(1, 16, &mut rng);
+        let r1 = crate::linalg::matmul(&u, &vt);
+        let sr = stable_rank(&r1);
+        assert!(sr < 1.2, "rank-1 stable rank {sr}");
+        // identity: stable rank = n
+        let mut eye = Mat::zeros(16, 16);
+        for i in 0..16 {
+            eye.set(i, i, 1.0);
+        }
+        let sre = stable_rank(&eye);
+        assert!((sre - 16.0).abs() < 1.0, "identity stable rank {sre}");
+    }
+
+    #[test]
+    fn kappa_at_least_one() {
+        let mut rng = Rng::new(5);
+        let q = Mat::randn(64, 8, &mut rng);
+        let k = Mat::randn(64, 8, &mut rng);
+        let lsh = crate::lsh::Lsh::new(8, 6, &mut rng);
+        let mask = BlockMask::from_lsh(&lsh, &q, &k, 16);
+        let kp = kappa(&q, &k, &mask, None);
+        assert!(kp >= 1.0 && kp.is_finite(), "kappa {kp}");
+    }
+}

@@ -1,0 +1,206 @@
+//! The HyperAttention algorithm substrate (pure Rust, any shape).
+//!
+//! Everything is expressed in the *streaming-softmax triple* ([`Parts`])
+//! representation shared with the Python oracles: per query row,
+//! `(m, s, N)` with `s = Σ_j w_j exp(l_ij − m_i)` and
+//! `N = Σ_j w_j exp(l_ij − m_i) · V_j`, so partial results over disjoint
+//! key subsets merge exactly and `output = N / s`.
+//!
+//! Modules:
+//! * [`exact`] — naive reference + FlashAttention-style streaming exact
+//!   attention (the paper's baseline), forward and backward.
+//! * [`approx_d`] — Algorithm 2 (ApproxD), the Lemma 1 estimator.
+//! * [`amm`] — Lemma 2 row-norm sampling (approximate matrix product).
+//! * [`hyper`] — Algorithm 3, the merged non-causal forward/backward.
+//! * [`causal`] — Algorithm 4, the recursive causal decomposition.
+//! * [`measure`] — the paper's fine-grained parameters (α, κ), spectral
+//!   error of Eq. (1), stable rank.
+
+pub mod amm;
+pub mod approx_d;
+pub mod causal;
+pub mod exact;
+pub mod hyper;
+pub mod measure;
+
+use crate::linalg::Mat;
+
+pub const NEG_INF: f32 = -1e30;
+
+/// Default logit scale 1/sqrt(d) (overridable everywhere via `scale`).
+#[inline]
+pub fn softmax_scale(d: usize, scale: Option<f32>) -> f32 {
+    scale.unwrap_or(1.0 / (d as f32).sqrt())
+}
+
+/// Streaming-softmax partial result over a subset of keys.
+#[derive(Clone, Debug)]
+pub struct Parts {
+    /// per-row running max logit
+    pub m: Vec<f32>,
+    /// per-row weighted sum of exp(l − m)
+    pub s: Vec<f32>,
+    /// per-row weighted sum of exp(l − m) · v  (rows × d)
+    pub num: Mat,
+}
+
+impl Parts {
+    pub fn empty(rows: usize, d: usize) -> Self {
+        Parts {
+            m: vec![NEG_INF; rows],
+            s: vec![0.0; rows],
+            num: Mat::zeros(rows, d),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.m.len()
+    }
+
+    /// Merge another part over a DISJOINT key subset into self (exact).
+    pub fn merge(&mut self, other: &Parts) {
+        assert_eq!(self.rows(), other.rows());
+        assert_eq!(self.num.cols, other.num.cols);
+        let d = self.num.cols;
+        for i in 0..self.rows() {
+            let m = self.m[i].max(other.m[i]);
+            let e1 = (self.m[i] - m).exp();
+            let e2 = (other.m[i] - m).exp();
+            self.s[i] = self.s[i] * e1 + other.s[i] * e2;
+            let (a, b) = (self.num.row_mut(i), other.num.row(i));
+            for j in 0..d {
+                a[j] = a[j] * e1 + b[j] * e2;
+            }
+            self.m[i] = m;
+        }
+    }
+
+    /// Stack two parts over DISJOINT query rows (self on top).
+    pub fn concat(mut self, other: Parts) -> Parts {
+        assert_eq!(self.num.cols, other.num.cols);
+        self.m.extend_from_slice(&other.m);
+        self.s.extend_from_slice(&other.s);
+        self.num.data.extend_from_slice(&other.num.data);
+        self.num.rows += other.num.rows;
+        self
+    }
+
+    /// Reorder rows: `out.row(i) = self.row(idx[i])`.
+    pub fn gather_rows(&self, idx: &[usize]) -> Parts {
+        Parts {
+            m: idx.iter().map(|&i| self.m[i]).collect(),
+            s: idx.iter().map(|&i| self.s[i]).collect(),
+            num: self.num.gather_rows(idx),
+        }
+    }
+
+    /// Normalize to the attention output N / s.
+    pub fn finalize(&self) -> Mat {
+        let mut out = self.num.clone();
+        for i in 0..self.rows() {
+            let inv = 1.0 / self.s[i].max(1e-30);
+            for x in out.row_mut(i) {
+                *x *= inv;
+            }
+        }
+        out
+    }
+
+    /// Estimated row sums of the unnormalized A over this part's keys,
+    /// in exp space: s · exp(m).  (The D̃ diagonal of the paper.)
+    pub fn row_sums(&self) -> Vec<f32> {
+        self.m
+            .iter()
+            .zip(&self.s)
+            .map(|(&m, &s)| s * m.exp())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_parts(rows: usize, d: usize, seed: u64) -> Parts {
+        let mut rng = Rng::new(seed);
+        Parts {
+            m: rng.normal_vec(rows),
+            s: rng.normal_vec(rows).iter().map(|x| x.abs() + 0.1).collect(),
+            num: Mat::randn(rows, d, &mut rng),
+        }
+    }
+
+    #[test]
+    fn merge_commutative() {
+        let a = rand_parts(8, 4, 0);
+        let b = rand_parts(8, 4, 1);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert!(ab.finalize().max_abs_diff(&ba.finalize()) < 1e-5);
+    }
+
+    #[test]
+    fn merge_associative() {
+        let a = rand_parts(8, 4, 2);
+        let b = rand_parts(8, 4, 3);
+        let c = rand_parts(8, 4, 4);
+        let mut l = a.clone();
+        l.merge(&b);
+        l.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut r = a.clone();
+        r.merge(&bc);
+        assert!(l.finalize().max_abs_diff(&r.finalize()) < 1e-5);
+    }
+
+    #[test]
+    fn merge_with_empty_identity() {
+        let a = rand_parts(8, 4, 5);
+        let mut ae = a.clone();
+        ae.merge(&Parts::empty(8, 4));
+        assert!(ae.finalize().max_abs_diff(&a.finalize()) < 1e-6);
+    }
+
+    #[test]
+    fn finalize_zero_safe() {
+        let p = Parts::empty(4, 4);
+        let out = p.finalize();
+        assert!(out.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn concat_preserves_rows() {
+        let a = rand_parts(3, 4, 6);
+        let b = rand_parts(5, 4, 7);
+        let am = a.m.clone();
+        let bm = b.m.clone();
+        let c = a.concat(b);
+        assert_eq!(c.rows(), 8);
+        assert_eq!(&c.m[..3], &am[..]);
+        assert_eq!(&c.m[3..], &bm[..]);
+    }
+
+    #[test]
+    fn gather_rows_permutes() {
+        let a = rand_parts(4, 2, 8);
+        let g = a.gather_rows(&[3, 2, 1, 0]);
+        assert_eq!(g.m[0], a.m[3]);
+        assert_eq!(g.num.row(1), a.num.row(2));
+    }
+
+    #[test]
+    fn row_sums_exp_space() {
+        let p = Parts {
+            m: vec![0.0, (2.0f32).ln()],
+            s: vec![3.0, 5.0],
+            num: Mat::zeros(2, 1),
+        };
+        let rs = p.row_sums();
+        assert!((rs[0] - 3.0).abs() < 1e-6);
+        assert!((rs[1] - 10.0).abs() < 1e-5);
+    }
+}

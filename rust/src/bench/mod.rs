@@ -1,0 +1,413 @@
+//! Benchmark harness: workload generators, sweep runners, and the
+//! table/figure printers shared by the criterion benches, the CLI, and
+//! the examples.  Each paper table/figure has a `run_*` entry point that
+//! prints the same rows/series the paper reports (DESIGN.md section 4).
+
+use std::time::Instant;
+
+use crate::attention::causal::{causal_hyper_attention, causal_hyper_fwd_bwd, CausalParams};
+use crate::attention::exact;
+use crate::attention::hyper::{hyper_attention, hyper_backward, HyperParams, HyperPlan};
+use crate::attention::measure;
+use crate::linalg::Mat;
+use crate::model::corpus::{Corpus, CorpusConfig};
+use crate::model::train::train;
+use crate::model::{perplexity, Model, ModelConfig};
+use crate::rng::Rng;
+use crate::tasks::{score_task, task_mixture_batch, TaskKind};
+
+/// Clustered (LSH-friendly) attention inputs — the workload regime the
+/// paper's assumptions target.
+pub fn clustered_qkv(
+    seed: u64,
+    n: usize,
+    d: usize,
+    clusters: usize,
+    spread: f32,
+) -> (Mat, Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    let centers = Mat::randn(clusters, d, &mut rng);
+    let mut q = Mat::zeros(n, d);
+    let mut k = Mat::zeros(n, d);
+    for i in 0..n {
+        let c = centers.row(i % clusters);
+        for j in 0..d {
+            q.set(i, j, 1.5 * c[j] + spread * rng.normal());
+            k.set(i, j, 1.5 * c[j] + spread * rng.normal());
+        }
+    }
+    let v = Mat::randn(n, d, &mut rng);
+    (q, k, v)
+}
+
+/// Unstructured gaussian inputs.
+pub fn gaussian_qkv(seed: u64, n: usize, d: usize) -> (Mat, Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    (
+        Mat::randn(n, d, &mut rng),
+        Mat::randn(n, d, &mut rng),
+        Mat::randn(n, d, &mut rng),
+    )
+}
+
+fn time_it<F: FnMut()>(mut f: F, reps: usize) -> f64 {
+    // one warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+/// One Fig 4 measurement row.
+#[derive(Clone, Debug)]
+pub struct Fig4Row {
+    pub n: usize,
+    pub causal: bool,
+    pub backward: bool,
+    pub flash_s: f64,
+    pub hyper_s: f64,
+}
+
+impl Fig4Row {
+    pub fn speedup(&self) -> f64 {
+        self.flash_s / self.hyper_s
+    }
+}
+
+/// Fig 4: single-attention-layer wall-clock, exact (flash) vs hyper,
+/// forward and forward+backward, with and without causal masking.
+/// Paper setup: d = 64, b = m = 256, n sweeping 4k..131k.
+pub fn run_fig4(
+    sizes: &[usize],
+    d: usize,
+    block: usize,
+    samples: usize,
+    with_backward: bool,
+    reps: usize,
+) -> Vec<Fig4Row> {
+    let mut rows = Vec::new();
+    for &n in sizes {
+        let (q, k, v) = clustered_qkv(42, n, d, 32, 0.5);
+        let dout = Mat::randn(n, d, &mut Rng::new(7));
+        let hp = HyperParams { block: block.min(n), samples: samples.min(n), ..Default::default() };
+        let cp = CausalParams { base: 2048.min(n / 2).max(256), hyper: hp, flash_block: 64 };
+
+        for causal in [false, true] {
+            // forward
+            let flash_s = time_it(
+                || {
+                    let _ = exact::flash_attention(&q, &k, &v, causal, None, 64);
+                },
+                reps,
+            );
+            let hyper_s = time_it(
+                || {
+                    if causal {
+                        let _ = causal_hyper_attention(&q, &k, &v, &cp, &mut Rng::new(3));
+                    } else {
+                        let _ = hyper_attention(&q, &k, &v, &hp, &mut Rng::new(3));
+                    }
+                },
+                reps,
+            );
+            rows.push(Fig4Row { n, causal, backward: false, flash_s, hyper_s });
+
+            if with_backward {
+                let flash_s = time_it(
+                    || {
+                        let _ = exact::flash_attention(&q, &k, &v, causal, None, 64);
+                        let _ = exact::flash_backward(&q, &k, &v, &dout, causal, None, 64);
+                    },
+                    reps,
+                );
+                let hyper_s = time_it(
+                    || {
+                        if causal {
+                            let _ =
+                                causal_hyper_fwd_bwd(&q, &k, &v, &dout, &cp, &mut Rng::new(3));
+                        } else {
+                            let plan =
+                                HyperPlan::build(&q, &k, &v, &hp, &mut Rng::new(3));
+                            let _ = crate::attention::hyper::hyper_parts_with_plan(
+                                &q, &k, &v, &hp, &plan,
+                            )
+                            .finalize();
+                            let _ = hyper_backward(&q, &k, &v, &dout, &hp, &plan);
+                        }
+                    },
+                    reps,
+                );
+                rows.push(Fig4Row { n, causal, backward: true, flash_s, hyper_s });
+            }
+        }
+    }
+    rows
+}
+
+pub fn print_fig4(rows: &[Fig4Row]) {
+    println!("--- Fig 4: single attention layer, FlashAttention(exact) vs HyperAttention ---");
+    println!(
+        "{:>8} {:>7} {:>9} {:>12} {:>12} {:>9}",
+        "n", "causal", "pass", "flash (s)", "hyper (s)", "speedup"
+    );
+    for r in rows {
+        println!(
+            "{:>8} {:>7} {:>9} {:>12.4} {:>12.4} {:>8.2}x",
+            r.n,
+            r.causal,
+            if r.backward { "fwd+bwd" } else { "fwd" },
+            r.flash_s,
+            r.hyper_s,
+            r.speedup()
+        );
+    }
+}
+
+/// Fig 3 row: perplexity + attention speedup for ℓ patched layers.
+#[derive(Clone, Debug)]
+pub struct Fig3Row {
+    pub n_patched: usize,
+    pub ppl: f32,
+    pub attn_speedup: f64,
+}
+
+/// Train the tiny LM (exact attention), then evaluate perplexity with
+/// the final ℓ layers patched, ℓ = 0..=n_layers — Fig 3's protocol.
+pub fn run_fig3(
+    cfg: ModelConfig,
+    train_steps: usize,
+    seq_len: usize,
+    eval_seqs: usize,
+    verbose: bool,
+) -> (Model, Vec<f32>, Vec<Fig3Row>) {
+    let corpus = Corpus::new(
+        CorpusConfig { vocab: cfg.vocab, ..Default::default() },
+        0,
+    );
+    let mut model = Model::init(cfg, 0);
+    if verbose {
+        println!(
+            "training {} params, {} steps @ n={}...",
+            model.num_params(),
+            train_steps,
+            seq_len
+        );
+    }
+    let curve = train(&mut model, &corpus, train_steps, 8, seq_len, 3e-3, 1, verbose);
+
+    // timing: one attention layer at seq_len, exact vs hyper
+    let d = cfg.d_model / cfg.n_heads;
+    let (q, k, v) = clustered_qkv(9, seq_len.next_power_of_two(), d, 16, 0.5);
+    let hp = HyperParams {
+        block: cfg.hyper_block.min(q.rows),
+        samples: cfg.hyper_samples,
+        ..Default::default()
+    };
+    let cp = CausalParams { base: cfg.hyper_base, hyper: hp, flash_block: 64 };
+    let t_exact = time_it(
+        || {
+            let _ = exact::flash_attention(&q, &k, &v, true, None, 64);
+        },
+        3,
+    );
+    let t_hyper = time_it(
+        || {
+            let _ = causal_hyper_attention(&q, &k, &v, &cp, &mut Rng::new(3));
+        },
+        3,
+    );
+
+    let mut rng = Rng::new(1234);
+    let eval: Vec<Vec<usize>> = (0..eval_seqs).map(|_| corpus.sample(seq_len, &mut rng)).collect();
+    let mut rows = Vec::new();
+    for l in 0..=model.cfg.n_layers {
+        let ppl: f32 = eval
+            .iter()
+            .enumerate()
+            .map(|(i, s)| perplexity(&model, s, l, 77 + i as u64))
+            .sum::<f32>()
+            / eval_seqs as f32;
+        // attention time: l layers hyper + (L - l) exact
+        let per_layer_exact = t_exact;
+        let per_layer_hyper = t_hyper;
+        let total = l as f64 * per_layer_hyper
+            + (model.cfg.n_layers - l) as f64 * per_layer_exact;
+        let baseline = model.cfg.n_layers as f64 * per_layer_exact;
+        rows.push(Fig3Row { n_patched: l, ppl, attn_speedup: baseline / total });
+    }
+    (model, curve, rows)
+}
+
+pub fn print_fig3(rows: &[Fig3Row]) {
+    println!("--- Fig 3: perplexity & attention speedup vs number of patched layers ---");
+    println!("{:>9} {:>12} {:>14}", "patched", "perplexity", "attn speedup");
+    for r in rows {
+        println!("{:>9} {:>12.3} {:>13.2}x", r.n_patched, r.ppl, r.attn_speedup);
+    }
+}
+
+/// Table 1: per-task scores vs patched layers, on a model trained on the
+/// task mixture.
+pub fn run_table1(
+    cfg: ModelConfig,
+    train_steps: usize,
+    seq_len: usize,
+    reps: usize,
+    verbose: bool,
+) -> (Model, Vec<(usize, Vec<(TaskKind, f32)>)>) {
+    let mut model = Model::init(cfg, 0);
+    // train on the task mixture with exact attention
+    let mut rng = Rng::new(5);
+    let mut adam = crate::model::train::Adam::new(&model, 3e-3);
+    for step in 0..train_steps {
+        let batch = task_mixture_batch(seq_len, cfg.vocab, 12, &mut rng);
+        let results: Vec<(f32, crate::model::train::Grads)> = crate::par::par_map(
+            batch.len(),
+            |i| crate::model::train::loss_and_grads(&model, &batch[i]),
+        );
+        let mut grads = crate::model::train::Grads::zeros(&model);
+        let mut lsum = 0.0;
+        for (l, g) in &results {
+            grads.accumulate(g);
+            lsum += l / results.len() as f32;
+        }
+        grads.scale(1.0 / results.len() as f32);
+        adam.step(&mut model, &grads);
+        if verbose && step % 25 == 0 {
+            println!("  task-mixture step {step:4} loss {lsum:.4}");
+        }
+    }
+
+    let mut table = Vec::new();
+    for l in 0..=model.cfg.n_layers {
+        let scores: Vec<(TaskKind, f32)> = TaskKind::ALL
+            .iter()
+            .map(|&kind| (kind, score_task(&model, kind, seq_len, reps, l, 999)))
+            .collect();
+        table.push((l, scores));
+    }
+    (model, table)
+}
+
+pub fn print_table1(table: &[(usize, Vec<(TaskKind, f32)>)]) {
+    println!("--- Table 1: task scores vs number of patched layers ---");
+    print!("{:>9}", "patched");
+    for kind in TaskKind::ALL {
+        print!(" {:>14}", kind.name());
+    }
+    println!();
+    for (l, scores) in table {
+        print!("{l:>9}");
+        for (_, s) in scores {
+            print!(" {s:>14.2}");
+        }
+        println!();
+    }
+}
+
+/// Fig 5 / §4.3: α vs n (α/n should decrease — sublinear α).
+pub fn run_fig5(sizes: &[usize], d: usize, lm: Option<&Model>) -> Vec<(usize, f32, f32)> {
+    let mut out = Vec::new();
+    for &n in sizes {
+        let alpha = match lm {
+            Some(model) => {
+                // α from the trained model's first-layer Q, K on corpus text
+                let corpus = Corpus::new(
+                    CorpusConfig { vocab: model.cfg.vocab, ..Default::default() },
+                    0,
+                );
+                let toks = corpus.sample(n, &mut Rng::new(11));
+                alpha_of_model_layer(model, &toks)
+            }
+            None => {
+                let (q, k, _) = clustered_qkv(21, n, d, 16, 0.4);
+                measure::alpha(&q, &k, false, None, 0)
+            }
+        };
+        out.push((n, alpha, alpha / n as f32));
+    }
+    out
+}
+
+/// α of the model's first attention layer on a token sequence (per-head
+/// max, excluding the first 32 sink columns as in §4.3).
+pub fn alpha_of_model_layer(model: &Model, tokens: &[usize]) -> f32 {
+    let cfg = &model.cfg;
+    let n = tokens.len();
+    let d = cfg.d_model;
+    let dh = cfg.d_head();
+    let mut x = Mat::zeros(n, d);
+    for (i, &t) in tokens.iter().enumerate() {
+        let e = model.tok_emb.row(t);
+        let p = model.pos_emb.row(i);
+        let row = x.row_mut(i);
+        for j in 0..d {
+            row[j] = e[j] + p[j];
+        }
+    }
+    let layer = &model.layers[0];
+    let h1 = crate::model::layer_norm(&x, &layer.ln1_g, &layer.ln1_b);
+    let qkv = crate::linalg::matmul(&h1, &layer.wqkv);
+    let mut worst = 0.0f32;
+    for h in 0..cfg.n_heads {
+        let mut q = Mat::zeros(n, dh);
+        let mut k = Mat::zeros(n, dh);
+        for i in 0..n {
+            let row = qkv.row(i);
+            q.row_mut(i).copy_from_slice(&row[h * dh..(h + 1) * dh]);
+            k.row_mut(i)
+                .copy_from_slice(&row[d + h * dh..d + (h + 1) * dh]);
+        }
+        let a = measure::alpha(&q, &k, true, None, 32.min(n / 4));
+        worst = worst.max(a);
+    }
+    worst
+}
+
+pub fn print_fig5(rows: &[(usize, f32, f32)]) {
+    println!("--- Fig 5: alpha (max squared column norm of D^-1 A, scaled by n) ---");
+    println!("{:>8} {:>12} {:>12}", "n", "alpha", "alpha/n");
+    for (n, a, an) in rows {
+        println!("{n:>8} {a:>12.3} {an:>12.5}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_speedup_grows_with_n() {
+        let rows = run_fig4(&[1024, 4096], 32, 128, 128, false, 1);
+        let s_small = rows
+            .iter()
+            .find(|r| r.n == 1024 && !r.causal)
+            .unwrap()
+            .speedup();
+        let s_big = rows
+            .iter()
+            .find(|r| r.n == 4096 && !r.causal)
+            .unwrap()
+            .speedup();
+        assert!(
+            s_big > s_small,
+            "speedup should grow with n: {s_small:.2} -> {s_big:.2}"
+        );
+    }
+
+    #[test]
+    fn fig5_alpha_over_n_decreases() {
+        let rows = run_fig5(&[256, 1024], 32, None);
+        assert!(rows[1].2 < rows[0].2, "alpha/n not decreasing: {rows:?}");
+    }
+
+    #[test]
+    fn clustered_workload_shapes() {
+        let (q, k, v) = clustered_qkv(0, 64, 8, 4, 0.2);
+        assert_eq!(q.rows, 64);
+        assert_eq!(k.rows, 64);
+        assert_eq!(v.rows, 64);
+    }
+}

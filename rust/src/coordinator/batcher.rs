@@ -1,0 +1,176 @@
+//! Dynamic batcher: group same-route jobs up to `max_batch`, flushing on
+//! size or on `max_wait` age of the oldest queued job.
+//!
+//! The batching logic is a *pure state machine* ([`BatchQueue`]) driven
+//! by explicit timestamps, so the invariants (never exceeds `max_batch`;
+//! never drops or duplicates a job; never holds a job past its deadline)
+//! are directly proptestable without an async runtime.  The async shim
+//! lives in `server.rs`.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Batcher configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A pending job with its enqueue time.
+#[derive(Clone, Debug)]
+struct Pending<T> {
+    item: T,
+    enqueued: Instant,
+}
+
+/// Pure dynamic-batching state machine, generic over the batch key.
+#[derive(Debug)]
+pub struct BatchQueue<K: std::hash::Hash + Eq + Clone, T> {
+    config: BatchConfig,
+    queues: HashMap<K, Vec<Pending<T>>>,
+    depth: usize,
+}
+
+impl<K: std::hash::Hash + Eq + Clone, T> BatchQueue<K, T> {
+    pub fn new(config: BatchConfig) -> Self {
+        BatchQueue { config, queues: HashMap::new(), depth: 0 }
+    }
+
+    /// Total queued jobs across keys.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Enqueue; returns a full batch if `max_batch` is reached for the key.
+    pub fn push(&mut self, key: K, item: T, now: Instant) -> Option<(K, Vec<T>)> {
+        let q = self.queues.entry(key.clone()).or_default();
+        q.push(Pending { item, enqueued: now });
+        self.depth += 1;
+        if q.len() >= self.config.max_batch {
+            let items = self.take(&key);
+            return Some((key, items));
+        }
+        None
+    }
+
+    /// Flush every key whose oldest job has waited ≥ max_wait.
+    pub fn tick(&mut self, now: Instant) -> Vec<(K, Vec<T>)> {
+        let expired: Vec<K> = self
+            .queues
+            .iter()
+            .filter(|(_, q)| {
+                !q.is_empty()
+                    && now.duration_since(q[0].enqueued) >= self.config.max_wait
+            })
+            .map(|(k, _)| k.clone())
+            .collect();
+        expired
+            .into_iter()
+            .map(|k| {
+                let items = self.take(&k);
+                (k, items)
+            })
+            .collect()
+    }
+
+    /// Earliest deadline across queues (when the next tick is due).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.first().map(|p| p.enqueued + self.config.max_wait))
+            .min()
+    }
+
+    /// Drain everything (shutdown path).
+    pub fn drain(&mut self) -> Vec<(K, Vec<T>)> {
+        let keys: Vec<K> = self.queues.keys().cloned().collect();
+        keys.into_iter()
+            .filter_map(|k| {
+                let items = self.take(&k);
+                (!items.is_empty()).then_some((k, items))
+            })
+            .collect()
+    }
+
+    fn take(&mut self, key: &K) -> Vec<T> {
+        let q = self.queues.get_mut(key).expect("key exists");
+        let items: Vec<T> = q.drain(..).map(|p| p.item).collect();
+        self.depth -= items.len();
+        items
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(max_batch: usize, wait_ms: u64) -> BatchConfig {
+        BatchConfig { max_batch, max_wait: Duration::from_millis(wait_ms) }
+    }
+
+    #[test]
+    fn flushes_on_max_batch() {
+        let mut q: BatchQueue<u32, u64> = BatchQueue::new(cfg(3, 1000));
+        let t = Instant::now();
+        assert!(q.push(1, 10, t).is_none());
+        assert!(q.push(1, 11, t).is_none());
+        let (key, batch) = q.push(1, 12, t).expect("full batch");
+        assert_eq!(key, 1);
+        assert_eq!(batch, vec![10, 11, 12]);
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn keys_do_not_mix() {
+        let mut q: BatchQueue<u32, u64> = BatchQueue::new(cfg(2, 1000));
+        let t = Instant::now();
+        assert!(q.push(1, 10, t).is_none());
+        assert!(q.push(2, 20, t).is_none());
+        let (key, batch) = q.push(1, 11, t).unwrap();
+        assert_eq!((key, batch), (1, vec![10, 11]));
+        assert_eq!(q.depth(), 1); // key 2 still queued
+    }
+
+    #[test]
+    fn tick_flushes_expired_only() {
+        let mut q: BatchQueue<u32, u64> = BatchQueue::new(cfg(10, 5));
+        let t0 = Instant::now();
+        q.push(1, 10, t0);
+        q.push(2, 20, t0 + Duration::from_millis(4));
+        let flushed = q.tick(t0 + Duration::from_millis(6));
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0], (1, vec![10]));
+        let flushed = q.tick(t0 + Duration::from_millis(9));
+        assert_eq!(flushed[0], (2, vec![20]));
+    }
+
+    #[test]
+    fn next_deadline_is_min() {
+        let mut q: BatchQueue<u32, u64> = BatchQueue::new(cfg(10, 5));
+        let t0 = Instant::now();
+        assert!(q.next_deadline().is_none());
+        q.push(2, 20, t0 + Duration::from_millis(2));
+        q.push(1, 10, t0);
+        assert_eq!(q.next_deadline(), Some(t0 + Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn drain_returns_everything() {
+        let mut q: BatchQueue<u32, u64> = BatchQueue::new(cfg(10, 1000));
+        let t = Instant::now();
+        q.push(1, 10, t);
+        q.push(1, 11, t);
+        q.push(2, 20, t);
+        let mut all: Vec<u64> = q.drain().into_iter().flat_map(|(_, v)| v).collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![10, 11, 20]);
+        assert_eq!(q.depth(), 0);
+    }
+}

@@ -1,0 +1,305 @@
+//! Execution engine: a dedicated OS thread that owns the thread-affine
+//! PJRT [`Runtime`] and drains batches from the batcher.
+//!
+//! Jobs routed to an artifact run on PJRT; everything else runs on the
+//! pure-Rust substrate (which is internally rayon-parallel, so a single
+//! engine thread still saturates the machine).
+
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::metrics::Metrics;
+use super::request::{AttnJob, AttnResponse, Backend};
+use super::router::{Route, RouteKind, RouterConfig};
+use crate::attention::causal::{causal_hyper_attention, CausalParams};
+use crate::attention::exact;
+use crate::attention::hyper::{hyper_attention, HyperParams};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+
+/// One job in flight, with its response channel (bounded-1 std channel
+/// acting as a oneshot).
+pub struct WorkItem {
+    pub job: AttnJob,
+    pub route: Route,
+    pub submitted: Instant,
+    pub respond: SyncSender<Result<AttnResponse, String>>,
+}
+
+/// Messages to the engine thread.
+pub enum EngineMsg {
+    Batch(Vec<WorkItem>),
+    Shutdown,
+}
+
+/// Largest block size ≤ `target` that divides n (≥ 1).
+pub fn pick_block(n: usize, target: usize) -> usize {
+    let mut b = target.min(n).max(1);
+    while n % b != 0 {
+        b -= 1;
+    }
+    b
+}
+
+/// Run one job on the pure-Rust substrate (per head).
+pub fn execute_substrate(job: &AttnJob, kind: RouteKind, rc: &RouterConfig) -> Vec<f32> {
+    let (h, n, d) = (job.heads, job.n, job.d);
+    let per = n * d;
+    let mut out = vec![0.0f32; h * per];
+    for head in 0..h {
+        let sl = |x: &[f32]| Mat::from_vec(n, d, x[head * per..(head + 1) * per].to_vec());
+        let (q, k, v) = (sl(&job.q), sl(&job.k), sl(&job.v));
+        let mut rng = Rng::new(job.seed as u64 ^ (head as u64).wrapping_mul(0x9E3779B9));
+        let block = pick_block(n, rc.block);
+        let result = match (kind, job.causal) {
+            (RouteKind::Exact, causal) => exact::flash_attention(&q, &k, &v, causal, None, 64),
+            (RouteKind::Hyper, false) => {
+                if block < 8 {
+                    // pathological shapes (prime n): exact fallback
+                    exact::flash_attention(&q, &k, &v, false, None, 64)
+                } else {
+                    let p = HyperParams {
+                        block,
+                        samples: rc.samples.min(n),
+                        ..Default::default()
+                    };
+                    hyper_attention(&q, &k, &v, &p, &mut rng)
+                }
+            }
+            (RouteKind::Hyper, true) => {
+                let p = CausalParams {
+                    base: rc.causal_base,
+                    hyper: HyperParams {
+                        block: block.max(1),
+                        samples: rc.samples.min(n),
+                        ..Default::default()
+                    },
+                    flash_block: 64,
+                };
+                causal_hyper_attention(&q, &k, &v, &p, &mut rng)
+            }
+        };
+        out[head * per..(head + 1) * per].copy_from_slice(&result.data);
+    }
+    out
+}
+
+/// Spawn the engine.  Returns the submit channel and the PJRT-thread
+/// join handle.
+///
+/// Two execution lanes (§Perf optimization 1, EXPERIMENTS.md): the PJRT
+/// lane is a single thread owning the thread-affine [`Runtime`];
+/// substrate batches are forwarded to a small worker pool so they never
+/// queue behind artifact compiles (and vice versa).  Head-of-line
+/// blocking across lanes dropped p50 queue latency ~8× on the mixed
+/// serving workload.
+pub fn spawn(
+    artifacts_dir: Option<PathBuf>,
+    router_config: RouterConfig,
+    metrics: Arc<Metrics>,
+    queue_depth: usize,
+) -> (SyncSender<EngineMsg>, std::thread::JoinHandle<()>) {
+    let (tx, rx) = std::sync::mpsc::sync_channel::<EngineMsg>(queue_depth);
+
+    // substrate lane: a shared-receiver worker pool
+    let (sub_tx, sub_rx) = std::sync::mpsc::sync_channel::<EngineMsg>(queue_depth);
+    let sub_rx = Arc::new(std::sync::Mutex::new(sub_rx));
+    let n_workers = 2;
+    for w in 0..n_workers {
+        let rxw = sub_rx.clone();
+        let rc = router_config.clone();
+        let m = metrics.clone();
+        std::thread::Builder::new()
+            .name(format!("hyperattn-substrate-{w}"))
+            .spawn(move || loop {
+                let msg = { rxw.lock().unwrap().recv() };
+                match msg {
+                    Ok(EngineMsg::Batch(batch)) => {
+                        for item in batch {
+                            execute_one(item, None, &rc, &m);
+                        }
+                    }
+                    Ok(EngineMsg::Shutdown) | Err(_) => break,
+                }
+            })
+            .expect("spawn substrate worker");
+    }
+
+    let handle = std::thread::Builder::new()
+        .name("hyperattn-engine".into())
+        .spawn(move || {
+            engine_loop(rx, artifacts_dir, router_config, metrics, sub_tx, n_workers)
+        })
+        .expect("spawn engine thread");
+    (tx, handle)
+}
+
+/// Execute one work item (on whichever lane) and respond.
+fn execute_one(
+    item: WorkItem,
+    runtime: Option<&Runtime>,
+    rc: &RouterConfig,
+    metrics: &Metrics,
+) {
+    let WorkItem { job, route, submitted, respond } = item;
+    let queue_us = submitted.elapsed().as_micros() as u64;
+    let exec_start = Instant::now();
+
+    let (result, backend) = match (&route.artifact, runtime) {
+        (Some(name), Some(rt)) => {
+            let seed = matches!(route.kind, RouteKind::Hyper).then_some(job.seed);
+            match rt.run_attention(name, job.heads, job.n, job.d, &job.q, &job.k, &job.v, seed)
+            {
+                Ok(out) => (Ok(out), Backend::Artifact(name.clone())),
+                Err(e) => {
+                    // artifact failure degrades to substrate
+                    eprintln!("engine: artifact {name} failed ({e:#}); substrate fallback");
+                    (Ok(execute_substrate(&job, route.kind, rc)), Backend::Substrate)
+                }
+            }
+        }
+        _ => (Ok(execute_substrate(&job, route.kind, rc)), Backend::Substrate),
+    };
+
+    let exec_us = exec_start.elapsed().as_micros() as u64;
+    metrics.queue_latency.record(queue_us);
+    metrics.exec_latency.record(exec_us);
+    metrics.e2e_latency.record(queue_us + exec_us);
+    match backend {
+        Backend::Artifact(_) => {
+            metrics.artifact_jobs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+        Backend::Substrate => {
+            metrics.substrate_jobs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+    }
+
+    let response = result.map(|out| AttnResponse { id: job.id, out, backend, queue_us, exec_us });
+    match &response {
+        Ok(_) => {
+            metrics.jobs_completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+        Err(_) => {
+            metrics.jobs_failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+    }
+    let _ = respond.send(response);
+}
+
+fn engine_loop(
+    rx: Receiver<EngineMsg>,
+    artifacts_dir: Option<PathBuf>,
+    rc: RouterConfig,
+    metrics: Arc<Metrics>,
+    sub_tx: SyncSender<EngineMsg>,
+    n_workers: usize,
+) {
+    // Runtime is created lazily on this thread (PjRtClient is !Send).
+    let runtime: Option<Runtime> = artifacts_dir.and_then(|dir| match Runtime::open(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("engine: failed to open artifacts at {dir:?}: {e:#}; substrate only");
+            None
+        }
+    });
+
+    while let Ok(msg) = rx.recv() {
+        let batch = match msg {
+            EngineMsg::Batch(b) => b,
+            EngineMsg::Shutdown => break,
+        };
+        metrics.record_batch(batch.len());
+        // route the whole batch to its lane (batch keys are per-route, so
+        // a batch is uniformly artifact or substrate)
+        let is_artifact = batch
+            .first()
+            .map(|i| i.route.artifact.is_some() && runtime.is_some())
+            .unwrap_or(false);
+        if is_artifact {
+            for item in batch {
+                execute_one(item, runtime.as_ref(), &rc, &metrics);
+            }
+        } else {
+            // forward to the substrate pool; if it is gone, run inline
+            if let Err(e) = sub_tx.send(EngineMsg::Batch(batch)) {
+                if let EngineMsg::Batch(batch) = e.0 {
+                    for item in batch {
+                        execute_one(item, None, &rc, &metrics);
+                    }
+                }
+            }
+        }
+    }
+    for _ in 0..n_workers {
+        let _ = sub_tx.send(EngineMsg::Shutdown);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::ModePreference;
+
+    fn job(n: usize, causal: bool, seed: i32) -> AttnJob {
+        let (h, d) = (2, 16);
+        let mut rng = Rng::new(seed as u64);
+        AttnJob {
+            id: 9,
+            heads: h,
+            n,
+            d,
+            q: rng.normal_vec(h * n * d),
+            k: rng.normal_vec(h * n * d),
+            v: rng.normal_vec(h * n * d),
+            causal,
+            mode: ModePreference::Auto,
+            seed,
+        }
+    }
+
+    #[test]
+    fn pick_block_divides() {
+        assert_eq!(pick_block(128, 32), 32);
+        assert_eq!(pick_block(96, 64), 48);
+        assert_eq!(pick_block(97, 64), 1); // prime
+        assert_eq!(pick_block(4, 64), 4);
+    }
+
+    #[test]
+    fn substrate_exact_matches_reference() {
+        let j = job(48, false, 3);
+        let rc = RouterConfig::default();
+        let out = execute_substrate(&j, RouteKind::Exact, &rc);
+        // head 0 vs naive
+        let per = 48 * 16;
+        let m = |x: &[f32]| Mat::from_vec(48, 16, x[..per].to_vec());
+        let exact = exact::naive_attention(&m(&j.q), &m(&j.k), &m(&j.v), false, None);
+        let got = Mat::from_vec(48, 16, out[..per].to_vec());
+        assert!(exact.max_abs_diff(&got) < 1e-5);
+    }
+
+    #[test]
+    fn substrate_hyper_runs_all_shapes() {
+        let rc = RouterConfig { block: 16, samples: 16, causal_base: 32, ..Default::default() };
+        for n in [16usize, 48, 97, 128] {
+            for causal in [false, true] {
+                let j = job(n, causal, 1);
+                let out = execute_substrate(&j, RouteKind::Hyper, &rc);
+                assert_eq!(out.len(), 2 * n * 16);
+                assert!(out.iter().all(|x| x.is_finite()), "n={n} causal={causal}");
+            }
+        }
+    }
+
+    #[test]
+    fn substrate_deterministic() {
+        let rc = RouterConfig { block: 16, samples: 16, ..Default::default() };
+        let j = job(64, false, 5);
+        let a = execute_substrate(&j, RouteKind::Hyper, &rc);
+        let b = execute_substrate(&j, RouteKind::Hyper, &rc);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,185 @@
+//! Serving metrics: log₂-bucketed latency histograms and throughput
+//! counters.  Lock-free on the hot path (atomics only).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log₂-bucketed histogram over microseconds: bucket b covers
+/// [2^b, 2^(b+1)) µs, b in 0..48.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..48).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, us: u64) {
+        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(47);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Upper edge of the bucket containing quantile `q` (0..1) — a
+    /// conservative percentile estimate.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut acc = 0u64;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            acc += bucket.load(Ordering::Relaxed);
+            if acc >= target {
+                return 1u64 << (b + 1);
+            }
+        }
+        self.max_us()
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub queue_latency: Histogram,
+    pub exec_latency: Histogram,
+    pub e2e_latency: Histogram,
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_jobs: AtomicU64,
+    pub artifact_jobs: AtomicU64,
+    pub substrate_jobs: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_jobs.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_jobs.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// Human-readable one-page snapshot.
+    pub fn report(&self) -> String {
+        format!(
+            "jobs: submitted={} completed={} failed={}\n\
+             batches: {} (mean size {:.2})\n\
+             backend: artifact={} substrate={}\n\
+             queue  latency: mean {:.0}us p50 {}us p99 {}us max {}us\n\
+             exec   latency: mean {:.0}us p50 {}us p99 {}us max {}us\n\
+             e2e    latency: mean {:.0}us p50 {}us p99 {}us max {}us",
+            self.jobs_submitted.load(Ordering::Relaxed),
+            self.jobs_completed.load(Ordering::Relaxed),
+            self.jobs_failed.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.artifact_jobs.load(Ordering::Relaxed),
+            self.substrate_jobs.load(Ordering::Relaxed),
+            self.queue_latency.mean_us(),
+            self.queue_latency.quantile_us(0.5),
+            self.queue_latency.quantile_us(0.99),
+            self.queue_latency.max_us(),
+            self.exec_latency.mean_us(),
+            self.exec_latency.quantile_us(0.5),
+            self.exec_latency.quantile_us(0.99),
+            self.exec_latency.max_us(),
+            self.e2e_latency.mean_us(),
+            self.e2e_latency.quantile_us(0.5),
+            self.e2e_latency.quantile_us(0.99),
+            self.e2e_latency.max_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_count_mean_max() {
+        let h = Histogram::new();
+        for us in [10u64, 20, 30] {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.mean_us() - 20.0).abs() < 1e-9);
+        assert_eq!(h.max_us(), 30);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::new();
+        for us in 1..=1000u64 {
+            h.record(us);
+        }
+        let p50 = h.quantile_us(0.5);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p99);
+        // p50 of 1..1000 lives in bucket [512,1024): upper edge 1024
+        assert!(p50 >= 256 && p50 <= 1024, "p50 {p50}");
+    }
+
+    #[test]
+    fn zero_latency_handled() {
+        let h = Histogram::new();
+        h.record(0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.quantile_us(0.5), 2); // bucket 0 upper edge
+    }
+
+    #[test]
+    fn metrics_batch_accounting() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(8);
+        assert!((m.mean_batch_size() - 6.0).abs() < 1e-9);
+    }
+}

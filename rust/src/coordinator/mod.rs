@@ -1,0 +1,33 @@
+//! Layer-3 serving coordinator (vLLM-router-shaped).
+//!
+//! ```text
+//! client jobs ──> Router ──(bucket n, policy exact|hyper)──> Batcher
+//!                                                               │ (max_batch, max_wait)
+//!                  Metrics <── Engine workers <── batch queue ──┘
+//!                                │
+//!                 ┌──────────────┴───────────────┐
+//!                 │ PJRT runtime (AOT artifacts) │  fixed shapes
+//!                 │ Rust substrate fallback      │  any shape
+//!                 └──────────────────────────────┘
+//! ```
+//!
+//! * [`router`] — policy: exact below `hyper_threshold`, hyper above
+//!   (mirrors the paper patching only long-context layers); artifact if
+//!   the manifest has an exact-shape match, substrate otherwise.
+//! * [`batcher`] — pure-state-machine dynamic batcher (`max_batch`,
+//!   `max_wait`), wrapped in a tokio task.
+//! * [`engine`] — a dedicated OS thread owning the (thread-affine) PJRT
+//!   [`crate::runtime::Runtime`], plus rayon-side substrate execution.
+//! * [`metrics`] — latency histograms and throughput counters.
+//! * [`server`] — wiring: submit → route → batch → execute → respond.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use request::{AttnJob, AttnResponse, Backend, ModePreference};
+pub use router::{Route, RouteKind, Router, RouterConfig};
+pub use server::{Server, ServerConfig, Ticket};

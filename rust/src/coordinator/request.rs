@@ -1,0 +1,114 @@
+//! Job and response types flowing through the coordinator.
+
+/// Client preference for the attention algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModePreference {
+    /// Router decides by sequence length (the serving default).
+    Auto,
+    /// Force exact attention.
+    Exact,
+    /// Force HyperAttention.
+    Hyper,
+}
+
+/// One multi-head attention job: (h, n, d) row-major tensors.
+#[derive(Clone, Debug)]
+pub struct AttnJob {
+    pub id: u64,
+    pub heads: usize,
+    pub n: usize,
+    pub d: usize,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub causal: bool,
+    pub mode: ModePreference,
+    /// sampling seed for hyper paths (reproducibility)
+    pub seed: i32,
+}
+
+impl AttnJob {
+    /// Validate tensor lengths against the declared shape.
+    pub fn validate(&self) -> Result<(), String> {
+        let want = self.heads * self.n * self.d;
+        for (name, buf) in [("q", &self.q), ("k", &self.k), ("v", &self.v)] {
+            if buf.len() != want {
+                return Err(format!(
+                    "{name} has {} elements, want {want} (h={} n={} d={})",
+                    buf.len(),
+                    self.heads,
+                    self.n,
+                    self.d
+                ));
+            }
+        }
+        if self.heads == 0 || self.n == 0 || self.d == 0 {
+            return Err("zero-sized dimension".into());
+        }
+        Ok(())
+    }
+}
+
+/// Which execution backend served a job.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT artifact executed on PJRT, by name.
+    Artifact(String),
+    /// Pure-Rust substrate (any-shape fallback).
+    Substrate,
+}
+
+/// Completed job.
+#[derive(Clone, Debug)]
+pub struct AttnResponse {
+    pub id: u64,
+    /// (h, n, d) row-major output
+    pub out: Vec<f32>,
+    pub backend: Backend,
+    /// time spent queued (router + batcher), microseconds
+    pub queue_us: u64,
+    /// execution time, microseconds
+    pub exec_us: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(h: usize, n: usize, d: usize) -> AttnJob {
+        AttnJob {
+            id: 1,
+            heads: h,
+            n,
+            d,
+            q: vec![0.0; h * n * d],
+            k: vec![0.0; h * n * d],
+            v: vec![0.0; h * n * d],
+            causal: false,
+            mode: ModePreference::Auto,
+            seed: 0,
+        }
+    }
+
+    #[test]
+    fn validate_ok() {
+        assert!(job(2, 16, 8).validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_wrong_len() {
+        let mut j = job(2, 16, 8);
+        j.q.pop();
+        assert!(j.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_dim() {
+        let mut j = job(2, 16, 8);
+        j.n = 0;
+        j.q.clear();
+        j.k.clear();
+        j.v.clear();
+        assert!(j.validate().is_err());
+    }
+}

@@ -1,0 +1,190 @@
+//! Routing policy: which algorithm and which backend serves a job.
+//!
+//! Mirrors the paper's deployment recipe: exact attention below a length
+//! threshold (the approximation only pays off on long contexts), and
+//! HyperAttention above it.  An AOT artifact is selected when the
+//! manifest has an exact (kind, causal, h, n, d) match; anything else
+//! falls back to the pure-Rust substrate (shape-exact, no padding: the
+//! softmax denominator is not padding-safe in the non-causal case).
+
+use super::request::{AttnJob, ModePreference};
+use crate::runtime::Manifest;
+
+/// Algorithm choice after policy is applied.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RouteKind {
+    Exact,
+    Hyper,
+}
+
+/// Full routing decision for one job.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Route {
+    pub kind: RouteKind,
+    pub causal: bool,
+    /// artifact name, or None for the substrate path
+    pub artifact: Option<String>,
+}
+
+/// Router configuration.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// jobs with n >= this use HyperAttention when mode = Auto
+    pub hyper_threshold: usize,
+    /// substrate hyper parameters (block, samples) for fallback execution
+    pub block: usize,
+    pub samples: usize,
+    /// causal recursion base
+    pub causal_base: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { hyper_threshold: 1024, block: 256, samples: 256, causal_base: 1024 }
+    }
+}
+
+/// The router: policy + artifact index.
+#[derive(Clone, Debug)]
+pub struct Router {
+    pub config: RouterConfig,
+    /// (kind, causal, heads, n, d) -> artifact name
+    index: Vec<(RouteKind, bool, usize, usize, usize, String)>,
+}
+
+impl Router {
+    pub fn new(config: RouterConfig, manifest: Option<&Manifest>) -> Self {
+        let mut index = Vec::new();
+        if let Some(m) = manifest {
+            for a in &m.artifacts {
+                let kind = match a.kind.as_str() {
+                    "attn_exact" => RouteKind::Exact,
+                    "attn_hyper" => RouteKind::Hyper,
+                    _ => continue,
+                };
+                index.push((kind, a.causal, a.heads, a.n, a.d, a.name.clone()));
+            }
+        }
+        Router { config, index }
+    }
+
+    /// Algorithm policy: honor explicit preference, else length threshold.
+    pub fn pick_kind(&self, job: &AttnJob) -> RouteKind {
+        match job.mode {
+            ModePreference::Exact => RouteKind::Exact,
+            ModePreference::Hyper => RouteKind::Hyper,
+            ModePreference::Auto => {
+                if job.n >= self.config.hyper_threshold {
+                    RouteKind::Hyper
+                } else {
+                    RouteKind::Exact
+                }
+            }
+        }
+    }
+
+    /// Full routing decision.
+    pub fn route(&self, job: &AttnJob) -> Route {
+        let kind = self.pick_kind(job);
+        let artifact = self
+            .index
+            .iter()
+            .find(|(k, c, h, n, d, _)| {
+                *k == kind && *c == job.causal && *h == job.heads && *n == job.n && *d == job.d
+            })
+            .map(|(_, _, _, _, _, name)| name.clone());
+        Route { kind, causal: job.causal, artifact }
+    }
+
+    /// Batching key: jobs sharing a key may be executed in one batch.
+    pub fn batch_key(&self, job: &AttnJob) -> Route {
+        self.route(job)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::ModePreference;
+
+    fn job(n: usize, mode: ModePreference, causal: bool) -> AttnJob {
+        let (h, d) = (4, 64);
+        AttnJob {
+            id: 0,
+            heads: h,
+            n,
+            d,
+            q: vec![0.0; h * n * d],
+            k: vec![0.0; h * n * d],
+            v: vec![0.0; h * n * d],
+            causal,
+            mode,
+            seed: 0,
+        }
+    }
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{"format": "hlo-text", "artifacts": [
+            {"name": "attn_exact_128", "path": "a", "kind": "attn_exact",
+             "causal": false, "heads": 4, "n": 128, "d": 64},
+            {"name": "attn_hyper_2048", "path": "b", "kind": "attn_hyper",
+             "causal": false, "heads": 4, "n": 2048, "d": 64},
+            {"name": "attn_hyper_causal_2048", "path": "c", "kind": "attn_hyper",
+             "causal": true, "heads": 4, "n": 2048, "d": 64}
+        ]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn auto_threshold_policy() {
+        let r = Router::new(RouterConfig { hyper_threshold: 1024, ..Default::default() }, None);
+        assert_eq!(r.pick_kind(&job(512, ModePreference::Auto, false)), RouteKind::Exact);
+        assert_eq!(r.pick_kind(&job(1024, ModePreference::Auto, false)), RouteKind::Hyper);
+        assert_eq!(r.pick_kind(&job(8192, ModePreference::Auto, false)), RouteKind::Hyper);
+    }
+
+    #[test]
+    fn explicit_mode_wins() {
+        let r = Router::new(RouterConfig::default(), None);
+        assert_eq!(r.pick_kind(&job(16, ModePreference::Hyper, false)), RouteKind::Hyper);
+        assert_eq!(r.pick_kind(&job(1 << 20, ModePreference::Exact, false)), RouteKind::Exact);
+    }
+
+    #[test]
+    fn artifact_exact_shape_match_only() {
+        let m = manifest();
+        let r = Router::new(RouterConfig { hyper_threshold: 1024, ..Default::default() }, Some(&m));
+        // exact-shape artifact hit
+        let route = r.route(&job(128, ModePreference::Exact, false));
+        assert_eq!(route.artifact.as_deref(), Some("attn_exact_128"));
+        // off-shape: substrate
+        let route = r.route(&job(96, ModePreference::Exact, false));
+        assert_eq!(route.artifact, None);
+        // causal variant respected
+        let route = r.route(&job(2048, ModePreference::Hyper, true));
+        assert_eq!(route.artifact.as_deref(), Some("attn_hyper_causal_2048"));
+        let route = r.route(&job(2048, ModePreference::Hyper, false));
+        assert_eq!(route.artifact.as_deref(), Some("attn_hyper_2048"));
+    }
+
+    #[test]
+    fn no_manifest_always_substrate() {
+        let r = Router::new(RouterConfig::default(), None);
+        for n in [64, 128, 2048] {
+            assert_eq!(r.route(&job(n, ModePreference::Auto, false)).artifact, None);
+        }
+    }
+
+    #[test]
+    fn batch_key_groups_same_route() {
+        let m = manifest();
+        let r = Router::new(RouterConfig::default(), Some(&m));
+        let a = r.batch_key(&job(128, ModePreference::Exact, false));
+        let b = r.batch_key(&job(128, ModePreference::Exact, false));
+        assert_eq!(a, b);
+        let c = r.batch_key(&job(128, ModePreference::Hyper, false));
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,335 @@
+//! Server wiring: submit → route → dynamic batch → engine → response.
+//!
+//! Pure `std::thread` + channels (no async runtime in this tree): a
+//! batcher thread hosts the [`BatchQueue`] state machine, flushing on
+//! size or deadline via `recv_timeout`; the engine thread hosts PJRT +
+//! the Rust substrate.  Backpressure: both channels are bounded, so a
+//! full pipeline pushes back on `submit()`.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::batcher::{BatchConfig, BatchQueue};
+use super::engine::{self, EngineMsg, WorkItem};
+use super::metrics::Metrics;
+use super::request::{AttnJob, AttnResponse};
+use super::router::{Route, Router, RouterConfig};
+use crate::runtime::Manifest;
+
+/// Full coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub router: RouterConfig,
+    pub batch: BatchConfig,
+    /// directory with manifest.json + *.hlo.txt; None = substrate only
+    pub artifacts_dir: Option<PathBuf>,
+    /// bounded queue depths (submit channel & engine channel)
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            router: RouterConfig::default(),
+            batch: BatchConfig::default(),
+            artifacts_dir: None,
+            queue_depth: 256,
+        }
+    }
+}
+
+impl ServerConfig {
+    pub fn substrate_only() -> Self {
+        ServerConfig::default()
+    }
+
+    pub fn with_artifacts(dir: impl Into<PathBuf>) -> Self {
+        ServerConfig { artifacts_dir: Some(dir.into()), ..Default::default() }
+    }
+}
+
+struct Submission {
+    job: AttnJob,
+    respond: SyncSender<Result<AttnResponse, String>>,
+    submitted: Instant,
+}
+
+/// A pending response handle (await with [`Ticket::wait`]).
+pub struct Ticket {
+    rx: Receiver<Result<AttnResponse, String>>,
+}
+
+impl Ticket {
+    /// Block until the job completes.
+    pub fn wait(self) -> Result<AttnResponse, String> {
+        self.rx
+            .recv()
+            .map_err(|_| "engine dropped job".to_string())?
+    }
+
+    /// Wait with a timeout.
+    pub fn wait_timeout(self, dur: Duration) -> Result<AttnResponse, String> {
+        match self.rx.recv_timeout(dur) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => Err("timed out".into()),
+            Err(RecvTimeoutError::Disconnected) => Err("engine dropped job".into()),
+        }
+    }
+}
+
+/// Handle to a running coordinator.
+pub struct Server {
+    submit_tx: Option<SyncSender<Submission>>,
+    metrics: Arc<Metrics>,
+    engine_handle: Option<std::thread::JoinHandle<()>>,
+    batcher_handle: Option<std::thread::JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl Server {
+    /// Start the coordinator (spawns the batcher + engine threads).
+    pub fn start(config: ServerConfig) -> Self {
+        let metrics = Arc::new(Metrics::new());
+        let depth = config.queue_depth.max(1);
+
+        // Router reads the manifest here; the engine re-opens the runtime
+        // on its own thread (PjRtClient is thread-affine).
+        let manifest = config
+            .artifacts_dir
+            .as_ref()
+            .and_then(|d| Manifest::load(d.join("manifest.json")).ok());
+        let router = Router::new(config.router.clone(), manifest.as_ref());
+
+        let (engine_tx, engine_handle) = engine::spawn(
+            config.artifacts_dir.clone(),
+            config.router.clone(),
+            metrics.clone(),
+            depth,
+        );
+
+        let (submit_tx, submit_rx) = sync_channel::<Submission>(depth);
+        let batch_cfg = config.batch;
+
+        let batcher_handle = std::thread::Builder::new()
+            .name("hyperattn-batcher".into())
+            .spawn(move || {
+                let mut queue: BatchQueue<Route, WorkItem> = BatchQueue::new(batch_cfg);
+                loop {
+                    // Wait for the next submission or the flush deadline.
+                    let msg = match queue.next_deadline() {
+                        Some(deadline) => {
+                            let now = Instant::now();
+                            if deadline <= now {
+                                // deadline already passed: flush, don't block
+                                for (_, batch) in queue.tick(now) {
+                                    if engine_tx.send(EngineMsg::Batch(batch)).is_err() {
+                                        return;
+                                    }
+                                }
+                                continue;
+                            }
+                            match submit_rx.recv_timeout(deadline - now) {
+                                Ok(s) => Some(s),
+                                Err(RecvTimeoutError::Timeout) => None,
+                                Err(RecvTimeoutError::Disconnected) => break,
+                            }
+                        }
+                        None => match submit_rx.recv() {
+                            Ok(s) => Some(s),
+                            Err(_) => break,
+                        },
+                    };
+                    match msg {
+                        Some(sub) => {
+                            let route = router.route(&sub.job);
+                            let item = WorkItem {
+                                job: sub.job,
+                                route: route.clone(),
+                                submitted: sub.submitted,
+                                respond: sub.respond,
+                            };
+                            if let Some((_, batch)) = queue.push(route, item, Instant::now()) {
+                                if engine_tx.send(EngineMsg::Batch(batch)).is_err() {
+                                    return;
+                                }
+                            }
+                        }
+                        None => {
+                            for (_, batch) in queue.tick(Instant::now()) {
+                                if engine_tx.send(EngineMsg::Batch(batch)).is_err() {
+                                    return;
+                                }
+                            }
+                        }
+                    }
+                }
+                // channel closed: drain and stop the engine
+                for (_, batch) in queue.drain() {
+                    let _ = engine_tx.send(EngineMsg::Batch(batch));
+                }
+                let _ = engine_tx.send(EngineMsg::Shutdown);
+            })
+            .expect("spawn batcher thread");
+
+        Server {
+            submit_tx: Some(submit_tx),
+            metrics,
+            engine_handle: Some(engine_handle),
+            batcher_handle: Some(batcher_handle),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Submit a job; returns a [`Ticket`] to wait on.  Blocks only if the
+    /// submit queue is full (backpressure).
+    pub fn submit(&self, mut job: AttnJob) -> Result<Ticket, String> {
+        job.validate()?;
+        if job.id == 0 {
+            job.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        }
+        self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = sync_channel(1);
+        self.submit_tx
+            .as_ref()
+            .expect("server running")
+            .send(Submission { job, respond: tx, submitted: Instant::now() })
+            .map_err(|_| "coordinator shut down".to_string())?;
+        Ok(Ticket { rx })
+    }
+
+    /// Submit and block until completion.
+    pub fn submit_wait(&self, job: AttnJob) -> Result<AttnResponse, String> {
+        self.submit(job)?.wait()
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Graceful shutdown: drain queues, stop both threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        // Closing the submit channel makes the batcher drain + stop, which
+        // in turn shuts the engine down.
+        self.submit_tx.take();
+        if let Some(h) = self.batcher_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.engine_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{Backend, ModePreference};
+    use crate::rng::Rng;
+
+    fn mk_job(n: usize, mode: ModePreference, causal: bool, seed: i32) -> AttnJob {
+        let (h, d) = (2, 16);
+        let mut rng = Rng::new(seed as u64);
+        AttnJob {
+            id: 0,
+            heads: h,
+            n,
+            d,
+            q: rng.normal_vec(h * n * d),
+            k: rng.normal_vec(h * n * d),
+            v: rng.normal_vec(h * n * d),
+            causal,
+            mode,
+            seed,
+        }
+    }
+
+    #[test]
+    fn substrate_roundtrip() {
+        let server = Server::start(ServerConfig::substrate_only());
+        let resp = server
+            .submit_wait(mk_job(32, ModePreference::Exact, false, 1))
+            .unwrap();
+        assert_eq!(resp.out.len(), 2 * 32 * 16);
+        assert_eq!(resp.backend, Backend::Substrate);
+        assert!(resp.out.iter().all(|x| x.is_finite()));
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_jobs_all_complete() {
+        let server = Arc::new(Server::start(ServerConfig::substrate_only()));
+        let mut handles = Vec::new();
+        for i in 0..24 {
+            let s = server.clone();
+            handles.push(std::thread::spawn(move || {
+                let mode = if i % 2 == 0 {
+                    ModePreference::Exact
+                } else {
+                    ModePreference::Hyper
+                };
+                s.submit_wait(mk_job(64, mode, i % 3 == 0, i))
+            }));
+        }
+        for h in handles {
+            let resp = h.join().unwrap().unwrap();
+            assert!(resp.out.iter().all(|x| x.is_finite()));
+        }
+        let m = server.metrics();
+        assert_eq!(m.jobs_completed.load(Ordering::Relaxed), 24);
+        assert_eq!(m.jobs_failed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn invalid_job_rejected_before_queue() {
+        let server = Server::start(ServerConfig::substrate_only());
+        let mut j = mk_job(16, ModePreference::Exact, false, 0);
+        j.q.pop();
+        assert!(server.submit(j).is_err());
+        assert_eq!(server.metrics().jobs_submitted.load(Ordering::Relaxed), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn batching_accumulates() {
+        let mut cfg = ServerConfig::substrate_only();
+        cfg.batch.max_batch = 4;
+        cfg.batch.max_wait = Duration::from_millis(50);
+        let server = Arc::new(Server::start(cfg));
+        let mut handles = Vec::new();
+        for i in 0..8 {
+            let s = server.clone();
+            handles.push(std::thread::spawn(move || {
+                s.submit_wait(mk_job(32, ModePreference::Exact, false, i))
+            }));
+        }
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+        // 8 same-route jobs with max_batch 4: mean batch size must beat 1
+        assert!(server.metrics().mean_batch_size() > 1.0);
+    }
+
+    #[test]
+    fn queue_latency_and_exec_recorded() {
+        let server = Server::start(ServerConfig::substrate_only());
+        let resp = server
+            .submit_wait(mk_job(64, ModePreference::Hyper, true, 3))
+            .unwrap();
+        assert!(resp.exec_us > 0);
+        assert!(server.metrics().e2e_latency.count() == 1);
+        server.shutdown();
+    }
+}

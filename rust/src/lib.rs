@@ -1,0 +1,32 @@
+//! # HyperAttention — near-linear-time long-context attention
+//!
+//! A production-shaped reproduction of *HyperAttention: Long-context
+//! Attention in Near-Linear Time* (Han et al., ICLR 2024) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1/2 (build time)** — Pallas kernels + JAX model in
+//!   `python/compile/`, AOT-lowered to HLO text artifacts.
+//! * **Layer 3 (this crate)** — the serving coordinator: shape-bucket
+//!   router, dynamic batcher, PJRT runtime loading the AOT artifacts,
+//!   plus a complete pure-Rust algorithm substrate (`attention`) used as
+//!   the any-shape fallback and the large-`n` benchmark path.
+//!
+//! The paper's pipeline — sortLSH heavy-entry masks ([`lsh`]), the
+//! ApproxD diagonal estimator ([`attention::approx_d`]), row-norm-sampled
+//! approximate matrix multiplication ([`attention::amm`]), the merged
+//! non-causal forward ([`attention::hyper`]) and the recursive causal
+//! decomposition ([`attention::causal`]) — is implemented end to end,
+//! with the measurement machinery for the paper's fine-grained
+//! parameters α and κ in [`attention::measure`].
+
+pub mod attention;
+pub mod bench;
+pub mod coordinator;
+pub mod json;
+pub mod linalg;
+pub mod lsh;
+pub mod model;
+pub mod par;
+pub mod rng;
+pub mod runtime;
+pub mod tasks;

@@ -1,0 +1,326 @@
+//! Dense linear-algebra substrate: row-major `Mat` + the handful of
+//! kernels attention needs (no external BLAS — built from scratch).
+//!
+//! The hot paths (`matmul_nt`, `matmul`) are cache-blocked and
+//! thread-parallel over row panels (see [`crate::par`]); everything is f32.
+
+use crate::par;
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Standard-normal entries from the given RNG.
+    pub fn randn(rows: usize, cols: usize, rng: &mut crate::rng::Rng) -> Self {
+        Mat { rows, cols, data: rng.normal_vec(rows * cols) }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Gather rows by index (used for LSH permutations and sampling).
+    pub fn gather_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Contiguous row slice [lo, hi) as a new matrix.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Mat {
+        Mat::from_vec(hi - lo, self.cols, self.data[lo * self.cols..hi * self.cols].to_vec())
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Squared L2 norm of each row.
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        (0..self.rows).map(|i| dot(self.row(i), self.row(i))).collect()
+    }
+
+    /// In-place scalar multiply.
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Max absolute difference (test helper).
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 8-lane unrolled accumulation; LLVM autovectorizes this shape well.
+    let chunks = a.len() / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        for l in 0..8 {
+            acc[l] += a[i + l] * b[i + l];
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for i in chunks * 8..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `A (r×k) * B^T (c×k) -> (r×c)`: the Q·Kᵀ shape.  Row-dot-row is the
+/// cache-optimal layout for row-major inputs; parallel over A rows.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "inner dim mismatch");
+    let mut out = Mat::zeros(a.rows, b.rows);
+    par::par_rows(&mut out.data, b.rows, |i, row| {
+        let ar = a.row(i);
+        for (j, o) in row.iter_mut().enumerate() {
+            *o = dot(ar, b.row(j));
+        }
+    });
+    out
+}
+
+/// `A (r×k) * B (k×c) -> (r×c)`: the P·V shape.  ikj loop order keeps B
+/// row-contiguous; parallel over A rows.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "inner dim mismatch");
+    let mut out = Mat::zeros(a.rows, b.cols);
+    par::par_rows(&mut out.data, b.cols, |i, orow| {
+        let ar = a.row(i);
+        for (kk, &aik) in ar.iter().enumerate() {
+            if aik != 0.0 {
+                let brow = b.row(kk);
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += aik * bv;
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Numerically-stable softmax of each row, in place.
+pub fn softmax_rows(m: &mut Mat) {
+    let cols = m.cols;
+    par::par_rows(&mut m.data, cols, |_, row| {
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut s = 0.0;
+        for x in row.iter_mut() {
+            *x = (*x - mx).exp();
+            s += *x;
+        }
+        let inv = 1.0 / s.max(1e-30);
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+    });
+}
+
+/// Stable argsort (ascending) of a key slice.
+pub fn argsort<T: PartialOrd + Copy>(keys: &[T]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..keys.len()).collect();
+    idx.sort_by(|&a, &b| keys[a].partial_cmp(&keys[b]).unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}
+
+/// Inverse of a permutation: `inv[perm[i]] = i`.
+pub fn invert_permutation(perm: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv[p] = i;
+    }
+    inv
+}
+
+/// Operator (spectral) norm estimate via power iteration on MᵀM.
+pub fn op_norm(m: &Mat, iters: usize, rng: &mut crate::rng::Rng) -> f32 {
+    let mut v = rng.normal_vec(m.cols);
+    let nrm = |x: &[f32]| dot(x, x).sqrt().max(1e-30);
+    let s = nrm(&v);
+    v.iter_mut().for_each(|x| *x /= s);
+    let mut sigma = 0.0f32;
+    for _ in 0..iters {
+        // u = M v
+        let mut u = vec![0.0f32; m.rows];
+        for i in 0..m.rows {
+            u[i] = dot(m.row(i), &v);
+        }
+        // w = Mᵀ u
+        let mut w = vec![0.0f32; m.cols];
+        for i in 0..m.rows {
+            let ui = u[i];
+            if ui != 0.0 {
+                for (wj, &mij) in w.iter_mut().zip(m.row(i)) {
+                    *wj += ui * mij;
+                }
+            }
+        }
+        let wn = nrm(&w);
+        sigma = wn.sqrt(); // ||M v|| grows as sigma² per full iteration
+        v = w;
+        v.iter_mut().for_each(|x| *x /= wn);
+    }
+    sigma
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(0);
+        let a = Mat::randn(5, 7, &mut rng);
+        let mut eye = Mat::zeros(7, 7);
+        for i in 0..7 {
+            eye.set(i, i, 1.0);
+        }
+        let out = matmul(&a, &eye);
+        assert!(a.max_abs_diff(&out) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_nt_matches_matmul() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(13, 9, &mut rng);
+        let b = Mat::randn(11, 9, &mut rng);
+        let nt = matmul_nt(&a, &b);
+        let nn = matmul(&a, &b.transpose());
+        assert!(nt.max_abs_diff(&nn) < 1e-4);
+    }
+
+    #[test]
+    fn matmul_associativity_with_vector() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(6, 6, &mut rng);
+        let b = Mat::randn(6, 6, &mut rng);
+        let x = Mat::randn(6, 1, &mut rng);
+        let left = matmul(&matmul(&a, &b), &x);
+        let right = matmul(&a, &matmul(&b, &x));
+        assert!(left.max_abs_diff(&right) < 1e-3);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(4, 9, &mut rng);
+        assert_eq!(a, a.transpose().transpose());
+    }
+
+    #[test]
+    fn softmax_rows_stochastic() {
+        let mut rng = Rng::new(4);
+        let mut a = Mat::randn(10, 20, &mut rng);
+        a.scale(50.0); // stress stability
+        softmax_rows(&mut a);
+        for i in 0..10 {
+            let s: f32 = a.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+            assert!(a.row(i).iter().all(|&x| x.is_finite() && x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn argsort_stable_and_sorted() {
+        let keys = [3.0f32, 1.0, 2.0, 1.0, 0.5];
+        let idx = argsort(&keys);
+        assert_eq!(idx, vec![4, 1, 3, 2, 0]); // stable: 1 before 3
+    }
+
+    #[test]
+    fn permutation_inverse() {
+        let perm = vec![2usize, 0, 3, 1];
+        let inv = invert_permutation(&perm);
+        for i in 0..4 {
+            assert_eq!(inv[perm[i]], i);
+        }
+    }
+
+    #[test]
+    fn gather_rows_roundtrip() {
+        let mut rng = Rng::new(5);
+        let a = Mat::randn(8, 3, &mut rng);
+        let perm = vec![3usize, 1, 7, 0, 2, 6, 4, 5];
+        let g = a.gather_rows(&perm);
+        let back = g.gather_rows(&invert_permutation(&perm));
+        assert_eq!(a, back);
+    }
+
+    #[test]
+    fn op_norm_of_diag() {
+        let mut d = Mat::zeros(5, 5);
+        for (i, v) in [1.0f32, 4.0, 2.0, 0.5, 3.0].iter().enumerate() {
+            d.set(i, i, *v);
+        }
+        let mut rng = Rng::new(6);
+        let s = op_norm(&d, 50, &mut rng);
+        assert!((s - 4.0).abs() < 0.05, "sigma {s}");
+    }
+
+    #[test]
+    fn row_sq_norms_correct() {
+        let a = Mat::from_vec(2, 2, vec![3.0, 4.0, 0.0, 2.0]);
+        assert_eq!(a.row_sq_norms(), vec![25.0, 4.0]);
+    }
+}

@@ -1,0 +1,229 @@
+//! Hamming-sorted LSH (Definition 1 of the paper), mirroring
+//! `python/compile/kernels/lsh.py`.
+//!
+//! r random hyperplanes; the sign pattern of `x · P` is read as a Gray
+//! code whose rank is the bucket id, so bucket ids that differ by 1 are
+//! sign patterns at Hamming distance 1 — geometrically adjacent cells.
+//! Sorting rows by bucket id therefore concentrates the large entries of
+//! the attention matrix near the diagonal (Algorithm 1 / Fig. 1).
+
+use crate::linalg::{argsort, dot, Mat};
+use crate::rng::Rng;
+
+/// A sampled Hamming-sorted LSH function.
+#[derive(Clone, Debug)]
+pub struct Lsh {
+    /// (r, d): one hyperplane normal per row.
+    planes: Mat,
+    pub bits: usize,
+}
+
+impl Lsh {
+    /// Sample `bits` hyperplanes in dimension `d`.
+    pub fn new(d: usize, bits: usize, rng: &mut Rng) -> Self {
+        assert!(bits <= 30, "bucket id must fit in u32");
+        Lsh { planes: Mat::randn(bits, d, rng), bits }
+    }
+
+    /// Bucket id of a single vector, in [0, 2^bits).
+    pub fn bucket(&self, x: &[f32]) -> u32 {
+        // Gray bits (MSB first) -> binary via cumulative XOR.
+        let mut acc = 0u32; // running parity (current binary bit)
+        let mut id = 0u32;
+        for b in 0..self.bits {
+            let g = (dot(self.planes.row(b), x) > 0.0) as u32;
+            acc ^= g;
+            id = (id << 1) | acc;
+        }
+        id
+    }
+
+    /// Bucket ids for every row.
+    pub fn buckets(&self, x: &Mat) -> Vec<u32> {
+        (0..x.rows).map(|i| self.bucket(x.row(i))).collect()
+    }
+
+    /// Stable permutation sorting rows by bucket id.
+    pub fn sort_permutation(&self, x: &Mat) -> Vec<usize> {
+        argsort(&self.buckets(x))
+    }
+}
+
+/// Definition 1 collision probability: (1 - θ/π)^r.
+pub fn collision_probability(theta: f64, r: usize) -> f64 {
+    (1.0 - theta / std::f64::consts::PI).powi(r as i32)
+}
+
+/// The sortLSH block mask M^H in factored form: the permutations plus the
+/// block size fully determine it (dense form is test-only).
+#[derive(Clone, Debug)]
+pub struct BlockMask {
+    /// sorted position of each original query row
+    pub pos_q: Vec<usize>,
+    /// sorted position of each original key row
+    pub pos_k: Vec<usize>,
+    pub block: usize,
+}
+
+impl BlockMask {
+    pub fn from_lsh(lsh: &Lsh, q: &Mat, k: &Mat, block: usize) -> Self {
+        assert_eq!(q.rows % block, 0, "n must be divisible by block");
+        let perm_q = lsh.sort_permutation(q);
+        let perm_k = lsh.sort_permutation(k);
+        BlockMask {
+            pos_q: crate::linalg::invert_permutation(&perm_q),
+            pos_k: crate::linalg::invert_permutation(&perm_k),
+            block,
+        }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.pos_q.len()
+    }
+
+    /// Is (i, j) inside the mask (same diagonal block after sorting)?
+    #[inline]
+    pub fn contains(&self, i: usize, j: usize) -> bool {
+        self.pos_q[i] / self.block == self.pos_k[j] / self.block
+    }
+
+    /// nnz(M^H) = n * block — the paper's n^{1+o(1)} sparse-by-design mask.
+    pub fn nnz(&self) -> usize {
+        self.n() * self.block
+    }
+
+    /// Dense {0,1} materialization (test scale only).
+    pub fn to_dense(&self) -> Mat {
+        let n = self.n();
+        let nk = self.pos_k.len();
+        let mut m = Mat::zeros(n, nk);
+        for i in 0..n {
+            for j in 0..nk {
+                if self.contains(i, j) {
+                    m.set(i, j, 1.0);
+                }
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_range() {
+        let mut rng = Rng::new(0);
+        let lsh = Lsh::new(16, 8, &mut rng);
+        let x = Mat::randn(200, 16, &mut rng);
+        for b in lsh.buckets(&x) {
+            assert!(b < 256);
+        }
+    }
+
+    #[test]
+    fn identical_points_collide() {
+        let mut rng = Rng::new(1);
+        let lsh = Lsh::new(8, 10, &mut rng);
+        let x = Mat::randn(32, 8, &mut rng);
+        for i in 0..32 {
+            assert_eq!(lsh.bucket(x.row(i)), lsh.bucket(x.row(i)));
+        }
+    }
+
+    #[test]
+    fn nearby_points_nearby_buckets() {
+        // Gray ordering: a single flipped hyperplane moves the bucket id,
+        // but statistically close points land in close buckets.
+        let mut rng = Rng::new(2);
+        let lsh = Lsh::new(16, 6, &mut rng);
+        let mut close_dist = 0i64;
+        let mut far_dist = 0i64;
+        let trials = 200;
+        for _ in 0..trials {
+            let x: Vec<f32> = rng.normal_vec(16);
+            let near: Vec<f32> = x.iter().map(|v| v + 0.05 * rng.normal()).collect();
+            let far: Vec<f32> = rng.normal_vec(16);
+            let bx = lsh.bucket(&x) as i64;
+            close_dist += (bx - lsh.bucket(&near) as i64).abs();
+            far_dist += (bx - lsh.bucket(&far) as i64).abs();
+        }
+        assert!(
+            close_dist * 3 < far_dist,
+            "close {close_dist} vs far {far_dist}"
+        );
+    }
+
+    #[test]
+    fn collision_probability_montecarlo() {
+        // θ = π/4 pair, r = 4 planes: p = (3/4)^4 ≈ 0.316.
+        let theta = std::f64::consts::FRAC_PI_4;
+        let r = 4;
+        let mut hits = 0;
+        let trials = 2000;
+        let mut rng = Rng::new(3);
+        let x = vec![1.0f32, 0.0, 0.0, 0.0];
+        let y = vec![
+            (theta as f32).cos(),
+            (theta as f32).sin(),
+            0.0,
+            0.0,
+        ];
+        for _ in 0..trials {
+            let lsh = Lsh::new(4, r, &mut rng);
+            if lsh.bucket(&x) == lsh.bucket(&y) {
+                hits += 1;
+            }
+        }
+        let p = hits as f64 / trials as f64;
+        let expected = collision_probability(theta, r);
+        assert!((p - expected).abs() < 0.05, "p {p} expected {expected}");
+    }
+
+    #[test]
+    fn sort_permutation_valid() {
+        let mut rng = Rng::new(4);
+        let lsh = Lsh::new(8, 6, &mut rng);
+        let x = Mat::randn(100, 8, &mut rng);
+        let perm = lsh.sort_permutation(&x);
+        let mut sorted = perm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        let buckets = lsh.buckets(&x);
+        for w in perm.windows(2) {
+            assert!(buckets[w[0]] <= buckets[w[1]]);
+        }
+    }
+
+    #[test]
+    fn block_mask_row_col_counts() {
+        let mut rng = Rng::new(5);
+        let lsh = Lsh::new(8, 6, &mut rng);
+        let q = Mat::randn(64, 8, &mut rng);
+        let k = Mat::randn(64, 8, &mut rng);
+        let mask = BlockMask::from_lsh(&lsh, &q, &k, 16);
+        let dense = mask.to_dense();
+        for i in 0..64 {
+            let rs: f32 = dense.row(i).iter().sum();
+            assert_eq!(rs as usize, 16, "row {i}");
+        }
+        assert_eq!(mask.nnz(), 64 * 16);
+    }
+
+    #[test]
+    fn mask_contains_matches_dense() {
+        let mut rng = Rng::new(6);
+        let lsh = Lsh::new(4, 4, &mut rng);
+        let q = Mat::randn(32, 4, &mut rng);
+        let k = Mat::randn(32, 4, &mut rng);
+        let mask = BlockMask::from_lsh(&lsh, &q, &k, 8);
+        let dense = mask.to_dense();
+        for i in 0..32 {
+            for j in 0..32 {
+                assert_eq!(mask.contains(i, j), dense.get(i, j) == 1.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! `hyperattn` — CLI for the HyperAttention serving stack.
+//!
+//! Subcommands map one-to-one onto the paper's experiments (DESIGN.md
+//! section 4) plus a serving entry point:
+//!
+//! * `serve`   — start the coordinator, push a synthetic batched client
+//!   load, report latency/throughput percentiles.
+//! * `fig4`    — single-layer speedup sweep (exact vs hyper).
+//! * `fig3`    — train the tiny LM, patch final layers, report ppl.
+//! * `table1`  — LongBench-like task scores vs patched layers.
+//! * `fig5`    — empirical α vs n.
+//! * `verify`  — spectral-guarantee check (Eq. 1) on random workloads.
+//!
+//! Argument parsing is hand-rolled (`--key value` / `--flag`); this tree
+//! has no CLI dependency.
+
+use std::collections::HashMap;
+
+use hyperattention::attention::hyper::{hyper_attention, HyperParams};
+use hyperattention::attention::measure;
+use hyperattention::bench;
+use hyperattention::coordinator::{AttnJob, ModePreference, Server, ServerConfig};
+use hyperattention::model::ModelConfig;
+use hyperattention::rng::Rng;
+
+/// Minimal `--key value` / `--flag` parser.
+struct Args {
+    kv: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse(args: &[String]) -> Self {
+        let mut kv = HashMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    kv.insert(key.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Args { kv, flags }
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.kv
+            .get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn get_str(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    fn list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        self.kv
+            .get(key)
+            .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
+            .unwrap_or_else(|| default.to_vec())
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+const USAGE: &str = "\
+hyperattn — HyperAttention near-linear attention serving stack
+
+USAGE: hyperattn <COMMAND> [OPTIONS]
+
+COMMANDS:
+  serve    --artifacts DIR --jobs N --n LEN --heads H --d D
+  fig4     --sizes 4096,8192,... --d D --block B --samples M [--backward] --reps R
+  fig3     --steps S --seq-len N
+  table1   --steps S --seq-len N --reps R
+  fig5     --sizes 1024,2048,... --d D
+  verify   --n N --d D --trials T
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "serve" => cmd_serve(&args),
+        "fig4" => {
+            let rows = bench::run_fig4(
+                &args.list("sizes", &[4096, 8192, 16384, 32768]),
+                args.get("d", 64usize),
+                args.get("block", 256usize),
+                args.get("samples", 256usize),
+                args.flag("backward"),
+                args.get("reps", 1usize),
+            );
+            bench::print_fig4(&rows);
+        }
+        "fig3" => {
+            let seq_len = args.get("seq-len", 256usize);
+            let cfg = ModelConfig { max_seq: seq_len, ..Default::default() };
+            let (_, curve, rows) =
+                bench::run_fig3(cfg, args.get("steps", 150usize), seq_len, 8, true);
+            println!(
+                "final training loss {:.4} (ppl {:.2})",
+                curve.last().unwrap(),
+                curve.last().unwrap().exp()
+            );
+            bench::print_fig3(&rows);
+        }
+        "table1" => {
+            let seq_len = args.get("seq-len", 128usize);
+            let cfg = ModelConfig { max_seq: seq_len, ..Default::default() };
+            let (_, table) = bench::run_table1(
+                cfg,
+                args.get("steps", 150usize),
+                seq_len,
+                args.get("reps", 20usize),
+                true,
+            );
+            bench::print_table1(&table);
+        }
+        "fig5" => {
+            let rows = bench::run_fig5(
+                &args.list("sizes", &[1024, 2048, 4096, 8192]),
+                args.get("d", 64usize),
+                None,
+            );
+            bench::print_fig5(&rows);
+        }
+        "verify" => {
+            let n = args.get("n", 256usize);
+            let d = args.get("d", 32usize);
+            let trials = args.get("trials", 5usize);
+            println!("Eq. (1) spectral error, clustered workload, n={n} d={d}");
+            println!("{:>8} {:>10} {:>12}", "samples", "trial", "error");
+            for &m in &[n / 8, n / 2, 2 * n] {
+                for t in 0..trials {
+                    let (q, k, v) = bench::clustered_qkv(t as u64, n, d, 8, 0.25);
+                    let p = HyperParams {
+                        block: (n / 8).max(16),
+                        samples: m,
+                        ..Default::default()
+                    };
+                    let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(t as u64));
+                    let err = measure::spectral_error(&out, &q, &k, &v, false, None);
+                    println!("{m:>8} {t:>10} {err:>12.4}");
+                }
+            }
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) {
+    let jobs = args.get("jobs", 64usize);
+    let n = args.get("n", 512usize);
+    let heads = args.get("heads", 4usize);
+    let d = args.get("d", 64usize);
+    let cfg = match args.get_str("artifacts") {
+        Some(dir) => ServerConfig::with_artifacts(dir),
+        None => ServerConfig::substrate_only(),
+    };
+    let server = std::sync::Arc::new(Server::start(cfg));
+    println!("coordinator up; submitting {jobs} jobs (h={heads}, n={n}, d={d})");
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for i in 0..jobs {
+        let s = server.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(i as u64);
+            let len = heads * n * d;
+            let job = AttnJob {
+                id: 0,
+                heads,
+                n,
+                d,
+                q: rng.normal_vec(len),
+                k: rng.normal_vec(len),
+                v: rng.normal_vec(len),
+                causal: i % 2 == 0,
+                mode: ModePreference::Auto,
+                seed: i as i32,
+            };
+            s.submit_wait(job)
+        }));
+    }
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{jobs} jobs in {dt:.2}s ({:.1} jobs/s)\n{}",
+        jobs as f64 / dt,
+        server.metrics().report()
+    );
+}

@@ -1,0 +1,340 @@
+//! Pure-Rust tiny transformer LM — the "pretrained model" substrate for
+//! the paper's monkey-patching experiments (Fig 3, Table 1).
+//!
+//! Substitution note (DESIGN.md section 2): the paper patches
+//! chatglm2-6b-32k / phi-1.5.  We cannot ship a 6B checkpoint, so this
+//! module provides the same *experimental protocol* at laptop scale:
+//! train a small causal LM to convergence with EXACT attention
+//! ([`train`]), then evaluate perplexity with the final ℓ layers replaced
+//! by causal HyperAttention — no fine-tuning, exactly as in the paper.
+//!
+//! Architecture mirrors `python/compile/model.py`: pre-LN blocks,
+//! learned positions, weight-tied logits, byte-level vocab.
+
+pub mod corpus;
+pub mod train;
+
+use crate::attention::causal::{causal_hyper_attention, CausalParams};
+use crate::attention::exact;
+use crate::attention::hyper::HyperParams;
+use crate::linalg::{matmul, matmul_nt, Mat};
+use crate::rng::Rng;
+
+/// Model hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    /// HyperAttention parameters for patched layers
+    pub hyper_block: usize,
+    pub hyper_samples: usize,
+    pub hyper_base: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            vocab: 64,
+            d_model: 64,
+            n_heads: 2,
+            n_layers: 4,
+            d_ff: 128,
+            max_seq: 512,
+            hyper_block: 32,
+            hyper_samples: 32,
+            hyper_base: 64,
+        }
+    }
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        assert_eq!(self.d_model % self.n_heads, 0);
+        self.d_model / self.n_heads
+    }
+}
+
+/// One transformer block's weights.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub wqkv: Mat, // (d_model, 3 d_model)
+    pub wo: Mat,   // (d_model, d_model)
+    pub w1: Mat,   // (d_model, d_ff)
+    pub b1: Vec<f32>,
+    pub w2: Mat, // (d_ff, d_model)
+    pub b2: Vec<f32>,
+}
+
+/// Full parameter set.
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub cfg: ModelConfig,
+    pub tok_emb: Mat, // (vocab, d_model)
+    pub pos_emb: Mat, // (max_seq, d_model)
+    pub ln_f_g: Vec<f32>,
+    pub ln_f_b: Vec<f32>,
+    pub layers: Vec<Layer>,
+}
+
+impl Model {
+    /// Deterministic init (same scheme as the JAX model).
+    pub fn init(cfg: ModelConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let d = cfg.d_model;
+        let dense = |rows: usize, cols: usize, rng: &mut Rng| {
+            let mut m = Mat::randn(rows, cols, rng);
+            m.scale(1.0 / (rows as f32).sqrt());
+            m
+        };
+        let mut tok_emb = Mat::randn(cfg.vocab, d, &mut rng);
+        tok_emb.scale(0.02);
+        let mut pos_emb = Mat::randn(cfg.max_seq, d, &mut rng);
+        pos_emb.scale(0.02);
+        let layers = (0..cfg.n_layers)
+            .map(|_| Layer {
+                ln1_g: vec![1.0; d],
+                ln1_b: vec![0.0; d],
+                ln2_g: vec![1.0; d],
+                ln2_b: vec![0.0; d],
+                wqkv: dense(d, 3 * d, &mut rng),
+                wo: dense(d, d, &mut rng),
+                w1: dense(d, cfg.d_ff, &mut rng),
+                b1: vec![0.0; cfg.d_ff],
+                w2: dense(cfg.d_ff, d, &mut rng),
+                b2: vec![0.0; d],
+            })
+            .collect();
+        Model {
+            cfg,
+            tok_emb,
+            pos_emb,
+            ln_f_g: vec![1.0; d],
+            ln_f_b: vec![0.0; d],
+            layers,
+        }
+    }
+
+    pub fn num_params(&self) -> usize {
+        let d = self.cfg.d_model;
+        let per_layer = 4 * d + d * 3 * d + d * d + d * self.cfg.d_ff * 2
+            + self.cfg.d_ff
+            + d;
+        self.cfg.vocab * d + self.cfg.max_seq * d + 2 * d + self.cfg.n_layers * per_layer
+    }
+}
+
+/// Layer norm (per row), returning normalized output.
+pub fn layer_norm(x: &Mat, g: &[f32], b: &[f32]) -> Mat {
+    let mut out = Mat::zeros(x.rows, x.cols);
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let mean = row.iter().sum::<f32>() / x.cols as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / x.cols as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        let orow = out.row_mut(i);
+        for j in 0..x.cols {
+            orow[j] = (row[j] - mean) * inv * g[j] + b[j];
+        }
+    }
+    out
+}
+
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    // tanh approximation (matches jax.nn.gelu default)
+    0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x * x * x)).tanh()))
+}
+
+/// Multi-head causal attention over the hidden states.
+fn attention(model: &Model, x: &Mat, layer: &Layer, use_hyper: bool, seed: u64) -> Mat {
+    let cfg = &model.cfg;
+    let n = x.rows;
+    let d = cfg.d_model;
+    let dh = cfg.d_head();
+    let qkv = matmul(x, &layer.wqkv); // (n, 3d)
+    let mut out = Mat::zeros(n, d);
+    for h in 0..cfg.n_heads {
+        let mut q = Mat::zeros(n, dh);
+        let mut k = Mat::zeros(n, dh);
+        let mut v = Mat::zeros(n, dh);
+        for i in 0..n {
+            let row = qkv.row(i);
+            q.row_mut(i).copy_from_slice(&row[h * dh..(h + 1) * dh]);
+            k.row_mut(i)
+                .copy_from_slice(&row[d + h * dh..d + (h + 1) * dh]);
+            v.row_mut(i)
+                .copy_from_slice(&row[2 * d + h * dh..2 * d + (h + 1) * dh]);
+        }
+        let attn = if use_hyper && n > cfg.hyper_base {
+            let p = CausalParams {
+                base: cfg.hyper_base,
+                hyper: HyperParams {
+                    block: cfg.hyper_block.min(n),
+                    samples: cfg.hyper_samples,
+                    ..Default::default()
+                },
+                flash_block: 64,
+            };
+            let mut rng = Rng::new(seed ^ (h as u64).wrapping_mul(0x9E3779B9));
+            causal_hyper_attention(&q, &k, &v, &p, &mut rng)
+        } else {
+            exact::flash_attention(&q, &k, &v, true, None, 64)
+        };
+        for i in 0..n {
+            out.row_mut(i)[h * dh..(h + 1) * dh].copy_from_slice(attn.row(i));
+        }
+    }
+    matmul(&out, &layer.wo)
+}
+
+/// Forward pass: logits (n, vocab).  The FINAL `n_patched` layers use
+/// causal HyperAttention (the paper's patch-from-the-end protocol).
+pub fn forward(model: &Model, tokens: &[usize], n_patched: usize, seed: u64) -> Mat {
+    let cfg = &model.cfg;
+    let n = tokens.len();
+    assert!(n <= cfg.max_seq, "sequence too long");
+    let d = cfg.d_model;
+    let mut x = Mat::zeros(n, d);
+    for (i, &t) in tokens.iter().enumerate() {
+        let e = model.tok_emb.row(t);
+        let p = model.pos_emb.row(i);
+        let row = x.row_mut(i);
+        for j in 0..d {
+            row[j] = e[j] + p[j];
+        }
+    }
+    let first_patched = cfg.n_layers.saturating_sub(n_patched);
+    for (li, layer) in model.layers.iter().enumerate() {
+        let use_hyper = li >= first_patched;
+        let h = layer_norm(&x, &layer.ln1_g, &layer.ln1_b);
+        let a = attention(model, &h, layer, use_hyper, seed.wrapping_add(131 * li as u64));
+        x.add_assign(&a);
+        let h = layer_norm(&x, &layer.ln2_g, &layer.ln2_b);
+        let mut ff = matmul(&h, &layer.w1);
+        for i in 0..n {
+            let row = ff.row_mut(i);
+            for (j, val) in row.iter_mut().enumerate() {
+                *val = gelu(*val + layer.b1[j]);
+            }
+        }
+        let mut ff2 = matmul(&ff, &layer.w2);
+        for i in 0..n {
+            let row = ff2.row_mut(i);
+            for (j, val) in row.iter_mut().enumerate() {
+                *val += layer.b2[j];
+            }
+        }
+        x.add_assign(&ff2);
+    }
+    let x = layer_norm(&x, &model.ln_f_g, &model.ln_f_b);
+    matmul_nt(&x, &model.tok_emb) // weight-tied logits (n, vocab)
+}
+
+/// Mean next-token cross-entropy of a sequence.
+pub fn loss(model: &Model, tokens: &[usize], n_patched: usize, seed: u64) -> f32 {
+    let logits = forward(model, tokens, n_patched, seed);
+    let n = tokens.len();
+    let mut total = 0.0f64;
+    for i in 0..n - 1 {
+        let row = logits.row(i);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = mx + row.iter().map(|&l| (l - mx).exp()).sum::<f32>().ln();
+        total += (lse - row[tokens[i + 1]]) as f64;
+    }
+    (total / (n - 1) as f64) as f32
+}
+
+/// Perplexity = exp(loss).
+pub fn perplexity(model: &Model, tokens: &[usize], n_patched: usize, seed: u64) -> f32 {
+    loss(model, tokens, n_patched, seed).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Model {
+        Model::init(
+            ModelConfig {
+                vocab: 16,
+                d_model: 16,
+                n_heads: 2,
+                n_layers: 2,
+                d_ff: 32,
+                max_seq: 64,
+                hyper_block: 8,
+                hyper_samples: 8,
+                hyper_base: 16,
+            },
+            0,
+        )
+    }
+
+    #[test]
+    fn forward_shape_finite() {
+        let m = tiny();
+        let toks: Vec<usize> = (0..32).map(|i| i % 16).collect();
+        let logits = forward(&m, &toks, 0, 0);
+        assert_eq!((logits.rows, logits.cols), (32, 16));
+        assert!(logits.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn loss_near_uniform_at_init() {
+        let m = tiny();
+        let toks: Vec<usize> = (0..64).map(|i| (i * 7) % 16).collect();
+        let l = loss(&m, &toks, 0, 0);
+        let uniform = (16f32).ln();
+        assert!((l - uniform).abs() < 1.0, "loss {l} vs ln16 {uniform}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let m = tiny();
+        let toks: Vec<usize> = (0..32).map(|i| i % 16).collect();
+        let a = forward(&m, &toks, 2, 5);
+        let b = forward(&m, &toks, 2, 5);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn patching_changes_long_sequences_only() {
+        let m = tiny();
+        // short sequence (n <= hyper_base): patching is a no-op
+        let short: Vec<usize> = (0..16).map(|i| i % 16).collect();
+        let a = forward(&m, &short, 2, 1);
+        let b = forward(&m, &short, 0, 99);
+        assert!(a.max_abs_diff(&b) < 1e-6);
+        // long sequence: patched layers actually change the output
+        let long: Vec<usize> = (0..64).map(|i| (i * 3) % 16).collect();
+        let a = forward(&m, &long, 2, 1);
+        let b = forward(&m, &long, 0, 1);
+        assert!(a.max_abs_diff(&b) > 1e-6);
+    }
+
+    #[test]
+    fn num_params_sane() {
+        let m = tiny();
+        assert!(m.num_params() > 1000);
+        assert!(m.num_params() < 100_000);
+    }
+
+    #[test]
+    fn layer_norm_rows_standardized() {
+        let mut rng = Rng::new(1);
+        let x = Mat::randn(8, 16, &mut rng);
+        let y = layer_norm(&x, &vec![1.0; 16], &vec![0.0; 16]);
+        for i in 0..8 {
+            let mean: f32 = y.row(i).iter().sum::<f32>() / 16.0;
+            assert!(mean.abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,603 @@
+//! Training loop for the tiny LM: full analytic backward + Adam.
+//!
+//! The paper's protocol needs a *converged* exact-attention model whose
+//! perplexity is then measured with patched layers (no fine-tuning), so
+//! training always runs with exact attention; HyperAttention enters only
+//! at evaluation.  The whole backward is hand-derived (layer norm, GELU,
+//! tied embeddings, attention via [`exact::flash_backward`]) — no
+//! autograd framework, per the repo's build-everything rule.
+
+use super::{gelu, layer_norm, Model};
+use crate::attention::exact;
+use crate::linalg::{matmul, matmul_nt, Mat};
+use crate::model::corpus::Corpus;
+use crate::par;
+use crate::rng::Rng;
+
+/// d/dx of the tanh-approximation GELU.
+fn gelu_grad(x: f32) -> f32 {
+    let c = 0.7978845608f32;
+    let x3 = x * x * x;
+    let t = (c * (x + 0.044715 * x3)).tanh();
+    let dt = (1.0 - t * t) * c * (1.0 + 3.0 * 0.044715 * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * dt
+}
+
+/// Layer-norm backward.  Returns dx; accumulates dg/db.
+fn layer_norm_backward(
+    x: &Mat,
+    g: &[f32],
+    dy: &Mat,
+    dg: &mut [f32],
+    db: &mut [f32],
+) -> Mat {
+    let (n, d) = (x.rows, x.cols);
+    let mut dx = Mat::zeros(n, d);
+    for i in 0..n {
+        let row = x.row(i);
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        let dyr = dy.row(i);
+        // x̂ and the two reduction terms
+        let mut sum_gdy = 0.0f32;
+        let mut sum_gdy_xhat = 0.0f32;
+        for j in 0..d {
+            let xhat = (row[j] - mean) * inv;
+            let gdy = g[j] * dyr[j];
+            sum_gdy += gdy;
+            sum_gdy_xhat += gdy * xhat;
+            dg[j] += dyr[j] * xhat;
+            db[j] += dyr[j];
+        }
+        let dxr = dx.row_mut(i);
+        for j in 0..d {
+            let xhat = (row[j] - mean) * inv;
+            dxr[j] = inv
+                * (g[j] * dyr[j] - sum_gdy / d as f32 - xhat * sum_gdy_xhat / d as f32);
+        }
+    }
+    dx
+}
+
+/// Gradients, mirroring [`Model`].
+pub struct Grads {
+    pub tok_emb: Mat,
+    pub pos_emb: Mat,
+    pub ln_f_g: Vec<f32>,
+    pub ln_f_b: Vec<f32>,
+    pub layers: Vec<LayerGrads>,
+}
+
+pub struct LayerGrads {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub wqkv: Mat,
+    pub wo: Mat,
+    pub w1: Mat,
+    pub b1: Vec<f32>,
+    pub w2: Mat,
+    pub b2: Vec<f32>,
+}
+
+impl Grads {
+    pub fn zeros(m: &Model) -> Self {
+        let d = m.cfg.d_model;
+        Grads {
+            tok_emb: Mat::zeros(m.cfg.vocab, d),
+            pos_emb: Mat::zeros(m.cfg.max_seq, d),
+            ln_f_g: vec![0.0; d],
+            ln_f_b: vec![0.0; d],
+            layers: (0..m.cfg.n_layers)
+                .map(|_| LayerGrads {
+                    ln1_g: vec![0.0; d],
+                    ln1_b: vec![0.0; d],
+                    ln2_g: vec![0.0; d],
+                    ln2_b: vec![0.0; d],
+                    wqkv: Mat::zeros(d, 3 * d),
+                    wo: Mat::zeros(d, d),
+                    w1: Mat::zeros(d, m.cfg.d_ff),
+                    b1: vec![0.0; m.cfg.d_ff],
+                    w2: Mat::zeros(m.cfg.d_ff, d),
+                    b2: vec![0.0; d],
+                })
+                .collect(),
+        }
+    }
+
+    pub fn accumulate(&mut self, other: &Grads) {
+        self.tok_emb.add_assign(&other.tok_emb);
+        self.pos_emb.add_assign(&other.pos_emb);
+        for (a, b) in self.ln_f_g.iter_mut().zip(&other.ln_f_g) {
+            *a += b;
+        }
+        for (a, b) in self.ln_f_b.iter_mut().zip(&other.ln_f_b) {
+            *a += b;
+        }
+        for (l, o) in self.layers.iter_mut().zip(&other.layers) {
+            for (a, b) in l.ln1_g.iter_mut().zip(&o.ln1_g) {
+                *a += b;
+            }
+            for (a, b) in l.ln1_b.iter_mut().zip(&o.ln1_b) {
+                *a += b;
+            }
+            for (a, b) in l.ln2_g.iter_mut().zip(&o.ln2_g) {
+                *a += b;
+            }
+            for (a, b) in l.ln2_b.iter_mut().zip(&o.ln2_b) {
+                *a += b;
+            }
+            l.wqkv.add_assign(&o.wqkv);
+            l.wo.add_assign(&o.wo);
+            l.w1.add_assign(&o.w1);
+            for (a, b) in l.b1.iter_mut().zip(&o.b1) {
+                *a += b;
+            }
+            l.w2.add_assign(&o.w2);
+            for (a, b) in l.b2.iter_mut().zip(&o.b2) {
+                *a += b;
+            }
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        self.tok_emb.scale(s);
+        self.pos_emb.scale(s);
+        for x in self.ln_f_g.iter_mut().chain(self.ln_f_b.iter_mut()) {
+            *x *= s;
+        }
+        for l in &mut self.layers {
+            l.wqkv.scale(s);
+            l.wo.scale(s);
+            l.w1.scale(s);
+            l.w2.scale(s);
+            for x in l
+                .ln1_g
+                .iter_mut()
+                .chain(l.ln1_b.iter_mut())
+                .chain(l.ln2_g.iter_mut())
+                .chain(l.ln2_b.iter_mut())
+                .chain(l.b1.iter_mut())
+                .chain(l.b2.iter_mut())
+            {
+                *x *= s;
+            }
+        }
+    }
+}
+
+struct LayerCache {
+    x0: Mat,        // layer input
+    h1: Mat,        // ln1 output
+    attn_cat: Mat,  // concatenated per-head attention outputs (pre-wo)
+    x1: Mat,        // after attention residual
+    h2: Mat,        // ln2 output
+    ff_pre: Mat,    // h2 @ w1 + b1 (pre-GELU)
+    ff_act: Mat,    // gelu(ff_pre)
+}
+
+/// Forward + backward for one sequence; returns (loss, grads).
+pub fn loss_and_grads(model: &Model, tokens: &[usize]) -> (f32, Grads) {
+    let cfg = &model.cfg;
+    let n = tokens.len();
+    let d = cfg.d_model;
+    let dh = cfg.d_head();
+
+    // ---------------- forward with cache ----------------
+    let mut x = Mat::zeros(n, d);
+    for (i, &t) in tokens.iter().enumerate() {
+        let e = model.tok_emb.row(t);
+        let p = model.pos_emb.row(i);
+        let row = x.row_mut(i);
+        for j in 0..d {
+            row[j] = e[j] + p[j];
+        }
+    }
+    let mut caches: Vec<LayerCache> = Vec::with_capacity(cfg.n_layers);
+    for layer in &model.layers {
+        let x0 = x.clone();
+        let h1 = layer_norm(&x0, &layer.ln1_g, &layer.ln1_b);
+        let qkv = matmul(&h1, &layer.wqkv);
+        let mut attn_cat = Mat::zeros(n, d);
+        for h in 0..cfg.n_heads {
+            let mut q = Mat::zeros(n, dh);
+            let mut k = Mat::zeros(n, dh);
+            let mut v = Mat::zeros(n, dh);
+            for i in 0..n {
+                let row = qkv.row(i);
+                q.row_mut(i).copy_from_slice(&row[h * dh..(h + 1) * dh]);
+                k.row_mut(i)
+                    .copy_from_slice(&row[d + h * dh..d + (h + 1) * dh]);
+                v.row_mut(i)
+                    .copy_from_slice(&row[2 * d + h * dh..2 * d + (h + 1) * dh]);
+            }
+            let a = exact::flash_attention(&q, &k, &v, true, None, 64);
+            for i in 0..n {
+                attn_cat.row_mut(i)[h * dh..(h + 1) * dh].copy_from_slice(a.row(i));
+            }
+        }
+        let attn_out = matmul(&attn_cat, &layer.wo);
+        let mut x1 = x0.clone();
+        x1.add_assign(&attn_out);
+        let h2 = layer_norm(&x1, &layer.ln2_g, &layer.ln2_b);
+        let mut ff_pre = matmul(&h2, &layer.w1);
+        for i in 0..n {
+            let row = ff_pre.row_mut(i);
+            for (j, val) in row.iter_mut().enumerate() {
+                *val += layer.b1[j];
+            }
+        }
+        let mut ff_act = ff_pre.clone();
+        for val in ff_act.data.iter_mut() {
+            *val = gelu(*val);
+        }
+        let mut ff2 = matmul(&ff_act, &layer.w2);
+        for i in 0..n {
+            let row = ff2.row_mut(i);
+            for (j, val) in row.iter_mut().enumerate() {
+                *val += layer.b2[j];
+            }
+        }
+        let mut x2 = x1.clone();
+        x2.add_assign(&ff2);
+        caches.push(LayerCache { x0, h1, attn_cat, x1, h2, ff_pre, ff_act });
+        x = x2;
+    }
+    let xf = x; // pre-final-LN
+    let hf = layer_norm(&xf, &model.ln_f_g, &model.ln_f_b);
+    let logits = matmul_nt(&hf, &model.tok_emb);
+
+    // ---------------- loss + dlogits ----------------
+    let mut grads = Grads::zeros(model);
+    let mut dlogits = Mat::zeros(n, cfg.vocab);
+    let mut total = 0.0f64;
+    let cnt = (n - 1) as f32;
+    for i in 0..n - 1 {
+        let row = logits.row(i);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut lse = 0.0f32;
+        for &l in row {
+            lse += (l - mx).exp();
+        }
+        let lse = mx + lse.ln();
+        total += (lse - row[tokens[i + 1]]) as f64;
+        let drow = dlogits.row_mut(i);
+        for j in 0..cfg.vocab {
+            let p = (row[j] - lse).exp();
+            drow[j] = p / cnt;
+        }
+        drow[tokens[i + 1]] -= 1.0 / cnt;
+    }
+    let loss = (total / cnt as f64) as f32;
+
+    // ---------------- backward ----------------
+    // logits = hf @ tok_embᵀ (tied): dhf = dlogits @ tok_emb;
+    // dtok_emb += dlogitsᵀ @ hf
+    let dhf = matmul(&dlogits, &model.tok_emb);
+    let demb_from_logits = matmul(&dlogits.transpose(), &hf);
+    grads.tok_emb.add_assign(&demb_from_logits);
+
+    let mut dx = layer_norm_backward(&xf, &model.ln_f_g, &dhf, &mut grads.ln_f_g, &mut grads.ln_f_b);
+
+    for (li, layer) in model.layers.iter().enumerate().rev() {
+        let cache = &caches[li];
+        let g = &mut grads.layers[li];
+
+        // --- MLP branch: x2 = x1 + (gelu(h2 w1 + b1) w2 + b2)
+        let dff2 = &dx; // gradient into the MLP output (residual passthrough)
+        // b2
+        for i in 0..n {
+            for (j, &v) in dff2.row(i).iter().enumerate() {
+                g.b2[j] += v;
+            }
+        }
+        g.w2.add_assign(&matmul(&cache.ff_act.transpose(), dff2));
+        let mut dff_act = matmul(dff2, &layer.w2.transpose());
+        for (da, &pre) in dff_act.data.iter_mut().zip(&cache.ff_pre.data) {
+            *da *= gelu_grad(pre);
+        }
+        for i in 0..n {
+            for (j, &v) in dff_act.row(i).iter().enumerate() {
+                g.b1[j] += v;
+            }
+        }
+        g.w1.add_assign(&matmul(&cache.h2.transpose(), &dff_act));
+        let dh2 = matmul(&dff_act, &layer.w1.transpose());
+        let dx1_ln = layer_norm_backward(&cache.x1, &layer.ln2_g, &dh2, &mut g.ln2_g, &mut g.ln2_b);
+        let mut dx1 = dx.clone(); // residual path
+        dx1.add_assign(&dx1_ln);
+
+        // --- attention branch: x1 = x0 + attn_cat @ wo
+        let dattn_out = &dx1;
+        g.wo.add_assign(&matmul(&cache.attn_cat.transpose(), dattn_out));
+        let dattn_cat = matmul(dattn_out, &layer.wo.transpose());
+
+        // per-head attention backward -> dqkv
+        let qkv = matmul(&cache.h1, &layer.wqkv);
+        let mut dqkv = Mat::zeros(n, 3 * d);
+        let head_grads: Vec<(usize, Mat, Mat, Mat)> = par::par_map(cfg.n_heads, |h| {
+            let mut q = Mat::zeros(n, dh);
+            let mut k = Mat::zeros(n, dh);
+            let mut v = Mat::zeros(n, dh);
+            let mut dout = Mat::zeros(n, dh);
+            for i in 0..n {
+                let row = qkv.row(i);
+                q.row_mut(i).copy_from_slice(&row[h * dh..(h + 1) * dh]);
+                k.row_mut(i)
+                    .copy_from_slice(&row[d + h * dh..d + (h + 1) * dh]);
+                v.row_mut(i)
+                    .copy_from_slice(&row[2 * d + h * dh..2 * d + (h + 1) * dh]);
+                dout.row_mut(i)
+                    .copy_from_slice(&dattn_cat.row(i)[h * dh..(h + 1) * dh]);
+            }
+            let (dq, dk, dv) = exact::flash_backward(&q, &k, &v, &dout, true, None, 64);
+            (h, dq, dk, dv)
+        });
+        for (h, dq, dk, dvv) in head_grads {
+            for i in 0..n {
+                dqkv.row_mut(i)[h * dh..(h + 1) * dh].copy_from_slice(dq.row(i));
+                dqkv.row_mut(i)[d + h * dh..d + (h + 1) * dh].copy_from_slice(dk.row(i));
+                dqkv.row_mut(i)[2 * d + h * dh..2 * d + (h + 1) * dh]
+                    .copy_from_slice(dvv.row(i));
+            }
+        }
+        g.wqkv.add_assign(&matmul(&cache.h1.transpose(), &dqkv));
+        let dh1 = matmul(&dqkv, &layer.wqkv.transpose());
+        let dx0_ln = layer_norm_backward(&cache.x0, &layer.ln1_g, &dh1, &mut g.ln1_g, &mut g.ln1_b);
+        let mut dx0 = dx1; // residual path
+        dx0.add_assign(&dx0_ln);
+        dx = dx0;
+    }
+
+    // embeddings: x = tok_emb[tokens] + pos_emb[:n]
+    for (i, &t) in tokens.iter().enumerate() {
+        let drow = dx.row(i);
+        for (j, &v) in drow.iter().enumerate() {
+            grads.tok_emb.row_mut(t)[j] += v;
+            grads.pos_emb.row_mut(i)[j] += v;
+        }
+    }
+
+    (loss, grads)
+}
+
+/// Adam state mirroring the parameter tree (flat per-tensor moments).
+pub struct Adam {
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    t: i32,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(model: &Model, lr: f32) -> Self {
+        let sizes = Self::tensor_sizes(model);
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            m: sizes.iter().map(|&s| vec![0.0; s]).collect(),
+            v: sizes.iter().map(|&s| vec![0.0; s]).collect(),
+        }
+    }
+
+    fn tensor_sizes(model: &Model) -> Vec<usize> {
+        let mut s = vec![
+            model.tok_emb.data.len(),
+            model.pos_emb.data.len(),
+            model.ln_f_g.len(),
+            model.ln_f_b.len(),
+        ];
+        for l in &model.layers {
+            s.extend([
+                l.ln1_g.len(),
+                l.ln1_b.len(),
+                l.ln2_g.len(),
+                l.ln2_b.len(),
+                l.wqkv.data.len(),
+                l.wo.data.len(),
+                l.w1.data.len(),
+                l.b1.len(),
+                l.w2.data.len(),
+                l.b2.len(),
+            ]);
+        }
+        s
+    }
+
+    fn update_one(&mut self, idx: usize, p: &mut [f32], g: &[f32]) {
+        let (m, v) = (&mut self.m[idx], &mut self.v[idx]);
+        let bc1 = 1.0 - self.beta1.powi(self.t);
+        let bc2 = 1.0 - self.beta2.powi(self.t);
+        for i in 0..p.len() {
+            m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g[i];
+            v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g[i] * g[i];
+            let mhat = m[i] / bc1;
+            let vhat = v[i] / bc2;
+            p[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    /// One optimizer step.
+    pub fn step(&mut self, model: &mut Model, grads: &Grads) {
+        self.t += 1;
+        let mut idx = 0;
+        macro_rules! upd {
+            ($p:expr, $g:expr) => {
+                self.update_one(idx, $p, $g);
+                idx += 1;
+            };
+        }
+        upd!(&mut model.tok_emb.data, &grads.tok_emb.data);
+        upd!(&mut model.pos_emb.data, &grads.pos_emb.data);
+        upd!(&mut model.ln_f_g, &grads.ln_f_g);
+        upd!(&mut model.ln_f_b, &grads.ln_f_b);
+        for (l, g) in model.layers.iter_mut().zip(&grads.layers) {
+            upd!(&mut l.ln1_g, &g.ln1_g);
+            upd!(&mut l.ln1_b, &g.ln1_b);
+            upd!(&mut l.ln2_g, &g.ln2_g);
+            upd!(&mut l.ln2_b, &g.ln2_b);
+            upd!(&mut l.wqkv.data, &g.wqkv.data);
+            upd!(&mut l.wo.data, &g.wo.data);
+            upd!(&mut l.w1.data, &g.w1.data);
+            upd!(&mut l.b1, &g.b1);
+            upd!(&mut l.w2.data, &g.w2.data);
+            upd!(&mut l.b2, &g.b2);
+        }
+    }
+}
+
+/// Train on the synthetic corpus; returns the per-step mean loss curve.
+pub fn train(
+    model: &mut Model,
+    corpus: &Corpus,
+    steps: usize,
+    batch: usize,
+    seq_len: usize,
+    lr: f32,
+    seed: u64,
+    verbose: bool,
+) -> Vec<f32> {
+    let mut adam = Adam::new(model, lr);
+    let mut rng = Rng::new(seed);
+    let mut curve = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let seqs = corpus.batch(batch, seq_len, &mut rng);
+        // data-parallel over the batch
+        let results: Vec<(f32, Grads)> =
+            par::par_map(seqs.len(), |i| loss_and_grads(model, &seqs[i]));
+        let mut total_loss = 0.0;
+        let mut grads = Grads::zeros(model);
+        for (l, g) in &results {
+            total_loss += l / batch as f32;
+            grads.accumulate(g);
+        }
+        grads.scale(1.0 / batch as f32);
+        adam.step(model, &grads);
+        curve.push(total_loss);
+        if verbose && (step % 20 == 0 || step + 1 == steps) {
+            println!("  step {step:4}  loss {total_loss:.4}  ppl {:.2}", total_loss.exp());
+        }
+    }
+    curve
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::corpus::CorpusConfig;
+    use crate::model::ModelConfig;
+
+    fn tiny() -> Model {
+        Model::init(
+            ModelConfig {
+                vocab: 16,
+                d_model: 16,
+                n_heads: 2,
+                n_layers: 2,
+                d_ff: 32,
+                max_seq: 64,
+                hyper_block: 8,
+                hyper_samples: 8,
+                hyper_base: 16,
+            },
+            0,
+        )
+    }
+
+    #[test]
+    fn grads_match_finite_difference() {
+        let model = tiny();
+        let toks: Vec<usize> = (0..24).map(|i| (i * 5) % 16).collect();
+        let (_, grads) = loss_and_grads(&model, &toks);
+        let eps = 1e-2;
+        // spot check several parameters across tensor kinds
+        let checks: Vec<(&str, usize, usize)> = vec![
+            ("wqkv", 0, 5),
+            ("wo", 1, 3),
+            ("w1", 0, 7),
+            ("w2", 1, 2),
+            ("tok_emb", 3, 4),
+            ("ln1_g", 0, 2),
+        ];
+        for (name, a, b) in checks {
+            let mut mp = model.clone();
+            let mut mm = model.clone();
+            let analytic = match name {
+                "wqkv" => {
+                    mp.layers[a].wqkv.data[b] += eps;
+                    mm.layers[a].wqkv.data[b] -= eps;
+                    grads.layers[a].wqkv.data[b]
+                }
+                "wo" => {
+                    mp.layers[a].wo.data[b] += eps;
+                    mm.layers[a].wo.data[b] -= eps;
+                    grads.layers[a].wo.data[b]
+                }
+                "w1" => {
+                    mp.layers[a].w1.data[b] += eps;
+                    mm.layers[a].w1.data[b] -= eps;
+                    grads.layers[a].w1.data[b]
+                }
+                "w2" => {
+                    mp.layers[a].w2.data[b] += eps;
+                    mm.layers[a].w2.data[b] -= eps;
+                    grads.layers[a].w2.data[b]
+                }
+                "tok_emb" => {
+                    let i = a * 16 + b;
+                    mp.tok_emb.data[i] += eps;
+                    mm.tok_emb.data[i] -= eps;
+                    grads.tok_emb.data[i]
+                }
+                "ln1_g" => {
+                    mp.layers[a].ln1_g[b] += eps;
+                    mm.layers[a].ln1_g[b] -= eps;
+                    grads.layers[a].ln1_g[b]
+                }
+                _ => unreachable!(),
+            };
+            let lp = super::super::loss(&mp, &toks, 0, 0);
+            let lm = super::super::loss(&mm, &toks, 0, 0);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - analytic).abs() < 2e-2 * (1.0 + fd.abs().max(analytic.abs())),
+                "{name}[{a},{b}]: fd {fd} vs analytic {analytic}"
+            );
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let mut model = tiny();
+        let corpus = Corpus::new(
+            CorpusConfig { vocab: 16, phrase: 8, repeat_p: 0.2, bigram_strength: 0.8 },
+            0,
+        );
+        let curve = train(&mut model, &corpus, 30, 4, 48, 3e-3, 1, false);
+        let early: f32 = curve[..5].iter().sum::<f32>() / 5.0;
+        let late: f32 = curve[curve.len() - 5..].iter().sum::<f32>() / 5.0;
+        assert!(
+            late < early - 0.2,
+            "no learning: early {early:.3} late {late:.3}"
+        );
+    }
+
+    #[test]
+    fn adam_moves_params() {
+        let mut model = tiny();
+        let before = model.layers[0].wqkv.data[0];
+        let toks: Vec<usize> = (0..32).map(|i| i % 16).collect();
+        let (_, grads) = loss_and_grads(&model, &toks);
+        let mut adam = Adam::new(&model, 1e-3);
+        adam.step(&mut model, &grads);
+        assert_ne!(before, model.layers[0].wqkv.data[0]);
+    }
+}

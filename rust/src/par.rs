@@ -1,0 +1,166 @@
+//! Data-parallel substrate: scoped-thread fork/join with dynamic work
+//! stealing, built on `std::thread` only (no rayon in this tree — every
+//! substrate is built from scratch).
+//!
+//! The primitives mirror the three shapes the attention kernels need:
+//! * [`par_for`] — dynamic index-parallel loop (atomic-counter stealing);
+//! * [`par_rows`] — parallel over disjoint row slices of one flat buffer
+//!   (the matmul/attention output pattern);
+//! * [`par_map`] — collect per-index results into a Vec.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads (cached; overridable via HYPERATTN_THREADS).
+pub fn num_threads() -> usize {
+    use std::sync::OnceLock;
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("HYPERATTN_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(4)
+            })
+    })
+}
+
+/// Dynamic parallel `for i in 0..n`, grain-batched atomic stealing.
+pub fn par_for<F: Fn(usize) + Sync>(n: usize, f: F) {
+    if n == 0 {
+        return;
+    }
+    let threads = num_threads().min(n);
+    if threads <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let grain = (n / (threads * 8)).max(1);
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let start = counter.fetch_add(grain, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                for i in start..(start + grain).min(n) {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel over the `rows` disjoint `cols`-sized slices of `data`:
+/// `f(row_index, row_slice)`.  This is the safe replacement for the
+/// "raw-pointer disjoint tile" pattern.
+pub fn par_rows<F: Fn(usize, &mut [f32]) + Sync>(data: &mut [f32], cols: usize, f: F) {
+    assert!(cols > 0 && data.len() % cols == 0);
+    let n = data.len() / cols;
+    let ptr = data.as_mut_ptr() as usize;
+    par_for(n, |i| {
+        // SAFETY: par_for hands out each index exactly once; rows are
+        // disjoint cols-sized slices of `data`.
+        let row = unsafe { std::slice::from_raw_parts_mut((ptr as *mut f32).add(i * cols), cols) };
+        f(i, row);
+    });
+}
+
+/// Parallel map: `out[i] = f(i)`.
+pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let ptr = out.as_mut_ptr() as usize;
+    par_for(n, |i| {
+        // SAFETY: each index written exactly once, Option<T> slot is
+        // pre-initialized to None and replaced wholesale.
+        unsafe {
+            *(ptr as *mut Option<T>).add(i) = Some(f(i));
+        }
+    });
+    out.into_iter().map(|x| x.expect("all slots filled")).collect()
+}
+
+/// Parallel fold-max over f(i) (for τ estimation and norms).
+pub fn par_max<F: Fn(usize) -> f32 + Sync>(n: usize, f: F) -> f32 {
+    use std::sync::Mutex;
+    let best = Mutex::new(f32::NEG_INFINITY);
+    let threads = num_threads().min(n.max(1));
+    let counter = AtomicUsize::new(0);
+    if n == 0 {
+        return f32::NEG_INFINITY;
+    }
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let mut local = f32::NEG_INFINITY;
+                loop {
+                    let i = counter.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local = local.max(f(i));
+                }
+                let mut b = best.lock().unwrap();
+                *b = b.max(local);
+            });
+        }
+    });
+    best.into_inner().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_for_visits_every_index_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        par_for(1000, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_rows_disjoint_writes() {
+        let mut data = vec![0.0f32; 64 * 8];
+        par_rows(&mut data, 8, |i, row| {
+            for (j, x) in row.iter_mut().enumerate() {
+                *x = (i * 8 + j) as f32;
+            }
+        });
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, i as f32);
+        }
+    }
+
+    #[test]
+    fn par_map_ordered() {
+        let v = par_map(257, |i| i * i);
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i * i);
+        }
+    }
+
+    #[test]
+    fn par_max_correct() {
+        let m = par_max(1000, |i| ((i as f32) - 500.0).sin() * (i as f32));
+        let want = (0..1000)
+            .map(|i| ((i as f32) - 500.0).sin() * (i as f32))
+            .fold(f32::NEG_INFINITY, f32::max);
+        assert_eq!(m, want);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        par_for(0, |_| panic!("must not run"));
+        let v = par_map(1, |i| i + 7);
+        assert_eq!(v, vec![7]);
+    }
+}

@@ -1,0 +1,241 @@
+//! Deterministic RNG substrate: xoshiro256++ with splitmix64 seeding.
+//!
+//! The whole stack (LSH projections, sampling matrices, workload
+//! generators, model init) draws from this one generator so every
+//! experiment in EXPERIMENTS.md is reproducible from a single seed.
+//! No external `rand` dependency — this is one of the substrates the
+//! repo builds from scratch.
+
+/// xoshiro256++ PRNG (Blackman & Vigna). Passes BigCrush; 2^256-1 period.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second Box–Muller variate
+    spare: Option<f32>,
+}
+
+#[inline]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed via splitmix64 (never yields the all-zero state).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Rng {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+            spare: None,
+        }
+    }
+
+    /// Derive an independent stream (for per-head / per-layer seeding).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = rotl(self.s[3], 45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        // top 24 bits -> [0,1) with full float precision
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n).  Debiased via rejection (Lemire).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = {
+                let m = (x as u128) * (n as u128);
+                ((m >> 64) as u64, m as u64)
+            };
+            if lo >= n || lo >= n.wrapping_neg() % n {
+                return hi as usize;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (cached pairs).
+    pub fn normal(&mut self) -> f32 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.next_f32();
+            if u1 <= f32::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.next_f32();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (sin, cos) = (core::f32::consts::TAU * u2).sin_cos();
+            self.spare = Some(r * sin);
+            return r * cos;
+        }
+    }
+
+    /// Fill a vec with standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// `m` i.i.d. indices uniform over [0, n) (with replacement).
+    pub fn sample_uniform(&mut self, n: usize, m: usize) -> Vec<usize> {
+        (0..m).map(|_| self.below(n)).collect()
+    }
+
+    /// `m` i.i.d. indices from unnormalized weights (with replacement),
+    /// via inverse-CDF on the prefix sums.  Used for Lemma 2 row-norm
+    /// sampling.
+    pub fn sample_weighted(&mut self, weights: &[f32], m: usize) -> Vec<usize> {
+        let mut cdf = Vec::with_capacity(weights.len());
+        let mut acc = 0.0f64;
+        for &w in weights {
+            acc += w.max(0.0) as f64;
+            cdf.push(acc);
+        }
+        let total = acc;
+        assert!(total > 0.0, "all-zero weights");
+        (0..m)
+            .map(|_| {
+                let u = self.next_f32() as f64 * total;
+                // binary search for the first cdf entry > u
+                match cdf.binary_search_by(|p| {
+                    p.partial_cmp(&u).unwrap_or(std::cmp::Ordering::Less)
+                }) {
+                    Ok(i) => (i + 1).min(weights.len() - 1),
+                    Err(i) => i.min(weights.len() - 1),
+                }
+            })
+            .collect()
+    }
+
+    /// Sample `m` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_distinct(&mut self, n: usize, m: usize) -> Vec<usize> {
+        assert!(m <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..m {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(m);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_mean_variance() {
+        let mut r = Rng::new(7);
+        let n = 100_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.next_f32()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(13);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.below(10);
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn weighted_sampling_proportions() {
+        let mut r = Rng::new(17);
+        let w = [1.0f32, 0.0, 3.0];
+        let samples = r.sample_weighted(&w, 40_000);
+        let c0 = samples.iter().filter(|&&i| i == 0).count() as f64 / 40_000.0;
+        let c1 = samples.iter().filter(|&&i| i == 1).count();
+        let c2 = samples.iter().filter(|&&i| i == 2).count() as f64 / 40_000.0;
+        assert_eq!(c1, 0, "zero-weight index sampled");
+        assert!((c0 - 0.25).abs() < 0.02, "p0 {c0}");
+        assert!((c2 - 0.75).abs() < 0.02, "p2 {c2}");
+    }
+
+    #[test]
+    fn distinct_sampling() {
+        let mut r = Rng::new(19);
+        let s = r.sample_distinct(100, 50);
+        let mut sorted = s.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 50);
+        assert!(s.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn fork_decorrelates() {
+        let mut r = Rng::new(23);
+        let mut a = r.fork(0);
+        let mut b = r.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+}

@@ -1,0 +1,167 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.  Serialized as `artifacts/manifest.json`, parsed
+//! with the in-tree JSON parser ([`crate::json`]).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{self, Value};
+
+/// One AOT-compiled artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: String,
+    pub kind: String,
+    pub causal: bool,
+    pub n: usize,
+    pub d: usize,
+    pub heads: usize,
+    pub inputs: Vec<String>,
+    pub block: Option<usize>,
+    pub samples: Option<usize>,
+    pub base: Option<usize>,
+    pub patched: Option<usize>,
+}
+
+impl ArtifactMeta {
+    fn from_json(v: &Value) -> Result<Self> {
+        let s = |key: &str| -> Result<String> {
+            v.get(key)
+                .and_then(Value::as_str)
+                .map(String::from)
+                .with_context(|| format!("artifact missing string field {key:?}"))
+        };
+        let u = |key: &str| v.get(key).and_then(Value::as_usize);
+        Ok(ArtifactMeta {
+            name: s("name")?,
+            path: s("path")?,
+            kind: s("kind")?,
+            causal: v.get("causal").and_then(Value::as_bool).unwrap_or(false),
+            n: u("n").unwrap_or(0),
+            d: u("d").unwrap_or(0),
+            heads: u("heads").unwrap_or(0),
+            inputs: v
+                .get("inputs")
+                .and_then(Value::as_array)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|x| x.as_str().map(String::from))
+                        .collect()
+                })
+                .unwrap_or_default(),
+            block: u("block"),
+            samples: u("samples"),
+            base: u("base"),
+            patched: u("patched"),
+        })
+    }
+}
+
+/// The full artifacts directory description.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub format: String,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text).context("parsing manifest.json")?;
+        let format = v
+            .get("format")
+            .and_then(Value::as_str)
+            .context("manifest missing format")?
+            .to_string();
+        if format != "hlo-text" {
+            bail!("unsupported artifact format {format:?}");
+        }
+        let artifacts = v
+            .get("artifacts")
+            .and_then(Value::as_array)
+            .context("manifest missing artifacts")?
+            .iter()
+            .map(ArtifactMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { format, artifacts })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Attention artifacts of a given kind/causality, sorted by n.
+    pub fn attention_sizes(&self, kind: &str, causal: bool) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.causal == causal)
+            .collect();
+        v.sort_by_key(|a| a.n);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "format": "hlo-text",
+        "artifacts": [
+            {"name": "attn_exact_128", "path": "attn_exact_128.hlo.txt",
+             "kind": "attn_exact", "causal": false, "heads": 4, "n": 128,
+             "d": 64, "inputs": ["q","k","v"]},
+            {"name": "attn_hyper_256", "path": "attn_hyper_256.hlo.txt",
+             "kind": "attn_hyper", "causal": false, "heads": 4, "n": 256,
+             "d": 64, "inputs": ["q","k","v","seed"], "block": 32,
+             "samples": 64},
+            {"name": "attn_exact_causal_128", "path": "x.hlo.txt",
+             "kind": "attn_exact", "causal": true, "heads": 4, "n": 128,
+             "d": 64, "inputs": ["q","k","v"]}
+        ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        let a = m.get("attn_hyper_256").unwrap();
+        assert_eq!(a.block, Some(32));
+        assert_eq!(a.samples, Some(64));
+        assert!(!a.causal);
+        assert_eq!(a.inputs, vec!["q", "k", "v", "seed"]);
+    }
+
+    #[test]
+    fn attention_sizes_filtered_sorted() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let ex = m.attention_sizes("attn_exact", false);
+        assert_eq!(ex.len(), 1);
+        assert_eq!(ex[0].n, 128);
+        let exc = m.attention_sizes("attn_exact", true);
+        assert_eq!(exc.len(), 1);
+        assert!(exc[0].causal);
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"format": "hlo-text"}"#).is_err());
+        assert!(
+            Manifest::parse(r#"{"format": "hlo-text", "artifacts": [{"name": "x"}]}"#).is_err()
+        );
+    }
+}

@@ -1,0 +1,233 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  Executables are compiled lazily and
+//! cached per artifact name.  Python never runs here — the HLO text in
+//! `artifacts/` is the entire interface to layers 1/2.
+//!
+//! `PjRtClient` is `Rc`-internal (not `Send`), so a [`Runtime`] is
+//! thread-affine; the coordinator hosts it on a dedicated engine thread
+//! (see `coordinator::engine`).
+
+mod manifest;
+
+pub use manifest::{ArtifactMeta, Manifest};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow as eyre, Context, Result};
+
+/// A loaded PJRT runtime over one artifacts directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open `dir` (must contain `manifest.json`) on the CPU PJRT client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .context("loading artifact manifest")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| eyre!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest, dir, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| eyre!("unknown artifact {name}"))?;
+        let path = self.dir.join(&meta.path);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| eyre!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| eyre!("compiling {name}: {e:?}"))?,
+        );
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of artifacts compiled so far (cache introspection).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Execute an attention artifact: inputs (h, n, d) row-major flat.
+    /// `seed` is appended for hyper artifacts (signature has 4 params).
+    pub fn run_attention(
+        &self,
+        name: &str,
+        h: usize,
+        n: usize,
+        d: usize,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        seed: Option<i32>,
+    ) -> Result<Vec<f32>> {
+        let len = h * n * d;
+        anyhow::ensure!(
+            q.len() == len && k.len() == len && v.len() == len,
+            "input length mismatch: want {len}"
+        );
+        let exe = self.executable(name)?;
+        let dims = [h as i64, n as i64, d as i64];
+        let to_lit = |x: &[f32]| -> Result<xla::Literal> {
+            xla::Literal::vec1(x)
+                .reshape(&dims)
+                .map_err(|e| eyre!("reshape: {e:?}"))
+        };
+        let mut args = vec![to_lit(q)?, to_lit(k)?, to_lit(v)?];
+        if let Some(s) = seed {
+            args.push(xla::Literal::scalar(s));
+        }
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| eyre!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| eyre!("fetch result: {e:?}"))?;
+        // artifacts lower with return_tuple=True -> 1-tuple
+        let out = result.to_tuple1().map_err(|e| eyre!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| eyre!("to_vec: {e:?}"))
+    }
+
+    /// Execute an `lm_loss_*` artifact: tokens (n,) i32 + seed → scalar loss.
+    pub fn run_lm_loss(&self, name: &str, tokens: &[i32], seed: i32) -> Result<f32> {
+        let exe = self.executable(name)?;
+        let toks = xla::Literal::vec1(tokens);
+        let args = vec![toks, xla::Literal::scalar(seed)];
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| eyre!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| eyre!("fetch result: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| eyre!("untuple: {e:?}"))?;
+        out.get_first_element::<f32>()
+            .map_err(|e| eyre!("scalar: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::open(&dir).unwrap();
+        assert!(rt.manifest().artifacts.len() >= 12);
+        assert!(rt.manifest().get("attn_exact_128").is_some());
+        assert!(rt.manifest().get("nope").is_none());
+    }
+
+    #[test]
+    fn exact_artifact_matches_substrate() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::open(&dir).unwrap();
+        let (h, n, d) = (4usize, 128usize, 64usize);
+        let mut rng = crate::rng::Rng::new(0);
+        let q: Vec<f32> = rng.normal_vec(h * n * d);
+        let k: Vec<f32> = rng.normal_vec(h * n * d);
+        let v: Vec<f32> = rng.normal_vec(h * n * d);
+        let out = rt
+            .run_attention("attn_exact_128", h, n, d, &q, &k, &v, None)
+            .unwrap();
+        assert_eq!(out.len(), h * n * d);
+        // per-head compare against the pure-Rust exact substrate
+        use crate::linalg::Mat;
+        for head in 0..h {
+            let sl = |x: &[f32]| {
+                Mat::from_vec(n, d, x[head * n * d..(head + 1) * n * d].to_vec())
+            };
+            let exact = crate::attention::exact::naive_attention(
+                &sl(&q),
+                &sl(&k),
+                &sl(&v),
+                false,
+                None,
+            );
+            let got = sl(&out);
+            let diff = exact.max_abs_diff(&got);
+            assert!(diff < 1e-4, "head {head} diff {diff}");
+        }
+    }
+
+    #[test]
+    fn hyper_artifact_runs_finite() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::open(&dir).unwrap();
+        let (h, n, d) = (4usize, 128usize, 64usize);
+        let mut rng = crate::rng::Rng::new(1);
+        let q: Vec<f32> = rng.normal_vec(h * n * d);
+        let k: Vec<f32> = rng.normal_vec(h * n * d);
+        let v: Vec<f32> = rng.normal_vec(h * n * d);
+        for name in ["attn_hyper_128", "attn_hyper_causal_128"] {
+            let out = rt
+                .run_attention(name, h, n, d, &q, &k, &v, Some(7))
+                .unwrap();
+            assert_eq!(out.len(), h * n * d);
+            assert!(out.iter().all(|x| x.is_finite()), "{name}");
+        }
+    }
+
+    #[test]
+    fn executable_cache_reuses() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::open(&dir).unwrap();
+        assert_eq!(rt.compiled_count(), 0);
+        let _ = rt.executable("attn_exact_128").unwrap();
+        let _ = rt.executable("attn_exact_128").unwrap();
+        assert_eq!(rt.compiled_count(), 1);
+    }
+
+    #[test]
+    fn lm_loss_runs() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::open(&dir).unwrap();
+        let toks: Vec<i32> = (0..256).map(|i| (i * 7 % 256) as i32).collect();
+        let loss = rt.run_lm_loss("lm_loss_256_p0", &toks, 0).unwrap();
+        // random-init byte LM: loss near ln(256) ≈ 5.55
+        assert!(loss > 2.0 && loss < 10.0, "loss {loss}");
+    }
+}

@@ -1,0 +1,298 @@
+//! Integration tests: full coordinator stacks, runtime-vs-substrate
+//! agreement over real AOT artifacts, and randomized property tests
+//! (in-tree generator + many-case loops; no external proptest crate)
+//! over the router/batcher invariants.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hyperattention::attention::exact;
+use hyperattention::attention::hyper::{hyper_attention, HyperParams};
+use hyperattention::attention::measure;
+use hyperattention::coordinator::batcher::{BatchConfig, BatchQueue};
+use hyperattention::coordinator::{
+    AttnJob, Backend, ModePreference, Router, RouterConfig, Server, ServerConfig,
+};
+use hyperattention::linalg::Mat;
+use hyperattention::rng::Rng;
+use hyperattention::runtime::{Manifest, Runtime};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn mk_job(heads: usize, n: usize, d: usize, causal: bool, mode: ModePreference, seed: i32) -> AttnJob {
+    let mut rng = Rng::new(seed as u64);
+    let len = heads * n * d;
+    AttnJob {
+        id: 0,
+        heads,
+        n,
+        d,
+        q: rng.normal_vec(len),
+        k: rng.normal_vec(len),
+        v: rng.normal_vec(len),
+        causal,
+        mode,
+        seed,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// coordinator end-to-end over the real artifacts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn coordinator_routes_to_artifacts_and_matches_substrate() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut cfg = ServerConfig::with_artifacts(&dir);
+    cfg.router.hyper_threshold = 1 << 20; // force exact routing
+    let server = Server::start(cfg);
+
+    // exact artifact shape: must be served by PJRT
+    let job = mk_job(4, 128, 64, false, ModePreference::Exact, 3);
+    let job_copy = job.clone();
+    let resp = server.submit_wait(job).unwrap();
+    assert!(matches!(resp.backend, Backend::Artifact(ref n) if n == "attn_exact_128"));
+
+    // output must match the pure-Rust substrate per head
+    let per = 128 * 64;
+    for head in 0..4 {
+        let sl = |x: &[f32]| Mat::from_vec(128, 64, x[head * per..(head + 1) * per].to_vec());
+        let want = exact::naive_attention(
+            &sl(&job_copy.q),
+            &sl(&job_copy.k),
+            &sl(&job_copy.v),
+            false,
+            None,
+        );
+        let got = sl(&resp.out);
+        assert!(want.max_abs_diff(&got) < 1e-4, "head {head}");
+    }
+
+    // off-artifact shape: substrate fallback
+    let resp2 = server
+        .submit_wait(mk_job(4, 96, 64, false, ModePreference::Exact, 4))
+        .unwrap();
+    assert_eq!(resp2.backend, Backend::Substrate);
+    server.shutdown();
+}
+
+#[test]
+fn coordinator_hyper_artifact_roundtrip() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut cfg = ServerConfig::with_artifacts(&dir);
+    cfg.router.hyper_threshold = 0; // everything hyper
+    let server = Server::start(cfg);
+    for causal in [false, true] {
+        let resp = server
+            .submit_wait(mk_job(4, 256, 64, causal, ModePreference::Hyper, 5))
+            .unwrap();
+        assert!(
+            matches!(resp.backend, Backend::Artifact(_)),
+            "expected artifact backend, causal={causal}"
+        );
+        assert!(resp.out.iter().all(|x| x.is_finite()));
+    }
+    server.shutdown();
+}
+
+#[test]
+fn mixed_concurrent_load_completes() {
+    let server = Arc::new(Server::start(ServerConfig::substrate_only()));
+    let mut handles = Vec::new();
+    for i in 0..32i32 {
+        let s = server.clone();
+        handles.push(std::thread::spawn(move || {
+            let n = [32usize, 48, 64, 128][i as usize % 4];
+            let mode = [ModePreference::Auto, ModePreference::Exact, ModePreference::Hyper]
+                [i as usize % 3];
+            s.submit_wait(mk_job(2, n, 16, i % 2 == 0, mode, i))
+        }));
+    }
+    for h in handles {
+        let r = h.join().unwrap().unwrap();
+        assert!(r.out.iter().all(|x| x.is_finite()));
+    }
+    assert_eq!(
+        server
+            .metrics()
+            .jobs_completed
+            .load(std::sync::atomic::Ordering::Relaxed),
+        32
+    );
+}
+
+#[test]
+fn runtime_lm_loss_patched_ordering() {
+    // The lm_loss artifacts bake a random-init model; patched variants
+    // must still produce finite losses in a sane band.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::open(&dir).unwrap();
+    let toks: Vec<i32> = (0..256).map(|i| (i * 31 % 251) as i32).collect();
+    for p in [0usize, 2, 4] {
+        let name = format!("lm_loss_256_p{p}");
+        if rt.manifest().get(&name).is_none() {
+            continue;
+        }
+        let loss = rt.run_lm_loss(&name, &toks, 1).unwrap();
+        assert!(loss.is_finite() && loss > 1.0 && loss < 20.0, "{name}: {loss}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// property tests (randomized, in-tree generator)
+// ---------------------------------------------------------------------------
+
+/// Router: policy is monotone in n — once Auto routes to Hyper at n, it
+/// routes to Hyper for all larger n.
+#[test]
+fn prop_router_threshold_monotone() {
+    let mut rng = Rng::new(0xD00D);
+    for _ in 0..200 {
+        let threshold = 1 + rng.below(8192);
+        let router = Router::new(
+            RouterConfig { hyper_threshold: threshold, ..Default::default() },
+            None,
+        );
+        let n1 = 1 + rng.below(16384);
+        let n2 = n1 + rng.below(16384);
+        let kind_of = |n: usize| {
+            let j = mk_job(1, n, 8, false, ModePreference::Auto, 0);
+            router.pick_kind(&j)
+        };
+        use hyperattention::coordinator::RouteKind;
+        if kind_of(n1) == RouteKind::Hyper {
+            assert_eq!(kind_of(n2), RouteKind::Hyper, "threshold {threshold}, n {n1}->{n2}");
+        }
+    }
+}
+
+/// Router: an artifact route always shape-matches the job exactly.
+#[test]
+fn prop_router_artifact_shape_exact() {
+    let manifest = Manifest::parse(
+        r#"{"format":"hlo-text","artifacts":[
+            {"name":"a128","path":"a","kind":"attn_exact","causal":false,"heads":4,"n":128,"d":64},
+            {"name":"h256","path":"b","kind":"attn_hyper","causal":false,"heads":4,"n":256,"d":64},
+            {"name":"h256c","path":"c","kind":"attn_hyper","causal":true,"heads":4,"n":256,"d":64}
+        ]}"#,
+    )
+    .unwrap();
+    let router = Router::new(
+        RouterConfig { hyper_threshold: 200, ..Default::default() },
+        Some(&manifest),
+    );
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..300 {
+        let n = 1 + rng.below(512);
+        let heads = 1 + rng.below(8);
+        let d = [16, 32, 64][rng.below(3)];
+        let causal = rng.below(2) == 1;
+        let job = mk_job(heads, n, d, causal, ModePreference::Auto, 0);
+        let route = router.route(&job);
+        if let Some(name) = &route.artifact {
+            let meta = manifest.get(name).unwrap();
+            assert_eq!(meta.n, n);
+            assert_eq!(meta.heads, heads);
+            assert_eq!(meta.d, d);
+            assert_eq!(meta.causal, causal);
+        }
+    }
+}
+
+/// Batcher: never exceeds max_batch, never drops or duplicates items,
+/// never holds an item past its deadline at tick time.
+#[test]
+fn prop_batcher_conservation_and_caps() {
+    let mut rng = Rng::new(0xCAFE);
+    for case in 0..100 {
+        let max_batch = 1 + rng.below(8);
+        let max_wait = Duration::from_millis(1 + rng.below(20) as u64);
+        let mut q: BatchQueue<u8, u64> =
+            BatchQueue::new(BatchConfig { max_batch, max_wait });
+        let t0 = Instant::now();
+        let n_items = 1 + rng.below(100);
+        let mut emitted: Vec<u64> = Vec::new();
+        let mut now = t0;
+        for item in 0..n_items as u64 {
+            now += Duration::from_micros(rng.below(3000) as u64);
+            let key = (rng.below(3)) as u8;
+            if let Some((_, batch)) = q.push(key, item, now) {
+                assert!(batch.len() <= max_batch, "case {case}: batch too big");
+                emitted.extend(batch);
+            }
+            if rng.below(4) == 0 {
+                for (_, batch) in q.tick(now) {
+                    assert!(batch.len() <= max_batch);
+                    emitted.extend(batch);
+                }
+            }
+        }
+        for (_, batch) in q.drain() {
+            emitted.extend(batch);
+        }
+        emitted.sort_unstable();
+        let want: Vec<u64> = (0..n_items as u64).collect();
+        assert_eq!(emitted, want, "case {case}: items lost or duplicated");
+        assert_eq!(q.depth(), 0);
+    }
+}
+
+/// Batcher: after tick(now), no queued item is older than max_wait.
+#[test]
+fn prop_batcher_deadline_respected() {
+    let mut rng = Rng::new(0xF00D);
+    for _ in 0..50 {
+        let max_wait = Duration::from_millis(5);
+        let mut q: BatchQueue<u8, u64> =
+            BatchQueue::new(BatchConfig { max_batch: 1000, max_wait });
+        let t0 = Instant::now();
+        let mut now = t0;
+        for item in 0..50u64 {
+            now += Duration::from_millis(rng.below(3) as u64);
+            q.push((item % 4) as u8, item, now);
+            let _ = q.tick(now);
+            // after a tick, the next deadline must be in the future
+            if let Some(dl) = q.next_deadline() {
+                assert!(dl > now, "stale item survived tick");
+            }
+        }
+    }
+}
+
+/// Spectral guarantee (Eq. 1) as a property: over random clustered
+/// workloads, the error with m = n samples stays below a practical bound.
+#[test]
+fn prop_spectral_guarantee_holds() {
+    for seed in 0..5u64 {
+        let n = 128;
+        let (q, k, v) = hyperattention::bench::clustered_qkv(seed, n, 16, 8, 0.3);
+        let p = HyperParams { block: 32, samples: n, ..Default::default() };
+        let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(seed));
+        let err = measure::spectral_error(&out, &q, &k, &v, false, None);
+        assert!(err < 0.8, "seed {seed}: spectral err {err}");
+    }
+}
+
+/// Substrate determinism across the full coordinator stack.
+#[test]
+fn coordinator_deterministic_for_fixed_seed() {
+    let server = Server::start(ServerConfig::substrate_only());
+    let job = || mk_job(2, 64, 16, false, ModePreference::Hyper, 42);
+    let a = server.submit_wait(job()).unwrap();
+    let b = server.submit_wait(job()).unwrap();
+    assert_eq!(a.out, b.out);
+    server.shutdown();
+}
