@@ -50,10 +50,7 @@ impl RowSample {
     pub fn apply(&self, x: &Mat) -> Mat {
         let mut out = x.gather_rows(&self.idx);
         for r in 0..out.rows {
-            let s = self.scale[r];
-            for val in out.row_mut(r) {
-                *val *= s;
-            }
+            crate::kernel::scale(out.row_mut(r), self.scale[r]);
         }
         out
     }

@@ -3,12 +3,16 @@
 //!
 //! `flash_attention` is the "FlashAttention 2" stand-in used as the Fig 4
 //! baseline: two-level blocking, online softmax (never materializes the
-//! n×n matrix), rayon-parallel over query tiles, and causal tile
-//! skipping (upper-triangular key tiles are never touched, giving the
-//! familiar ~2× causal saving).  Θ(n²d) work — the quadratic wall the
-//! paper's algorithm beats.
+//! n×n matrix), thread-parallel over query tiles via the scoped
+//! fork/join substrate in [`crate::par`] (this tree is rayon-free), and
+//! causal tile skipping (upper-triangular key tiles are never touched,
+//! giving the familiar ~2× causal saving).  Each query×key tile is one
+//! register-blocked [`crate::kernel::gemm_nt`] logits panel followed by
+//! the fused max/exp/PV-accumulate kernels.  Θ(n²d) work — the
+//! quadratic wall the paper's algorithm beats.
 
 use super::{softmax_scale, Parts, NEG_INF};
+use crate::kernel;
 use crate::linalg::{dot, Mat};
 use crate::par;
 
@@ -81,6 +85,13 @@ pub fn flash_parts(
     let block = block.max(1);
 
     let mut parts = Parts::empty(n, dv);
+    if n == 0 {
+        return parts;
+    }
+    // Pre-scale Q once so each logits tile is a raw GEMM.
+    let mut qs = q.clone();
+    qs.scale(sc);
+
     // Parallel over query tiles: each tile owns disjoint slices of the
     // output triple, streamed over key tiles with the online softmax.
     let m_ptr = parts.m.as_mut_ptr() as usize;
@@ -91,54 +102,55 @@ pub fn flash_parts(
     par::par_for(tiles.len(), |t| {
         let i0 = tiles[t];
         let i1 = (i0 + block).min(n);
+        let rows = i1 - i0;
         // SAFETY: tiles are disjoint row ranges of the output buffers.
         let m_out =
-            unsafe { std::slice::from_raw_parts_mut((m_ptr as *mut f32).add(i0), i1 - i0) };
+            unsafe { std::slice::from_raw_parts_mut((m_ptr as *mut f32).add(i0), rows) };
         let s_out =
-            unsafe { std::slice::from_raw_parts_mut((s_ptr as *mut f32).add(i0), i1 - i0) };
+            unsafe { std::slice::from_raw_parts_mut((s_ptr as *mut f32).add(i0), rows) };
         let num_out = unsafe {
-            std::slice::from_raw_parts_mut((num_ptr as *mut f32).add(i0 * dv), (i1 - i0) * dv)
+            std::slice::from_raw_parts_mut((num_ptr as *mut f32).add(i0 * dv), rows * dv)
         };
-        m_out.fill(NEG_INF);
-        s_out.fill(0.0);
-        num_out.fill(0.0);
 
-        let mut logits = vec![0.0f32; block];
+        // per-tile logits scratch (rows × key-tile), reused across tiles
+        let mut logits = vec![0.0f32; rows * block];
         for j0 in (0..nk).step_by(block) {
             if causal && j0 > i1 - 1 {
                 break; // tile fully above the diagonal: skip
             }
             let j1 = (j0 + block).min(nk);
-            for (ti, i) in (i0..i1).enumerate() {
-                let qi = q.row(i);
+            let jt = j1 - j0;
+            // logits tile = (Q·sc)[i0..i1] · K[j0..j1]ᵀ in one panel GEMM
+            kernel::gemm_nt(
+                rows,
+                jt,
+                d,
+                &qs.data[i0 * d..],
+                d,
+                &k.data[j0 * d..],
+                d,
+                &mut logits,
+                jt,
+            );
+            for ti in 0..rows {
+                let i = i0 + ti;
                 let jlim = if causal { j1.min(i + 1) } else { j1 };
                 if jlim <= j0 {
                     continue;
                 }
+                // causal masking is a row-prefix: only [j0, jlim) is live
                 let cnt = jlim - j0;
-                let mut bm = NEG_INF;
-                for (t, j) in (j0..jlim).enumerate() {
-                    let l = dot(qi, k.row(j)) * sc;
-                    logits[t] = l;
-                    bm = bm.max(l);
-                }
+                let lrow = &mut logits[ti * jt..ti * jt + cnt];
+                let bm = kernel::hmax(lrow);
                 let m_new = m_out[ti].max(bm);
                 let e_old = (m_out[ti] - m_new).exp();
                 s_out[ti] *= e_old;
                 let nrow = &mut num_out[ti * dv..(ti + 1) * dv];
                 if e_old != 1.0 {
-                    for x in nrow.iter_mut() {
-                        *x *= e_old;
-                    }
+                    kernel::scale(nrow, e_old);
                 }
-                for t in 0..cnt {
-                    let p = (logits[t] - m_new).exp();
-                    s_out[ti] += p;
-                    let vr = v.row(j0 + t);
-                    for (o, &vv) in nrow.iter_mut().zip(vr) {
-                        *o += p * vv;
-                    }
-                }
+                s_out[ti] += kernel::exp_sub_sum(lrow, m_new);
+                kernel::gemm_nn_row(lrow, &v.data[j0 * dv..], dv, nrow);
                 m_out[ti] = m_new;
             }
         }
@@ -161,12 +173,25 @@ pub fn flash_backward(
     scale: Option<f32>,
     block: usize,
 ) -> (Mat, Mat, Mat) {
+    // Forward statistics (recomputed, streaming).
+    let parts = flash_parts(q, k, v, causal, scale, block);
+    flash_backward_with_parts(q, k, v, dout, causal, scale, &parts)
+}
+
+/// [`flash_backward`] given already-computed forward statistics (the
+/// fwd+bwd path has them in hand — no second forward pass).
+pub fn flash_backward_with_parts(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    dout: &Mat,
+    causal: bool,
+    scale: Option<f32>,
+    parts: &Parts,
+) -> (Mat, Mat, Mat) {
     let (n, d) = (q.rows, q.cols);
     let nk = k.rows;
     let sc = softmax_scale(d, scale);
-
-    // Forward statistics (recomputed, streaming).
-    let parts = flash_parts(q, k, v, causal, scale, block);
     let out = parts.finalize();
     let delta: Vec<f32> = (0..n).map(|i| dot(dout.row(i), out.row(i))).collect();
     // log-denominator per row for stable p_ij recomputation

@@ -12,6 +12,7 @@
 //! Total Θ(n·(b + m)·d) — the near-linear path of the paper.
 
 use super::{softmax_scale, Parts, NEG_INF};
+use crate::kernel;
 use crate::linalg::{dot, invert_permutation, Mat};
 use crate::lsh::Lsh;
 use crate::par;
@@ -59,6 +60,10 @@ pub struct HyperPlan {
     /// per-sample base weight (1 for uniform — the per-row rescale is
     /// applied on the fly; Horvitz–Thompson factor for VNorm)
     pub sample_w: Vec<f32>,
+    /// which estimator `sample_w` belongs to.  Stored explicitly: the
+    /// residual weighting must NOT be inferred from the weight values
+    /// (a legitimate VNorm Horvitz–Thompson weight can be exactly 1.0).
+    pub mode: SampleMode,
     pub block: usize,
 }
 
@@ -88,7 +93,16 @@ impl HyperPlan {
                 (idx, wts)
             }
         };
-        HyperPlan { perm_q, perm_k, pos_q, pos_k, sample_idx, sample_w, block }
+        HyperPlan {
+            perm_q,
+            perm_k,
+            pos_q,
+            pos_k,
+            sample_idx,
+            sample_w,
+            mode: p.mode,
+            block,
+        }
     }
 }
 
@@ -107,13 +121,16 @@ pub fn hyper_parts_with_plan(
     plan: &HyperPlan,
 ) -> Parts {
     let n = q.rows;
+    let d = q.cols;
     let dv = v.cols;
-    let sc = softmax_scale(q.cols, p.scale);
+    let sc = softmax_scale(d, p.scale);
     let block = plan.block;
     let nb = n / block;
 
     // ---- (2) exact block-diagonal part, computed in sorted order -------
-    let qs = q.gather_rows(&plan.perm_q);
+    // Pre-scale the gathered Q so each block's logits are one raw GEMM.
+    let mut qs = q.gather_rows(&plan.perm_q);
+    qs.scale(sc);
     let ks = k.gather_rows(&plan.perm_k);
     let vs = v.gather_rows(&plan.perm_k);
 
@@ -131,24 +148,25 @@ pub fn hyper_parts_with_plan(
         let ns = unsafe {
             std::slice::from_raw_parts_mut((n_ptr as *mut f32).add(lo * dv), block * dv)
         };
-        let mut logits = vec![0.0f32; block];
+        // b×b logits tile in one register-blocked GEMM, then fused
+        // max / exp / PV-accumulate per row.
+        let mut logits = vec![0.0f32; block * block];
+        kernel::gemm_nt(
+            block,
+            block,
+            d,
+            &qs.data[lo * d..],
+            d,
+            &ks.data[lo * d..],
+            d,
+            &mut logits,
+            block,
+        );
         for ti in 0..block {
-            let qi = qs.row(lo + ti);
-            let mut mx = NEG_INF;
-            for tj in 0..block {
-                let l = dot(qi, ks.row(lo + tj)) * sc;
-                logits[tj] = l;
-                mx = mx.max(l);
-            }
-            let mut s = 0.0;
-            let nrow = &mut ns[ti * dv..(ti + 1) * dv];
-            for tj in 0..block {
-                let pij = (logits[tj] - mx).exp();
-                s += pij;
-                for (o, &vv) in nrow.iter_mut().zip(vs.row(lo + tj)) {
-                    *o += pij * vv;
-                }
-            }
+            let lrow = &mut logits[ti * block..(ti + 1) * block];
+            let mx = kernel::hmax(lrow);
+            let s = kernel::exp_sub_sum(lrow, mx);
+            kernel::gemm_nn_row(lrow, &vs.data[lo * dv..], dv, &mut ns[ti * dv..(ti + 1) * dv]);
             ms[ti] = mx;
             ss[ti] = s;
         }
@@ -159,7 +177,10 @@ pub fn hyper_parts_with_plan(
     // ---- (3) sampled residual over the unmasked columns ----------------
     let m = plan.sample_idx.len();
     if m > 0 {
-        let ksamp = k.gather_rows(&plan.sample_idx);
+        // fold the softmax scale into the small gathered key copy:
+        // q · (sc·k_j) == sc · (q · k_j)
+        let mut ksamp = k.gather_rows(&plan.sample_idx);
+        ksamp.scale(sc);
         let vsamp = v.gather_rows(&plan.sample_idx);
         let samp_block: Vec<usize> =
             plan.sample_idx.iter().map(|&j| plan.pos_k[j] / block).collect();
@@ -168,50 +189,83 @@ pub fn hyper_parts_with_plan(
         let rm = res.m.as_mut_ptr() as usize;
         let rs = res.s.as_mut_ptr() as usize;
         let rn = res.num.data.as_mut_ptr() as usize;
-        par::par_for(n, |i| {
-            // SAFETY: one row per iteration.
-            let mi = unsafe { &mut *(rm as *mut f32).add(i) };
-            let si = unsafe { &mut *(rs as *mut f32).add(i) };
-            let ni =
-                unsafe { std::slice::from_raw_parts_mut((rn as *mut f32).add(i * dv), dv) };
-            let gq = plan.pos_q[i] / block;
-            let qi = q.row(i);
-            let mut logits = vec![NEG_INF; m];
-            let mut mx = NEG_INF;
-            let mut kept = 0usize;
-            for j in 0..m {
-                if samp_block[j] != gq {
-                    let l = dot(qi, ksamp.row(j)) * sc;
-                    logits[j] = l;
-                    mx = mx.max(l);
-                    kept += 1;
+        // Query panels: one panel×m logits GEMM + thread-local scratch
+        // per panel instead of a fresh `vec![0.0; m]` per row.
+        const PANEL: usize = 64;
+        let npanels = n.div_ceil(PANEL);
+        par::par_for(npanels, |pi| {
+            let i0 = pi * PANEL;
+            let i1 = (i0 + PANEL).min(n);
+            let rows = i1 - i0;
+            // SAFETY: disjoint row ranges per panel.
+            let ms =
+                unsafe { std::slice::from_raw_parts_mut((rm as *mut f32).add(i0), rows) };
+            let ss =
+                unsafe { std::slice::from_raw_parts_mut((rs as *mut f32).add(i0), rows) };
+            let ns = unsafe {
+                std::slice::from_raw_parts_mut((rn as *mut f32).add(i0 * dv), rows * dv)
+            };
+            let mut logits = vec![0.0f32; rows * m];
+            kernel::gemm_nt(
+                rows,
+                m,
+                d,
+                &q.data[i0 * d..],
+                d,
+                &ksamp.data,
+                d,
+                &mut logits,
+                m,
+            );
+            for ti in 0..rows {
+                let i = i0 + ti;
+                let gq = plan.pos_q[i] / block;
+                let lrow = &mut logits[ti * m..(ti + 1) * m];
+                let mut kept = m;
+                for (j, l) in lrow.iter_mut().enumerate() {
+                    if samp_block[j] == gq {
+                        *l = NEG_INF;
+                        kept -= 1;
+                    }
                 }
-            }
-            if kept == 0 {
-                *mi = NEG_INF;
-                *si = 0.0;
-                return;
-            }
-            // uniform: ratio estimator scaling to the (n - block) unmasked
-            // columns; vnorm: Horvitz–Thompson base weights.
-            let uniform_scale = (n - block) as f32 / kept as f32;
-            let mut s = 0.0;
-            for j in 0..m {
-                if logits[j] == NEG_INF {
+                if kept == 0 {
+                    ms[ti] = NEG_INF;
+                    ss[ti] = 0.0;
                     continue;
                 }
-                let w = match /* mode */ plan.sample_w[j] {
-                    w if w == 1.0 => uniform_scale,
-                    w => w,
-                };
-                let pij = w * (logits[j] - mx).exp();
-                s += pij;
-                for (o, &vv) in ni.iter_mut().zip(vsamp.row(j)) {
-                    *o += pij * vv;
+                let mx = kernel::hmax(lrow);
+                let s = kernel::exp_sub_sum(lrow, mx);
+                // restore the exact-zero of masked entries (the clamped
+                // polynomial exp maps -1e30 to ~1e-38, not 0)
+                for (j, l) in lrow.iter_mut().enumerate() {
+                    if samp_block[j] == gq {
+                        *l = 0.0;
+                    }
+                }
+                let nrow = &mut ns[ti * dv..(ti + 1) * dv];
+                match plan.mode {
+                    // ratio estimator scaling to the (n - block)
+                    // unmasked columns
+                    SampleMode::Uniform => {
+                        let us = (n - block) as f32 / kept as f32;
+                        kernel::gemm_nn_row(lrow, &vsamp.data, dv, nrow);
+                        kernel::scale(nrow, us);
+                        ms[ti] = mx;
+                        ss[ti] = us * s;
+                    }
+                    // Horvitz–Thompson base weights
+                    SampleMode::VNorm => {
+                        let mut sw = 0.0;
+                        for (l, &w) in lrow.iter_mut().zip(&plan.sample_w) {
+                            *l *= w;
+                            sw += *l;
+                        }
+                        kernel::gemm_nn_row(lrow, &vsamp.data, dv, nrow);
+                        ms[ti] = mx;
+                        ss[ti] = sw;
+                    }
                 }
             }
-            *mi = mx;
-            *si = s;
         });
         parts.merge(&res);
     }
@@ -238,13 +292,26 @@ pub fn hyper_backward(
     p: &HyperParams,
     plan: &HyperPlan,
 ) -> (Mat, Mat, Mat) {
+    let parts = hyper_parts_with_plan(q, k, v, p, plan);
+    hyper_backward_with_parts(q, k, v, dout, p, plan, &parts)
+}
+
+/// [`hyper_backward`] given the already-computed forward triple (the
+/// fwd+bwd path has it in hand — no second forward pass).
+pub fn hyper_backward_with_parts(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    dout: &Mat,
+    p: &HyperParams,
+    plan: &HyperPlan,
+    parts: &Parts,
+) -> (Mat, Mat, Mat) {
     let n = q.rows;
     let d = q.cols;
     let dv = v.cols;
     let sc = softmax_scale(d, p.scale);
     let block = plan.block;
-
-    let parts = hyper_parts_with_plan(q, k, v, p, plan);
     let out = parts.finalize();
     let lse: Vec<f32> = (0..n)
         .map(|i| parts.m[i] + parts.s[i].max(1e-30).ln())
@@ -291,7 +358,10 @@ pub fn hyper_backward(
                     continue;
                 }
                 let j = plan.sample_idx[t];
-                let w = if plan.sample_w[t] == 1.0 { uniform_scale } else { plan.sample_w[t] };
+                let w = match plan.mode {
+                    SampleMode::Uniform => uniform_scale,
+                    SampleMode::VNorm => plan.sample_w[t],
+                };
                 let p_ij = w * (dot(qi, k.row(j)) * sc - lse[i]).exp();
                 let dl = p_ij * (dot(dout.row(i), v.row(j)) - delta[i]) * sc;
                 for (o, &kv) in dqr.iter_mut().zip(k.row(j)) {
@@ -328,10 +398,11 @@ pub fn hyper_backward(
             if samp_block[t] == gq {
                 continue;
             }
-            let w = if plan.sample_w[t] == 1.0 {
-                (n - block) as f32 / kept_per_block[gq].max(1) as f32
-            } else {
-                plan.sample_w[t]
+            let w = match plan.mode {
+                SampleMode::Uniform => {
+                    (n - block) as f32 / kept_per_block[gq].max(1) as f32
+                }
+                SampleMode::VNorm => plan.sample_w[t],
             };
             let p_ij = w * (dot(q.row(i), k.row(j)) * sc - lse[i]).exp();
             let dl = p_ij * (dot(dout.row(i), v.row(j)) - delta[i]) * sc;
@@ -462,6 +533,72 @@ mod tests {
         let rs_b = naive.row_sums();
         for i in 0..32 {
             assert!((rs_a[i] - rs_b[i]).abs() / rs_b[i] < 1e-4);
+        }
+    }
+
+    #[test]
+    fn full_block_matches_naive_across_shapes() {
+        // Property: block = n, samples = 0 degenerates to exact attention
+        // for every shape (the residual is empty, the "block diagonal" is
+        // the whole matrix).
+        for (seed, n, d, clusters) in
+            [(10u64, 16usize, 4usize, 2usize), (11, 32, 8, 4), (12, 48, 12, 3), (13, 96, 16, 8)]
+        {
+            let (q, k, v) = clustered(seed, n, d, clusters, 0.3);
+            let p = HyperParams { block: n, samples: 0, ..Default::default() };
+            let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(seed + 100));
+            let exact = exact::naive_attention(&q, &k, &v, false, None);
+            let diff = out.max_abs_diff(&exact);
+            assert!(diff < 1e-4, "n={n} d={d}: max abs diff {diff}");
+        }
+    }
+
+    #[test]
+    fn vnorm_unit_weights_not_mistaken_for_uniform() {
+        // All-equal V row norms with samples == n make every
+        // Horvitz–Thompson weight exactly 1.0.  A mode check (not a
+        // weight-value sentinel) must keep them un-rescaled.
+        let (n, d, block) = (8usize, 4usize, 4usize);
+        let (q, k, _) = clustered(20, n, d, 2, 0.3);
+        let v = Mat::from_vec(n, d, vec![1.0; n * d]);
+        let p = HyperParams {
+            block,
+            samples: n,
+            mode: SampleMode::VNorm,
+            ..Default::default()
+        };
+        let plan = HyperPlan::build(&q, &k, &v, &p, &mut Rng::new(21));
+        assert_eq!(plan.mode, SampleMode::VNorm);
+        assert!(
+            plan.sample_w.iter().all(|&w| w == 1.0),
+            "setup should yield exact unit weights, got {:?}",
+            plan.sample_w
+        );
+        let got = hyper_parts_with_plan(&q, &k, &v, &p, &plan);
+
+        // scalar oracle with explicit VNorm semantics (weight w = 1.0)
+        let sc = softmax_scale(d, None);
+        for i in 0..n {
+            let gq = plan.pos_q[i] / block;
+            // block-diagonal keys
+            let mut terms: Vec<f32> = (0..n)
+                .filter(|&j| plan.pos_k[j] / block == gq)
+                .map(|j| dot(q.row(i), k.row(j)) * sc)
+                .collect();
+            // sampled residual keys, weight exactly 1.0 (NOT rescaled)
+            for &j in &plan.sample_idx {
+                if plan.pos_k[j] / block != gq {
+                    terms.push(dot(q.row(i), k.row(j)) * sc);
+                }
+            }
+            let mx = terms.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let want: f32 = terms.iter().map(|&l| (l - mx).exp()).sum();
+            let got_s = got.s[i] * (got.m[i] - mx).exp();
+            assert!(
+                (got_s - want).abs() / want < 1e-3,
+                "row {i}: normalizer {got_s} vs oracle {want} \
+                 (weight-sentinel bug rescales the residual)"
+            );
         }
     }
 

@@ -61,16 +61,12 @@ impl Parts {
     pub fn merge(&mut self, other: &Parts) {
         assert_eq!(self.rows(), other.rows());
         assert_eq!(self.num.cols, other.num.cols);
-        let d = self.num.cols;
         for i in 0..self.rows() {
             let m = self.m[i].max(other.m[i]);
             let e1 = (self.m[i] - m).exp();
             let e2 = (other.m[i] - m).exp();
             self.s[i] = self.s[i] * e1 + other.s[i] * e2;
-            let (a, b) = (self.num.row_mut(i), other.num.row(i));
-            for j in 0..d {
-                a[j] = a[j] * e1 + b[j] * e2;
-            }
+            crate::kernel::scale_merge(self.num.row_mut(i), e1, other.num.row(i), e2);
             self.m[i] = m;
         }
     }
@@ -98,10 +94,7 @@ impl Parts {
     pub fn finalize(&self) -> Mat {
         let mut out = self.num.clone();
         for i in 0..self.rows() {
-            let inv = 1.0 / self.s[i].max(1e-30);
-            for x in out.row_mut(i) {
-                *x *= inv;
-            }
+            crate::kernel::scale(out.row_mut(i), 1.0 / self.s[i].max(1e-30));
         }
         out
     }

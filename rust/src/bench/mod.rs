@@ -9,10 +9,13 @@ use crate::attention::causal::{causal_hyper_attention, causal_hyper_fwd_bwd, Cau
 use crate::attention::exact;
 use crate::attention::hyper::{hyper_attention, hyper_backward, HyperParams, HyperPlan};
 use crate::attention::measure;
+use crate::json::Value;
+use crate::kernel;
 use crate::linalg::Mat;
 use crate::model::corpus::{Corpus, CorpusConfig};
 use crate::model::train::train;
 use crate::model::{perplexity, Model, ModelConfig};
+use crate::par;
 use crate::rng::Rng;
 use crate::tasks::{score_task, task_mixture_batch, TaskKind};
 
@@ -50,14 +53,33 @@ pub fn gaussian_qkv(seed: u64, n: usize, d: usize) -> (Mat, Mat, Mat) {
     )
 }
 
-fn time_it<F: FnMut()>(mut f: F, reps: usize) -> f64 {
-    // one warmup
-    f();
+fn time_it<F: FnMut()>(f: F, reps: usize) -> f64 {
+    time_with(f, reps, true)
+}
+
+/// Timing core; `warmup = false` skips the untimed priming call — for
+/// measurements whose working set dwarfs every cache level anyway
+/// (large-n flash), where the warmup only doubles an already long run.
+fn time_with<F: FnMut()>(mut f: F, reps: usize, warmup: bool) -> f64 {
+    if warmup {
+        f();
+    }
+    let reps = reps.max(1);
     let t0 = Instant::now();
     for _ in 0..reps {
         f();
     }
     t0.elapsed().as_secs_f64() / reps as f64
+}
+
+/// Largest block ≤ `target` that divides `n` (≥ 1): hyper requires
+/// `block | n`, and bench CLI inputs are not pre-validated.
+fn fit_block(n: usize, target: usize) -> usize {
+    let mut b = target.min(n).max(1);
+    while n % b != 0 {
+        b -= 1;
+    }
+    b
 }
 
 /// One Fig 4 measurement row.
@@ -130,11 +152,13 @@ pub fn run_fig4(
                         } else {
                             let plan =
                                 HyperPlan::build(&q, &k, &v, &hp, &mut Rng::new(3));
-                            let _ = crate::attention::hyper::hyper_parts_with_plan(
+                            let parts = crate::attention::hyper::hyper_parts_with_plan(
                                 &q, &k, &v, &hp, &plan,
-                            )
-                            .finalize();
-                            let _ = hyper_backward(&q, &k, &v, &dout, &hp, &plan);
+                            );
+                            let _ = parts.finalize();
+                            let _ = crate::attention::hyper::hyper_backward_with_parts(
+                                &q, &k, &v, &dout, &hp, &plan, &parts,
+                            );
                         }
                     },
                     reps,
@@ -163,6 +187,129 @@ pub fn print_fig4(rows: &[Fig4Row]) {
             r.speedup()
         );
     }
+}
+
+/// One row of the machine-readable attention perf gate.
+#[derive(Clone, Debug)]
+pub struct AttnBenchRow {
+    pub n: usize,
+    pub hyper_s: f64,
+    pub flash_s: f64,
+}
+
+impl AttnBenchRow {
+    pub fn hyper_tokens_per_s(&self) -> f64 {
+        self.n as f64 / self.hyper_s
+    }
+    pub fn flash_tokens_per_s(&self) -> f64 {
+        self.n as f64 / self.flash_s
+    }
+}
+
+/// The machine-readable perf gate (`hyperattn bench --json FILE`):
+///
+/// 1. **SIMD gate** — hyper forward on the clustered workload at
+///    `n = 8192`, single thread, scalar backend vs the best backend this
+///    CPU offers; the reported `speedup` is the constant-factor win the
+///    kernel layer delivers over the seed scalar path.
+/// 2. **Sweep** — tokens/sec for hyper vs flash forward at each `n` in
+///    `sizes` (paper setup: d = 64, b = m = 256), default threads and
+///    backend, so the repo's bench trajectory is recorded run-over-run.
+///
+/// Returns the JSON document; timing state (threads, backend) is
+/// restored before returning.
+pub fn run_attention_bench_json(
+    sizes: &[usize],
+    d: usize,
+    block: usize,
+    samples: usize,
+    reps: usize,
+) -> Value {
+    use std::collections::BTreeMap;
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Value::Str("attention".into()));
+    root.insert("d".into(), Value::Num(d as f64));
+    root.insert("block".into(), Value::Num(block as f64));
+    root.insert("samples".into(), Value::Num(samples as f64));
+
+    // ---- 1) single-thread SIMD-vs-scalar gate at n = 8192 --------------
+    let n_gate = 8192usize;
+    let (q, k, v) = clustered_qkv(42, n_gate, d, 32, 0.5);
+    let hp = HyperParams {
+        block: fit_block(n_gate, block),
+        samples: samples.min(n_gate),
+        ..Default::default()
+    };
+    let prev_isa = kernel::active();
+    par::set_threads(1);
+    kernel::set_isa(kernel::Isa::Scalar);
+    let scalar_s = time_it(
+        || {
+            let _ = hyper_attention(&q, &k, &v, &hp, &mut Rng::new(3));
+        },
+        reps,
+    );
+    let best = kernel::best_available();
+    kernel::set_isa(best);
+    let simd_s = time_it(
+        || {
+            let _ = hyper_attention(&q, &k, &v, &hp, &mut Rng::new(3));
+        },
+        reps,
+    );
+    par::set_threads(0);
+    kernel::set_isa(prev_isa);
+
+    let mut gate = BTreeMap::new();
+    gate.insert("n".into(), Value::Num(n_gate as f64));
+    gate.insert("threads".into(), Value::Num(1.0));
+    gate.insert("isa".into(), Value::Str(best.name().into()));
+    gate.insert("scalar_s".into(), Value::Num(scalar_s));
+    gate.insert("simd_s".into(), Value::Num(simd_s));
+    gate.insert("speedup".into(), Value::Num(scalar_s / simd_s));
+    root.insert("simd_gate".into(), Value::Object(gate));
+
+    // ---- 2) hyper-vs-flash tokens/sec sweep ----------------------------
+    let mut sweep = Vec::new();
+    for &n in sizes {
+        let (q, k, v) = clustered_qkv(42, n, d, 32, 0.5);
+        let hp = HyperParams {
+            block: fit_block(n, block),
+            samples: samples.min(n),
+            ..Default::default()
+        };
+        // skip the warmup once the flash working set is cache-cold anyway
+        let warm = n < 32768;
+        let hyper_s = time_with(
+            || {
+                let _ = hyper_attention(&q, &k, &v, &hp, &mut Rng::new(3));
+            },
+            reps,
+            warm,
+        );
+        let flash_s = time_with(
+            || {
+                let _ = exact::flash_attention(&q, &k, &v, false, None, 64);
+            },
+            reps,
+            warm,
+        );
+        let row = AttnBenchRow { n, hyper_s, flash_s };
+        let mut o = BTreeMap::new();
+        o.insert("n".into(), Value::Num(n as f64));
+        o.insert("hyper_s".into(), Value::Num(hyper_s));
+        o.insert("flash_s".into(), Value::Num(flash_s));
+        o.insert("hyper_tok_s".into(), Value::Num(row.hyper_tokens_per_s()));
+        o.insert("flash_tok_s".into(), Value::Num(row.flash_tokens_per_s()));
+        o.insert("speedup".into(), Value::Num(flash_s / hyper_s));
+        sweep.push(Value::Object(o));
+    }
+    root.insert("sweep".into(), Value::Array(sweep));
+    root.insert(
+        "threads".into(),
+        Value::Num(par::num_threads() as f64),
+    );
+    Value::Object(root)
 }
 
 /// Fig 3 row: perplexity + attention speedup for ℓ patched layers.

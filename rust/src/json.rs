@@ -57,6 +57,62 @@ impl Value {
     }
 }
 
+impl fmt::Display for Value {
+    /// Serialize back to compact RFC 8259 text (round-trips through
+    /// [`parse`]; used by the machine-readable bench emitter).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Null => write!(f, "null"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Num(n) => {
+                if n.is_finite() {
+                    write!(f, "{n}")
+                } else {
+                    write!(f, "null") // JSON has no inf/nan
+                }
+            }
+            Value::Str(s) => write_json_string(f, s),
+            Value::Array(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+            Value::Object(m) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write_json_string(f, k)?;
+                    write!(f, ":{v}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+fn write_json_string(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    write!(f, "\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => write!(f, "\\\"")?,
+            '\\' => write!(f, "\\\\")?,
+            '\n' => write!(f, "\\n")?,
+            '\r' => write!(f, "\\r")?,
+            '\t' => write!(f, "\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    write!(f, "\"")
+}
+
 /// Parse error with byte offset.
 #[derive(Debug)]
 pub struct ParseError {
@@ -285,6 +341,14 @@ mod tests {
     fn escapes_and_unicode() {
         let v = parse(r#""line\nquote\" A é""#).unwrap();
         assert_eq!(v.as_str(), Some("line\nquote\" A é"));
+    }
+
+    #[test]
+    fn display_round_trips() {
+        let src = r#"{"a": [1, 2.5, -3e2], "b": {"nested": true, "s": "q\"\n"}, "c": null}"#;
+        let v = parse(src).unwrap();
+        let printed = v.to_string();
+        assert_eq!(parse(&printed).unwrap(), v, "round trip failed: {printed}");
     }
 
     #[test]

@@ -1,0 +1,387 @@
+//! AVX2 + FMA backend (x86_64).
+//!
+//! Everything here is `unsafe fn` gated on `#[target_feature]`; the
+//! dispatcher in [`super`] only calls in after
+//! `is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")`.
+//!
+//! Highlights:
+//! * `gemm_nt` — 2×4 register-blocked microkernel for the Q·Kᵀ panel
+//!   shape (8 independent FMA accumulators over the shared k stream);
+//! * `gemm_nn_row` — 4-deep k-unrolled row update for the P·V shape
+//!   (one load/store of the output vector amortized over 4 FMAs);
+//! * `exp_sub_sum` — Cephes-style polynomial `exp` (max rel err ≈ 8e-8),
+//!   8 lanes per iteration, fused with the subtract-max and the row sum.
+
+#![cfg(target_arch = "x86_64")]
+#![allow(unsafe_op_in_unsafe_fn)]
+// Safety contract is module-wide (callers go through the dispatcher,
+// which runtime-checks avx2+fma) rather than per-function # Safety docs.
+#![allow(clippy::missing_safety_doc)]
+
+use core::arch::x86_64::*;
+
+/// Horizontal sum of one 8-lane register.
+#[inline]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn hsum256(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let s = _mm_add_ps(lo, hi);
+    let sh = _mm_movehl_ps(s, s);
+    let s2 = _mm_add_ps(s, sh);
+    let sh2 = _mm_shuffle_ps::<0x55>(s2, s2);
+    _mm_cvtss_f32(_mm_add_ss(s2, sh2))
+}
+
+/// Reduce 4 accumulators to their 4 horizontal sums `[Σa, Σb, Σc, Σd]`.
+#[inline]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn hsum4(a: __m256, b: __m256, c: __m256, d: __m256) -> [f32; 4] {
+    let t0 = _mm256_hadd_ps(a, b);
+    let t1 = _mm256_hadd_ps(c, d);
+    let t2 = _mm256_hadd_ps(t0, t1);
+    let lo = _mm256_castps256_ps128(t2);
+    let hi = _mm256_extractf128_ps::<1>(t2);
+    let r = _mm_add_ps(lo, hi);
+    let mut out = [0.0f32; 4];
+    _mm_storeu_ps(out.as_mut_ptr(), r);
+    out
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut acc3 = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + 32 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+        acc1 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(ap.add(i + 8)),
+            _mm256_loadu_ps(bp.add(i + 8)),
+            acc1,
+        );
+        acc2 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(ap.add(i + 16)),
+            _mm256_loadu_ps(bp.add(i + 16)),
+            acc2,
+        );
+        acc3 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(ap.add(i + 24)),
+            _mm256_loadu_ps(bp.add(i + 24)),
+            acc3,
+        );
+        i += 32;
+    }
+    while i + 8 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+        i += 8;
+    }
+    let acc = _mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3));
+    let mut s = hsum256(acc);
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let av = _mm256_set1_ps(alpha);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    let mut i = 0;
+    while i + 8 <= n {
+        let yv = _mm256_fmadd_ps(av, _mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+        _mm256_storeu_ps(yp.add(i), yv);
+        i += 8;
+    }
+    while i < n {
+        y[i] += alpha * x[i];
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn hmax(x: &[f32]) -> f32 {
+    let n = x.len();
+    let xp = x.as_ptr();
+    let mut i = 0;
+    let mut m = f32::NEG_INFINITY;
+    if n >= 8 {
+        let mut mv = _mm256_loadu_ps(xp);
+        i = 8;
+        while i + 8 <= n {
+            mv = _mm256_max_ps(mv, _mm256_loadu_ps(xp.add(i)));
+            i += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), mv);
+        for &l in &lanes {
+            m = m.max(l);
+        }
+    }
+    while i < n {
+        m = m.max(x[i]);
+        i += 1;
+    }
+    m
+}
+
+/// Cephes-style polynomial `exp` on 8 lanes (constants validated to
+/// max rel err ≈ 8e-8 over [-87, 88]; inputs clamped to that range).
+#[inline]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn exp256(x: __m256) -> __m256 {
+    const EXP_HI: f32 = 88.376_26;
+    const EXP_LO: f32 = -87.0;
+    const LOG2EF: f32 = std::f32::consts::LOG2_E;
+    const C1: f32 = 0.693_359_4;
+    const C2: f32 = -2.121_944_4e-4;
+    const P0: f32 = 1.987_569_1e-4;
+    const P1: f32 = 1.398_199_9e-3;
+    const P2: f32 = 8.333_452e-3;
+    const P3: f32 = 4.166_579_6e-2;
+    const P4: f32 = 1.666_666_5e-1;
+    const P5: f32 = 0.5;
+
+    let x = _mm256_min_ps(x, _mm256_set1_ps(EXP_HI));
+    let x = _mm256_max_ps(x, _mm256_set1_ps(EXP_LO));
+    // fx = floor(x * log2(e) + 0.5): the round-to-nearest 2^n split
+    let fx = _mm256_floor_ps(_mm256_fmadd_ps(x, _mm256_set1_ps(LOG2EF), _mm256_set1_ps(0.5)));
+    // r = x - fx*ln2, split into a high and a low part for precision
+    let r = _mm256_fnmadd_ps(fx, _mm256_set1_ps(C1), x);
+    let r = _mm256_fnmadd_ps(fx, _mm256_set1_ps(C2), r);
+    let z = _mm256_mul_ps(r, r);
+    let mut y = _mm256_set1_ps(P0);
+    y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(P1));
+    y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(P2));
+    y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(P3));
+    y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(P4));
+    y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(P5));
+    y = _mm256_fmadd_ps(y, z, r);
+    y = _mm256_add_ps(y, _mm256_set1_ps(1.0));
+    // scale by 2^fx via the exponent field
+    let n = _mm256_cvttps_epi32(fx);
+    let n = _mm256_add_epi32(n, _mm256_set1_epi32(0x7f));
+    let pow2n = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(n));
+    _mm256_mul_ps(y, pow2n)
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn exp_sub_sum(row: &mut [f32], mx: f32) -> f32 {
+    let n = row.len();
+    let rp = row.as_mut_ptr();
+    let mv = _mm256_set1_ps(mx);
+    let mut sum = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + 8 <= n {
+        let e = exp256(_mm256_sub_ps(_mm256_loadu_ps(rp.add(i)), mv));
+        _mm256_storeu_ps(rp.add(i), e);
+        sum = _mm256_add_ps(sum, e);
+        i += 8;
+    }
+    let mut s = hsum256(sum);
+    while i < n {
+        row[i] = (row[i] - mx).exp();
+        s += row[i];
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn scale(x: &mut [f32], s: f32) {
+    let n = x.len();
+    let xp = x.as_mut_ptr();
+    let sv = _mm256_set1_ps(s);
+    let mut i = 0;
+    while i + 8 <= n {
+        _mm256_storeu_ps(xp.add(i), _mm256_mul_ps(_mm256_loadu_ps(xp.add(i)), sv));
+        i += 8;
+    }
+    while i < n {
+        x[i] *= s;
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn scale_merge(a: &mut [f32], e1: f32, b: &[f32], e2: f32) {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let ap = a.as_mut_ptr();
+    let bp = b.as_ptr();
+    let e1v = _mm256_set1_ps(e1);
+    let e2v = _mm256_set1_ps(e2);
+    let mut i = 0;
+    while i + 8 <= n {
+        let merged = _mm256_fmadd_ps(
+            _mm256_loadu_ps(bp.add(i)),
+            e2v,
+            _mm256_mul_ps(_mm256_loadu_ps(ap.add(i)), e1v),
+        );
+        _mm256_storeu_ps(ap.add(i), merged);
+        i += 8;
+    }
+    while i < n {
+        a[i] = a[i] * e1 + b[i] * e2;
+        i += 1;
+    }
+}
+
+/// 2×4 register-blocked `A · Bᵀ` panel microkernel: 8 independent FMA
+/// accumulators per output tile, shared k-stream loads, remainders via
+/// the vector dot.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn gemm_nt(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let op = out.as_mut_ptr();
+    let kv = k & !7; // vectorized prefix of the reduction dim
+    let mut i = 0;
+    while i + 2 <= m {
+        let a0 = ap.add(i * lda);
+        let a1 = ap.add((i + 1) * lda);
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = bp.add(j * ldb);
+            let b1 = bp.add((j + 1) * ldb);
+            let b2 = bp.add((j + 2) * ldb);
+            let b3 = bp.add((j + 3) * ldb);
+            let mut c00 = _mm256_setzero_ps();
+            let mut c01 = _mm256_setzero_ps();
+            let mut c02 = _mm256_setzero_ps();
+            let mut c03 = _mm256_setzero_ps();
+            let mut c10 = _mm256_setzero_ps();
+            let mut c11 = _mm256_setzero_ps();
+            let mut c12 = _mm256_setzero_ps();
+            let mut c13 = _mm256_setzero_ps();
+            let mut kk = 0;
+            while kk < kv {
+                let av0 = _mm256_loadu_ps(a0.add(kk));
+                let av1 = _mm256_loadu_ps(a1.add(kk));
+                let bv0 = _mm256_loadu_ps(b0.add(kk));
+                let bv1 = _mm256_loadu_ps(b1.add(kk));
+                let bv2 = _mm256_loadu_ps(b2.add(kk));
+                let bv3 = _mm256_loadu_ps(b3.add(kk));
+                c00 = _mm256_fmadd_ps(av0, bv0, c00);
+                c01 = _mm256_fmadd_ps(av0, bv1, c01);
+                c02 = _mm256_fmadd_ps(av0, bv2, c02);
+                c03 = _mm256_fmadd_ps(av0, bv3, c03);
+                c10 = _mm256_fmadd_ps(av1, bv0, c10);
+                c11 = _mm256_fmadd_ps(av1, bv1, c11);
+                c12 = _mm256_fmadd_ps(av1, bv2, c12);
+                c13 = _mm256_fmadd_ps(av1, bv3, c13);
+                kk += 8;
+            }
+            let mut r0 = hsum4(c00, c01, c02, c03);
+            let mut r1 = hsum4(c10, c11, c12, c13);
+            // scalar tail over k % 8
+            let mut t = kv;
+            while t < k {
+                let x0 = *a0.add(t);
+                let x1 = *a1.add(t);
+                r0[0] += x0 * *b0.add(t);
+                r0[1] += x0 * *b1.add(t);
+                r0[2] += x0 * *b2.add(t);
+                r0[3] += x0 * *b3.add(t);
+                r1[0] += x1 * *b0.add(t);
+                r1[1] += x1 * *b1.add(t);
+                r1[2] += x1 * *b2.add(t);
+                r1[3] += x1 * *b3.add(t);
+                t += 1;
+            }
+            for c in 0..4 {
+                *op.add(i * ldo + j + c) = r0[c];
+                *op.add((i + 1) * ldo + j + c) = r1[c];
+            }
+            j += 4;
+        }
+        while j < n {
+            let br = std::slice::from_raw_parts(bp.add(j * ldb), k);
+            *op.add(i * ldo + j) = dot(std::slice::from_raw_parts(a0, k), br);
+            *op.add((i + 1) * ldo + j) = dot(std::slice::from_raw_parts(a1, k), br);
+            j += 1;
+        }
+        i += 2;
+    }
+    if i < m {
+        let ar = std::slice::from_raw_parts(ap.add(i * lda), k);
+        for j in 0..n {
+            *op.add(i * ldo + j) =
+                dot(ar, std::slice::from_raw_parts(bp.add(j * ldb), k));
+        }
+    }
+}
+
+/// One output row of `A · B` (NN shape), k unrolled 4-deep so each
+/// load/store of the output vector is amortized over 4 FMAs.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn gemm_nn_row(acoef: &[f32], b: &[f32], ldb: usize, orow: &mut [f32]) {
+    let k = acoef.len();
+    let ncols = orow.len();
+    let bp = b.as_ptr();
+    let op = orow.as_mut_ptr();
+    let cv = ncols & !7;
+    let mut kk = 0;
+    while kk + 4 <= k {
+        let x0 = acoef[kk];
+        let x1 = acoef[kk + 1];
+        let x2 = acoef[kk + 2];
+        let x3 = acoef[kk + 3];
+        if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+            kk += 4;
+            continue;
+        }
+        let a0 = _mm256_set1_ps(x0);
+        let a1 = _mm256_set1_ps(x1);
+        let a2 = _mm256_set1_ps(x2);
+        let a3 = _mm256_set1_ps(x3);
+        let b0 = bp.add(kk * ldb);
+        let b1 = bp.add((kk + 1) * ldb);
+        let b2 = bp.add((kk + 2) * ldb);
+        let b3 = bp.add((kk + 3) * ldb);
+        let mut c = 0;
+        while c < cv {
+            let mut o = _mm256_loadu_ps(op.add(c));
+            o = _mm256_fmadd_ps(a0, _mm256_loadu_ps(b0.add(c)), o);
+            o = _mm256_fmadd_ps(a1, _mm256_loadu_ps(b1.add(c)), o);
+            o = _mm256_fmadd_ps(a2, _mm256_loadu_ps(b2.add(c)), o);
+            o = _mm256_fmadd_ps(a3, _mm256_loadu_ps(b3.add(c)), o);
+            _mm256_storeu_ps(op.add(c), o);
+            c += 8;
+        }
+        while c < ncols {
+            *op.add(c) += x0 * *b0.add(c) + x1 * *b1.add(c) + x2 * *b2.add(c) + x3 * *b3.add(c);
+            c += 1;
+        }
+        kk += 4;
+    }
+    while kk < k {
+        let x = acoef[kk];
+        if x != 0.0 {
+            axpy(x, std::slice::from_raw_parts(bp.add(kk * ldb), ncols), orow);
+        }
+        kk += 1;
+    }
+}

@@ -1,0 +1,377 @@
+//! Runtime-dispatched SIMD microkernel substrate.
+//!
+//! Every attention hot path ([`crate::linalg`], [`crate::attention`])
+//! is written against this module's shape-level primitives; the backend
+//! is picked **once** per process from the CPU:
+//!
+//! * `avx2`   — AVX2 + FMA on x86_64 (runtime-detected);
+//! * `neon`   — NEON on aarch64 (baseline, always available);
+//! * `scalar` — portable fallback (the seed tree's autovectorized loops).
+//!
+//! Set `HYPERATTN_SIMD=scalar` (or `avx2` / `neon` / `auto`) to override
+//! the choice, e.g. for A/B benchmarking; [`set_isa`] does the same
+//! programmatically (used by `hyperattn bench`).  All kernels are
+//! bit-for-bit deterministic for a fixed backend; across backends they
+//! agree to ≤ 1e-4 max abs diff (see `tests/simd_parity.rs` — the FMA
+//! contraction and the polynomial `exp` reorder float rounding).
+//!
+//! The primitives are deliberately shape-level, not BLAS-general:
+//! * [`gemm_nt`]  — `A·Bᵀ` row-major panel (the Q·Kᵀ logits shape);
+//! * [`gemm_nn_row`] — one accumulated row of `A·B` (the P·V shape);
+//! * [`exp_sub_sum`] — fused `exp(x − m)` + row sum (softmax numerator);
+//! * [`dot`], [`axpy`], [`hmax`], [`scale`], [`scale_merge`] — the
+//!   streaming-softmax bookkeeping ops.
+
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Instruction-set backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+}
+
+/// 0 = undecided, 1 = scalar, 2 = avx2, 3 = neon.
+static ISA: AtomicU8 = AtomicU8::new(0);
+
+fn code(isa: Isa) -> u8 {
+    match isa {
+        Isa::Scalar => 1,
+        Isa::Avx2 => 2,
+        Isa::Neon => 3,
+    }
+}
+
+/// Is the backend runnable on this CPU?
+pub fn supported(isa: Isa) -> bool {
+    match isa {
+        Isa::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => {
+            std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+        }
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => true,
+        #[allow(unreachable_patterns)]
+        _ => false,
+    }
+}
+
+/// Best backend the hardware offers (ignores the env override).
+pub fn best_available() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if supported(Isa::Avx2) {
+            Isa::Avx2
+        } else {
+            Isa::Scalar
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        Isa::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        Isa::Scalar
+    }
+}
+
+fn detect() -> Isa {
+    if let Ok(v) = std::env::var("HYPERATTN_SIMD") {
+        let want = match v.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => None,
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "neon" => Some(Isa::Neon),
+            other => {
+                eprintln!(
+                    "HYPERATTN_SIMD={other:?} not recognized (scalar|avx2|neon|auto); using {}",
+                    best_available().name()
+                );
+                None
+            }
+        };
+        if let Some(isa) = want {
+            if supported(isa) {
+                return isa;
+            }
+            eprintln!(
+                "HYPERATTN_SIMD={v} not supported on this CPU; using {}",
+                best_available().name()
+            );
+        }
+    }
+    best_available()
+}
+
+/// The active backend (decided on first use, then cached).
+#[inline]
+pub fn active() -> Isa {
+    match ISA.load(Ordering::Relaxed) {
+        1 => Isa::Scalar,
+        2 => Isa::Avx2,
+        3 => Isa::Neon,
+        _ => {
+            let isa = detect();
+            ISA.store(code(isa), Ordering::Relaxed);
+            isa
+        }
+    }
+}
+
+/// Force a backend (benches / tests).  Returns `false` (and leaves the
+/// selection unchanged) if the CPU can't run it.
+pub fn set_isa(isa: Isa) -> bool {
+    if !supported(isa) {
+        return false;
+    }
+    ISA.store(code(isa), Ordering::Relaxed);
+    true
+}
+
+/// Dispatch one kernel call to the active backend.
+///
+/// SAFETY of the `unsafe` arms: `active()` only ever returns `Avx2` /
+/// `Neon` after `supported()` confirmed the CPU feature, so the
+/// `#[target_feature]` functions are callable.
+macro_rules! dispatch {
+    ($name:ident ( $($arg:expr),* )) => {
+        match active() {
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { avx2::$name($($arg),*) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { neon::$name($($arg),*) },
+            _ => scalar::$name($($arg),*),
+        }
+    };
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch");
+    dispatch!(dot(a, b))
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len(), "axpy length mismatch");
+    dispatch!(axpy(alpha, x, y))
+}
+
+/// Horizontal max (`-inf` for the empty slice).
+#[inline]
+pub fn hmax(x: &[f32]) -> f32 {
+    dispatch!(hmax(x))
+}
+
+/// Fused softmax numerator: `row[i] = exp(row[i] - mx)`, returns the sum.
+#[inline]
+pub fn exp_sub_sum(row: &mut [f32], mx: f32) -> f32 {
+    dispatch!(exp_sub_sum(row, mx))
+}
+
+/// In-place scalar multiply.
+#[inline]
+pub fn scale(x: &mut [f32], s: f32) {
+    dispatch!(scale(x, s))
+}
+
+/// Streaming-softmax merge: `a[i] = a[i] * e1 + b[i] * e2`.
+#[inline]
+pub fn scale_merge(a: &mut [f32], e1: f32, b: &[f32], e2: f32) {
+    assert_eq!(a.len(), b.len(), "scale_merge length mismatch");
+    dispatch!(scale_merge(a, e1, b, e2))
+}
+
+/// `out = A · Bᵀ` on row-major panels: `a` is m×k with row stride `lda`,
+/// `b` is n×k with row stride `ldb`, `out` is m×n with row stride `ldo`.
+/// Overwrites `out`'s m×n window.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    assert!(lda >= k && ldb >= k && ldo >= n, "gemm_nt: stride < extent");
+    assert!(a.len() >= (m - 1) * lda + k, "gemm_nt: a too short");
+    assert!(b.len() >= (n - 1) * ldb + k, "gemm_nt: b too short");
+    assert!(out.len() >= (m - 1) * ldo + n, "gemm_nt: out too short");
+    dispatch!(gemm_nt(m, n, k, a, lda, b, ldb, out, ldo))
+}
+
+/// One accumulated row of `A · B`: `orow += Σ_kk acoef[kk] · b_kk`, with
+/// `b` holding `acoef.len()` rows of stride `ldb`, of which the first
+/// `orow.len()` columns are used.
+///
+/// Zero-coefficient handling: runs of zero coefficients are skipped as a
+/// fast path (the scalar backend skips each one; the SIMD backends skip
+/// aligned groups of 4), but a zero inside a mixed SIMD group still
+/// multiplies — exact for finite `b` (0·x = 0) but NOT a masking
+/// guarantee for NaN/inf rows of `b`.  Callers that must exclude
+/// non-finite rows have to exclude them structurally.
+pub fn gemm_nn_row(acoef: &[f32], b: &[f32], ldb: usize, orow: &mut [f32]) {
+    let k = acoef.len();
+    let ncols = orow.len();
+    if k == 0 || ncols == 0 {
+        return;
+    }
+    assert!(ldb >= ncols, "gemm_nn_row: stride < extent");
+    assert!(b.len() >= (k - 1) * ldb + ncols, "gemm_nn_row: b too short");
+    dispatch!(gemm_nn_row(acoef, b, ldb, orow))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn active_backend_is_supported() {
+        let isa = active();
+        assert!(supported(isa), "active() returned unsupported {isa:?}");
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::new(0);
+        for n in [0usize, 1, 7, 8, 9, 31, 32, 33, 100, 257] {
+            let a = rng.normal_vec(n);
+            let b = rng.normal_vec(n);
+            let want: f64 = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &y)| x as f64 * y as f64)
+                .sum();
+            let got = dot(&a, &b);
+            assert!(
+                (got as f64 - want).abs() < 1e-3,
+                "n={n}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn exp_sub_sum_matches_libm() {
+        let mut rng = Rng::new(1);
+        for n in [1usize, 5, 8, 13, 64, 100] {
+            let row: Vec<f32> = rng.normal_vec(n).iter().map(|x| x * 3.0).collect();
+            let mx = hmax(&row);
+            let mut got = row.clone();
+            let s = exp_sub_sum(&mut got, mx);
+            let mut want_sum = 0.0f32;
+            for (g, &r) in got.iter().zip(&row) {
+                let w = (r - mx).exp();
+                want_sum += w;
+                assert!((g - w).abs() < 1e-5, "exp mismatch: {g} vs {w}");
+            }
+            assert!((s - want_sum).abs() < 1e-3 * (1.0 + want_sum.abs()));
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_dots() {
+        let mut rng = Rng::new(2);
+        let shapes =
+            [(1usize, 1usize, 1usize), (2, 4, 8), (3, 5, 7), (5, 3, 9), (7, 7, 64), (13, 9, 33)];
+        for &(m, n, k) in &shapes {
+            let a = rng.normal_vec(m * k);
+            let b = rng.normal_vec(n * k);
+            let mut out = vec![0.0f32; m * n];
+            gemm_nt(m, n, k, &a, k, &b, k, &mut out, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let want = scalar::dot(&a[i * k..(i + 1) * k], &b[j * k..(j + 1) * k]);
+                    let got = out[i * n + j];
+                    assert!(
+                        (got - want).abs() < 1e-4,
+                        "({m},{n},{k}) at [{i},{j}]: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_nn_row_accumulates() {
+        let mut rng = Rng::new(3);
+        for &(k, c) in &[(1usize, 1usize), (4, 8), (5, 3), (9, 17), (64, 64)] {
+            let acoef = rng.normal_vec(k);
+            let b = rng.normal_vec(k * c);
+            let init = rng.normal_vec(c);
+            let mut orow = init.clone();
+            gemm_nn_row(&acoef, &b, c, &mut orow);
+            for j in 0..c {
+                let mut want = init[j];
+                for kk in 0..k {
+                    want += acoef[kk] * b[kk * c + j];
+                }
+                assert!(
+                    (orow[j] - want).abs() < 1e-4,
+                    "(k={k},c={c}) col {j}: {} vs {want}",
+                    orow[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hmax_and_scale_and_merge() {
+        let mut rng = Rng::new(4);
+        for n in [0usize, 1, 3, 8, 11, 40] {
+            let x = rng.normal_vec(n);
+            let want = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert_eq!(hmax(&x), want);
+
+            let mut s = x.clone();
+            scale(&mut s, 2.5);
+            for (a, b) in s.iter().zip(&x) {
+                assert!((a - 2.5 * b).abs() < 1e-5);
+            }
+
+            let y = rng.normal_vec(n);
+            let mut merged = x.clone();
+            scale_merge(&mut merged, 0.3, &y, 0.7);
+            for i in 0..n {
+                assert!((merged[i] - (x[i] * 0.3 + y[i] * 0.7)).abs() < 1e-5);
+            }
+
+            let mut acc = y.clone();
+            axpy(1.5, &x, &mut acc);
+            for i in 0..n {
+                assert!((acc[i] - (y[i] + 1.5 * x[i])).abs() < 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,321 @@
+//! NEON backend (aarch64).  Mirrors the AVX2 backend at 4-lane width;
+//! NEON is baseline on aarch64, so no runtime detection is needed.
+
+#![cfg(target_arch = "aarch64")]
+#![allow(unsafe_op_in_unsafe_fn)]
+// Safety contract is module-wide (NEON is baseline on aarch64; callers
+// go through the dispatcher) rather than per-function # Safety docs.
+#![allow(clippy::missing_safety_doc)]
+
+use core::arch::aarch64::*;
+
+#[target_feature(enable = "neon")]
+pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut acc2 = vdupq_n_f32(0.0);
+    let mut acc3 = vdupq_n_f32(0.0);
+    let mut i = 0;
+    while i + 16 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+        acc1 = vfmaq_f32(acc1, vld1q_f32(ap.add(i + 4)), vld1q_f32(bp.add(i + 4)));
+        acc2 = vfmaq_f32(acc2, vld1q_f32(ap.add(i + 8)), vld1q_f32(bp.add(i + 8)));
+        acc3 = vfmaq_f32(acc3, vld1q_f32(ap.add(i + 12)), vld1q_f32(bp.add(i + 12)));
+        i += 16;
+    }
+    while i + 4 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+        i += 4;
+    }
+    let acc = vaddq_f32(vaddq_f32(acc0, acc1), vaddq_f32(acc2, acc3));
+    let mut s = vaddvq_f32(acc);
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let av = vdupq_n_f32(alpha);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    let mut i = 0;
+    while i + 4 <= n {
+        vst1q_f32(yp.add(i), vfmaq_f32(vld1q_f32(yp.add(i)), av, vld1q_f32(xp.add(i))));
+        i += 4;
+    }
+    while i < n {
+        y[i] += alpha * x[i];
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn hmax(x: &[f32]) -> f32 {
+    let n = x.len();
+    let xp = x.as_ptr();
+    let mut i = 0;
+    let mut m = f32::NEG_INFINITY;
+    if n >= 4 {
+        let mut mv = vld1q_f32(xp);
+        i = 4;
+        while i + 4 <= n {
+            mv = vmaxq_f32(mv, vld1q_f32(xp.add(i)));
+            i += 4;
+        }
+        m = vmaxvq_f32(mv);
+    }
+    while i < n {
+        m = m.max(x[i]);
+        i += 1;
+    }
+    m
+}
+
+/// Cephes-style polynomial `exp` on 4 lanes (same constants as the AVX2
+/// backend; max rel err ≈ 8e-8 over the clamped range).
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn exp128(x: float32x4_t) -> float32x4_t {
+    const EXP_HI: f32 = 88.376_26;
+    const EXP_LO: f32 = -87.0;
+    const LOG2EF: f32 = std::f32::consts::LOG2_E;
+    const C1: f32 = 0.693_359_4;
+    const C2: f32 = -2.121_944_4e-4;
+    const P0: f32 = 1.987_569_1e-4;
+    const P1: f32 = 1.398_199_9e-3;
+    const P2: f32 = 8.333_452e-3;
+    const P3: f32 = 4.166_579_6e-2;
+    const P4: f32 = 1.666_666_5e-1;
+    const P5: f32 = 0.5;
+
+    let x = vminq_f32(x, vdupq_n_f32(EXP_HI));
+    let x = vmaxq_f32(x, vdupq_n_f32(EXP_LO));
+    let fx = vrndmq_f32(vfmaq_f32(vdupq_n_f32(0.5), x, vdupq_n_f32(LOG2EF)));
+    let r = vfmsq_f32(x, fx, vdupq_n_f32(C1));
+    let r = vfmsq_f32(r, fx, vdupq_n_f32(C2));
+    let z = vmulq_f32(r, r);
+    let mut y = vdupq_n_f32(P0);
+    y = vfmaq_f32(vdupq_n_f32(P1), y, r);
+    y = vfmaq_f32(vdupq_n_f32(P2), y, r);
+    y = vfmaq_f32(vdupq_n_f32(P3), y, r);
+    y = vfmaq_f32(vdupq_n_f32(P4), y, r);
+    y = vfmaq_f32(vdupq_n_f32(P5), y, r);
+    y = vfmaq_f32(r, y, z);
+    y = vaddq_f32(y, vdupq_n_f32(1.0));
+    let n = vaddq_s32(vcvtq_s32_f32(fx), vdupq_n_s32(0x7f));
+    let pow2n = vreinterpretq_f32_s32(vshlq_n_s32::<23>(n));
+    vmulq_f32(y, pow2n)
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn exp_sub_sum(row: &mut [f32], mx: f32) -> f32 {
+    let n = row.len();
+    let rp = row.as_mut_ptr();
+    let mv = vdupq_n_f32(mx);
+    let mut sum = vdupq_n_f32(0.0);
+    let mut i = 0;
+    while i + 4 <= n {
+        let e = exp128(vsubq_f32(vld1q_f32(rp.add(i)), mv));
+        vst1q_f32(rp.add(i), e);
+        sum = vaddq_f32(sum, e);
+        i += 4;
+    }
+    let mut s = vaddvq_f32(sum);
+    while i < n {
+        row[i] = (row[i] - mx).exp();
+        s += row[i];
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn scale(x: &mut [f32], s: f32) {
+    let n = x.len();
+    let xp = x.as_mut_ptr();
+    let sv = vdupq_n_f32(s);
+    let mut i = 0;
+    while i + 4 <= n {
+        vst1q_f32(xp.add(i), vmulq_f32(vld1q_f32(xp.add(i)), sv));
+        i += 4;
+    }
+    while i < n {
+        x[i] *= s;
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn scale_merge(a: &mut [f32], e1: f32, b: &[f32], e2: f32) {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let ap = a.as_mut_ptr();
+    let bp = b.as_ptr();
+    let e1v = vdupq_n_f32(e1);
+    let e2v = vdupq_n_f32(e2);
+    let mut i = 0;
+    while i + 4 <= n {
+        let merged =
+            vfmaq_f32(vmulq_f32(vld1q_f32(ap.add(i)), e1v), vld1q_f32(bp.add(i)), e2v);
+        vst1q_f32(ap.add(i), merged);
+        i += 4;
+    }
+    while i < n {
+        a[i] = a[i] * e1 + b[i] * e2;
+        i += 1;
+    }
+}
+
+/// 2×4 register-blocked `A · Bᵀ` panel microkernel (NEON analogue of the
+/// AVX2 kernel; lane reductions via `vaddvq_f32`).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+pub unsafe fn gemm_nt(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let op = out.as_mut_ptr();
+    let kv = k & !3;
+    let mut i = 0;
+    while i + 2 <= m {
+        let a0 = ap.add(i * lda);
+        let a1 = ap.add((i + 1) * lda);
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = bp.add(j * ldb);
+            let b1 = bp.add((j + 1) * ldb);
+            let b2 = bp.add((j + 2) * ldb);
+            let b3 = bp.add((j + 3) * ldb);
+            let mut c00 = vdupq_n_f32(0.0);
+            let mut c01 = vdupq_n_f32(0.0);
+            let mut c02 = vdupq_n_f32(0.0);
+            let mut c03 = vdupq_n_f32(0.0);
+            let mut c10 = vdupq_n_f32(0.0);
+            let mut c11 = vdupq_n_f32(0.0);
+            let mut c12 = vdupq_n_f32(0.0);
+            let mut c13 = vdupq_n_f32(0.0);
+            let mut kk = 0;
+            while kk < kv {
+                let av0 = vld1q_f32(a0.add(kk));
+                let av1 = vld1q_f32(a1.add(kk));
+                let bv0 = vld1q_f32(b0.add(kk));
+                let bv1 = vld1q_f32(b1.add(kk));
+                let bv2 = vld1q_f32(b2.add(kk));
+                let bv3 = vld1q_f32(b3.add(kk));
+                c00 = vfmaq_f32(c00, av0, bv0);
+                c01 = vfmaq_f32(c01, av0, bv1);
+                c02 = vfmaq_f32(c02, av0, bv2);
+                c03 = vfmaq_f32(c03, av0, bv3);
+                c10 = vfmaq_f32(c10, av1, bv0);
+                c11 = vfmaq_f32(c11, av1, bv1);
+                c12 = vfmaq_f32(c12, av1, bv2);
+                c13 = vfmaq_f32(c13, av1, bv3);
+                kk += 4;
+            }
+            let mut r0 = [vaddvq_f32(c00), vaddvq_f32(c01), vaddvq_f32(c02), vaddvq_f32(c03)];
+            let mut r1 = [vaddvq_f32(c10), vaddvq_f32(c11), vaddvq_f32(c12), vaddvq_f32(c13)];
+            let mut t = kv;
+            while t < k {
+                let x0 = *a0.add(t);
+                let x1 = *a1.add(t);
+                r0[0] += x0 * *b0.add(t);
+                r0[1] += x0 * *b1.add(t);
+                r0[2] += x0 * *b2.add(t);
+                r0[3] += x0 * *b3.add(t);
+                r1[0] += x1 * *b0.add(t);
+                r1[1] += x1 * *b1.add(t);
+                r1[2] += x1 * *b2.add(t);
+                r1[3] += x1 * *b3.add(t);
+                t += 1;
+            }
+            for c in 0..4 {
+                *op.add(i * ldo + j + c) = r0[c];
+                *op.add((i + 1) * ldo + j + c) = r1[c];
+            }
+            j += 4;
+        }
+        while j < n {
+            let br = std::slice::from_raw_parts(bp.add(j * ldb), k);
+            *op.add(i * ldo + j) = dot(std::slice::from_raw_parts(a0, k), br);
+            *op.add((i + 1) * ldo + j) = dot(std::slice::from_raw_parts(a1, k), br);
+            j += 1;
+        }
+        i += 2;
+    }
+    if i < m {
+        let ar = std::slice::from_raw_parts(ap.add(i * lda), k);
+        for j in 0..n {
+            *op.add(i * ldo + j) =
+                dot(ar, std::slice::from_raw_parts(bp.add(j * ldb), k));
+        }
+    }
+}
+
+/// One output row of `A · B` (NN shape), k unrolled 4-deep.
+#[target_feature(enable = "neon")]
+pub unsafe fn gemm_nn_row(acoef: &[f32], b: &[f32], ldb: usize, orow: &mut [f32]) {
+    let k = acoef.len();
+    let ncols = orow.len();
+    let bp = b.as_ptr();
+    let op = orow.as_mut_ptr();
+    let cv = ncols & !3;
+    let mut kk = 0;
+    while kk + 4 <= k {
+        let x0 = acoef[kk];
+        let x1 = acoef[kk + 1];
+        let x2 = acoef[kk + 2];
+        let x3 = acoef[kk + 3];
+        if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+            kk += 4;
+            continue;
+        }
+        let a0 = vdupq_n_f32(x0);
+        let a1 = vdupq_n_f32(x1);
+        let a2 = vdupq_n_f32(x2);
+        let a3 = vdupq_n_f32(x3);
+        let b0 = bp.add(kk * ldb);
+        let b1 = bp.add((kk + 1) * ldb);
+        let b2 = bp.add((kk + 2) * ldb);
+        let b3 = bp.add((kk + 3) * ldb);
+        let mut c = 0;
+        while c < cv {
+            let mut o = vld1q_f32(op.add(c));
+            o = vfmaq_f32(o, a0, vld1q_f32(b0.add(c)));
+            o = vfmaq_f32(o, a1, vld1q_f32(b1.add(c)));
+            o = vfmaq_f32(o, a2, vld1q_f32(b2.add(c)));
+            o = vfmaq_f32(o, a3, vld1q_f32(b3.add(c)));
+            vst1q_f32(op.add(c), o);
+            c += 4;
+        }
+        while c < ncols {
+            *op.add(c) += x0 * *b0.add(c) + x1 * *b1.add(c) + x2 * *b2.add(c) + x3 * *b3.add(c);
+            c += 1;
+        }
+        kk += 4;
+    }
+    while kk < k {
+        let x = acoef[kk];
+        if x != 0.0 {
+            axpy(x, std::slice::from_raw_parts(bp.add(kk * ldb), ncols), orow);
+        }
+        kk += 1;
+    }
+}

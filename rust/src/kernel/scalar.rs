@@ -1,0 +1,101 @@
+//! Portable scalar backend — the correctness reference for every SIMD
+//! kernel and the fallback on targets without AVX2/NEON.
+//!
+//! The loops keep the seed tree's 8-lane unrolled accumulation shape so
+//! LLVM autovectorizes them to whatever the *baseline* target features
+//! allow (SSE2 on x86_64); the explicit backends beat this by using the
+//! full register file, FMA, and a polynomial `exp`.
+
+/// Dot product, 8-lane unrolled accumulation.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        for l in 0..8 {
+            acc[l] += a[i + l] * b[i + l];
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for i in chunks * 8..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (o, &v) in y.iter_mut().zip(x) {
+        *o += alpha * v;
+    }
+}
+
+/// Horizontal max (`-inf` for the empty slice).
+pub fn hmax(x: &[f32]) -> f32 {
+    x.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+}
+
+/// Fused softmax numerator: `row[i] = exp(row[i] - mx)`, returns the sum.
+pub fn exp_sub_sum(row: &mut [f32], mx: f32) -> f32 {
+    let mut s = 0.0;
+    for v in row.iter_mut() {
+        *v = (*v - mx).exp();
+        s += *v;
+    }
+    s
+}
+
+/// In-place scalar multiply.
+pub fn scale(x: &mut [f32], s: f32) {
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Streaming-softmax merge: `a[i] = a[i] * e1 + b[i] * e2`.
+pub fn scale_merge(a: &mut [f32], e1: f32, b: &[f32], e2: f32) {
+    debug_assert_eq!(a.len(), b.len());
+    for (o, &v) in a.iter_mut().zip(b) {
+        *o = *o * e1 + v * e2;
+    }
+}
+
+/// `out = A · Bᵀ` for row-major panels: `out[i*ldo + j] = a_i · b_j`,
+/// with `a` m×k (row stride `lda`), `b` n×k (row stride `ldb`).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    for i in 0..m {
+        let ar = &a[i * lda..i * lda + k];
+        let orow = &mut out[i * ldo..i * ldo + n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = dot(ar, &b[j * ldb..j * ldb + k]);
+        }
+    }
+}
+
+/// One output row of `A · B` (NN shape): `orow += Σ_kk acoef[kk] · b_kk`,
+/// where `b` holds k rows of stride `ldb` and `orow.len()` columns are
+/// used from each.  Zero coefficients are skipped (sparse-P fast path).
+pub fn gemm_nn_row(acoef: &[f32], b: &[f32], ldb: usize, orow: &mut [f32]) {
+    let ncols = orow.len();
+    for (kk, &aik) in acoef.iter().enumerate() {
+        if aik != 0.0 {
+            let brow = &b[kk * ldb..kk * ldb + ncols];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += aik * bv;
+            }
+        }
+    }
+}

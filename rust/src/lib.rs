@@ -18,11 +18,32 @@
 //! decomposition ([`attention::causal`]) — is implemented end to end,
 //! with the measurement machinery for the paper's fine-grained
 //! parameters α and κ in [`attention::measure`].
+//!
+//! ## Kernel dispatch
+//!
+//! Every hot loop bottoms out in [`kernel`] — a runtime-dispatched SIMD
+//! microkernel layer (AVX2+FMA on x86_64, NEON on aarch64, portable
+//! scalar fallback).  The backend is detected once at first use; the
+//! attention/linalg layers above it are backend-agnostic tile-blocked
+//! callers.  This mirrors the paper's note that HyperAttention's
+//! "modular design easily accommodates integration of other fast
+//! low-level implementations": the block-diagonal and sampled-residual
+//! passes are expressed as panel GEMMs + fused softmax primitives, so a
+//! faster microkernel drops in without touching the algorithm.
+//!
+//! ## Environment knobs
+//!
+//! * `HYPERATTN_THREADS=N` — worker-thread count for the [`par`]
+//!   fork/join substrate (default: `available_parallelism`).
+//! * `HYPERATTN_SIMD=scalar|avx2|neon|auto` — force a kernel backend
+//!   (default: best the CPU supports).  Unsupported choices fall back to
+//!   the best available with a warning.
 
 pub mod attention;
 pub mod bench;
 pub mod coordinator;
 pub mod json;
+pub mod kernel;
 pub mod linalg;
 pub mod lsh;
 pub mod model;

@@ -1,9 +1,12 @@
 //! Dense linear-algebra substrate: row-major `Mat` + the handful of
 //! kernels attention needs (no external BLAS — built from scratch).
 //!
-//! The hot paths (`matmul_nt`, `matmul`) are cache-blocked and
-//! thread-parallel over row panels (see [`crate::par`]); everything is f32.
+//! The hot paths (`matmul_nt`, `matmul`, `softmax_rows`) are thin
+//! tile-blocked callers into the runtime-dispatched SIMD microkernels in
+//! [`crate::kernel`] (AVX2/NEON/scalar), thread-parallel over row panels
+//! (see [`crate::par`]); everything is f32.
 
+use crate::kernel;
 use crate::par;
 
 /// Row-major dense matrix.
@@ -85,16 +88,12 @@ impl Mat {
 
     /// In-place scalar multiply.
     pub fn scale(&mut self, s: f32) {
-        for x in &mut self.data {
-            *x *= s;
-        }
+        kernel::scale(&mut self.data, s);
     }
 
     pub fn add_assign(&mut self, other: &Mat) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += b;
-        }
+        kernel::axpy(1.0, &other.data, &mut self.data);
     }
 
     /// Max absolute difference (test helper).
@@ -107,72 +106,60 @@ impl Mat {
     }
 }
 
+/// Dot product (dispatches to the active SIMD backend).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    // 8-lane unrolled accumulation; LLVM autovectorizes this shape well.
-    let chunks = a.len() / 8;
-    let mut acc = [0.0f32; 8];
-    for c in 0..chunks {
-        let i = c * 8;
-        for l in 0..8 {
-            acc[l] += a[i + l] * b[i + l];
-        }
-    }
-    let mut s = acc.iter().sum::<f32>();
-    for i in chunks * 8..a.len() {
-        s += a[i] * b[i];
-    }
-    s
+    kernel::dot(a, b)
 }
 
-/// `A (r×k) * B^T (c×k) -> (r×c)`: the Q·Kᵀ shape.  Row-dot-row is the
-/// cache-optimal layout for row-major inputs; parallel over A rows.
+/// Output-row panel height for the blocked `matmul_nt` (keeps a panel of
+/// A rows plus the streamed B rows inside L1/L2 while amortizing the
+/// fork/join grain).
+const NT_PANEL: usize = 16;
+
+/// `A (r×k) * B^T (c×k) -> (r×c)`: the Q·Kᵀ shape.  Panel-blocked over
+/// output rows; each panel is one register-blocked [`kernel::gemm_nt`]
+/// call, parallel over panels.
 pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.cols, "inner dim mismatch");
-    let mut out = Mat::zeros(a.rows, b.rows);
-    par::par_rows(&mut out.data, b.rows, |i, row| {
-        let ar = a.row(i);
-        for (j, o) in row.iter_mut().enumerate() {
-            *o = dot(ar, b.row(j));
-        }
+    let (m, n, k) = (a.rows, b.rows, a.cols);
+    let mut out = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return out;
+    }
+    par::par_row_blocks(&mut out.data, n, NT_PANEL, |r0, block| {
+        let rows = block.len() / n;
+        kernel::gemm_nt(rows, n, k, &a.data[r0 * k..], k, &b.data, k, block, n);
     });
     out
 }
 
-/// `A (r×k) * B (k×c) -> (r×c)`: the P·V shape.  ikj loop order keeps B
-/// row-contiguous; parallel over A rows.
+/// `A (r×k) * B (k×c) -> (r×c)`: the P·V shape.  Each output row is one
+/// k-unrolled [`kernel::gemm_nn_row`] accumulation (B rows streamed
+/// contiguously); parallel over A rows.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.rows, "inner dim mismatch");
     let mut out = Mat::zeros(a.rows, b.cols);
+    if a.rows == 0 || b.cols == 0 {
+        return out;
+    }
     par::par_rows(&mut out.data, b.cols, |i, orow| {
-        let ar = a.row(i);
-        for (kk, &aik) in ar.iter().enumerate() {
-            if aik != 0.0 {
-                let brow = b.row(kk);
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += aik * bv;
-                }
-            }
-        }
+        kernel::gemm_nn_row(a.row(i), &b.data, b.cols, orow);
     });
     out
 }
 
-/// Numerically-stable softmax of each row, in place.
+/// Numerically-stable softmax of each row, in place (fused max / exp /
+/// normalize via the SIMD kernels).
 pub fn softmax_rows(m: &mut Mat) {
     let cols = m.cols;
+    if m.rows == 0 || cols == 0 {
+        return;
+    }
     par::par_rows(&mut m.data, cols, |_, row| {
-        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut s = 0.0;
-        for x in row.iter_mut() {
-            *x = (*x - mx).exp();
-            s += *x;
-        }
-        let inv = 1.0 / s.max(1e-30);
-        for x in row.iter_mut() {
-            *x *= inv;
-        }
+        let mx = kernel::hmax(row);
+        let s = kernel::exp_sub_sum(row, mx);
+        kernel::scale(row, 1.0 / s.max(1e-30));
     });
 }
 

@@ -81,6 +81,7 @@ USAGE: hyperattn <COMMAND> [OPTIONS]
 
 COMMANDS:
   serve    --artifacts DIR --jobs N --n LEN --heads H --d D
+  bench    [--json FILE] --sizes 4096,16384,65536 --d D --block B --samples M --reps R
   fig4     --sizes 4096,8192,... --d D --block B --samples M [--backward] --reps R
   fig3     --steps S --seq-len N
   table1   --steps S --seq-len N --reps R
@@ -97,6 +98,29 @@ fn main() {
     let args = Args::parse(&argv[1..]);
     match cmd.as_str() {
         "serve" => cmd_serve(&args),
+        "bench" => {
+            let doc = bench::run_attention_bench_json(
+                &args.list("sizes", &[4096, 16384, 65536]),
+                args.get("d", 64usize),
+                args.get("block", 256usize),
+                args.get("samples", 256usize),
+                args.get("reps", 1usize),
+            );
+            let text = doc.to_string();
+            match args.get_str("json") {
+                Some(path) => {
+                    std::fs::write(path, &text).expect("write bench json");
+                    println!("wrote {path}");
+                }
+                None => println!("{text}"),
+            }
+            // human-readable echo of the gate numbers
+            if let Some(gate) = doc.get("simd_gate") {
+                let sp = gate.get("speedup").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                let isa = gate.get("isa").and_then(|v| v.as_str()).unwrap_or("?");
+                println!("simd gate (n=8192, 1 thread): {isa} {sp:.2}x over scalar");
+            }
+        }
         "fig4" => {
             let rows = bench::run_fig4(
                 &args.list("sizes", &[4096, 8192, 16384, 32768]),

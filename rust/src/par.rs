@@ -10,8 +10,16 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Number of worker threads (cached; overridable via HYPERATTN_THREADS).
+/// Runtime override set by [`set_threads`] (0 = none).
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of worker threads: [`set_threads`] override if set, else the
+/// `HYPERATTN_THREADS` env var, else `available_parallelism` (cached).
 pub fn num_threads() -> usize {
+    let o = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o;
+    }
     use std::sync::OnceLock;
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
@@ -25,6 +33,13 @@ pub fn num_threads() -> usize {
                     .unwrap_or(4)
             })
     })
+}
+
+/// Force the worker-thread count at runtime (`0` clears the override and
+/// returns to the env/default behaviour).  Used by the single-thread
+/// perf-gate bench; takes effect for every later `par_*` call.
+pub fn set_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::Relaxed);
 }
 
 /// Dynamic parallel `for i in 0..n`, grain-batched atomic stealing.
@@ -68,6 +83,31 @@ pub fn par_rows<F: Fn(usize, &mut [f32]) + Sync>(data: &mut [f32], cols: usize, 
         // disjoint cols-sized slices of `data`.
         let row = unsafe { std::slice::from_raw_parts_mut((ptr as *mut f32).add(i * cols), cols) };
         f(i, row);
+    });
+}
+
+/// Parallel over contiguous blocks of `rows_per_block` rows of `data`
+/// (the last block may be short): `f(first_row, block_slice)`.  The
+/// multi-row analogue of [`par_rows`], used by the panel GEMM callers.
+pub fn par_row_blocks<F: Fn(usize, &mut [f32]) + Sync>(
+    data: &mut [f32],
+    cols: usize,
+    rows_per_block: usize,
+    f: F,
+) {
+    assert!(cols > 0 && data.len() % cols == 0 && rows_per_block > 0);
+    let n = data.len() / cols;
+    let nb = n.div_ceil(rows_per_block);
+    let ptr = data.as_mut_ptr() as usize;
+    par_for(nb, |bi| {
+        let r0 = bi * rows_per_block;
+        let r1 = ((bi + 1) * rows_per_block).min(n);
+        // SAFETY: par_for hands out each block index exactly once; blocks
+        // are disjoint row ranges of `data`.
+        let block = unsafe {
+            std::slice::from_raw_parts_mut((ptr as *mut f32).add(r0 * cols), (r1 - r0) * cols)
+        };
+        f(r0, block);
     });
 }
 
@@ -155,6 +195,21 @@ mod tests {
             .map(|i| ((i as f32) - 500.0).sin() * (i as f32))
             .fold(f32::NEG_INFINITY, f32::max);
         assert_eq!(m, want);
+    }
+
+    #[test]
+    fn par_row_blocks_covers_all_rows() {
+        let mut data = vec![0.0f32; 37 * 5]; // 37 rows: last block short
+        par_row_blocks(&mut data, 5, 8, |r0, block| {
+            for (r, row) in block.chunks_mut(5).enumerate() {
+                for (c, x) in row.iter_mut().enumerate() {
+                    *x = ((r0 + r) * 5 + c) as f32;
+                }
+            }
+        });
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, i as f32);
+        }
     }
 
     #[test]

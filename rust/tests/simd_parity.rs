@@ -1,0 +1,271 @@
+//! SIMD-vs-scalar parity: every kernel, every backend the CPU offers,
+//! across odd lengths, alignments, and remainder shapes.
+//!
+//! The tests call the backend modules **directly** (not through the
+//! global dispatcher), so they are race-free under the parallel test
+//! harness and never perturb other tests' numerics.  Tolerance is
+//! 1e-4 max abs diff — FMA contraction and the polynomial `exp` reorder
+//! float rounding but must stay far inside that envelope.
+
+use hyperattention::attention::exact::naive_attention;
+use hyperattention::attention::hyper::{hyper_attention, HyperParams};
+use hyperattention::bench::clustered_qkv;
+use hyperattention::kernel::{self, scalar};
+use hyperattention::rng::Rng;
+
+/// Lengths exercising every remainder path of the 8-lane (AVX2) and
+/// 4-lane (NEON) kernels, plus zero and one.
+const LENS: &[usize] = &[
+    0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 24, 31, 32, 33, 63, 64, 65, 100, 127, 128, 129, 255,
+    257,
+];
+
+/// (m, n, k) GEMM shapes covering all microkernel remainders (odd rows,
+/// odd cols, odd reduction, tiny and register-tile-sized).
+const GEMM_SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (1, 4, 8),
+    (2, 4, 8),
+    (2, 5, 9),
+    (3, 3, 3),
+    (3, 7, 11),
+    (4, 4, 64),
+    (5, 9, 17),
+    (7, 6, 33),
+    (8, 8, 7),
+    (13, 11, 65),
+    (16, 16, 64),
+];
+
+const TOL: f32 = 1e-4;
+
+/// Offset slices to stress unaligned loads (SIMD kernels must not
+/// assume 32-byte alignment).
+const OFFSETS: &[usize] = &[0, 1, 3];
+
+/// Run `f` once per non-scalar backend this CPU supports (none on a
+/// plain scalar-only host — the test then passes vacuously).
+fn for_each_simd_backend(f: impl Fn(kernel::Isa)) {
+    for isa in [kernel::Isa::Avx2, kernel::Isa::Neon] {
+        if kernel::supported(isa) {
+            f(isa);
+        }
+    }
+}
+
+/// Dispatch one op to an explicit backend (test-local; keeps the global
+/// dispatcher untouched).
+macro_rules! on_backend {
+    ($isa:expr, $name:ident ( $($arg:expr),* )) => {
+        match $isa {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `supported(Avx2)` was checked by for_each_simd_backend.
+            kernel::Isa::Avx2 => unsafe { hyperattention::kernel::avx2::$name($($arg),*) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is baseline on aarch64.
+            kernel::Isa::Neon => unsafe { hyperattention::kernel::neon::$name($($arg),*) },
+            _ => scalar::$name($($arg),*),
+        }
+    };
+}
+
+fn padded(rng: &mut Rng, len: usize, off: usize) -> Vec<f32> {
+    rng.normal_vec(len + off)
+}
+
+#[test]
+fn dot_parity() {
+    for_each_simd_backend(|isa| {
+        let mut rng = Rng::new(1);
+        for &n in LENS {
+            for &off in OFFSETS {
+                let a = padded(&mut rng, n, off);
+                let b = padded(&mut rng, n, off);
+                let want = scalar::dot(&a[off..], &b[off..]);
+                let got = on_backend!(isa, dot(&a[off..], &b[off..]));
+                assert!(
+                    (got - want).abs() <= TOL * (1.0 + want.abs()),
+                    "{isa:?} dot n={n} off={off}: {got} vs {want}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn axpy_parity() {
+    for_each_simd_backend(|isa| {
+        let mut rng = Rng::new(2);
+        for &n in LENS {
+            for &off in OFFSETS {
+                let x = padded(&mut rng, n, off);
+                let y0 = padded(&mut rng, n, off);
+                let alpha = rng.normal();
+                let mut want = y0.clone();
+                scalar::axpy(alpha, &x[off..], &mut want[off..]);
+                let mut got = y0.clone();
+                on_backend!(isa, axpy(alpha, &x[off..], &mut got[off..]));
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() <= TOL, "{isa:?} axpy n={n} off={off}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn hmax_parity() {
+    for_each_simd_backend(|isa| {
+        let mut rng = Rng::new(3);
+        for &n in LENS {
+            for &off in OFFSETS {
+                let x = padded(&mut rng, n, off);
+                let want = scalar::hmax(&x[off..]);
+                let got = on_backend!(isa, hmax(&x[off..]));
+                assert_eq!(got, want, "{isa:?} hmax n={n} off={off}");
+            }
+        }
+    });
+}
+
+#[test]
+fn exp_sub_sum_parity() {
+    for_each_simd_backend(|isa| {
+        let mut rng = Rng::new(4);
+        for &n in LENS {
+            for &off in OFFSETS {
+                // stretch to ±~9 so the exp range is stressed, and plant
+                // a -1e30 mask sentinel when there's room
+                let mut base = padded(&mut rng, n, off);
+                for v in base.iter_mut() {
+                    *v *= 3.0;
+                }
+                if n > 2 {
+                    base[off + n / 2] = -1e30;
+                }
+                let mx = scalar::hmax(&base[off..]);
+                let mut want = base.clone();
+                let ws = scalar::exp_sub_sum(&mut want[off..], mx);
+                let mut got = base.clone();
+                let gs = on_backend!(isa, exp_sub_sum(&mut got[off..], mx));
+                for (g, w) in got.iter().zip(&want) {
+                    assert!(
+                        (g - w).abs() <= TOL,
+                        "{isa:?} exp n={n} off={off}: {g} vs {w}"
+                    );
+                }
+                assert!(
+                    (gs - ws).abs() <= TOL * (1.0 + ws.abs()),
+                    "{isa:?} exp sum n={n} off={off}: {gs} vs {ws}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn scale_and_merge_parity() {
+    for_each_simd_backend(|isa| {
+        let mut rng = Rng::new(5);
+        for &n in LENS {
+            for &off in OFFSETS {
+                let x0 = padded(&mut rng, n, off);
+                let y = padded(&mut rng, n, off);
+                let s = rng.normal();
+
+                let mut want = x0.clone();
+                scalar::scale(&mut want[off..], s);
+                let mut got = x0.clone();
+                on_backend!(isa, scale(&mut got[off..], s));
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() <= TOL, "{isa:?} scale n={n} off={off}");
+                }
+
+                let (e1, e2) = (0.25 + rng.next_f32(), 0.25 + rng.next_f32());
+                let mut want = x0.clone();
+                scalar::scale_merge(&mut want[off..], e1, &y[off..], e2);
+                let mut got = x0.clone();
+                on_backend!(isa, scale_merge(&mut got[off..], e1, &y[off..], e2));
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() <= TOL, "{isa:?} merge n={n} off={off}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn gemm_nt_parity() {
+    for_each_simd_backend(|isa| {
+        let mut rng = Rng::new(6);
+        for &(m, n, k) in GEMM_SHAPES {
+            // strides > extents exercise the panel-stride paths
+            for extra in [0usize, 3] {
+                let (lda, ldb, ldo) = (k + extra, k + extra, n + extra);
+                let a = rng.normal_vec((m - 1) * lda + k);
+                let b = rng.normal_vec((n - 1) * ldb + k);
+                let mut want = vec![0.0f32; (m - 1) * ldo + n];
+                scalar::gemm_nt(m, n, k, &a, lda, &b, ldb, &mut want, ldo);
+                let mut got = vec![0.0f32; (m - 1) * ldo + n];
+                on_backend!(isa, gemm_nt(m, n, k, &a, lda, &b, ldb, &mut got, ldo));
+                for i in 0..m {
+                    for j in 0..n {
+                        let (g, w) = (got[i * ldo + j], want[i * ldo + j]);
+                        assert!(
+                            (g - w).abs() <= TOL * (1.0 + w.abs()),
+                            "{isa:?} gemm_nt ({m},{n},{k}) stride+{extra} [{i},{j}]: {g} vs {w}"
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn gemm_nn_row_parity() {
+    for_each_simd_backend(|isa| {
+        let mut rng = Rng::new(7);
+        for &(_, ncols, k) in GEMM_SHAPES {
+            for extra in [0usize, 3] {
+                let ldb = ncols + extra;
+                let mut acoef = rng.normal_vec(k);
+                if k > 1 {
+                    acoef[k / 2] = 0.0; // exercise the zero-skip path
+                }
+                let b = rng.normal_vec((k - 1) * ldb + ncols);
+                let init = rng.normal_vec(ncols);
+                let mut want = init.clone();
+                scalar::gemm_nn_row(&acoef, &b, ldb, &mut want);
+                let mut got = init.clone();
+                on_backend!(isa, gemm_nn_row(&acoef, &b, ldb, &mut got));
+                for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert!(
+                        (g - w).abs() <= TOL * (1.0 + w.abs()),
+                        "{isa:?} gemm_nn_row (k={k},c={ncols}) stride+{extra} col {j}: {g} vs {w}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// End-to-end parity: the full hyper forward through the *dispatched*
+/// kernels agrees with the exact oracle when the approximation is
+/// degenerate (block = n, samples = 0), for whatever backend this host
+/// auto-selected.
+#[test]
+fn hyper_full_block_matches_naive_dispatched() {
+    for (seed, n, d) in [(0u64, 64usize, 8usize), (1, 96, 16), (2, 128, 32)] {
+        let (q, k, v) = clustered_qkv(seed, n, d, 4, 0.3);
+        let p = HyperParams { block: n, samples: 0, ..Default::default() };
+        let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(seed + 9));
+        let exact = naive_attention(&q, &k, &v, false, None);
+        let diff = out.max_abs_diff(&exact);
+        assert!(
+            diff < TOL,
+            "n={n} d={d} isa={:?}: max abs diff {diff}",
+            kernel::active()
+        );
+    }
+}
