@@ -1,38 +1,53 @@
-//! Quickstart: HyperAttention vs exact attention on one workload.
+//! Quickstart: the unified `AttentionOp` API on one workload.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Generates an LSH-friendly clustered workload, runs the exact
-//! (FlashAttention-structured) baseline and HyperAttention, and reports
-//! the paper's quantities: wall-clock speedup, the Eq. (1) spectral
-//! error, and the fine-grained hardness parameters α and κ.
+//! One config type, one operator, every backend: build an
+//! [`AttnConfig`], `.build()` it into an [`AttentionOp`], and run
+//! `forward` over a zero-copy [`QkvView`] of your `[heads, n, d]`
+//! buffers.  This example generates an LSH-friendly clustered workload,
+//! runs the exact (FlashAttention-structured) baseline and
+//! HyperAttention through the same entry point, and reports the paper's
+//! quantities: wall-clock speedup, the Eq. (1) spectral error, and the
+//! fine-grained hardness parameters α and κ.
 
 use std::time::Instant;
 
-use hyperattention::attention::causal::{causal_hyper_attention, CausalParams};
-use hyperattention::attention::exact;
-use hyperattention::attention::hyper::{hyper_attention, HyperParams};
 use hyperattention::attention::measure;
+use hyperattention::attention::op::{AttnConfig, Backend, SeedPolicy};
 use hyperattention::bench::clustered_qkv;
+use hyperattention::linalg::QkvView;
 use hyperattention::lsh::{BlockMask, Lsh};
 use hyperattention::rng::Rng;
 
 fn main() {
     let (n, d) = (4096usize, 64usize);
     let (q, k, v) = clustered_qkv(0, n, d, 32, 0.4);
+    // zero-copy single-head view over the three (n, d) buffers; for
+    // multi-head serving use QkvView::new(heads, n, d, &q, &k, &v)
+    let view = QkvView::from_mats(&q, &k, &v);
     println!("workload: n={n}, d={d}, 32 clusters (LSH-friendly)\n");
 
     // ---- exact baseline (FlashAttention structure) ----
+    let flash = AttnConfig::flash(false).build().unwrap();
     let t0 = Instant::now();
-    let exact_out = exact::flash_attention(&q, &k, &v, false, None, 64);
+    let exact_out = flash.infer(view).head_out(0).to_mat();
     let t_exact = t0.elapsed();
 
-    // ---- HyperAttention (Algorithm 3) ----
-    let params = HyperParams { block: 256, samples: 256, ..Default::default() };
+    // ---- HyperAttention (Algorithm 3) through the same API ----
+    let hyper = AttnConfig {
+        backend: Backend::Hyper,
+        block: 256,
+        samples: 256,
+        seed: SeedPolicy::Shared(7),
+        ..Default::default()
+    }
+    .build()
+    .unwrap();
     let t0 = Instant::now();
-    let hyper_out = hyper_attention(&q, &k, &v, &params, &mut Rng::new(7));
+    let hyper_out = hyper.infer(view).head_out(0).to_mat();
     let t_hyper = t0.elapsed();
 
     let rel_fro = {
@@ -53,13 +68,24 @@ fn main() {
     println!("relative Frobenius err: {rel_fro:>10.4}");
     println!("Eq. (1) spectral err  : {spectral:>10.4}\n");
 
-    // ---- causal variant (Algorithm 4) ----
+    // ---- causal variant (Algorithm 4): flip two config fields ----
+    let flash_c = AttnConfig::flash(true).build().unwrap();
     let t0 = Instant::now();
-    let exact_c = exact::flash_attention(&q, &k, &v, true, None, 64);
+    let exact_c = flash_c.infer(view).head_out(0).to_mat();
     let t_exact_c = t0.elapsed();
-    let cp = CausalParams { base: 512, hyper: params, flash_block: 64 };
+    let hyper_c_op = AttnConfig {
+        backend: Backend::CausalHyper,
+        causal: true,
+        block: 256,
+        samples: 256,
+        causal_base: 512,
+        seed: SeedPolicy::Shared(7),
+        ..Default::default()
+    }
+    .build()
+    .unwrap();
     let t0 = Instant::now();
-    let hyper_c = causal_hyper_attention(&q, &k, &v, &cp, &mut Rng::new(7));
+    let hyper_c = hyper_c_op.infer(view).head_out(0).to_mat();
     let t_hyper_c = t0.elapsed();
     let rel_c = {
         let mut diff = hyper_c.clone();
@@ -75,6 +101,14 @@ fn main() {
         t_exact_c.as_secs_f64() / t_hyper_c.as_secs_f64()
     );
     println!("causal rel Fro err    : {rel_c:>10.4}\n");
+
+    // ---- Auto routing: the serving policy in one line ----
+    let auto = AttnConfig { backend: Backend::Auto, ..Default::default() }.build().unwrap();
+    println!(
+        "Auto policy at n={n}: {:?} (threshold {}, short jobs route to Flash)\n",
+        auto.resolve(n),
+        auto.config().auto.hyper_threshold
+    );
 
     // ---- the paper's hardness parameters ----
     let mut rng = Rng::new(1);

@@ -1,4 +1,6 @@
-//! Bench: ablations over the design choices DESIGN.md calls out.
+//! Bench: ablations over the design choices DESIGN.md calls out, all
+//! expressed through the unified `AttentionOp` API (one config struct,
+//! every knob a field).
 //!
 //! `cargo bench --bench ablations`
 //!
@@ -10,15 +12,15 @@
 
 use std::time::Instant;
 
-use hyperattention::attention::causal::{causal_hyper_attention, CausalParams};
-use hyperattention::attention::exact;
-use hyperattention::attention::hyper::{hyper_attention, HyperParams, SampleMode};
+use hyperattention::attention::hyper::SampleMode;
 use hyperattention::attention::measure;
+use hyperattention::attention::op::{AttnConfig, Backend, SeedPolicy};
 use hyperattention::bench::clustered_qkv;
+use hyperattention::linalg::{Mat, QkvView};
 use hyperattention::lsh::{BlockMask, Lsh};
 use hyperattention::rng::Rng;
 
-fn rel_err(a: &hyperattention::linalg::Mat, b: &hyperattention::linalg::Mat) -> f32 {
+fn rel_err(a: &Mat, b: &Mat) -> f32 {
     let mut diff = a.clone();
     for (x, y) in diff.data.iter_mut().zip(&b.data) {
         *x -= y;
@@ -26,18 +28,34 @@ fn rel_err(a: &hyperattention::linalg::Mat, b: &hyperattention::linalg::Mat) -> 
     diff.fro_norm() / b.fro_norm()
 }
 
+/// Run one single-head forward and return the (n, d) output.
+fn run(cfg: AttnConfig, view: QkvView<'_>) -> Mat {
+    cfg.build().expect("valid ablation config").infer(view).head_out(0).to_mat()
+}
+
+fn hyper_cfg(block: usize, samples: usize, mode: SampleMode, seed: u64) -> AttnConfig {
+    AttnConfig {
+        backend: Backend::Hyper,
+        block,
+        samples,
+        sample_mode: mode,
+        seed: SeedPolicy::Shared(seed),
+        ..Default::default()
+    }
+}
+
 fn main() {
     let (n, d) = (4096usize, 64usize);
     let (q, k, v) = clustered_qkv(1, n, d, 32, 0.4);
-    let exact_nc = exact::flash_attention(&q, &k, &v, false, None, 64);
-    let exact_c = exact::flash_attention(&q, &k, &v, true, None, 64);
+    let view = QkvView::from_mats(&q, &k, &v);
+    let exact_nc = run(AttnConfig::flash(false), view);
+    let exact_c = run(AttnConfig::flash(true), view);
 
     println!("=== ablation 1: block size (m=256 fixed, n={n}) ===");
     println!("{:>7} {:>10} {:>10} {:>10}", "block", "time (s)", "rel err", "spectral");
     for b in [64usize, 128, 256, 512] {
-        let p = HyperParams { block: b, samples: 256, ..Default::default() };
         let t0 = Instant::now();
-        let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(5));
+        let out = run(hyper_cfg(b, 256, SampleMode::Uniform, 5), view);
         let dt = t0.elapsed().as_secs_f64();
         let spec = measure::spectral_error(&out, &q, &k, &v, false, None);
         println!("{b:>7} {dt:>10.4} {:>10.4} {spec:>10.4}", rel_err(&out, &exact_nc));
@@ -46,9 +64,8 @@ fn main() {
     println!("\n=== ablation 2: sample count m (b=256 fixed) ===");
     println!("{:>7} {:>10} {:>10} {:>10}", "m", "time (s)", "rel err", "spectral");
     for m in [64usize, 128, 256, 512, 1024] {
-        let p = HyperParams { block: 256, samples: m, ..Default::default() };
         let t0 = Instant::now();
-        let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(5));
+        let out = run(hyper_cfg(256, m, SampleMode::Uniform, 5), view);
         let dt = t0.elapsed().as_secs_f64();
         let spec = measure::spectral_error(&out, &q, &k, &v, false, None);
         println!("{m:>7} {dt:>10.4} {:>10.4} {spec:>10.4}", rel_err(&out, &exact_nc));
@@ -56,10 +73,9 @@ fn main() {
 
     println!("\n=== ablation 3: sampling mode (b=256, m=256) ===");
     for (name, mode) in [("uniform", SampleMode::Uniform), ("vnorm", SampleMode::VNorm)] {
-        let p = HyperParams { block: 256, samples: 256, mode, ..Default::default() };
         let mut errs = 0.0;
         for s in 0..3u64 {
-            let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(s));
+            let out = run(hyper_cfg(256, 256, mode, s), view);
             errs += measure::spectral_error(&out, &q, &k, &v, false, None) / 3.0;
         }
         println!("  {name:>8}: mean spectral err {errs:.4}");
@@ -85,13 +101,17 @@ fn main() {
     println!("\n=== ablation 5: causal recursion base (n={n}) ===");
     println!("{:>7} {:>10} {:>10}", "base", "time (s)", "rel err");
     for base in [256usize, 512, 1024, 2048] {
-        let cp = CausalParams {
-            base,
-            hyper: HyperParams { block: 256, samples: 256, ..Default::default() },
-            flash_block: 64,
+        let cfg = AttnConfig {
+            backend: Backend::CausalHyper,
+            causal: true,
+            block: 256,
+            samples: 256,
+            causal_base: base,
+            seed: SeedPolicy::Shared(5),
+            ..Default::default()
         };
         let t0 = Instant::now();
-        let out = causal_hyper_attention(&q, &k, &v, &cp, &mut Rng::new(5));
+        let out = run(cfg, view);
         let dt = t0.elapsed().as_secs_f64();
         println!("{base:>7} {dt:>10.4} {:>10.4}", rel_err(&out, &exact_c));
     }

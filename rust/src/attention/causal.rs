@@ -9,23 +9,21 @@
 //!
 //! All leaf work (base-case flash tiles, off-diagonal hyper blocks, the
 //! triple merges) bottoms out in the SIMD microkernels of
-//! [`crate::kernel`]; this module is pure recursion plumbing.
+//! [`crate::kernel`]; this module is pure recursion plumbing.  The
+//! recursion operates on zero-copy [`MatRef`] halves — no slice copies
+//! on the way down.
+//!
+//! `CausalPlan` is the recorded recursion: per-leaf forward triples
+//! and per-split off-diagonal (plan, triple) pairs, so the backward pass
+//! replays the exact estimator without recomputing any forward work.
+//! It is built and consumed by [`crate::attention::op::AttentionOp`].
 
 use super::exact;
-use super::hyper::{self, HyperParams};
+use super::hyper::{self, HyperParams, HyperPlan};
+use super::op::fit_block;
 use super::Parts;
-use crate::linalg::Mat;
+use crate::linalg::{Mat, MatRef};
 use crate::rng::Rng;
-
-/// Largest block size ≤ `target` that divides `n` (≥ 1); the off-diagonal
-/// hyper call requires block | n.
-fn fit_block(n: usize, target: usize) -> usize {
-    let mut b = target.min(n).max(1);
-    while n % b != 0 {
-        b -= 1;
-    }
-    b
-}
 
 /// Causal HyperAttention hyper-parameters.
 #[derive(Clone, Copy, Debug)]
@@ -47,7 +45,25 @@ impl Default for CausalParams {
     }
 }
 
+/// Does this (n, params) pair run the exact base case?  Odd n cannot
+/// split into equal halves (the off-diagonal block needs
+/// len(q) == len(k)); such sizes run exact causal.
+#[inline]
+fn is_base_case(n: usize, p: &CausalParams) -> bool {
+    n <= p.base || n < 2 * p.hyper.block || n % 2 != 0
+}
+
+/// Off-diagonal hyper params for one split at half-size `half`.
+#[inline]
+fn split_params(half: usize, p: &CausalParams) -> HyperParams {
+    let mut hp = p.hyper;
+    hp.block = fit_block(half, hp.block);
+    hp.samples = hp.samples.min(half);
+    hp
+}
+
 /// Triple of causal HyperAttention over (q, k, v), all (n, d).
+#[deprecated(note = "use `attention::op::AttentionOp` with `Backend::CausalHyper`")]
 pub fn causal_hyper_parts(
     q: &Mat,
     k: &Mat,
@@ -55,11 +71,20 @@ pub fn causal_hyper_parts(
     p: &CausalParams,
     rng: &mut Rng,
 ) -> Parts {
+    causal_parts_view(q.view(), k.view(), v.view(), p, rng)
+}
+
+/// View-based forward-only recursion (no plan captured).
+pub(crate) fn causal_parts_view(
+    q: MatRef<'_>,
+    k: MatRef<'_>,
+    v: MatRef<'_>,
+    p: &CausalParams,
+    rng: &mut Rng,
+) -> Parts {
     let n = q.rows;
-    // Odd n cannot split into equal halves (the off-diagonal block needs
-    // len(q) == len(k)); such sizes run the exact base case.
-    if n <= p.base || n < 2 * p.hyper.block || n % 2 != 0 {
-        return exact::flash_parts(q, k, v, true, p.hyper.scale, p.flash_block);
+    if is_base_case(n, p) {
+        return exact::flash_parts_view(q, k, v, true, p.hyper.scale, p.flash_block);
     }
     let half = n / 2;
     let (q1, q2) = (q.slice_rows(0, half), q.slice_rows(half, n));
@@ -70,19 +95,18 @@ pub fn causal_hyper_parts(
     let mut rng21 = rng.fork(2);
     let mut rng22 = rng.fork(3);
 
-    let p11 = causal_hyper_parts(&q1, &k1, &v1, p, &mut rng11);
+    let p11 = causal_parts_view(q1, k1, v1, p, &mut rng11);
     // off-diagonal A21 is unmasked: non-causal HyperAttention
-    let mut hp = p.hyper;
-    hp.block = fit_block(half, hp.block);
-    hp.samples = hp.samples.min(half);
-    let p21 = hyper::hyper_parts(&q2, &k1, &v1, &hp, &mut rng21);
-    let mut p2 = causal_hyper_parts(&q2, &k2, &v2, p, &mut rng22);
+    let hp = split_params(half, p);
+    let p21 = hyper::hyper_parts_view(q2, k1, v1, &hp, &mut rng21);
+    let mut p2 = causal_parts_view(q2, k2, v2, p, &mut rng22);
     p2.merge(&p21);
 
     p11.concat(p2)
 }
 
 /// Normalized causal HyperAttention output.
+#[deprecated(note = "use `attention::op::AttentionOp` with `Backend::CausalHyper`")]
 pub fn causal_hyper_attention(
     q: &Mat,
     k: &Mat,
@@ -90,13 +114,126 @@ pub fn causal_hyper_attention(
     p: &CausalParams,
     rng: &mut Rng,
 ) -> Mat {
-    causal_hyper_parts(q, k, v, p, rng).finalize()
+    causal_parts_view(q.view(), k.view(), v.view(), p, rng).finalize()
+}
+
+/// The recorded causal recursion: everything the backward pass needs to
+/// replay the identical estimator without recomputing a forward.
+pub(crate) enum CausalPlan {
+    /// Exact base case: the leaf's own forward triple (for the
+    /// flash-style backward's saved statistics).
+    Leaf(Parts),
+    /// One split: recorded children plus the off-diagonal A₂₁ hyper
+    /// (plan, triple) pair and the fitted params it ran with.
+    Split {
+        top: Box<CausalPlan>,
+        plan21: HyperPlan,
+        parts21: Parts,
+        bottom: Box<CausalPlan>,
+        hp: HyperParams,
+    },
+}
+
+/// Forward pass that records a [`CausalPlan`].  Mirrors
+/// [`causal_parts_view`] exactly (same rng fork tags, same base
+/// predicate, same merge order), so both paths produce identical output
+/// for the same seed — pinned by a test below.
+pub(crate) fn causal_plan_view(
+    q: MatRef<'_>,
+    k: MatRef<'_>,
+    v: MatRef<'_>,
+    p: &CausalParams,
+    rng: &mut Rng,
+) -> (Parts, CausalPlan) {
+    let n = q.rows;
+    if is_base_case(n, p) {
+        let parts = exact::flash_parts_view(q, k, v, true, p.hyper.scale, p.flash_block);
+        return (parts.clone(), CausalPlan::Leaf(parts));
+    }
+    let half = n / 2;
+    let (q1, q2) = (q.slice_rows(0, half), q.slice_rows(half, n));
+    let (k1, k2) = (k.slice_rows(0, half), k.slice_rows(half, n));
+    let (v1, v2) = (v.slice_rows(0, half), v.slice_rows(half, n));
+
+    let mut rng11 = rng.fork(1);
+    let mut rng21 = rng.fork(2);
+    let mut rng22 = rng.fork(3);
+
+    let (p11, top) = causal_plan_view(q1, k1, v1, p, &mut rng11);
+    let hp = split_params(half, p);
+    let plan21 = HyperPlan::build_view(q2, k1, v1, &hp, &mut rng21);
+    let parts21 = hyper::hyper_parts_with_plan_view(q2, k1, v1, &hp, &plan21);
+    let (mut p2, bottom) = causal_plan_view(q2, k2, v2, p, &mut rng22);
+    p2.merge(&parts21);
+
+    let parts = p11.concat(p2);
+    let plan = CausalPlan::Split {
+        top: Box::new(top),
+        plan21,
+        parts21,
+        bottom: Box::new(bottom),
+        hp,
+    };
+    (parts, plan)
+}
+
+/// Backward through the recorded recursion — no forward recompute.
+///
+/// NOTE: the off-diagonal gradient is taken wrt its own normalized
+/// output (timing-fidelity path; the merged-normalizer cross term is
+/// dropped, as in the paper's benchmark which times fwd+bwd of the
+/// approximate layer, not trains through the merge).
+pub(crate) fn causal_backward_with_plan(
+    q: MatRef<'_>,
+    k: MatRef<'_>,
+    v: MatRef<'_>,
+    dout: MatRef<'_>,
+    p: &CausalParams,
+    plan: &CausalPlan,
+) -> (Mat, Mat, Mat) {
+    let n = q.rows;
+    match plan {
+        CausalPlan::Leaf(parts) => {
+            exact::flash_backward_with_parts_view(q, k, v, dout, true, p.hyper.scale, parts)
+        }
+        CausalPlan::Split { top, plan21, parts21, bottom, hp } => {
+            let half = n / 2;
+            let (q1, q2) = (q.slice_rows(0, half), q.slice_rows(half, n));
+            let (k1, k2) = (k.slice_rows(0, half), k.slice_rows(half, n));
+            let (v1, v2) = (v.slice_rows(0, half), v.slice_rows(half, n));
+            let (do1, do2) = (dout.slice_rows(0, half), dout.slice_rows(half, n));
+
+            let (dq1, mut dk1, mut dv1) = causal_backward_with_plan(q1, k1, v1, do1, p, top);
+            let (dq21, dk21, dv21) = hyper::hyper_backward_with_parts_view(
+                q2, k1, v1, do2, hp, plan21, parts21,
+            );
+            let (dq22, dk22, dv22) = causal_backward_with_plan(q2, k2, v2, do2, p, bottom);
+
+            let mut dq = dq1;
+            let mut dq2 = dq21;
+            dq2.add_assign(&dq22);
+            dq.data.extend_from_slice(&dq2.data);
+            dq.rows += dq2.rows;
+
+            dk1.add_assign(&dk21);
+            dv1.add_assign(&dv21);
+            let mut dk = dk1;
+            dk.data.extend_from_slice(&dk22.data);
+            dk.rows += dk22.rows;
+            let mut dv = dv1;
+            dv.data.extend_from_slice(&dv22.data);
+            dv.rows += dv22.rows;
+
+            (dq, dk, dv)
+        }
+    }
 }
 
 /// Forward + backward timing path: backward through the base-case exact
-/// blocks and off-diagonal hyper blocks, replaying the recursion.  Cost
-/// is a constant factor over the forward, matching the paper's
-/// fwd+bwd benchmark setup (Fig. 4 right panels).
+/// blocks and off-diagonal hyper blocks, replaying the recorded
+/// recursion.  Cost is a constant factor over the forward, matching the
+/// paper's fwd+bwd benchmark setup (Fig. 4 right panels).
+#[deprecated(note = "use `attention::op::AttentionOp::forward` + `::backward`")]
 pub fn causal_hyper_fwd_bwd(
     q: &Mat,
     k: &Mat,
@@ -105,74 +242,10 @@ pub fn causal_hyper_fwd_bwd(
     p: &CausalParams,
     rng: &mut Rng,
 ) -> (Mat, Mat, Mat, Mat) {
-    let (parts, dq, dk, dv) = fwd_bwd_parts(q, k, v, dout, p, rng);
+    let (parts, plan) = causal_plan_view(q.view(), k.view(), v.view(), p, rng);
+    let (dq, dk, dv) =
+        causal_backward_with_plan(q.view(), k.view(), v.view(), dout.view(), p, &plan);
     (parts.finalize(), dq, dk, dv)
-}
-
-/// Recursive worker for [`causal_hyper_fwd_bwd`], carrying the forward
-/// triple so each level merges its off-diagonal part into the child's
-/// result instead of recomputing the child forward from scratch (the
-/// merge needs pre-normalization parts, not outputs).
-fn fwd_bwd_parts(
-    q: &Mat,
-    k: &Mat,
-    v: &Mat,
-    dout: &Mat,
-    p: &CausalParams,
-    rng: &mut Rng,
-) -> (Parts, Mat, Mat, Mat) {
-    let n = q.rows;
-    if n <= p.base || n < 2 * p.hyper.block || n % 2 != 0 {
-        let parts = exact::flash_parts(q, k, v, true, p.hyper.scale, p.flash_block);
-        let (dq, dk, dv) =
-            exact::flash_backward_with_parts(q, k, v, dout, true, p.hyper.scale, &parts);
-        return (parts, dq, dk, dv);
-    }
-    let half = n / 2;
-    let (q1, q2) = (q.slice_rows(0, half), q.slice_rows(half, n));
-    let (k1, k2) = (k.slice_rows(0, half), k.slice_rows(half, n));
-    let (v1, v2) = (v.slice_rows(0, half), v.slice_rows(half, n));
-    let (do1, do2) = (dout.slice_rows(0, half), dout.slice_rows(half, n));
-
-    let mut rng11 = rng.fork(1);
-    let mut rng21 = rng.fork(2);
-    let mut rng22 = rng.fork(3);
-
-    let (p11, dq1, mut dk1, mut dv1) = fwd_bwd_parts(&q1, &k1, &v1, &do1, p, &mut rng11);
-
-    let mut hp = p.hyper;
-    hp.block = fit_block(half, hp.block);
-    hp.samples = hp.samples.min(half);
-    let plan = hyper::HyperPlan::build(&q2, &k1, &v1, &hp, &mut rng21);
-    let p21 = hyper::hyper_parts_with_plan(&q2, &k1, &v1, &hp, &plan);
-    // NOTE: the off-diagonal gradient is taken wrt its own normalized
-    // output (timing-fidelity path; the merged-normalizer cross term is
-    // dropped, as in the paper's benchmark which times fwd+bwd of the
-    // approximate layer, not trains through the merge).
-    let (dq21, dk21, dv21) =
-        hyper::hyper_backward_with_parts(&q2, &k1, &v1, &do2, &hp, &plan, &p21);
-
-    let (mut p2, dq22, dk22, dv22) = fwd_bwd_parts(&q2, &k2, &v2, &do2, p, &mut rng22);
-    p2.merge(&p21);
-
-    let parts = p11.concat(p2);
-
-    let mut dq = dq1;
-    let mut dq2 = dq21;
-    dq2.add_assign(&dq22);
-    dq.data.extend_from_slice(&dq2.data);
-    dq.rows += dq2.rows;
-
-    dk1.add_assign(&dk21);
-    dv1.add_assign(&dv21);
-    let mut dk = dk1;
-    dk.data.extend_from_slice(&dk22.data);
-    dk.rows += dk22.rows;
-    let mut dv = dv1;
-    dv.data.extend_from_slice(&dv22.data);
-    dv.rows += dv22.rows;
-
-    (parts, dq, dk, dv)
 }
 
 #[cfg(test)]
@@ -189,11 +262,29 @@ mod tests {
         )
     }
 
+    fn causal_hyper(q: &Mat, k: &Mat, v: &Mat, p: &CausalParams, rng: &mut Rng) -> Mat {
+        causal_parts_view(q.view(), k.view(), v.view(), p, rng).finalize()
+    }
+
+    fn fwd_bwd(
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        dout: &Mat,
+        p: &CausalParams,
+        rng: &mut Rng,
+    ) -> (Mat, Mat, Mat, Mat) {
+        let (parts, plan) = causal_plan_view(q.view(), k.view(), v.view(), p, rng);
+        let (dq, dk, dv) =
+            causal_backward_with_plan(q.view(), k.view(), v.view(), dout.view(), p, &plan);
+        (parts.finalize(), dq, dk, dv)
+    }
+
     #[test]
     fn base_case_is_exact() {
         let (q, k, v) = rand_qkv(0, 64, 8);
         let p = CausalParams { base: 64, ..Default::default() };
-        let out = causal_hyper_attention(&q, &k, &v, &p, &mut Rng::new(1));
+        let out = causal_hyper(&q, &k, &v, &p, &mut Rng::new(1));
         let exact = exact::naive_attention(&q, &k, &v, true, None);
         assert!(out.max_abs_diff(&exact) < 1e-5);
     }
@@ -206,7 +297,7 @@ mod tests {
             hyper: HyperParams { block: 16, samples: 16, ..Default::default() },
             ..Default::default()
         };
-        let out = causal_hyper_attention(&q, &k, &v, &p, &mut Rng::new(2));
+        let out = causal_hyper(&q, &k, &v, &p, &mut Rng::new(2));
         let exact = exact::naive_attention(&q, &k, &v, true, None);
         let first = out.slice_rows(0, 64);
         let first_exact = exact.slice_rows(0, 64);
@@ -228,8 +319,8 @@ mod tests {
             hyper: HyperParams { block: 16, samples: 16, ..Default::default() },
             ..Default::default()
         };
-        let a = causal_hyper_attention(&q, &k, &v, &p, &mut Rng::new(3));
-        let b = causal_hyper_attention(&q, &k, &v_bad, &p, &mut Rng::new(3));
+        let a = causal_hyper(&q, &k, &v, &p, &mut Rng::new(3));
+        let b = causal_hyper(&q, &k, &v_bad, &p, &mut Rng::new(3));
         assert!(a.slice_rows(0, 64).max_abs_diff(&b.slice_rows(0, 64)) < 1e-6);
     }
 
@@ -241,15 +332,15 @@ mod tests {
             hyper: HyperParams { block: 16, samples: 32, ..Default::default() },
             ..Default::default()
         };
-        let out = causal_hyper_attention(&q, &k, &v, &p, &mut Rng::new(4));
+        let out = causal_hyper(&q, &k, &v, &p, &mut Rng::new(4));
         assert!(out.data.iter().all(|x| x.is_finite()));
         let err = measure::spectral_error(&out, &q, &k, &v, true, None);
         assert!(err < 1.0, "spectral error {err}");
     }
 
     #[test]
-    fn fwd_bwd_forward_matches_forward_only() {
-        // fwd_bwd_parts re-implements causal_hyper_parts' recursion
+    fn plan_forward_matches_forward_only() {
+        // causal_plan_view re-implements causal_parts_view's recursion
         // scaffold (fork tags, base predicate, block fitting, merge
         // order); this pins the two code paths to identical forward
         // output for the same seed so they can't silently diverge.
@@ -261,9 +352,29 @@ mod tests {
             hyper: HyperParams { block: 16, samples: 16, ..Default::default() },
             ..Default::default()
         };
-        let fwd = causal_hyper_attention(&q, &k, &v, &p, &mut Rng::new(10));
-        let (out, _, _, _) = causal_hyper_fwd_bwd(&q, &k, &v, &dout, &p, &mut Rng::new(10));
-        assert_eq!(fwd, out, "fwd_bwd forward diverged from forward-only path");
+        let fwd = causal_hyper(&q, &k, &v, &p, &mut Rng::new(10));
+        let (out, _, _, _) = fwd_bwd(&q, &k, &v, &dout, &p, &mut Rng::new(10));
+        assert_eq!(fwd, out, "plan-recorded forward diverged from forward-only path");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_match_view_core() {
+        let (q, k, v) = rand_qkv(11, 128, 8);
+        let mut rng = Rng::new(12);
+        let dout = Mat::randn(128, 8, &mut rng);
+        let p = CausalParams {
+            base: 32,
+            hyper: HyperParams { block: 16, samples: 16, ..Default::default() },
+            ..Default::default()
+        };
+        assert_eq!(
+            causal_hyper_attention(&q, &k, &v, &p, &mut Rng::new(13)),
+            causal_hyper(&q, &k, &v, &p, &mut Rng::new(13))
+        );
+        let a = causal_hyper_fwd_bwd(&q, &k, &v, &dout, &p, &mut Rng::new(14));
+        let b = fwd_bwd(&q, &k, &v, &dout, &p, &mut Rng::new(14));
+        assert_eq!(a, b);
     }
 
     #[test]
@@ -276,8 +387,7 @@ mod tests {
             hyper: HyperParams { block: 16, samples: 16, ..Default::default() },
             ..Default::default()
         };
-        let (out, dq, dk, dv) =
-            causal_hyper_fwd_bwd(&q, &k, &v, &dout, &p, &mut Rng::new(6));
+        let (out, dq, dk, dv) = fwd_bwd(&q, &k, &v, &dout, &p, &mut Rng::new(6));
         for m in [&out, &dq, &dk, &dv] {
             assert_eq!((m.rows, m.cols), (128, 8));
             assert!(m.data.iter().all(|x| x.is_finite()));
@@ -293,7 +403,7 @@ mod tests {
             hyper: HyperParams { block: 32, samples: 8, ..Default::default() },
             ..Default::default()
         };
-        let out = causal_hyper_attention(&q, &k, &v, &p, &mut Rng::new(7));
+        let out = causal_hyper(&q, &k, &v, &p, &mut Rng::new(7));
         let exact = exact::naive_attention(&q, &k, &v, true, None);
         assert!(out.max_abs_diff(&exact) < 1e-5);
     }

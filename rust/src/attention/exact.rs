@@ -1,29 +1,46 @@
 //! Exact attention: naive reference + FlashAttention-style streaming
 //! baseline (forward and backward).
 //!
-//! `flash_attention` is the "FlashAttention 2" stand-in used as the Fig 4
-//! baseline: two-level blocking, online softmax (never materializes the
-//! n×n matrix), thread-parallel over query tiles via the scoped
-//! fork/join substrate in [`crate::par`] (this tree is rayon-free), and
-//! causal tile skipping (upper-triangular key tiles are never touched,
-//! giving the familiar ~2× causal saving).  Each query×key tile is one
-//! register-blocked [`crate::kernel::gemm_nt`] logits panel followed by
-//! the fused max/exp/PV-accumulate kernels.  Θ(n²d) work — the
-//! quadratic wall the paper's algorithm beats.
+//! `flash_parts_view` is the "FlashAttention 2" stand-in used as the
+//! Fig 4 baseline: two-level blocking, online softmax (never
+//! materializes the n×n matrix), thread-parallel over query tiles via
+//! the scoped fork/join substrate in [`crate::par`] (this tree is
+//! rayon-free), and causal tile skipping (upper-triangular key tiles are
+//! never touched, giving the familiar ~2× causal saving).  Each
+//! query×key tile is one register-blocked [`crate::kernel::gemm_nt`]
+//! logits panel followed by the fused max/exp/PV-accumulate kernels.
+//! Θ(n²d) work — the quadratic wall the paper's algorithm beats.
+//!
+//! The core entry points take borrowed [`MatRef`] views so multi-head
+//! buffers and recursion halves never copy; callers go through the
+//! unified [`crate::attention::op::AttentionOp`] API.  The historical
+//! `&Mat` free functions survive as deprecated shims for one release.
 
 use super::{softmax_scale, Parts, NEG_INF};
 use crate::kernel;
-use crate::linalg::{dot, Mat};
+use crate::linalg::{dot, Mat, MatRef};
 use crate::par;
 
 /// Naive exact attention (materializes logits; O(n²) memory — reference
-/// and test oracle only).
+/// and test oracle only).  Not deprecated: this is the oracle every
+/// other path is tested against.
 pub fn naive_attention(q: &Mat, k: &Mat, v: &Mat, causal: bool, scale: Option<f32>) -> Mat {
-    naive_parts(q, k, v, causal, scale).finalize()
+    naive_parts_view(q.view(), k.view(), v.view(), causal, scale).finalize()
 }
 
 /// Naive exact attention in triple form.
 pub fn naive_parts(q: &Mat, k: &Mat, v: &Mat, causal: bool, scale: Option<f32>) -> Parts {
+    naive_parts_view(q.view(), k.view(), v.view(), causal, scale)
+}
+
+/// View-based core of [`naive_parts`].
+pub(crate) fn naive_parts_view(
+    q: MatRef<'_>,
+    k: MatRef<'_>,
+    v: MatRef<'_>,
+    causal: bool,
+    scale: Option<f32>,
+) -> Parts {
     let (n, d) = (q.rows, q.cols);
     let nk = k.rows;
     let sc = softmax_scale(d, scale);
@@ -56,6 +73,7 @@ pub fn naive_parts(q: &Mat, k: &Mat, v: &Mat, causal: bool, scale: Option<f32>) 
 }
 
 /// Streaming blocked exact attention.  Returns the normalized output.
+#[deprecated(note = "use `attention::op::AttentionOp` with `Backend::Flash`")]
 pub fn flash_attention(
     q: &Mat,
     k: &Mat,
@@ -64,14 +82,27 @@ pub fn flash_attention(
     scale: Option<f32>,
     block: usize,
 ) -> Mat {
-    flash_parts(q, k, v, causal, scale, block).finalize()
+    flash_parts_view(q.view(), k.view(), v.view(), causal, scale, block).finalize()
 }
 
 /// Streaming blocked exact attention in triple form (for merging).
+#[deprecated(note = "use `attention::op::AttentionOp` with `Backend::Flash`")]
 pub fn flash_parts(
     q: &Mat,
     k: &Mat,
     v: &Mat,
+    causal: bool,
+    scale: Option<f32>,
+    block: usize,
+) -> Parts {
+    flash_parts_view(q.view(), k.view(), v.view(), causal, scale, block)
+}
+
+/// View-based core of the streaming blocked exact attention.
+pub(crate) fn flash_parts_view(
+    q: MatRef<'_>,
+    k: MatRef<'_>,
+    v: MatRef<'_>,
     causal: bool,
     scale: Option<f32>,
     block: usize,
@@ -89,7 +120,7 @@ pub fn flash_parts(
         return parts;
     }
     // Pre-scale Q once so each logits tile is a raw GEMM.
-    let mut qs = q.clone();
+    let mut qs = q.to_mat();
     qs.scale(sc);
 
     // Parallel over query tiles: each tile owns disjoint slices of the
@@ -164,6 +195,7 @@ pub fn flash_parts(
 /// the saved per-row (max, denom) statistics; never materializes the
 /// full n×n matrix.  `delta_i = dout_i · out_i` is the softmax-Jacobian
 /// correction term.
+#[deprecated(note = "use `attention::op::AttentionOp::backward`")]
 pub fn flash_backward(
     q: &Mat,
     k: &Mat,
@@ -174,17 +206,47 @@ pub fn flash_backward(
     block: usize,
 ) -> (Mat, Mat, Mat) {
     // Forward statistics (recomputed, streaming).
-    let parts = flash_parts(q, k, v, causal, scale, block);
-    flash_backward_with_parts(q, k, v, dout, causal, scale, &parts)
+    let parts = flash_parts_view(q.view(), k.view(), v.view(), causal, scale, block);
+    flash_backward_with_parts_view(
+        q.view(),
+        k.view(),
+        v.view(),
+        dout.view(),
+        causal,
+        scale,
+        &parts,
+    )
 }
 
 /// [`flash_backward`] given already-computed forward statistics (the
 /// fwd+bwd path has them in hand — no second forward pass).
+#[deprecated(note = "use `attention::op::AttentionOp::backward`")]
 pub fn flash_backward_with_parts(
     q: &Mat,
     k: &Mat,
     v: &Mat,
     dout: &Mat,
+    causal: bool,
+    scale: Option<f32>,
+    parts: &Parts,
+) -> (Mat, Mat, Mat) {
+    flash_backward_with_parts_view(
+        q.view(),
+        k.view(),
+        v.view(),
+        dout.view(),
+        causal,
+        scale,
+        parts,
+    )
+}
+
+/// View-based core of the exact backward given forward statistics.
+pub(crate) fn flash_backward_with_parts_view(
+    q: MatRef<'_>,
+    k: MatRef<'_>,
+    v: MatRef<'_>,
+    dout: MatRef<'_>,
     causal: bool,
     scale: Option<f32>,
     parts: &Parts,
@@ -255,12 +317,16 @@ mod tests {
         )
     }
 
+    fn flash(q: &Mat, k: &Mat, v: &Mat, causal: bool, block: usize) -> Mat {
+        flash_parts_view(q.view(), k.view(), v.view(), causal, None, block).finalize()
+    }
+
     #[test]
     fn flash_matches_naive() {
         let (q, k, v) = rand_qkv(0, 97, 16); // non-divisible n on purpose
         for causal in [false, true] {
             let a = naive_attention(&q, &k, &v, causal, None);
-            let b = flash_attention(&q, &k, &v, causal, None, 32);
+            let b = flash(&q, &k, &v, causal, 32);
             assert!(a.max_abs_diff(&b) < 1e-5, "causal={causal}");
         }
     }
@@ -268,9 +334,9 @@ mod tests {
     #[test]
     fn flash_block_size_invariant() {
         let (q, k, v) = rand_qkv(1, 64, 8);
-        let base = flash_attention(&q, &k, &v, false, None, 64);
+        let base = flash(&q, &k, &v, false, 64);
         for b in [1, 7, 16, 33, 128] {
-            let out = flash_attention(&q, &k, &v, false, None, b);
+            let out = flash(&q, &k, &v, false, b);
             assert!(base.max_abs_diff(&out) < 1e-5, "block={b}");
         }
     }
@@ -282,7 +348,7 @@ mod tests {
         let k = Mat::randn(64, 8, &mut rng);
         let v = Mat::randn(64, 8, &mut rng);
         let a = naive_attention(&q, &k, &v, false, None);
-        let b = flash_attention(&q, &k, &v, false, None, 16);
+        let b = flash(&q, &k, &v, false, 16);
         assert!(a.max_abs_diff(&b) < 1e-5);
     }
 
@@ -294,14 +360,14 @@ mod tests {
         q.scale(30.0);
         k.scale(30.0);
         let v = Mat::randn(32, 8, &mut rng);
-        let out = flash_attention(&q, &k, &v, false, None, 8);
+        let out = flash(&q, &k, &v, false, 8);
         assert!(out.data.iter().all(|x| x.is_finite()));
     }
 
     #[test]
     fn causal_first_row_attends_self_only() {
         let (q, k, v) = rand_qkv(4, 16, 4);
-        let out = flash_attention(&q, &k, &v, true, None, 4);
+        let out = flash(&q, &k, &v, true, 4);
         assert!(
             out.row(0)
                 .iter()
@@ -314,7 +380,7 @@ mod tests {
     #[test]
     fn parts_row_sums_match_exp_space() {
         let (q, k, v) = rand_qkv(5, 24, 8);
-        let parts = flash_parts(&q, &k, &v, false, None, 8);
+        let parts = flash_parts_view(q.view(), k.view(), v.view(), false, None, 8);
         let sc = softmax_scale(8, None);
         for i in 0..24 {
             let exact: f32 = (0..24)
@@ -328,6 +394,34 @@ mod tests {
         }
     }
 
+    /// The deprecated `&Mat` shims must stay bit-identical to the view
+    /// cores while they exist.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_match_view_core() {
+        let (q, k, v) = rand_qkv(9, 24, 8);
+        let mut rng = Rng::new(10);
+        let dout = Mat::randn(24, 8, &mut rng);
+        for causal in [false, true] {
+            assert_eq!(
+                flash_attention(&q, &k, &v, causal, None, 8),
+                flash(&q, &k, &v, causal, 8)
+            );
+            let parts = flash_parts(&q, &k, &v, causal, None, 8);
+            let (dq, dk, dv) = flash_backward(&q, &k, &v, &dout, causal, None, 8);
+            let (dq2, dk2, dv2) = flash_backward_with_parts_view(
+                q.view(),
+                k.view(),
+                v.view(),
+                dout.view(),
+                causal,
+                None,
+                &parts,
+            );
+            assert_eq!((dq, dk, dv), (dq2, dk2, dv2));
+        }
+    }
+
     /// Central-difference check of the analytic backward.
     #[test]
     fn backward_matches_finite_difference() {
@@ -335,9 +429,18 @@ mod tests {
         let mut rng = Rng::new(7);
         let dout = Mat::randn(12, 4, &mut rng);
         for causal in [false, true] {
-            let (dq, dk, dv) = flash_backward(&q, &k, &v, &dout, causal, None, 4);
+            let parts = flash_parts_view(q.view(), k.view(), v.view(), causal, None, 4);
+            let (dq, dk, dv) = flash_backward_with_parts_view(
+                q.view(),
+                k.view(),
+                v.view(),
+                dout.view(),
+                causal,
+                None,
+                &parts,
+            );
             let loss = |q: &Mat, k: &Mat, v: &Mat| -> f32 {
-                let out = flash_attention(q, k, v, causal, None, 4);
+                let out = flash(q, k, v, causal, 4);
                 out.data.iter().zip(&dout.data).map(|(a, b)| a * b).sum()
             };
             let eps = 3e-3;

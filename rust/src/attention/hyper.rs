@@ -10,10 +10,15 @@
 //!   4. Merge the streaming triples; normalize.
 //!
 //! Total Θ(n·(b + m)·d) — the near-linear path of the paper.
+//!
+//! The view-based cores (`*_view`, `HyperPlan::build_view`) are the
+//! implementation; they are reached through the unified
+//! [`crate::attention::op::AttentionOp`] API.  The `&Mat` free functions
+//! remain as deprecated shims for one release.
 
 use super::{softmax_scale, Parts, NEG_INF};
 use crate::kernel;
-use crate::linalg::{dot, invert_permutation, Mat};
+use crate::linalg::{dot, invert_permutation, Mat, MatRef};
 use crate::lsh::Lsh;
 use crate::par;
 use crate::rng::Rng;
@@ -49,8 +54,10 @@ impl Default for HyperParams {
     }
 }
 
-/// Internal: everything the forward pass derives from randomness, kept so
-/// the backward pass can replay the identical estimator.
+/// Everything the forward pass derives from randomness, kept so the
+/// backward pass can replay the identical estimator.  Built and consumed
+/// by [`crate::attention::op::AttentionOp`]; not part of the public API
+/// surface beyond that.
 pub struct HyperPlan {
     pub perm_q: Vec<usize>,
     pub perm_k: Vec<usize>,
@@ -69,7 +76,19 @@ pub struct HyperPlan {
 
 impl HyperPlan {
     /// Draw LSH permutations and column samples.
+    #[deprecated(note = "plan plumbing is internal to `attention::op::AttentionOp` now")]
     pub fn build(q: &Mat, k: &Mat, v: &Mat, p: &HyperParams, rng: &mut Rng) -> Self {
+        HyperPlan::build_view(q.view(), k.view(), v.view(), p, rng)
+    }
+
+    /// View-based core of the plan builder.
+    pub(crate) fn build_view(
+        q: MatRef<'_>,
+        k: MatRef<'_>,
+        v: MatRef<'_>,
+        p: &HyperParams,
+        rng: &mut Rng,
+    ) -> Self {
         let n = q.rows;
         assert_eq!(k.rows, n, "hyper attention requires len(q) == len(k)");
         let block = p.block.min(n);
@@ -107,16 +126,40 @@ impl HyperPlan {
 }
 
 /// HyperAttention triple (original row order).
+#[deprecated(note = "use `attention::op::AttentionOp` with `Backend::Hyper`")]
 pub fn hyper_parts(q: &Mat, k: &Mat, v: &Mat, p: &HyperParams, rng: &mut Rng) -> Parts {
-    let plan = HyperPlan::build(q, k, v, p, rng);
-    hyper_parts_with_plan(q, k, v, p, &plan)
+    hyper_parts_view(q.view(), k.view(), v.view(), p, rng)
+}
+
+/// View-based core: plan + deterministic forward.
+pub(crate) fn hyper_parts_view(
+    q: MatRef<'_>,
+    k: MatRef<'_>,
+    v: MatRef<'_>,
+    p: &HyperParams,
+    rng: &mut Rng,
+) -> Parts {
+    let plan = HyperPlan::build_view(q, k, v, p, rng);
+    hyper_parts_with_plan_view(q, k, v, p, &plan)
 }
 
 /// Deterministic forward given a pre-built plan (shared with backward).
+#[deprecated(note = "use `attention::op::AttentionOp` (plans are cached in `AttnOutput`)")]
 pub fn hyper_parts_with_plan(
     q: &Mat,
     k: &Mat,
     v: &Mat,
+    p: &HyperParams,
+    plan: &HyperPlan,
+) -> Parts {
+    hyper_parts_with_plan_view(q.view(), k.view(), v.view(), p, plan)
+}
+
+/// View-based core of the deterministic forward.
+pub(crate) fn hyper_parts_with_plan_view(
+    q: MatRef<'_>,
+    k: MatRef<'_>,
+    v: MatRef<'_>,
     p: &HyperParams,
     plan: &HyperPlan,
 ) -> Parts {
@@ -273,8 +316,9 @@ pub fn hyper_parts_with_plan(
 }
 
 /// HyperAttention output (n × d), Algorithm 3 normalized.
+#[deprecated(note = "use `attention::op::AttentionOp` with `Backend::Hyper`")]
 pub fn hyper_attention(q: &Mat, k: &Mat, v: &Mat, p: &HyperParams, rng: &mut Rng) -> Mat {
-    hyper_parts(q, k, v, p, rng).finalize()
+    hyper_parts_view(q.view(), k.view(), v.view(), p, rng).finalize()
 }
 
 /// Backward through the HyperAttention estimator (sampling held fixed).
@@ -284,6 +328,7 @@ pub fn hyper_attention(q: &Mat, k: &Mat, v: &Mat, p: &HyperParams, rng: &mut Rng
 /// weight), so `∂L/∂l_ij = p̃_ij · (dout_i · (v_j − O_i))` with p̃ the
 /// normalized weights — same structure as exact attention restricted to
 /// the touched entries.  Cost matches the forward: Θ(n(b+m)d).
+#[deprecated(note = "use `attention::op::AttentionOp::backward`")]
 pub fn hyper_backward(
     q: &Mat,
     k: &Mat,
@@ -292,17 +337,47 @@ pub fn hyper_backward(
     p: &HyperParams,
     plan: &HyperPlan,
 ) -> (Mat, Mat, Mat) {
-    let parts = hyper_parts_with_plan(q, k, v, p, plan);
-    hyper_backward_with_parts(q, k, v, dout, p, plan, &parts)
+    let parts = hyper_parts_with_plan_view(q.view(), k.view(), v.view(), p, plan);
+    hyper_backward_with_parts_view(
+        q.view(),
+        k.view(),
+        v.view(),
+        dout.view(),
+        p,
+        plan,
+        &parts,
+    )
 }
 
 /// [`hyper_backward`] given the already-computed forward triple (the
 /// fwd+bwd path has it in hand — no second forward pass).
+#[deprecated(note = "use `attention::op::AttentionOp::backward`")]
 pub fn hyper_backward_with_parts(
     q: &Mat,
     k: &Mat,
     v: &Mat,
     dout: &Mat,
+    p: &HyperParams,
+    plan: &HyperPlan,
+    parts: &Parts,
+) -> (Mat, Mat, Mat) {
+    hyper_backward_with_parts_view(
+        q.view(),
+        k.view(),
+        v.view(),
+        dout.view(),
+        p,
+        plan,
+        parts,
+    )
+}
+
+/// View-based core of the estimator backward.
+pub(crate) fn hyper_backward_with_parts_view(
+    q: MatRef<'_>,
+    k: MatRef<'_>,
+    v: MatRef<'_>,
+    dout: MatRef<'_>,
     p: &HyperParams,
     plan: &HyperPlan,
     parts: &Parts,
@@ -332,8 +407,8 @@ pub fn hyper_backward_with_parts(
         .collect();
 
     // dq is row-parallel; dk/dv accumulate per key, so serialize those
-    // (hyper backward is cheap enough; coordinator batches across heads).
-    // key lists per sorted block, in original indices
+    // (hyper backward is cheap enough; the op layer parallelizes across
+    // heads).  key lists per sorted block, in original indices
     let mut block_keys: Vec<Vec<usize>> = vec![Vec::with_capacity(block); nb];
     for j in 0..n {
         block_keys[plan.pos_k[j] / block].push(j);
@@ -440,11 +515,15 @@ mod tests {
         (q, k, v)
     }
 
+    fn hyper(q: &Mat, k: &Mat, v: &Mat, p: &HyperParams, rng: &mut Rng) -> Mat {
+        hyper_parts_view(q.view(), k.view(), v.view(), p, rng).finalize()
+    }
+
     #[test]
     fn output_shape_and_finite() {
         let (q, k, v) = clustered(0, 128, 16, 4, 0.3);
         let p = HyperParams { block: 32, samples: 32, ..Default::default() };
-        let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(1));
+        let out = hyper(&q, &k, &v, &p, &mut Rng::new(1));
         assert_eq!((out.rows, out.cols), (128, 16));
         assert!(out.data.iter().all(|x| x.is_finite()));
     }
@@ -454,7 +533,7 @@ mod tests {
         // every output row is a convex combination of V rows
         let (q, k, v) = clustered(1, 64, 8, 4, 0.3);
         let p = HyperParams { block: 16, samples: 32, ..Default::default() };
-        let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(2));
+        let out = hyper(&q, &k, &v, &p, &mut Rng::new(2));
         for j in 0..8 {
             let (mut lo, mut hi) = (f32::MAX, f32::MIN);
             for i in 0..64 {
@@ -475,7 +554,7 @@ mod tests {
             let mut es = 0.0;
             for s in 0..3u64 {
                 let p = HyperParams { block: 32, samples: m, ..Default::default() };
-                let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(100 + s));
+                let out = hyper(&q, &k, &v, &p, &mut Rng::new(100 + s));
                 es += measure::spectral_error(&out, &q, &k, &v, false, None);
             }
             errs.push(es / 3.0);
@@ -492,7 +571,7 @@ mod tests {
         // residual is empty => exact attention.
         let (q, k, v) = clustered(3, 64, 8, 4, 0.3);
         let p = HyperParams { block: 64, samples: 0, ..Default::default() };
-        let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(5));
+        let out = hyper(&q, &k, &v, &p, &mut Rng::new(5));
         let exact = exact::naive_attention(&q, &k, &v, false, None);
         assert!(out.max_abs_diff(&exact) < 1e-4);
     }
@@ -506,9 +585,9 @@ mod tests {
             mode: SampleMode::VNorm,
             ..Default::default()
         };
-        let plan = HyperPlan::build(&q, &k, &v, &p, &mut Rng::new(6));
+        let plan = HyperPlan::build_view(q.view(), k.view(), v.view(), &p, &mut Rng::new(6));
         assert!(plan.sample_w.iter().all(|&w| w > 0.0 && w.is_finite()));
-        let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(6));
+        let out = hyper(&q, &k, &v, &p, &mut Rng::new(6));
         assert!(out.data.iter().all(|x| x.is_finite()));
     }
 
@@ -516,8 +595,30 @@ mod tests {
     fn deterministic_given_seed() {
         let (q, k, v) = clustered(5, 64, 8, 4, 0.3);
         let p = HyperParams { block: 16, samples: 32, ..Default::default() };
-        let a = hyper_attention(&q, &k, &v, &p, &mut Rng::new(9));
-        let b = hyper_attention(&q, &k, &v, &p, &mut Rng::new(9));
+        let a = hyper(&q, &k, &v, &p, &mut Rng::new(9));
+        let b = hyper(&q, &k, &v, &p, &mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_match_view_core() {
+        let (q, k, v) = clustered(30, 64, 8, 4, 0.3);
+        let p = HyperParams { block: 16, samples: 32, ..Default::default() };
+        assert_eq!(
+            hyper_attention(&q, &k, &v, &p, &mut Rng::new(3)),
+            hyper(&q, &k, &v, &p, &mut Rng::new(3))
+        );
+        let plan = HyperPlan::build(&q, &k, &v, &p, &mut Rng::new(4));
+        let mut rng = Rng::new(5);
+        let dout = Mat::randn(64, 8, &mut rng);
+        let parts = hyper_parts_with_plan(&q, &k, &v, &p, &plan);
+        assert_eq!(
+            parts.finalize(),
+            hyper_parts_with_plan_view(q.view(), k.view(), v.view(), &p, &plan).finalize()
+        );
+        let a = hyper_backward(&q, &k, &v, &dout, &p, &plan);
+        let b = hyper_backward_with_parts(&q, &k, &v, &dout, &p, &plan, &parts);
         assert_eq!(a, b);
     }
 
@@ -527,12 +628,13 @@ mod tests {
         // parts exactly — checks the gather/scatter bookkeeping.
         let (q, k, v) = clustered(6, 32, 8, 2, 0.2);
         let p = HyperParams { block: 32, samples: 0, ..Default::default() };
-        let parts = hyper_parts(&q, &k, &v, &p, &mut Rng::new(11));
+        let parts = hyper_parts_view(q.view(), k.view(), v.view(), &p, &mut Rng::new(11));
         let naive = exact::naive_parts(&q, &k, &v, false, None);
-        let rs_a = parts.row_sums();
-        let rs_b = naive.row_sums();
+        // compare in log space: immune to exp(m) overflow for large logits
+        let rs_a = parts.log_row_sums();
+        let rs_b = naive.log_row_sums();
         for i in 0..32 {
-            assert!((rs_a[i] - rs_b[i]).abs() / rs_b[i] < 1e-4);
+            assert!((rs_a[i] - rs_b[i]).abs() < 1e-4);
         }
     }
 
@@ -546,7 +648,7 @@ mod tests {
         {
             let (q, k, v) = clustered(seed, n, d, clusters, 0.3);
             let p = HyperParams { block: n, samples: 0, ..Default::default() };
-            let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(seed + 100));
+            let out = hyper(&q, &k, &v, &p, &mut Rng::new(seed + 100));
             let exact = exact::naive_attention(&q, &k, &v, false, None);
             let diff = out.max_abs_diff(&exact);
             assert!(diff < 1e-4, "n={n} d={d}: max abs diff {diff}");
@@ -567,14 +669,14 @@ mod tests {
             mode: SampleMode::VNorm,
             ..Default::default()
         };
-        let plan = HyperPlan::build(&q, &k, &v, &p, &mut Rng::new(21));
+        let plan = HyperPlan::build_view(q.view(), k.view(), v.view(), &p, &mut Rng::new(21));
         assert_eq!(plan.mode, SampleMode::VNorm);
         assert!(
             plan.sample_w.iter().all(|&w| w == 1.0),
             "setup should yield exact unit weights, got {:?}",
             plan.sample_w
         );
-        let got = hyper_parts_with_plan(&q, &k, &v, &p, &plan);
+        let got = hyper_parts_with_plan_view(q.view(), k.view(), v.view(), &p, &plan);
 
         // scalar oracle with explicit VNorm semantics (weight w = 1.0)
         let sc = softmax_scale(d, None);
@@ -606,12 +708,22 @@ mod tests {
     fn backward_finite_difference() {
         let (q, k, v) = clustered(7, 32, 4, 2, 0.3);
         let p = HyperParams { block: 8, samples: 16, ..Default::default() };
-        let plan = HyperPlan::build(&q, &k, &v, &p, &mut Rng::new(13));
+        let plan = HyperPlan::build_view(q.view(), k.view(), v.view(), &p, &mut Rng::new(13));
         let mut rng = Rng::new(14);
         let dout = Mat::randn(32, 4, &mut rng);
-        let (dq, dk, dv) = hyper_backward(&q, &k, &v, &dout, &p, &plan);
+        let parts = hyper_parts_with_plan_view(q.view(), k.view(), v.view(), &p, &plan);
+        let (dq, dk, dv) = hyper_backward_with_parts_view(
+            q.view(),
+            k.view(),
+            v.view(),
+            dout.view(),
+            &p,
+            &plan,
+            &parts,
+        );
         let loss = |q: &Mat, k: &Mat, v: &Mat| -> f32 {
-            let out = hyper_parts_with_plan(q, k, v, &p, &plan).finalize();
+            let out =
+                hyper_parts_with_plan_view(q.view(), k.view(), v.view(), &p, &plan).finalize();
             out.data.iter().zip(&dout.data).map(|(a, b)| a * b).sum()
         };
         let eps = 3e-3;

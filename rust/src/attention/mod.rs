@@ -7,6 +7,12 @@
 //! key subsets merge exactly and `output = N / s`.
 //!
 //! Modules:
+//! * [`op`] — **the public API**: [`op::AttnConfig`] →
+//!   [`op::AttentionOp`], one batched multi-head entry point over every
+//!   backend (exact, flash, hyper, causal-hyper, auto-routed), zero-copy
+//!   [`crate::linalg::QkvView`] inputs, plan-cached forward/backward
+//!   sessions.  The per-algorithm free functions below it are deprecated
+//!   shims kept for one release.
 //! * [`exact`] — naive reference + FlashAttention-style streaming exact
 //!   attention (the paper's baseline), forward and backward.
 //! * [`approx_d`] — Algorithm 2 (ApproxD), the Lemma 1 estimator.
@@ -22,6 +28,7 @@ pub mod causal;
 pub mod exact;
 pub mod hyper;
 pub mod measure;
+pub mod op;
 
 use crate::linalg::Mat;
 
@@ -99,13 +106,36 @@ impl Parts {
         out
     }
 
-    /// Estimated row sums of the unnormalized A over this part's keys,
-    /// in exp space: s · exp(m).  (The D̃ diagonal of the paper.)
-    pub fn row_sums(&self) -> Vec<f32> {
+    /// Log-space row sums of the unnormalized A over this part's keys:
+    /// `ln(Σ w·e^l) = m + ln(s)`.  (The log of the D̃ diagonal of the
+    /// paper.)  Finite for any logit magnitude — this is the form to use
+    /// when logits can be large.
+    pub fn log_row_sums(&self) -> Vec<f32> {
         self.m
             .iter()
             .zip(&self.s)
-            .map(|(&m, &s)| s * m.exp())
+            .map(|(&m, &s)| m + s.max(1e-30).ln())
+            .collect()
+    }
+
+    /// Exp-space row sums `s · exp(m)` (the D̃ diagonal of the paper).
+    ///
+    /// Contract: computed in log space and **saturated to `f32::MAX`**
+    /// when `m + ln(s)` exceeds the f32 exponent range (m ≳ 88), instead
+    /// of overflowing to `inf` as the naive `s * m.exp()` did.  Callers
+    /// that need exact values at large logits should use
+    /// [`Parts::log_row_sums`].
+    pub fn row_sums(&self) -> Vec<f32> {
+        self.log_row_sums()
+            .into_iter()
+            .map(|l| {
+                let e = l.exp();
+                if e.is_finite() {
+                    e
+                } else {
+                    f32::MAX
+                }
+            })
             .collect()
     }
 }
@@ -195,5 +225,30 @@ mod tests {
         let rs = p.row_sums();
         assert!((rs[0] - 3.0).abs() < 1e-6);
         assert!((rs[1] - 10.0).abs() < 1e-5);
+        let ls = p.log_row_sums();
+        assert!((ls[0] - 3.0f32.ln()).abs() < 1e-6);
+        assert!((ls[1] - 10.0f32.ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn row_sums_large_logits_regression() {
+        // m = 200 overflows exp() in f32; the naive `s * m.exp()` of the
+        // old implementation returned inf here.  The log-space form must
+        // be exact and the exp-space form must saturate finitely.
+        let p = Parts {
+            m: vec![200.0, 0.0],
+            s: vec![2.0, 1.0],
+            num: Mat::zeros(2, 1),
+        };
+        let ls = p.log_row_sums();
+        assert!((ls[0] - (200.0 + 2.0f32.ln())).abs() < 1e-4);
+        let rs = p.row_sums();
+        assert!(rs[0].is_finite(), "exp-space row sum overflowed: {}", rs[0]);
+        assert_eq!(rs[0], f32::MAX);
+        assert!((rs[1] - 1.0).abs() < 1e-6);
+        // empty parts stay at zero, not NaN
+        let empty = Parts::empty(3, 2);
+        assert!(empty.row_sums().iter().all(|&x| x == 0.0));
+        assert!(empty.log_row_sums().iter().all(|&x| x.is_finite() || x < 0.0));
     }
 }

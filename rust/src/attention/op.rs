@@ -1,0 +1,929 @@
+//! The unified attention operator: one batched multi-head entry point
+//! over every backend.
+//!
+//! This is the single public API of the attention layer.  The paper
+//! sells HyperAttention on its *modular design* — heavy-entry masking,
+//! sampled residual, and the exact-block primitive are interchangeable
+//! parts behind one attention contract — and this module is that
+//! contract:
+//!
+//! ```text
+//! AttnConfig { backend, causal, block, samples, seed, .. }
+//!     │  .build()           — validated once
+//!     ▼
+//! AttentionOp ──.forward(QkvView)──▶ AttnOutput { out, per-head plans }
+//!     │                                   │
+//!     └──.backward(view, dout, &fwd)──────┘   replays the identical
+//!                                             estimator, no recompute
+//! ```
+//!
+//! * **Backends** — [`Backend::Exact`] (naive oracle),
+//!   [`Backend::Flash`] (streaming exact), [`Backend::Hyper`]
+//!   (Algorithm 3), [`Backend::CausalHyper`] (Algorithm 4), and
+//!   [`Backend::Auto`], which resolves per sequence length through the
+//!   documented [`AutoPolicy`] table.
+//! * **Zero-copy inputs** — [`QkvView`] borrows `[heads, n, d]` buffers;
+//!   heads are dispatched in parallel over the [`crate::par`] fork/join
+//!   substrate with no per-head slicing copies.
+//! * **Plan-cached sessions** — `forward` captures each head's
+//!   [`HyperPlan`] / streaming triple / recorded causal recursion inside
+//!   the returned [`AttnOutput`], so `backward` replays the exact same
+//!   estimator (identical sampled columns, identical LSH buckets)
+//!   without a second forward pass.
+//! * **Seed policy** — [`SeedPolicy::PerHead`] derives one independent
+//!   stream per head from a base seed (the serving default);
+//!   [`SeedPolicy::Shared`] gives every head the same stream (matches
+//!   the historical single-head free functions).
+
+use super::causal::{self, CausalParams, CausalPlan};
+use super::exact;
+use super::hyper::{self, HyperParams, HyperPlan, SampleMode};
+use super::Parts;
+use crate::linalg::{Mat, MatRef, QkvView};
+use crate::par;
+use crate::rng::Rng;
+
+/// Which algorithm executes a job.  `Auto` is resolved per sequence
+/// length by [`AutoPolicy`]; every other variant is explicit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// Naive O(n²)-memory exact attention (reference/oracle quality).
+    Exact,
+    /// FlashAttention-style streaming exact attention.
+    Flash,
+    /// Algorithm 3: non-causal HyperAttention (LSH blocks + sampled
+    /// residual).  Requires `causal = false`.
+    Hyper,
+    /// Algorithm 4: recursive causal HyperAttention.  Requires
+    /// `causal = true`.
+    CausalHyper,
+    /// Resolve per length via [`AutoPolicy`].
+    Auto,
+}
+
+/// Per-head RNG derivation for the sampled estimators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeedPolicy {
+    /// Independent stream per head: `Rng::new(seed ^ head · φ)` — the
+    /// serving default (matches the historical engine derivation).
+    PerHead(u64),
+    /// Every head draws from the same stream `Rng::new(seed)` (matches
+    /// the historical single-head free functions).
+    Shared(u64),
+}
+
+impl SeedPolicy {
+    #[inline]
+    pub(crate) fn rng_for_head(&self, head: usize) -> Rng {
+        match *self {
+            SeedPolicy::PerHead(s) => {
+                Rng::new(s ^ (head as u64).wrapping_mul(0x9E3779B9))
+            }
+            SeedPolicy::Shared(s) => Rng::new(s),
+        }
+    }
+}
+
+/// Largest block size ≤ `target` that divides `n` (≥ 1), by enumerating
+/// divisor pairs up to √n — O(√n), vs the O(n) downward scan this
+/// replaces (which walked ~n candidates for prime n).
+pub fn fit_block(n: usize, target: usize) -> usize {
+    let target = target.min(n).max(1);
+    if n == 0 {
+        return 1;
+    }
+    let mut best = 1usize;
+    let mut i = 1usize;
+    while i * i <= n {
+        if n % i == 0 {
+            if i <= target && i > best {
+                best = i;
+            }
+            let j = n / i;
+            if j <= target && j > best {
+                best = j;
+            }
+        }
+        i += 1;
+    }
+    best
+}
+
+/// The documented `Auto` routing table (absorbs the heuristics that
+/// used to be hardwired in `coordinator/engine.rs`):
+///
+/// | condition                                   | backend       |
+/// |---------------------------------------------|---------------|
+/// | `n < hyper_threshold`                       | `Flash`       |
+/// | long + causal                               | `CausalHyper` |
+/// | long + non-causal, fitted block ≥ min_block | `Hyper`       |
+/// | long + non-causal, fitted block < min_block | `Flash`       |
+///
+/// The last row is the pathological-shape guard: prime-ish n admits no
+/// useful divisor block, so the near-linear estimator degenerates and
+/// exact streaming attention is both faster and exact.  The same guard
+/// is applied to an *explicit* `Backend::Hyper` request (documented
+/// degradation, previously an unwritten rule in the engine).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AutoPolicy {
+    /// jobs with n >= this use the HyperAttention family
+    pub hyper_threshold: usize,
+    /// smallest fitted block worth running the block estimator with
+    pub min_block: usize,
+}
+
+impl Default for AutoPolicy {
+    fn default() -> Self {
+        AutoPolicy { hyper_threshold: 1024, min_block: 8 }
+    }
+}
+
+impl AutoPolicy {
+    /// Resolve one (n, causal) job given the configured block target.
+    /// Never returns [`Backend::Auto`].
+    pub fn decide(&self, n: usize, causal: bool, block_target: usize) -> Backend {
+        if n < self.hyper_threshold {
+            return Backend::Flash;
+        }
+        if causal {
+            return Backend::CausalHyper;
+        }
+        if fit_block(n, block_target) < self.min_block {
+            Backend::Flash
+        } else {
+            Backend::Hyper
+        }
+    }
+}
+
+/// Everything needed to compile an [`AttentionOp`].  One struct, one
+/// validation point — replaces the three unrelated params structs
+/// (`HyperParams`, `CausalParams`, loose flash args) and the
+/// caller-threaded RNG of the free-function era.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AttnConfig {
+    pub backend: Backend,
+    pub causal: bool,
+    /// logit scale; `None` = 1/√d
+    pub scale: Option<f32>,
+    /// hyper block-size target (fitted to the largest divisor of n ≤ this)
+    pub block: usize,
+    /// residual sample count target (clamped to n)
+    pub samples: usize,
+    pub lsh_bits: usize,
+    pub sample_mode: SampleMode,
+    /// causal recursion base case (n ≤ base runs exact causal)
+    pub causal_base: usize,
+    /// key-tile size for the streaming exact kernel
+    pub flash_block: usize,
+    pub seed: SeedPolicy,
+    pub auto: AutoPolicy,
+}
+
+impl Default for AttnConfig {
+    fn default() -> Self {
+        AttnConfig {
+            backend: Backend::Auto,
+            causal: false,
+            scale: None,
+            block: 256,
+            samples: 256,
+            lsh_bits: 8,
+            sample_mode: SampleMode::Uniform,
+            causal_base: 4096,
+            flash_block: 64,
+            seed: SeedPolicy::PerHead(0),
+            auto: AutoPolicy::default(),
+        }
+    }
+}
+
+impl AttnConfig {
+    /// Streaming exact attention.
+    pub fn flash(causal: bool) -> Self {
+        AttnConfig { backend: Backend::Flash, causal, ..Default::default() }
+    }
+
+    /// Non-causal HyperAttention with the given block/sample targets.
+    pub fn hyper(block: usize, samples: usize) -> Self {
+        AttnConfig { backend: Backend::Hyper, block, samples, ..Default::default() }
+    }
+
+    /// Causal HyperAttention (Algorithm 4).
+    pub fn causal_hyper(block: usize, samples: usize, base: usize) -> Self {
+        AttnConfig {
+            backend: Backend::CausalHyper,
+            causal: true,
+            block,
+            samples,
+            causal_base: base,
+            ..Default::default()
+        }
+    }
+
+    /// Validate once into a compiled operator.
+    pub fn build(self) -> Result<AttentionOp, String> {
+        if self.block == 0 {
+            return Err("block must be >= 1".into());
+        }
+        if self.flash_block == 0 {
+            return Err("flash_block must be >= 1".into());
+        }
+        if self.causal_base == 0 {
+            return Err("causal_base must be >= 1".into());
+        }
+        if self.lsh_bits == 0 || self.lsh_bits > 30 {
+            return Err(format!("lsh_bits {} out of range 1..=30", self.lsh_bits));
+        }
+        if let Some(s) = self.scale {
+            if !s.is_finite() {
+                return Err("scale must be finite".into());
+            }
+        }
+        match (self.backend, self.causal) {
+            (Backend::Hyper, true) => {
+                Err("Backend::Hyper is non-causal; use CausalHyper or Auto".into())
+            }
+            (Backend::CausalHyper, false) => {
+                Err("Backend::CausalHyper requires causal = true".into())
+            }
+            _ => Ok(AttentionOp { cfg: self }),
+        }
+    }
+}
+
+/// Per-head replay state captured by `forward` for `backward`.
+enum HeadState {
+    /// Exact paths (naive or flash): the streaming triple, whose
+    /// (m, s) rows give the saved log-sum-exp statistics.
+    Exact(Parts),
+    /// Algorithm 3: the sampling plan plus the forward triple.
+    Hyper { plan: HyperPlan, parts: Parts },
+    /// Algorithm 4: the recorded recursion (leaf triples + per-split
+    /// off-diagonal plans).
+    Causal(CausalPlan),
+}
+
+/// One forward session: the `[heads, n, d]` output plus everything
+/// needed to replay the identical estimator in `backward`.  Sessions
+/// from [`AttentionOp::infer`] carry no replay state (backward on them
+/// errors).
+pub struct AttnOutput {
+    pub heads: usize,
+    pub n: usize,
+    pub d: usize,
+    /// `[heads, n, d]` row-major output
+    pub out: Vec<f32>,
+    backend: Backend,
+    /// config of the op that produced this session (backward refuses to
+    /// replay a session under a different config)
+    cfg: AttnConfig,
+    state: Vec<HeadState>,
+}
+
+impl AttnOutput {
+    /// The backend that actually ran (post-`Auto` resolution).
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Zero-copy view of one head's output.
+    pub fn head_out(&self, h: usize) -> MatRef<'_> {
+        assert!(h < self.heads);
+        let per = self.n * self.d;
+        MatRef::new(self.n, self.d, &self.out[h * per..(h + 1) * per])
+    }
+
+    /// Consume the session, keeping only the output buffer (serving
+    /// path: no backward coming).
+    pub fn into_out(self) -> Vec<f32> {
+        self.out
+    }
+}
+
+/// Multi-head gradients, `[heads, n, d]` row-major each.
+pub struct AttnGrads {
+    pub heads: usize,
+    pub n: usize,
+    pub d: usize,
+    pub dq: Vec<f32>,
+    pub dk: Vec<f32>,
+    pub dv: Vec<f32>,
+}
+
+impl AttnGrads {
+    pub fn head_dq(&self, h: usize) -> MatRef<'_> {
+        let per = self.n * self.d;
+        MatRef::new(self.n, self.d, &self.dq[h * per..(h + 1) * per])
+    }
+    pub fn head_dk(&self, h: usize) -> MatRef<'_> {
+        let per = self.n * self.d;
+        MatRef::new(self.n, self.d, &self.dk[h * per..(h + 1) * per])
+    }
+    pub fn head_dv(&self, h: usize) -> MatRef<'_> {
+        let per = self.n * self.d;
+        MatRef::new(self.n, self.d, &self.dv[h * per..(h + 1) * per])
+    }
+}
+
+/// A validated, compiled attention operator.  Cheap to build; reusable
+/// across any number of `forward`/`backward` sessions and shapes.
+pub struct AttentionOp {
+    cfg: AttnConfig,
+}
+
+impl AttentionOp {
+    pub fn config(&self) -> &AttnConfig {
+        &self.cfg
+    }
+
+    /// The backend that will run at sequence length `n` — the
+    /// [`AutoPolicy`] table plus the explicit-`Hyper` degenerate-block
+    /// guard.  Never returns [`Backend::Auto`].
+    pub fn resolve(&self, n: usize) -> Backend {
+        let b = match self.cfg.backend {
+            Backend::Auto => self.cfg.auto.decide(n, self.cfg.causal, self.cfg.block),
+            explicit => explicit,
+        };
+        match b {
+            Backend::Hyper
+                if fit_block(n, self.cfg.block) < self.cfg.auto.min_block =>
+            {
+                Backend::Flash
+            }
+            resolved => resolved,
+        }
+    }
+
+    /// Fitted Algorithm 3 params at length `n` (deterministic, so the
+    /// backward pass rederives them instead of storing them).
+    fn hyper_params(&self, n: usize) -> HyperParams {
+        HyperParams {
+            block: fit_block(n, self.cfg.block),
+            samples: self.cfg.samples.min(n),
+            lsh_bits: self.cfg.lsh_bits,
+            mode: self.cfg.sample_mode,
+            scale: self.cfg.scale,
+        }
+    }
+
+    /// Fitted Algorithm 4 params at length `n`.
+    fn causal_params(&self, n: usize) -> CausalParams {
+        CausalParams {
+            base: self.cfg.causal_base,
+            hyper: HyperParams {
+                block: fit_block(n, self.cfg.block).max(1),
+                samples: self.cfg.samples.min(n),
+                lsh_bits: self.cfg.lsh_bits,
+                mode: self.cfg.sample_mode,
+                scale: self.cfg.scale,
+            },
+            flash_block: self.cfg.flash_block,
+        }
+    }
+
+    /// Run attention over every head of `x`, in parallel over heads,
+    /// capturing every head's replay state so [`AttentionOp::backward`]
+    /// can follow.  For forward-only callers use
+    /// [`AttentionOp::infer`], which skips the capture.
+    pub fn forward(&self, x: QkvView<'_>) -> AttnOutput {
+        self.run(x, true)
+    }
+
+    /// Forward without backward-state capture — the serving / eval /
+    /// benchmark path.  Skips the causal plan recording (no leaf-triple
+    /// clones, no retained off-diagonal triples) and drops the per-head
+    /// statistics, so the cost is exactly the forward-only cost.  The
+    /// returned session cannot be passed to `backward` (it errors).
+    pub fn infer(&self, x: QkvView<'_>) -> AttnOutput {
+        self.run(x, false)
+    }
+
+    fn run(&self, x: QkvView<'_>, capture: bool) -> AttnOutput {
+        let backend = self.resolve(x.n);
+        let (h, n, d) = (x.heads, x.n, x.d);
+        let cfg = &self.cfg;
+        let per_head: Vec<(Mat, Option<HeadState>)> = par::par_map(h, |head| {
+            let (q, k, v) = x.head(head);
+            match backend {
+                Backend::Exact => {
+                    let parts = exact::naive_parts_view(q, k, v, cfg.causal, cfg.scale);
+                    (parts.finalize(), capture.then(move || HeadState::Exact(parts)))
+                }
+                Backend::Flash => {
+                    let parts = exact::flash_parts_view(
+                        q,
+                        k,
+                        v,
+                        cfg.causal,
+                        cfg.scale,
+                        cfg.flash_block,
+                    );
+                    (parts.finalize(), capture.then(move || HeadState::Exact(parts)))
+                }
+                Backend::Hyper => {
+                    let hp = self.hyper_params(n);
+                    let mut rng = cfg.seed.rng_for_head(head);
+                    let plan = HyperPlan::build_view(q, k, v, &hp, &mut rng);
+                    let parts = hyper::hyper_parts_with_plan_view(q, k, v, &hp, &plan);
+                    (
+                        parts.finalize(),
+                        capture.then(move || HeadState::Hyper { plan, parts }),
+                    )
+                }
+                Backend::CausalHyper => {
+                    let cp = self.causal_params(n);
+                    let mut rng = cfg.seed.rng_for_head(head);
+                    if capture {
+                        let (parts, plan) = causal::causal_plan_view(q, k, v, &cp, &mut rng);
+                        (parts.finalize(), Some(HeadState::Causal(plan)))
+                    } else {
+                        let parts = causal::causal_parts_view(q, k, v, &cp, &mut rng);
+                        (parts.finalize(), None)
+                    }
+                }
+                Backend::Auto => unreachable!("resolve() never returns Auto"),
+            }
+        });
+
+        let per = n * d;
+        let mut out = vec![0.0f32; h * per];
+        let mut state = Vec::with_capacity(if capture { h } else { 0 });
+        for (head, (o, st)) in per_head.into_iter().enumerate() {
+            out[head * per..(head + 1) * per].copy_from_slice(&o.data);
+            if let Some(st) = st {
+                state.push(st);
+            }
+        }
+        AttnOutput { heads: h, n, d, out, backend, cfg: self.cfg, state }
+    }
+
+    /// Gradients wrt (q, k, v) for the session recorded in `fwd`.  The
+    /// captured plans make this a pure replay: the identical sampled
+    /// columns, LSH buckets, and saved softmax statistics are reused —
+    /// no forward recompute, no RNG involvement.
+    pub fn backward(
+        &self,
+        x: QkvView<'_>,
+        dout: &[f32],
+        fwd: &AttnOutput,
+    ) -> Result<AttnGrads, String> {
+        let (h, n, d) = (x.heads, x.n, x.d);
+        if (fwd.heads, fwd.n, fwd.d) != (h, n, d) {
+            return Err(format!(
+                "forward session shape ({}, {}, {}) != view shape ({h}, {n}, {d})",
+                fwd.heads, fwd.n, fwd.d
+            ));
+        }
+        // A session replays correctly only under the config that built
+        // it: the backward rederives causal/scale/fitted params from
+        // self.  (Seed is exempt — the captured plans already encode
+        // every random choice, so backward never touches the RNG.)
+        let mut want = fwd.cfg;
+        want.seed = self.cfg.seed;
+        if want != self.cfg {
+            return Err(format!(
+                "forward session was built by a different op config \
+                 ({:?} vs {:?}); replay would use mismatched parameters",
+                fwd.cfg, self.cfg
+            ));
+        }
+        if fwd.state.len() != h {
+            return Err(
+                "session is inference-only (built by infer()); use forward() to \
+                 capture backward state"
+                    .into(),
+            );
+        }
+        let per = n * d;
+        if dout.len() != h * per {
+            return Err(format!("dout has {} elements, want {}", dout.len(), h * per));
+        }
+        let cfg = &self.cfg;
+        let per_head: Vec<(Mat, Mat, Mat)> = par::par_map(h, |head| {
+            let (q, k, v) = x.head(head);
+            let dh = MatRef::new(n, d, &dout[head * per..(head + 1) * per]);
+            match &fwd.state[head] {
+                HeadState::Exact(parts) => exact::flash_backward_with_parts_view(
+                    q, k, v, dh, cfg.causal, cfg.scale, parts,
+                ),
+                HeadState::Hyper { plan, parts } => {
+                    let hp = self.hyper_params(n);
+                    hyper::hyper_backward_with_parts_view(q, k, v, dh, &hp, plan, parts)
+                }
+                HeadState::Causal(plan) => {
+                    let cp = self.causal_params(n);
+                    causal::causal_backward_with_plan(q, k, v, dh, &cp, plan)
+                }
+            }
+        });
+
+        let mut dq = vec![0.0f32; h * per];
+        let mut dk = vec![0.0f32; h * per];
+        let mut dv = vec![0.0f32; h * per];
+        for (head, (q_g, k_g, v_g)) in per_head.into_iter().enumerate() {
+            dq[head * per..(head + 1) * per].copy_from_slice(&q_g.data);
+            dk[head * per..(head + 1) * per].copy_from_slice(&k_g.data);
+            dv[head * per..(head + 1) * per].copy_from_slice(&v_g.data);
+        }
+        Ok(AttnGrads { heads: h, n, d, dq, dk, dv })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clustered_flat(seed: u64, h: usize, n: usize, d: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        (
+            rng.normal_vec(h * n * d),
+            rng.normal_vec(h * n * d),
+            rng.normal_vec(h * n * d),
+        )
+    }
+
+    fn head_mat(buf: &[f32], head: usize, n: usize, d: usize) -> Mat {
+        Mat::from_vec(n, d, buf[head * n * d..(head + 1) * n * d].to_vec())
+    }
+
+    #[test]
+    fn fit_block_matches_downward_scan() {
+        // oracle: the O(n) definition it replaces
+        let slow = |n: usize, target: usize| -> usize {
+            let mut b = target.min(n).max(1);
+            while n % b != 0 {
+                b -= 1;
+            }
+            b
+        };
+        for n in 1..=512usize {
+            for &t in &[1usize, 2, 7, 8, 16, 37, 64, 100, 256, 1024] {
+                assert_eq!(fit_block(n, t), slow(n, t), "n={n} target={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn fit_block_prime_pow2_odd_composite() {
+        // prime n: only the trivial block fits
+        assert_eq!(fit_block(97, 64), 1);
+        assert_eq!(fit_block(8191, 256), 1); // Mersenne prime
+        // powers of two: the target itself (when target | n)
+        assert_eq!(fit_block(128, 32), 32);
+        assert_eq!(fit_block(1 << 16, 256), 256);
+        // odd composite: largest divisor below target
+        assert_eq!(fit_block(105, 32), 21); // 105 = 3·5·7
+        assert_eq!(fit_block(81, 30), 27);
+        // target >= n
+        assert_eq!(fit_block(48, 64), 48);
+        // degenerate
+        assert_eq!(fit_block(1, 256), 1);
+    }
+
+    #[test]
+    fn auto_policy_table() {
+        let op = AttnConfig {
+            backend: Backend::Auto,
+            causal: false,
+            block: 256,
+            auto: AutoPolicy { hyper_threshold: 1024, min_block: 8 },
+            ..Default::default()
+        }
+        .build()
+        .unwrap();
+        // short: flash regardless of divisibility
+        assert_eq!(op.resolve(512), Backend::Flash);
+        assert_eq!(op.resolve(1023), Backend::Flash);
+        // long, divisible: hyper
+        assert_eq!(op.resolve(1024), Backend::Hyper);
+        assert_eq!(op.resolve(65536), Backend::Hyper);
+        // long, prime: pathological-shape guard -> flash
+        assert_eq!(op.resolve(1031), Backend::Flash); // prime > threshold
+        // long, causal: causal hyper
+        let opc = AttnConfig {
+            backend: Backend::Auto,
+            causal: true,
+            auto: AutoPolicy { hyper_threshold: 1024, min_block: 8 },
+            ..Default::default()
+        }
+        .build()
+        .unwrap();
+        assert_eq!(opc.resolve(512), Backend::Flash);
+        assert_eq!(opc.resolve(4096), Backend::CausalHyper);
+        // explicit Hyper also degrades on unfittable blocks
+        let oph = AttnConfig::hyper(256, 256).build().unwrap();
+        assert_eq!(oph.resolve(1031), Backend::Flash);
+        assert_eq!(oph.resolve(2048), Backend::Hyper);
+        // explicit non-auto backends pass through
+        let opf = AttnConfig::flash(false).build().unwrap();
+        assert_eq!(opf.resolve(1 << 20), Backend::Flash);
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(AttnConfig { block: 0, ..Default::default() }.build().is_err());
+        assert!(AttnConfig { flash_block: 0, ..Default::default() }.build().is_err());
+        assert!(AttnConfig { lsh_bits: 31, ..Default::default() }.build().is_err());
+        assert!(AttnConfig { scale: Some(f32::NAN), ..Default::default() }
+            .build()
+            .is_err());
+        // backend/causal contract
+        assert!(AttnConfig { backend: Backend::Hyper, causal: true, ..Default::default() }
+            .build()
+            .is_err());
+        assert!(
+            AttnConfig { backend: Backend::CausalHyper, causal: false, ..Default::default() }
+                .build()
+                .is_err()
+        );
+        assert!(AttnConfig::causal_hyper(32, 32, 64).build().is_ok());
+    }
+
+    /// Every backend through the unified op vs the naive oracle, in the
+    /// regime where each is exact.
+    #[test]
+    fn cross_backend_parity_vs_naive() {
+        let (h, n, d) = (3usize, 64usize, 8usize);
+        let (q, k, v) = clustered_flat(0, h, n, d);
+        let view = QkvView::new(h, n, d, &q, &k, &v).unwrap();
+        for causal in [false, true] {
+            let configs: Vec<(&str, AttnConfig)> = vec![
+                (
+                    "exact",
+                    AttnConfig { backend: Backend::Exact, causal, ..Default::default() },
+                ),
+                ("flash", AttnConfig::flash(causal)),
+                // hyper with block = n, samples = 0 degenerates to exact
+                (
+                    "hyper-degenerate",
+                    AttnConfig {
+                        backend: if causal { Backend::CausalHyper } else { Backend::Hyper },
+                        causal,
+                        block: n,
+                        samples: 0,
+                        // causal: base >= n bottoms out at exact flash
+                        causal_base: n,
+                        ..Default::default()
+                    },
+                ),
+                // auto below threshold routes to flash
+                (
+                    "auto-short",
+                    AttnConfig {
+                        backend: Backend::Auto,
+                        causal,
+                        auto: AutoPolicy { hyper_threshold: n + 1, min_block: 8 },
+                        ..Default::default()
+                    },
+                ),
+            ];
+            for (name, cfg) in configs {
+                let op = cfg.build().unwrap();
+                let got = op.forward(view);
+                for head in 0..h {
+                    let (qm, km, vm) = (
+                        head_mat(&q, head, n, d),
+                        head_mat(&k, head, n, d),
+                        head_mat(&v, head, n, d),
+                    );
+                    let want = exact::naive_attention(&qm, &km, &vm, causal, None);
+                    let diff = want.max_abs_diff(&got.head_out(head).to_mat());
+                    assert!(
+                        diff < 1e-4,
+                        "{name} causal={causal} head={head}: diff {diff}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The zero-copy multi-head path must equal running each head
+    /// through an owned per-head copy.
+    #[test]
+    fn multi_head_view_equals_per_head_copy() {
+        let (h, n, d) = (4usize, 64usize, 16usize);
+        let (q, k, v) = clustered_flat(1, h, n, d);
+        let view = QkvView::new(h, n, d, &q, &k, &v).unwrap();
+        let op = AttnConfig {
+            backend: Backend::Hyper,
+            block: 16,
+            samples: 16,
+            seed: SeedPolicy::PerHead(42),
+            ..Default::default()
+        }
+        .build()
+        .unwrap();
+        let batched = op.forward(view);
+        assert_eq!(batched.backend(), Backend::Hyper);
+        for head in 0..h {
+            // per-head copies through a fresh single-head view
+            let (qm, km, vm) = (
+                head_mat(&q, head, n, d),
+                head_mat(&k, head, n, d),
+                head_mat(&v, head, n, d),
+            );
+            let single = QkvView::from_mats(&qm, &km, &vm);
+            // same stream the batched op derives for this head
+            let op1 = AttnConfig {
+                seed: SeedPolicy::Shared(42 ^ (head as u64).wrapping_mul(0x9E3779B9)),
+                ..*op.config()
+            }
+            .build()
+            .unwrap();
+            let one = op1.forward(single);
+            assert_eq!(
+                one.out,
+                batched.head_out(head).data.to_vec(),
+                "head {head} diverged between batched view and per-head copy"
+            );
+        }
+    }
+
+    /// forward → backward must be a deterministic replay: same seed ⇒
+    /// identical outputs AND identical gradients, for every sampled
+    /// backend.
+    #[test]
+    fn seed_determinism_forward_backward_replay() {
+        let (h, n, d) = (2usize, 64usize, 8usize);
+        let (q, k, v) = clustered_flat(2, h, n, d);
+        let dout = Rng::new(3).normal_vec(h * n * d);
+        for cfg in [
+            AttnConfig {
+                backend: Backend::Hyper,
+                block: 16,
+                samples: 16,
+                seed: SeedPolicy::PerHead(7),
+                ..Default::default()
+            },
+            AttnConfig {
+                backend: Backend::CausalHyper,
+                causal: true,
+                block: 16,
+                samples: 16,
+                causal_base: 16,
+                seed: SeedPolicy::PerHead(7),
+                ..Default::default()
+            },
+            AttnConfig { backend: Backend::Flash, causal: true, ..Default::default() },
+        ] {
+            let op = cfg.build().unwrap();
+            let view = QkvView::new(h, n, d, &q, &k, &v).unwrap();
+            let f1 = op.forward(view);
+            let f2 = op.forward(view);
+            assert_eq!(f1.out, f2.out, "{:?}: forward not deterministic", cfg.backend);
+            let g1 = op.backward(view, &dout, &f1).unwrap();
+            let g2 = op.backward(view, &dout, &f2).unwrap();
+            assert_eq!(g1.dq, g2.dq, "{:?}: dq replay diverged", cfg.backend);
+            assert_eq!(g1.dk, g2.dk, "{:?}: dk replay diverged", cfg.backend);
+            assert_eq!(g1.dv, g2.dv, "{:?}: dv replay diverged", cfg.backend);
+        }
+    }
+
+    /// Finite-difference check straight through the public API: the
+    /// backward of the *sampled* estimator must differentiate the
+    /// forward the session actually ran.  The loss replays the plan
+    /// RECORDED in the session (not a rebuilt one): under perturbation a
+    /// rebuilt LSH plan could reassign a boundary row to another bucket
+    /// and make the loss discontinuous.
+    #[test]
+    fn backward_finite_difference_through_op() {
+        let (h, n, d) = (1usize, 32usize, 4usize);
+        let (q, k, v) = clustered_flat(4, h, n, d);
+        let dout = Rng::new(5).normal_vec(h * n * d);
+        let op = AttnConfig {
+            backend: Backend::Hyper,
+            block: 8,
+            samples: 16,
+            seed: SeedPolicy::Shared(13),
+            ..Default::default()
+        }
+        .build()
+        .unwrap();
+        let view = QkvView::new(h, n, d, &q, &k, &v).unwrap();
+        let fwd = op.forward(view);
+        let g = op.backward(view, &dout, &fwd).unwrap();
+        // pin the session's recorded plan for the loss replay
+        let HeadState::Hyper { plan, .. } = &fwd.state[0] else {
+            panic!("expected a hyper session");
+        };
+        let hp = op.hyper_params(n);
+        let loss = |q: &[f32], k: &[f32], v: &[f32]| -> f32 {
+            let (qm, km, vm) = (
+                MatRef::new(n, d, q),
+                MatRef::new(n, d, k),
+                MatRef::new(n, d, v),
+            );
+            let out = hyper::hyper_parts_with_plan_view(qm, km, vm, &hp, plan).finalize();
+            out.data.iter().zip(&dout).map(|(a, b)| a * b).sum()
+        };
+        let eps = 3e-3;
+        for &idx in &[0usize, 37, 127] {
+            for (buf, grad, name) in
+                [(&q, &g.dq, "dq"), (&k, &g.dk, "dk"), (&v, &g.dv, "dv")]
+            {
+                let mut plus = buf.clone();
+                plus[idx] += eps;
+                let mut minus = buf.clone();
+                minus[idx] -= eps;
+                let (lp, lm) = match name {
+                    "dq" => (loss(&plus, &k, &v), loss(&minus, &k, &v)),
+                    "dk" => (loss(&q, &plus, &v), loss(&q, &minus, &v)),
+                    _ => (loss(&q, &k, &plus), loss(&q, &k, &minus)),
+                };
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = grad[idx];
+                assert!(
+                    (fd - an).abs() < 3e-2 * (1.0 + fd.abs().max(an.abs())),
+                    "{name}[{idx}]: fd {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backward_rejects_mismatched_session() {
+        let (h, n, d) = (2usize, 16usize, 4usize);
+        let (q, k, v) = clustered_flat(6, h, n, d);
+        let op = AttnConfig::flash(false).build().unwrap();
+        let view = QkvView::new(h, n, d, &q, &k, &v).unwrap();
+        let fwd = op.forward(view);
+        // wrong dout length
+        assert!(op.backward(view, &[0.0; 3], &fwd).is_err());
+        // wrong view shape vs session
+        let (q1, k1, v1) = clustered_flat(7, 1, n, d);
+        let view1 = QkvView::new(1, n, d, &q1, &k1, &v1).unwrap();
+        let short_dout = vec![0.0f32; n * d];
+        assert!(op.backward(view1, &short_dout, &fwd).is_err());
+        // same shape, different config: a causal op must refuse to
+        // replay a non-causal session (silent wrong gradients otherwise)
+        let causal_op = AttnConfig::flash(true).build().unwrap();
+        let dout = vec![0.0f32; h * n * d];
+        assert!(causal_op.backward(view, &dout, &fwd).is_err());
+        // a differently-seeded but otherwise identical op may replay
+        // (plans are captured in the session; the RNG is never touched)
+        let reseeded = AttnConfig { seed: SeedPolicy::Shared(999), ..*op.config() }
+            .build()
+            .unwrap();
+        assert!(reseeded.backward(view, &dout, &fwd).is_ok());
+    }
+
+    /// `infer` must produce the identical output to `forward` (same
+    /// math, no capture) and must refuse backward.
+    #[test]
+    fn infer_matches_forward_and_refuses_backward() {
+        let (h, n, d) = (2usize, 64usize, 8usize);
+        let (q, k, v) = clustered_flat(9, h, n, d);
+        let dout = vec![0.0f32; h * n * d];
+        for cfg in [
+            AttnConfig::flash(true),
+            AttnConfig {
+                backend: Backend::Hyper,
+                block: 16,
+                samples: 16,
+                seed: SeedPolicy::PerHead(3),
+                ..Default::default()
+            },
+            AttnConfig {
+                backend: Backend::CausalHyper,
+                causal: true,
+                block: 16,
+                samples: 16,
+                causal_base: 16,
+                seed: SeedPolicy::PerHead(3),
+                ..Default::default()
+            },
+        ] {
+            let op = cfg.build().unwrap();
+            let view = QkvView::new(h, n, d, &q, &k, &v).unwrap();
+            let full = op.forward(view);
+            let lite = op.infer(view);
+            assert_eq!(full.out, lite.out, "{:?}: infer output diverged", cfg.backend);
+            assert!(op.backward(view, &dout, &lite).is_err(), "inference-only session");
+            assert!(op.backward(view, &dout, &full).is_ok());
+        }
+    }
+
+    #[test]
+    fn auto_long_causal_end_to_end() {
+        // Auto over the threshold with causal dispatch: output must be
+        // finite and the resolved backend recorded in the session.
+        let (h, n, d) = (2usize, 128usize, 8usize);
+        let (q, k, v) = clustered_flat(8, h, n, d);
+        let op = AttnConfig {
+            backend: Backend::Auto,
+            causal: true,
+            block: 16,
+            samples: 16,
+            causal_base: 32,
+            auto: AutoPolicy { hyper_threshold: 64, min_block: 8 },
+            ..Default::default()
+        }
+        .build()
+        .unwrap();
+        let view = QkvView::new(h, n, d, &q, &k, &v).unwrap();
+        let out = op.forward(view);
+        assert_eq!(out.backend(), Backend::CausalHyper);
+        assert!(out.out.iter().all(|x| x.is_finite()));
+    }
+}

@@ -5,13 +5,11 @@
 
 use std::time::Instant;
 
-use crate::attention::causal::{causal_hyper_attention, causal_hyper_fwd_bwd, CausalParams};
-use crate::attention::exact;
-use crate::attention::hyper::{hyper_attention, hyper_backward, HyperParams, HyperPlan};
 use crate::attention::measure;
+use crate::attention::op::{fit_block, AttnConfig, AttentionOp, Backend, SeedPolicy};
 use crate::json::Value;
 use crate::kernel;
-use crate::linalg::Mat;
+use crate::linalg::{Mat, QkvView};
 use crate::model::corpus::{Corpus, CorpusConfig};
 use crate::model::train::train;
 use crate::model::{perplexity, Model, ModelConfig};
@@ -72,14 +70,28 @@ fn time_with<F: FnMut()>(mut f: F, reps: usize, warmup: bool) -> f64 {
     t0.elapsed().as_secs_f64() / reps as f64
 }
 
-/// Largest block ≤ `target` that divides `n` (≥ 1): hyper requires
-/// `block | n`, and bench CLI inputs are not pre-validated.
-fn fit_block(n: usize, target: usize) -> usize {
-    let mut b = target.min(n).max(1);
-    while n % b != 0 {
-        b -= 1;
+/// Flash (streaming exact) op at the given causality.
+fn flash_op(causal: bool) -> AttentionOp {
+    AttnConfig::flash(causal).build().expect("flash config valid")
+}
+
+/// Hyper-family op (Algorithm 3, or Algorithm 4 when causal) with the
+/// bench's fixed seed, so every rep replays the same estimator the old
+/// free-function calls drew from `Rng::new(seed)`.
+fn hyper_op(causal: bool, block: usize, samples: usize, base: usize, seed: u64) -> AttentionOp {
+    AttnConfig {
+        backend: if causal { Backend::CausalHyper } else { Backend::Hyper },
+        causal,
+        block,
+        samples,
+        causal_base: base,
+        seed: SeedPolicy::Shared(seed),
+        // the op degrades unfittable blocks to flash itself; benches
+        // always pass divisible sizes, but CLI input is unvalidated
+        ..Default::default()
     }
-    b
+    .build()
+    .expect("hyper config valid")
 }
 
 /// One Fig 4 measurement row.
@@ -112,25 +124,28 @@ pub fn run_fig4(
     let mut rows = Vec::new();
     for &n in sizes {
         let (q, k, v) = clustered_qkv(42, n, d, 32, 0.5);
-        let dout = Mat::randn(n, d, &mut Rng::new(7));
-        let hp = HyperParams { block: block.min(n), samples: samples.min(n), ..Default::default() };
-        let cp = CausalParams { base: 2048.min(n / 2).max(256), hyper: hp, flash_block: 64 };
+        let dout = Rng::new(7).normal_vec(n * d);
+        let view = QkvView::from_mats(&q, &k, &v);
 
         for causal in [false, true] {
-            // forward
+            let flash = flash_op(causal);
+            let hyper = hyper_op(
+                causal,
+                block.min(n),
+                samples.min(n),
+                2048.min(n / 2).max(256),
+                3,
+            );
+            // forward (infer: forward-only cost, no state capture)
             let flash_s = time_it(
                 || {
-                    let _ = exact::flash_attention(&q, &k, &v, causal, None, 64);
+                    let _ = flash.infer(view);
                 },
                 reps,
             );
             let hyper_s = time_it(
                 || {
-                    if causal {
-                        let _ = causal_hyper_attention(&q, &k, &v, &cp, &mut Rng::new(3));
-                    } else {
-                        let _ = hyper_attention(&q, &k, &v, &hp, &mut Rng::new(3));
-                    }
+                    let _ = hyper.infer(view);
                 },
                 reps,
             );
@@ -139,27 +154,15 @@ pub fn run_fig4(
             if with_backward {
                 let flash_s = time_it(
                     || {
-                        let _ = exact::flash_attention(&q, &k, &v, causal, None, 64);
-                        let _ = exact::flash_backward(&q, &k, &v, &dout, causal, None, 64);
+                        let fwd = flash.forward(view);
+                        let _ = flash.backward(view, &dout, &fwd);
                     },
                     reps,
                 );
                 let hyper_s = time_it(
                     || {
-                        if causal {
-                            let _ =
-                                causal_hyper_fwd_bwd(&q, &k, &v, &dout, &cp, &mut Rng::new(3));
-                        } else {
-                            let plan =
-                                HyperPlan::build(&q, &k, &v, &hp, &mut Rng::new(3));
-                            let parts = crate::attention::hyper::hyper_parts_with_plan(
-                                &q, &k, &v, &hp, &plan,
-                            );
-                            let _ = parts.finalize();
-                            let _ = crate::attention::hyper::hyper_backward_with_parts(
-                                &q, &k, &v, &dout, &hp, &plan, &parts,
-                            );
-                        }
+                        let fwd = hyper.forward(view);
+                        let _ = hyper.backward(view, &dout, &fwd);
                     },
                     reps,
                 );
@@ -235,17 +238,14 @@ pub fn run_attention_bench_json(
     // ---- 1) single-thread SIMD-vs-scalar gate at n = 8192 --------------
     let n_gate = 8192usize;
     let (q, k, v) = clustered_qkv(42, n_gate, d, 32, 0.5);
-    let hp = HyperParams {
-        block: fit_block(n_gate, block),
-        samples: samples.min(n_gate),
-        ..Default::default()
-    };
+    let view = QkvView::from_mats(&q, &k, &v);
+    let hyper = hyper_op(false, fit_block(n_gate, block), samples.min(n_gate), 2048, 3);
     let prev_isa = kernel::active();
     par::set_threads(1);
     kernel::set_isa(kernel::Isa::Scalar);
     let scalar_s = time_it(
         || {
-            let _ = hyper_attention(&q, &k, &v, &hp, &mut Rng::new(3));
+            let _ = hyper.infer(view);
         },
         reps,
     );
@@ -253,7 +253,7 @@ pub fn run_attention_bench_json(
     kernel::set_isa(best);
     let simd_s = time_it(
         || {
-            let _ = hyper_attention(&q, &k, &v, &hp, &mut Rng::new(3));
+            let _ = hyper.infer(view);
         },
         reps,
     );
@@ -270,26 +270,24 @@ pub fn run_attention_bench_json(
     root.insert("simd_gate".into(), Value::Object(gate));
 
     // ---- 2) hyper-vs-flash tokens/sec sweep ----------------------------
+    let flash = flash_op(false);
     let mut sweep = Vec::new();
     for &n in sizes {
         let (q, k, v) = clustered_qkv(42, n, d, 32, 0.5);
-        let hp = HyperParams {
-            block: fit_block(n, block),
-            samples: samples.min(n),
-            ..Default::default()
-        };
+        let view = QkvView::from_mats(&q, &k, &v);
+        let hyper = hyper_op(false, fit_block(n, block), samples.min(n), 2048, 3);
         // skip the warmup once the flash working set is cache-cold anyway
         let warm = n < 32768;
         let hyper_s = time_with(
             || {
-                let _ = hyper_attention(&q, &k, &v, &hp, &mut Rng::new(3));
+                let _ = hyper.infer(view);
             },
             reps,
             warm,
         );
         let flash_s = time_with(
             || {
-                let _ = exact::flash_attention(&q, &k, &v, false, None, 64);
+                let _ = flash.infer(view);
             },
             reps,
             warm,
@@ -347,21 +345,24 @@ pub fn run_fig3(
     // timing: one attention layer at seq_len, exact vs hyper
     let d = cfg.d_model / cfg.n_heads;
     let (q, k, v) = clustered_qkv(9, seq_len.next_power_of_two(), d, 16, 0.5);
-    let hp = HyperParams {
-        block: cfg.hyper_block.min(q.rows),
-        samples: cfg.hyper_samples,
-        ..Default::default()
-    };
-    let cp = CausalParams { base: cfg.hyper_base, hyper: hp, flash_block: 64 };
+    let view = QkvView::from_mats(&q, &k, &v);
+    let flash = flash_op(true);
+    let hyper = hyper_op(
+        true,
+        cfg.hyper_block.min(q.rows),
+        cfg.hyper_samples,
+        cfg.hyper_base,
+        3,
+    );
     let t_exact = time_it(
         || {
-            let _ = exact::flash_attention(&q, &k, &v, true, None, 64);
+            let _ = flash.infer(view);
         },
         3,
     );
     let t_hyper = time_it(
         || {
-            let _ = causal_hyper_attention(&q, &k, &v, &cp, &mut Rng::new(3));
+            let _ = hyper.infer(view);
         },
         3,
     );

@@ -2,8 +2,10 @@
 //! PJRT [`Runtime`] and drains batches from the batcher.
 //!
 //! Jobs routed to an artifact run on PJRT; everything else runs on the
-//! pure-Rust substrate (which is internally rayon-parallel, so a single
-//! engine thread still saturates the machine).
+//! pure-Rust substrate through the unified
+//! [`crate::attention::op::AttentionOp`] API (internally parallel over
+//! heads and tiles via the [`crate::par`] fork/join pool — this tree is
+//! rayon-free — so a single engine thread still saturates the machine).
 
 use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, SyncSender};
@@ -13,11 +15,8 @@ use std::time::Instant;
 use super::metrics::Metrics;
 use super::request::{AttnJob, AttnResponse, Backend};
 use super::router::{Route, RouteKind, RouterConfig};
-use crate::attention::causal::{causal_hyper_attention, CausalParams};
-use crate::attention::exact;
-use crate::attention::hyper::{hyper_attention, HyperParams};
-use crate::linalg::Mat;
-use crate::rng::Rng;
+use crate::attention::op::{self, AttnConfig, SeedPolicy};
+use crate::linalg::QkvView;
 use crate::runtime::Runtime;
 
 /// One job in flight, with its response channel (bounded-1 std channel
@@ -35,56 +34,48 @@ pub enum EngineMsg {
     Shutdown,
 }
 
-/// Largest block size ≤ `target` that divides n (≥ 1).
+/// Largest block size ≤ `target` that divides n (≥ 1).  Delegates to
+/// the O(√n) divisor enumeration in [`crate::attention::op::fit_block`]
+/// (the old downward scan here was O(n) per job for prime n).
 pub fn pick_block(n: usize, target: usize) -> usize {
-    let mut b = target.min(n).max(1);
-    while n % b != 0 {
-        b -= 1;
-    }
-    b
+    op::fit_block(n, target)
 }
 
-/// Run one job on the pure-Rust substrate (per head).
-pub fn execute_substrate(job: &AttnJob, kind: RouteKind, rc: &RouterConfig) -> Vec<f32> {
-    let (h, n, d) = (job.heads, job.n, job.d);
-    let per = n * d;
-    let mut out = vec![0.0f32; h * per];
-    for head in 0..h {
-        let sl = |x: &[f32]| Mat::from_vec(n, d, x[head * per..(head + 1) * per].to_vec());
-        let (q, k, v) = (sl(&job.q), sl(&job.k), sl(&job.v));
-        let mut rng = Rng::new(job.seed as u64 ^ (head as u64).wrapping_mul(0x9E3779B9));
-        let block = pick_block(n, rc.block);
-        let result = match (kind, job.causal) {
-            (RouteKind::Exact, causal) => exact::flash_attention(&q, &k, &v, causal, None, 64),
-            (RouteKind::Hyper, false) => {
-                if block < 8 {
-                    // pathological shapes (prime n): exact fallback
-                    exact::flash_attention(&q, &k, &v, false, None, 64)
-                } else {
-                    let p = HyperParams {
-                        block,
-                        samples: rc.samples.min(n),
-                        ..Default::default()
-                    };
-                    hyper_attention(&q, &k, &v, &p, &mut rng)
-                }
-            }
-            (RouteKind::Hyper, true) => {
-                let p = CausalParams {
-                    base: rc.causal_base,
-                    hyper: HyperParams {
-                        block: block.max(1),
-                        samples: rc.samples.min(n),
-                        ..Default::default()
-                    },
-                    flash_block: 64,
-                };
-                causal_hyper_attention(&q, &k, &v, &p, &mut rng)
-            }
-        };
-        out[head * per..(head + 1) * per].copy_from_slice(&result.data);
+/// The substrate [`AttnConfig`] for one routed job: the route's
+/// algorithm choice plus the router's block/sample/base targets.  All
+/// shape fitting (divisor blocks, prime-n exact fallback, causal
+/// dispatch) happens inside the op's documented policy.
+pub fn substrate_config(job: &AttnJob, kind: RouteKind, rc: &RouterConfig) -> AttnConfig {
+    let backend = match (kind, job.causal) {
+        (RouteKind::Exact, _) => op::Backend::Flash,
+        (RouteKind::Hyper, false) => op::Backend::Hyper,
+        (RouteKind::Hyper, true) => op::Backend::CausalHyper,
+    };
+    AttnConfig {
+        backend,
+        causal: job.causal,
+        block: rc.block.max(1),
+        samples: rc.samples,
+        causal_base: rc.causal_base,
+        seed: SeedPolicy::PerHead(job.seed as u64),
+        // the router's policy carries through to the op, so the
+        // degenerate-block guard and any threshold tuning share one
+        // source of truth
+        auto: rc.auto_policy(),
+        ..Default::default()
     }
-    out
+}
+
+/// Run one job on the pure-Rust substrate: one batched multi-head op
+/// call over a zero-copy [`QkvView`] of the job buffers (no per-head
+/// slicing copies).
+pub fn execute_substrate(job: &AttnJob, kind: RouteKind, rc: &RouterConfig) -> Vec<f32> {
+    let view = QkvView::new(job.heads, job.n, job.d, &job.q, &job.k, &job.v)
+        .expect("job validated at submit");
+    let cfg = substrate_config(job, kind, rc);
+    let attn = cfg.build().expect("substrate config is valid by construction");
+    // serving is forward-only: infer() skips backward-state capture
+    attn.infer(view).into_out()
 }
 
 /// Spawn the engine.  Returns the submit channel and the PJRT-thread
@@ -241,7 +232,10 @@ fn engine_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::attention::exact;
     use crate::coordinator::request::ModePreference;
+    use crate::linalg::MatRef;
+    use crate::rng::Rng;
 
     fn job(n: usize, causal: bool, seed: i32) -> AttnJob {
         let (h, d) = (2, 16);
@@ -266,6 +260,11 @@ mod tests {
         assert_eq!(pick_block(96, 64), 48);
         assert_eq!(pick_block(97, 64), 1); // prime
         assert_eq!(pick_block(4, 64), 4);
+        // O(√n) divisor enumeration: prime / power-of-two / odd composite
+        assert_eq!(pick_block(1009, 256), 1); // prime
+        assert_eq!(pick_block(1 << 14, 256), 256); // power of two
+        assert_eq!(pick_block(3 * 5 * 7 * 11, 100), 77); // odd composite
+        assert_eq!(pick_block(225, 100), 75); // odd composite square
     }
 
     #[test]
@@ -273,11 +272,11 @@ mod tests {
         let j = job(48, false, 3);
         let rc = RouterConfig::default();
         let out = execute_substrate(&j, RouteKind::Exact, &rc);
-        // head 0 vs naive
+        // head 0 vs naive, through zero-copy views of the job buffers
         let per = 48 * 16;
-        let m = |x: &[f32]| Mat::from_vec(48, 16, x[..per].to_vec());
+        let m = |x: &[f32]| MatRef::new(48, 16, &x[..per]).to_mat();
         let exact = exact::naive_attention(&m(&j.q), &m(&j.k), &m(&j.v), false, None);
-        let got = Mat::from_vec(48, 16, out[..per].to_vec());
+        let got = MatRef::new(48, 16, &out[..per]).to_mat();
         assert!(exact.max_abs_diff(&got) < 1e-5);
     }
 
@@ -301,5 +300,19 @@ mod tests {
         let a = execute_substrate(&j, RouteKind::Hyper, &rc);
         let b = execute_substrate(&j, RouteKind::Hyper, &rc);
         assert_eq!(a, b);
+    }
+
+    /// The explicit-hyper prime-n guard that used to live here as an
+    /// `if block < 8` now comes from the op's AutoPolicy — same result.
+    #[test]
+    fn substrate_prime_n_hyper_degrades_to_exact() {
+        let rc = RouterConfig { block: 256, samples: 16, ..Default::default() };
+        let j = job(97, false, 2);
+        let out = execute_substrate(&j, RouteKind::Hyper, &rc);
+        let per = 97 * 16;
+        let m = |x: &[f32]| MatRef::new(97, 16, &x[..per]).to_mat();
+        let exact = exact::naive_attention(&m(&j.q), &m(&j.k), &m(&j.v), false, None);
+        let got = MatRef::new(97, 16, &out[..per]).to_mat();
+        assert!(exact.max_abs_diff(&got) < 1e-5, "prime n must run exact");
     }
 }

@@ -12,12 +12,15 @@
 //! ```
 //!
 //! * [`router`] — policy: exact below `hyper_threshold`, hyper above
-//!   (mirrors the paper patching only long-context layers); artifact if
-//!   the manifest has an exact-shape match, substrate otherwise.
+//!   (mirrors the paper patching only long-context layers), delegated to
+//!   the documented [`crate::attention::op::AutoPolicy`] table; artifact
+//!   if the manifest has an exact-shape match, substrate otherwise.
 //! * [`batcher`] — pure-state-machine dynamic batcher (`max_batch`,
-//!   `max_wait`), wrapped in a tokio task.
+//!   `max_wait`), wrapped in a dedicated thread.
 //! * [`engine`] — a dedicated OS thread owning the (thread-affine) PJRT
-//!   [`crate::runtime::Runtime`], plus rayon-side substrate execution.
+//!   [`crate::runtime::Runtime`]; substrate jobs run through the unified
+//!   [`crate::attention::op::AttentionOp`] API on the in-tree [`crate::par`]
+//!   fork/join pool (no rayon anywhere in this tree).
 //! * [`metrics`] — latency histograms and throughput counters.
 //! * [`server`] — wiring: submit → route → batch → execute → respond.
 

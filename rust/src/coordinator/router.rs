@@ -8,6 +8,7 @@
 //! softmax denominator is not padding-safe in the non-causal case).
 
 use super::request::{AttnJob, ModePreference};
+use crate::attention::op::AutoPolicy;
 use crate::runtime::Manifest;
 
 /// Algorithm choice after policy is applied.
@@ -44,6 +45,15 @@ impl Default for RouterConfig {
     }
 }
 
+impl RouterConfig {
+    /// The documented routing policy this coordinator applies for
+    /// `ModePreference::Auto` — the same [`AutoPolicy`] the execution
+    /// op uses, parameterized by this router's threshold.
+    pub fn auto_policy(&self) -> AutoPolicy {
+        AutoPolicy { hyper_threshold: self.hyper_threshold, ..Default::default() }
+    }
+}
+
 /// The router: policy + artifact index.
 #[derive(Clone, Debug)]
 pub struct Router {
@@ -68,13 +78,18 @@ impl Router {
         Router { config, index }
     }
 
-    /// Algorithm policy: honor explicit preference, else length threshold.
+    /// Algorithm policy: honor explicit preference, else the documented
+    /// length-threshold rule of [`AutoPolicy`].  Only the threshold row
+    /// of the table applies here — the shape-fit degradation rows are
+    /// applied at execution time inside the op itself, so routing stays
+    /// monotone in n (a prime-length job still *routes* to the hyper
+    /// family and then degrades to exact streaming at execution).
     pub fn pick_kind(&self, job: &AttnJob) -> RouteKind {
         match job.mode {
             ModePreference::Exact => RouteKind::Exact,
             ModePreference::Hyper => RouteKind::Hyper,
             ModePreference::Auto => {
-                if job.n >= self.config.hyper_threshold {
+                if job.n >= self.config.auto_policy().hyper_threshold {
                     RouteKind::Hyper
                 } else {
                     RouteKind::Exact

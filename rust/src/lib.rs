@@ -19,6 +19,47 @@
 //! with the measurement machinery for the paper's fine-grained
 //! parameters α and κ in [`attention::measure`].
 //!
+//! ## The attention API
+//!
+//! All of it is served through **one entry point**,
+//! [`attention::op::AttentionOp`]:
+//!
+//! ```no_run
+//! use hyperattention::attention::op::{AttnConfig, Backend, SeedPolicy};
+//! use hyperattention::linalg::QkvView;
+//!
+//! # let (heads, n, d) = (4usize, 2048usize, 64usize);
+//! # let (q, k, v) = (vec![0.0f32; heads*n*d], vec![0.0f32; heads*n*d], vec![0.0f32; heads*n*d]);
+//! // validate once into a compiled operator
+//! let attn = AttnConfig {
+//!     backend: Backend::Auto,          // Exact | Flash | Hyper | CausalHyper | Auto
+//!     causal: true,
+//!     block: 256,
+//!     samples: 256,
+//!     seed: SeedPolicy::PerHead(7),
+//!     ..Default::default()
+//! }
+//! .build()
+//! .unwrap();
+//!
+//! // zero-copy multi-head view over [heads, n, d] buffers
+//! let x = QkvView::new(heads, n, d, &q, &k, &v).unwrap();
+//! let fwd = attn.forward(x);           // batched over heads, in parallel
+//! let dout = vec![0.0f32; heads * n * d];
+//! let grads = attn.backward(x, &dout, &fwd).unwrap(); // replay, no recompute
+//! let out = attn.infer(x);             // forward-only (serving): no capture
+//! ```
+//!
+//! `Backend::Auto` applies the documented routing table in
+//! [`attention::op::AutoPolicy`] (length threshold, causal dispatch,
+//! prime-length degradation to exact streaming).  The forward session
+//! ([`attention::op::AttnOutput`]) carries every head's sampling plan
+//! and saved softmax statistics, so `backward` replays the identical
+//! estimator without recomputation.  The historical per-algorithm free
+//! functions (`exact::flash_attention`, `hyper::hyper_attention`,
+//! `causal::causal_hyper_attention`, and their `_backward`/`_with_parts`
+//! variants) remain as deprecated shims for one release.
+//!
 //! ## Kernel dispatch
 //!
 //! Every hot loop bottoms out in [`kernel`] — a runtime-dispatched SIMD

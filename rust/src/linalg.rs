@@ -1,10 +1,16 @@
-//! Dense linear-algebra substrate: row-major `Mat` + the handful of
-//! kernels attention needs (no external BLAS — built from scratch).
+//! Dense linear-algebra substrate: row-major `Mat`, the borrowed views
+//! [`MatRef`] / [`QkvView`], and the handful of kernels attention needs
+//! (no external BLAS — built from scratch).
 //!
 //! The hot paths (`matmul_nt`, `matmul`, `softmax_rows`) are thin
 //! tile-blocked callers into the runtime-dispatched SIMD microkernels in
 //! [`crate::kernel`] (AVX2/NEON/scalar), thread-parallel over row panels
 //! (see [`crate::par`]); everything is f32.
+//!
+//! [`QkvView`] is the zero-copy multi-head input type of the unified
+//! attention API ([`crate::attention::op`]): it borrows `[heads, n, d]`
+//! buffers and hands out per-head [`MatRef`] windows, so no per-head
+//! slicing copy ever happens between the serving layer and the kernels.
 
 use crate::kernel;
 use crate::par;
@@ -103,6 +109,160 @@ impl Mat {
             .zip(&other.data)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
+    }
+
+    /// Borrowed view of the whole matrix (zero-copy).
+    #[inline]
+    pub fn view(&self) -> MatRef<'_> {
+        MatRef { rows: self.rows, cols: self.cols, data: &self.data }
+    }
+}
+
+/// Borrowed row-major matrix view: the read-only counterpart of [`Mat`]
+/// used throughout the attention cores, so callers can hand in windows
+/// of larger buffers (per-head slices, recursion halves) without
+/// copying.  `Copy`, so it is passed by value.
+#[derive(Clone, Copy, Debug)]
+pub struct MatRef<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> MatRef<'a> {
+    pub fn new(rows: usize, cols: usize, data: &'a [f32]) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        MatRef { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    /// Contiguous row window [lo, hi) — zero-copy, unlike
+    /// [`Mat::slice_rows`].
+    #[inline]
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> MatRef<'a> {
+        MatRef {
+            rows: hi - lo,
+            cols: self.cols,
+            data: &self.data[lo * self.cols..hi * self.cols],
+        }
+    }
+
+    /// Gather rows by index into an owned matrix (LSH permutations and
+    /// sampling inherently materialize).
+    pub fn gather_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Squared L2 norm of each row.
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        (0..self.rows).map(|i| dot(self.row(i), self.row(i))).collect()
+    }
+
+    /// Owned copy.
+    pub fn to_mat(&self) -> Mat {
+        Mat::from_vec(self.rows, self.cols, self.data.to_vec())
+    }
+}
+
+/// Zero-copy multi-head attention input: borrows three `[heads, n, d]`
+/// row-major buffers (optionally with a custom head stride) and hands
+/// out per-head [`MatRef`] windows.  This is the input type of
+/// [`crate::attention::op::AttentionOp`]; building one never copies.
+#[derive(Clone, Copy, Debug)]
+pub struct QkvView<'a> {
+    pub heads: usize,
+    pub n: usize,
+    pub d: usize,
+    /// elements between consecutive heads (= n·d for packed buffers)
+    pub head_stride: usize,
+    q: &'a [f32],
+    k: &'a [f32],
+    v: &'a [f32],
+}
+
+impl<'a> QkvView<'a> {
+    /// Packed `[heads, n, d]` layout (head stride = n·d).
+    pub fn new(
+        heads: usize,
+        n: usize,
+        d: usize,
+        q: &'a [f32],
+        k: &'a [f32],
+        v: &'a [f32],
+    ) -> Result<Self, String> {
+        Self::strided(heads, n, d, n * d, q, k, v)
+    }
+
+    /// Custom head stride (≥ n·d): heads may be padded apart.
+    pub fn strided(
+        heads: usize,
+        n: usize,
+        d: usize,
+        head_stride: usize,
+        q: &'a [f32],
+        k: &'a [f32],
+        v: &'a [f32],
+    ) -> Result<Self, String> {
+        if heads == 0 || n == 0 || d == 0 {
+            return Err("zero-sized dimension".into());
+        }
+        if head_stride < n * d {
+            return Err(format!("head_stride {head_stride} < n*d = {}", n * d));
+        }
+        let want = (heads - 1) * head_stride + n * d;
+        for (name, buf) in [("q", q), ("k", k), ("v", v)] {
+            if buf.len() < want {
+                return Err(format!(
+                    "{name} has {} elements, want >= {want} \
+                     (heads={heads} n={n} d={d} stride={head_stride})",
+                    buf.len()
+                ));
+            }
+        }
+        Ok(QkvView { heads, n, d, head_stride, q, k, v })
+    }
+
+    /// Single-head view over three equal-shape matrices.  (The view
+    /// layout forces one shared `d`; rectangular V is not expressible
+    /// here — reject it loudly rather than misreading the buffer.)
+    pub fn from_mats(q: &'a Mat, k: &'a Mat, v: &'a Mat) -> QkvView<'a> {
+        assert_eq!((q.rows, q.cols), (k.rows, k.cols), "q/k shape mismatch");
+        assert_eq!((q.rows, q.cols), (v.rows, v.cols), "q/v shape mismatch");
+        QkvView {
+            heads: 1,
+            n: q.rows,
+            d: q.cols,
+            head_stride: q.rows * q.cols,
+            q: &q.data,
+            k: &k.data,
+            v: &v.data,
+        }
+    }
+
+    /// The (q, k, v) windows of one head — zero-copy.
+    #[inline]
+    pub fn head(&self, h: usize) -> (MatRef<'a>, MatRef<'a>, MatRef<'a>) {
+        assert!(h < self.heads, "head {h} out of {}", self.heads);
+        let lo = h * self.head_stride;
+        let hi = lo + self.n * self.d;
+        (
+            MatRef { rows: self.n, cols: self.d, data: &self.q[lo..hi] },
+            MatRef { rows: self.n, cols: self.d, data: &self.k[lo..hi] },
+            MatRef { rows: self.n, cols: self.d, data: &self.v[lo..hi] },
+        )
     }
 }
 
@@ -309,5 +469,65 @@ mod tests {
     fn row_sq_norms_correct() {
         let a = Mat::from_vec(2, 2, vec![3.0, 4.0, 0.0, 2.0]);
         assert_eq!(a.row_sq_norms(), vec![25.0, 4.0]);
+    }
+
+    #[test]
+    fn mat_ref_view_matches_mat() {
+        let mut rng = Rng::new(7);
+        let a = Mat::randn(6, 5, &mut rng);
+        let r = a.view();
+        assert_eq!((r.rows, r.cols), (6, 5));
+        for i in 0..6 {
+            assert_eq!(r.row(i), a.row(i));
+        }
+        assert_eq!(r.row_sq_norms(), a.row_sq_norms());
+        assert_eq!(r.to_mat(), a);
+        // zero-copy row window
+        let w = r.slice_rows(2, 5);
+        assert_eq!(w.rows, 3);
+        assert_eq!(w.row(0), a.row(2));
+        // gather agrees with the owned path
+        let idx = [4usize, 0, 3];
+        assert_eq!(r.gather_rows(&idx), a.gather_rows(&idx));
+    }
+
+    #[test]
+    fn qkv_view_heads_are_windows() {
+        let (h, n, d) = (3usize, 4usize, 2usize);
+        let mut rng = Rng::new(8);
+        let q = rng.normal_vec(h * n * d);
+        let k = rng.normal_vec(h * n * d);
+        let v = rng.normal_vec(h * n * d);
+        let view = QkvView::new(h, n, d, &q, &k, &v).unwrap();
+        for head in 0..h {
+            let (qh, kh, vh) = view.head(head);
+            assert_eq!((qh.rows, qh.cols), (n, d));
+            assert_eq!(qh.data, &q[head * n * d..(head + 1) * n * d]);
+            assert_eq!(kh.data, &k[head * n * d..(head + 1) * n * d]);
+            assert_eq!(vh.data, &v[head * n * d..(head + 1) * n * d]);
+        }
+    }
+
+    #[test]
+    fn qkv_view_validates() {
+        let buf = vec![0.0f32; 15];
+        assert!(QkvView::new(2, 2, 2, &buf[..7], &buf[..8], &buf[..8]).is_err());
+        assert!(QkvView::new(0, 2, 2, &buf, &buf, &buf).is_err());
+        assert!(QkvView::strided(2, 2, 2, 3, &buf, &buf, &buf).is_err()); // stride < n*d
+        assert!(QkvView::new(2, 2, 2, &buf[..8], &buf[..8], &buf[..8]).is_err());
+        assert!(QkvView::strided(2, 2, 2, 5, &buf[..9], &buf[..9], &buf[..9]).is_ok());
+    }
+
+    #[test]
+    fn qkv_from_mats_single_head() {
+        let mut rng = Rng::new(9);
+        let q = Mat::randn(5, 3, &mut rng);
+        let k = Mat::randn(5, 3, &mut rng);
+        let v = Mat::randn(5, 3, &mut rng);
+        let view = QkvView::from_mats(&q, &k, &v);
+        assert_eq!(view.heads, 1);
+        let (qh, _, vh) = view.head(0);
+        assert_eq!(qh.data, &q.data[..]);
+        assert_eq!(vh.data, &v.data[..]);
     }
 }

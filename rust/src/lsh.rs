@@ -7,7 +7,7 @@
 //! Sorting rows by bucket id therefore concentrates the large entries of
 //! the attention matrix near the diagonal (Algorithm 1 / Fig. 1).
 
-use crate::linalg::{argsort, dot, Mat};
+use crate::linalg::{argsort, dot, Mat, MatRef};
 use crate::rng::Rng;
 
 /// A sampled Hamming-sorted LSH function.
@@ -39,12 +39,12 @@ impl Lsh {
     }
 
     /// Bucket ids for every row.
-    pub fn buckets(&self, x: &Mat) -> Vec<u32> {
+    pub fn buckets(&self, x: MatRef<'_>) -> Vec<u32> {
         (0..x.rows).map(|i| self.bucket(x.row(i))).collect()
     }
 
     /// Stable permutation sorting rows by bucket id.
-    pub fn sort_permutation(&self, x: &Mat) -> Vec<usize> {
+    pub fn sort_permutation(&self, x: MatRef<'_>) -> Vec<usize> {
         argsort(&self.buckets(x))
     }
 }
@@ -68,8 +68,8 @@ pub struct BlockMask {
 impl BlockMask {
     pub fn from_lsh(lsh: &Lsh, q: &Mat, k: &Mat, block: usize) -> Self {
         assert_eq!(q.rows % block, 0, "n must be divisible by block");
-        let perm_q = lsh.sort_permutation(q);
-        let perm_k = lsh.sort_permutation(k);
+        let perm_q = lsh.sort_permutation(q.view());
+        let perm_k = lsh.sort_permutation(k.view());
         BlockMask {
             pos_q: crate::linalg::invert_permutation(&perm_q),
             pos_k: crate::linalg::invert_permutation(&perm_k),
@@ -118,7 +118,7 @@ mod tests {
         let mut rng = Rng::new(0);
         let lsh = Lsh::new(16, 8, &mut rng);
         let x = Mat::randn(200, 16, &mut rng);
-        for b in lsh.buckets(&x) {
+        for b in lsh.buckets(x.view()) {
             assert!(b < 256);
         }
     }
@@ -187,11 +187,11 @@ mod tests {
         let mut rng = Rng::new(4);
         let lsh = Lsh::new(8, 6, &mut rng);
         let x = Mat::randn(100, 8, &mut rng);
-        let perm = lsh.sort_permutation(&x);
+        let perm = lsh.sort_permutation(x.view());
         let mut sorted = perm.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
-        let buckets = lsh.buckets(&x);
+        let buckets = lsh.buckets(x.view());
         for w in perm.windows(2) {
             assert!(buckets[w[0]] <= buckets[w[1]]);
         }

@@ -16,10 +16,11 @@
 
 use std::collections::HashMap;
 
-use hyperattention::attention::hyper::{hyper_attention, HyperParams};
 use hyperattention::attention::measure;
+use hyperattention::attention::op::{AttnConfig, Backend, SeedPolicy};
 use hyperattention::bench;
 use hyperattention::coordinator::{AttnJob, ModePreference, Server, ServerConfig};
+use hyperattention::linalg::QkvView;
 use hyperattention::model::ModelConfig;
 use hyperattention::rng::Rng;
 
@@ -173,12 +174,17 @@ fn main() {
             for &m in &[n / 8, n / 2, 2 * n] {
                 for t in 0..trials {
                     let (q, k, v) = bench::clustered_qkv(t as u64, n, d, 8, 0.25);
-                    let p = HyperParams {
+                    let op = AttnConfig {
+                        backend: Backend::Hyper,
                         block: (n / 8).max(16),
                         samples: m,
+                        seed: SeedPolicy::Shared(t as u64),
                         ..Default::default()
-                    };
-                    let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(t as u64));
+                    }
+                    .build()
+                    .expect("valid verify config");
+                    let fwd = op.infer(QkvView::from_mats(&q, &k, &v));
+                    let out = fwd.head_out(0).to_mat();
                     let err = measure::spectral_error(&out, &q, &k, &v, false, None);
                     println!("{m:>8} {t:>10} {err:>12.4}");
                 }

@@ -14,10 +14,8 @@
 pub mod corpus;
 pub mod train;
 
-use crate::attention::causal::{causal_hyper_attention, CausalParams};
-use crate::attention::exact;
-use crate::attention::hyper::HyperParams;
-use crate::linalg::{matmul, matmul_nt, Mat};
+use crate::attention::op::{AttnConfig, Backend, SeedPolicy};
+use crate::linalg::{matmul, matmul_nt, Mat, QkvView};
 use crate::rng::Rng;
 
 /// Model hyper-parameters.
@@ -153,46 +151,90 @@ pub fn gelu(x: f32) -> f32 {
     0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x * x * x)).tanh()))
 }
 
-/// Multi-head causal attention over the hidden states.
+/// Split the fused (n, 3d) QKV projection into packed `[heads, n, dh]`
+/// buffers — the layout [`QkvView`] borrows.  The column-interleaved
+/// projection makes this one copy inherent; everything after it is
+/// zero-copy through the op.
+pub(crate) fn pack_heads(
+    qkv: &Mat,
+    n_heads: usize,
+    d: usize,
+    dh: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let n = qkv.rows;
+    let mut q = vec![0.0f32; n_heads * n * dh];
+    let mut k = vec![0.0f32; n_heads * n * dh];
+    let mut v = vec![0.0f32; n_heads * n * dh];
+    for h in 0..n_heads {
+        for i in 0..n {
+            let row = qkv.row(i);
+            let dst = h * n * dh + i * dh;
+            q[dst..dst + dh].copy_from_slice(&row[h * dh..(h + 1) * dh]);
+            k[dst..dst + dh].copy_from_slice(&row[d + h * dh..d + (h + 1) * dh]);
+            v[dst..dst + dh].copy_from_slice(&row[2 * d + h * dh..2 * d + (h + 1) * dh]);
+        }
+    }
+    (q, k, v)
+}
+
+/// Scatter packed `[heads, n, dh]` head outputs back to the
+/// column-interleaved (n, d) concatenation.
+pub(crate) fn unpack_heads(out: &[f32], n_heads: usize, n: usize, dh: usize) -> Mat {
+    let mut cat = Mat::zeros(n, n_heads * dh);
+    for h in 0..n_heads {
+        for i in 0..n {
+            let src = h * n * dh + i * dh;
+            cat.row_mut(i)[h * dh..(h + 1) * dh].copy_from_slice(&out[src..src + dh]);
+        }
+    }
+    cat
+}
+
+/// The attention op for one layer: exact streaming causal attention, or
+/// causal HyperAttention when the layer is patched (same per-head seed
+/// derivation as the historical per-head loop).
+pub(crate) fn layer_attn_config(
+    cfg: &ModelConfig,
+    n: usize,
+    use_hyper: bool,
+    seed: u64,
+) -> AttnConfig {
+    if use_hyper && n > cfg.hyper_base {
+        AttnConfig {
+            backend: Backend::CausalHyper,
+            causal: true,
+            block: cfg.hyper_block.min(n),
+            samples: cfg.hyper_samples,
+            causal_base: cfg.hyper_base,
+            seed: SeedPolicy::PerHead(seed),
+            ..Default::default()
+        }
+    } else {
+        AttnConfig {
+            backend: Backend::Flash,
+            causal: true,
+            seed: SeedPolicy::PerHead(seed),
+            ..Default::default()
+        }
+    }
+}
+
+/// Multi-head causal attention over the hidden states: one batched
+/// [`crate::attention::op::AttentionOp`] call across all heads.
 fn attention(model: &Model, x: &Mat, layer: &Layer, use_hyper: bool, seed: u64) -> Mat {
     let cfg = &model.cfg;
     let n = x.rows;
     let d = cfg.d_model;
     let dh = cfg.d_head();
     let qkv = matmul(x, &layer.wqkv); // (n, 3d)
-    let mut out = Mat::zeros(n, d);
-    for h in 0..cfg.n_heads {
-        let mut q = Mat::zeros(n, dh);
-        let mut k = Mat::zeros(n, dh);
-        let mut v = Mat::zeros(n, dh);
-        for i in 0..n {
-            let row = qkv.row(i);
-            q.row_mut(i).copy_from_slice(&row[h * dh..(h + 1) * dh]);
-            k.row_mut(i)
-                .copy_from_slice(&row[d + h * dh..d + (h + 1) * dh]);
-            v.row_mut(i)
-                .copy_from_slice(&row[2 * d + h * dh..2 * d + (h + 1) * dh]);
-        }
-        let attn = if use_hyper && n > cfg.hyper_base {
-            let p = CausalParams {
-                base: cfg.hyper_base,
-                hyper: HyperParams {
-                    block: cfg.hyper_block.min(n),
-                    samples: cfg.hyper_samples,
-                    ..Default::default()
-                },
-                flash_block: 64,
-            };
-            let mut rng = Rng::new(seed ^ (h as u64).wrapping_mul(0x9E3779B9));
-            causal_hyper_attention(&q, &k, &v, &p, &mut rng)
-        } else {
-            exact::flash_attention(&q, &k, &v, true, None, 64)
-        };
-        for i in 0..n {
-            out.row_mut(i)[h * dh..(h + 1) * dh].copy_from_slice(attn.row(i));
-        }
-    }
-    matmul(&out, &layer.wo)
+    let (qh, kh, vh) = pack_heads(&qkv, cfg.n_heads, d, dh);
+    let op = layer_attn_config(cfg, n, use_hyper, seed)
+        .build()
+        .expect("model attention config is valid");
+    let view = QkvView::new(cfg.n_heads, n, dh, &qh, &kh, &vh).expect("packed head buffers");
+    let out = op.infer(view).into_out();
+    let cat = unpack_heads(&out, cfg.n_heads, n, dh);
+    matmul(&cat, &layer.wo)
 }
 
 /// Forward pass: logits (n, vocab).  The FINAL `n_patched` layers use

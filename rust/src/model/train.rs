@@ -4,12 +4,15 @@
 //! perplexity is then measured with patched layers (no fine-tuning), so
 //! training always runs with exact attention; HyperAttention enters only
 //! at evaluation.  The whole backward is hand-derived (layer norm, GELU,
-//! tied embeddings, attention via [`exact::flash_backward`]) — no
+//! tied embeddings, attention through the batched
+//! [`crate::attention::op::AttentionOp`] session API: the forward pass
+//! caches each layer's attention session so the backward replays the
+//! saved softmax statistics instead of recomputing the forward) — no
 //! autograd framework, per the repo's build-everything rule.
 
-use super::{gelu, layer_norm, Model};
-use crate::attention::exact;
-use crate::linalg::{matmul, matmul_nt, Mat};
+use super::{gelu, layer_norm, pack_heads, unpack_heads, Model};
+use crate::attention::op::{AttnConfig, AttnOutput, Backend};
+use crate::linalg::{matmul, matmul_nt, Mat, QkvView};
 use crate::model::corpus::Corpus;
 use crate::par;
 use crate::rng::Rng;
@@ -171,11 +174,26 @@ impl Grads {
 struct LayerCache {
     x0: Mat,        // layer input
     h1: Mat,        // ln1 output
+    /// packed [heads, n, dh] projections (the buffers the attention
+    /// session's QkvView borrows again in the backward pass)
+    qh: Vec<f32>,
+    kh: Vec<f32>,
+    vh: Vec<f32>,
+    /// the forward attention session: output + saved softmax statistics,
+    /// so the backward is a pure replay (no attention forward recompute)
+    attn: AttnOutput,
     attn_cat: Mat,  // concatenated per-head attention outputs (pre-wo)
     x1: Mat,        // after attention residual
     h2: Mat,        // ln2 output
     ff_pre: Mat,    // h2 @ w1 + b1 (pre-GELU)
     ff_act: Mat,    // gelu(ff_pre)
+}
+
+/// The exact streaming causal op used for every training layer.
+fn train_attn_op() -> crate::attention::op::AttentionOp {
+    AttnConfig { backend: Backend::Flash, causal: true, ..Default::default() }
+        .build()
+        .expect("training attention config is valid")
 }
 
 /// Forward + backward for one sequence; returns (loss, grads).
@@ -195,29 +213,21 @@ pub fn loss_and_grads(model: &Model, tokens: &[usize]) -> (f32, Grads) {
             row[j] = e[j] + p[j];
         }
     }
+    let attn_op = train_attn_op();
     let mut caches: Vec<LayerCache> = Vec::with_capacity(cfg.n_layers);
     for layer in &model.layers {
         let x0 = x.clone();
         let h1 = layer_norm(&x0, &layer.ln1_g, &layer.ln1_b);
         let qkv = matmul(&h1, &layer.wqkv);
-        let mut attn_cat = Mat::zeros(n, d);
-        for h in 0..cfg.n_heads {
-            let mut q = Mat::zeros(n, dh);
-            let mut k = Mat::zeros(n, dh);
-            let mut v = Mat::zeros(n, dh);
-            for i in 0..n {
-                let row = qkv.row(i);
-                q.row_mut(i).copy_from_slice(&row[h * dh..(h + 1) * dh]);
-                k.row_mut(i)
-                    .copy_from_slice(&row[d + h * dh..d + (h + 1) * dh]);
-                v.row_mut(i)
-                    .copy_from_slice(&row[2 * d + h * dh..2 * d + (h + 1) * dh]);
-            }
-            let a = exact::flash_attention(&q, &k, &v, true, None, 64);
-            for i in 0..n {
-                attn_cat.row_mut(i)[h * dh..(h + 1) * dh].copy_from_slice(a.row(i));
-            }
-        }
+        let (qh, kh, vh) = pack_heads(&qkv, cfg.n_heads, d, dh);
+        let view = QkvView::new(cfg.n_heads, n, dh, &qh, &kh, &vh)
+            .expect("packed head buffers");
+        let mut attn = attn_op.forward(view);
+        let attn_cat = unpack_heads(&attn.out, cfg.n_heads, n, dh);
+        // the backward replay needs only the saved statistics, not the
+        // output buffer (attn_cat keeps the values) — drop it now rather
+        // than holding a dead n×d buffer per layer for the whole pass
+        attn.out = Vec::new();
         let attn_out = matmul(&attn_cat, &layer.wo);
         let mut x1 = x0.clone();
         x1.add_assign(&attn_out);
@@ -242,7 +252,7 @@ pub fn loss_and_grads(model: &Model, tokens: &[usize]) -> (f32, Grads) {
         }
         let mut x2 = x1.clone();
         x2.add_assign(&ff2);
-        caches.push(LayerCache { x0, h1, attn_cat, x1, h2, ff_pre, ff_act });
+        caches.push(LayerCache { x0, h1, qh, kh, vh, attn, attn_cat, x1, h2, ff_pre, ff_act });
         x = x2;
     }
     let xf = x; // pre-final-LN
@@ -314,33 +324,32 @@ pub fn loss_and_grads(model: &Model, tokens: &[usize]) -> (f32, Grads) {
         g.wo.add_assign(&matmul(&cache.attn_cat.transpose(), dattn_out));
         let dattn_cat = matmul(dattn_out, &layer.wo.transpose());
 
-        // per-head attention backward -> dqkv
-        let qkv = matmul(&cache.h1, &layer.wqkv);
-        let mut dqkv = Mat::zeros(n, 3 * d);
-        let head_grads: Vec<(usize, Mat, Mat, Mat)> = par::par_map(cfg.n_heads, |h| {
-            let mut q = Mat::zeros(n, dh);
-            let mut k = Mat::zeros(n, dh);
-            let mut v = Mat::zeros(n, dh);
-            let mut dout = Mat::zeros(n, dh);
+        // attention backward -> dqkv: replay the cached forward session
+        // (saved softmax statistics; no attention forward recompute)
+        let attn_op = train_attn_op();
+        let mut dout_h = vec![0.0f32; cfg.n_heads * n * dh];
+        for h in 0..cfg.n_heads {
             for i in 0..n {
-                let row = qkv.row(i);
-                q.row_mut(i).copy_from_slice(&row[h * dh..(h + 1) * dh]);
-                k.row_mut(i)
-                    .copy_from_slice(&row[d + h * dh..d + (h + 1) * dh]);
-                v.row_mut(i)
-                    .copy_from_slice(&row[2 * d + h * dh..2 * d + (h + 1) * dh]);
-                dout.row_mut(i)
+                let dst = h * n * dh + i * dh;
+                dout_h[dst..dst + dh]
                     .copy_from_slice(&dattn_cat.row(i)[h * dh..(h + 1) * dh]);
             }
-            let (dq, dk, dv) = exact::flash_backward(&q, &k, &v, &dout, true, None, 64);
-            (h, dq, dk, dv)
-        });
-        for (h, dq, dk, dvv) in head_grads {
+        }
+        let view = QkvView::new(cfg.n_heads, n, dh, &cache.qh, &cache.kh, &cache.vh)
+            .expect("cached head buffers");
+        let g_attn = attn_op
+            .backward(view, &dout_h, &cache.attn)
+            .expect("session shapes match");
+        let mut dqkv = Mat::zeros(n, 3 * d);
+        for h in 0..cfg.n_heads {
             for i in 0..n {
-                dqkv.row_mut(i)[h * dh..(h + 1) * dh].copy_from_slice(dq.row(i));
-                dqkv.row_mut(i)[d + h * dh..d + (h + 1) * dh].copy_from_slice(dk.row(i));
+                let src = h * n * dh + i * dh;
+                dqkv.row_mut(i)[h * dh..(h + 1) * dh]
+                    .copy_from_slice(&g_attn.dq[src..src + dh]);
+                dqkv.row_mut(i)[d + h * dh..d + (h + 1) * dh]
+                    .copy_from_slice(&g_attn.dk[src..src + dh]);
                 dqkv.row_mut(i)[2 * d + h * dh..2 * d + (h + 1) * dh]
-                    .copy_from_slice(dvv.row(i));
+                    .copy_from_slice(&g_attn.dv[src..src + dh]);
             }
         }
         g.wqkv.add_assign(&matmul(&cache.h1.transpose(), &dqkv));

@@ -8,13 +8,13 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use hyperattention::attention::exact;
-use hyperattention::attention::hyper::{hyper_attention, HyperParams};
 use hyperattention::attention::measure;
+use hyperattention::attention::op::{self, AttnConfig, SeedPolicy};
 use hyperattention::coordinator::batcher::{BatchConfig, BatchQueue};
 use hyperattention::coordinator::{
     AttnJob, Backend, ModePreference, Router, RouterConfig, Server, ServerConfig,
 };
-use hyperattention::linalg::Mat;
+use hyperattention::linalg::{Mat, QkvView};
 use hyperattention::rng::Rng;
 use hyperattention::runtime::{Manifest, Runtime};
 
@@ -279,11 +279,46 @@ fn prop_spectral_guarantee_holds() {
     for seed in 0..5u64 {
         let n = 128;
         let (q, k, v) = hyperattention::bench::clustered_qkv(seed, n, 16, 8, 0.3);
-        let p = HyperParams { block: 32, samples: n, ..Default::default() };
-        let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(seed));
+        let attn = AttnConfig {
+            backend: op::Backend::Hyper,
+            block: 32,
+            samples: n,
+            seed: SeedPolicy::Shared(seed),
+            ..Default::default()
+        }
+        .build()
+        .unwrap();
+        let out = attn.infer(QkvView::from_mats(&q, &k, &v)).head_out(0).to_mat();
         let err = measure::spectral_error(&out, &q, &k, &v, false, None);
         assert!(err < 0.8, "seed {seed}: spectral err {err}");
     }
+}
+
+/// The coordinator substrate and a direct `AttentionOp` call must agree
+/// exactly: the engine is a thin zero-copy wrapper over the op.
+#[test]
+fn coordinator_matches_direct_op_call() {
+    let server = Server::start(ServerConfig::substrate_only());
+    let job = mk_job(3, 64, 16, false, ModePreference::Hyper, 11);
+    let (heads, n, d) = (job.heads, job.n, job.d);
+    let (q, k, v) = (job.q.clone(), job.k.clone(), job.v.clone());
+    let resp = server.submit_wait(job).unwrap();
+    server.shutdown();
+
+    let rc = RouterConfig::default();
+    let attn = AttnConfig {
+        backend: op::Backend::Hyper,
+        block: rc.block,
+        samples: rc.samples,
+        causal_base: rc.causal_base,
+        seed: SeedPolicy::PerHead(11),
+        ..Default::default()
+    }
+    .build()
+    .unwrap();
+    let view = QkvView::new(heads, n, d, &q, &k, &v).unwrap();
+    let direct = attn.infer(view).into_out();
+    assert_eq!(resp.out, direct, "engine and direct op outputs diverged");
 }
 
 /// Substrate determinism across the full coordinator stack.

@@ -8,9 +8,10 @@
 //! float rounding but must stay far inside that envelope.
 
 use hyperattention::attention::exact::naive_attention;
-use hyperattention::attention::hyper::{hyper_attention, HyperParams};
+use hyperattention::attention::op::{AttnConfig, Backend, SeedPolicy};
 use hyperattention::bench::clustered_qkv;
 use hyperattention::kernel::{self, scalar};
+use hyperattention::linalg::QkvView;
 use hyperattention::rng::Rng;
 
 /// Lengths exercising every remainder path of the 8-lane (AVX2) and
@@ -258,8 +259,16 @@ fn gemm_nn_row_parity() {
 fn hyper_full_block_matches_naive_dispatched() {
     for (seed, n, d) in [(0u64, 64usize, 8usize), (1, 96, 16), (2, 128, 32)] {
         let (q, k, v) = clustered_qkv(seed, n, d, 4, 0.3);
-        let p = HyperParams { block: n, samples: 0, ..Default::default() };
-        let out = hyper_attention(&q, &k, &v, &p, &mut Rng::new(seed + 9));
+        let attn = AttnConfig {
+            backend: Backend::Hyper,
+            block: n,
+            samples: 0,
+            seed: SeedPolicy::Shared(seed + 9),
+            ..Default::default()
+        }
+        .build()
+        .unwrap();
+        let out = attn.infer(QkvView::from_mats(&q, &k, &v)).head_out(0).to_mat();
         let exact = naive_attention(&q, &k, &v, false, None);
         let diff = out.max_abs_diff(&exact);
         assert!(
