@@ -16,7 +16,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use hyperattention::coordinator::{
-    AttnJob, Backend, ModePreference, Server, ServerConfig,
+    AttnJob, Backend, DecodeJob, ModePreference, Server, ServerConfig,
 };
 use hyperattention::rng::Rng;
 
@@ -104,4 +104,54 @@ fn main() {
     // Throughput in attention-tokens/s (each job processes h·n rows)
     let tokens: usize = 24 * 128 * 4 + 24 * 384 * 2 + 12 * 2048 * 2 + 12 * 4096 * 2;
     println!("approx attention rows/s: {:.0}", tokens as f64 / dt);
+
+    // ---- streaming sessions: the prefill/decode serving path ----
+    // Four clients each open a 2048-token session and stream 16 decode
+    // steps; decode steps from all sessions share one batch key, so
+    // they coalesce into decode batches at the engine.
+    let t1 = Instant::now();
+    let mut streams = Vec::new();
+    for s in 0..4u32 {
+        let srv = server.clone();
+        streams.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(900 + s as u64);
+            let (h, n, d) = (2usize, 2048usize, 64usize);
+            let len = h * n * d;
+            let job = AttnJob {
+                id: 0,
+                heads: h,
+                n,
+                d,
+                q: rng.normal_vec(len),
+                k: rng.normal_vec(len),
+                v: rng.normal_vec(len),
+                causal: true,
+                mode: ModePreference::Auto,
+                seed: s as i32,
+            };
+            let (sid, ticket) = srv.open_session(job).expect("open session");
+            ticket.wait().expect("prefill");
+            for _ in 0..16 {
+                let dj = DecodeJob {
+                    session: sid,
+                    heads: h,
+                    d,
+                    pos: None,
+                    q: rng.normal_vec(h * d),
+                    k: rng.normal_vec(h * d),
+                    v: rng.normal_vec(h * d),
+                };
+                srv.decode_wait(dj).expect("decode step");
+            }
+            srv.close_session(sid).expect("close session");
+        }));
+    }
+    for s in streams {
+        s.join().unwrap();
+    }
+    println!(
+        "\nstreaming: 4 sessions x 16 decode steps in {:.2}s\n{}",
+        t1.elapsed().as_secs_f64(),
+        server.metrics().report()
+    );
 }

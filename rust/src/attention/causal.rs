@@ -17,6 +17,12 @@
 //! and per-split off-diagonal (plan, triple) pairs, so the backward pass
 //! replays the exact estimator without recomputing any forward work.
 //! It is built and consumed by [`crate::attention::op::AttentionOp`].
+//!
+//! At decode time the recursion is never rebuilt per token: the
+//! incremental counterpart of this plan is the **appendable** per-head
+//! sampling state (`HeadSampler` in [`crate::attention::op`]) that the
+//! `decode_step` path extends token by token and only re-sorts when the
+//! KV cache grows past the documented `AutoPolicy` resample interval.
 
 use super::exact;
 use super::hyper::{self, HyperParams, HyperPlan};
@@ -62,18 +68,6 @@ fn split_params(half: usize, p: &CausalParams) -> HyperParams {
     hp
 }
 
-/// Triple of causal HyperAttention over (q, k, v), all (n, d).
-#[deprecated(note = "use `attention::op::AttentionOp` with `Backend::CausalHyper`")]
-pub fn causal_hyper_parts(
-    q: &Mat,
-    k: &Mat,
-    v: &Mat,
-    p: &CausalParams,
-    rng: &mut Rng,
-) -> Parts {
-    causal_parts_view(q.view(), k.view(), v.view(), p, rng)
-}
-
 /// View-based forward-only recursion (no plan captured).
 pub(crate) fn causal_parts_view(
     q: MatRef<'_>,
@@ -103,18 +97,6 @@ pub(crate) fn causal_parts_view(
     p2.merge(&p21);
 
     p11.concat(p2)
-}
-
-/// Normalized causal HyperAttention output.
-#[deprecated(note = "use `attention::op::AttentionOp` with `Backend::CausalHyper`")]
-pub fn causal_hyper_attention(
-    q: &Mat,
-    k: &Mat,
-    v: &Mat,
-    p: &CausalParams,
-    rng: &mut Rng,
-) -> Mat {
-    causal_parts_view(q.view(), k.view(), v.view(), p, rng).finalize()
 }
 
 /// The recorded causal recursion: everything the backward pass needs to
@@ -229,25 +211,6 @@ pub(crate) fn causal_backward_with_plan(
     }
 }
 
-/// Forward + backward timing path: backward through the base-case exact
-/// blocks and off-diagonal hyper blocks, replaying the recorded
-/// recursion.  Cost is a constant factor over the forward, matching the
-/// paper's fwd+bwd benchmark setup (Fig. 4 right panels).
-#[deprecated(note = "use `attention::op::AttentionOp::forward` + `::backward`")]
-pub fn causal_hyper_fwd_bwd(
-    q: &Mat,
-    k: &Mat,
-    v: &Mat,
-    dout: &Mat,
-    p: &CausalParams,
-    rng: &mut Rng,
-) -> (Mat, Mat, Mat, Mat) {
-    let (parts, plan) = causal_plan_view(q.view(), k.view(), v.view(), p, rng);
-    let (dq, dk, dv) =
-        causal_backward_with_plan(q.view(), k.view(), v.view(), dout.view(), p, &plan);
-    (parts.finalize(), dq, dk, dv)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -355,26 +318,6 @@ mod tests {
         let fwd = causal_hyper(&q, &k, &v, &p, &mut Rng::new(10));
         let (out, _, _, _) = fwd_bwd(&q, &k, &v, &dout, &p, &mut Rng::new(10));
         assert_eq!(fwd, out, "plan-recorded forward diverged from forward-only path");
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_match_view_core() {
-        let (q, k, v) = rand_qkv(11, 128, 8);
-        let mut rng = Rng::new(12);
-        let dout = Mat::randn(128, 8, &mut rng);
-        let p = CausalParams {
-            base: 32,
-            hyper: HyperParams { block: 16, samples: 16, ..Default::default() },
-            ..Default::default()
-        };
-        assert_eq!(
-            causal_hyper_attention(&q, &k, &v, &p, &mut Rng::new(13)),
-            causal_hyper(&q, &k, &v, &p, &mut Rng::new(13))
-        );
-        let a = causal_hyper_fwd_bwd(&q, &k, &v, &dout, &p, &mut Rng::new(14));
-        let b = fwd_bwd(&q, &k, &v, &dout, &p, &mut Rng::new(14));
-        assert_eq!(a, b);
     }
 
     #[test]

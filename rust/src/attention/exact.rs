@@ -13,8 +13,16 @@
 //!
 //! The core entry points take borrowed [`MatRef`] views so multi-head
 //! buffers and recursion halves never copy; callers go through the
-//! unified [`crate::attention::op::AttentionOp`] API.  The historical
-//! `&Mat` free functions survive as deprecated shims for one release.
+//! unified [`crate::attention::op::AttentionOp`] API.  (The historical
+//! `&Mat` free-function shims were removed as promised in ROADMAP —
+//! the view cores are the only implementation surface.)
+//!
+//! [`flash_prefill_view`] is the shared streaming core: it consumes a
+//! **pre-scaled** key panel (the softmax scale folded into the cache
+//! side once, see [`crate::linalg::KvCache::sync_scaled`]) and supports
+//! a query-position offset, so one-shot forwards, chunked prefill, and
+//! single-row decode steps all stream the same packed B panel with no
+//! per-call scaling copies.
 
 use super::{softmax_scale, Parts, NEG_INF};
 use crate::kernel;
@@ -72,33 +80,9 @@ pub(crate) fn naive_parts_view(
     parts
 }
 
-/// Streaming blocked exact attention.  Returns the normalized output.
-#[deprecated(note = "use `attention::op::AttentionOp` with `Backend::Flash`")]
-pub fn flash_attention(
-    q: &Mat,
-    k: &Mat,
-    v: &Mat,
-    causal: bool,
-    scale: Option<f32>,
-    block: usize,
-) -> Mat {
-    flash_parts_view(q.view(), k.view(), v.view(), causal, scale, block).finalize()
-}
-
-/// Streaming blocked exact attention in triple form (for merging).
-#[deprecated(note = "use `attention::op::AttentionOp` with `Backend::Flash`")]
-pub fn flash_parts(
-    q: &Mat,
-    k: &Mat,
-    v: &Mat,
-    causal: bool,
-    scale: Option<f32>,
-    block: usize,
-) -> Parts {
-    flash_parts_view(q.view(), k.view(), v.view(), causal, scale, block)
-}
-
-/// View-based core of the streaming blocked exact attention.
+/// View-based core of the streaming blocked exact attention.  Folds the
+/// softmax scale into a key-panel copy once, then streams the shared
+/// panel through [`flash_prefill_view`].
 pub(crate) fn flash_parts_view(
     q: MatRef<'_>,
     k: MatRef<'_>,
@@ -107,21 +91,42 @@ pub(crate) fn flash_parts_view(
     scale: Option<f32>,
     block: usize,
 ) -> Parts {
+    let sc = softmax_scale(q.cols, scale);
+    let mut ks = k.to_mat();
+    ks.scale(sc);
+    flash_prefill_view(q, ks.view(), v, causal, 0, block)
+}
+
+/// The shared streaming exact core for one-shot, prefill, and decode.
+///
+/// `q` holds raw queries at absolute positions `q_offset..q_offset + n`
+/// against the cache-side panels `ks` (keys with the softmax scale
+/// **already folded in** — one shared packed panel reused across every
+/// query tile, prefill chunk, and decode step instead of a per-call
+/// scaled Q copy) and `v` (`nk` rows each).  Causal masking uses the
+/// absolute position: query `i` attends keys `0..q_offset + i + 1`.
+/// Two-level blocking, online softmax, causal tile skipping; parallel
+/// over query tiles; each tile is one register-blocked
+/// [`crate::kernel::gemm_nt`] panel + fused max/exp/PV kernels.
+pub(crate) fn flash_prefill_view(
+    q: MatRef<'_>,
+    ks: MatRef<'_>,
+    v: MatRef<'_>,
+    causal: bool,
+    q_offset: usize,
+    block: usize,
+) -> Parts {
     let (n, d) = (q.rows, q.cols);
-    let nk = k.rows;
-    assert_eq!(k.cols, d);
+    let nk = ks.rows;
+    assert_eq!(ks.cols, d);
     assert_eq!(v.rows, nk);
     let dv = v.cols;
-    let sc = softmax_scale(d, scale);
     let block = block.max(1);
 
     let mut parts = Parts::empty(n, dv);
     if n == 0 {
         return parts;
     }
-    // Pre-scale Q once so each logits tile is a raw GEMM.
-    let mut qs = q.to_mat();
-    qs.scale(sc);
 
     // Parallel over query tiles: each tile owns disjoint slices of the
     // output triple, streamed over key tiles with the online softmax.
@@ -146,26 +151,26 @@ pub(crate) fn flash_parts_view(
         // per-tile logits scratch (rows × key-tile), reused across tiles
         let mut logits = vec![0.0f32; rows * block];
         for j0 in (0..nk).step_by(block) {
-            if causal && j0 > i1 - 1 {
+            if causal && j0 > q_offset + i1 - 1 {
                 break; // tile fully above the diagonal: skip
             }
             let j1 = (j0 + block).min(nk);
             let jt = j1 - j0;
-            // logits tile = (Q·sc)[i0..i1] · K[j0..j1]ᵀ in one panel GEMM
+            // logits tile = Q[i0..i1] · (sc·K)[j0..j1]ᵀ in one panel GEMM
             kernel::gemm_nt(
                 rows,
                 jt,
                 d,
-                &qs.data[i0 * d..],
+                &q.data[i0 * d..],
                 d,
-                &k.data[j0 * d..],
+                &ks.data[j0 * d..],
                 d,
                 &mut logits,
                 jt,
             );
             for ti in 0..rows {
-                let i = i0 + ti;
-                let jlim = if causal { j1.min(i + 1) } else { j1 };
+                let i_abs = q_offset + i0 + ti;
+                let jlim = if causal { j1.min(i_abs + 1) } else { j1 };
                 if jlim <= j0 {
                     continue;
                 }
@@ -189,59 +194,13 @@ pub(crate) fn flash_parts_view(
     parts
 }
 
-/// Gradients of exact attention wrt (q, k, v) given upstream `dout`.
+/// Gradients of exact attention wrt (q, k, v) given upstream `dout` and
+/// the saved forward statistics.
 ///
 /// FlashAttention-style backward: recompute probabilities blockwise from
 /// the saved per-row (max, denom) statistics; never materializes the
 /// full n×n matrix.  `delta_i = dout_i · out_i` is the softmax-Jacobian
 /// correction term.
-#[deprecated(note = "use `attention::op::AttentionOp::backward`")]
-pub fn flash_backward(
-    q: &Mat,
-    k: &Mat,
-    v: &Mat,
-    dout: &Mat,
-    causal: bool,
-    scale: Option<f32>,
-    block: usize,
-) -> (Mat, Mat, Mat) {
-    // Forward statistics (recomputed, streaming).
-    let parts = flash_parts_view(q.view(), k.view(), v.view(), causal, scale, block);
-    flash_backward_with_parts_view(
-        q.view(),
-        k.view(),
-        v.view(),
-        dout.view(),
-        causal,
-        scale,
-        &parts,
-    )
-}
-
-/// [`flash_backward`] given already-computed forward statistics (the
-/// fwd+bwd path has them in hand — no second forward pass).
-#[deprecated(note = "use `attention::op::AttentionOp::backward`")]
-pub fn flash_backward_with_parts(
-    q: &Mat,
-    k: &Mat,
-    v: &Mat,
-    dout: &Mat,
-    causal: bool,
-    scale: Option<f32>,
-    parts: &Parts,
-) -> (Mat, Mat, Mat) {
-    flash_backward_with_parts_view(
-        q.view(),
-        k.view(),
-        v.view(),
-        dout.view(),
-        causal,
-        scale,
-        parts,
-    )
-}
-
-/// View-based core of the exact backward given forward statistics.
 pub(crate) fn flash_backward_with_parts_view(
     q: MatRef<'_>,
     k: MatRef<'_>,
@@ -394,31 +353,67 @@ mod tests {
         }
     }
 
-    /// The deprecated `&Mat` shims must stay bit-identical to the view
-    /// cores while they exist.
+    /// Chunked prefill through the shared pre-scaled panel: splitting
+    /// the queries into offset chunks must reproduce the one-shot causal
+    /// output exactly (same panel, same kernels — only tiling differs).
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_match_view_core() {
-        let (q, k, v) = rand_qkv(9, 24, 8);
-        let mut rng = Rng::new(10);
-        let dout = Mat::randn(24, 8, &mut rng);
+    fn prefill_chunks_match_one_shot() {
+        let (n, d) = (48usize, 8usize);
+        let (q, k, v) = rand_qkv(9, n, d);
+        let sc = softmax_scale(d, None);
+        let mut ks = k.clone();
+        ks.scale(sc);
         for causal in [false, true] {
-            assert_eq!(
-                flash_attention(&q, &k, &v, causal, None, 8),
-                flash(&q, &k, &v, causal, 8)
-            );
-            let parts = flash_parts(&q, &k, &v, causal, None, 8);
-            let (dq, dk, dv) = flash_backward(&q, &k, &v, &dout, causal, None, 8);
-            let (dq2, dk2, dv2) = flash_backward_with_parts_view(
-                q.view(),
-                k.view(),
-                v.view(),
-                dout.view(),
-                causal,
-                None,
-                &parts,
-            );
-            assert_eq!((dq, dk, dv), (dq2, dk2, dv2));
+            let full =
+                flash_prefill_view(q.view(), ks.view(), v.view(), causal, 0, 16).finalize();
+            for split in [1usize, 7, 24, 47] {
+                let top = flash_prefill_view(
+                    q.view().slice_rows(0, split),
+                    ks.view(),
+                    v.view(),
+                    causal,
+                    0,
+                    16,
+                );
+                let bot = flash_prefill_view(
+                    q.view().slice_rows(split, n),
+                    ks.view(),
+                    v.view(),
+                    causal,
+                    split,
+                    16,
+                );
+                let got = top.concat(bot).finalize();
+                assert!(
+                    full.max_abs_diff(&got) < 1e-5,
+                    "causal={causal} split={split}"
+                );
+            }
+        }
+    }
+
+    /// One-row decode pass over the cache panel equals the last row of
+    /// the one-shot causal forward.
+    #[test]
+    fn decode_row_matches_causal_last_row() {
+        let (n, d) = (33usize, 8usize);
+        let (q, k, v) = rand_qkv(10, n, d);
+        let sc = softmax_scale(d, None);
+        let mut ks = k.clone();
+        ks.scale(sc);
+        let oracle = naive_attention(&q, &k, &v, true, None);
+        // the decode shape: one raw query row against the full panel
+        let row = flash_prefill_view(
+            q.view().slice_rows(n - 1, n),
+            ks.view(),
+            v.view(),
+            false, // all cached keys are past-or-current
+            0,
+            16,
+        )
+        .finalize();
+        for j in 0..d {
+            assert!((row.get(0, j) - oracle.get(n - 1, j)).abs() < 1e-5);
         }
     }
 

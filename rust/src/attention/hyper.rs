@@ -13,8 +13,8 @@
 //!
 //! The view-based cores (`*_view`, `HyperPlan::build_view`) are the
 //! implementation; they are reached through the unified
-//! [`crate::attention::op::AttentionOp`] API.  The `&Mat` free functions
-//! remain as deprecated shims for one release.
+//! [`crate::attention::op::AttentionOp`] API.  (The deprecated `&Mat`
+//! free-function shims were removed as promised in ROADMAP.)
 
 use super::{softmax_scale, Parts, NEG_INF};
 use crate::kernel;
@@ -76,12 +76,6 @@ pub struct HyperPlan {
 
 impl HyperPlan {
     /// Draw LSH permutations and column samples.
-    #[deprecated(note = "plan plumbing is internal to `attention::op::AttentionOp` now")]
-    pub fn build(q: &Mat, k: &Mat, v: &Mat, p: &HyperParams, rng: &mut Rng) -> Self {
-        HyperPlan::build_view(q.view(), k.view(), v.view(), p, rng)
-    }
-
-    /// View-based core of the plan builder.
     pub(crate) fn build_view(
         q: MatRef<'_>,
         k: MatRef<'_>,
@@ -125,12 +119,6 @@ impl HyperPlan {
     }
 }
 
-/// HyperAttention triple (original row order).
-#[deprecated(note = "use `attention::op::AttentionOp` with `Backend::Hyper`")]
-pub fn hyper_parts(q: &Mat, k: &Mat, v: &Mat, p: &HyperParams, rng: &mut Rng) -> Parts {
-    hyper_parts_view(q.view(), k.view(), v.view(), p, rng)
-}
-
 /// View-based core: plan + deterministic forward.
 pub(crate) fn hyper_parts_view(
     q: MatRef<'_>,
@@ -144,18 +132,6 @@ pub(crate) fn hyper_parts_view(
 }
 
 /// Deterministic forward given a pre-built plan (shared with backward).
-#[deprecated(note = "use `attention::op::AttentionOp` (plans are cached in `AttnOutput`)")]
-pub fn hyper_parts_with_plan(
-    q: &Mat,
-    k: &Mat,
-    v: &Mat,
-    p: &HyperParams,
-    plan: &HyperPlan,
-) -> Parts {
-    hyper_parts_with_plan_view(q.view(), k.view(), v.view(), p, plan)
-}
-
-/// View-based core of the deterministic forward.
 pub(crate) fn hyper_parts_with_plan_view(
     q: MatRef<'_>,
     k: MatRef<'_>,
@@ -315,64 +291,14 @@ pub(crate) fn hyper_parts_with_plan_view(
     parts
 }
 
-/// HyperAttention output (n × d), Algorithm 3 normalized.
-#[deprecated(note = "use `attention::op::AttentionOp` with `Backend::Hyper`")]
-pub fn hyper_attention(q: &Mat, k: &Mat, v: &Mat, p: &HyperParams, rng: &mut Rng) -> Mat {
-    hyper_parts_view(q.view(), k.view(), v.view(), p, rng).finalize()
-}
-
-/// Backward through the HyperAttention estimator (sampling held fixed).
+/// Backward through the HyperAttention estimator (sampling held fixed),
+/// given the already-computed forward triple — no second forward pass.
 ///
 /// The output is `O_i = Σ_j w_ij e^{l_ij} v_j / Σ_j w_ij e^{l_ij}` over the
 /// union of block-diagonal keys (w = 1) and sampled keys (w = residual
 /// weight), so `∂L/∂l_ij = p̃_ij · (dout_i · (v_j − O_i))` with p̃ the
 /// normalized weights — same structure as exact attention restricted to
 /// the touched entries.  Cost matches the forward: Θ(n(b+m)d).
-#[deprecated(note = "use `attention::op::AttentionOp::backward`")]
-pub fn hyper_backward(
-    q: &Mat,
-    k: &Mat,
-    v: &Mat,
-    dout: &Mat,
-    p: &HyperParams,
-    plan: &HyperPlan,
-) -> (Mat, Mat, Mat) {
-    let parts = hyper_parts_with_plan_view(q.view(), k.view(), v.view(), p, plan);
-    hyper_backward_with_parts_view(
-        q.view(),
-        k.view(),
-        v.view(),
-        dout.view(),
-        p,
-        plan,
-        &parts,
-    )
-}
-
-/// [`hyper_backward`] given the already-computed forward triple (the
-/// fwd+bwd path has it in hand — no second forward pass).
-#[deprecated(note = "use `attention::op::AttentionOp::backward`")]
-pub fn hyper_backward_with_parts(
-    q: &Mat,
-    k: &Mat,
-    v: &Mat,
-    dout: &Mat,
-    p: &HyperParams,
-    plan: &HyperPlan,
-    parts: &Parts,
-) -> (Mat, Mat, Mat) {
-    hyper_backward_with_parts_view(
-        q.view(),
-        k.view(),
-        v.view(),
-        dout.view(),
-        p,
-        plan,
-        parts,
-    )
-}
-
-/// View-based core of the estimator backward.
 pub(crate) fn hyper_backward_with_parts_view(
     q: MatRef<'_>,
     k: MatRef<'_>,
@@ -597,28 +523,6 @@ mod tests {
         let p = HyperParams { block: 16, samples: 32, ..Default::default() };
         let a = hyper(&q, &k, &v, &p, &mut Rng::new(9));
         let b = hyper(&q, &k, &v, &p, &mut Rng::new(9));
-        assert_eq!(a, b);
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_match_view_core() {
-        let (q, k, v) = clustered(30, 64, 8, 4, 0.3);
-        let p = HyperParams { block: 16, samples: 32, ..Default::default() };
-        assert_eq!(
-            hyper_attention(&q, &k, &v, &p, &mut Rng::new(3)),
-            hyper(&q, &k, &v, &p, &mut Rng::new(3))
-        );
-        let plan = HyperPlan::build(&q, &k, &v, &p, &mut Rng::new(4));
-        let mut rng = Rng::new(5);
-        let dout = Mat::randn(64, 8, &mut rng);
-        let parts = hyper_parts_with_plan(&q, &k, &v, &p, &plan);
-        assert_eq!(
-            parts.finalize(),
-            hyper_parts_with_plan_view(q.view(), k.view(), v.view(), &p, &plan).finalize()
-        );
-        let a = hyper_backward(&q, &k, &v, &dout, &p, &plan);
-        let b = hyper_backward_with_parts(&q, &k, &v, &dout, &p, &plan, &parts);
         assert_eq!(a, b);
     }
 

@@ -11,8 +11,10 @@
 //!   [`op::AttentionOp`], one batched multi-head entry point over every
 //!   backend (exact, flash, hyper, causal-hyper, auto-routed), zero-copy
 //!   [`crate::linalg::QkvView`] inputs, plan-cached forward/backward
-//!   sessions.  The per-algorithm free functions below it are deprecated
-//!   shims kept for one release.
+//!   sessions, and the incremental prefill/decode split over
+//!   [`op::AttnCache`] (KV cache + appendable decode sampling state).
+//!   The view-based cores below it are the only implementation surface
+//!   (the deprecated free-function shims were removed).
 //! * [`exact`] — naive reference + FlashAttention-style streaming exact
 //!   attention (the paper's baseline), forward and backward.
 //! * [`approx_d`] — Algorithm 2 (ApproxD), the Lemma 1 estimator.

@@ -13,9 +13,24 @@
 //!     ▼
 //! AttentionOp ──.forward(QkvView)──▶ AttnOutput { out, per-head plans }
 //!     │                                   │
-//!     └──.backward(view, dout, &fwd)──────┘   replays the identical
-//!                                             estimator, no recompute
+//!     ├──.backward(view, dout, &fwd)──────┘   replays the identical
+//!     │                                       estimator, no recompute
+//!     │            ┌───────────────────────┐
+//!     ├──.prefill(─┤ AttnCache             │, qkv)  ─▶ AttnOutput
+//!     │            │  linalg::KvCache      │
+//!     └─.decode_step(  + HeadSampler state │, q₁)   ─▶ DecodeOutput
+//!                  └───────────────────────┘
 //! ```
+//!
+//! * **Prefill/decode** — the incremental serving path: `prefill`
+//!   ingests a prompt into an [`AttnCache`] (computing its outputs),
+//!   then each `decode_step` appends one token and attends the cached
+//!   prefix — an exact fused one-row pass, or past the documented
+//!   [`AutoPolicy`] decode threshold the sampled estimator that reuses
+//!   the prefix's LSH bucket structure and only resamples when the
+//!   cache outgrows the resample interval.  This turns per-token decode
+//!   from quadratic re-prefill into Θ(len·d) (exact) or
+//!   Θ((b+m)·d) (sampled) work.
 //!
 //! * **Backends** — [`Backend::Exact`] (naive oracle),
 //!   [`Backend::Flash`] (streaming exact), [`Backend::Hyper`]
@@ -38,8 +53,10 @@
 use super::causal::{self, CausalParams, CausalPlan};
 use super::exact;
 use super::hyper::{self, HyperParams, HyperPlan, SampleMode};
-use super::Parts;
-use crate::linalg::{Mat, MatRef, QkvView};
+use super::{softmax_scale, Parts};
+use crate::kernel;
+use crate::linalg::{self, KvCache, Mat, MatRef, QkvView};
+use crate::lsh::Lsh;
 use crate::par;
 use crate::rng::Rng;
 
@@ -124,17 +141,45 @@ pub fn fit_block(n: usize, target: usize) -> usize {
 /// exact streaming attention is both faster and exact.  The same guard
 /// is applied to an *explicit* `Backend::Hyper` request (documented
 /// degradation, previously an unwritten rule in the engine).
+///
+/// **Decode rows** (the [`AttentionOp::decode_step`] policy):
+///
+/// | condition                                    | decode path         |
+/// |----------------------------------------------|---------------------|
+/// | exact family, or cache < decode threshold    | exact one-row pass  |
+/// | hyper family + cache ≥ decode threshold      | sampled decode      |
+///
+/// Sampled decode reuses the prefix's LSH bucket structure and drawn
+/// residual samples; the state is **appendable** — rows added after the
+/// last build are attended exactly (the recent window) and the state is
+/// only rebuilt (re-sorted, resampled) once the cache has grown
+/// `decode_resample_interval` rows past it.  (The divisor-block guard
+/// does not apply to decode: the bucket window is a free-size window,
+/// not an equal-block partition, so prime cache lengths are fine.)
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct AutoPolicy {
     /// jobs with n >= this use the HyperAttention family
     pub hyper_threshold: usize,
     /// smallest fitted block worth running the block estimator with
     pub min_block: usize,
+    /// decode steps on caches shorter than this run the exact fused
+    /// one-row pass even for hyper-family backends (the estimator's
+    /// constant factor only pays off past it)
+    pub decode_hyper_threshold: usize,
+    /// sampled decode state is rebuilt once the cache has grown this
+    /// many rows past the last build; in between, appended rows join
+    /// the exactly-attended recent window
+    pub decode_resample_interval: usize,
 }
 
 impl Default for AutoPolicy {
     fn default() -> Self {
-        AutoPolicy { hyper_threshold: 1024, min_block: 8 }
+        AutoPolicy {
+            hyper_threshold: 1024,
+            min_block: 8,
+            decode_hyper_threshold: 8192,
+            decode_resample_interval: 256,
+        }
     }
 }
 
@@ -326,6 +371,202 @@ impl AttnGrads {
     }
 }
 
+/// Appendable per-head sampling state for the hyper decode path: the
+/// prefix's LSH bucket structure plus the drawn residual samples — the
+/// incremental counterpart of the build-time `CausalPlan`.  Built over
+/// the first `AttnCache::built_len` cache rows; rows appended after
+/// that are attended exactly (the recent window) until the cache grows
+/// past the [`AutoPolicy::decode_resample_interval`] and the state is
+/// rebuilt.
+pub(crate) struct HeadSampler {
+    lsh: Lsh,
+    /// prefix key indices sorted by bucket id
+    sorted_idx: Vec<usize>,
+    /// bucket id of `sorted_idx[p]` (ascending)
+    sorted_bucket: Vec<u32>,
+    /// sampled residual key indices (uniform over the prefix)
+    sample_idx: Vec<usize>,
+    /// position of each sample in the sorted bucket order (for the
+    /// per-query window-overlap mask)
+    sample_pos: Vec<usize>,
+}
+
+impl HeadSampler {
+    fn build(k_prefix: MatRef<'_>, lsh_bits: usize, samples: usize, rng: &mut Rng) -> Self {
+        let n = k_prefix.rows;
+        let lsh = Lsh::new(k_prefix.cols, lsh_bits, rng);
+        let buckets = lsh.buckets(k_prefix);
+        let sorted_idx = linalg::argsort(&buckets);
+        let sorted_bucket: Vec<u32> = sorted_idx.iter().map(|&i| buckets[i]).collect();
+        let mut pos = vec![0usize; n];
+        for (p, &i) in sorted_idx.iter().enumerate() {
+            pos[i] = p;
+        }
+        let m = samples.min(n);
+        let sample_idx = if m == 0 { Vec::new() } else { rng.sample_uniform(n, m) };
+        let sample_pos = sample_idx.iter().map(|&j| pos[j]).collect();
+        HeadSampler { lsh, sorted_idx, sorted_bucket, sample_idx, sample_pos }
+    }
+}
+
+/// A streaming attention session's state: the growable
+/// [`crate::linalg::KvCache`] plus the appendable per-head decode
+/// sampling state.  Create one per sequence, then drive it with
+/// [`AttentionOp::prefill`] and [`AttentionOp::decode_step`].
+pub struct AttnCache {
+    kv: KvCache,
+    /// per-head sampled-decode state (None until the first sampled
+    /// decode step; dropped on prefill and rebuilt past the resample
+    /// interval)
+    samplers: Option<Vec<HeadSampler>>,
+    /// cache length when `samplers` was built
+    built_len: usize,
+    /// how many times the sampling state has been (re)built
+    resamples: u64,
+}
+
+impl AttnCache {
+    pub fn new(heads: usize, d: usize) -> Self {
+        AttnCache { kv: KvCache::new(heads, d), samplers: None, built_len: 0, resamples: 0 }
+    }
+
+    #[inline]
+    pub fn heads(&self) -> usize {
+        self.kv.heads()
+    }
+
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.kv.d()
+    }
+
+    /// Cached rows per head (the sequence length so far).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.kv.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.kv.is_empty()
+    }
+
+    /// The raw KV storage (zero-copy per-head views).
+    pub fn kv(&self) -> &KvCache {
+        &self.kv
+    }
+
+    /// How many times the sampled-decode state has been (re)built —
+    /// the observable for the resample-threshold contract.
+    pub fn resamples(&self) -> u64 {
+        self.resamples
+    }
+
+    /// Append K/V rows **without** computing attention (cache warm-up
+    /// for benches and tests; [`AttentionOp::prefill`] also computes the
+    /// new queries' outputs).
+    pub fn append_kv(&mut self, x: &QkvView<'_>) -> Result<(), String> {
+        self.kv.append(x)?;
+        self.samplers = None;
+        Ok(())
+    }
+
+    /// Drop contents and decode state (capacity retained).  Also resets
+    /// the resample counter, so [`AttnCache::resamples`] always counts
+    /// the current sequence only.
+    pub fn clear(&mut self) {
+        self.kv.clear();
+        self.samplers = None;
+        self.built_len = 0;
+        self.resamples = 0;
+    }
+}
+
+/// One decoded token: the `[heads, d]` attention output at position
+/// `pos` (the token just appended to the cache).
+pub struct DecodeOutput {
+    pub heads: usize,
+    pub d: usize,
+    /// absolute position of this token (cache length − 1)
+    pub pos: usize,
+    /// `[heads, d]` row-major output
+    pub out: Vec<f32>,
+    /// true if the sampled (near-constant-per-token) estimator ran;
+    /// false for the exact fused one-row pass
+    pub sampled: bool,
+}
+
+impl DecodeOutput {
+    /// Zero-copy view of one head's output row.
+    pub fn head_out(&self, h: usize) -> &[f32] {
+        assert!(h < self.heads);
+        &self.out[h * self.d..(h + 1) * self.d]
+    }
+}
+
+/// One sampled decode row: exact over the bucket window and the recent
+/// rows, ratio-estimated over the sampled residual.  `ks` is the
+/// pre-scaled key panel (logits need no further scaling); `built` is
+/// the prefix length the sampler covers; keys `built..len` are the
+/// recent rows (always including the token itself).
+fn decode_row_sampled(
+    qrow: &[f32],
+    ks: MatRef<'_>,
+    v: MatRef<'_>,
+    s: &HeadSampler,
+    built: usize,
+    block_target: usize,
+) -> Vec<f32> {
+    let len = ks.rows;
+    let w = block_target.min(built);
+    // window of sorted positions centred on the query's bucket
+    let (lo, hi) = if w == 0 {
+        (0, 0)
+    } else {
+        let b = s.lsh.bucket(qrow);
+        let p = s.sorted_bucket.partition_point(|&x| x < b);
+        let mut lo = p.saturating_sub(w / 2);
+        if lo + w > built {
+            lo = built - w;
+        }
+        (lo, lo + w)
+    };
+    // exact candidates: bucket window + recent tail (contains self)
+    let mut idx: Vec<usize> = s.sorted_idx[lo..hi].to_vec();
+    idx.extend(built..len);
+    let n_exact = idx.len();
+    // residual samples that fall outside the window
+    let mut kept = 0usize;
+    for (t, &j) in s.sample_idx.iter().enumerate() {
+        if s.sample_pos[t] < lo || s.sample_pos[t] >= hi {
+            idx.push(j);
+            kept += 1;
+        }
+    }
+    // ratio-estimator rescale to the (built − w) unmasked prefix keys
+    let us = if kept == 0 { 0.0 } else { (built - w) as f32 / kept as f32 };
+
+    // one-row streaming softmax over the candidate set
+    let mut logits = vec![0.0f32; idx.len()];
+    for (t, &j) in idx.iter().enumerate() {
+        logits[t] = linalg::dot(qrow, ks.row(j));
+    }
+    let mx = kernel::hmax(&logits);
+    let mut num = vec![0.0f32; v.cols];
+    let mut den = 0.0f32;
+    for (t, &j) in idx.iter().enumerate() {
+        let wgt = if t < n_exact { 1.0 } else { us };
+        if wgt == 0.0 {
+            continue;
+        }
+        let p = wgt * (logits[t] - mx).exp();
+        den += p;
+        kernel::axpy(p, v.row(j), &mut num);
+    }
+    kernel::scale(&mut num, 1.0 / den.max(1e-30));
+    num
+}
+
 /// A validated, compiled attention operator.  Cheap to build; reusable
 /// across any number of `forward`/`backward` sessions and shapes.
 pub struct AttentionOp {
@@ -397,6 +638,189 @@ impl AttentionOp {
     /// returned session cannot be passed to `backward` (it errors).
     pub fn infer(&self, x: QkvView<'_>) -> AttnOutput {
         self.run(x, false)
+    }
+
+    /// Does the hyper estimator family own sequences of this length?
+    /// (Decode ignores the divisor-block guard: the bucket window is a
+    /// free-size window, not an equal-block partition.)
+    fn hyper_family(&self, n: usize) -> bool {
+        match self.cfg.backend {
+            Backend::Hyper | Backend::CausalHyper => true,
+            Backend::Auto => n >= self.cfg.auto.hyper_threshold,
+            Backend::Exact | Backend::Flash => false,
+        }
+    }
+
+    /// Phase 1 of incremental attention: append `x`'s keys/values to the
+    /// session cache and return the attention outputs of `x`'s queries
+    /// over the whole cache.
+    ///
+    /// * On an **empty** cache this equals [`AttentionOp::infer`]
+    ///   (the resolved backend runs, including the Algorithm 3/4
+    ///   estimators — bitwise for the hyper family, to f32 rounding for
+    ///   the streaming exact path).
+    /// * On a **non-empty** cache (chunked prefill, follow-up turns) the
+    ///   new queries run the exact streaming pass over the shared
+    ///   pre-scaled cache panel at causal offset `prior_len`; the
+    ///   hyper-family estimators degrade to this exact pass here —
+    ///   their plans are whole-sequence constructs, and the incremental
+    ///   sampling state belongs to [`AttentionOp::decode_step`].
+    ///
+    /// The returned session carries no backward state (`backward` on it
+    /// errors, as with `infer`).
+    pub fn prefill(&self, cache: &mut AttnCache, x: QkvView<'_>) -> Result<AttnOutput, String> {
+        if x.heads != cache.kv.heads() || x.d != cache.kv.d() {
+            return Err(format!(
+                "cache is ({} heads, d={}), view is ({} heads, d={})",
+                cache.kv.heads(),
+                cache.kv.d(),
+                x.heads,
+                x.d
+            ));
+        }
+        let prior = cache.kv.len();
+        cache.kv.append(&x)?;
+        cache.kv.sync_scaled(softmax_scale(x.d, self.cfg.scale));
+        // decode sampling state is stale after any prefill; it is
+        // rebuilt lazily by the next sampled decode step
+        cache.samplers = None;
+        if prior == 0 {
+            return Ok(self.run(x, false));
+        }
+        let (h, n, d) = (x.heads, x.n, x.d);
+        let causal = self.cfg.causal;
+        let block = self.cfg.flash_block;
+        let kv = &cache.kv;
+        let per_head: Vec<Mat> = par::par_map(h, |head| {
+            let (q, _, _) = x.head(head);
+            exact::flash_prefill_view(
+                q,
+                kv.head_k_scaled(head),
+                kv.head_v(head),
+                causal,
+                prior,
+                block,
+            )
+            .finalize()
+        });
+        let per = n * d;
+        let mut out = vec![0.0f32; h * per];
+        for (head, o) in per_head.into_iter().enumerate() {
+            out[head * per..(head + 1) * per].copy_from_slice(&o.data);
+        }
+        Ok(AttnOutput {
+            heads: h,
+            n,
+            d,
+            out,
+            backend: Backend::Flash,
+            cfg: self.cfg,
+            state: Vec::new(),
+        })
+    }
+
+    /// Phase 2 of incremental attention: one autoregressive step.
+    /// Appends the new token's K/V (one row per head) to the cache and
+    /// returns its attention output over the full cache.
+    ///
+    /// Resolution per cache length follows the decode rows of the
+    /// [`AutoPolicy`] table:
+    /// * exact-family backends, or a cache shorter than
+    ///   `decode_hyper_threshold` — the fused one-row streaming pass
+    ///   over the shared pre-scaled panel, Θ(len·d) per token;
+    /// * hyper-family backends on a longer cache — the sampled
+    ///   estimator: the query's LSH bucket window (≤ `block` keys) +
+    ///   the exact recent rows appended since the state was built + a
+    ///   uniform residual sample (≤ `samples` keys), i.e.
+    ///   Θ((block + samples + resample_interval)·d) per token.  The
+    ///   state is appendable and only rebuilt past
+    ///   `decode_resample_interval` (see [`AttnCache::resamples`]).
+    pub fn decode_step(
+        &self,
+        cache: &mut AttnCache,
+        x: QkvView<'_>,
+    ) -> Result<DecodeOutput, String> {
+        if x.n != 1 {
+            return Err(format!("decode_step takes exactly one new token, got n = {}", x.n));
+        }
+        if x.heads != cache.kv.heads() || x.d != cache.kv.d() {
+            return Err(format!(
+                "cache is ({} heads, d={}), view is ({} heads, d={})",
+                cache.kv.heads(),
+                cache.kv.d(),
+                x.heads,
+                x.d
+            ));
+        }
+        let (h, d) = (x.heads, x.d);
+        let prior = cache.kv.len();
+        let sampled =
+            self.hyper_family(prior + 1) && prior + 1 >= self.cfg.auto.decode_hyper_threshold;
+
+        if sampled {
+            // (re)build the appendable sampling state over the
+            // pre-append prefix when absent or past the interval
+            let stale = match &cache.samplers {
+                None => true,
+                Some(_) => {
+                    prior - cache.built_len >= self.cfg.auto.decode_resample_interval
+                }
+            };
+            if stale {
+                let cfg = &self.cfg;
+                let kv = &cache.kv;
+                let samplers: Vec<HeadSampler> = par::par_map(h, |head| {
+                    let mut rng = cfg.seed.rng_for_head(head).fork(prior as u64);
+                    HeadSampler::build(kv.head_k(head), cfg.lsh_bits, cfg.samples, &mut rng)
+                });
+                cache.samplers = Some(samplers);
+                cache.built_len = prior;
+                cache.resamples += 1;
+            }
+        }
+
+        cache.kv.append(&x)?;
+        cache.kv.sync_scaled(softmax_scale(d, self.cfg.scale));
+
+        let kv = &cache.kv;
+        let len = kv.len();
+        let per_head: Vec<Vec<f32>> = if sampled {
+            let samplers = cache.samplers.as_ref().expect("built above");
+            let built = cache.built_len;
+            let block = self.cfg.block;
+            par::par_map(h, |head| {
+                let (q, _, _) = x.head(head);
+                decode_row_sampled(
+                    q.row(0),
+                    kv.head_k_scaled(head),
+                    kv.head_v(head),
+                    &samplers[head],
+                    built,
+                    block,
+                )
+            })
+        } else {
+            let block = self.cfg.flash_block;
+            par::par_map(h, |head| {
+                let (q, _, _) = x.head(head);
+                // every cached key is past-or-current: no mask needed
+                exact::flash_prefill_view(
+                    q,
+                    kv.head_k_scaled(head),
+                    kv.head_v(head),
+                    false,
+                    0,
+                    block,
+                )
+                .finalize()
+                .data
+            })
+        };
+        let mut out = vec![0.0f32; h * d];
+        for (head, o) in per_head.into_iter().enumerate() {
+            out[head * d..(head + 1) * d].copy_from_slice(&o);
+        }
+        Ok(DecodeOutput { heads: h, d, pos: len - 1, out, sampled })
     }
 
     fn run(&self, x: QkvView<'_>, capture: bool) -> AttnOutput {
@@ -587,7 +1011,7 @@ mod tests {
             backend: Backend::Auto,
             causal: false,
             block: 256,
-            auto: AutoPolicy { hyper_threshold: 1024, min_block: 8 },
+            auto: AutoPolicy { hyper_threshold: 1024, min_block: 8, ..AutoPolicy::default() },
             ..Default::default()
         }
         .build()
@@ -604,7 +1028,7 @@ mod tests {
         let opc = AttnConfig {
             backend: Backend::Auto,
             causal: true,
-            auto: AutoPolicy { hyper_threshold: 1024, min_block: 8 },
+            auto: AutoPolicy { hyper_threshold: 1024, min_block: 8, ..AutoPolicy::default() },
             ..Default::default()
         }
         .build()
@@ -673,7 +1097,11 @@ mod tests {
                     AttnConfig {
                         backend: Backend::Auto,
                         causal,
-                        auto: AutoPolicy { hyper_threshold: n + 1, min_block: 8 },
+                        auto: AutoPolicy {
+                            hyper_threshold: n + 1,
+                            min_block: 8,
+                            ..AutoPolicy::default()
+                        },
                         ..Default::default()
                     },
                 ),
@@ -904,6 +1332,334 @@ mod tests {
         }
     }
 
+    /// Gather one token's `[heads, d]` slice out of a packed
+    /// `[heads, n, d]` buffer (the decode-step input shape).
+    fn token_bufs(buf: &[f32], h: usize, n: usize, d: usize, t: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(h * d);
+        for head in 0..h {
+            out.extend_from_slice(&buf[head * n * d + t * d..head * n * d + (t + 1) * d]);
+        }
+        out
+    }
+
+    /// Acceptance gate: seeded N-step decode equals the one-shot causal
+    /// forward on every backend (decode below the hyper-decode threshold
+    /// is the exact fused one-row pass, so the oracle is exact causal
+    /// attention for every backend).
+    #[test]
+    fn decode_matches_one_shot_causal_every_backend() {
+        let (h, n, d) = (2usize, 48usize, 8usize);
+        let (q, k, v) = clustered_flat(20, h, n, d);
+        let oracles: Vec<Mat> = (0..h)
+            .map(|head| {
+                exact::naive_attention(
+                    &head_mat(&q, head, n, d),
+                    &head_mat(&k, head, n, d),
+                    &head_mat(&v, head, n, d),
+                    true,
+                    None,
+                )
+            })
+            .collect();
+        let configs: Vec<(&str, AttnConfig)> = vec![
+            (
+                "exact",
+                AttnConfig { backend: Backend::Exact, causal: true, ..Default::default() },
+            ),
+            ("flash", AttnConfig::flash(true)),
+            (
+                "hyper",
+                AttnConfig {
+                    backend: Backend::Hyper,
+                    block: 16,
+                    samples: 16,
+                    ..Default::default()
+                },
+            ),
+            ("causal-hyper", AttnConfig::causal_hyper(16, 16, 16)),
+            (
+                "auto",
+                AttnConfig { backend: Backend::Auto, causal: true, ..Default::default() },
+            ),
+        ];
+        for (name, cfg) in configs {
+            let op = cfg.build().unwrap();
+            let mut cache = AttnCache::new(h, d);
+            for t in 0..n {
+                let (qt, kt, vt) = (
+                    token_bufs(&q, h, n, d, t),
+                    token_bufs(&k, h, n, d, t),
+                    token_bufs(&v, h, n, d, t),
+                );
+                let view = QkvView::new(h, 1, d, &qt, &kt, &vt).unwrap();
+                let out = op.decode_step(&mut cache, view).unwrap();
+                assert_eq!(out.pos, t);
+                assert!(!out.sampled, "{name}: below decode threshold must stay exact");
+                for head in 0..h {
+                    let got = out.head_out(head);
+                    let want = oracles[head].row(t);
+                    for j in 0..d {
+                        assert!(
+                            (got[j] - want[j]).abs() < 1e-4,
+                            "{name} t={t} head={head} j={j}: {} vs {}",
+                            got[j],
+                            want[j]
+                        );
+                    }
+                }
+            }
+            assert_eq!(cache.len(), n);
+        }
+    }
+
+    /// Prefill a prompt, then decode the remaining tokens: every row
+    /// must match the one-shot causal oracle.
+    #[test]
+    fn prefill_then_decode_matches_oracle() {
+        let (h, n, d, split) = (2usize, 40usize, 8usize, 24usize);
+        let (q, k, v) = clustered_flat(21, h, n, d);
+        let oracles: Vec<Mat> = (0..h)
+            .map(|head| {
+                exact::naive_attention(
+                    &head_mat(&q, head, n, d),
+                    &head_mat(&k, head, n, d),
+                    &head_mat(&v, head, n, d),
+                    true,
+                    None,
+                )
+            })
+            .collect();
+        let op = AttnConfig::flash(true).build().unwrap();
+        let mut cache = AttnCache::new(h, d);
+        // prompt = first `split` rows of each head (strided windows)
+        let pview = QkvView::strided(h, split, d, n * d, &q, &k, &v).unwrap();
+        let pre = op.prefill(&mut cache, pview).unwrap();
+        assert_eq!(cache.len(), split);
+        for head in 0..h {
+            let got = pre.head_out(head);
+            for i in 0..split {
+                for j in 0..d {
+                    assert!(
+                        (got.get(i, j) - oracles[head].get(i, j)).abs() < 1e-4,
+                        "prefill head={head} row={i} col={j}"
+                    );
+                }
+            }
+        }
+        for t in split..n {
+            let (qt, kt, vt) = (
+                token_bufs(&q, h, n, d, t),
+                token_bufs(&k, h, n, d, t),
+                token_bufs(&v, h, n, d, t),
+            );
+            let view = QkvView::new(h, 1, d, &qt, &kt, &vt).unwrap();
+            let out = op.decode_step(&mut cache, view).unwrap();
+            for head in 0..h {
+                let got = out.head_out(head);
+                let want = oracles[head].row(t);
+                for j in 0..d {
+                    assert!(
+                        (got[j] - want[j]).abs() < 1e-4,
+                        "decode t={t} head={head} j={j}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// On an empty cache, prefill is exactly infer — bitwise for the
+    /// sampled estimators (same per-head streams) — and its session is
+    /// inference-only.
+    #[test]
+    fn prefill_empty_cache_equals_infer() {
+        let (h, n, d) = (2usize, 64usize, 8usize);
+        let (q, k, v) = clustered_flat(22, h, n, d);
+        let view = QkvView::new(h, n, d, &q, &k, &v).unwrap();
+        for cfg in [
+            AttnConfig {
+                backend: Backend::Hyper,
+                block: 16,
+                samples: 16,
+                seed: SeedPolicy::PerHead(5),
+                ..Default::default()
+            },
+            AttnConfig {
+                backend: Backend::CausalHyper,
+                causal: true,
+                block: 16,
+                samples: 16,
+                causal_base: 16,
+                seed: SeedPolicy::PerHead(5),
+                ..Default::default()
+            },
+        ] {
+            let op = cfg.build().unwrap();
+            let mut cache = AttnCache::new(h, d);
+            let pre = op.prefill(&mut cache, view).unwrap();
+            let one = op.infer(view);
+            assert_eq!(pre.out, one.out, "{:?}", cfg.backend);
+            assert_eq!(cache.len(), n);
+            let dout = vec![0.0f32; h * n * d];
+            assert!(op.backward(view, &dout, &pre).is_err(), "inference-only session");
+        }
+    }
+
+    /// Chunked causal prefill (several offset chunks) reassembles to
+    /// the one-shot forward.  (Non-causal chunked prefill is inherently
+    /// different: earlier chunks only attend the cache so far.)
+    #[test]
+    fn chunked_prefill_matches_one_shot_flash() {
+        let (h, n, d) = (2usize, 48usize, 8usize);
+        let (q, k, v) = clustered_flat(23, h, n, d);
+        let op = AttnConfig::flash(true).build().unwrap();
+        let full = op.infer(QkvView::new(h, n, d, &q, &k, &v).unwrap());
+        let mut cache = AttnCache::new(h, d);
+        let mut got = vec![0.0f32; h * n * d];
+        let mut row0 = 0usize;
+        for chunk in [16usize, 1, 31] {
+            let cv = QkvView::strided(
+                h,
+                chunk,
+                d,
+                n * d,
+                &q[row0 * d..],
+                &k[row0 * d..],
+                &v[row0 * d..],
+            )
+            .unwrap();
+            let pre = op.prefill(&mut cache, cv).unwrap();
+            for head in 0..h {
+                let src = pre.head_out(head);
+                for i in 0..chunk {
+                    got[head * n * d + (row0 + i) * d..head * n * d + (row0 + i + 1) * d]
+                        .copy_from_slice(src.row(i));
+                }
+            }
+            row0 += chunk;
+        }
+        assert_eq!(row0, n);
+        let max_diff = full
+            .out
+            .iter()
+            .zip(&got)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-5, "chunked causal prefill diff {max_diff}");
+    }
+
+    /// The sampled decode path honors the documented resample interval
+    /// (observable via `AttnCache::resamples`) and is deterministic for
+    /// a fixed seed.
+    #[test]
+    fn sampled_decode_resample_interval_contract() {
+        let (h, n, d) = (1usize, 80usize, 8usize);
+        let (q, k, v) = clustered_flat(24, h, n, d);
+        let cfg = AttnConfig {
+            backend: Backend::CausalHyper,
+            causal: true,
+            block: 8,
+            samples: 8,
+            causal_base: 16,
+            seed: SeedPolicy::PerHead(9),
+            auto: AutoPolicy {
+                decode_hyper_threshold: 1,
+                decode_resample_interval: 8,
+                ..AutoPolicy::default()
+            },
+            ..Default::default()
+        };
+        let op = cfg.build().unwrap();
+        let run = || {
+            let mut cache = AttnCache::new(h, d);
+            let mut outs = Vec::new();
+            for t in 0..n {
+                let (qt, kt, vt) = (
+                    token_bufs(&q, h, n, d, t),
+                    token_bufs(&k, h, n, d, t),
+                    token_bufs(&v, h, n, d, t),
+                );
+                let view = QkvView::new(h, 1, d, &qt, &kt, &vt).unwrap();
+                let o = op.decode_step(&mut cache, view).unwrap();
+                assert!(o.sampled, "threshold 1 forces the sampled path");
+                assert!(o.out.iter().all(|x| x.is_finite()));
+                outs.push(o.out);
+            }
+            (cache.resamples(), outs)
+        };
+        let (r1, o1) = run();
+        let (r2, o2) = run();
+        // builds at prior = 0, 8, 16, ..., 72 (80 steps, interval 8)
+        assert_eq!(r1, 10, "resample count off the documented interval");
+        assert_eq!(r1, r2);
+        assert_eq!(o1, o2, "sampled decode must be deterministic per seed");
+    }
+
+    /// With a bucket window at least as large as the prefix, the sampled
+    /// decode estimator degenerates to exact causal attention — the
+    /// end-to-end check of its window/recent/residual bookkeeping.
+    #[test]
+    fn sampled_decode_exact_when_window_covers_prefix() {
+        let (h, n, d) = (1usize, 48usize, 8usize);
+        let (q, k, v) = clustered_flat(25, h, n, d);
+        let oracle = exact::naive_attention(
+            &head_mat(&q, 0, n, d),
+            &head_mat(&k, 0, n, d),
+            &head_mat(&v, 0, n, d),
+            true,
+            None,
+        );
+        let cfg = AttnConfig {
+            backend: Backend::CausalHyper,
+            causal: true,
+            block: 64, // ≥ n: the bucket window spans the whole prefix
+            samples: 8,
+            causal_base: 16,
+            seed: SeedPolicy::PerHead(3),
+            auto: AutoPolicy {
+                decode_hyper_threshold: 1,
+                decode_resample_interval: 4,
+                ..AutoPolicy::default()
+            },
+            ..Default::default()
+        };
+        let op = cfg.build().unwrap();
+        let mut cache = AttnCache::new(h, d);
+        for t in 0..n {
+            let (qt, kt, vt) = (
+                token_bufs(&q, h, n, d, t),
+                token_bufs(&k, h, n, d, t),
+                token_bufs(&v, h, n, d, t),
+            );
+            let view = QkvView::new(h, 1, d, &qt, &kt, &vt).unwrap();
+            let o = op.decode_step(&mut cache, view).unwrap();
+            assert!(o.sampled);
+            for j in 0..d {
+                assert!(
+                    (o.out[j] - oracle.get(t, j)).abs() < 1e-4,
+                    "t={t} j={j}: {} vs {}",
+                    o.out[j],
+                    oracle.get(t, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode_and_prefill_validate_shapes() {
+        let d = 8usize;
+        let op = AttnConfig::flash(true).build().unwrap();
+        let mut cache = AttnCache::new(2, d);
+        let buf = vec![0.0f32; 2 * 2 * d];
+        // n != 1 rejected by decode
+        let v2 = QkvView::new(2, 2, d, &buf, &buf, &buf).unwrap();
+        assert!(op.decode_step(&mut cache, v2).is_err());
+        // wrong head count rejected by both phases
+        let v1 = QkvView::new(1, 1, d, &buf[..d], &buf[..d], &buf[..d]).unwrap();
+        assert!(op.decode_step(&mut cache, v1).is_err());
+        assert!(op.prefill(&mut cache, v1).is_err());
+        assert_eq!(cache.len(), 0, "failed calls must not grow the cache");
+    }
+
     #[test]
     fn auto_long_causal_end_to_end() {
         // Auto over the threshold with causal dispatch: output must be
@@ -916,7 +1672,7 @@ mod tests {
             block: 16,
             samples: 16,
             causal_base: 32,
-            auto: AutoPolicy { hyper_threshold: 64, min_block: 8 },
+            auto: AutoPolicy { hyper_threshold: 64, min_block: 8, ..AutoPolicy::default() },
             ..Default::default()
         }
         .build()

@@ -6,7 +6,9 @@
 use std::time::Instant;
 
 use crate::attention::measure;
-use crate::attention::op::{fit_block, AttnConfig, AttentionOp, Backend, SeedPolicy};
+use crate::attention::op::{
+    fit_block, AttnCache, AttnConfig, AttentionOp, AutoPolicy, Backend, SeedPolicy,
+};
 use crate::json::Value;
 use crate::kernel;
 use crate::linalg::{Mat, QkvView};
@@ -192,6 +194,88 @@ pub fn print_fig4(rows: &[Fig4Row]) {
     }
 }
 
+/// One decode-throughput row: tokens/sec of the incremental
+/// prefill/decode path at prefix length `n`.
+#[derive(Clone, Debug)]
+pub struct DecodeBenchRow {
+    pub n: usize,
+    pub steps: usize,
+    /// exact fused one-row decode (Θ(n·d) per token)
+    pub exact_tok_s: f64,
+    /// sampled hyper decode (bucket window + residual, near-constant)
+    pub hyper_tok_s: f64,
+    /// sampling-state rebuilds observed during the hyper run
+    pub resamples: u64,
+}
+
+/// Decode tokens/sec at each prefix length: warm a KV cache with an
+/// `n`-row prefix (raw append — no attention compute), then time
+/// `steps` single-token [`crate::attention::op::AttentionOp::decode_step`]
+/// calls for (a) the exact flash decode and (b) the sampled hyper
+/// decode (decode threshold forced on, so the estimator runs at any n).
+pub fn run_decode_bench(
+    sizes: &[usize],
+    d: usize,
+    block: usize,
+    samples: usize,
+    steps: usize,
+) -> Vec<DecodeBenchRow> {
+    let steps = steps.max(1);
+    let mut rows = Vec::new();
+    for &n in sizes {
+        let total = n + steps;
+        let (q, k, v) = clustered_qkv(42, total, d, 32, 0.5);
+        let prefix = QkvView::strided(1, n, d, total * d, &q.data, &k.data, &v.data)
+            .expect("prefix window");
+        let step_view = |t: usize| {
+            let lo = (n + t) * d;
+            let hi = lo + d;
+            QkvView::new(1, 1, d, &q.data[lo..hi], &k.data[lo..hi], &v.data[lo..hi])
+                .expect("token window")
+        };
+
+        // exact decode: streaming one-row pass over the shared panel
+        let flash = flash_op(true);
+        let mut cache = AttnCache::new(1, d);
+        cache.append_kv(&prefix).expect("warm cache");
+        let t0 = Instant::now();
+        for t in 0..steps {
+            let _ = flash.decode_step(&mut cache, step_view(t)).expect("exact decode");
+        }
+        let exact_s = t0.elapsed().as_secs_f64();
+
+        // sampled hyper decode: force the decode threshold on
+        let hyper = AttnConfig {
+            backend: Backend::CausalHyper,
+            causal: true,
+            block: block.max(1),
+            samples,
+            causal_base: 2048.min((n / 2).max(256)),
+            seed: SeedPolicy::Shared(3),
+            auto: AutoPolicy { decode_hyper_threshold: 1, ..AutoPolicy::default() },
+            ..Default::default()
+        }
+        .build()
+        .expect("hyper decode config valid");
+        let mut cache = AttnCache::new(1, d);
+        cache.append_kv(&prefix).expect("warm cache");
+        let t0 = Instant::now();
+        for t in 0..steps {
+            let _ = hyper.decode_step(&mut cache, step_view(t)).expect("hyper decode");
+        }
+        let hyper_s = t0.elapsed().as_secs_f64();
+
+        rows.push(DecodeBenchRow {
+            n,
+            steps,
+            exact_tok_s: steps as f64 / exact_s.max(1e-12),
+            hyper_tok_s: steps as f64 / hyper_s.max(1e-12),
+            resamples: cache.resamples(),
+        });
+    }
+    rows
+}
+
 /// One row of the machine-readable attention perf gate.
 #[derive(Clone, Debug)]
 pub struct AttnBenchRow {
@@ -218,6 +302,10 @@ impl AttnBenchRow {
 /// 2. **Sweep** — tokens/sec for hyper vs flash forward at each `n` in
 ///    `sizes` (paper setup: d = 64, b = m = 256), default threads and
 ///    backend, so the repo's bench trajectory is recorded run-over-run.
+/// 3. **Decode** — incremental decode tokens/sec at each `n` in
+///    `decode_sizes` (default 4k/16k): exact fused one-row decode vs the
+///    sampled hyper decode over a warmed KV cache, so the perf
+///    trajectory covers the serving (prefill/decode) path too.
 ///
 /// Returns the JSON document; timing state (threads, backend) is
 /// restored before returning.
@@ -227,6 +315,8 @@ pub fn run_attention_bench_json(
     block: usize,
     samples: usize,
     reps: usize,
+    decode_sizes: &[usize],
+    decode_steps: usize,
 ) -> Value {
     use std::collections::BTreeMap;
     let mut root = BTreeMap::new();
@@ -303,6 +393,20 @@ pub fn run_attention_bench_json(
         sweep.push(Value::Object(o));
     }
     root.insert("sweep".into(), Value::Array(sweep));
+
+    // ---- 3) decode tokens/sec over a warmed KV cache -------------------
+    let mut decode = Vec::new();
+    for r in run_decode_bench(decode_sizes, d, block, samples, decode_steps) {
+        let mut o = BTreeMap::new();
+        o.insert("n".into(), Value::Num(r.n as f64));
+        o.insert("steps".into(), Value::Num(r.steps as f64));
+        o.insert("exact_tok_s".into(), Value::Num(r.exact_tok_s));
+        o.insert("hyper_tok_s".into(), Value::Num(r.hyper_tok_s));
+        o.insert("resamples".into(), Value::Num(r.resamples as f64));
+        decode.push(Value::Object(o));
+    }
+    root.insert("decode".into(), Value::Array(decode));
+
     root.insert(
         "threads".into(),
         Value::Num(par::num_threads() as f64),
@@ -549,6 +653,35 @@ mod tests {
     fn fig5_alpha_over_n_decreases() {
         let rows = run_fig5(&[256, 1024], 32, None);
         assert!(rows[1].2 < rows[0].2, "alpha/n not decreasing: {rows:?}");
+    }
+
+    #[test]
+    fn decode_bench_rows_sane() {
+        let rows = run_decode_bench(&[64, 128], 16, 16, 16, 4);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_eq!(r.steps, 4);
+            assert!(r.exact_tok_s > 0.0 && r.exact_tok_s.is_finite());
+            assert!(r.hyper_tok_s > 0.0 && r.hyper_tok_s.is_finite());
+            assert!(r.resamples >= 1, "sampled decode must have built state");
+        }
+    }
+
+    #[test]
+    fn bench_json_has_decode_section() {
+        let doc = run_attention_bench_json(&[64], 16, 16, 16, 1, &[64], 2);
+        let decode = doc.get("decode").expect("decode section present");
+        let rows = match decode {
+            Value::Array(a) => a,
+            _ => panic!("decode section must be an array"),
+        };
+        assert_eq!(rows.len(), 1);
+        let tok = rows[0]
+            .get("exact_tok_s")
+            .and_then(|v| v.as_f64())
+            .expect("exact_tok_s");
+        assert!(tok > 0.0);
+        assert!(rows[0].get("hyper_tok_s").is_some());
     }
 
     #[test]

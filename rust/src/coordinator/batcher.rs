@@ -6,6 +6,11 @@
 //! never drops or duplicates a job; never holds a job past its deadline)
 //! are directly proptestable without an async runtime.  The async shim
 //! lives in `server.rs`.
+//!
+//! Streaming decode steps ride the same machine: every live session's
+//! decode work shares one batch key (`Route::decode_key()` in
+//! [`super::router`]), so concurrent token streams coalesce into decode
+//! batches here instead of re-entering the queue as full jobs.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};

@@ -6,32 +6,135 @@
 //! [`crate::attention::op::AttentionOp`] API (internally parallel over
 //! heads and tiles via the [`crate::par`] fork/join pool — this tree is
 //! rayon-free — so a single engine thread still saturates the machine).
+//!
+//! Streaming sessions: the engine owns a session table mapping
+//! [`SessionId`] to its [`AttnCache`] (KV cache + appendable decode
+//! sampling state).  Prefill ([`Work::Open`]) creates the entry; decode
+//! steps check the entry out of the table, run one
+//! `AttentionOp::decode_step`, and check it back in, so decode for
+//! different sessions executes in parallel across the substrate workers
+//! while each session's cache is mutated by one worker at a time.  On
+//! shutdown, queued work is flushed with an explicit error response —
+//! nothing is silently dropped — and the session table is cleared.
 
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::metrics::Metrics;
-use super::request::{AttnJob, AttnResponse, Backend};
+use super::request::{AttnJob, AttnResponse, Backend, DecodeJob, DecodeResponse, SessionId};
 use super::router::{Route, RouteKind, RouterConfig};
-use crate::attention::op::{self, AttnConfig, SeedPolicy};
+use crate::attention::op::{self, AttnCache, AttnConfig, SeedPolicy};
 use crate::linalg::QkvView;
 use crate::runtime::Runtime;
 
-/// One job in flight, with its response channel (bounded-1 std channel
-/// acting as a oneshot).
+/// The unit of engine work.
+pub enum Work {
+    /// A one-shot attention job (the historical full-forward path).
+    Full(AttnJob),
+    /// Open a streaming session: prefill the prompt into a fresh cache.
+    Open { session: SessionId, job: AttnJob },
+    /// One decode step for a live session.
+    Decode(DecodeJob),
+    /// Close a session, dropping its cache.
+    Close { session: SessionId },
+}
+
+/// The response channel matching a [`Work`] variant (bounded-1 std
+/// channels acting as oneshots).
+pub enum Reply {
+    Full(SyncSender<Result<AttnResponse, String>>),
+    Decode(SyncSender<Result<DecodeResponse, String>>),
+    /// fire-and-forget (session close)
+    None,
+}
+
+/// One unit of work in flight, with its response channel.
 pub struct WorkItem {
-    pub job: AttnJob,
+    pub work: Work,
     pub route: Route,
     pub submitted: Instant,
-    pub respond: SyncSender<Result<AttnResponse, String>>,
+    pub respond: Reply,
 }
 
 /// Messages to the engine thread.
 pub enum EngineMsg {
     Batch(Vec<WorkItem>),
     Shutdown,
+}
+
+/// A live session: the compiled op config it was opened with plus its
+/// KV cache.  `None` in the table means "checked out by a worker".
+struct SessionEntry {
+    cfg: AttnConfig,
+    heads: usize,
+    d: usize,
+    cache: AttnCache,
+}
+
+type SessionMap = Arc<Mutex<HashMap<SessionId, Option<SessionEntry>>>>;
+
+/// How long session checkout/close waits for an in-flight decode step
+/// to check its entry back in before giving up.  Bounds the wait so a
+/// wedged session (e.g. a panicked step that never checked in) degrades
+/// to an explicit error instead of spinning a worker forever.
+const SESSION_WAIT: std::time::Duration = std::time::Duration::from_secs(10);
+
+/// Take a session's entry out of the table, waiting (bounded) if
+/// another worker has it checked out.  Errors if the session does not
+/// exist or stays checked out past [`SESSION_WAIT`].
+fn checkout(sessions: &SessionMap, id: SessionId) -> Result<SessionEntry, String> {
+    let deadline = Instant::now() + SESSION_WAIT;
+    loop {
+        {
+            let mut map = sessions.lock().unwrap();
+            match map.get_mut(&id) {
+                None => return Err(format!("unknown session {id}")),
+                Some(slot) => {
+                    if let Some(entry) = slot.take() {
+                        return Ok(entry);
+                    }
+                }
+            }
+        }
+        if Instant::now() >= deadline {
+            return Err(format!("session {id} busy past {SESSION_WAIT:?}; giving up"));
+        }
+        std::thread::sleep(std::time::Duration::from_micros(50));
+    }
+}
+
+/// Return a checked-out entry.  If the session was closed (or the table
+/// cleared on shutdown) while it was out, the entry is dropped.
+fn checkin(sessions: &SessionMap, id: SessionId, entry: SessionEntry) {
+    let mut map = sessions.lock().unwrap();
+    if let Some(slot) = map.get_mut(&id) {
+        *slot = Some(entry);
+    }
+}
+
+/// Remove a session, waiting (bounded) for any in-flight decode step to
+/// check it back in first.  Past the deadline the slot is removed
+/// anyway — a late checkin against the removed id just drops the entry
+/// (see [`checkin`]).  Idempotent.
+fn close_session(sessions: &SessionMap, id: SessionId) {
+    let deadline = Instant::now() + SESSION_WAIT;
+    loop {
+        {
+            let mut map = sessions.lock().unwrap();
+            let checked_out = matches!(map.get(&id), Some(None));
+            if !checked_out || Instant::now() >= deadline {
+                // absent (already closed), present-and-idle, or wedged
+                // past the deadline: remove
+                map.remove(&id);
+                return;
+            }
+            // checked out: drop the lock and wait for checkin
+        }
+        std::thread::sleep(std::time::Duration::from_micros(50));
+    }
 }
 
 /// Largest block size ≤ `target` that divides n (≥ 1).  Delegates to
@@ -59,11 +162,68 @@ pub fn substrate_config(job: &AttnJob, kind: RouteKind, rc: &RouterConfig) -> At
         causal_base: rc.causal_base,
         seed: SeedPolicy::PerHead(job.seed as u64),
         // the router's policy carries through to the op, so the
-        // degenerate-block guard and any threshold tuning share one
-        // source of truth
+        // degenerate-block guard, the decode thresholds, and any
+        // threshold tuning share one source of truth
         auto: rc.auto_policy(),
         ..Default::default()
     }
+}
+
+/// Prefill a session's prompt into a fresh cache and register it in
+/// the session table.
+fn run_open(
+    session: SessionId,
+    job: &AttnJob,
+    kind: RouteKind,
+    rc: &RouterConfig,
+    sessions: &SessionMap,
+) -> Result<Vec<f32>, String> {
+    let cfg = substrate_config(job, kind, rc);
+    let attn = cfg.build()?;
+    let mut cache = AttnCache::new(job.heads, job.d);
+    let view = QkvView::new(job.heads, job.n, job.d, &job.q, &job.k, &job.v)?;
+    let out = attn.prefill(&mut cache, view)?.into_out();
+    sessions.lock().unwrap().insert(
+        session,
+        Some(SessionEntry { cfg, heads: job.heads, d: job.d, cache }),
+    );
+    Ok(out)
+}
+
+/// Run one decode step against its session's checked-out cache.
+fn run_decode(
+    job: &DecodeJob,
+    sessions: &SessionMap,
+) -> Result<crate::attention::op::DecodeOutput, String> {
+    let mut entry = checkout(sessions, job.session)?;
+    if job.heads != entry.heads || job.d != entry.d {
+        let msg = format!(
+            "decode shape (h={}, d={}) != session shape (h={}, d={})",
+            job.heads, job.d, entry.heads, entry.d
+        );
+        checkin(sessions, job.session, entry);
+        return Err(msg);
+    }
+    // ordering guard: a pipelined step that lands out of order is an
+    // explicit error, never a silent mis-ordered cache append
+    if let Some(pos) = job.pos {
+        let at = entry.cache.len();
+        if pos != at {
+            let msg = format!(
+                "decode step expected position {pos} but session {} is at {at} \
+                 (out-of-order pipelined decode?)",
+                job.session
+            );
+            checkin(sessions, job.session, entry);
+            return Err(msg);
+        }
+    }
+    let attn = entry.cfg.build().expect("session config validated at open");
+    let view = QkvView::new(job.heads, 1, job.d, &job.q, &job.k, &job.v)
+        .expect("decode job validated at submit");
+    let res = attn.decode_step(&mut entry.cache, view);
+    checkin(sessions, job.session, entry);
+    res
 }
 
 /// Run one job on the pure-Rust substrate: one batched multi-head op
@@ -83,10 +243,10 @@ pub fn execute_substrate(job: &AttnJob, kind: RouteKind, rc: &RouterConfig) -> V
 ///
 /// Two execution lanes (§Perf optimization 1, EXPERIMENTS.md): the PJRT
 /// lane is a single thread owning the thread-affine [`Runtime`];
-/// substrate batches are forwarded to a small worker pool so they never
-/// queue behind artifact compiles (and vice versa).  Head-of-line
-/// blocking across lanes dropped p50 queue latency ~8× on the mixed
-/// serving workload.
+/// substrate batches (including all streaming-session work) are
+/// forwarded to a small worker pool so they never queue behind artifact
+/// compiles (and vice versa).  Head-of-line blocking across lanes
+/// dropped p50 queue latency ~8× on the mixed serving workload.
 pub fn spawn(
     artifacts_dir: Option<PathBuf>,
     router_config: RouterConfig,
@@ -94,6 +254,7 @@ pub fn spawn(
     queue_depth: usize,
 ) -> (SyncSender<EngineMsg>, std::thread::JoinHandle<()>) {
     let (tx, rx) = std::sync::mpsc::sync_channel::<EngineMsg>(queue_depth);
+    let sessions: SessionMap = Arc::new(Mutex::new(HashMap::new()));
 
     // substrate lane: a shared-receiver worker pool
     let (sub_tx, sub_rx) = std::sync::mpsc::sync_channel::<EngineMsg>(queue_depth);
@@ -103,6 +264,7 @@ pub fn spawn(
         let rxw = sub_rx.clone();
         let rc = router_config.clone();
         let m = metrics.clone();
+        let sess = sessions.clone();
         std::thread::Builder::new()
             .name(format!("hyperattn-substrate-{w}"))
             .spawn(move || loop {
@@ -110,7 +272,7 @@ pub fn spawn(
                 match msg {
                     Ok(EngineMsg::Batch(batch)) => {
                         for item in batch {
-                            execute_one(item, None, &rc, &m);
+                            execute_one(item, None, &rc, &m, &sess);
                         }
                     }
                     Ok(EngineMsg::Shutdown) | Err(_) => break,
@@ -122,10 +284,27 @@ pub fn spawn(
     let handle = std::thread::Builder::new()
         .name("hyperattn-engine".into())
         .spawn(move || {
-            engine_loop(rx, artifacts_dir, router_config, metrics, sub_tx, n_workers)
+            engine_loop(rx, artifacts_dir, router_config, metrics, sub_tx, n_workers, sessions)
         })
         .expect("spawn engine thread");
     (tx, handle)
+}
+
+/// Respond to a flushed item with an explicit shutdown error (instead
+/// of silently dropping its oneshot sender).
+fn respond_flush(item: WorkItem, metrics: &Metrics) {
+    const MSG: &str = "coordinator shutting down; queued work flushed";
+    match item.respond {
+        Reply::Full(tx) => {
+            metrics.jobs_failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let _ = tx.send(Err(MSG.into()));
+        }
+        Reply::Decode(tx) => {
+            metrics.jobs_failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let _ = tx.send(Err(MSG.into()));
+        }
+        Reply::None => {}
+    }
 }
 
 /// Execute one work item (on whichever lane) and respond.
@@ -134,52 +313,121 @@ fn execute_one(
     runtime: Option<&Runtime>,
     rc: &RouterConfig,
     metrics: &Metrics,
+    sessions: &SessionMap,
 ) {
-    let WorkItem { job, route, submitted, respond } = item;
+    let WorkItem { work, route, submitted, respond } = item;
     let queue_us = submitted.elapsed().as_micros() as u64;
     let exec_start = Instant::now();
 
-    let (result, backend) = match (&route.artifact, runtime) {
-        (Some(name), Some(rt)) => {
-            let seed = matches!(route.kind, RouteKind::Hyper).then_some(job.seed);
-            match rt.run_attention(name, job.heads, job.n, job.d, &job.q, &job.k, &job.v, seed)
-            {
-                Ok(out) => (Ok(out), Backend::Artifact(name.clone())),
-                Err(e) => {
-                    // artifact failure degrades to substrate
-                    eprintln!("engine: artifact {name} failed ({e:#}); substrate fallback");
-                    (Ok(execute_substrate(&job, route.kind, rc)), Backend::Substrate)
+    match work {
+        Work::Full(job) => {
+            let (result, backend) = match (&route.artifact, runtime) {
+                (Some(name), Some(rt)) => {
+                    let seed = matches!(route.kind, RouteKind::Hyper).then_some(job.seed);
+                    match rt.run_attention(
+                        name, job.heads, job.n, job.d, &job.q, &job.k, &job.v, seed,
+                    ) {
+                        Ok(out) => (Ok(out), Backend::Artifact(name.clone())),
+                        Err(e) => {
+                            // artifact failure degrades to substrate
+                            eprintln!(
+                                "engine: artifact {name} failed ({e:#}); substrate fallback"
+                            );
+                            (Ok(execute_substrate(&job, route.kind, rc)), Backend::Substrate)
+                        }
+                    }
+                }
+                _ => (Ok(execute_substrate(&job, route.kind, rc)), Backend::Substrate),
+            };
+
+            let exec_us = exec_start.elapsed().as_micros() as u64;
+            metrics.queue_latency.record(queue_us);
+            metrics.exec_latency.record(exec_us);
+            metrics.e2e_latency.record(queue_us + exec_us);
+            match backend {
+                Backend::Artifact(_) => {
+                    metrics.artifact_jobs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+                Backend::Substrate => {
+                    metrics.substrate_jobs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 }
             }
-        }
-        _ => (Ok(execute_substrate(&job, route.kind, rc)), Backend::Substrate),
-    };
 
-    let exec_us = exec_start.elapsed().as_micros() as u64;
-    metrics.queue_latency.record(queue_us);
-    metrics.exec_latency.record(exec_us);
-    metrics.e2e_latency.record(queue_us + exec_us);
-    match backend {
-        Backend::Artifact(_) => {
-            metrics.artifact_jobs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let response =
+                result.map(|out| AttnResponse { id: job.id, out, backend, queue_us, exec_us });
+            match &response {
+                Ok(_) => {
+                    metrics.jobs_completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+                Err(_) => {
+                    metrics.jobs_failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            }
+            if let Reply::Full(tx) = respond {
+                let _ = tx.send(response);
+            }
         }
-        Backend::Substrate => {
+        Work::Open { session, job } => {
+            // prefill the prompt into a fresh cache on the substrate
+            // (streaming sessions are shape-dynamic: no artifact lane)
+            let result = run_open(session, &job, route.kind, rc, sessions);
+            let exec_us = exec_start.elapsed().as_micros() as u64;
+            metrics.queue_latency.record(queue_us);
+            metrics.exec_latency.record(exec_us);
+            metrics.e2e_latency.record(queue_us + exec_us);
             metrics.substrate_jobs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            match &result {
+                Ok(_) => {
+                    metrics.sessions_opened.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    metrics.jobs_completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+                Err(_) => {
+                    metrics.jobs_failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            }
+            if let Reply::Full(tx) = respond {
+                let _ = tx.send(result.map(|out| AttnResponse {
+                    id: job.id,
+                    out,
+                    backend: Backend::Substrate,
+                    queue_us,
+                    exec_us,
+                }));
+            }
+        }
+        Work::Decode(job) => {
+            let result = run_decode(&job, sessions);
+            let exec_us = exec_start.elapsed().as_micros() as u64;
+            metrics.queue_latency.record(queue_us);
+            metrics.decode_latency.record(exec_us);
+            match &result {
+                Ok(_) => {
+                    metrics.decode_steps.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    metrics.jobs_completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+                Err(_) => {
+                    metrics.jobs_failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            }
+            if let Reply::Decode(tx) = respond {
+                let _ = tx.send(result.map(|o| DecodeResponse {
+                    session: job.session,
+                    pos: o.pos,
+                    out: o.out,
+                    sampled: o.sampled,
+                    queue_us,
+                    exec_us,
+                }));
+            }
+        }
+        Work::Close { session } => {
+            close_session(sessions, session);
+            metrics.sessions_closed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         }
     }
-
-    let response = result.map(|out| AttnResponse { id: job.id, out, backend, queue_us, exec_us });
-    match &response {
-        Ok(_) => {
-            metrics.jobs_completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        }
-        Err(_) => {
-            metrics.jobs_failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        }
-    }
-    let _ = respond.send(response);
 }
 
+#[allow(clippy::too_many_arguments)]
 fn engine_loop(
     rx: Receiver<EngineMsg>,
     artifacts_dir: Option<PathBuf>,
@@ -187,6 +435,7 @@ fn engine_loop(
     metrics: Arc<Metrics>,
     sub_tx: SyncSender<EngineMsg>,
     n_workers: usize,
+    sessions: SessionMap,
 ) {
     // Runtime is created lazily on this thread (PjRtClient is !Send).
     let runtime: Option<Runtime> = artifacts_dir.and_then(|dir| match Runtime::open(&dir) {
@@ -200,7 +449,19 @@ fn engine_loop(
     while let Ok(msg) = rx.recv() {
         let batch = match msg {
             EngineMsg::Batch(b) => b,
-            EngineMsg::Shutdown => break,
+            EngineMsg::Shutdown => {
+                // flush anything still queued behind the shutdown with
+                // an explicit error response — in-flight streaming
+                // sessions must not leak their oneshot senders
+                while let Ok(m) = rx.try_recv() {
+                    if let EngineMsg::Batch(batch) = m {
+                        for item in batch {
+                            respond_flush(item, &metrics);
+                        }
+                    }
+                }
+                break;
+            }
         };
         metrics.record_batch(batch.len());
         // route the whole batch to its lane (batch keys are per-route, so
@@ -211,14 +472,14 @@ fn engine_loop(
             .unwrap_or(false);
         if is_artifact {
             for item in batch {
-                execute_one(item, runtime.as_ref(), &rc, &metrics);
+                execute_one(item, runtime.as_ref(), &rc, &metrics, &sessions);
             }
         } else {
             // forward to the substrate pool; if it is gone, run inline
             if let Err(e) = sub_tx.send(EngineMsg::Batch(batch)) {
                 if let EngineMsg::Batch(batch) = e.0 {
                     for item in batch {
-                        execute_one(item, None, &rc, &metrics);
+                        execute_one(item, None, &rc, &metrics, &sessions);
                     }
                 }
             }
@@ -227,6 +488,9 @@ fn engine_loop(
     for _ in 0..n_workers {
         let _ = sub_tx.send(EngineMsg::Shutdown);
     }
+    // any caches still live are dropped here; a worker holding a
+    // checked-out entry simply drops it at checkin
+    sessions.lock().unwrap().clear();
 }
 
 #[cfg(test)]
@@ -314,5 +578,35 @@ mod tests {
         let exact = exact::naive_attention(&m(&j.q), &m(&j.k), &m(&j.v), false, None);
         let got = MatRef::new(97, 16, &out[..per]).to_mat();
         assert!(exact.max_abs_diff(&got) < 1e-5, "prime n must run exact");
+    }
+
+    /// Session checkout/checkin/close protocol on the raw table.
+    #[test]
+    fn session_table_checkout_protocol() {
+        let sessions: SessionMap = Arc::new(Mutex::new(HashMap::new()));
+        assert!(checkout(&sessions, 1).is_err(), "unknown session");
+        let cfg = AttnConfig::flash(true);
+        sessions.lock().unwrap().insert(
+            1,
+            Some(SessionEntry { cfg, heads: 2, d: 8, cache: AttnCache::new(2, 8) }),
+        );
+        let entry = checkout(&sessions, 1).unwrap();
+        // while checked out the slot is empty but present
+        assert!(matches!(sessions.lock().unwrap().get(&1), Some(None)));
+        checkin(&sessions, 1, entry);
+        assert!(matches!(sessions.lock().unwrap().get(&1), Some(Some(_))));
+        close_session(&sessions, 1);
+        assert!(sessions.lock().unwrap().get(&1).is_none());
+        // closing again is a no-op
+        close_session(&sessions, 1);
+        // checkin after close drops the entry silently
+        sessions.lock().unwrap().insert(
+            2,
+            Some(SessionEntry { cfg, heads: 2, d: 8, cache: AttnCache::new(2, 8) }),
+        );
+        let e2 = checkout(&sessions, 2).unwrap();
+        sessions.lock().unwrap().remove(&2);
+        checkin(&sessions, 2, e2);
+        assert!(sessions.lock().unwrap().get(&2).is_none());
     }
 }

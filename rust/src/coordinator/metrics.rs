@@ -79,6 +79,8 @@ pub struct Metrics {
     pub queue_latency: Histogram,
     pub exec_latency: Histogram,
     pub e2e_latency: Histogram,
+    /// per-token latency of the streaming decode lane
+    pub decode_latency: Histogram,
     pub jobs_submitted: AtomicU64,
     pub jobs_completed: AtomicU64,
     pub jobs_failed: AtomicU64,
@@ -86,6 +88,11 @@ pub struct Metrics {
     pub batched_jobs: AtomicU64,
     pub artifact_jobs: AtomicU64,
     pub substrate_jobs: AtomicU64,
+    /// streaming sessions opened (prefill accepted) / closed
+    pub sessions_opened: AtomicU64,
+    pub sessions_closed: AtomicU64,
+    /// decode steps served across all sessions
+    pub decode_steps: AtomicU64,
 }
 
 impl Metrics {
@@ -111,14 +118,19 @@ impl Metrics {
     pub fn report(&self) -> String {
         format!(
             "jobs: submitted={} completed={} failed={}\n\
+             sessions: opened={} closed={} decode_steps={}\n\
              batches: {} (mean size {:.2})\n\
              backend: artifact={} substrate={}\n\
              queue  latency: mean {:.0}us p50 {}us p99 {}us max {}us\n\
              exec   latency: mean {:.0}us p50 {}us p99 {}us max {}us\n\
-             e2e    latency: mean {:.0}us p50 {}us p99 {}us max {}us",
+             e2e    latency: mean {:.0}us p50 {}us p99 {}us max {}us\n\
+             decode latency: mean {:.0}us p50 {}us p99 {}us max {}us",
             self.jobs_submitted.load(Ordering::Relaxed),
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_failed.load(Ordering::Relaxed),
+            self.sessions_opened.load(Ordering::Relaxed),
+            self.sessions_closed.load(Ordering::Relaxed),
+            self.decode_steps.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.artifact_jobs.load(Ordering::Relaxed),
@@ -135,6 +147,10 @@ impl Metrics {
             self.e2e_latency.quantile_us(0.5),
             self.e2e_latency.quantile_us(0.99),
             self.e2e_latency.max_us(),
+            self.decode_latency.mean_us(),
+            self.decode_latency.quantile_us(0.5),
+            self.decode_latency.quantile_us(0.99),
+            self.decode_latency.max_us(),
         )
     }
 }

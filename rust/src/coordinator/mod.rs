@@ -1,28 +1,50 @@
-//! Layer-3 serving coordinator (vLLM-router-shaped).
+//! Layer-3 serving coordinator (vLLM-router-shaped), now with streaming
+//! prefill/decode sessions.
 //!
 //! ```text
-//! client jobs ──> Router ──(bucket n, policy exact|hyper)──> Batcher
-//!                                                               │ (max_batch, max_wait)
-//!                  Metrics <── Engine workers <── batch queue ──┘
-//!                                │
-//!                 ┌──────────────┴───────────────┐
-//!                 │ PJRT runtime (AOT artifacts) │  fixed shapes
-//!                 │ Rust substrate fallback      │  any shape
-//!                 └──────────────────────────────┘
+//! one-shot jobs ────> Router ──(bucket n, exact|hyper)──┐
+//!                                                       ▼
+//! sessions: open_session ─┐                          Batcher
+//!           decode ───────┼──(shared decode key)──>    │ (max_batch,
+//!           close ────────┘                            │  max_wait)
+//!              Metrics <── Engine workers <── batch queue
+//!                            │
+//!            ┌───────────────┼────────────────────────┐
+//!            │ PJRT runtime (AOT artifacts)           │ fixed shapes
+//!            │ Rust substrate (AttentionOp)           │ any shape
+//!            │   └─ session table: SessionId →        │
+//!            │      AttnCache (KV + decode sampling)  │
+//!            └────────────────────────────────────────┘
 //! ```
 //!
 //! * [`router`] — policy: exact below `hyper_threshold`, hyper above
 //!   (mirrors the paper patching only long-context layers), delegated to
 //!   the documented [`crate::attention::op::AutoPolicy`] table; artifact
 //!   if the manifest has an exact-shape match, substrate otherwise.
+//!   Decode steps (and closes) of all live sessions share the one
+//!   `Route::decode_key()` batch key, so concurrent token streams
+//!   coalesce into decode batches instead of re-entering as full jobs.
 //! * [`batcher`] — pure-state-machine dynamic batcher (`max_batch`,
 //!   `max_wait`), wrapped in a dedicated thread.
 //! * [`engine`] — a dedicated OS thread owning the (thread-affine) PJRT
 //!   [`crate::runtime::Runtime`]; substrate jobs run through the unified
 //!   [`crate::attention::op::AttentionOp`] API on the in-tree [`crate::par`]
-//!   fork/join pool (no rayon anywhere in this tree).
-//! * [`metrics`] — latency histograms and throughput counters.
-//! * [`server`] — wiring: submit → route → batch → execute → respond.
+//!   fork/join pool (no rayon anywhere in this tree).  The engine owns
+//!   the session table: prefill creates a per-session
+//!   [`crate::attention::op::AttnCache`]; decode steps check it out, run
+//!   one `decode_step`, and check it back in (per-session serial,
+//!   cross-session parallel).  Shutdown flushes queued work with
+//!   explicit error responses — no silently dropped oneshots.
+//! * [`metrics`] — latency histograms (including per-token decode
+//!   latency) and throughput counters.
+//! * [`server`] — wiring: submit → route → batch → execute → respond,
+//!   plus the session API ([`Server::open_session`], [`Server::decode`],
+//!   [`Server::close_session`]).
+//!
+//! [`Server::open_session`]: server::Server::open_session
+//! [`Server::decode`]: server::Server::decode
+//! [`Server::close_session`]: server::Server::close_session
+//! [`Route::decode_key()`]: router::Route::decode_key
 
 pub mod batcher;
 pub mod engine;
@@ -31,6 +53,8 @@ pub mod request;
 pub mod router;
 pub mod server;
 
-pub use request::{AttnJob, AttnResponse, Backend, ModePreference};
+pub use request::{
+    AttnJob, AttnResponse, Backend, DecodeJob, DecodeResponse, ModePreference, SessionId,
+};
 pub use router::{Route, RouteKind, Router, RouterConfig};
-pub use server::{Server, ServerConfig, Ticket};
+pub use server::{DecodeTicket, Server, ServerConfig, Ticket};

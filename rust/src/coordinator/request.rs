@@ -1,5 +1,11 @@
 //! Job and response types flowing through the coordinator.
 
+/// Identifier of a live streaming (prefill/decode) session.  Allocated
+/// by [`crate::coordinator::Server::open_session`]; decode steps and
+/// the close message carry it so the engine can find the session's KV
+/// cache.
+pub type SessionId = u64;
+
 /// Client preference for the attention algorithm.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ModePreference {
@@ -47,6 +53,62 @@ impl AttnJob {
         }
         Ok(())
     }
+}
+
+/// One autoregressive decode step for a live session: the new token's
+/// `[heads, d]` q/k/v rows.
+#[derive(Clone, Debug)]
+pub struct DecodeJob {
+    pub session: SessionId,
+    pub heads: usize,
+    pub d: usize,
+    /// Expected absolute position of this token (= the session length
+    /// before this step).  `Some(p)` makes the engine reject the step
+    /// if the cache is not at `p` — the guard against pipelined decode
+    /// steps landing out of order across batches.  `None` skips the
+    /// check (safe when the client waits for each response before
+    /// submitting the next step).
+    pub pos: Option<usize>,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl DecodeJob {
+    /// Validate tensor lengths against the declared shape.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.heads == 0 || self.d == 0 {
+            return Err("zero-sized dimension".into());
+        }
+        let want = self.heads * self.d;
+        for (name, buf) in [("q", &self.q), ("k", &self.k), ("v", &self.v)] {
+            if buf.len() != want {
+                return Err(format!(
+                    "{name} has {} elements, want {want} (h={} d={})",
+                    buf.len(),
+                    self.heads,
+                    self.d
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Completed decode step.
+#[derive(Clone, Debug)]
+pub struct DecodeResponse {
+    pub session: SessionId,
+    /// absolute position of the decoded token in its session
+    pub pos: usize,
+    /// `[heads, d]` row-major output
+    pub out: Vec<f32>,
+    /// true if the sampled (near-constant-per-token) estimator ran
+    pub sampled: bool,
+    /// time spent queued (router + batcher), microseconds
+    pub queue_us: u64,
+    /// execution time, microseconds
+    pub exec_us: u64,
 }
 
 /// Which execution backend served a job.
@@ -110,5 +172,25 @@ mod tests {
         j.k.clear();
         j.v.clear();
         assert!(j.validate().is_err());
+    }
+
+    #[test]
+    fn decode_job_validation() {
+        let ok = DecodeJob {
+            session: 1,
+            heads: 2,
+            d: 8,
+            pos: None,
+            q: vec![0.0; 16],
+            k: vec![0.0; 16],
+            v: vec![0.0; 16],
+        };
+        assert!(ok.validate().is_ok());
+        let mut bad = ok.clone();
+        bad.k.pop();
+        assert!(bad.validate().is_err());
+        let mut zero = ok.clone();
+        zero.heads = 0;
+        assert!(zero.validate().is_err());
     }
 }

@@ -25,6 +25,17 @@ pub struct Route {
     pub causal: bool,
     /// artifact name, or None for the substrate path
     pub artifact: Option<String>,
+    /// streaming-session lane: decode steps (and session closes) of all
+    /// live sessions share this one batch key, so they coalesce into
+    /// decode batches instead of re-entering the queue as full jobs
+    pub decode: bool,
+}
+
+impl Route {
+    /// The shared batch key of the streaming decode lane.
+    pub fn decode_key() -> Route {
+        Route { kind: RouteKind::Exact, causal: false, artifact: None, decode: true }
+    }
 }
 
 /// Router configuration.
@@ -108,7 +119,7 @@ impl Router {
                 *k == kind && *c == job.causal && *h == job.heads && *n == job.n && *d == job.d
             })
             .map(|(_, _, _, _, _, name)| name.clone());
-        Route { kind, causal: job.causal, artifact }
+        Route { kind, causal: job.causal, artifact, decode: false }
     }
 
     /// Batching key: jobs sharing a key may be executed in one batch.

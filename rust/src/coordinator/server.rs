@@ -5,6 +5,17 @@
 //! size or deadline via `recv_timeout`; the engine thread hosts PJRT +
 //! the Rust substrate.  Backpressure: both channels are bounded, so a
 //! full pipeline pushes back on `submit()`.
+//!
+//! Streaming sessions: [`Server::open_session`] prefills a prompt into
+//! a per-session KV cache held by the engine, [`Server::decode`] feeds
+//! one token per call (decode steps from all live sessions coalesce
+//! under one batch key), and [`Server::close_session`] frees the cache.
+//! Note: decode steps for one session should be submitted sequentially
+//! (wait for each response before the next) — the usual token-streaming
+//! loop — as cross-batch ordering is not otherwise guaranteed.  Clients
+//! that pipeline anyway should set `DecodeJob::pos`: the engine then
+//! rejects any step landing at the wrong cache position instead of
+//! appending it out of order.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -13,9 +24,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::batcher::{BatchConfig, BatchQueue};
-use super::engine::{self, EngineMsg, WorkItem};
+use super::engine::{self, EngineMsg, Reply, Work, WorkItem};
 use super::metrics::Metrics;
-use super::request::{AttnJob, AttnResponse};
+use super::request::{AttnJob, AttnResponse, DecodeJob, DecodeResponse, SessionId};
 use super::router::{Route, Router, RouterConfig};
 use crate::runtime::Manifest;
 
@@ -52,8 +63,8 @@ impl ServerConfig {
 }
 
 struct Submission {
-    job: AttnJob,
-    respond: SyncSender<Result<AttnResponse, String>>,
+    work: Work,
+    respond: Reply,
     submitted: Instant,
 }
 
@@ -80,6 +91,29 @@ impl Ticket {
     }
 }
 
+/// A pending decode-step handle (await with [`DecodeTicket::wait`]).
+pub struct DecodeTicket {
+    rx: Receiver<Result<DecodeResponse, String>>,
+}
+
+impl DecodeTicket {
+    /// Block until the decode step completes.
+    pub fn wait(self) -> Result<DecodeResponse, String> {
+        self.rx
+            .recv()
+            .map_err(|_| "engine dropped decode step".to_string())?
+    }
+
+    /// Wait with a timeout.
+    pub fn wait_timeout(self, dur: Duration) -> Result<DecodeResponse, String> {
+        match self.rx.recv_timeout(dur) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => Err("timed out".into()),
+            Err(RecvTimeoutError::Disconnected) => Err("engine dropped decode step".into()),
+        }
+    }
+}
+
 /// Handle to a running coordinator.
 pub struct Server {
     submit_tx: Option<SyncSender<Submission>>,
@@ -87,6 +121,7 @@ pub struct Server {
     engine_handle: Option<std::thread::JoinHandle<()>>,
     batcher_handle: Option<std::thread::JoinHandle<()>>,
     next_id: AtomicU64,
+    next_session: AtomicU64,
 }
 
 impl Server {
@@ -144,9 +179,21 @@ impl Server {
                     };
                     match msg {
                         Some(sub) => {
-                            let route = router.route(&sub.job);
+                            let route = match &sub.work {
+                                Work::Full(job) => router.route(job),
+                                Work::Open { job, .. } => {
+                                    // sessions are shape-dynamic: always
+                                    // the substrate lane
+                                    let mut r = router.route(job);
+                                    r.artifact = None;
+                                    r
+                                }
+                                // decode steps of all live sessions share
+                                // one batch key so they coalesce together
+                                Work::Decode(_) | Work::Close { .. } => Route::decode_key(),
+                            };
                             let item = WorkItem {
-                                job: sub.job,
+                                work: sub.work,
                                 route: route.clone(),
                                 submitted: sub.submitted,
                                 respond: sub.respond,
@@ -180,7 +227,16 @@ impl Server {
             engine_handle: Some(engine_handle),
             batcher_handle: Some(batcher_handle),
             next_id: AtomicU64::new(1),
+            next_session: AtomicU64::new(1),
         }
+    }
+
+    fn send(&self, work: Work, respond: Reply) -> Result<(), String> {
+        self.submit_tx
+            .as_ref()
+            .expect("server running")
+            .send(Submission { work, respond, submitted: Instant::now() })
+            .map_err(|_| "coordinator shut down".to_string())
     }
 
     /// Submit a job; returns a [`Ticket`] to wait on.  Blocks only if the
@@ -192,17 +248,54 @@ impl Server {
         }
         self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = sync_channel(1);
-        self.submit_tx
-            .as_ref()
-            .expect("server running")
-            .send(Submission { job, respond: tx, submitted: Instant::now() })
-            .map_err(|_| "coordinator shut down".to_string())?;
+        self.send(Work::Full(job), Reply::Full(tx))?;
         Ok(Ticket { rx })
     }
 
     /// Submit and block until completion.
     pub fn submit_wait(&self, job: AttnJob) -> Result<AttnResponse, String> {
         self.submit(job)?.wait()
+    }
+
+    /// Open a streaming session: the job's q/k/v is the prompt, which
+    /// is prefilled into a fresh per-session KV cache.  Returns the
+    /// session id plus a [`Ticket`] for the prompt's attention output.
+    /// Subsequent [`Server::decode`] steps extend the session one token
+    /// at a time; [`Server::close_session`] frees the cache.  Wait for
+    /// the prefill ticket before submitting decode steps — the session
+    /// is registered when the prefill completes.
+    pub fn open_session(&self, mut job: AttnJob) -> Result<(SessionId, Ticket), String> {
+        job.validate()?;
+        if job.id == 0 {
+            job.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        }
+        let session = self.next_session.fetch_add(1, Ordering::Relaxed);
+        self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = sync_channel(1);
+        self.send(Work::Open { session, job }, Reply::Full(tx))?;
+        Ok((session, Ticket { rx }))
+    }
+
+    /// Submit one decode step for a live session.  Decode steps from
+    /// all sessions share one batch key, so concurrent streams coalesce
+    /// into decode batches instead of re-entering as full jobs.
+    pub fn decode(&self, job: DecodeJob) -> Result<DecodeTicket, String> {
+        job.validate()?;
+        self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = sync_channel(1);
+        self.send(Work::Decode(job), Reply::Decode(tx))?;
+        Ok(DecodeTicket { rx })
+    }
+
+    /// Submit a decode step and block until it completes.
+    pub fn decode_wait(&self, job: DecodeJob) -> Result<DecodeResponse, String> {
+        self.decode(job)?.wait()
+    }
+
+    /// Close a streaming session, dropping its KV cache.  Fire-and-
+    /// forget: queued decode steps ahead of the close still run.
+    pub fn close_session(&self, session: SessionId) -> Result<(), String> {
+        self.send(Work::Close { session }, Reply::None)
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -320,6 +413,111 @@ mod tests {
         }
         // 8 same-route jobs with max_batch 4: mean batch size must beat 1
         assert!(server.metrics().mean_batch_size() > 1.0);
+    }
+
+    #[test]
+    fn streaming_session_roundtrip() {
+        let server = Server::start(ServerConfig::substrate_only());
+        let (h, n, d) = (2usize, 24usize, 16usize);
+        let (sid, ticket) = server
+            .open_session(mk_job(n, ModePreference::Exact, true, 7))
+            .unwrap();
+        let pre = ticket.wait().unwrap();
+        assert_eq!(pre.out.len(), h * n * d);
+        assert!(pre.out.iter().all(|x| x.is_finite()));
+        let mut rng = Rng::new(99);
+        for t in 0..5usize {
+            let dj = DecodeJob {
+                session: sid,
+                heads: h,
+                d,
+                pos: None,
+                q: rng.normal_vec(h * d),
+                k: rng.normal_vec(h * d),
+                v: rng.normal_vec(h * d),
+            };
+            let resp = server.decode_wait(dj).unwrap();
+            assert_eq!(resp.pos, n + t);
+            assert_eq!(resp.out.len(), h * d);
+            assert!(resp.out.iter().all(|x| x.is_finite()));
+        }
+        let m = server.metrics();
+        assert_eq!(m.sessions_opened.load(Ordering::Relaxed), 1);
+        assert_eq!(m.decode_steps.load(Ordering::Relaxed), 5);
+        // streaming work reconciles the jobs counters too
+        assert_eq!(m.jobs_completed.load(Ordering::Relaxed), 6); // 1 open + 5 decode
+        // the ordering guard: a step claiming a stale position errors
+        let stale = DecodeJob {
+            session: sid,
+            heads: h,
+            d,
+            pos: Some(0), // session is at n + 5
+            q: rng.normal_vec(h * d),
+            k: rng.normal_vec(h * d),
+            v: rng.normal_vec(h * d),
+        };
+        assert!(server.decode_wait(stale).is_err(), "out-of-order step must error");
+        server.close_session(sid).unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn decode_validation_and_unknown_session() {
+        let server = Server::start(ServerConfig::substrate_only());
+        // unknown session: explicit error, not a hang
+        let dj = DecodeJob {
+            session: 777,
+            heads: 1,
+            d: 8,
+            pos: None,
+            q: vec![0.0; 8],
+            k: vec![0.0; 8],
+            v: vec![0.0; 8],
+        };
+        assert!(server.decode_wait(dj).is_err());
+        // invalid shape rejected before the queue
+        let bad = DecodeJob {
+            session: 1,
+            heads: 1,
+            d: 8,
+            pos: None,
+            q: vec![0.0; 7],
+            k: vec![0.0; 8],
+            v: vec![0.0; 8],
+        };
+        assert!(server.decode(bad).is_err());
+        server.shutdown();
+    }
+
+    /// Shutdown must resolve every pending ticket — queued streaming
+    /// work is flushed with an explicit error instead of leaking the
+    /// oneshot senders.
+    #[test]
+    fn shutdown_resolves_all_pending_tickets() {
+        let server = Server::start(ServerConfig::substrate_only());
+        let (sid, t0) = server
+            .open_session(mk_job(16, ModePreference::Exact, true, 1))
+            .unwrap();
+        let mut tickets = Vec::new();
+        let mut rng = Rng::new(5);
+        for _ in 0..8 {
+            let dj = DecodeJob {
+                session: sid,
+                heads: 2,
+                d: 16,
+                pos: None,
+                q: rng.normal_vec(32),
+                k: rng.normal_vec(32),
+                v: rng.normal_vec(32),
+            };
+            tickets.push(server.decode(dj).unwrap());
+        }
+        drop(server); // graceful shutdown via Drop
+        let _ = t0.wait(); // must resolve either way
+        for t in tickets {
+            // resolved: Ok (ran before the flush) or the explicit error
+            let _ = t.wait_timeout(Duration::from_secs(10));
+        }
     }
 
     #[test]

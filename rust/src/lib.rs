@@ -22,10 +22,12 @@
 //! ## The attention API
 //!
 //! All of it is served through **one entry point**,
-//! [`attention::op::AttentionOp`]:
+//! [`attention::op::AttentionOp`], with two execution shapes: one-shot
+//! forwards, and incremental **prefill + decode** over a per-session
+//! KV cache:
 //!
 //! ```no_run
-//! use hyperattention::attention::op::{AttnConfig, Backend, SeedPolicy};
+//! use hyperattention::attention::op::{AttnCache, AttnConfig, Backend, SeedPolicy};
 //! use hyperattention::linalg::QkvView;
 //!
 //! # let (heads, n, d) = (4usize, 2048usize, 64usize);
@@ -42,23 +44,39 @@
 //! .build()
 //! .unwrap();
 //!
-//! // zero-copy multi-head view over [heads, n, d] buffers
+//! // one-shot: zero-copy multi-head view over [heads, n, d] buffers
 //! let x = QkvView::new(heads, n, d, &q, &k, &v).unwrap();
 //! let fwd = attn.forward(x);           // batched over heads, in parallel
 //! let dout = vec![0.0f32; heads * n * d];
 //! let grads = attn.backward(x, &dout, &fwd).unwrap(); // replay, no recompute
 //! let out = attn.infer(x);             // forward-only (serving): no capture
+//!
+//! // incremental serving: prefill the prompt once, then decode token
+//! // by token against the growing KV cache — per-token cost is
+//! // Θ(len·d) exact, or Θ((b+m)·d) sampled past the decode threshold
+//! let mut cache = AttnCache::new(heads, d);
+//! let prompt_out = attn.prefill(&mut cache, x).unwrap();
+//! let (q1, k1, v1) =
+//!     (vec![0.0f32; heads * d], vec![0.0f32; heads * d], vec![0.0f32; heads * d]);
+//! let x1 = QkvView::new(heads, 1, d, &q1, &k1, &v1).unwrap();
+//! let tok = attn.decode_step(&mut cache, x1).unwrap(); // [heads, d] at tok.pos
 //! ```
 //!
 //! `Backend::Auto` applies the documented routing table in
 //! [`attention::op::AutoPolicy`] (length threshold, causal dispatch,
-//! prime-length degradation to exact streaming).  The forward session
+//! prime-length degradation to exact streaming, and the decode rows:
+//! exact one-row decode below `decode_hyper_threshold`, sampled decode
+//! with an appendable LSH/residual state — resampled only past
+//! `decode_resample_interval` — above it).  The forward session
 //! ([`attention::op::AttnOutput`]) carries every head's sampling plan
 //! and saved softmax statistics, so `backward` replays the identical
-//! estimator without recomputation.  The historical per-algorithm free
-//! functions (`exact::flash_attention`, `hyper::hyper_attention`,
-//! `causal::causal_hyper_attention`, and their `_backward`/`_with_parts`
-//! variants) remain as deprecated shims for one release.
+//! estimator without recomputation.  The serving coordinator exposes
+//! the same split as streaming sessions
+//! ([`coordinator::Server::open_session`] /
+//! [`coordinator::Server::decode`]), and [`model::generate`] drives it
+//! autoregressively with per-layer caches.  (The historical
+//! per-algorithm free functions were removed; the view-based cores
+//! behind `AttentionOp` are the only implementation surface.)
 //!
 //! ## Kernel dispatch
 //!

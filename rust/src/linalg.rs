@@ -11,6 +11,11 @@
 //! attention API ([`crate::attention::op`]): it borrows `[heads, n, d]`
 //! buffers and hands out per-head [`MatRef`] windows, so no per-head
 //! slicing copy ever happens between the serving layer and the kernels.
+//!
+//! [`KvCache`] is the storage half of incremental (prefill + decode)
+//! attention: a growable head-major key/value cache whose filled prefix
+//! is served as zero-copy [`MatRef`] windows, plus a pre-scaled packed
+//! K mirror shared by prefill chunks, decode steps, and query tiles.
 
 use crate::kernel;
 use crate::par;
@@ -266,6 +271,197 @@ impl<'a> QkvView<'a> {
     }
 }
 
+/// Growable per-head key/value cache for incremental (prefill + decode)
+/// attention: the storage half of the serving KV cache.
+///
+/// Layout is head-major `[heads, cap, d]` so every head's filled prefix
+/// is one contiguous window — [`KvCache::head_k`] / [`KvCache::head_v`]
+/// hand out zero-copy [`MatRef`] views straight into the buffers, the
+/// same shape contract the attention cores consume.  Appends grow the
+/// capacity geometrically (amortized O(1) per appended row).
+///
+/// The cache also maintains an optional **pre-scaled K mirror**
+/// ([`KvCache::sync_scaled`] / [`KvCache::head_k_scaled`]): the softmax
+/// scale is folded into the cache-side panel once per appended row, so
+/// prefill chunks, decode steps, and every query tile stream one shared
+/// packed panel instead of re-scaling a Q copy per call (the ROADMAP
+/// "packed-panel B reuse" follow-up).  Rows are contiguous at stride
+/// `d`, which for the typical d (a multiple of the SIMD width) is
+/// exactly the layout the `gemm_nt` microkernel streams with no
+/// remainder lanes.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    heads: usize,
+    d: usize,
+    /// filled rows per head
+    len: usize,
+    /// allocated rows per head
+    cap: usize,
+    /// `[heads, cap, d]` keys
+    k: Vec<f32>,
+    /// `[heads, cap, d]` values
+    v: Vec<f32>,
+    /// pre-scaled K mirror (same layout), valid for the first
+    /// `scaled_len` rows of each head under scale `scale`
+    ks: Vec<f32>,
+    scaled_len: usize,
+    scale: f32,
+}
+
+impl KvCache {
+    pub fn new(heads: usize, d: usize) -> Self {
+        Self::with_capacity(heads, d, 0)
+    }
+
+    pub fn with_capacity(heads: usize, d: usize, cap: usize) -> Self {
+        assert!(heads > 0 && d > 0, "zero-sized cache dimension");
+        KvCache {
+            heads,
+            d,
+            len: 0,
+            cap,
+            k: vec![0.0; heads * cap * d],
+            v: vec![0.0; heads * cap * d],
+            ks: Vec::new(),
+            scaled_len: 0,
+            scale: 1.0,
+        }
+    }
+
+    #[inline]
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Filled rows per head (the sequence length so far).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Ensure room for `additional` more rows per head.  Reallocates
+    /// head-major (each head's filled prefix is copied to its new
+    /// window); the scaled mirror follows the same layout.
+    pub fn reserve(&mut self, additional: usize) {
+        let want = self.len + additional;
+        if want <= self.cap {
+            return;
+        }
+        let new_cap = want.max(self.cap * 2).max(64);
+        let (heads, d, old_cap) = (self.heads, self.d, self.cap);
+        let grow = |buf: &mut Vec<f32>, rows: usize| {
+            let mut nb = vec![0.0f32; heads * new_cap * d];
+            for h in 0..heads {
+                let src = h * old_cap * d;
+                let dst = h * new_cap * d;
+                nb[dst..dst + rows * d].copy_from_slice(&buf[src..src + rows * d]);
+            }
+            *buf = nb;
+        };
+        grow(&mut self.k, self.len);
+        grow(&mut self.v, self.len);
+        if !self.ks.is_empty() {
+            grow(&mut self.ks, self.scaled_len);
+        }
+        self.cap = new_cap;
+    }
+
+    /// Append the K/V rows of `x` (its Q side is ignored): each head
+    /// gains `x.n` rows.  Shapes must match the cache.
+    pub fn append(&mut self, x: &QkvView<'_>) -> Result<(), String> {
+        if x.heads != self.heads || x.d != self.d {
+            return Err(format!(
+                "cache is ({} heads, d={}), view is ({} heads, d={})",
+                self.heads, self.d, x.heads, x.d
+            ));
+        }
+        self.reserve(x.n);
+        let d = self.d;
+        for h in 0..self.heads {
+            let src = h * x.head_stride;
+            let dst = h * self.cap * d + self.len * d;
+            self.k[dst..dst + x.n * d].copy_from_slice(&x.k[src..src + x.n * d]);
+            self.v[dst..dst + x.n * d].copy_from_slice(&x.v[src..src + x.n * d]);
+        }
+        self.len += x.n;
+        Ok(())
+    }
+
+    /// Bring the pre-scaled K mirror up to date for `scale`: scales only
+    /// the rows appended since the last sync (full rebuild if the scale
+    /// changed).  Callers then read [`KvCache::head_k_scaled`].
+    pub fn sync_scaled(&mut self, scale: f32) {
+        if self.ks.len() != self.k.len() || self.scale != scale {
+            self.ks = vec![0.0; self.k.len()];
+            self.scaled_len = 0;
+            self.scale = scale;
+        }
+        if self.scaled_len == self.len {
+            return;
+        }
+        let d = self.d;
+        for h in 0..self.heads {
+            let lo = h * self.cap * d + self.scaled_len * d;
+            let hi = h * self.cap * d + self.len * d;
+            self.ks[lo..hi].copy_from_slice(&self.k[lo..hi]);
+            kernel::scale(&mut self.ks[lo..hi], scale);
+        }
+        self.scaled_len = self.len;
+    }
+
+    /// Zero-copy view of one head's filled keys.
+    #[inline]
+    pub fn head_k(&self, h: usize) -> MatRef<'_> {
+        assert!(h < self.heads, "head {h} out of {}", self.heads);
+        let lo = h * self.cap * self.d;
+        MatRef { rows: self.len, cols: self.d, data: &self.k[lo..lo + self.len * self.d] }
+    }
+
+    /// Zero-copy view of one head's filled values.
+    #[inline]
+    pub fn head_v(&self, h: usize) -> MatRef<'_> {
+        assert!(h < self.heads, "head {h} out of {}", self.heads);
+        let lo = h * self.cap * self.d;
+        MatRef { rows: self.len, cols: self.d, data: &self.v[lo..lo + self.len * self.d] }
+    }
+
+    /// Zero-copy view of one head's pre-scaled keys.  Panics if
+    /// [`KvCache::sync_scaled`] has not covered the filled prefix.
+    #[inline]
+    pub fn head_k_scaled(&self, h: usize) -> MatRef<'_> {
+        assert!(h < self.heads, "head {h} out of {}", self.heads);
+        assert!(
+            self.scaled_len == self.len,
+            "scaled mirror stale ({} of {} rows); call sync_scaled first",
+            self.scaled_len,
+            self.len
+        );
+        let lo = h * self.cap * self.d;
+        MatRef { rows: self.len, cols: self.d, data: &self.ks[lo..lo + self.len * self.d] }
+    }
+
+    /// Drop the contents (capacity retained).
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.scaled_len = 0;
+    }
+}
+
 /// Dot product (dispatches to the active SIMD backend).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
@@ -516,6 +712,96 @@ mod tests {
         assert!(QkvView::strided(2, 2, 2, 3, &buf, &buf, &buf).is_err()); // stride < n*d
         assert!(QkvView::new(2, 2, 2, &buf[..8], &buf[..8], &buf[..8]).is_err());
         assert!(QkvView::strided(2, 2, 2, 5, &buf[..9], &buf[..9], &buf[..9]).is_ok());
+    }
+
+    #[test]
+    fn kv_cache_append_and_views() {
+        let (h, d) = (2usize, 3usize);
+        let mut rng = Rng::new(20);
+        let mut cache = KvCache::new(h, d);
+        assert!(cache.is_empty());
+        // append two chunks (4 rows, then 3) and check per-head windows
+        let mut all_k: Vec<Vec<f32>> = vec![Vec::new(); h];
+        let mut all_v: Vec<Vec<f32>> = vec![Vec::new(); h];
+        for n in [4usize, 3] {
+            let q = rng.normal_vec(h * n * d);
+            let k = rng.normal_vec(h * n * d);
+            let v = rng.normal_vec(h * n * d);
+            let view = QkvView::new(h, n, d, &q, &k, &v).unwrap();
+            cache.append(&view).unwrap();
+            for head in 0..h {
+                all_k[head].extend_from_slice(&k[head * n * d..(head + 1) * n * d]);
+                all_v[head].extend_from_slice(&v[head * n * d..(head + 1) * n * d]);
+            }
+        }
+        assert_eq!(cache.len(), 7);
+        for head in 0..h {
+            assert_eq!(cache.head_k(head).data, &all_k[head][..]);
+            assert_eq!(cache.head_v(head).data, &all_v[head][..]);
+        }
+        // shape-mismatched appends are rejected
+        let buf = vec![0.0f32; 4 * d];
+        let bad = QkvView::new(1, 4, d, &buf, &buf, &buf).unwrap();
+        assert!(cache.append(&bad).is_err());
+    }
+
+    #[test]
+    fn kv_cache_growth_preserves_contents() {
+        let (h, d) = (3usize, 4usize);
+        let mut rng = Rng::new(21);
+        let mut cache = KvCache::with_capacity(h, d, 2);
+        let mut want_k: Vec<Vec<f32>> = vec![Vec::new(); h];
+        // many single-row appends across several reserve boundaries
+        for _ in 0..200 {
+            let q = rng.normal_vec(h * d);
+            let k = rng.normal_vec(h * d);
+            let v = rng.normal_vec(h * d);
+            let view = QkvView::new(h, 1, d, &q, &k, &v).unwrap();
+            cache.append(&view).unwrap();
+            for head in 0..h {
+                want_k[head].extend_from_slice(&k[head * d..(head + 1) * d]);
+            }
+        }
+        assert_eq!(cache.len(), 200);
+        assert!(cache.capacity() >= 200);
+        for head in 0..h {
+            assert_eq!(cache.head_k(head).data, &want_k[head][..]);
+        }
+        cache.clear();
+        assert_eq!(cache.len(), 0);
+        assert!(cache.capacity() >= 200); // capacity retained
+    }
+
+    #[test]
+    fn kv_cache_scaled_mirror_incremental() {
+        let (h, d) = (2usize, 4usize);
+        let mut rng = Rng::new(22);
+        let mut cache = KvCache::new(h, d);
+        let sc = 0.25f32;
+        for n in [5usize, 1, 1, 64] {
+            let q = rng.normal_vec(h * n * d);
+            let k = rng.normal_vec(h * n * d);
+            let v = rng.normal_vec(h * n * d);
+            let view = QkvView::new(h, n, d, &q, &k, &v).unwrap();
+            cache.append(&view).unwrap();
+            cache.sync_scaled(sc);
+            for head in 0..h {
+                let raw = cache.head_k(head);
+                let scaled = cache.head_k_scaled(head);
+                for (a, b) in scaled.data.iter().zip(raw.data) {
+                    assert!((a - b * sc).abs() < 1e-6);
+                }
+            }
+        }
+        // scale change forces a full rebuild
+        cache.sync_scaled(2.0);
+        for head in 0..h {
+            let raw = cache.head_k(head);
+            let scaled = cache.head_k_scaled(head);
+            for (a, b) in scaled.data.iter().zip(raw.data) {
+                assert!((a - b * 2.0).abs() < 1e-6);
+            }
+        }
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! section 4) plus a serving entry point:
 //!
 //! * `serve`   — start the coordinator, push a synthetic batched client
-//!   load, report latency/throughput percentiles.
+//!   load, report latency/throughput percentiles; `--stream S --tokens T`
+//!   adds S streaming prefill/decode sessions of T tokens each.
 //! * `fig4`    — single-layer speedup sweep (exact vs hyper).
 //! * `fig3`    — train the tiny LM, patch final layers, report ppl.
 //! * `table1`  — LongBench-like task scores vs patched layers.
@@ -19,7 +20,7 @@ use std::collections::HashMap;
 use hyperattention::attention::measure;
 use hyperattention::attention::op::{AttnConfig, Backend, SeedPolicy};
 use hyperattention::bench;
-use hyperattention::coordinator::{AttnJob, ModePreference, Server, ServerConfig};
+use hyperattention::coordinator::{AttnJob, DecodeJob, ModePreference, Server, ServerConfig};
 use hyperattention::linalg::QkvView;
 use hyperattention::model::ModelConfig;
 use hyperattention::rng::Rng;
@@ -82,7 +83,9 @@ USAGE: hyperattn <COMMAND> [OPTIONS]
 
 COMMANDS:
   serve    --artifacts DIR --jobs N --n LEN --heads H --d D
+           [--stream S --tokens T]   streaming prefill/decode sessions
   bench    [--json FILE] --sizes 4096,16384,65536 --d D --block B --samples M --reps R
+           [--decode-sizes 4096,16384 --decode-steps T]   decode tokens/sec rows
   fig4     --sizes 4096,8192,... --d D --block B --samples M [--backward] --reps R
   fig3     --steps S --seq-len N
   table1   --steps S --seq-len N --reps R
@@ -106,6 +109,8 @@ fn main() {
                 args.get("block", 256usize),
                 args.get("samples", 256usize),
                 args.get("reps", 1usize),
+                &args.list("decode-sizes", &[4096, 16384]),
+                args.get("decode-steps", 64usize),
             );
             let text = doc.to_string();
             match args.get_str("json") {
@@ -120,6 +125,18 @@ fn main() {
                 let sp = gate.get("speedup").and_then(|v| v.as_f64()).unwrap_or(0.0);
                 let isa = gate.get("isa").and_then(|v| v.as_str()).unwrap_or("?");
                 println!("simd gate (n=8192, 1 thread): {isa} {sp:.2}x over scalar");
+            }
+            if let Some(decode) = doc.get("decode") {
+                if let Some(rows) = decode.as_array() {
+                    for row in rows {
+                        let n = row.get("n").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                        let ex = row.get("exact_tok_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                        let hy = row.get("hyper_tok_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                        println!(
+                            "decode (n={n:.0}): exact {ex:.0} tok/s, hyper {hy:.0} tok/s"
+                        );
+                    }
+                }
             }
         }
         "fig4" => {
@@ -207,6 +224,63 @@ fn cmd_serve(args: &Args) {
         None => ServerConfig::substrate_only(),
     };
     let server = std::sync::Arc::new(Server::start(cfg));
+
+    // streaming mode: S concurrent prefill/decode sessions of T tokens
+    let stream = args.get("stream", 0usize);
+    if stream > 0 {
+        let tokens = args.get("tokens", 32usize);
+        println!(
+            "coordinator up; streaming {stream} sessions (prompt n={n}, {tokens} decode steps)"
+        );
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for s in 0..stream {
+            let srv = server.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(1000 + s as u64);
+                let len = heads * n * d;
+                let job = AttnJob {
+                    id: 0,
+                    heads,
+                    n,
+                    d,
+                    q: rng.normal_vec(len),
+                    k: rng.normal_vec(len),
+                    v: rng.normal_vec(len),
+                    causal: true,
+                    mode: ModePreference::Auto,
+                    seed: s as i32,
+                };
+                let (sid, ticket) = srv.open_session(job).expect("open session");
+                ticket.wait().expect("prefill");
+                for _ in 0..tokens {
+                    let dj = DecodeJob {
+                        session: sid,
+                        heads,
+                        d,
+                        pos: None,
+                        q: rng.normal_vec(heads * d),
+                        k: rng.normal_vec(heads * d),
+                        v: rng.normal_vec(heads * d),
+                    };
+                    srv.decode_wait(dj).expect("decode step");
+                }
+                srv.close_session(sid).expect("close session");
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{} decode tokens in {dt:.2}s ({:.1} tok/s aggregate)\n{}",
+            stream * tokens,
+            (stream * tokens) as f64 / dt,
+            server.metrics().report()
+        );
+        return;
+    }
+
     println!("coordinator up; submitting {jobs} jobs (h={heads}, n={n}, d={d})");
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();

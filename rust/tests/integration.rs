@@ -12,7 +12,7 @@ use hyperattention::attention::measure;
 use hyperattention::attention::op::{self, AttnConfig, SeedPolicy};
 use hyperattention::coordinator::batcher::{BatchConfig, BatchQueue};
 use hyperattention::coordinator::{
-    AttnJob, Backend, ModePreference, Router, RouterConfig, Server, ServerConfig,
+    AttnJob, Backend, DecodeJob, ModePreference, Router, RouterConfig, Server, ServerConfig,
 };
 use hyperattention::linalg::{Mat, QkvView};
 use hyperattention::rng::Rng;
@@ -319,6 +319,136 @@ fn coordinator_matches_direct_op_call() {
     let view = QkvView::new(heads, n, d, &q, &k, &v).unwrap();
     let direct = attn.infer(view).into_out();
     assert_eq!(resp.out, direct, "engine and direct op outputs diverged");
+}
+
+/// Streaming session end-to-end: prefill + decode through the full
+/// coordinator stack equals the exact causal oracle, token by token.
+#[test]
+fn streaming_session_decode_matches_oracle() {
+    let server = Server::start(ServerConfig::substrate_only());
+    let (h, n, d, steps) = (2usize, 32usize, 16usize, 6usize);
+    let total = n + steps;
+    let mut rng = Rng::new(0xABCD);
+    let q = rng.normal_vec(h * total * d);
+    let k = rng.normal_vec(h * total * d);
+    let v = rng.normal_vec(h * total * d);
+    // gather rows [lo, hi) of each head out of the [h, total, d] buffers
+    let slice = |buf: &[f32], lo: usize, hi: usize| -> Vec<f32> {
+        let mut out = Vec::new();
+        for head in 0..h {
+            out.extend_from_slice(&buf[head * total * d + lo * d..head * total * d + hi * d]);
+        }
+        out
+    };
+    let head_mat = |buf: &[f32], head: usize, rows: usize| {
+        Mat::from_vec(rows, d, buf[head * total * d..head * total * d + rows * d].to_vec())
+    };
+
+    let job = AttnJob {
+        id: 0,
+        heads: h,
+        n,
+        d,
+        q: slice(&q, 0, n),
+        k: slice(&k, 0, n),
+        v: slice(&v, 0, n),
+        causal: true,
+        mode: ModePreference::Exact,
+        seed: 3,
+    };
+    let (sid, ticket) = server.open_session(job).unwrap();
+    let pre = ticket.wait().unwrap();
+    assert_eq!(pre.backend, Backend::Substrate);
+    for head in 0..h {
+        let want = exact::naive_attention(
+            &head_mat(&q, head, n),
+            &head_mat(&k, head, n),
+            &head_mat(&v, head, n),
+            true,
+            None,
+        );
+        let got = Mat::from_vec(n, d, pre.out[head * n * d..(head + 1) * n * d].to_vec());
+        assert!(want.max_abs_diff(&got) < 1e-4, "prefill head {head}");
+    }
+    for t in 0..steps {
+        let dj = DecodeJob {
+            session: sid,
+            heads: h,
+            d,
+            pos: Some(n + t),
+            q: slice(&q, n + t, n + t + 1),
+            k: slice(&k, n + t, n + t + 1),
+            v: slice(&v, n + t, n + t + 1),
+        };
+        let resp = server.decode_wait(dj).unwrap();
+        assert_eq!(resp.pos, n + t);
+        assert!(!resp.sampled, "short cache stays on the exact decode path");
+        let len = n + t + 1;
+        for head in 0..h {
+            let want = exact::naive_attention(
+                &head_mat(&q, head, len),
+                &head_mat(&k, head, len),
+                &head_mat(&v, head, len),
+                true,
+                None,
+            );
+            for j in 0..d {
+                let got = resp.out[head * d + j];
+                assert!(
+                    (got - want.get(len - 1, j)).abs() < 1e-4,
+                    "decode t={t} head={head} j={j}: {got} vs {}",
+                    want.get(len - 1, j)
+                );
+            }
+        }
+    }
+    server.close_session(sid).unwrap();
+    server.shutdown();
+}
+
+/// Many concurrent token streams: all decode steps complete, nothing
+/// fails, and the session counters add up.
+#[test]
+fn concurrent_streaming_sessions_complete() {
+    let server = Arc::new(Server::start(ServerConfig::substrate_only()));
+    let mut handles = Vec::new();
+    for s in 0..6i32 {
+        let srv = server.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(700 + s as u64);
+            let (h, n, d) = (2usize, 48usize, 8usize);
+            let job = mk_job(h, n, d, true, ModePreference::Auto, s);
+            let (sid, ticket) = srv.open_session(job).unwrap();
+            ticket.wait().unwrap();
+            for _ in 0..8 {
+                let dj = DecodeJob {
+                    session: sid,
+                    heads: h,
+                    d,
+                    pos: None,
+                    q: rng.normal_vec(h * d),
+                    k: rng.normal_vec(h * d),
+                    v: rng.normal_vec(h * d),
+                };
+                let r = srv.decode_wait(dj).unwrap();
+                assert!(r.out.iter().all(|x| x.is_finite()));
+            }
+            srv.close_session(sid).unwrap();
+        }));
+    }
+    for hnd in handles {
+        hnd.join().unwrap();
+    }
+    let m = server.metrics();
+    assert_eq!(
+        m.sessions_opened.load(std::sync::atomic::Ordering::Relaxed),
+        6
+    );
+    assert_eq!(
+        m.decode_steps.load(std::sync::atomic::Ordering::Relaxed),
+        48
+    );
+    assert_eq!(m.jobs_failed.load(std::sync::atomic::Ordering::Relaxed), 0);
 }
 
 /// Substrate determinism across the full coordinator stack.
