@@ -16,7 +16,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use hyperattention::coordinator::{
-    AttnJob, Backend, DecodeJob, ModePreference, Server, ServerConfig,
+    AttnJob, Backend, CachePolicy, DecodeJob, ModePreference, Server, ServerConfig,
 };
 use hyperattention::rng::Rng;
 
@@ -150,8 +150,83 @@ fn main() {
         s.join().unwrap();
     }
     println!(
-        "\nstreaming: 4 sessions x 16 decode steps in {:.2}s\n{}",
+        "\nstreaming: 4 sessions x 16 decode steps in {:.2}s\n{}\n{}",
         t1.elapsed().as_secs_f64(),
-        server.metrics().report()
+        server.metrics().report(),
+        server.cache_gauges().report()
     );
+    drop(server);
+
+    // ---- budgeted multi-session serving: the paged KV memory path ----
+    // A pool of 80 pages at (h=2, d=64) holds ~2.5 full 2048-token
+    // sessions (32 pages each).  Opening 6 sessions WITHOUT closing any
+    // forces the admission path: the engine LRU-evicts idle sessions to
+    // admit new ones instead of growing without bound.
+    let (h, n, d) = (2usize, 2048usize, 64usize);
+    let open = |srv: &Server, seed: u32| {
+        let mut rng = Rng::new(7000 + seed as u64);
+        let len = h * n * d;
+        let job = AttnJob {
+            id: 0,
+            heads: h,
+            n,
+            d,
+            q: rng.normal_vec(len),
+            k: rng.normal_vec(len),
+            v: rng.normal_vec(len),
+            causal: true,
+            mode: ModePreference::Auto,
+            seed: seed as i32,
+        };
+        let (sid, ticket) = srv.open_session(job).expect("submit open");
+        ticket.wait().map(|_| sid)
+    };
+
+    let mut cfg = ServerConfig::substrate_only();
+    cfg.router.hyper_threshold = 1024;
+    cfg.cache.page_elems = 3 * h * d * 64; // 64 rows per page at this shape
+    cfg.cache.budget_pages = Some(80);
+    let server = Server::start(cfg.clone());
+    println!("\n=== budgeted sessions: 80-page pool, full-retention caches ===");
+    for s in 0..6u32 {
+        match open(&server, s) {
+            Ok(sid) => println!("  open session {s}: admitted as id {sid}"),
+            Err(e) => println!("  open session {s}: rejected ({e})"),
+        }
+    }
+    println!("{}", server.cache_gauges().report());
+    let evicted = server
+        .metrics()
+        .sessions_evicted
+        .load(std::sync::atomic::Ordering::Relaxed);
+    println!("  -> {evicted} idle sessions were LRU-evicted to admit the rest");
+    drop(server);
+
+    // Same budget, but sliding-window caches (recent 512 rows + 64 sink
+    // rows pinned): every session now fits in ~10 resident pages, so
+    // all six coexist inside the same 80-page pool with no evictions.
+    cfg.cache.policy = CachePolicy::SlidingWindow { window: 512, sink: 64 };
+    let server = Server::start(cfg);
+    println!("\n=== same 80-page pool, sliding-window caches (512 + 64 sink) ===");
+    for s in 0..6u32 {
+        match open(&server, s) {
+            Ok(sid) => println!("  open session {s}: admitted as id {sid}"),
+            Err(e) => println!("  open session {s}: rejected ({e})"),
+        }
+    }
+    println!("{}", server.cache_gauges().report());
+
+    // Hard backpressure: a pool smaller than a single session's prompt
+    // cannot admit anyone — the open fails with an explicit error
+    // instead of hanging or OOMing.
+    let mut tiny = ServerConfig::substrate_only();
+    tiny.cache.page_elems = 3 * h * d * 64;
+    tiny.cache.budget_pages = Some(8);
+    let server = Server::start(tiny);
+    println!("\n=== 8-page pool: explicit backpressure ===");
+    match open(&server, 0) {
+        Ok(sid) => println!("  unexpected admit: {sid}"),
+        Err(e) => println!("  open rejected as expected: {e}"),
+    }
+    println!("{}", server.cache_gauges().report());
 }

@@ -99,21 +99,25 @@ pub(crate) fn flash_parts_view(
 
 /// The shared streaming exact core for one-shot, prefill, and decode.
 ///
-/// `q` holds raw queries at absolute positions `q_offset..q_offset + n`
-/// against the cache-side panels `ks` (keys with the softmax scale
-/// **already folded in** — one shared packed panel reused across every
-/// query tile, prefill chunk, and decode step instead of a per-call
-/// scaled Q copy) and `v` (`nk` rows each).  Causal masking uses the
-/// absolute position: query `i` attends keys `0..q_offset + i + 1`.
-/// Two-level blocking, online softmax, causal tile skipping; parallel
-/// over query tiles; each tile is one register-blocked
-/// [`crate::kernel::gemm_nt`] panel + fused max/exp/PV kernels.
+/// `q` holds raw queries at positions `q_offset..q_offset + n` relative
+/// to the key panel against the cache-side panels `ks` (keys with the
+/// softmax scale **already folded in** — one shared packed panel reused
+/// across every query tile, prefill chunk, and decode step instead of a
+/// per-call scaled Q copy) and `v` (`nk` rows each).  Causal masking
+/// uses the relative position: query `i` attends keys
+/// `0..q_offset + i + 1`.  `q_offset` is signed because the paged
+/// KV cache streams one key *page* at a time: for a page starting past
+/// the query base the offset goes negative and the leading query rows
+/// are fully masked within that page.  Two-level blocking, online
+/// softmax, causal tile skipping; parallel over query tiles; each tile
+/// is one register-blocked [`crate::kernel::gemm_nt`] panel + fused
+/// max/exp/PV kernels.
 pub(crate) fn flash_prefill_view(
     q: MatRef<'_>,
     ks: MatRef<'_>,
     v: MatRef<'_>,
     causal: bool,
-    q_offset: usize,
+    q_offset: isize,
     block: usize,
 ) -> Parts {
     let (n, d) = (q.rows, q.cols);
@@ -151,7 +155,7 @@ pub(crate) fn flash_prefill_view(
         // per-tile logits scratch (rows × key-tile), reused across tiles
         let mut logits = vec![0.0f32; rows * block];
         for j0 in (0..nk).step_by(block) {
-            if causal && j0 > q_offset + i1 - 1 {
+            if causal && (j0 as isize) > q_offset + i1 as isize - 1 {
                 break; // tile fully above the diagonal: skip
             }
             let j1 = (j0 + block).min(nk);
@@ -169,8 +173,8 @@ pub(crate) fn flash_prefill_view(
                 jt,
             );
             for ti in 0..rows {
-                let i_abs = q_offset + i0 + ti;
-                let jlim = if causal { j1.min(i_abs + 1) } else { j1 };
+                let i_abs = q_offset + (i0 + ti) as isize;
+                let jlim = if causal { j1.min((i_abs + 1).max(0) as usize) } else { j1 };
                 if jlim <= j0 {
                     continue;
                 }
@@ -380,7 +384,7 @@ mod tests {
                     ks.view(),
                     v.view(),
                     causal,
-                    split,
+                    split as isize,
                     16,
                 );
                 let got = top.concat(bot).finalize();
@@ -389,6 +393,40 @@ mod tests {
                     "causal={causal} split={split}"
                 );
             }
+        }
+    }
+
+    /// Streaming the keys one fixed-size "page" at a time — the paged
+    /// KV-cache shape, including the negative q_offset of a page that
+    /// starts past the query base — must merge back to the one-shot
+    /// causal output through the Parts algebra.
+    #[test]
+    fn prefill_paged_key_segments_merge() {
+        let (n, d) = (40usize, 8usize);
+        let (q, k, v) = rand_qkv(11, n, d);
+        let sc = softmax_scale(d, None);
+        let mut ks = k.clone();
+        ks.scale(sc);
+        for causal in [false, true] {
+            let full =
+                flash_prefill_view(q.view(), ks.view(), v.view(), causal, 0, 16).finalize();
+            let mut acc = Parts::empty(n, d);
+            for p0 in (0..n).step_by(16) {
+                let p1 = (p0 + 16).min(n);
+                let part = flash_prefill_view(
+                    q.view(),
+                    ks.view().slice_rows(p0, p1),
+                    v.view().slice_rows(p0, p1),
+                    causal,
+                    -(p0 as isize),
+                    8,
+                );
+                acc.merge(&part);
+            }
+            assert!(
+                full.max_abs_diff(&acc.finalize()) < 1e-5,
+                "paged key segments diverged (causal={causal})"
+            );
         }
     }
 

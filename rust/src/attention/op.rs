@@ -16,8 +16,9 @@
 //!     ├──.backward(view, dout, &fwd)──────┘   replays the identical
 //!     │                                       estimator, no recompute
 //!     │            ┌───────────────────────┐
-//!     ├──.prefill(─┤ AttnCache             │, qkv)  ─▶ AttnOutput
-//!     │            │  linalg::KvCache      │
+//!     ├──.prefill(─┤ AttnCache (CachePolicy│, qkv)  ─▶ AttnOutput
+//!     │            │  paged linalg::KvCache│
+//!     │            │  ← PagePool (budget)  │
 //!     └─.decode_step(  + HeadSampler state │, q₁)   ─▶ DecodeOutput
 //!                  └───────────────────────┘
 //! ```
@@ -55,7 +56,7 @@ use super::exact;
 use super::hyper::{self, HyperParams, HyperPlan, SampleMode};
 use super::{softmax_scale, Parts};
 use crate::kernel;
-use crate::linalg::{self, KvCache, Mat, MatRef, QkvView};
+use crate::linalg::{self, KvCache, Mat, MatRef, PagePool, QkvView, DEFAULT_PAGE_ROWS};
 use crate::lsh::Lsh;
 use crate::par;
 use crate::rng::Rng;
@@ -374,9 +375,11 @@ impl AttnGrads {
 /// Appendable per-head sampling state for the hyper decode path: the
 /// prefix's LSH bucket structure plus the drawn residual samples — the
 /// incremental counterpart of the build-time `CausalPlan`.  Built over
-/// the first `AttnCache::built_len` cache rows; rows appended after
-/// that are attended exactly (the recent window) until the cache grows
-/// past the [`AutoPolicy::decode_resample_interval`] and the state is
+/// the first `AttnCache::built_len` **resident** cache rows; rows
+/// appended after that are attended exactly (the recent window) until
+/// the cache grows past the [`AutoPolicy::decode_resample_interval`] —
+/// or until the sliding window evicts a page (the cache epoch moves),
+/// since every index here is a resident-row index — and the state is
 /// rebuilt.
 pub(crate) struct HeadSampler {
     lsh: Lsh,
@@ -409,25 +412,110 @@ impl HeadSampler {
     }
 }
 
-/// A streaming attention session's state: the growable
+/// Eviction policy of an [`AttnCache`] — what the paged
+/// [`crate::linalg::KvCache`] underneath retains as the sequence grows.
+///
+/// * [`CachePolicy::Full`] — every row stays resident; memory grows one
+///   page per `rows_per_page` appended rows, unboundedly.
+/// * [`CachePolicy::SlidingWindow`] — the first `sink` rows (the
+///   attention-sink prefix, rounded up to whole pages) are pinned and
+///   the most recent `window` rows are retained; middle pages are freed
+///   back to the pool as soon as every row in them leaves the window.
+///   Peak residency is bounded by about `window/rows_per_page +
+///   sink-pages + 2` pages regardless of sequence length.  Evicting
+///   distant rows is safe in exactly the regime HyperAttention targets:
+///   large softmax entries are concentrated (the paper's α parameter),
+///   near the diagonal and at the sink columns (§4.3), so the dropped
+///   middle carries negligible mass.  Whenever `window ≥` the prefix
+///   length nothing is ever evicted and windowed decode is bitwise
+///   identical to [`CachePolicy::Full`] (pinned by tests on every
+///   backend).
+///
+/// Sampled decode under an active window: every page eviction
+/// invalidates the sampler's resident-row indices, so its effective
+/// rebuild cadence is `min(decode_resample_interval, rows_per_page)`
+/// tokens.  Deliberate tradeoff: one rebuild gathers at most
+/// `sink + window` rows — the same order as a single exact decode step
+/// — and amortizes over a whole page of tokens, where remapping the
+/// indices in place would buy that gather back at the cost of a second
+/// index coordinate system.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CachePolicy {
+    /// Keep every row (the PR 3 behavior).
+    #[default]
+    Full,
+    /// Pin `sink` leading rows, keep the `window` most recent rows,
+    /// evict whole middle pages.
+    SlidingWindow { window: usize, sink: usize },
+}
+
+impl CachePolicy {
+    /// The `(window, sink)` row pair handed to the storage layer.
+    pub(crate) fn kv_window(self) -> Option<(usize, usize)> {
+        match self {
+            CachePolicy::Full => None,
+            CachePolicy::SlidingWindow { window, sink } => Some((window, sink)),
+        }
+    }
+}
+
+/// A streaming attention session's state: the paged
 /// [`crate::linalg::KvCache`] plus the appendable per-head decode
 /// sampling state.  Create one per sequence, then drive it with
 /// [`AttentionOp::prefill`] and [`AttentionOp::decode_step`].
 pub struct AttnCache {
     kv: KvCache,
+    policy: CachePolicy,
     /// per-head sampled-decode state (None until the first sampled
     /// decode step; dropped on prefill and rebuilt past the resample
-    /// interval)
+    /// interval or after any eviction)
     samplers: Option<Vec<HeadSampler>>,
-    /// cache length when `samplers` was built
+    /// resident rows covered by `samplers` when it was built
     built_len: usize,
+    /// cache eviction epoch when `samplers` was built — a mismatch
+    /// means some sampler index may reference a freed page, so the
+    /// state is rebuilt before use
+    built_epoch: u64,
     /// how many times the sampling state has been (re)built
     resamples: u64,
 }
 
 impl AttnCache {
+    /// Full-retention cache over a private unbounded page pool (the
+    /// drop-in default).
     pub fn new(heads: usize, d: usize) -> Self {
-        AttnCache { kv: KvCache::new(heads, d), samplers: None, built_len: 0, resamples: 0 }
+        Self::with_policy(heads, d, CachePolicy::Full).expect("full policy is always valid")
+    }
+
+    /// Cache with an eviction policy over a private unbounded pool
+    /// ([`DEFAULT_PAGE_ROWS`] rows per page).
+    pub fn with_policy(heads: usize, d: usize, policy: CachePolicy) -> Result<Self, String> {
+        if heads == 0 || d == 0 {
+            return Err("zero-sized cache dimension".into());
+        }
+        let pool = PagePool::unbounded(3 * heads * d * DEFAULT_PAGE_ROWS);
+        Self::with_pool(heads, d, policy, &pool)
+    }
+
+    /// Cache drawing its pages from a shared (possibly budgeted) pool —
+    /// the multi-tenant serving constructor.  Page-pool exhaustion
+    /// surfaces as [`crate::linalg::POOL_EXHAUSTED`] errors from
+    /// prefill/decode appends.
+    pub fn with_pool(
+        heads: usize,
+        d: usize,
+        policy: CachePolicy,
+        pool: &PagePool,
+    ) -> Result<Self, String> {
+        let kv = KvCache::with_pool(heads, d, pool.clone(), policy.kv_window())?;
+        Ok(AttnCache {
+            kv,
+            policy,
+            samplers: None,
+            built_len: 0,
+            built_epoch: 0,
+            resamples: 0,
+        })
     }
 
     #[inline]
@@ -440,10 +528,17 @@ impl AttnCache {
         self.kv.d()
     }
 
-    /// Cached rows per head (the sequence length so far).
+    /// Logical rows per head ingested so far (monotone — eviction does
+    /// not rewind positions).
     #[inline]
     pub fn len(&self) -> usize {
         self.kv.len()
+    }
+
+    /// Rows currently resident (≤ [`AttnCache::len`] under a window).
+    #[inline]
+    pub fn resident_len(&self) -> usize {
+        self.kv.resident_len()
     }
 
     #[inline]
@@ -451,7 +546,12 @@ impl AttnCache {
         self.kv.is_empty()
     }
 
-    /// The raw KV storage (zero-copy per-head views).
+    /// The eviction policy this cache was built with.
+    pub fn policy(&self) -> CachePolicy {
+        self.policy
+    }
+
+    /// The raw paged KV storage (segments, page counters, pool handle).
     pub fn kv(&self) -> &KvCache {
         &self.kv
     }
@@ -471,13 +571,14 @@ impl AttnCache {
         Ok(())
     }
 
-    /// Drop contents and decode state (capacity retained).  Also resets
-    /// the resample counter, so [`AttnCache::resamples`] always counts
-    /// the current sequence only.
+    /// Drop contents and decode state (recycled pages return to the
+    /// pool's free list).  Also resets the resample counter, so
+    /// [`AttnCache::resamples`] always counts the current sequence only.
     pub fn clear(&mut self) {
         self.kv.clear();
         self.samplers = None;
         self.built_len = 0;
+        self.built_epoch = self.kv.epoch();
         self.resamples = 0;
     }
 }
@@ -505,19 +606,23 @@ impl DecodeOutput {
 }
 
 /// One sampled decode row: exact over the bucket window and the recent
-/// rows, ratio-estimated over the sampled residual.  `ks` is the
-/// pre-scaled key panel (logits need no further scaling); `built` is
-/// the prefix length the sampler covers; keys `built..len` are the
-/// recent rows (always including the token itself).
+/// rows, ratio-estimated over the sampled residual.  Keys and values
+/// are read from the paged cache by **resident-row** index (the
+/// pre-scaled plane, so logits need no further scaling); `built` is the
+/// resident prefix the sampler covers; resident rows `built..` are the
+/// recent rows (always including the token itself).  The sampler is
+/// guaranteed eviction-consistent by the caller (rebuilt whenever the
+/// cache epoch moved), so no index here can reference a freed page.
 fn decode_row_sampled(
     qrow: &[f32],
-    ks: MatRef<'_>,
-    v: MatRef<'_>,
+    kv: &KvCache,
+    head: usize,
     s: &HeadSampler,
     built: usize,
     block_target: usize,
 ) -> Vec<f32> {
-    let len = ks.rows;
+    let len = kv.resident_len();
+    let d = kv.d();
     let w = block_target.min(built);
     // window of sorted positions centred on the query's bucket
     let (lo, hi) = if w == 0 {
@@ -549,10 +654,10 @@ fn decode_row_sampled(
     // one-row streaming softmax over the candidate set
     let mut logits = vec![0.0f32; idx.len()];
     for (t, &j) in idx.iter().enumerate() {
-        logits[t] = linalg::dot(qrow, ks.row(j));
+        logits[t] = linalg::dot(qrow, kv.key_row_scaled(head, j));
     }
     let mx = kernel::hmax(&logits);
-    let mut num = vec![0.0f32; v.cols];
+    let mut num = vec![0.0f32; d];
     let mut den = 0.0f32;
     for (t, &j) in idx.iter().enumerate() {
         let wgt = if t < n_exact { 1.0 } else { us };
@@ -561,10 +666,36 @@ fn decode_row_sampled(
         }
         let p = wgt * (logits[t] - mx).exp();
         den += p;
-        kernel::axpy(p, v.row(j), &mut num);
+        kernel::axpy(p, kv.value_row(head, j), &mut num);
     }
     kernel::scale(&mut num, 1.0 / den.max(1e-30));
     num
+}
+
+/// Exact streaming attention of `q` over one head's resident cache
+/// rows: stream the paged key/value segments one page at a time through
+/// [`exact::flash_prefill_view`] and recombine the per-page partial
+/// softmaxes exactly via [`Parts::merge`].  `q_abs_base` is the
+/// absolute sequence position of `q`'s first row — causal masking runs
+/// in absolute coordinates, so it stays correct when eviction has made
+/// resident and absolute positions diverge.
+fn attend_resident(
+    kv: &KvCache,
+    head: usize,
+    q: MatRef<'_>,
+    causal: bool,
+    q_abs_base: usize,
+    block: usize,
+) -> Parts {
+    let mut acc = Parts::empty(q.rows, kv.d());
+    for seg in kv.head_segments(head) {
+        if causal && seg.abs_start > q_abs_base + q.rows - 1 {
+            break; // this and all later pages are fully in the future
+        }
+        let off = q_abs_base as isize - seg.abs_start as isize;
+        acc.merge(&exact::flash_prefill_view(q, seg.ks, seg.v, causal, off, block));
+    }
+    acc
 }
 
 /// A validated, compiled attention operator.  Cheap to build; reusable
@@ -661,10 +792,12 @@ impl AttentionOp {
     ///   the streaming exact path).
     /// * On a **non-empty** cache (chunked prefill, follow-up turns) the
     ///   new queries run the exact streaming pass over the shared
-    ///   pre-scaled cache panel at causal offset `prior_len`; the
-    ///   hyper-family estimators degrade to this exact pass here —
-    ///   their plans are whole-sequence constructs, and the incremental
-    ///   sampling state belongs to [`AttentionOp::decode_step`].
+    ///   pre-scaled cache pages at causal offset `prior_len` (absolute
+    ///   positions, so a sliding-window cache masks correctly; queries
+    ///   attend the *resident* prefix); the hyper-family estimators
+    ///   degrade to this exact pass here — their plans are
+    ///   whole-sequence constructs, and the incremental sampling state
+    ///   belongs to [`AttentionOp::decode_step`].
     ///
     /// The returned session carries no backward state (`backward` on it
     /// errors, as with `infer`).
@@ -679,12 +812,36 @@ impl AttentionOp {
             ));
         }
         let prior = cache.kv.len();
+        // A causal chunk larger than a sink-less sliding window would
+        // evict its own oldest queries' keys mid-append, leaving those
+        // rows with nothing to attend (a silent all-zero output).  With
+        // pinned sink rows the evicted-past queries still attend the
+        // sink (the streaming-LLM semantics); without any, reject the
+        // chunk explicitly: feed the prompt in ≤ window-sized chunks.
+        if self.cfg.causal && prior > 0 {
+            if let Some((w, sink)) = cache.kv.window() {
+                let rp = cache.kv.rows_per_page();
+                let new_len = prior + x.n;
+                let tail_after = new_len.saturating_sub(w) / rp;
+                if sink == 0 && tail_after * rp > prior {
+                    return Err(format!(
+                        "causal prefill chunk of {} rows would evict its own oldest \
+                         queries (window {w} rows, sink 0); chunk the prompt to \
+                         <= window rows or pin sink rows",
+                        x.n
+                    ));
+                }
+            }
+        }
         cache.kv.append(&x)?;
         cache.kv.sync_scaled(softmax_scale(x.d, self.cfg.scale));
         // decode sampling state is stale after any prefill; it is
         // rebuilt lazily by the next sampled decode step
         cache.samplers = None;
         if prior == 0 {
+            // the chunk's own forward always sees the whole chunk (the
+            // window policy governs what is *retained*, not what the
+            // prompt's one-shot estimator computes over)
             return Ok(self.run(x, false));
         }
         let (h, n, d) = (x.heads, x.n, x.d);
@@ -693,15 +850,7 @@ impl AttentionOp {
         let kv = &cache.kv;
         let per_head: Vec<Mat> = par::par_map(h, |head| {
             let (q, _, _) = x.head(head);
-            exact::flash_prefill_view(
-                q,
-                kv.head_k_scaled(head),
-                kv.head_v(head),
-                causal,
-                prior,
-                block,
-            )
-            .finalize()
+            attend_resident(kv, head, q, causal, prior, block).finalize()
         });
         let per = n * d;
         let mut out = vec![0.0f32; h * per];
@@ -723,18 +872,22 @@ impl AttentionOp {
     /// Appends the new token's K/V (one row per head) to the cache and
     /// returns its attention output over the full cache.
     ///
-    /// Resolution per cache length follows the decode rows of the
-    /// [`AutoPolicy`] table:
-    /// * exact-family backends, or a cache shorter than
+    /// Resolution per **resident** cache length follows the decode rows
+    /// of the [`AutoPolicy`] table:
+    /// * exact-family backends, or a resident cache shorter than
     ///   `decode_hyper_threshold` — the fused one-row streaming pass
-    ///   over the shared pre-scaled panel, Θ(len·d) per token;
+    ///   over the shared pre-scaled cache pages, Θ(resident·d) per
+    ///   token (bounded by the window under
+    ///   [`CachePolicy::SlidingWindow`]);
     /// * hyper-family backends on a longer cache — the sampled
     ///   estimator: the query's LSH bucket window (≤ `block` keys) +
     ///   the exact recent rows appended since the state was built + a
     ///   uniform residual sample (≤ `samples` keys), i.e.
     ///   Θ((block + samples + resample_interval)·d) per token.  The
-    ///   state is appendable and only rebuilt past
-    ///   `decode_resample_interval` (see [`AttnCache::resamples`]).
+    ///   state is appendable and rebuilt past
+    ///   `decode_resample_interval` (see [`AttnCache::resamples`]) or
+    ///   after any page eviction, so bucket/residual indices never
+    ///   reference freed pages.
     pub fn decode_step(
         &self,
         cache: &mut AttnCache,
@@ -753,67 +906,62 @@ impl AttentionOp {
             ));
         }
         let (h, d) = (x.heads, x.d);
-        let prior = cache.kv.len();
-        let sampled =
-            self.hyper_family(prior + 1) && prior + 1 >= self.cfg.auto.decode_hyper_threshold;
+        let resident_before = cache.kv.resident_len();
+        let sampled = self.hyper_family(resident_before + 1)
+            && resident_before + 1 >= self.cfg.auto.decode_hyper_threshold;
 
+        cache.kv.append(&x)?;
+        cache.kv.sync_scaled(softmax_scale(d, self.cfg.scale));
+
+        let len = cache.kv.len();
         if sampled {
-            // (re)build the appendable sampling state over the
-            // pre-append prefix when absent or past the interval
+            // (re)build the appendable sampling state over the resident
+            // prefix (everything but the token just appended) when
+            // absent, past the resample interval, or — eviction
+            // awareness — when the cache epoch moved since the build,
+            // i.e. some page a sampler index pointed into was freed
+            let prefix = cache.kv.resident_len() - 1;
             let stale = match &cache.samplers {
                 None => true,
                 Some(_) => {
-                    prior - cache.built_len >= self.cfg.auto.decode_resample_interval
+                    cache.built_epoch != cache.kv.epoch()
+                        || prefix - cache.built_len
+                            >= self.cfg.auto.decode_resample_interval
                 }
             };
             if stale {
                 let cfg = &self.cfg;
                 let kv = &cache.kv;
+                // fork on the pre-append logical length: identical to
+                // the full-cache stream whenever nothing was evicted
+                let fork = (len - 1) as u64;
                 let samplers: Vec<HeadSampler> = par::par_map(h, |head| {
-                    let mut rng = cfg.seed.rng_for_head(head).fork(prior as u64);
-                    HeadSampler::build(kv.head_k(head), cfg.lsh_bits, cfg.samples, &mut rng)
+                    let mut rng = cfg.seed.rng_for_head(head).fork(fork);
+                    let kp = kv.gather_head_k_prefix(head, prefix);
+                    HeadSampler::build(kp.view(), cfg.lsh_bits, cfg.samples, &mut rng)
                 });
                 cache.samplers = Some(samplers);
-                cache.built_len = prior;
+                cache.built_len = prefix;
+                cache.built_epoch = cache.kv.epoch();
                 cache.resamples += 1;
             }
         }
 
-        cache.kv.append(&x)?;
-        cache.kv.sync_scaled(softmax_scale(d, self.cfg.scale));
-
         let kv = &cache.kv;
-        let len = kv.len();
         let per_head: Vec<Vec<f32>> = if sampled {
             let samplers = cache.samplers.as_ref().expect("built above");
             let built = cache.built_len;
             let block = self.cfg.block;
             par::par_map(h, |head| {
                 let (q, _, _) = x.head(head);
-                decode_row_sampled(
-                    q.row(0),
-                    kv.head_k_scaled(head),
-                    kv.head_v(head),
-                    &samplers[head],
-                    built,
-                    block,
-                )
+                decode_row_sampled(q.row(0), kv, head, &samplers[head], built, block)
             })
         } else {
             let block = self.cfg.flash_block;
             par::par_map(h, |head| {
                 let (q, _, _) = x.head(head);
-                // every cached key is past-or-current: no mask needed
-                exact::flash_prefill_view(
-                    q,
-                    kv.head_k_scaled(head),
-                    kv.head_v(head),
-                    false,
-                    0,
-                    block,
-                )
-                .finalize()
-                .data
+                // every resident key is past-or-current: no mask needed
+                attend_resident(kv, head, q, false, 0, block).finalize().data
             })
         };
         let mut out = vec![0.0f32; h * d];
@@ -1642,6 +1790,280 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Acceptance gate: sliding-window decode is **bitwise** identical
+    /// to full-cache decode whenever the window covers the whole
+    /// prefix, on every backend — exact one-row paths and the sampled
+    /// estimator alike (same pages, same segment boundaries, same RNG
+    /// forks, so not a single f32 may differ).
+    #[test]
+    fn windowed_decode_bitwise_matches_full_when_window_covers_prefix() {
+        let (h, n, d) = (2usize, 48usize, 8usize);
+        let (q, k, v) = clustered_flat(30, h, n, d);
+        let configs: Vec<(&str, AttnConfig)> = vec![
+            (
+                "exact",
+                AttnConfig { backend: Backend::Exact, causal: true, ..Default::default() },
+            ),
+            ("flash", AttnConfig::flash(true)),
+            (
+                "hyper",
+                AttnConfig {
+                    backend: Backend::Hyper,
+                    block: 16,
+                    samples: 16,
+                    ..Default::default()
+                },
+            ),
+            ("causal-hyper", AttnConfig::causal_hyper(16, 16, 16)),
+            (
+                "auto",
+                AttnConfig { backend: Backend::Auto, causal: true, ..Default::default() },
+            ),
+            (
+                "sampled-decode",
+                AttnConfig {
+                    backend: Backend::CausalHyper,
+                    causal: true,
+                    block: 8,
+                    samples: 8,
+                    causal_base: 16,
+                    seed: SeedPolicy::PerHead(11),
+                    auto: AutoPolicy {
+                        decode_hyper_threshold: 1,
+                        decode_resample_interval: 8,
+                        ..AutoPolicy::default()
+                    },
+                    ..Default::default()
+                },
+            ),
+        ];
+        for (name, cfg) in configs {
+            let op = cfg.build().unwrap();
+            let run = |policy: CachePolicy| -> (Vec<Vec<f32>>, u64) {
+                let mut cache = AttnCache::with_policy(h, d, policy).unwrap();
+                let mut outs = Vec::new();
+                for t in 0..n {
+                    let (qt, kt, vt) = (
+                        token_bufs(&q, h, n, d, t),
+                        token_bufs(&k, h, n, d, t),
+                        token_bufs(&v, h, n, d, t),
+                    );
+                    let view = QkvView::new(h, 1, d, &qt, &kt, &vt).unwrap();
+                    outs.push(op.decode_step(&mut cache, view).unwrap().out);
+                }
+                assert_eq!(cache.len(), cache.resident_len(), "{name}: nothing may evict");
+                (outs, cache.resamples())
+            };
+            let (full, full_rs) = run(CachePolicy::Full);
+            let (win, win_rs) = run(CachePolicy::SlidingWindow { window: n + 16, sink: 4 });
+            assert_eq!(full, win, "{name}: windowed decode diverged from full");
+            assert_eq!(full_rs, win_rs, "{name}: resample counts diverged");
+        }
+    }
+
+    /// The page-budget guarantee: windowed decode keeps peak resident
+    /// pages ≤ window/rows_per_page + sink pages (+ the in-flight
+    /// partial pages) no matter how long the sequence runs — while a
+    /// full cache at the same length needs far more — and every decoded
+    /// token exactly matches the naive softmax over the rows the
+    /// documented eviction rule says are resident (sink pages pinned,
+    /// middle pages freed, recent window kept).
+    #[test]
+    fn windowed_decode_bounded_pages_and_matches_resident_oracle() {
+        let (h, d, n) = (1usize, 8usize, 200usize);
+        let (window, sink) = (24usize, 8usize);
+        // small pages so eviction happens many times: 8 rows per page
+        let pool = PagePool::unbounded(3 * h * d * 8);
+        let op = AttnConfig::flash(true).build().unwrap();
+        let policy = CachePolicy::SlidingWindow { window, sink };
+        let mut cache = AttnCache::with_pool(h, d, policy, &pool).unwrap();
+        let rp = cache.kv().rows_per_page();
+        assert_eq!(rp, 8);
+        let sink_pages = sink.div_ceil(rp);
+        let (q, k, v) = clustered_flat(31, h, n, d);
+        let sc = 1.0 / (d as f32).sqrt();
+        for t in 0..n {
+            let (qt, kt, vt) = (
+                token_bufs(&q, h, n, d, t),
+                token_bufs(&k, h, n, d, t),
+                token_bufs(&v, h, n, d, t),
+            );
+            let view = QkvView::new(h, 1, d, &qt, &kt, &vt).unwrap();
+            let out = op.decode_step(&mut cache, view).unwrap();
+            assert_eq!(out.pos, t, "absolute positions survive eviction");
+            // the documented eviction rule, restated independently:
+            // resident = pinned sink pages ∪ pages overlapping the
+            // window's last `window` rows
+            let len = t + 1;
+            let tail_base = if len > window {
+                ((len - window) / rp).max(sink_pages)
+            } else {
+                sink_pages
+            };
+            let mut resident: Vec<usize> = (0..len.min(sink_pages * rp)).collect();
+            resident.extend((tail_base * rp).min(len)..len);
+            assert_eq!(cache.resident_len(), resident.len(), "t={t}");
+            // naive softmax oracle over exactly those rows
+            let logits: Vec<f32> = resident
+                .iter()
+                .map(|&j| {
+                    let kj = &k[j * d..(j + 1) * d];
+                    qt.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * sc
+                })
+                .collect();
+            let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let ws: Vec<f32> = logits.iter().map(|&l| (l - mx).exp()).collect();
+            let den: f32 = ws.iter().sum();
+            for c in 0..d {
+                let num: f32 = resident
+                    .iter()
+                    .zip(&ws)
+                    .map(|(&j, &w)| w * v[j * d + c])
+                    .sum();
+                let want = num / den;
+                assert!(
+                    (out.out[c] - want).abs() < 1e-4,
+                    "t={t} col={c}: {} vs {want}",
+                    out.out[c]
+                );
+            }
+        }
+        assert_eq!(cache.len(), n);
+        assert!(cache.resident_len() < n, "eviction must have happened");
+        // the page-budget bound the bench/acceptance gate states
+        let bound = window / rp + sink_pages + 2;
+        let peak = cache.kv().peak_resident_pages();
+        assert!(peak <= bound, "peak {peak} pages > bound {bound}");
+        // a full cache at the same length would blow through the bound
+        assert!(n.div_ceil(rp) > bound);
+        // and the freed pages actually went back to the pool
+        let stats = pool.stats();
+        assert_eq!(stats.outstanding, cache.kv().resident_pages());
+        assert!(stats.frees > 0 && stats.reuses > 0, "pages must recycle");
+    }
+
+    /// Eviction awareness of the sampled decode: every page eviction
+    /// moves the cache epoch, which forces a sampler rebuild even when
+    /// the resample interval alone would not — so bucket/residual
+    /// indices never reference a freed page — and the estimator stays
+    /// finite and deterministic throughout.
+    #[test]
+    fn sampled_decode_rebuilds_on_eviction() {
+        let (h, d, n) = (1usize, 8usize, 80usize);
+        let pool = || PagePool::unbounded(3 * h * d * 4); // 4 rows per page
+        let cfg = AttnConfig {
+            backend: Backend::CausalHyper,
+            causal: true,
+            block: 8,
+            samples: 8,
+            causal_base: 16,
+            seed: SeedPolicy::PerHead(13),
+            auto: AutoPolicy {
+                decode_hyper_threshold: 1,
+                // far beyond the run: every rebuild after the first is
+                // eviction-driven, not interval-driven
+                decode_resample_interval: 100_000,
+                ..AutoPolicy::default()
+            },
+            ..Default::default()
+        };
+        let op = cfg.build().unwrap();
+        let (q, k, v) = clustered_flat(32, h, n, d);
+        let run = || {
+            let policy = CachePolicy::SlidingWindow { window: 16, sink: 4 };
+            let mut cache = AttnCache::with_pool(h, d, policy, &pool()).unwrap();
+            let mut outs = Vec::new();
+            for t in 0..n {
+                let (qt, kt, vt) = (
+                    token_bufs(&q, h, n, d, t),
+                    token_bufs(&k, h, n, d, t),
+                    token_bufs(&v, h, n, d, t),
+                );
+                let view = QkvView::new(h, 1, d, &qt, &kt, &vt).unwrap();
+                let o = op.decode_step(&mut cache, view).unwrap();
+                assert!(o.sampled);
+                assert!(o.out.iter().all(|x| x.is_finite()), "t={t}");
+                outs.push(o.out);
+            }
+            (cache.resamples(), cache.kv().epoch(), outs)
+        };
+        let (resamples, epoch, o1) = run();
+        assert!(epoch > 1, "the window must have evicted pages");
+        assert!(
+            resamples > 2,
+            "epoch bumps must force rebuilds despite the huge interval \
+             (got {resamples})"
+        );
+        let (r2, _, o2) = run();
+        assert_eq!(resamples, r2);
+        assert_eq!(o1, o2, "eviction-aware sampled decode must be deterministic");
+    }
+
+    /// Chunked prefill through a sliding-window cache: with the window
+    /// covering everything the outputs match the unwindowed chunked
+    /// prefill bitwise; with a tight window later chunks attend the
+    /// resident (sink + recent) rows only and stay finite.
+    #[test]
+    fn windowed_prefill_chunks() {
+        let (h, n, d) = (2usize, 48usize, 8usize);
+        let (q, k, v) = clustered_flat(33, h, n, d);
+        let op = AttnConfig::flash(true).build().unwrap();
+        let chunks = [16usize, 1, 31];
+        let run = |mut cache: AttnCache| -> (Vec<Vec<f32>>, usize) {
+            let mut row0 = 0usize;
+            let mut outs = Vec::new();
+            for chunk in chunks {
+                let cv = QkvView::strided(
+                    h,
+                    chunk,
+                    d,
+                    n * d,
+                    &q[row0 * d..],
+                    &k[row0 * d..],
+                    &v[row0 * d..],
+                )
+                .unwrap();
+                outs.push(op.prefill(&mut cache, cv).unwrap().into_out());
+                row0 += chunk;
+            }
+            (outs, cache.kv().evicted_rows())
+        };
+        let (full, _) = run(AttnCache::new(h, d));
+        let covering = CachePolicy::SlidingWindow { window: n + 1, sink: 0 };
+        let (wide, wide_evicted) = run(AttnCache::with_policy(h, d, covering).unwrap());
+        assert_eq!(full, wide, "covering window must be bitwise-neutral");
+        assert_eq!(wide_evicted, 0);
+        // small pages so the tight window actually evicts mid-prefill
+        let pool = PagePool::unbounded(3 * h * d * 4);
+        let tightp = CachePolicy::SlidingWindow { window: 8, sink: 4 };
+        let (tight, tight_evicted) = run(AttnCache::with_pool(h, d, tightp, &pool).unwrap());
+        assert!(tight.iter().all(|o| o.iter().all(|x| x.is_finite())));
+        assert!(tight_evicted > 0, "tight window must have evicted pages");
+        // a causal chunk bigger than a sink-less window would orphan its
+        // own oldest queries: rejected loudly, cache left unchanged
+        let pool0 = PagePool::unbounded(3 * h * d * 4);
+        let nosink = CachePolicy::SlidingWindow { window: 8, sink: 0 };
+        let mut cache = AttnCache::with_pool(h, d, nosink, &pool0).unwrap();
+        let c1 = QkvView::strided(h, 16, d, n * d, &q, &k, &v).unwrap();
+        op.prefill(&mut cache, c1).unwrap(); // empty cache: full one-shot forward
+        let before = cache.len();
+        let c2 =
+            QkvView::strided(h, 31, d, n * d, &q[16 * d..], &k[16 * d..], &v[16 * d..]).unwrap();
+        let err = op.prefill(&mut cache, c2).unwrap_err();
+        assert!(err.contains("evict its own oldest queries"), "{err}");
+        assert_eq!(cache.len(), before, "rejected chunk must not mutate the cache");
+    }
+
+    #[test]
+    fn cache_policy_validation() {
+        assert!(AttnCache::with_policy(2, 8, CachePolicy::Full).is_ok());
+        let zero = CachePolicy::SlidingWindow { window: 0, sink: 4 };
+        assert!(AttnCache::with_policy(2, 8, zero).is_err());
+        // a pool too small for even one row of the shape is rejected
+        let tiny = PagePool::unbounded(8);
+        assert!(AttnCache::with_pool(2, 8, CachePolicy::Full, &tiny).is_err());
     }
 
     #[test]

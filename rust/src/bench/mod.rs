@@ -7,7 +7,8 @@ use std::time::Instant;
 
 use crate::attention::measure;
 use crate::attention::op::{
-    fit_block, AttnCache, AttnConfig, AttentionOp, AutoPolicy, Backend, SeedPolicy,
+    fit_block, AttnCache, AttnConfig, AttentionOp, AutoPolicy, Backend, CachePolicy,
+    SeedPolicy,
 };
 use crate::json::Value;
 use crate::kernel;
@@ -276,6 +277,115 @@ pub fn run_decode_bench(
     rows
 }
 
+/// One row of the paged-cache gate: windowed vs full-cache exact decode
+/// over the same prefix, with the page-residency evidence.
+#[derive(Clone, Debug)]
+pub struct CacheBenchRow {
+    pub n: usize,
+    pub steps: usize,
+    /// sliding-window rows of the windowed run (clamped to n)
+    pub window: usize,
+    pub sink: usize,
+    pub rows_page: usize,
+    /// exact decode tok/s on the unbounded full cache
+    pub full_tok_s: f64,
+    /// exact decode tok/s under the sliding window
+    pub windowed_tok_s: f64,
+    /// peak resident pages of each run — the memory story: full grows
+    /// with n, windowed stays ≤ window/rows_page + sink pages + slack
+    pub full_peak_pages: usize,
+    pub windowed_peak_pages: usize,
+    /// pool high-water marks (what a budget must actually provision,
+    /// including any ingest transient — for the windowed run the prompt
+    /// is fed in window-sized chunks, so this stays near the resident
+    /// peak instead of spiking to the whole prompt)
+    pub full_pool_peak: usize,
+    pub windowed_pool_peak: usize,
+}
+
+/// Windowed-vs-full decode at each prefix length: warm a paged KV cache
+/// with an `n`-row prefix (raw append — fed in window-sized chunks for
+/// the windowed run, the streaming-ingest shape, so pages recycle as
+/// the window slides), then time `steps` exact single-token decode
+/// steps under (a) [`CachePolicy::Full`] and (b)
+/// [`CachePolicy::SlidingWindow`], recording both the peak *resident*
+/// pages and the pool's true high-water mark.  The windowed run
+/// demonstrates the fixed page budget (and the Θ(window·d) per-token
+/// cost) that full-cache decode cannot give.
+pub fn run_cache_bench(
+    sizes: &[usize],
+    d: usize,
+    window: usize,
+    sink: usize,
+    steps: usize,
+) -> Vec<CacheBenchRow> {
+    let steps = steps.max(1);
+    let flash = flash_op(true);
+    let mut rows = Vec::new();
+    for &n in sizes {
+        let total = n + steps;
+        let (q, k, v) = clustered_qkv(42, total, d, 32, 0.5);
+        let step_view = |t: usize| {
+            let lo = (n + t) * d;
+            let hi = lo + d;
+            QkvView::new(1, 1, d, &q.data[lo..hi], &k.data[lo..hi], &v.data[lo..hi])
+                .expect("token window")
+        };
+        let w = window.min(n).max(1);
+        let run = |policy: CachePolicy, chunk: usize| -> (f64, usize, usize, usize) {
+            let pool =
+                crate::linalg::PagePool::unbounded(3 * d * crate::linalg::DEFAULT_PAGE_ROWS);
+            let mut cache =
+                AttnCache::with_pool(1, d, policy, &pool).expect("valid cache policy");
+            let mut fed = 0usize;
+            while fed < n {
+                let take = chunk.min(n - fed);
+                let cv = QkvView::strided(
+                    1,
+                    take,
+                    d,
+                    total * d,
+                    &q.data[fed * d..],
+                    &k.data[fed * d..],
+                    &v.data[fed * d..],
+                )
+                .expect("prefix chunk");
+                cache.append_kv(&cv).expect("warm cache");
+                fed += take;
+            }
+            let t0 = Instant::now();
+            for t in 0..steps {
+                let _ = flash.decode_step(&mut cache, step_view(t)).expect("decode step");
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            (
+                steps as f64 / dt.max(1e-12),
+                cache.kv().peak_resident_pages(),
+                cache.kv().rows_per_page(),
+                pool.stats().peak,
+            )
+        };
+        let (full_tok_s, full_peak_pages, rows_page, full_pool_peak) =
+            run(CachePolicy::Full, n);
+        let (windowed_tok_s, windowed_peak_pages, _, windowed_pool_peak) =
+            run(CachePolicy::SlidingWindow { window: w, sink }, w);
+        rows.push(CacheBenchRow {
+            n,
+            steps,
+            window: w,
+            sink,
+            rows_page,
+            full_tok_s,
+            windowed_tok_s,
+            full_peak_pages,
+            windowed_peak_pages,
+            full_pool_peak,
+            windowed_pool_peak,
+        });
+    }
+    rows
+}
+
 /// One row of the machine-readable attention perf gate.
 #[derive(Clone, Debug)]
 pub struct AttnBenchRow {
@@ -306,9 +416,15 @@ impl AttnBenchRow {
 ///    `decode_sizes` (default 4k/16k): exact fused one-row decode vs the
 ///    sampled hyper decode over a warmed KV cache, so the perf
 ///    trajectory covers the serving (prefill/decode) path too.
+/// 4. **Cache** — the paged-memory gate at each `n` in `cache_sizes`
+///    (default 16k/64k): windowed vs full-cache exact decode tok/s plus
+///    peak resident pages of each, so the trajectory records that
+///    windowed decode runs within a fixed page budget where the full
+///    cache grows with n.
 ///
 /// Returns the JSON document; timing state (threads, backend) is
 /// restored before returning.
+#[allow(clippy::too_many_arguments)]
 pub fn run_attention_bench_json(
     sizes: &[usize],
     d: usize,
@@ -317,6 +433,9 @@ pub fn run_attention_bench_json(
     reps: usize,
     decode_sizes: &[usize],
     decode_steps: usize,
+    cache_sizes: &[usize],
+    kv_window: usize,
+    kv_sink: usize,
 ) -> Value {
     use std::collections::BTreeMap;
     let mut root = BTreeMap::new();
@@ -406,6 +525,35 @@ pub fn run_attention_bench_json(
         decode.push(Value::Object(o));
     }
     root.insert("decode".into(), Value::Array(decode));
+
+    // ---- 4) paged-cache gate: windowed vs full decode ------------------
+    let mut cache = Vec::new();
+    for r in run_cache_bench(cache_sizes, d, kv_window, kv_sink, decode_steps) {
+        let mut o = BTreeMap::new();
+        o.insert("n".into(), Value::Num(r.n as f64));
+        o.insert("steps".into(), Value::Num(r.steps as f64));
+        o.insert("window".into(), Value::Num(r.window as f64));
+        o.insert("sink".into(), Value::Num(r.sink as f64));
+        o.insert("rows_page".into(), Value::Num(r.rows_page as f64));
+        o.insert("full_tok_s".into(), Value::Num(r.full_tok_s));
+        o.insert("windowed_tok_s".into(), Value::Num(r.windowed_tok_s));
+        o.insert("full_peak_pages".into(), Value::Num(r.full_peak_pages as f64));
+        o.insert(
+            "windowed_peak_pages".into(),
+            Value::Num(r.windowed_peak_pages as f64),
+        );
+        o.insert("full_pool_peak".into(), Value::Num(r.full_pool_peak as f64));
+        o.insert(
+            "windowed_pool_peak".into(),
+            Value::Num(r.windowed_pool_peak as f64),
+        );
+        o.insert(
+            "speedup".into(),
+            Value::Num(r.windowed_tok_s / r.full_tok_s.max(1e-12)),
+        );
+        cache.push(Value::Object(o));
+    }
+    root.insert("cache".into(), Value::Array(cache));
 
     root.insert(
         "threads".into(),
@@ -668,8 +816,57 @@ mod tests {
     }
 
     #[test]
+    fn cache_bench_windowed_stays_in_budget() {
+        let rows = run_cache_bench(&[1024], 16, 128, 16, 4);
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.window, 128);
+        assert!(r.full_tok_s > 0.0 && r.windowed_tok_s > 0.0);
+        // the acceptance shape: windowed peak ≤ window/page + sink + slack,
+        // while the full cache needs ~n/page pages
+        let bound = r.window / r.rows_page + r.sink.div_ceil(r.rows_page) + 2;
+        assert!(
+            r.windowed_peak_pages <= bound,
+            "windowed peak {} > bound {bound}",
+            r.windowed_peak_pages
+        );
+        assert!(
+            r.full_peak_pages > bound,
+            "full cache ({} pages) should exceed the windowed budget {bound}",
+            r.full_peak_pages
+        );
+        // honest accounting: with chunked ingest the pool's true
+        // high-water mark (transient included) stays near the resident
+        // peak — one extra page of ingest slack, not the whole prompt
+        assert!(
+            r.windowed_pool_peak <= bound + r.window.div_ceil(r.rows_page) + 1,
+            "windowed pool peak {} spiked past the ingest-slack bound",
+            r.windowed_pool_peak
+        );
+        assert!(r.full_pool_peak >= r.full_peak_pages);
+    }
+
+    #[test]
+    fn bench_json_has_cache_section() {
+        let doc = run_attention_bench_json(&[64], 16, 16, 16, 1, &[64], 2, &[256], 64, 8);
+        let cache = doc.get("cache").expect("cache section present");
+        let rows = match cache {
+            Value::Array(a) => a,
+            _ => panic!("cache section must be an array"),
+        };
+        assert_eq!(rows.len(), 1);
+        let full = rows[0].get("full_peak_pages").and_then(|v| v.as_f64()).unwrap();
+        let win = rows[0]
+            .get("windowed_peak_pages")
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert!(win < full, "windowed {win} pages must undercut full {full}");
+        assert!(rows[0].get("windowed_tok_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    }
+
+    #[test]
     fn bench_json_has_decode_section() {
-        let doc = run_attention_bench_json(&[64], 16, 16, 16, 1, &[64], 2);
+        let doc = run_attention_bench_json(&[64], 16, 16, 16, 1, &[64], 2, &[64], 32, 8);
         let decode = doc.get("decode").expect("decode section present");
         let rows = match decode {
             Value::Array(a) => a,

@@ -8,26 +8,37 @@
 //! rayon-free — so a single engine thread still saturates the machine).
 //!
 //! Streaming sessions: the engine owns a session table mapping
-//! [`SessionId`] to its [`AttnCache`] (KV cache + appendable decode
-//! sampling state).  Prefill ([`Work::Open`]) creates the entry; decode
-//! steps check the entry out of the table, run one
+//! [`SessionId`] to its [`AttnCache`] (paged KV cache + appendable
+//! decode sampling state).  Prefill ([`Work::Open`]) creates the entry;
+//! decode steps check the entry out of the table, run one
 //! `AttentionOp::decode_step`, and check it back in, so decode for
 //! different sessions executes in parallel across the substrate workers
 //! while each session's cache is mutated by one worker at a time.  On
 //! shutdown, queued work is flushed with an explicit error response —
 //! nothing is silently dropped — and the session table is cleared.
+//!
+//! **Memory budget** ([`CacheConfig`]): every session's cache draws its
+//! pages from one shared [`PagePool`].  When the pool runs dry, an open
+//! (or a decode append) first tries to LRU-evict an idle session — the
+//! multi-tenant admission-control path — and only if nothing is
+//! evictable returns an explicit backpressure error to the client.
+//! Closing a session (or dropping the table at shutdown) returns its
+//! pages to the pool's free list.  An optional idle-session TTL sweep
+//! reclaims sessions whose clients dropped their handle without
+//! `close_session` (the session-table leak fix), counted in
+//! `sessions_reclaimed`.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use super::metrics::Metrics;
+use super::metrics::{CacheGauges, Metrics};
 use super::request::{AttnJob, AttnResponse, Backend, DecodeJob, DecodeResponse, SessionId};
 use super::router::{Route, RouteKind, RouterConfig};
-use crate::attention::op::{self, AttnCache, AttnConfig, SeedPolicy};
-use crate::linalg::QkvView;
+use crate::attention::op::{self, AttnCache, AttnConfig, CachePolicy, SeedPolicy};
+use crate::linalg::{PagePool, QkvView, POOL_EXHAUSTED};
 use crate::runtime::Runtime;
 
 /// The unit of engine work.
@@ -65,16 +76,69 @@ pub enum EngineMsg {
     Shutdown,
 }
 
+/// KV-cache memory policy of the engine: the shared page pool every
+/// session draws from, the per-session eviction policy, and the
+/// idle-session TTL.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheConfig {
+    /// f32 elements per page frame in the shared pool.  Uniform frames
+    /// mean a page freed by any session is reusable by any other
+    /// regardless of its `[heads, d]` shape; rows-per-page for a shape
+    /// is `page_elems / (3·heads·d)` (K, V, and the pre-scaled K mirror
+    /// share the frame).
+    pub page_elems: usize,
+    /// Global budget of outstanding pages across every session
+    /// (None = unbounded, the default).  Provisioning note: a prefill
+    /// transiently holds every prompt page before a sliding window
+    /// trims it, so the budget must cover the largest expected prompt
+    /// (`ceil(prompt_rows / rows_per_page)`) — opens that cannot ever
+    /// fit are rejected up front without evicting anyone.  Steady-state
+    /// decode under a window then needs only
+    /// `window/rows_per_page + sink pages + 1` per session (the slide
+    /// recycles its own pages before touching the pool).
+    pub budget_pages: Option<usize>,
+    /// eviction policy applied to every session cache
+    pub policy: CachePolicy,
+    /// reclaim sessions idle longer than this (None = off, the
+    /// default).  The sweep runs on the engine thread at ~ttl/4.
+    pub idle_ttl: Option<Duration>,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            // 64 rows per page at the serving default h·d = 4·64
+            page_elems: 3 * 256 * 64,
+            budget_pages: None,
+            policy: CachePolicy::Full,
+            idle_ttl: None,
+        }
+    }
+}
+
 /// A live session: the compiled op config it was opened with plus its
 /// KV cache.  `None` in the table means "checked out by a worker".
-struct SessionEntry {
+pub(crate) struct SessionEntry {
     cfg: AttnConfig,
     heads: usize,
     d: usize,
     cache: AttnCache,
+    /// last open/decode activity — the LRU-eviction and TTL-sweep key
+    last_used: Instant,
 }
 
-type SessionMap = Arc<Mutex<HashMap<SessionId, Option<SessionEntry>>>>;
+pub(crate) type SessionMap = Arc<Mutex<HashMap<SessionId, Option<SessionEntry>>>>;
+
+/// Everything a worker needs to execute engine work — cloned per
+/// worker thread.
+#[derive(Clone)]
+pub(crate) struct EngineCtx {
+    pub(crate) rc: RouterConfig,
+    pub(crate) cache: CacheConfig,
+    pub(crate) pool: PagePool,
+    pub(crate) metrics: Arc<Metrics>,
+    pub(crate) sessions: SessionMap,
+}
 
 /// How long session checkout/close waits for an in-flight decode step
 /// to check its entry back in before giving up.  Bounds the wait so a
@@ -169,39 +233,179 @@ pub fn substrate_config(job: &AttnJob, kind: RouteKind, rc: &RouterConfig) -> At
     }
 }
 
-/// Prefill a session's prompt into a fresh cache and register it in
-/// the session table.
+/// Evict the least-recently-used *idle* session to reclaim its pages
+/// for new work.  Checked-out sessions (slot = None) and `skip` are
+/// never victims.  Returns false when nothing was evictable.
+fn evict_lru_session(ctx: &EngineCtx, skip: Option<SessionId>) -> bool {
+    // take the victim out under the lock, but drop it (one pool free
+    // per page) after releasing the table — concurrent decode
+    // checkouts must not stall behind a large cache teardown
+    let victim = {
+        let mut map = ctx.sessions.lock().unwrap();
+        let id = map
+            .iter()
+            .filter(|(id, slot)| Some(**id) != skip && slot.is_some())
+            .min_by_key(|(_, slot)| slot.as_ref().expect("filtered Some").last_used)
+            .map(|(id, _)| *id);
+        id.map(|id| map.remove(&id).expect("victim present"))
+    };
+    match victim {
+        Some(entry) => {
+            drop(entry); // frees its pages back to the pool
+            ctx.metrics
+                .sessions_evicted
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            true
+        }
+        None => false,
+    }
+}
+
+/// Reclaim sessions idle past the TTL — the leak fix for clients that
+/// dropped their handle without `close_session`.  Checked-out sessions
+/// are in use by definition and are skipped.
+fn sweep_idle(ctx: &EngineCtx, ttl: Duration) {
+    let now = Instant::now();
+    // collect + detach under the lock; tear the caches down (page
+    // frees) after releasing it
+    let dead = {
+        let mut map = ctx.sessions.lock().unwrap();
+        let ids: Vec<SessionId> = map
+            .iter()
+            .filter(|(_, slot)| {
+                slot.as_ref().is_some_and(|e| now.duration_since(e.last_used) >= ttl)
+            })
+            .map(|(id, _)| *id)
+            .collect();
+        ids.into_iter().filter_map(|id| map.remove(&id)).collect::<Vec<_>>()
+    };
+    let n = dead.len() as u64;
+    drop(dead); // frees the reclaimed sessions' pages
+    if n > 0 {
+        ctx.metrics
+            .sessions_reclaimed
+            .fetch_add(n, std::sync::atomic::Ordering::Relaxed);
+    }
+}
+
+/// Snapshot the paged-cache subsystem (pool counters + per-session
+/// residency) for status output.
+pub(crate) fn cache_gauges(
+    sessions: &SessionMap,
+    pool: &PagePool,
+    metrics: &Metrics,
+) -> CacheGauges {
+    use std::sync::atomic::Ordering::Relaxed;
+    let s = pool.stats();
+    let map = sessions.lock().unwrap();
+    let mut per_session: Vec<(u64, usize, usize)> = map
+        .iter()
+        .map(|(id, slot)| match slot {
+            Some(e) => (*id, e.cache.kv().resident_pages(), e.cache.len()),
+            None => (*id, 0, 0), // checked out right now
+        })
+        .collect();
+    per_session.sort_by_key(|&(id, _, _)| id);
+    CacheGauges {
+        page_elems: s.page_elems,
+        budget_pages: s.budget,
+        pages_in_use: s.outstanding,
+        pages_free: s.free,
+        peak_pages: s.peak,
+        pool_allocs: s.allocs,
+        pool_reuses: s.reuses,
+        pool_rejects: s.rejects,
+        sessions_evicted: metrics.sessions_evicted.load(Relaxed),
+        sessions_reclaimed: metrics.sessions_reclaimed.load(Relaxed),
+        admission_rejects: metrics.admission_rejects.load(Relaxed),
+        per_session,
+    }
+}
+
+/// Bound on LRU-eviction retries for one admission attempt.
+const MAX_ADMISSION_EVICTIONS: usize = 64;
+
+/// Prefill a session's prompt into a fresh cache (pages from the shared
+/// pool) and register it in the session table.  Pool exhaustion evicts
+/// idle sessions LRU-first; with nothing left to evict the open is
+/// rejected with explicit backpressure.
 fn run_open(
     session: SessionId,
     job: &AttnJob,
     kind: RouteKind,
-    rc: &RouterConfig,
-    sessions: &SessionMap,
+    ctx: &EngineCtx,
 ) -> Result<Vec<f32>, String> {
-    let cfg = substrate_config(job, kind, rc);
+    let cfg = substrate_config(job, kind, &ctx.rc);
     let attn = cfg.build()?;
-    let mut cache = AttnCache::new(job.heads, job.d);
-    let view = QkvView::new(job.heads, job.n, job.d, &job.q, &job.k, &job.v)?;
-    let out = attn.prefill(&mut cache, view)?.into_out();
-    sessions.lock().unwrap().insert(
-        session,
-        Some(SessionEntry { cfg, heads: job.heads, d: job.d, cache }),
-    );
-    Ok(out)
+    // feasibility first: a prompt that cannot fit the pool even with
+    // every other session evicted is rejected before evicting anyone
+    // (prefill transiently needs all prompt pages — the window trims
+    // only after the append)
+    let rows_page = ctx.cache.page_elems / (3 * job.heads * job.d).max(1);
+    if let (Some(budget), true) = (ctx.cache.budget_pages, rows_page > 0) {
+        let needed = job.n.div_ceil(rows_page);
+        if needed > budget {
+            return Err(reject_admission(
+                ctx,
+                format!("prompt needs {needed} pages, pool budget is {budget}"),
+            ));
+        }
+    }
+    let mut attempts = 0usize;
+    loop {
+        let mut cache = AttnCache::with_pool(job.heads, job.d, ctx.cache.policy, &ctx.pool)?;
+        let view = QkvView::new(job.heads, job.n, job.d, &job.q, &job.k, &job.v)?;
+        match attn.prefill(&mut cache, view) {
+            Ok(out) => {
+                ctx.sessions.lock().unwrap().insert(
+                    session,
+                    Some(SessionEntry {
+                        cfg,
+                        heads: job.heads,
+                        d: job.d,
+                        cache,
+                        last_used: Instant::now(),
+                    }),
+                );
+                return Ok(out.into_out());
+            }
+            Err(e) if e.contains(POOL_EXHAUSTED) => {
+                drop(cache); // return the partial allocation first
+                if attempts < MAX_ADMISSION_EVICTIONS && evict_lru_session(ctx, None) {
+                    attempts += 1;
+                    continue;
+                }
+                return Err(reject_admission(ctx, e));
+            }
+            Err(e) => return Err(e),
+        }
+    }
 }
 
-/// Run one decode step against its session's checked-out cache.
+/// Count and uniformly shape an admission rejection (same wrapper
+/// whether it came from the feasibility precheck, an empty eviction
+/// candidate list, or the retry bound).
+fn reject_admission(ctx: &EngineCtx, why: String) -> String {
+    ctx.metrics
+        .admission_rejects
+        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    format!("session admission rejected: {why}")
+}
+
+/// Run one decode step against its session's checked-out cache.  A
+/// decode append can also exhaust the pool (one more page as the window
+/// slides); it retries after LRU-evicting *other* idle sessions.
 fn run_decode(
     job: &DecodeJob,
-    sessions: &SessionMap,
+    ctx: &EngineCtx,
 ) -> Result<crate::attention::op::DecodeOutput, String> {
-    let mut entry = checkout(sessions, job.session)?;
+    let mut entry = checkout(&ctx.sessions, job.session)?;
     if job.heads != entry.heads || job.d != entry.d {
         let msg = format!(
             "decode shape (h={}, d={}) != session shape (h={}, d={})",
             job.heads, job.d, entry.heads, entry.d
         );
-        checkin(sessions, job.session, entry);
+        checkin(&ctx.sessions, job.session, entry);
         return Err(msg);
     }
     // ordering guard: a pipelined step that lands out of order is an
@@ -214,15 +418,30 @@ fn run_decode(
                  (out-of-order pipelined decode?)",
                 job.session
             );
-            checkin(sessions, job.session, entry);
+            checkin(&ctx.sessions, job.session, entry);
             return Err(msg);
         }
     }
     let attn = entry.cfg.build().expect("session config validated at open");
     let view = QkvView::new(job.heads, 1, job.d, &job.q, &job.k, &job.v)
         .expect("decode job validated at submit");
-    let res = attn.decode_step(&mut entry.cache, view);
-    checkin(sessions, job.session, entry);
+    let mut attempts = 0usize;
+    let res = loop {
+        match attn.decode_step(&mut entry.cache, view) {
+            Err(e) if e.contains(POOL_EXHAUSTED) => {
+                if attempts < MAX_ADMISSION_EVICTIONS
+                    && evict_lru_session(ctx, Some(job.session))
+                {
+                    attempts += 1;
+                    continue;
+                }
+                break Err(reject_admission(ctx, e));
+            }
+            other => break other,
+        }
+    };
+    entry.last_used = Instant::now();
+    checkin(&ctx.sessions, job.session, entry);
     res
 }
 
@@ -250,11 +469,20 @@ pub fn execute_substrate(job: &AttnJob, kind: RouteKind, rc: &RouterConfig) -> V
 pub fn spawn(
     artifacts_dir: Option<PathBuf>,
     router_config: RouterConfig,
+    cache: CacheConfig,
     metrics: Arc<Metrics>,
     queue_depth: usize,
-) -> (SyncSender<EngineMsg>, std::thread::JoinHandle<()>) {
+) -> (SyncSender<EngineMsg>, std::thread::JoinHandle<()>, PagePool, SessionMap) {
     let (tx, rx) = std::sync::mpsc::sync_channel::<EngineMsg>(queue_depth);
-    let sessions: SessionMap = Arc::new(Mutex::new(HashMap::new()));
+    let pool = PagePool::new(cache.page_elems, cache.budget_pages);
+    let ctx = EngineCtx {
+        rc: router_config,
+        cache,
+        pool: pool.clone(),
+        metrics,
+        sessions: Arc::new(Mutex::new(HashMap::new())),
+    };
+    let sessions = ctx.sessions.clone();
 
     // substrate lane: a shared-receiver worker pool
     let (sub_tx, sub_rx) = std::sync::mpsc::sync_channel::<EngineMsg>(queue_depth);
@@ -262,9 +490,7 @@ pub fn spawn(
     let n_workers = 2;
     for w in 0..n_workers {
         let rxw = sub_rx.clone();
-        let rc = router_config.clone();
-        let m = metrics.clone();
-        let sess = sessions.clone();
+        let ctxw = ctx.clone();
         std::thread::Builder::new()
             .name(format!("hyperattn-substrate-{w}"))
             .spawn(move || loop {
@@ -272,7 +498,7 @@ pub fn spawn(
                 match msg {
                     Ok(EngineMsg::Batch(batch)) => {
                         for item in batch {
-                            execute_one(item, None, &rc, &m, &sess);
+                            execute_one(item, None, &ctxw);
                         }
                     }
                     Ok(EngineMsg::Shutdown) | Err(_) => break,
@@ -283,11 +509,9 @@ pub fn spawn(
 
     let handle = std::thread::Builder::new()
         .name("hyperattn-engine".into())
-        .spawn(move || {
-            engine_loop(rx, artifacts_dir, router_config, metrics, sub_tx, n_workers, sessions)
-        })
+        .spawn(move || engine_loop(rx, artifacts_dir, ctx, sub_tx, n_workers))
         .expect("spawn engine thread");
-    (tx, handle)
+    (tx, handle, pool, sessions)
 }
 
 /// Respond to a flushed item with an explicit shutdown error (instead
@@ -308,13 +532,10 @@ fn respond_flush(item: WorkItem, metrics: &Metrics) {
 }
 
 /// Execute one work item (on whichever lane) and respond.
-fn execute_one(
-    item: WorkItem,
-    runtime: Option<&Runtime>,
-    rc: &RouterConfig,
-    metrics: &Metrics,
-    sessions: &SessionMap,
-) {
+fn execute_one(item: WorkItem, runtime: Option<&Runtime>, ctx: &EngineCtx) {
+    let rc = &ctx.rc;
+    let metrics = &*ctx.metrics;
+    let sessions = &ctx.sessions;
     let WorkItem { work, route, submitted, respond } = item;
     let queue_us = submitted.elapsed().as_micros() as u64;
     let exec_start = Instant::now();
@@ -370,7 +591,7 @@ fn execute_one(
         Work::Open { session, job } => {
             // prefill the prompt into a fresh cache on the substrate
             // (streaming sessions are shape-dynamic: no artifact lane)
-            let result = run_open(session, &job, route.kind, rc, sessions);
+            let result = run_open(session, &job, route.kind, ctx);
             let exec_us = exec_start.elapsed().as_micros() as u64;
             metrics.queue_latency.record(queue_us);
             metrics.exec_latency.record(exec_us);
@@ -396,7 +617,7 @@ fn execute_one(
             }
         }
         Work::Decode(job) => {
-            let result = run_decode(&job, sessions);
+            let result = run_decode(&job, ctx);
             let exec_us = exec_start.elapsed().as_micros() as u64;
             metrics.queue_latency.record(queue_us);
             metrics.decode_latency.record(exec_us);
@@ -427,15 +648,12 @@ fn execute_one(
     }
 }
 
-#[allow(clippy::too_many_arguments)]
 fn engine_loop(
     rx: Receiver<EngineMsg>,
     artifacts_dir: Option<PathBuf>,
-    rc: RouterConfig,
-    metrics: Arc<Metrics>,
+    ctx: EngineCtx,
     sub_tx: SyncSender<EngineMsg>,
     n_workers: usize,
-    sessions: SessionMap,
 ) {
     // Runtime is created lazily on this thread (PjRtClient is !Send).
     let runtime: Option<Runtime> = artifacts_dir.and_then(|dir| match Runtime::open(&dir) {
@@ -446,7 +664,35 @@ fn engine_loop(
         }
     });
 
-    while let Ok(msg) = rx.recv() {
+    // idle-session sweep cadence: ~ttl/4, floored so a tiny ttl cannot
+    // turn the engine thread into a spin loop
+    let sweep_every = ctx
+        .cache
+        .idle_ttl
+        .map(|ttl| (ttl / 4).max(Duration::from_millis(10)));
+    let mut last_sweep = Instant::now();
+
+    loop {
+        let msg = match sweep_every {
+            Some(interval) => match rx.recv_timeout(interval) {
+                Ok(m) => Some(m),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => break,
+            },
+            None => match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break,
+            },
+        };
+        // sweep on idle timeouts AND between messages under sustained
+        // traffic — a busy engine must still reclaim leaked sessions
+        if let (Some(interval), Some(ttl)) = (sweep_every, ctx.cache.idle_ttl) {
+            if last_sweep.elapsed() >= interval {
+                sweep_idle(&ctx, ttl);
+                last_sweep = Instant::now();
+            }
+        }
+        let Some(msg) = msg else { continue };
         let batch = match msg {
             EngineMsg::Batch(b) => b,
             EngineMsg::Shutdown => {
@@ -456,14 +702,14 @@ fn engine_loop(
                 while let Ok(m) = rx.try_recv() {
                     if let EngineMsg::Batch(batch) = m {
                         for item in batch {
-                            respond_flush(item, &metrics);
+                            respond_flush(item, &ctx.metrics);
                         }
                     }
                 }
                 break;
             }
         };
-        metrics.record_batch(batch.len());
+        ctx.metrics.record_batch(batch.len());
         // route the whole batch to its lane (batch keys are per-route, so
         // a batch is uniformly artifact or substrate)
         let is_artifact = batch
@@ -472,14 +718,14 @@ fn engine_loop(
             .unwrap_or(false);
         if is_artifact {
             for item in batch {
-                execute_one(item, runtime.as_ref(), &rc, &metrics, &sessions);
+                execute_one(item, runtime.as_ref(), &ctx);
             }
         } else {
             // forward to the substrate pool; if it is gone, run inline
             if let Err(e) = sub_tx.send(EngineMsg::Batch(batch)) {
                 if let EngineMsg::Batch(batch) = e.0 {
                     for item in batch {
-                        execute_one(item, None, &rc, &metrics, &sessions);
+                        execute_one(item, None, &ctx);
                     }
                 }
             }
@@ -488,9 +734,10 @@ fn engine_loop(
     for _ in 0..n_workers {
         let _ = sub_tx.send(EngineMsg::Shutdown);
     }
-    // any caches still live are dropped here; a worker holding a
-    // checked-out entry simply drops it at checkin
-    sessions.lock().unwrap().clear();
+    // any caches still live are dropped here, returning their pages to
+    // the pool; a worker holding a checked-out entry simply drops it at
+    // checkin
+    ctx.sessions.lock().unwrap().clear();
 }
 
 #[cfg(test)]
@@ -580,33 +827,122 @@ mod tests {
         assert!(exact.max_abs_diff(&got) < 1e-5, "prime n must run exact");
     }
 
+    fn entry(heads: usize, d: usize) -> SessionEntry {
+        SessionEntry {
+            cfg: AttnConfig::flash(true),
+            heads,
+            d,
+            cache: AttnCache::new(heads, d),
+            last_used: Instant::now(),
+        }
+    }
+
+    fn test_ctx() -> EngineCtx {
+        EngineCtx {
+            rc: RouterConfig::default(),
+            cache: CacheConfig::default(),
+            pool: PagePool::unbounded(CacheConfig::default().page_elems),
+            metrics: Arc::new(Metrics::new()),
+            sessions: Arc::new(Mutex::new(HashMap::new())),
+        }
+    }
+
     /// Session checkout/checkin/close protocol on the raw table.
     #[test]
     fn session_table_checkout_protocol() {
         let sessions: SessionMap = Arc::new(Mutex::new(HashMap::new()));
         assert!(checkout(&sessions, 1).is_err(), "unknown session");
-        let cfg = AttnConfig::flash(true);
-        sessions.lock().unwrap().insert(
-            1,
-            Some(SessionEntry { cfg, heads: 2, d: 8, cache: AttnCache::new(2, 8) }),
-        );
-        let entry = checkout(&sessions, 1).unwrap();
+        sessions.lock().unwrap().insert(1, Some(entry(2, 8)));
+        let e = checkout(&sessions, 1).unwrap();
         // while checked out the slot is empty but present
         assert!(matches!(sessions.lock().unwrap().get(&1), Some(None)));
-        checkin(&sessions, 1, entry);
+        checkin(&sessions, 1, e);
         assert!(matches!(sessions.lock().unwrap().get(&1), Some(Some(_))));
         close_session(&sessions, 1);
         assert!(sessions.lock().unwrap().get(&1).is_none());
         // closing again is a no-op
         close_session(&sessions, 1);
         // checkin after close drops the entry silently
-        sessions.lock().unwrap().insert(
-            2,
-            Some(SessionEntry { cfg, heads: 2, d: 8, cache: AttnCache::new(2, 8) }),
-        );
+        sessions.lock().unwrap().insert(2, Some(entry(2, 8)));
         let e2 = checkout(&sessions, 2).unwrap();
         sessions.lock().unwrap().remove(&2);
         checkin(&sessions, 2, e2);
         assert!(sessions.lock().unwrap().get(&2).is_none());
+    }
+
+    /// LRU eviction picks the stalest idle session, skips checked-out
+    /// sessions and the requester, and reports when nothing is
+    /// evictable.
+    #[test]
+    fn lru_eviction_order_and_skips() {
+        let ctx = test_ctx();
+        assert!(!evict_lru_session(&ctx, None), "empty table: nothing to evict");
+        let old = Instant::now() - Duration::from_secs(60);
+        {
+            let mut map = ctx.sessions.lock().unwrap();
+            let mut stale = entry(1, 8);
+            stale.last_used = old;
+            map.insert(1, Some(stale));
+            map.insert(2, Some(entry(1, 8)));
+            map.insert(3, None); // checked out: never a victim
+        }
+        assert!(evict_lru_session(&ctx, None));
+        {
+            let map = ctx.sessions.lock().unwrap();
+            assert!(map.get(&1).is_none(), "stalest session must go first");
+            assert!(map.get(&2).is_some());
+            assert!(matches!(map.get(&3), Some(None)));
+        }
+        // the requester itself is skipped even when stalest
+        assert!(!evict_lru_session(&ctx, Some(2)), "only candidate is skipped");
+        assert!(evict_lru_session(&ctx, None));
+        assert_eq!(
+            ctx.metrics.sessions_evicted.load(std::sync::atomic::Ordering::Relaxed),
+            2
+        );
+        // only a checked-out slot left: nothing evictable
+        assert!(!evict_lru_session(&ctx, None));
+    }
+
+    /// The TTL sweep reclaims idle sessions (the leaked-handle fix),
+    /// frees their pages, and leaves fresh/checked-out sessions alone.
+    #[test]
+    fn ttl_sweep_reclaims_idle_sessions() {
+        let ctx = test_ctx();
+        let mut rng = Rng::new(7);
+        // a session with real pages, stale for a minute
+        let mut stale = SessionEntry {
+            cfg: AttnConfig::flash(true),
+            heads: 1,
+            d: 8,
+            cache: AttnCache::with_pool(1, 8, op::CachePolicy::Full, &ctx.pool).unwrap(),
+            last_used: Instant::now() - Duration::from_secs(60),
+        };
+        let buf = rng.normal_vec(8 * 4);
+        let view = QkvView::new(1, 4, 8, &buf, &buf, &buf).unwrap();
+        stale.cache.append_kv(&view).unwrap();
+        assert!(ctx.pool.stats().outstanding > 0);
+        {
+            let mut map = ctx.sessions.lock().unwrap();
+            map.insert(1, Some(stale));
+            map.insert(2, Some(entry(1, 8))); // fresh
+            map.insert(3, None); // checked out
+        }
+        sweep_idle(&ctx, Duration::from_secs(30));
+        {
+            let map = ctx.sessions.lock().unwrap();
+            assert!(map.get(&1).is_none(), "idle session must be reclaimed");
+            assert!(map.get(&2).is_some());
+            assert!(matches!(map.get(&3), Some(None)));
+        }
+        assert_eq!(
+            ctx.metrics.sessions_reclaimed.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+        // its pages went back to the pool
+        assert_eq!(ctx.pool.stats().outstanding, 0);
+        let g = cache_gauges(&ctx.sessions, &ctx.pool, &ctx.metrics);
+        assert_eq!(g.sessions_reclaimed, 1);
+        assert_eq!(g.per_session.len(), 2);
     }
 }

@@ -93,6 +93,13 @@ pub struct Metrics {
     pub sessions_closed: AtomicU64,
     /// decode steps served across all sessions
     pub decode_steps: AtomicU64,
+    /// sessions LRU-evicted to admit new work when the page pool ran dry
+    pub sessions_evicted: AtomicU64,
+    /// idle sessions reclaimed by the TTL sweep (leaked handles)
+    pub sessions_reclaimed: AtomicU64,
+    /// opens/decodes rejected because the page pool was exhausted and
+    /// nothing was evictable (explicit backpressure to the client)
+    pub admission_rejects: AtomicU64,
 }
 
 impl Metrics {
@@ -118,7 +125,8 @@ impl Metrics {
     pub fn report(&self) -> String {
         format!(
             "jobs: submitted={} completed={} failed={}\n\
-             sessions: opened={} closed={} decode_steps={}\n\
+             sessions: opened={} closed={} decode_steps={} \
+             evicted={} reclaimed={} admission_rejects={}\n\
              batches: {} (mean size {:.2})\n\
              backend: artifact={} substrate={}\n\
              queue  latency: mean {:.0}us p50 {}us p99 {}us max {}us\n\
@@ -131,6 +139,9 @@ impl Metrics {
             self.sessions_opened.load(Ordering::Relaxed),
             self.sessions_closed.load(Ordering::Relaxed),
             self.decode_steps.load(Ordering::Relaxed),
+            self.sessions_evicted.load(Ordering::Relaxed),
+            self.sessions_reclaimed.load(Ordering::Relaxed),
+            self.admission_rejects.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.artifact_jobs.load(Ordering::Relaxed),
@@ -155,9 +166,110 @@ impl Metrics {
     }
 }
 
+/// Point-in-time gauges of the paged KV-cache subsystem: the shared
+/// page pool plus the per-session residency the engine's session table
+/// reports.  Built by the engine
+/// ([`crate::coordinator::Server::cache_gauges`]) and surfaced in the
+/// `serve` status output next to [`Metrics::report`].
+#[derive(Clone, Debug, Default)]
+pub struct CacheGauges {
+    /// f32 elements per page frame
+    pub page_elems: usize,
+    /// global page budget (None = unbounded)
+    pub budget_pages: Option<usize>,
+    /// frames currently resident across all sessions
+    pub pages_in_use: usize,
+    /// recycled frames on the pool free list
+    pub pages_free: usize,
+    /// high-water mark of resident frames
+    pub peak_pages: usize,
+    /// pool counters: total allocations / free-list reuses / budget
+    /// rejections
+    pub pool_allocs: u64,
+    pub pool_reuses: u64,
+    pub pool_rejects: u64,
+    /// sessions LRU-evicted for admission, idle sessions reclaimed by
+    /// the TTL sweep, and opens/decodes bounced with backpressure
+    pub sessions_evicted: u64,
+    pub sessions_reclaimed: u64,
+    pub admission_rejects: u64,
+    /// per live session: (id, resident pages, logical rows; a
+    /// checked-out session reports zeros)
+    pub per_session: Vec<(u64, usize, usize)>,
+}
+
+impl CacheGauges {
+    /// Pool utilization in [0, 1] (0 when unbounded).
+    pub fn utilization(&self) -> f64 {
+        match self.budget_pages {
+            Some(b) if b > 0 => self.pages_in_use as f64 / b as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Human-readable one-page snapshot.
+    pub fn report(&self) -> String {
+        let budget = match self.budget_pages {
+            Some(b) => format!("{b}"),
+            None => "unbounded".into(),
+        };
+        let sessions: Vec<String> = self
+            .per_session
+            .iter()
+            .map(|(id, pages, rows)| format!("{id}:{pages}p/{rows}r"))
+            .collect();
+        format!(
+            "kv cache: pages in_use={} free={} peak={} budget={budget} \
+             util={:.0}% page_elems={}\n\
+             kv pool:  allocs={} reuses={} rejects={}\n\
+             kv admission: lru_evicted={} ttl_reclaimed={} rejects={}\n\
+             kv sessions: [{}]",
+            self.pages_in_use,
+            self.pages_free,
+            self.peak_pages,
+            self.utilization() * 100.0,
+            self.page_elems,
+            self.pool_allocs,
+            self.pool_reuses,
+            self.pool_rejects,
+            self.sessions_evicted,
+            self.sessions_reclaimed,
+            self.admission_rejects,
+            sessions.join(" "),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn cache_gauges_report_and_utilization() {
+        let g = CacheGauges {
+            page_elems: 1024,
+            budget_pages: Some(8),
+            pages_in_use: 6,
+            pages_free: 1,
+            peak_pages: 7,
+            pool_allocs: 10,
+            pool_reuses: 3,
+            pool_rejects: 2,
+            sessions_evicted: 1,
+            sessions_reclaimed: 4,
+            admission_rejects: 2,
+            per_session: vec![(1, 4, 200), (2, 2, 90)],
+        };
+        assert!((g.utilization() - 0.75).abs() < 1e-9);
+        let r = g.report();
+        assert!(r.contains("in_use=6"));
+        assert!(r.contains("budget=8"));
+        assert!(r.contains("1:4p/200r"));
+        assert!(r.contains("ttl_reclaimed=4"));
+        let unbounded = CacheGauges::default();
+        assert_eq!(unbounded.utilization(), 0.0);
+        assert!(unbounded.report().contains("budget=unbounded"));
+    }
 
     #[test]
     fn histogram_count_mean_max() {

@@ -1,5 +1,5 @@
 //! Layer-3 serving coordinator (vLLM-router-shaped), now with streaming
-//! prefill/decode sessions.
+//! prefill/decode sessions over a budgeted paged KV memory subsystem.
 //!
 //! ```text
 //! one-shot jobs ────> Router ──(bucket n, exact|hyper)──┐
@@ -13,7 +13,12 @@
 //!            │ PJRT runtime (AOT artifacts)           │ fixed shapes
 //!            │ Rust substrate (AttentionOp)           │ any shape
 //!            │   └─ session table: SessionId →        │
-//!            │      AttnCache (KV + decode sampling)  │
+//!            │      AttnCache (paged KV + sampling)   │
+//!            │         │ pages           ▲ admission: │
+//!            │         ▼                 │ LRU evict /│
+//!            │      PagePool ────────────┘ backpressure
+//!            │      (CacheConfig: budget, sliding-    │
+//!            │       window policy, idle-session TTL) │
 //!            └────────────────────────────────────────┘
 //! ```
 //!
@@ -33,10 +38,17 @@
 //!   the session table: prefill creates a per-session
 //!   [`crate::attention::op::AttnCache`]; decode steps check it out, run
 //!   one `decode_step`, and check it back in (per-session serial,
-//!   cross-session parallel).  Shutdown flushes queued work with
-//!   explicit error responses — no silently dropped oneshots.
+//!   cross-session parallel).  Every session draws pages from one
+//!   shared [`crate::linalg::PagePool`] ([`engine::CacheConfig`]): when
+//!   the pool is dry, opens/decodes LRU-evict idle sessions or bounce
+//!   with explicit backpressure; an optional TTL sweep reclaims
+//!   sessions whose clients leaked their handles.  Shutdown flushes
+//!   queued work with explicit error responses — no silently dropped
+//!   oneshots — and returns every session's pages to the pool.
 //! * [`metrics`] — latency histograms (including per-token decode
-//!   latency) and throughput counters.
+//!   latency), throughput counters, and the KV-cache gauges
+//!   ([`metrics::CacheGauges`]: resident/free/peak pages, utilization,
+//!   per-session residency, eviction/reclaim/reject counters).
 //! * [`server`] — wiring: submit → route → batch → execute → respond,
 //!   plus the session API ([`Server::open_session`], [`Server::decode`],
 //!   [`Server::close_session`]).
@@ -53,8 +65,13 @@ pub mod request;
 pub mod router;
 pub mod server;
 
+pub use engine::CacheConfig;
+pub use metrics::CacheGauges;
 pub use request::{
     AttnJob, AttnResponse, Backend, DecodeJob, DecodeResponse, ModePreference, SessionId,
 };
 pub use router::{Route, RouteKind, Router, RouterConfig};
 pub use server::{DecodeTicket, Server, ServerConfig, Ticket};
+
+/// Re-export of the op-layer eviction policy for serving callers.
+pub use crate::attention::op::CachePolicy;

@@ -24,10 +24,11 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::batcher::{BatchConfig, BatchQueue};
-use super::engine::{self, EngineMsg, Reply, Work, WorkItem};
-use super::metrics::Metrics;
+use super::engine::{self, CacheConfig, EngineMsg, Reply, Work, WorkItem};
+use super::metrics::{CacheGauges, Metrics};
 use super::request::{AttnJob, AttnResponse, DecodeJob, DecodeResponse, SessionId};
 use super::router::{Route, Router, RouterConfig};
+use crate::linalg::PagePool;
 use crate::runtime::Manifest;
 
 /// Full coordinator configuration.
@@ -35,6 +36,9 @@ use crate::runtime::Manifest;
 pub struct ServerConfig {
     pub router: RouterConfig,
     pub batch: BatchConfig,
+    /// KV-cache memory subsystem: shared page pool size/budget,
+    /// per-session eviction policy, idle-session TTL
+    pub cache: CacheConfig,
     /// directory with manifest.json + *.hlo.txt; None = substrate only
     pub artifacts_dir: Option<PathBuf>,
     /// bounded queue depths (submit channel & engine channel)
@@ -46,6 +50,7 @@ impl Default for ServerConfig {
         ServerConfig {
             router: RouterConfig::default(),
             batch: BatchConfig::default(),
+            cache: CacheConfig::default(),
             artifacts_dir: None,
             queue_depth: 256,
         }
@@ -122,6 +127,9 @@ pub struct Server {
     batcher_handle: Option<std::thread::JoinHandle<()>>,
     next_id: AtomicU64,
     next_session: AtomicU64,
+    /// introspection handles into the KV memory subsystem
+    pool: PagePool,
+    sessions: engine::SessionMap,
 }
 
 impl Server {
@@ -138,9 +146,10 @@ impl Server {
             .and_then(|d| Manifest::load(d.join("manifest.json")).ok());
         let router = Router::new(config.router.clone(), manifest.as_ref());
 
-        let (engine_tx, engine_handle) = engine::spawn(
+        let (engine_tx, engine_handle, pool, sessions) = engine::spawn(
             config.artifacts_dir.clone(),
             config.router.clone(),
+            config.cache,
             metrics.clone(),
             depth,
         );
@@ -228,6 +237,8 @@ impl Server {
             batcher_handle: Some(batcher_handle),
             next_id: AtomicU64::new(1),
             next_session: AtomicU64::new(1),
+            pool,
+            sessions,
         }
     }
 
@@ -300,6 +311,12 @@ impl Server {
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// Snapshot of the KV memory subsystem: page-pool counters,
+    /// utilization against the budget, and per-session residency.
+    pub fn cache_gauges(&self) -> CacheGauges {
+        engine::cache_gauges(&self.sessions, &self.pool, &self.metrics)
     }
 
     /// Graceful shutdown: drain queues, stop both threads.
@@ -518,6 +535,144 @@ mod tests {
             // resolved: Ok (ran before the flush) or the explicit error
             let _ = t.wait_timeout(Duration::from_secs(10));
         }
+    }
+
+    /// Multi-tenant page budget: opens beyond the pool LRU-evict idle
+    /// sessions; decode appends that outgrow the pool do the same; and
+    /// the evicted session's id is gone from the table.
+    #[test]
+    fn page_budget_admission_lru_eviction() {
+        let mut cfg = ServerConfig::substrate_only();
+        // mk_job shape is (h=2, d=16): 8 rows per page, so the n=24
+        // prompt needs exactly 3 pages; budget 6 fits two sessions
+        cfg.cache.page_elems = 3 * 2 * 16 * 8;
+        cfg.cache.budget_pages = Some(6);
+        let server = Server::start(cfg);
+        let open = |seed: i32| {
+            let (sid, t) = server
+                .open_session(mk_job(24, ModePreference::Exact, true, seed))
+                .unwrap();
+            t.wait().unwrap();
+            sid
+        };
+        let s1 = open(1);
+        let s2 = open(2);
+        assert_eq!(server.cache_gauges().pages_in_use, 6);
+        // third session: pool dry -> the LRU session (s1) is evicted
+        let s3 = open(3);
+        let m = server.metrics();
+        assert!(m.sessions_evicted.load(Ordering::Relaxed) >= 1);
+        let dj = |sid| {
+            let mut rng = Rng::new(9 + sid);
+            DecodeJob {
+                session: sid,
+                heads: 2,
+                d: 16,
+                pos: None,
+                q: rng.normal_vec(32),
+                k: rng.normal_vec(32),
+                v: rng.normal_vec(32),
+            }
+        };
+        assert!(server.decode_wait(dj(s1)).is_err(), "evicted session is gone");
+        // s3's 25th row needs a 4th page: evicts the idle s2 and succeeds
+        let resp = server.decode_wait(dj(s3)).unwrap();
+        assert_eq!(resp.pos, 24);
+        assert!(server.decode_wait(dj(s2)).is_err(), "s2 evicted by s3's decode");
+        let g = server.cache_gauges();
+        assert_eq!(g.budget_pages, Some(6));
+        assert!(g.pages_in_use <= 6);
+        assert!(g.utilization() <= 1.0);
+        server.shutdown();
+    }
+
+    /// An open that could never fit the pool — even with every other
+    /// session evicted — is rejected up front and evicts nobody.
+    #[test]
+    fn infeasible_open_rejected_without_collateral_eviction() {
+        let mut cfg = ServerConfig::substrate_only();
+        cfg.cache.page_elems = 3 * 2 * 16 * 8; // 8 rows/page at (h=2, d=16)
+        cfg.cache.budget_pages = Some(6);
+        let server = Server::start(cfg);
+        let (s1, t1) = server
+            .open_session(mk_job(24, ModePreference::Exact, true, 1))
+            .unwrap();
+        t1.wait().unwrap();
+        // 64 rows need 8 pages > the whole 6-page budget
+        let (_, t2) = server
+            .open_session(mk_job(64, ModePreference::Exact, true, 2))
+            .unwrap();
+        let err = t2.wait().unwrap_err();
+        assert!(err.contains("admission rejected"), "{err}");
+        let m = server.metrics();
+        assert_eq!(m.sessions_evicted.load(Ordering::Relaxed), 0, "no collateral eviction");
+        assert!(m.admission_rejects.load(Ordering::Relaxed) >= 1);
+        // the existing session is untouched and still decodable
+        let mut rng = Rng::new(3);
+        let dj = DecodeJob {
+            session: s1,
+            heads: 2,
+            d: 16,
+            pos: None,
+            q: rng.normal_vec(32),
+            k: rng.normal_vec(32),
+            v: rng.normal_vec(32),
+        };
+        assert!(server.decode_wait(dj).is_ok());
+        server.shutdown();
+    }
+
+    /// With nothing evictable, pool exhaustion is explicit backpressure
+    /// on open, not a hang or a panic.
+    #[test]
+    fn page_budget_backpressure_when_nothing_evictable() {
+        let mut cfg = ServerConfig::substrate_only();
+        cfg.cache.page_elems = 3 * 2 * 16 * 8;
+        cfg.cache.budget_pages = Some(2); // below one session's 3 pages
+        let server = Server::start(cfg);
+        let (_, ticket) = server
+            .open_session(mk_job(24, ModePreference::Exact, true, 1))
+            .unwrap();
+        let err = ticket.wait().unwrap_err();
+        assert!(err.contains("admission rejected"), "{err}");
+        let m = server.metrics();
+        assert!(m.admission_rejects.load(Ordering::Relaxed) >= 1);
+        assert_eq!(server.cache_gauges().pages_in_use, 0, "failed open leaks nothing");
+        server.shutdown();
+    }
+
+    /// The idle-session TTL sweep reclaims a session whose client
+    /// dropped its handle without close_session.
+    #[test]
+    fn idle_session_ttl_sweep_reclaims() {
+        let mut cfg = ServerConfig::substrate_only();
+        cfg.cache.idle_ttl = Some(Duration::from_millis(50));
+        let server = Server::start(cfg);
+        let (sid, ticket) = server
+            .open_session(mk_job(16, ModePreference::Exact, true, 1))
+            .unwrap();
+        ticket.wait().unwrap();
+        assert_eq!(server.cache_gauges().per_session.len(), 1);
+        // client "leaks" the session: no decode, no close
+        std::thread::sleep(Duration::from_millis(400));
+        let m = server.metrics();
+        assert!(
+            m.sessions_reclaimed.load(Ordering::Relaxed) >= 1,
+            "sweep must have reclaimed the idle session"
+        );
+        assert_eq!(server.cache_gauges().per_session.len(), 0);
+        assert_eq!(server.cache_gauges().pages_in_use, 0);
+        let dj = DecodeJob {
+            session: sid,
+            heads: 2,
+            d: 16,
+            pos: None,
+            q: vec![0.0; 32],
+            k: vec![0.0; 32],
+            v: vec![0.0; 32],
+        };
+        assert!(server.decode_wait(dj).is_err(), "reclaimed session is gone");
+        server.shutdown();
     }
 
     #[test]

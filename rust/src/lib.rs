@@ -52,29 +52,56 @@
 //! let out = attn.infer(x);             // forward-only (serving): no capture
 //!
 //! // incremental serving: prefill the prompt once, then decode token
-//! // by token against the growing KV cache — per-token cost is
-//! // Θ(len·d) exact, or Θ((b+m)·d) sampled past the decode threshold
+//! // by token against the paged KV cache — per-token cost is
+//! // Θ(resident·d) exact, or Θ((b+m)·d) sampled past the decode
+//! // threshold
 //! let mut cache = AttnCache::new(heads, d);
 //! let prompt_out = attn.prefill(&mut cache, x).unwrap();
 //! let (q1, k1, v1) =
 //!     (vec![0.0f32; heads * d], vec![0.0f32; heads * d], vec![0.0f32; heads * d]);
 //! let x1 = QkvView::new(heads, 1, d, &q1, &k1, &v1).unwrap();
 //! let tok = attn.decode_step(&mut cache, x1).unwrap(); // [heads, d] at tok.pos
+//!
+//! // bounded serving memory: pages come from a budgeted shared pool
+//! // and a sliding window (attention-sink rows pinned) evicts whole
+//! // pages — peak residency ≈ window/rows_per_page + sink pages, no
+//! // matter how long the stream runs.  window ≥ prefix ⇒ bitwise
+//! // identical to the full cache.
+//! use hyperattention::attention::op::CachePolicy;
+//! use hyperattention::linalg::PagePool;
+//! let pool = PagePool::new(3 * heads * d * 64, Some(1024)); // 1024-page budget
+//! let mut bounded = AttnCache::with_pool(
+//!     heads,
+//!     d,
+//!     CachePolicy::SlidingWindow { window: 4096, sink: 64 },
+//!     &pool,
+//! )
+//! .unwrap();
+//! let _ = attn.prefill(&mut bounded, x).unwrap();
 //! ```
 //!
 //! `Backend::Auto` applies the documented routing table in
 //! [`attention::op::AutoPolicy`] (length threshold, causal dispatch,
 //! prime-length degradation to exact streaming, and the decode rows:
 //! exact one-row decode below `decode_hyper_threshold`, sampled decode
-//! with an appendable LSH/residual state — resampled only past
-//! `decode_resample_interval` — above it).  The forward session
-//! ([`attention::op::AttnOutput`]) carries every head's sampling plan
-//! and saved softmax statistics, so `backward` replays the identical
-//! estimator without recomputation.  The serving coordinator exposes
-//! the same split as streaming sessions
+//! with an appendable LSH/residual state — resampled past
+//! `decode_resample_interval` or after any page eviction — above it).
+//! The forward session ([`attention::op::AttnOutput`]) carries every
+//! head's sampling plan and saved softmax statistics, so `backward`
+//! replays the identical estimator without recomputation.
+//!
+//! Cache storage is **paged** ([`linalg::PagePool`] +
+//! [`linalg::KvCache`]): fixed-size head-major page frames with
+//! free-list recycling, an optional global page budget, and an
+//! [`attention::op::CachePolicy`] per session (full retention, or a
+//! sliding window with pinned attention-sink rows).  The serving
+//! coordinator exposes the same split as streaming sessions
 //! ([`coordinator::Server::open_session`] /
-//! [`coordinator::Server::decode`]), and [`model::generate`] drives it
-//! autoregressively with per-layer caches.  (The historical
+//! [`coordinator::Server::decode`]) drawing pages from one shared pool
+//! — admission control LRU-evicts idle sessions or applies explicit
+//! backpressure when the pool is dry ([`coordinator::CacheConfig`]),
+//! and [`model::generate`] drives it autoregressively with per-layer
+//! caches ([`model::GenCache::with_policy`]).  (The historical
 //! per-algorithm free functions were removed; the view-based cores
 //! behind `AttentionOp` are the only implementation surface.)
 //!

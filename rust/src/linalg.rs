@@ -13,9 +13,18 @@
 //! slicing copy ever happens between the serving layer and the kernels.
 //!
 //! [`KvCache`] is the storage half of incremental (prefill + decode)
-//! attention: a growable head-major key/value cache whose filled prefix
-//! is served as zero-copy [`MatRef`] windows, plus a pre-scaled packed
-//! K mirror shared by prefill chunks, decode steps, and query tiles.
+//! attention: a **paged** head-major key/value cache.  Storage comes in
+//! fixed-size [`PageFrame`]s checked out of a shared [`PagePool`]
+//! (free-list recycling, optional global page budget), a block table
+//! maps logical pages to frames, and an optional sliding-window policy
+//! evicts whole middle pages (attention-sink pages stay pinned).  The
+//! resident rows are served as zero-copy per-page [`MatRef`] segments
+//! ([`KvCache::head_segments`]) that the streaming-softmax algebra
+//! ([`crate::attention::Parts::merge`]) recombines exactly; the
+//! pre-scaled packed-K mirror lives in the same pages.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
 
 use crate::kernel;
 use crate::par;
@@ -271,61 +280,303 @@ impl<'a> QkvView<'a> {
     }
 }
 
-/// Growable per-head key/value cache for incremental (prefill + decode)
+/// Error marker for a [`PagePool`] at its budget: every exhaustion
+/// error contains this substring, so callers (the coordinator's
+/// admission control) can distinguish backpressure from hard failures.
+pub const POOL_EXHAUSTED: &str = "kv page pool exhausted";
+
+/// Default rows per page used by the convenience constructors
+/// ([`KvCache::new`] and the op-layer cache builders) when no shared
+/// pool is supplied.
+pub const DEFAULT_PAGE_ROWS: usize = 64;
+
+/// One fixed-size storage page checked out of a [`PagePool`].  The id
+/// is assigned at first allocation and survives free-list recycling, so
+/// reuse is observable.
+pub struct PageFrame {
+    id: u64,
+    data: Box<[f32]>,
+}
+
+impl PageFrame {
+    #[inline]
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+impl std::fmt::Debug for PageFrame {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PageFrame(id={}, elems={})", self.id, self.data.len())
+    }
+}
+
+/// Point-in-time counters of a [`PagePool`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// f32 elements per frame
+    pub page_elems: usize,
+    /// max outstanding frames (None = unbounded)
+    pub budget: Option<usize>,
+    /// frames currently checked out
+    pub outstanding: usize,
+    /// recycled frames waiting on the free list
+    pub free: usize,
+    /// high-water mark of `outstanding`
+    pub peak: usize,
+    /// total successful allocations (fresh + reused)
+    pub allocs: u64,
+    /// total frames returned
+    pub frees: u64,
+    /// allocations served from the free list
+    pub reuses: u64,
+    /// allocations rejected at the budget
+    pub rejects: u64,
+}
+
+struct PoolInner {
+    page_elems: usize,
+    budget: Option<usize>,
+    free: Vec<PageFrame>,
+    next_id: u64,
+    outstanding: usize,
+    peak: usize,
+    allocs: u64,
+    frees: u64,
+    reuses: u64,
+    rejects: u64,
+}
+
+/// Shared fixed-size page allocator: the memory-budget substrate under
+/// every [`KvCache`].  Frames are uniform (`page_elems` f32s), so a
+/// frame freed by one session is reusable by any other regardless of
+/// its `[heads, d]` shape; an optional budget caps the total
+/// outstanding frames — [`PagePool::try_alloc`] past it returns an
+/// explicit [`POOL_EXHAUSTED`] error, which is the backpressure signal
+/// the serving layer turns into admission control.  Cheap to clone
+/// (`Arc` handle); all methods are thread-safe.
+#[derive(Clone)]
+pub struct PagePool {
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+impl std::fmt::Debug for PagePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PagePool({:?})", self.stats())
+    }
+}
+
+impl PagePool {
+    pub fn new(page_elems: usize, budget: Option<usize>) -> Self {
+        assert!(page_elems > 0, "zero-sized page");
+        PagePool {
+            inner: Arc::new(Mutex::new(PoolInner {
+                page_elems,
+                budget,
+                free: Vec::new(),
+                next_id: 0,
+                outstanding: 0,
+                peak: 0,
+                allocs: 0,
+                frees: 0,
+                reuses: 0,
+                rejects: 0,
+            })),
+        }
+    }
+
+    pub fn unbounded(page_elems: usize) -> Self {
+        Self::new(page_elems, None)
+    }
+
+    pub fn page_elems(&self) -> usize {
+        self.inner.lock().unwrap().page_elems
+    }
+
+    /// Check one frame out (free list first, then a fresh allocation).
+    /// At the budget this fails with a [`POOL_EXHAUSTED`] error and
+    /// counts a rejection.
+    pub fn try_alloc(&self) -> Result<PageFrame, String> {
+        let mut p = self.inner.lock().unwrap();
+        if let Some(b) = p.budget {
+            if p.outstanding >= b {
+                p.rejects += 1;
+                return Err(format!("{POOL_EXHAUSTED} (budget {b} pages)"));
+            }
+        }
+        let frame = match p.free.pop() {
+            Some(f) => {
+                p.reuses += 1;
+                f
+            }
+            None => {
+                let id = p.next_id;
+                p.next_id += 1;
+                PageFrame { id, data: vec![0.0f32; p.page_elems].into_boxed_slice() }
+            }
+        };
+        p.allocs += 1;
+        p.outstanding += 1;
+        p.peak = p.peak.max(p.outstanding);
+        Ok(frame)
+    }
+
+    /// Return a frame to the free list.
+    pub fn free(&self, frame: PageFrame) {
+        let mut p = self.inner.lock().unwrap();
+        debug_assert_eq!(frame.data.len(), p.page_elems, "frame from another pool");
+        p.outstanding = p.outstanding.saturating_sub(1);
+        p.frees += 1;
+        p.free.push(frame);
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let p = self.inner.lock().unwrap();
+        PoolStats {
+            page_elems: p.page_elems,
+            budget: p.budget,
+            outstanding: p.outstanding,
+            free: p.free.len(),
+            peak: p.peak,
+            allocs: p.allocs,
+            frees: p.frees,
+            reuses: p.reuses,
+            rejects: p.rejects,
+        }
+    }
+}
+
+/// One contiguous resident span of a head's cache — a zero-copy window
+/// into a single page.  `start` is the row's position among the head's
+/// resident rows (the coordinate system the decode samplers index);
+/// `abs_start` is its absolute sequence position (the coordinate causal
+/// masking uses — under eviction the two diverge).
+#[derive(Clone, Copy, Debug)]
+pub struct KvSegment<'a> {
+    pub start: usize,
+    pub abs_start: usize,
+    pub k: MatRef<'a>,
+    pub v: MatRef<'a>,
+    pub ks: MatRef<'a>,
+}
+
+/// Paged per-head key/value cache for incremental (prefill + decode)
 /// attention: the storage half of the serving KV cache.
 ///
-/// Layout is head-major `[heads, cap, d]` so every head's filled prefix
-/// is one contiguous window — [`KvCache::head_k`] / [`KvCache::head_v`]
-/// hand out zero-copy [`MatRef`] views straight into the buffers, the
-/// same shape contract the attention cores consume.  Appends grow the
-/// capacity geometrically (amortized O(1) per appended row).
+/// Rows live in fixed-size head-major [`PageFrame`]s from a
+/// [`PagePool`]: each frame holds `rows_per_page` rows of all heads for
+/// the K, V, and pre-scaled-K planes (`[plane, heads, rows, d]`), so one
+/// frame is the unit of allocation, accounting, and eviction.  A block
+/// table (pinned sink frames + a deque of tail frames) maps logical
+/// pages to frames.
 ///
-/// The cache also maintains an optional **pre-scaled K mirror**
-/// ([`KvCache::sync_scaled`] / [`KvCache::head_k_scaled`]): the softmax
-/// scale is folded into the cache-side panel once per appended row, so
-/// prefill chunks, decode steps, and every query tile stream one shared
-/// packed panel instead of re-scaling a Q copy per call (the ROADMAP
-/// "packed-panel B reuse" follow-up).  Rows are contiguous at stride
-/// `d`, which for the typical d (a multiple of the SIMD width) is
-/// exactly the layout the `gemm_nt` microkernel streams with no
-/// remainder lanes.
-#[derive(Clone, Debug)]
+/// Under a sliding-window policy (`window` most-recent rows retained,
+/// first `sink` rows pinned — rounded up to whole pages), a frame is
+/// freed back to the pool as soon as every row in it has fallen out of
+/// the window, which bounds resident memory at roughly
+/// `window/rows_per_page + sink` pages no matter how long the sequence
+/// runs.  [`KvCache::len`] keeps counting absolute (logical) rows;
+/// [`KvCache::resident_len`] is what attention can actually see.  Every
+/// eviction bumps [`KvCache::epoch`], the invalidation signal for any
+/// state holding resident-row indices (the op-layer decode samplers).
+///
+/// Views are per-page [`KvSegment`]s ([`KvCache::head_segments`]) —
+/// within a page a head's rows are one contiguous `MatRef`, exactly the
+/// contract the streaming kernels consume, and the per-segment partial
+/// softmaxes recombine exactly through
+/// [`crate::attention::Parts::merge`].  The **pre-scaled K mirror**
+/// ([`KvCache::sync_scaled`]) lives in the third plane of the same
+/// pages: the softmax scale is folded into the cache side once per
+/// appended row, so prefill chunks, decode steps, and every query tile
+/// stream one shared packed panel (the ROADMAP "packed-panel B reuse"
+/// follow-up).
+#[derive(Debug)]
 pub struct KvCache {
     heads: usize,
     d: usize,
-    /// filled rows per head
+    pool: PagePool,
+    /// rows per page for this cache's `[heads, d]` shape
+    rows_page: usize,
+    /// absolute rows appended over the lifetime (never decreases)
     len: usize,
-    /// allocated rows per head
-    cap: usize,
-    /// `[heads, cap, d]` keys
-    k: Vec<f32>,
-    /// `[heads, cap, d]` values
-    v: Vec<f32>,
-    /// pre-scaled K mirror (same layout), valid for the first
-    /// `scaled_len` rows of each head under scale `scale`
-    ks: Vec<f32>,
-    scaled_len: usize,
-    scale: f32,
+    /// sliding-window policy: (window rows, sink rows); None = keep all
+    window: Option<(usize, usize)>,
+    /// frames pinned forever: ceil(sink / rows_page) under a window
+    sink_pages: usize,
+    /// block table, pinned half: absolute pages [0, sink_pages)
+    sink_frames: Vec<PageFrame>,
+    /// absolute page index of `tail_frames[0]`
+    tail_base: usize,
+    /// block table, evictable half (front = oldest)
+    tail_frames: VecDeque<PageFrame>,
+    /// frames pre-allocated by [`KvCache::reserve`], consumed before the
+    /// pool is hit again
+    spare: Vec<PageFrame>,
+    /// absolute rows whose scaled mirror is synced under `scale`
+    scaled_abs: usize,
+    scale: Option<f32>,
+    /// bumped on every eviction and clear — resident-row indices held
+    /// outside the cache are invalid once this changes
+    epoch: u64,
+    /// high-water mark of resident frames
+    peak_pages: usize,
 }
 
 impl KvCache {
+    /// Unbounded cache with a private pool ([`DEFAULT_PAGE_ROWS`] rows
+    /// per page), no eviction — the drop-in default for single-session
+    /// callers.
     pub fn new(heads: usize, d: usize) -> Self {
-        Self::with_capacity(heads, d, 0)
+        assert!(heads > 0 && d > 0, "zero-sized cache dimension");
+        let pool = PagePool::unbounded(3 * heads * d * DEFAULT_PAGE_ROWS);
+        Self::with_pool(heads, d, pool, None).expect("private unbounded pool fits the shape")
     }
 
-    pub fn with_capacity(heads: usize, d: usize, cap: usize) -> Self {
-        assert!(heads > 0 && d > 0, "zero-sized cache dimension");
-        KvCache {
+    /// Cache backed by a shared pool, with an optional sliding-window
+    /// policy `(window_rows, sink_rows)`.  Fails if a single row of all
+    /// heads does not fit one page, or if `window_rows == 0`.
+    pub fn with_pool(
+        heads: usize,
+        d: usize,
+        pool: PagePool,
+        window: Option<(usize, usize)>,
+    ) -> Result<Self, String> {
+        if heads == 0 || d == 0 {
+            return Err("zero-sized cache dimension".into());
+        }
+        let rows_page = pool.page_elems() / (3 * heads * d);
+        if rows_page == 0 {
+            return Err(format!(
+                "page_elems {} too small for one K/V/KS row of [heads={heads}, d={d}]",
+                pool.page_elems()
+            ));
+        }
+        let sink_pages = match window {
+            Some((w, s)) => {
+                if w == 0 {
+                    return Err("sliding window must retain at least 1 row".into());
+                }
+                s.div_ceil(rows_page)
+            }
+            None => 0,
+        };
+        Ok(KvCache {
             heads,
             d,
+            pool,
+            rows_page,
             len: 0,
-            cap,
-            k: vec![0.0; heads * cap * d],
-            v: vec![0.0; heads * cap * d],
-            ks: Vec::new(),
-            scaled_len: 0,
-            scale: 1.0,
-        }
+            window,
+            sink_pages,
+            sink_frames: Vec::new(),
+            tail_base: sink_pages,
+            tail_frames: VecDeque::new(),
+            spare: Vec::new(),
+            scaled_abs: 0,
+            scale: None,
+            epoch: 0,
+            peak_pages: 0,
+        })
     }
 
     #[inline]
@@ -338,7 +589,8 @@ impl KvCache {
         self.d
     }
 
-    /// Filled rows per head (the sequence length so far).
+    /// Absolute rows appended so far (the logical sequence length —
+    /// monotone even under eviction).
     #[inline]
     pub fn len(&self) -> usize {
         self.len
@@ -349,40 +601,89 @@ impl KvCache {
         self.len == 0
     }
 
+    /// Rows per page for this cache's shape.
     #[inline]
-    pub fn capacity(&self) -> usize {
-        self.cap
+    pub fn rows_per_page(&self) -> usize {
+        self.rows_page
     }
 
-    /// Ensure room for `additional` more rows per head.  Reallocates
-    /// head-major (each head's filled prefix is copied to its new
-    /// window); the scaled mirror follows the same layout.
-    pub fn reserve(&mut self, additional: usize) {
-        let want = self.len + additional;
-        if want <= self.cap {
-            return;
+    /// The sliding-window policy, if any.
+    #[inline]
+    pub fn window(&self) -> Option<(usize, usize)> {
+        self.window
+    }
+
+    /// Eviction epoch (see the type docs).
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The backing pool handle.
+    pub fn pool(&self) -> &PagePool {
+        &self.pool
+    }
+
+    /// Rows attention can currently see: the pinned sink prefix plus the
+    /// retained tail window (equals [`KvCache::len`] until something is
+    /// evicted).
+    pub fn resident_len(&self) -> usize {
+        self.sink_resident_rows() + self.len.saturating_sub(self.tail_base * self.rows_page)
+    }
+
+    /// Rows dropped by the sliding window so far.
+    pub fn evicted_rows(&self) -> usize {
+        self.len - self.resident_len()
+    }
+
+    /// Frames currently held (sink + tail; spare frames from `reserve`
+    /// are not resident).
+    pub fn resident_pages(&self) -> usize {
+        self.sink_frames.len() + self.tail_frames.len()
+    }
+
+    /// High-water mark of [`KvCache::resident_pages`] — the number the
+    /// windowed-decode page-budget guarantee is stated against.
+    pub fn peak_resident_pages(&self) -> usize {
+        self.peak_pages
+    }
+
+    #[inline]
+    fn sink_resident_rows(&self) -> usize {
+        (self.sink_pages * self.rows_page).min(self.len)
+    }
+
+    /// Pre-allocate the frames `additional` more rows will need, so the
+    /// following appends cannot fail at the pool.  Spare frames count
+    /// against the pool budget immediately and are freed by
+    /// [`KvCache::clear`]/drop if never used.
+    pub fn reserve(&mut self, additional: usize) -> Result<(), String> {
+        if additional == 0 {
+            return Ok(());
         }
-        let new_cap = want.max(self.cap * 2).max(64);
-        let (heads, d, old_cap) = (self.heads, self.d, self.cap);
-        let grow = |buf: &mut Vec<f32>, rows: usize| {
-            let mut nb = vec![0.0f32; heads * new_cap * d];
-            for h in 0..heads {
-                let src = h * old_cap * d;
-                let dst = h * new_cap * d;
-                nb[dst..dst + rows * d].copy_from_slice(&buf[src..src + rows * d]);
-            }
-            *buf = nb;
-        };
-        grow(&mut self.k, self.len);
-        grow(&mut self.v, self.len);
-        if !self.ks.is_empty() {
-            grow(&mut self.ks, self.scaled_len);
+        let rp = self.rows_page;
+        let first_new = self.len.div_ceil(rp);
+        let need = (self.len + additional)
+            .div_ceil(rp)
+            .saturating_sub(first_new)
+            .saturating_sub(self.spare.len());
+        for _ in 0..need {
+            let f = self.pool.try_alloc()?;
+            self.spare.push(f);
         }
-        self.cap = new_cap;
+        Ok(())
     }
 
     /// Append the K/V rows of `x` (its Q side is ignored): each head
-    /// gains `x.n` rows.  Shapes must match the cache.
+    /// gains `x.n` rows; the sliding window (if any) evicts pages that
+    /// fall fully out of it — pages this append itself pushes out are
+    /// freed *before* new frames are acquired, so a sliding session
+    /// recycles its own pages instead of pressuring the shared pool.
+    /// Atomic for the appended rows: every needed frame is acquired up
+    /// front (spares first, then the pool), so on a [`POOL_EXHAUSTED`]
+    /// failure no new rows appear (the pre-eviction pass may already
+    /// have trimmed pages that this append would have expired anyway;
+    /// retrying the same append converges to the same final state).
     pub fn append(&mut self, x: &QkvView<'_>) -> Result<(), String> {
         if x.heads != self.heads || x.d != self.d {
             return Err(format!(
@@ -390,75 +691,293 @@ impl KvCache {
                 self.heads, self.d, x.heads, x.d
             ));
         }
-        self.reserve(x.n);
+        let rp = self.rows_page;
         let d = self.d;
-        for h in 0..self.heads {
-            let src = h * x.head_stride;
-            let dst = h * self.cap * d + self.len * d;
-            self.k[dst..dst + x.n * d].copy_from_slice(&x.k[src..src + x.n * d]);
-            self.v[dst..dst + x.n * d].copy_from_slice(&x.v[src..src + x.n * d]);
+        let heads = self.heads;
+        let hs = rp * d;
+        let new_len = self.len + x.n;
+
+        // Evict first what this append will push out of the window
+        // anyway, so the new frames can reuse those pages instead of
+        // pressuring the pool (a windowed session at a full shared pool
+        // must not fail — or force an LRU eviction — over a page its
+        // own slide was about to free).  A partially-filled tail page
+        // about to receive new rows is always the *last* tail frame, so
+        // the eviction loop's keep-one guard already protects it.
+        self.evict_to(new_len);
+        debug_assert!(
+            self.len % rp == 0 || self.len / rp >= self.tail_base,
+            "pre-eviction freed the partial tail page new rows write into"
+        );
+
+        // acquire every frame the new rows need before writing anything
+        let first_new = self.len.div_ceil(rp);
+        let need = new_len.div_ceil(rp).saturating_sub(first_new);
+        let mut fresh: Vec<PageFrame> = Vec::with_capacity(need);
+        for _ in 0..need {
+            if let Some(f) = self.spare.pop() {
+                fresh.push(f);
+                continue;
+            }
+            match self.pool.try_alloc() {
+                Ok(f) => fresh.push(f),
+                Err(e) => {
+                    // undo: acquired frames stay charged but reusable
+                    self.spare.extend(fresh);
+                    return Err(e);
+                }
+            }
         }
-        self.len += x.n;
+        for (i, f) in fresh.into_iter().enumerate() {
+            let p = first_new + i;
+            if p < self.sink_pages {
+                debug_assert_eq!(p, self.sink_frames.len());
+                self.sink_frames.push(f);
+            } else {
+                if self.tail_frames.is_empty() {
+                    self.tail_base = p;
+                }
+                debug_assert_eq!(p, self.tail_base + self.tail_frames.len());
+                self.tail_frames.push_back(f);
+            }
+        }
+
+        // bulk-copy per (page, head): consecutive slots of one head are
+        // contiguous in the frame, so each span is one memcpy
+        let (sink_pages, tail_base, base_len) = (self.sink_pages, self.tail_base, self.len);
+        let mut i = 0usize;
+        while i < x.n {
+            let a = base_len + i;
+            let (p, slot) = (a / rp, a % rp);
+            let take = (rp - slot).min(x.n - i);
+            let fr = if p < sink_pages {
+                &mut self.sink_frames[p]
+            } else {
+                &mut self.tail_frames[p - tail_base]
+            };
+            for h in 0..heads {
+                let src = h * x.head_stride + i * d;
+                let kdst = h * hs + slot * d;
+                let vdst = heads * hs + kdst;
+                let span = take * d;
+                fr.data[kdst..kdst + span].copy_from_slice(&x.k[src..src + span]);
+                fr.data[vdst..vdst + span].copy_from_slice(&x.v[src..src + span]);
+            }
+            i += take;
+        }
+        self.len = new_len;
+        self.evict();
+        self.peak_pages = self.peak_pages.max(self.resident_pages());
         Ok(())
     }
 
-    /// Bring the pre-scaled K mirror up to date for `scale`: scales only
-    /// the rows appended since the last sync (full rebuild if the scale
-    /// changed).  Callers then read [`KvCache::head_k_scaled`].
-    pub fn sync_scaled(&mut self, scale: f32) {
-        if self.ks.len() != self.k.len() || self.scale != scale {
-            self.ks = vec![0.0; self.k.len()];
-            self.scaled_len = 0;
-            self.scale = scale;
+    /// Free tail pages that fell fully out of the sliding window.
+    fn evict(&mut self) {
+        self.evict_to(self.len);
+    }
+
+    /// Eviction core: free tail pages whose rows all precede the window
+    /// of a (possibly future) length `target_len`.  The newest tail
+    /// frame is never popped, which also protects a partially-filled
+    /// page the pre-append pass is about to extend (it is by
+    /// construction the last frame).
+    fn evict_to(&mut self, target_len: usize) {
+        let Some((w, _)) = self.window else { return };
+        let rp = self.rows_page;
+        let keep_from = target_len.saturating_sub(w);
+        let mut any = false;
+        while self.tail_frames.len() > 1 && (self.tail_base + 1) * rp <= keep_from {
+            let f = self.tail_frames.pop_front().expect("len > 1");
+            self.pool.free(f);
+            self.tail_base += 1;
+            any = true;
         }
-        if self.scaled_len == self.len {
+        if any {
+            self.epoch += 1;
+        }
+    }
+
+    /// Bring the pre-scaled K mirror up to date for `scale`: scales only
+    /// the resident rows appended since the last sync (full resident
+    /// rebuild if the scale changed).  Callers then read the `ks` plane
+    /// of [`KvCache::head_segments`] / [`KvCache::key_row_scaled`].
+    pub fn sync_scaled(&mut self, scale: f32) {
+        if self.scale != Some(scale) {
+            self.scale = Some(scale);
+            self.scaled_abs = 0;
+        }
+        if self.scaled_abs == self.len {
             return;
         }
-        let d = self.d;
-        for h in 0..self.heads {
-            let lo = h * self.cap * d + self.scaled_len * d;
-            let hi = h * self.cap * d + self.len * d;
-            self.ks[lo..hi].copy_from_slice(&self.k[lo..hi]);
-            kernel::scale(&mut self.ks[lo..hi], scale);
+        let (rp, d, heads) = (self.rows_page, self.d, self.heads);
+        let (len, from) = (self.len, self.scaled_abs);
+        let hs = rp * d;
+        for (p, fr) in self.frames_mut() {
+            let f_lo = p * rp;
+            let f_hi = ((p + 1) * rp).min(len);
+            let lo = f_lo.max(from);
+            if lo >= f_hi {
+                continue;
+            }
+            let (r0, r1) = ((lo - f_lo) * d, (f_hi - f_lo) * d);
+            for h in 0..heads {
+                let ksrc = h * hs;
+                let kdst = 2 * heads * hs + h * hs;
+                fr.data.copy_within(ksrc + r0..ksrc + r1, kdst + r0);
+                kernel::scale(&mut fr.data[kdst + r0..kdst + r1], scale);
+            }
         }
-        self.scaled_len = self.len;
+        self.scaled_abs = self.len;
     }
 
-    /// Zero-copy view of one head's filled keys.
-    #[inline]
-    pub fn head_k(&self, h: usize) -> MatRef<'_> {
-        assert!(h < self.heads, "head {h} out of {}", self.heads);
-        let lo = h * self.cap * self.d;
-        MatRef { rows: self.len, cols: self.d, data: &self.k[lo..lo + self.len * self.d] }
+    /// All resident frames with their absolute page indices, in
+    /// resident order (sink pages, then tail pages) — the one place the
+    /// block-table shape is spelled out for iteration.
+    fn frames(&self) -> impl Iterator<Item = (usize, &PageFrame)> + '_ {
+        let tb = self.tail_base;
+        self.sink_frames
+            .iter()
+            .enumerate()
+            .chain(self.tail_frames.iter().enumerate().map(move |(i, f)| (tb + i, f)))
     }
 
-    /// Zero-copy view of one head's filled values.
-    #[inline]
-    pub fn head_v(&self, h: usize) -> MatRef<'_> {
-        assert!(h < self.heads, "head {h} out of {}", self.heads);
-        let lo = h * self.cap * self.d;
-        MatRef { rows: self.len, cols: self.d, data: &self.v[lo..lo + self.len * self.d] }
+    /// Mutable variant of [`KvCache::frames`].
+    fn frames_mut(&mut self) -> impl Iterator<Item = (usize, &mut PageFrame)> + '_ {
+        let tb = self.tail_base;
+        self.sink_frames
+            .iter_mut()
+            .enumerate()
+            .chain(self.tail_frames.iter_mut().enumerate().map(move |(i, f)| (tb + i, f)))
     }
 
-    /// Zero-copy view of one head's pre-scaled keys.  Panics if
-    /// [`KvCache::sync_scaled`] has not covered the filled prefix.
+    /// Map a resident-row coordinate to (absolute page, slot in page).
     #[inline]
-    pub fn head_k_scaled(&self, h: usize) -> MatRef<'_> {
+    fn locate(&self, r: usize) -> (usize, usize) {
+        let rp = self.rows_page;
+        let sink_res = self.sink_resident_rows();
+        let a = if r < sink_res { r } else { self.tail_base * rp + (r - sink_res) };
+        (a / rp, a % rp)
+    }
+
+    #[inline]
+    fn frame(&self, p: usize) -> &PageFrame {
+        if p < self.sink_pages {
+            &self.sink_frames[p]
+        } else {
+            &self.tail_frames[p - self.tail_base]
+        }
+    }
+
+    /// One head's resident rows as per-page zero-copy segments, in
+    /// resident order.  Panics if [`KvCache::sync_scaled`] has not
+    /// covered the appended rows (the `ks` plane would be stale).
+    pub fn head_segments(&self, h: usize) -> Vec<KvSegment<'_>> {
         assert!(h < self.heads, "head {h} out of {}", self.heads);
         assert!(
-            self.scaled_len == self.len,
+            self.len == 0 || self.scaled_abs == self.len,
             "scaled mirror stale ({} of {} rows); call sync_scaled first",
-            self.scaled_len,
+            self.scaled_abs,
             self.len
         );
-        let lo = h * self.cap * self.d;
-        MatRef { rows: self.len, cols: self.d, data: &self.ks[lo..lo + self.len * self.d] }
+        let (rp, d, heads) = (self.rows_page, self.d, self.heads);
+        let hs = rp * d;
+        let mut out = Vec::with_capacity(self.resident_pages());
+        let mut start = 0usize;
+        for (p, fr) in self.frames() {
+            let f_lo = p * rp;
+            let rows = ((p + 1) * rp).min(self.len) - f_lo;
+            if rows == 0 {
+                continue;
+            }
+            let ko = h * hs;
+            let vo = heads * hs + ko;
+            let so = 2 * heads * hs + ko;
+            out.push(KvSegment {
+                start,
+                abs_start: f_lo,
+                k: MatRef { rows, cols: d, data: &fr.data[ko..ko + rows * d] },
+                v: MatRef { rows, cols: d, data: &fr.data[vo..vo + rows * d] },
+                ks: MatRef { rows, cols: d, data: &fr.data[so..so + rows * d] },
+            });
+            start += rows;
+        }
+        out
     }
 
-    /// Drop the contents (capacity retained).
+    /// One resident row of the pre-scaled key plane (resident-row
+    /// coordinate — the random-access path of the sampled decode).
+    #[inline]
+    pub fn key_row_scaled(&self, h: usize, r: usize) -> &[f32] {
+        debug_assert!(r < self.resident_len(), "row {r} out of {}", self.resident_len());
+        debug_assert_eq!(self.scaled_abs, self.len, "scaled mirror stale");
+        let (p, slot) = self.locate(r);
+        let hs = self.rows_page * self.d;
+        let off = 2 * self.heads * hs + h * hs + slot * self.d;
+        &self.frame(p).data[off..off + self.d]
+    }
+
+    /// One resident row of the value plane.
+    #[inline]
+    pub fn value_row(&self, h: usize, r: usize) -> &[f32] {
+        debug_assert!(r < self.resident_len(), "row {r} out of {}", self.resident_len());
+        let (p, slot) = self.locate(r);
+        let hs = self.rows_page * self.d;
+        let off = self.heads * hs + h * hs + slot * self.d;
+        &self.frame(p).data[off..off + self.d]
+    }
+
+    /// Gather the first `rows` resident raw-key rows of one head into an
+    /// owned matrix (the decode samplers' LSH build inherently
+    /// materializes; also the test oracle for the paged layout).
+    pub fn gather_head_k_prefix(&self, h: usize, rows: usize) -> Mat {
+        assert!(rows <= self.resident_len());
+        let mut out = Mat::zeros(rows, self.d);
+        let hs = self.rows_page * self.d;
+        for r in 0..rows {
+            let (p, slot) = self.locate(r);
+            let off = h * hs + slot * self.d;
+            out.row_mut(r).copy_from_slice(&self.frame(p).data[off..off + self.d]);
+        }
+        out
+    }
+
+    /// All resident raw-key rows of one head, gathered.
+    pub fn gather_head_k(&self, h: usize) -> Mat {
+        self.gather_head_k_prefix(h, self.resident_len())
+    }
+
+    /// All resident value rows of one head, gathered.
+    pub fn gather_head_v(&self, h: usize) -> Mat {
+        let rows = self.resident_len();
+        let mut out = Mat::zeros(rows, self.d);
+        for r in 0..rows {
+            out.row_mut(r).copy_from_slice(self.value_row(h, r));
+        }
+        out
+    }
+
+    /// Drop the contents, returning every frame (resident and spare) to
+    /// the pool — recycled capacity lives in the pool's free list.
     pub fn clear(&mut self) {
+        for f in self.sink_frames.drain(..) {
+            self.pool.free(f);
+        }
+        while let Some(f) = self.tail_frames.pop_front() {
+            self.pool.free(f);
+        }
+        for f in self.spare.drain(..) {
+            self.pool.free(f);
+        }
         self.len = 0;
-        self.scaled_len = 0;
+        self.tail_base = self.sink_pages;
+        self.scaled_abs = 0;
+        self.epoch += 1;
+    }
+}
+
+impl Drop for KvCache {
+    fn drop(&mut self) {
+        self.clear();
     }
 }
 
@@ -715,43 +1234,119 @@ mod tests {
     }
 
     #[test]
-    fn kv_cache_append_and_views() {
+    fn page_pool_alloc_free_reuse_invariants() {
+        let pool = PagePool::new(16, Some(3));
+        let a = pool.try_alloc().unwrap();
+        let b = pool.try_alloc().unwrap();
+        let c = pool.try_alloc().unwrap();
+        assert_eq!((a.id(), b.id(), c.id()), (0, 1, 2), "fresh ids are sequential");
+        let s = pool.stats();
+        assert_eq!((s.outstanding, s.free, s.peak), (3, 0, 3));
+        // budget reached: explicit backpressure, counted
+        let err = pool.try_alloc().unwrap_err();
+        assert!(err.contains(POOL_EXHAUSTED), "{err}");
+        assert_eq!(pool.stats().rejects, 1);
+        // freeing recycles through the free list, preserving identity
+        let freed_id = b.id();
+        pool.free(b);
+        let s = pool.stats();
+        assert_eq!((s.outstanding, s.free, s.frees), (2, 1, 1));
+        let b2 = pool.try_alloc().unwrap();
+        assert_eq!(b2.id(), freed_id, "free list must hand the frame back");
+        assert_eq!(pool.stats().reuses, 1);
+        // peak never decreases
+        pool.free(a);
+        pool.free(b2);
+        pool.free(c);
+        let s = pool.stats();
+        assert_eq!((s.outstanding, s.free, s.peak), (0, 3, 3));
+        assert_eq!(s.allocs, 4);
+        // clones share the same pool
+        let clone = pool.clone();
+        let d = clone.try_alloc().unwrap();
+        assert_eq!(pool.stats().outstanding, 1);
+        clone.free(d);
+    }
+
+    /// Per-head gathered rows of the paged cache must equal, bitwise,
+    /// the flat row-major cache a plain Vec-append would build —
+    /// across chunked appends, page boundaries, reserve, and clear.
+    #[test]
+    fn kv_cache_paged_matches_flat_bitwise() {
         let (h, d) = (2usize, 3usize);
-        let mut rng = Rng::new(20);
-        let mut cache = KvCache::new(h, d);
+        // 4 rows per page so the appends below straddle page boundaries
+        let pool = PagePool::unbounded(3 * h * d * 4);
+        let mut cache = KvCache::with_pool(h, d, pool.clone(), None).unwrap();
+        assert_eq!(cache.rows_per_page(), 4);
         assert!(cache.is_empty());
-        // append two chunks (4 rows, then 3) and check per-head windows
-        let mut all_k: Vec<Vec<f32>> = vec![Vec::new(); h];
-        let mut all_v: Vec<Vec<f32>> = vec![Vec::new(); h];
-        for n in [4usize, 3] {
+        let mut rng = Rng::new(20);
+        let mut flat_k: Vec<Vec<f32>> = vec![Vec::new(); h];
+        let mut flat_v: Vec<Vec<f32>> = vec![Vec::new(); h];
+        for n in [4usize, 3, 1, 9, 1] {
             let q = rng.normal_vec(h * n * d);
             let k = rng.normal_vec(h * n * d);
             let v = rng.normal_vec(h * n * d);
             let view = QkvView::new(h, n, d, &q, &k, &v).unwrap();
             cache.append(&view).unwrap();
             for head in 0..h {
-                all_k[head].extend_from_slice(&k[head * n * d..(head + 1) * n * d]);
-                all_v[head].extend_from_slice(&v[head * n * d..(head + 1) * n * d]);
+                flat_k[head].extend_from_slice(&k[head * n * d..(head + 1) * n * d]);
+                flat_v[head].extend_from_slice(&v[head * n * d..(head + 1) * n * d]);
             }
         }
-        assert_eq!(cache.len(), 7);
+        assert_eq!(cache.len(), 18);
+        assert_eq!(cache.resident_len(), 18);
+        assert_eq!(cache.resident_pages(), 5); // ceil(18/4)
         for head in 0..h {
-            assert_eq!(cache.head_k(head).data, &all_k[head][..]);
-            assert_eq!(cache.head_v(head).data, &all_v[head][..]);
+            assert_eq!(cache.gather_head_k(head).data, flat_k[head]);
+            assert_eq!(cache.gather_head_v(head).data, flat_v[head]);
+            for r in 0..18 {
+                assert_eq!(cache.value_row(head, r), &flat_v[head][r * d..(r + 1) * d]);
+            }
         }
-        // shape-mismatched appends are rejected
+        // segments tile the resident rows exactly, in order
+        cache.sync_scaled(1.0);
+        for head in 0..h {
+            let segs = cache.head_segments(head);
+            let mut covered = 0usize;
+            for seg in &segs {
+                assert_eq!(seg.start, covered);
+                assert_eq!(seg.abs_start, covered); // nothing evicted
+                for r in 0..seg.k.rows {
+                    let at = (covered + r) * d;
+                    assert_eq!(seg.k.row(r), &flat_k[head][at..at + d]);
+                    assert_eq!(seg.v.row(r), &flat_v[head][at..at + d]);
+                }
+                covered += seg.k.rows;
+            }
+            assert_eq!(covered, 18);
+        }
+        // shape-mismatched appends are rejected without growing anything
         let buf = vec![0.0f32; 4 * d];
         let bad = QkvView::new(1, 4, d, &buf, &buf, &buf).unwrap();
         assert!(cache.append(&bad).is_err());
+        assert_eq!(cache.len(), 18);
+        // reserve pre-allocates; clear returns every frame to the pool
+        cache.reserve(40).unwrap();
+        let held = pool.stats().outstanding;
+        assert!(held >= 5 + 40 / 4);
+        cache.clear();
+        assert_eq!(cache.len(), 0);
+        let s = pool.stats();
+        assert_eq!(s.outstanding, 0, "clear must return all frames");
+        assert_eq!(s.free, held);
+        // recycled frames serve the next appends (free-list reuse)
+        let q = rng.normal_vec(h * d);
+        let view = QkvView::new(h, 1, d, &q, &q, &q).unwrap();
+        cache.append(&view).unwrap();
+        assert!(pool.stats().reuses > 0);
     }
 
     #[test]
-    fn kv_cache_growth_preserves_contents() {
+    fn kv_cache_many_single_row_appends() {
         let (h, d) = (3usize, 4usize);
         let mut rng = Rng::new(21);
-        let mut cache = KvCache::with_capacity(h, d, 2);
+        let mut cache = KvCache::new(h, d); // private pool, default page rows
         let mut want_k: Vec<Vec<f32>> = vec![Vec::new(); h];
-        // many single-row appends across several reserve boundaries
         for _ in 0..200 {
             let q = rng.normal_vec(h * d);
             let k = rng.normal_vec(h * d);
@@ -763,21 +1358,31 @@ mod tests {
             }
         }
         assert_eq!(cache.len(), 200);
-        assert!(cache.capacity() >= 200);
+        assert_eq!(cache.resident_pages(), 200usize.div_ceil(DEFAULT_PAGE_ROWS));
         for head in 0..h {
-            assert_eq!(cache.head_k(head).data, &want_k[head][..]);
+            assert_eq!(cache.gather_head_k(head).data, want_k[head]);
         }
         cache.clear();
         assert_eq!(cache.len(), 0);
-        assert!(cache.capacity() >= 200); // capacity retained
+        assert_eq!(cache.pool().stats().outstanding, 0);
     }
 
     #[test]
     fn kv_cache_scaled_mirror_incremental() {
         let (h, d) = (2usize, 4usize);
+        let pool = PagePool::unbounded(3 * h * d * 4);
         let mut rng = Rng::new(22);
-        let mut cache = KvCache::new(h, d);
+        let mut cache = KvCache::with_pool(h, d, pool, None).unwrap();
         let sc = 0.25f32;
+        let check = |cache: &KvCache, sc: f32| {
+            for head in 0..h {
+                for seg in cache.head_segments(head) {
+                    for (a, b) in seg.ks.data.iter().zip(seg.k.data) {
+                        assert!((a - b * sc).abs() < 1e-6);
+                    }
+                }
+            }
+        };
         for n in [5usize, 1, 1, 64] {
             let q = rng.normal_vec(h * n * d);
             let k = rng.normal_vec(h * n * d);
@@ -785,23 +1390,114 @@ mod tests {
             let view = QkvView::new(h, n, d, &q, &k, &v).unwrap();
             cache.append(&view).unwrap();
             cache.sync_scaled(sc);
-            for head in 0..h {
-                let raw = cache.head_k(head);
-                let scaled = cache.head_k_scaled(head);
-                for (a, b) in scaled.data.iter().zip(raw.data) {
+            check(&cache, sc);
+        }
+        // per-row accessor agrees with the segment view
+        for head in 0..h {
+            let gathered = cache.gather_head_k(head);
+            for r in 0..cache.resident_len() {
+                let row = cache.key_row_scaled(head, r);
+                for (a, b) in row.iter().zip(gathered.row(r)) {
                     assert!((a - b * sc).abs() < 1e-6);
                 }
             }
         }
-        // scale change forces a full rebuild
+        // scale change forces a full resident rebuild
         cache.sync_scaled(2.0);
-        for head in 0..h {
-            let raw = cache.head_k(head);
-            let scaled = cache.head_k_scaled(head);
-            for (a, b) in scaled.data.iter().zip(raw.data) {
-                assert!((a - b * 2.0).abs() < 1e-6);
+        check(&cache, 2.0);
+    }
+
+    /// The sliding window: sink pages pinned, middle pages freed the
+    /// moment they fall fully out of the window, absolute positions
+    /// preserved, epoch bumped per eviction, peak residency bounded.
+    #[test]
+    fn kv_cache_sliding_window_eviction() {
+        let (h, d) = (2usize, 3usize);
+        let rp = 4usize;
+        let pool = PagePool::unbounded(3 * h * d * rp);
+        let (window, sink) = (6usize, 5usize); // sink rounds up to 2 pages
+        let mut cache = KvCache::with_pool(h, d, pool.clone(), Some((window, sink))).unwrap();
+        let sink_pages = sink.div_ceil(rp);
+        assert_eq!(sink_pages, 2);
+        let mut rng = Rng::new(23);
+        let mut hist_k: Vec<Vec<f32>> = vec![Vec::new(); h];
+        let mut epochs = 0u64;
+        for step in 0..60usize {
+            let q = rng.normal_vec(h * d);
+            let k = rng.normal_vec(h * d);
+            let v = rng.normal_vec(h * d);
+            let view = QkvView::new(h, 1, d, &q, &k, &v).unwrap();
+            cache.append(&view).unwrap();
+            for head in 0..h {
+                hist_k[head].extend_from_slice(&k[head * d..(head + 1) * d]);
+            }
+            epochs = epochs.max(cache.epoch());
+            let len = step + 1;
+            // the documented retention rule, restated independently
+            let tail_base = if len > window {
+                ((len - window) / rp).max(sink_pages)
+            } else {
+                sink_pages
+            };
+            let mut expect: Vec<usize> = (0..len.min(sink_pages * rp)).collect();
+            expect.extend((tail_base * rp).min(len)..len);
+            assert_eq!(cache.len(), len);
+            assert_eq!(cache.resident_len(), expect.len(), "step {step}");
+            assert_eq!(cache.evicted_rows(), len - expect.len());
+            for head in 0..h {
+                let got = cache.gather_head_k(head);
+                for (r, &abs) in expect.iter().enumerate() {
+                    assert_eq!(
+                        got.row(r),
+                        &hist_k[head][abs * d..(abs + 1) * d],
+                        "step {step} head {head} resident row {r} (abs {abs})"
+                    );
+                }
             }
         }
+        assert!(cache.evicted_rows() > 0);
+        assert!(epochs > 1, "evictions must bump the epoch");
+        // peak residency: window pages + sink pages + in-flight slack
+        let bound = window / rp + sink_pages + 2;
+        assert!(
+            cache.peak_resident_pages() <= bound,
+            "peak {} > bound {bound}",
+            cache.peak_resident_pages()
+        );
+        // freed frames are back in the pool, not leaked
+        let s = pool.stats();
+        assert_eq!(s.outstanding, cache.resident_pages());
+        assert!(s.frees > 0 && s.reuses > 0);
+        // segments report diverging resident vs absolute coordinates
+        cache.sync_scaled(1.0);
+        let segs = cache.head_segments(0);
+        assert!(segs.iter().any(|s| s.abs_start > s.start));
+        // window must retain at least one row
+        assert!(KvCache::with_pool(h, d, PagePool::unbounded(64 * h * d), Some((0, 0))).is_err());
+    }
+
+    #[test]
+    fn kv_cache_budget_backpressure_is_atomic() {
+        let (h, d) = (1usize, 4usize);
+        let rp = 2usize;
+        let pool = PagePool::new(3 * h * d * rp, Some(2)); // 2 pages = 4 rows
+        let mut cache = KvCache::with_pool(h, d, pool.clone(), None).unwrap();
+        let mut rng = Rng::new(24);
+        let q = rng.normal_vec(h * 4 * d);
+        let view = QkvView::new(h, 4, d, &q, &q, &q).unwrap();
+        cache.append(&view).unwrap();
+        assert_eq!(cache.len(), 4);
+        // a fifth row needs a third page: explicit exhaustion, no growth
+        let one = QkvView::new(h, 1, d, &q[..d], &q[..d], &q[..d]).unwrap();
+        let err = cache.append(&one).unwrap_err();
+        assert!(err.contains(POOL_EXHAUSTED), "{err}");
+        assert_eq!(cache.len(), 4, "failed append must not grow the cache");
+        assert_eq!(cache.gather_head_k(0).data, &q[..4 * d]);
+        // dropping the cache releases its budget for others
+        drop(cache);
+        assert_eq!(pool.stats().outstanding, 0);
+        let fresh = pool.try_alloc().unwrap();
+        pool.free(fresh);
     }
 
     #[test]

@@ -20,7 +20,9 @@ use std::collections::HashMap;
 use hyperattention::attention::measure;
 use hyperattention::attention::op::{AttnConfig, Backend, SeedPolicy};
 use hyperattention::bench;
-use hyperattention::coordinator::{AttnJob, DecodeJob, ModePreference, Server, ServerConfig};
+use hyperattention::coordinator::{
+    AttnJob, CachePolicy, DecodeJob, ModePreference, Server, ServerConfig,
+};
 use hyperattention::linalg::QkvView;
 use hyperattention::model::ModelConfig;
 use hyperattention::rng::Rng;
@@ -84,8 +86,12 @@ USAGE: hyperattn <COMMAND> [OPTIONS]
 COMMANDS:
   serve    --artifacts DIR --jobs N --n LEN --heads H --d D
            [--stream S --tokens T]   streaming prefill/decode sessions
+           [--kv-pages P]            global KV page budget (0 = unbounded)
+           [--kv-window W --kv-sink S] sliding-window eviction per session
+           [--kv-ttl-ms MS]          idle-session TTL sweep (0 = off)
   bench    [--json FILE] --sizes 4096,16384,65536 --d D --block B --samples M --reps R
            [--decode-sizes 4096,16384 --decode-steps T]   decode tokens/sec rows
+           [--cache-sizes 16384,65536 --kv-window W --kv-sink S] paged-cache rows
   fig4     --sizes 4096,8192,... --d D --block B --samples M [--backward] --reps R
   fig3     --steps S --seq-len N
   table1   --steps S --seq-len N --reps R
@@ -111,6 +117,9 @@ fn main() {
                 args.get("reps", 1usize),
                 &args.list("decode-sizes", &[4096, 16384]),
                 args.get("decode-steps", 64usize),
+                &args.list("cache-sizes", &[16384, 65536]),
+                args.get("kv-window", 4096usize),
+                args.get("kv-sink", 64usize),
             );
             let text = doc.to_string();
             match args.get_str("json") {
@@ -134,6 +143,23 @@ fn main() {
                         let hy = row.get("hyper_tok_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
                         println!(
                             "decode (n={n:.0}): exact {ex:.0} tok/s, hyper {hy:.0} tok/s"
+                        );
+                    }
+                }
+            }
+            if let Some(cache) = doc.get("cache") {
+                if let Some(rows) = cache.as_array() {
+                    for row in rows {
+                        let g = |k: &str| row.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+                        println!(
+                            "cache (n={:.0}, window={:.0}): windowed {:.0} tok/s in {:.0} peak \
+                             pages vs full {:.0} tok/s in {:.0} peak pages",
+                            g("n"),
+                            g("window"),
+                            g("windowed_tok_s"),
+                            g("windowed_peak_pages"),
+                            g("full_tok_s"),
+                            g("full_peak_pages"),
                         );
                     }
                 }
@@ -219,10 +245,26 @@ fn cmd_serve(args: &Args) {
     let n = args.get("n", 512usize);
     let heads = args.get("heads", 4usize);
     let d = args.get("d", 64usize);
-    let cfg = match args.get_str("artifacts") {
+    let mut cfg = match args.get_str("artifacts") {
         Some(dir) => ServerConfig::with_artifacts(dir),
         None => ServerConfig::substrate_only(),
     };
+    // KV memory subsystem knobs
+    let kv_pages = args.get("kv-pages", 0usize);
+    if kv_pages > 0 {
+        cfg.cache.budget_pages = Some(kv_pages);
+    }
+    let kv_window = args.get("kv-window", 0usize);
+    if kv_window > 0 {
+        cfg.cache.policy = CachePolicy::SlidingWindow {
+            window: kv_window,
+            sink: args.get("kv-sink", 64usize),
+        };
+    }
+    let kv_ttl_ms = args.get("kv-ttl-ms", 0u64);
+    if kv_ttl_ms > 0 {
+        cfg.cache.idle_ttl = Some(std::time::Duration::from_millis(kv_ttl_ms));
+    }
     let server = std::sync::Arc::new(Server::start(cfg));
 
     // streaming mode: S concurrent prefill/decode sessions of T tokens
@@ -273,10 +315,11 @@ fn cmd_serve(args: &Args) {
         }
         let dt = t0.elapsed().as_secs_f64();
         println!(
-            "{} decode tokens in {dt:.2}s ({:.1} tok/s aggregate)\n{}",
+            "{} decode tokens in {dt:.2}s ({:.1} tok/s aggregate)\n{}\n{}",
             stream * tokens,
             (stream * tokens) as f64 / dt,
-            server.metrics().report()
+            server.metrics().report(),
+            server.cache_gauges().report()
         );
         return;
     }
@@ -309,8 +352,9 @@ fn cmd_serve(args: &Args) {
     }
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "{jobs} jobs in {dt:.2}s ({:.1} jobs/s)\n{}",
+        "{jobs} jobs in {dt:.2}s ({:.1} jobs/s)\n{}\n{}",
         jobs as f64 / dt,
-        server.metrics().report()
+        server.metrics().report(),
+        server.cache_gauges().report()
     );
 }

@@ -14,7 +14,7 @@
 pub mod corpus;
 pub mod train;
 
-use crate::attention::op::{AttnCache, AttnConfig, Backend, SeedPolicy};
+use crate::attention::op::{AttnCache, AttnConfig, Backend, CachePolicy, SeedPolicy};
 use crate::linalg::{matmul, matmul_nt, Mat, QkvView};
 use crate::rng::Rng;
 
@@ -342,14 +342,22 @@ pub struct GenCache {
 }
 
 impl GenCache {
+    /// Full-retention per-layer caches (the default).
     pub fn new(model: &Model) -> Self {
+        Self::with_policy(model, CachePolicy::Full).expect("full policy is always valid")
+    }
+
+    /// Per-layer caches under a KV eviction policy — bounded-memory
+    /// generation.  With `window ≥` the sequence length this is
+    /// bitwise-identical to the full cache (pinned by a test); tighter
+    /// windows trade distant context for a fixed resident-page budget
+    /// per layer (attention-sink rows stay pinned).
+    pub fn with_policy(model: &Model, policy: CachePolicy) -> Result<Self, String> {
         let dh = model.cfg.d_head();
-        GenCache {
-            layers: (0..model.cfg.n_layers)
-                .map(|_| AttnCache::new(model.cfg.n_heads, dh))
-                .collect(),
-            pos: 0,
-        }
+        let layers = (0..model.cfg.n_layers)
+            .map(|_| AttnCache::with_policy(model.cfg.n_heads, dh, policy))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(GenCache { layers, pos: 0 })
     }
 
     /// Cached sequence length (equals `pos` between calls).
@@ -567,6 +575,30 @@ mod tests {
             }
         }
         assert_eq!(cache.len(), n);
+    }
+
+    /// A windowed GenCache whose window covers the whole sequence is
+    /// bitwise-identical to the full cache, layer by layer.
+    #[test]
+    fn windowed_gen_cache_matches_full_when_window_covers() {
+        let m = tiny();
+        let n = 48usize;
+        let toks: Vec<usize> = (0..n).map(|i| (i * 5) % 16).collect();
+        let mut full = GenCache::new(&m);
+        let policy = CachePolicy::SlidingWindow { window: n + 1, sink: 4 };
+        let mut windowed = GenCache::with_policy(&m, policy).unwrap();
+        let split = 20usize;
+        let a = forward_cached(&m, &toks[..split], 1, 0, &mut full);
+        let b = forward_cached(&m, &toks[..split], 1, 0, &mut windowed);
+        assert_eq!(a, b, "prefill logits must match bitwise");
+        for t in split..n {
+            let a = forward_cached(&m, &toks[t..t + 1], 1, 0, &mut full);
+            let b = forward_cached(&m, &toks[t..t + 1], 1, 0, &mut windowed);
+            assert_eq!(a, b, "decode logits diverged at t={t}");
+        }
+        // invalid policy surfaces as an error, not a panic
+        let zero = CachePolicy::SlidingWindow { window: 0, sink: 0 };
+        assert!(GenCache::with_policy(&m, zero).is_err());
     }
 
     #[test]
