@@ -229,4 +229,74 @@ fn main() {
         Err(e) => println!("  open rejected as expected: {e}"),
     }
     println!("{}", server.cache_gauges().report());
+    drop(server);
+
+    // ---- prefix sharing: dozens of sessions in the pool that held six ----
+    // The same 80-page pool that LRU-thrashed at 6 full-retention
+    // sessions: register the 2048-token common prompt ONCE (32 pages),
+    // then open 24 sessions that each fork it — O(pages) refcount
+    // bumps, copy-on-write tail — and pay only for their private
+    // 64-row continuation (1 page each).  32 + 24 = 56 pages: all 24
+    // coexist with room to spare, no evictions, no re-ingest.
+    let mut cfg = ServerConfig::substrate_only();
+    cfg.router.hyper_threshold = 1024;
+    cfg.cache.page_elems = 3 * h * d * 64;
+    cfg.cache.budget_pages = Some(80);
+    let server = Server::start(cfg);
+    println!("\n=== same 80-page pool, 24 sessions sharing a 2048-row prefix ===");
+    let mut rng = Rng::new(31337);
+    let plen = h * n * d;
+    let prefix_job = AttnJob {
+        id: 0,
+        heads: h,
+        n,
+        d,
+        q: rng.normal_vec(plen),
+        k: rng.normal_vec(plen),
+        v: rng.normal_vec(plen),
+        causal: true,
+        mode: ModePreference::Auto,
+        seed: 0,
+    };
+    let ticket = server.register_prefix("system-prompt", prefix_job).expect("register");
+    ticket.wait().expect("prefix ingest");
+    println!("  registered \"system-prompt\": {}", server.cache_gauges().report());
+    let mut admitted = 0usize;
+    for s in 0..24u32 {
+        let suffix = 64usize;
+        let slen = h * suffix * d;
+        let job = AttnJob {
+            id: 0,
+            heads: h,
+            n: suffix,
+            d,
+            q: rng.normal_vec(slen),
+            k: rng.normal_vec(slen),
+            v: rng.normal_vec(slen),
+            causal: true,
+            mode: ModePreference::Auto,
+            seed: s as i32,
+        };
+        match server
+            .open_session_with_prefix(Some("system-prompt"), job)
+            .and_then(|(sid, t)| t.wait().map(|_| sid))
+        {
+            Ok(_) => admitted += 1,
+            Err(e) => println!("  open session {s}: rejected ({e})"),
+        }
+    }
+    let g = server.cache_gauges();
+    println!(
+        "  {admitted}/24 forked sessions admitted ({} pages in use, {} shared, \
+         {} COW copies; 0 LRU evictions = {})",
+        g.pages_in_use,
+        g.pages_shared,
+        g.cow_copies,
+        server
+            .metrics()
+            .sessions_evicted
+            .load(std::sync::atomic::Ordering::Relaxed)
+            == 0,
+    );
+    println!("{}", g.report());
 }

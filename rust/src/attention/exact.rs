@@ -198,6 +198,69 @@ pub(crate) fn flash_prefill_view(
     parts
 }
 
+/// Single-query-row streaming pass over one pre-scaled key segment,
+/// writing the segment-local `(m, s, num)` triple into caller-owned
+/// scratch instead of allocating a fresh [`Parts`] per call — the
+/// allocation-free core of the paged decode loop (one resident page per
+/// call, `resident_pages` calls per token).
+///
+/// Replicates the exact kernel-call sequence of [`flash_prefill_view`]
+/// at `n = 1` (same key tiles, same fused `gemm_nt`/`hmax`/
+/// `exp_sub_sum`/`gemm_nn_row` calls in the same order), so the triple
+/// is **bitwise-identical** to what
+/// `flash_prefill_view(q₁, ks, v, causal, q_offset, block)` would
+/// return — pinned by a test at the op layer.  `logits` must hold at
+/// least `block` floats; `num` must be `v.cols` long (both are
+/// overwritten).  Returns the local `(m, s)`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn flash_row_segment(
+    q: &[f32],
+    ks: MatRef<'_>,
+    v: MatRef<'_>,
+    causal: bool,
+    q_offset: isize,
+    block: usize,
+    num: &mut [f32],
+    logits: &mut [f32],
+) -> (f32, f32) {
+    let d = q.len();
+    let nk = ks.rows;
+    debug_assert_eq!(ks.cols, d);
+    debug_assert_eq!(v.rows, nk);
+    let dv = v.cols;
+    debug_assert_eq!(num.len(), dv);
+    let block = block.max(1);
+    debug_assert!(logits.len() >= block);
+    let mut m = NEG_INF;
+    let mut s = 0.0f32;
+    num.fill(0.0);
+    for j0 in (0..nk).step_by(block) {
+        if causal && (j0 as isize) > q_offset {
+            break; // tile fully above the diagonal: skip
+        }
+        let j1 = (j0 + block).min(nk);
+        let jt = j1 - j0;
+        kernel::gemm_nt(1, jt, d, q, d, &ks.data[j0 * d..], d, logits, jt);
+        let jlim = if causal { j1.min((q_offset + 1).max(0) as usize) } else { j1 };
+        if jlim <= j0 {
+            continue;
+        }
+        let cnt = jlim - j0;
+        let lrow = &mut logits[..cnt];
+        let bm = kernel::hmax(lrow);
+        let m_new = m.max(bm);
+        let e_old = (m - m_new).exp();
+        s *= e_old;
+        if e_old != 1.0 {
+            kernel::scale(num, e_old);
+        }
+        s += kernel::exp_sub_sum(lrow, m_new);
+        kernel::gemm_nn_row(lrow, &v.data[j0 * dv..], dv, num);
+        m = m_new;
+    }
+    (m, s)
+}
+
 /// Gradients of exact attention wrt (q, k, v) given upstream `dout` and
 /// the saved forward statistics.
 ///

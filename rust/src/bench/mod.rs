@@ -386,6 +386,113 @@ pub fn run_cache_bench(
     rows
 }
 
+/// One row of the prefix-sharing gate: N sessions continuing one
+/// shared P-row prefix via [`AttnCache::fork`] (refcount bumps +
+/// copy-on-write tail) vs N sessions each independently ingesting the
+/// full prompt.
+#[derive(Clone, Debug)]
+pub struct PrefixBenchRow {
+    /// shared prefix length (rows)
+    pub prefix: usize,
+    /// sessions opened against it
+    pub streams: usize,
+    /// per-session continuation length (rows)
+    pub suffix: usize,
+    /// total open latency (fork + suffix prefill) across all sessions
+    pub shared_open_s: f64,
+    /// total open latency with full independent ingest per session
+    pub indep_open_s: f64,
+    /// pool pages resident after the N shared opens (prefix charged once)
+    pub shared_pages: usize,
+    /// pool pages resident after N independent opens (prefix × N)
+    pub indep_pages: usize,
+    /// frames with >1 owner after the shared opens
+    pub pages_shared: usize,
+    /// copy-on-write splits the shared opens performed
+    pub cow_copies: u64,
+}
+
+/// Prefix-sharing bench: ingest a P-row prefix once, then open
+/// `streams` sessions against it — (a) by forking the prefix cache and
+/// prefilling only the `suffix` continuation rows, (b) by independently
+/// prefilling the full P+suffix prompt per session — and record
+/// open-session latency plus pool residency for both.  The shared run's
+/// residency is the ISSUE acceptance shape: P + N·ceil(tail/rows_page)
+/// pages vs the independent run's N·ceil((P+suffix)/rows_page).
+pub fn run_prefix_bench(
+    prefix_sizes: &[usize],
+    d: usize,
+    streams: usize,
+    suffix: usize,
+) -> Vec<PrefixBenchRow> {
+    let streams = streams.max(1);
+    let suffix = suffix.max(1);
+    let op = flash_op(true);
+    let mut rows = Vec::new();
+    for &prefix in prefix_sizes {
+        let prefix = prefix.max(1);
+        let total = prefix + streams * suffix;
+        let (q, k, v) = clustered_qkv(42, total, d, 32, 0.5);
+        let prefix_view = QkvView::strided(1, prefix, d, total * d, &q.data, &k.data, &v.data)
+            .expect("prefix window");
+        let suffix_view = |s: usize| {
+            let lo = (prefix + s * suffix) * d;
+            QkvView::strided(1, suffix, d, total * d, &q.data[lo..], &k.data[lo..], &v.data[lo..])
+                .expect("suffix window")
+        };
+
+        // (a) shared: one ingest, then fork + suffix prefill per session
+        let pool = crate::linalg::PagePool::unbounded(3 * d * crate::linalg::DEFAULT_PAGE_ROWS);
+        let mut base =
+            AttnCache::with_pool(1, d, CachePolicy::Full, &pool).expect("valid cache");
+        op.prefill(&mut base, prefix_view).expect("prefix ingest");
+        let t0 = Instant::now();
+        let shared_sessions: Vec<AttnCache> = (0..streams)
+            .map(|s| {
+                let mut c = base.fork();
+                op.prefill(&mut c, suffix_view(s)).expect("suffix prefill");
+                c
+            })
+            .collect();
+        let shared_open_s = t0.elapsed().as_secs_f64();
+        let sstats = pool.stats();
+        let shared_pages = sstats.outstanding;
+        let (pages_shared, cow_copies) = (sstats.shared, sstats.cows);
+        drop(shared_sessions);
+        drop(base);
+
+        // (b) independent: every session ingests prefix + suffix itself
+        let ipool =
+            crate::linalg::PagePool::unbounded(3 * d * crate::linalg::DEFAULT_PAGE_ROWS);
+        let t0 = Instant::now();
+        let indep_sessions: Vec<AttnCache> = (0..streams)
+            .map(|s| {
+                let mut c =
+                    AttnCache::with_pool(1, d, CachePolicy::Full, &ipool).expect("valid cache");
+                op.prefill(&mut c, prefix_view).expect("independent prefix");
+                op.prefill(&mut c, suffix_view(s)).expect("independent suffix");
+                c
+            })
+            .collect();
+        let indep_open_s = t0.elapsed().as_secs_f64();
+        let indep_pages = ipool.stats().outstanding;
+        drop(indep_sessions);
+
+        rows.push(PrefixBenchRow {
+            prefix,
+            streams,
+            suffix,
+            shared_open_s,
+            indep_open_s,
+            shared_pages,
+            indep_pages,
+            pages_shared,
+            cow_copies,
+        });
+    }
+    rows
+}
+
 /// One row of the machine-readable attention perf gate.
 #[derive(Clone, Debug)]
 pub struct AttnBenchRow {
@@ -421,6 +528,10 @@ impl AttnBenchRow {
 ///    peak resident pages of each, so the trajectory records that
 ///    windowed decode runs within a fixed page budget where the full
 ///    cache grows with n.
+/// 5. **Prefix** — the prefix-sharing gate at each `P` in
+///    `prefix_sizes` (default 4k/16k): open-session latency and pool
+///    residency for `prefix_streams` sessions forking one shared
+///    P-row prefix vs the same sessions independently ingesting it.
 ///
 /// Returns the JSON document; timing state (threads, backend) is
 /// restored before returning.
@@ -436,6 +547,8 @@ pub fn run_attention_bench_json(
     cache_sizes: &[usize],
     kv_window: usize,
     kv_sink: usize,
+    prefix_sizes: &[usize],
+    prefix_streams: usize,
 ) -> Value {
     use std::collections::BTreeMap;
     let mut root = BTreeMap::new();
@@ -554,6 +667,31 @@ pub fn run_attention_bench_json(
         cache.push(Value::Object(o));
     }
     root.insert("cache".into(), Value::Array(cache));
+
+    // ---- 5) prefix-sharing gate: forked vs independent opens ----------
+    let mut prefix = Vec::new();
+    for r in run_prefix_bench(prefix_sizes, d, prefix_streams, 32) {
+        let mut o = BTreeMap::new();
+        o.insert("prefix".into(), Value::Num(r.prefix as f64));
+        o.insert("streams".into(), Value::Num(r.streams as f64));
+        o.insert("suffix".into(), Value::Num(r.suffix as f64));
+        o.insert("shared_open_s".into(), Value::Num(r.shared_open_s));
+        o.insert("indep_open_s".into(), Value::Num(r.indep_open_s));
+        o.insert("shared_pages".into(), Value::Num(r.shared_pages as f64));
+        o.insert("indep_pages".into(), Value::Num(r.indep_pages as f64));
+        o.insert("pages_shared".into(), Value::Num(r.pages_shared as f64));
+        o.insert("cow_copies".into(), Value::Num(r.cow_copies as f64));
+        o.insert(
+            "open_speedup".into(),
+            Value::Num(r.indep_open_s / r.shared_open_s.max(1e-12)),
+        );
+        o.insert(
+            "residency_ratio".into(),
+            Value::Num(r.indep_pages as f64 / (r.shared_pages as f64).max(1e-12)),
+        );
+        prefix.push(Value::Object(o));
+    }
+    root.insert("prefix".into(), Value::Array(prefix));
 
     root.insert(
         "threads".into(),
@@ -847,8 +985,48 @@ mod tests {
     }
 
     #[test]
+    fn prefix_bench_shared_residency_undercuts_independent() {
+        let rows = run_prefix_bench(&[300], 16, 4, 8);
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!((r.prefix, r.streams, r.suffix), (300, 4, 8));
+        assert!(r.shared_open_s > 0.0 && r.indep_open_s > 0.0);
+        let rp = crate::linalg::DEFAULT_PAGE_ROWS; // h=1: 64 rows/page
+        let prefix_pages = r.prefix.div_ceil(rp);
+        let tail_pages = ((r.prefix % rp) + r.suffix).div_ceil(rp);
+        // the acceptance shape: P + N·ceil(tail/rows_page), exactly
+        assert_eq!(r.shared_pages, prefix_pages + r.streams * tail_pages);
+        assert_eq!(r.indep_pages, r.streams * (r.prefix + r.suffix).div_ceil(rp));
+        assert!(r.shared_pages < r.indep_pages);
+        // the partial prefix tail page was COWed once per stream; the
+        // full prefix pages stay shared across all forks
+        assert_eq!(r.cow_copies, r.streams as u64);
+        assert_eq!(r.pages_shared, prefix_pages - 1);
+    }
+
+    #[test]
+    fn bench_json_has_prefix_section() {
+        let doc = run_attention_bench_json(&[64], 16, 16, 16, 1, &[64], 2, &[64], 32, 8, &[128], 2);
+        let prefix = doc.get("prefix").expect("prefix section present");
+        let rows = match prefix {
+            Value::Array(a) => a,
+            _ => panic!("prefix section must be an array"),
+        };
+        assert_eq!(rows.len(), 1);
+        let shared = rows[0].get("shared_pages").and_then(|v| v.as_f64()).unwrap();
+        let indep = rows[0].get("indep_pages").and_then(|v| v.as_f64()).unwrap();
+        assert!(
+            shared < indep,
+            "shared residency {shared} must undercut independent {indep}"
+        );
+        assert!(rows[0].get("open_speedup").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert!(rows[0].get("pages_shared").and_then(|v| v.as_f64()).unwrap() >= 1.0);
+    }
+
+    #[test]
     fn bench_json_has_cache_section() {
-        let doc = run_attention_bench_json(&[64], 16, 16, 16, 1, &[64], 2, &[256], 64, 8);
+        let doc =
+            run_attention_bench_json(&[64], 16, 16, 16, 1, &[64], 2, &[256], 64, 8, &[128], 2);
         let cache = doc.get("cache").expect("cache section present");
         let rows = match cache {
             Value::Array(a) => a,
@@ -866,7 +1044,8 @@ mod tests {
 
     #[test]
     fn bench_json_has_decode_section() {
-        let doc = run_attention_bench_json(&[64], 16, 16, 16, 1, &[64], 2, &[64], 32, 8);
+        let doc =
+            run_attention_bench_json(&[64], 16, 16, 16, 1, &[64], 2, &[64], 32, 8, &[128], 2);
         let decode = doc.get("decode").expect("decode section present");
         let rows = match decode {
             Value::Array(a) => a,

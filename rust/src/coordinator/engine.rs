@@ -27,6 +27,17 @@
 //! reclaims sessions whose clients dropped their handle without
 //! `close_session` (the session-table leak fix), counted in
 //! `sessions_reclaimed`.
+//!
+//! **Prefix registry**: alongside the session table the engine keeps a
+//! small map of *pinned* prefix caches ([`Work::RegisterPrefix`]).  An
+//! open carrying a prefix key forks the pinned cache — O(pages)
+//! refcount bumps over the shared [`crate::linalg::PagePool`] frames,
+//! copy-on-write on the partial tail page — so long common prompts
+//! (system prompts, few-shot preambles, RAG scaffolding) are ingested
+//! once and shared by every session.  Shared pages are charged to the
+//! budget once; admission charges a forked open only for its private
+//! tail.  Pinned prefixes are exempt from LRU eviction and the TTL
+//! sweep ([`Work::ReleasePrefix`] unpins them).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -37,7 +48,7 @@ use std::time::{Duration, Instant};
 use super::metrics::{CacheGauges, Metrics};
 use super::request::{AttnJob, AttnResponse, Backend, DecodeJob, DecodeResponse, SessionId};
 use super::router::{Route, RouteKind, RouterConfig};
-use crate::attention::op::{self, AttnCache, AttnConfig, CachePolicy, SeedPolicy};
+use crate::attention::op::{self, AttnCache, AttnConfig, AttentionOp, CachePolicy, SeedPolicy};
 use crate::linalg::{PagePool, QkvView, POOL_EXHAUSTED};
 use crate::runtime::Runtime;
 
@@ -45,12 +56,23 @@ use crate::runtime::Runtime;
 pub enum Work {
     /// A one-shot attention job (the historical full-forward path).
     Full(AttnJob),
-    /// Open a streaming session: prefill the prompt into a fresh cache.
-    Open { session: SessionId, job: AttnJob },
+    /// Open a streaming session: prefill the prompt into a fresh cache
+    /// — or, with `prefix` set, fork the pinned prefix cache in
+    /// O(pages) refcount bumps and prefill only the suffix.
+    Open { session: SessionId, job: AttnJob, prefix: Option<String> },
     /// One decode step for a live session.
     Decode(DecodeJob),
     /// Close a session, dropping its cache.
     Close { session: SessionId },
+    /// Ingest a prompt into a pinned, shareable prefix cache under
+    /// `key` (replacing any previous cache at that key).  `seq` is the
+    /// submission order stamped by the server: register/release ops on
+    /// one key may execute out of order across batch lanes, and the
+    /// newest submission must win (see [`PrefixSlot`]).
+    RegisterPrefix { key: String, seq: u64, job: AttnJob },
+    /// Unpin a prefix cache.  Pages still shared by live forked
+    /// sessions survive until those sessions drop them.
+    ReleasePrefix { key: String, seq: u64 },
 }
 
 /// The response channel matching a [`Work`] variant (bounded-1 std
@@ -129,6 +151,35 @@ pub(crate) struct SessionEntry {
 
 pub(crate) type SessionMap = Arc<Mutex<HashMap<SessionId, Option<SessionEntry>>>>;
 
+/// A pinned, shareable prompt prefix: sessions opened with its key fork
+/// this cache's block table (refcount bumps, no copies) instead of
+/// re-ingesting the prefix.  Pinned entries are never LRU-evicted or
+/// TTL-swept — they are released explicitly.
+pub(crate) struct PrefixEntry {
+    /// submission sequence of the registration (newest wins)
+    seq: u64,
+    cfg: AttnConfig,
+    heads: usize,
+    d: usize,
+    cache: AttnCache,
+}
+
+/// State of one prefix key.  Register and release ride different batch
+/// lanes, so they can execute out of submission order; each op carries
+/// its server-stamped sequence and the **newest submission wins**: a
+/// release that overtakes its register leaves a [`PrefixSlot::Released`]
+/// tombstone the older register refuses to overwrite — without this, a
+/// reordered release would remove nothing and the late register would
+/// pin pages forever (prefixes are exempt from LRU/TTL reclamation).
+pub(crate) enum PrefixSlot {
+    /// pinned and forkable
+    Live(PrefixEntry),
+    /// released at this submission sequence
+    Released(u64),
+}
+
+pub(crate) type PrefixMap = Arc<Mutex<HashMap<String, PrefixSlot>>>;
+
 /// Everything a worker needs to execute engine work — cloned per
 /// worker thread.
 #[derive(Clone)]
@@ -138,6 +189,7 @@ pub(crate) struct EngineCtx {
     pub(crate) pool: PagePool,
     pub(crate) metrics: Arc<Metrics>,
     pub(crate) sessions: SessionMap,
+    pub(crate) prefixes: PrefixMap,
 }
 
 /// How long session checkout/close waits for an in-flight decode step
@@ -288,10 +340,13 @@ fn sweep_idle(ctx: &EngineCtx, ttl: Duration) {
     }
 }
 
-/// Snapshot the paged-cache subsystem (pool counters + per-session
-/// residency) for status output.
+/// Snapshot the paged-cache subsystem (pool counters + per-session and
+/// per-prefix residency) for status output.  Shared pages are counted
+/// once (`pages_in_use` is physical frames); `pages_shared` is how many
+/// of them more than one owner still references.
 pub(crate) fn cache_gauges(
     sessions: &SessionMap,
+    prefixes: &PrefixMap,
     pool: &PagePool,
     metrics: &Metrics,
 ) -> CacheGauges {
@@ -306,10 +361,25 @@ pub(crate) fn cache_gauges(
         })
         .collect();
     per_session.sort_by_key(|&(id, _, _)| id);
+    drop(map);
+    let pmap = prefixes.lock().unwrap();
+    let mut per_prefix: Vec<(String, usize, usize)> = pmap
+        .iter()
+        .filter_map(|(key, slot)| match slot {
+            PrefixSlot::Live(e) => {
+                Some((key.clone(), e.cache.kv().resident_pages(), e.cache.len()))
+            }
+            PrefixSlot::Released(_) => None,
+        })
+        .collect();
+    per_prefix.sort_by(|a, b| a.0.cmp(&b.0));
+    drop(pmap);
     CacheGauges {
         page_elems: s.page_elems,
         budget_pages: s.budget,
         pages_in_use: s.outstanding,
+        pages_shared: s.shared,
+        cow_copies: s.cows,
         pages_free: s.free,
         peak_pages: s.peak,
         pool_allocs: s.allocs,
@@ -319,56 +389,34 @@ pub(crate) fn cache_gauges(
         sessions_reclaimed: metrics.sessions_reclaimed.load(Relaxed),
         admission_rejects: metrics.admission_rejects.load(Relaxed),
         per_session,
+        per_prefix,
     }
 }
 
 /// Bound on LRU-eviction retries for one admission attempt.
 const MAX_ADMISSION_EVICTIONS: usize = 64;
 
-/// Prefill a session's prompt into a fresh cache (pages from the shared
-/// pool) and register it in the session table.  Pool exhaustion evicts
-/// idle sessions LRU-first; with nothing left to evict the open is
-/// rejected with explicit backpressure.
-fn run_open(
-    session: SessionId,
+/// The one admission retry state machine every prompt ingest goes
+/// through: build a cache via `make_cache` (fresh, or a validated
+/// prefix fork — re-invoked per attempt so forks are re-validated),
+/// prefill the job into it, and on pool exhaustion LRU-evict an idle
+/// session and retry (bounded), else reject with explicit
+/// backpressure.
+fn admit_prefill<F>(
     job: &AttnJob,
-    kind: RouteKind,
+    attn: &AttentionOp,
     ctx: &EngineCtx,
-) -> Result<Vec<f32>, String> {
-    let cfg = substrate_config(job, kind, &ctx.rc);
-    let attn = cfg.build()?;
-    // feasibility first: a prompt that cannot fit the pool even with
-    // every other session evicted is rejected before evicting anyone
-    // (prefill transiently needs all prompt pages — the window trims
-    // only after the append)
-    let rows_page = ctx.cache.page_elems / (3 * job.heads * job.d).max(1);
-    if let (Some(budget), true) = (ctx.cache.budget_pages, rows_page > 0) {
-        let needed = job.n.div_ceil(rows_page);
-        if needed > budget {
-            return Err(reject_admission(
-                ctx,
-                format!("prompt needs {needed} pages, pool budget is {budget}"),
-            ));
-        }
-    }
+    mut make_cache: F,
+) -> Result<(AttnCache, Vec<f32>), String>
+where
+    F: FnMut() -> Result<AttnCache, String>,
+{
     let mut attempts = 0usize;
     loop {
-        let mut cache = AttnCache::with_pool(job.heads, job.d, ctx.cache.policy, &ctx.pool)?;
+        let mut cache = make_cache()?;
         let view = QkvView::new(job.heads, job.n, job.d, &job.q, &job.k, &job.v)?;
         match attn.prefill(&mut cache, view) {
-            Ok(out) => {
-                ctx.sessions.lock().unwrap().insert(
-                    session,
-                    Some(SessionEntry {
-                        cfg,
-                        heads: job.heads,
-                        d: job.d,
-                        cache,
-                        last_used: Instant::now(),
-                    }),
-                );
-                return Ok(out.into_out());
-            }
+            Ok(out) => return Ok((cache, out.into_out())),
             Err(e) if e.contains(POOL_EXHAUSTED) => {
                 drop(cache); // return the partial allocation first
                 if attempts < MAX_ADMISSION_EVICTIONS && evict_lru_session(ctx, None) {
@@ -380,6 +428,184 @@ fn run_open(
             Err(e) => return Err(e),
         }
     }
+}
+
+/// Admission-controlled ingest into a **fresh** cache (plain opens and
+/// prefix registration): budget feasibility precheck (a prompt that can
+/// never fit is rejected before evicting anyone — prefill transiently
+/// needs every prompt page; the window trims only after the append),
+/// then the shared [`admit_prefill`] retry loop.  `what` labels the
+/// feasibility error ("prompt" / "prefix").
+fn prefill_with_admission(
+    job: &AttnJob,
+    attn: &AttentionOp,
+    what: &str,
+    ctx: &EngineCtx,
+) -> Result<(AttnCache, Vec<f32>), String> {
+    let rows_page = ctx.cache.page_elems / (3 * job.heads * job.d).max(1);
+    if let (Some(budget), true) = (ctx.cache.budget_pages, rows_page > 0) {
+        let needed = job.n.div_ceil(rows_page);
+        if needed > budget {
+            return Err(reject_admission(
+                ctx,
+                format!("{what} needs {needed} pages, pool budget is {budget}"),
+            ));
+        }
+    }
+    admit_prefill(job, attn, ctx, || {
+        AttnCache::with_pool(job.heads, job.d, ctx.cache.policy, &ctx.pool)
+    })
+}
+
+/// Prefill a session's prompt into a fresh cache (pages from the shared
+/// pool) and register it in the session table.  With a `prefix` key the
+/// session instead **forks** the pinned prefix cache — O(pages)
+/// refcount bumps, shared pages charged once — and prefills only the
+/// suffix (`job` q/k/v are the continuation rows at positions
+/// `prefix_len..`); admission then charges the session only for its
+/// private tail.  Pool exhaustion evicts idle sessions LRU-first; with
+/// nothing left to evict the open is rejected with explicit
+/// backpressure.
+fn run_open(
+    session: SessionId,
+    job: &AttnJob,
+    prefix: Option<&str>,
+    kind: RouteKind,
+    ctx: &EngineCtx,
+) -> Result<Vec<f32>, String> {
+    let cfg = substrate_config(job, kind, &ctx.rc);
+    let attn = cfg.build()?;
+    let (cache, out) = match prefix {
+        None => prefill_with_admission(job, &attn, "prompt", ctx)?,
+        Some(key) => fork_prefix_with_admission(job, &attn, key, &cfg, ctx)?,
+    };
+    ctx.sessions.lock().unwrap().insert(
+        session,
+        Some(SessionEntry {
+            cfg,
+            heads: job.heads,
+            d: job.d,
+            cache,
+            last_used: Instant::now(),
+        }),
+    );
+    Ok(out)
+}
+
+/// The forked-open path: validation, private-tail admission math, and
+/// the fork all happen under ONE prefix-map lock acquisition (and are
+/// re-done on every eviction retry), so a concurrent RegisterPrefix
+/// replacing the key can never hand this open a cache that was not the
+/// one validated and charged.  Only the private tail (the COW'd
+/// partial page + the suffix's fresh pages) is charged on top of the
+/// pinned prefix pages nothing can reclaim.
+fn fork_prefix_with_admission(
+    job: &AttnJob,
+    attn: &AttentionOp,
+    key: &str,
+    cfg: &AttnConfig,
+    ctx: &EngineCtx,
+) -> Result<(AttnCache, Vec<f32>), String> {
+    let rows_page = ctx.cache.page_elems / (3 * job.heads * job.d).max(1);
+    admit_prefill(job, attn, ctx, || {
+        let map = ctx.prefixes.lock().unwrap();
+        let Some(PrefixSlot::Live(entry)) = map.get(key) else {
+            return Err(format!("unknown prefix {key:?}"));
+        };
+        if entry.heads != job.heads || entry.d != job.d {
+            return Err(format!(
+                "prefix {key:?} shape (h={}, d={}) != open shape (h={}, d={})",
+                entry.heads, entry.d, job.heads, job.d
+            ));
+        }
+        if entry.cfg.causal != cfg.causal || entry.cfg.scale != cfg.scale {
+            return Err(format!(
+                "prefix {key:?} was ingested under an incompatible config \
+                 (causal={}, scale={:?})",
+                entry.cfg.causal, entry.cfg.scale
+            ));
+        }
+        if let (Some(budget), true) = (ctx.cache.budget_pages, rows_page > 0) {
+            let plen = entry.cache.len();
+            let needed = entry.cache.kv().resident_pages()
+                + (plen + job.n).div_ceil(rows_page)
+                - plen / rows_page;
+            if needed > budget {
+                return Err(reject_admission(
+                    ctx,
+                    format!(
+                        "prefix + private tail needs {needed} pages, \
+                         pool budget is {budget}"
+                    ),
+                ));
+            }
+        }
+        Ok(entry.cache.fork())
+    })
+}
+
+/// Ingest a prompt into a pinned prefix cache under `key` (the cache
+/// future sessions fork from).  Replaces any previous entry at the key,
+/// releasing its handles — unless a *newer* register or release for the
+/// key already landed (sequence comparison), in which case the freshly
+/// built cache is dropped instead of resurrecting the key: the prompt's
+/// attention output is still returned, but nothing stays pinned.  Pool
+/// exhaustion follows the same LRU-evict / backpressure path as an
+/// open.
+fn run_register_prefix(
+    key: &str,
+    seq: u64,
+    job: &AttnJob,
+    kind: RouteKind,
+    ctx: &EngineCtx,
+) -> Result<Vec<f32>, String> {
+    let cfg = substrate_config(job, kind, &ctx.rc);
+    let attn = cfg.build()?;
+    let (cache, out) = prefill_with_admission(job, &attn, "prefix", ctx)?;
+    let old = {
+        let mut map = ctx.prefixes.lock().unwrap();
+        let superseded = match map.get(key) {
+            Some(PrefixSlot::Live(e)) => e.seq > seq,
+            Some(PrefixSlot::Released(s)) => *s > seq,
+            None => false,
+        };
+        if superseded {
+            None // drop the fresh cache below; the newer op won
+        } else {
+            map.insert(
+                key.to_string(),
+                PrefixSlot::Live(PrefixEntry {
+                    seq,
+                    cfg,
+                    heads: job.heads,
+                    d: job.d,
+                    cache,
+                }),
+            )
+        }
+    };
+    drop(old); // a replaced prefix releases its handles outside the lock
+    Ok(out)
+}
+
+/// Apply a release op: tombstone the key at `seq` unless a newer
+/// register already landed.  The dropped cache's handles are released
+/// outside the lock.
+fn run_release_prefix(key: String, seq: u64, ctx: &EngineCtx) {
+    let old = {
+        let mut map = ctx.prefixes.lock().unwrap();
+        let newer_exists = match map.get(&key) {
+            Some(PrefixSlot::Live(e)) => e.seq > seq,
+            Some(PrefixSlot::Released(s)) => *s >= seq,
+            None => false,
+        };
+        if newer_exists {
+            None
+        } else {
+            map.insert(key, PrefixSlot::Released(seq))
+        }
+    };
+    drop(old);
 }
 
 /// Count and uniformly shape an admission rejection (same wrapper
@@ -472,7 +698,13 @@ pub fn spawn(
     cache: CacheConfig,
     metrics: Arc<Metrics>,
     queue_depth: usize,
-) -> (SyncSender<EngineMsg>, std::thread::JoinHandle<()>, PagePool, SessionMap) {
+) -> (
+    SyncSender<EngineMsg>,
+    std::thread::JoinHandle<()>,
+    PagePool,
+    SessionMap,
+    PrefixMap,
+) {
     let (tx, rx) = std::sync::mpsc::sync_channel::<EngineMsg>(queue_depth);
     let pool = PagePool::new(cache.page_elems, cache.budget_pages);
     let ctx = EngineCtx {
@@ -481,8 +713,10 @@ pub fn spawn(
         pool: pool.clone(),
         metrics,
         sessions: Arc::new(Mutex::new(HashMap::new())),
+        prefixes: Arc::new(Mutex::new(HashMap::new())),
     };
     let sessions = ctx.sessions.clone();
+    let prefixes = ctx.prefixes.clone();
 
     // substrate lane: a shared-receiver worker pool
     let (sub_tx, sub_rx) = std::sync::mpsc::sync_channel::<EngineMsg>(queue_depth);
@@ -511,7 +745,7 @@ pub fn spawn(
         .name("hyperattn-engine".into())
         .spawn(move || engine_loop(rx, artifacts_dir, ctx, sub_tx, n_workers))
         .expect("spawn engine thread");
-    (tx, handle, pool, sessions)
+    (tx, handle, pool, sessions, prefixes)
 }
 
 /// Respond to a flushed item with an explicit shutdown error (instead
@@ -588,10 +822,11 @@ fn execute_one(item: WorkItem, runtime: Option<&Runtime>, ctx: &EngineCtx) {
                 let _ = tx.send(response);
             }
         }
-        Work::Open { session, job } => {
+        Work::Open { session, job, prefix } => {
             // prefill the prompt into a fresh cache on the substrate
-            // (streaming sessions are shape-dynamic: no artifact lane)
-            let result = run_open(session, &job, route.kind, ctx);
+            // (streaming sessions are shape-dynamic: no artifact lane);
+            // with a prefix key, fork the pinned cache instead
+            let result = run_open(session, &job, prefix.as_deref(), route.kind, ctx);
             let exec_us = exec_start.elapsed().as_micros() as u64;
             metrics.queue_latency.record(queue_us);
             metrics.exec_latency.record(exec_us);
@@ -644,6 +879,35 @@ fn execute_one(item: WorkItem, runtime: Option<&Runtime>, ctx: &EngineCtx) {
         Work::Close { session } => {
             close_session(sessions, session);
             metrics.sessions_closed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+        Work::RegisterPrefix { key, seq, job } => {
+            let result = run_register_prefix(&key, seq, &job, route.kind, ctx);
+            let exec_us = exec_start.elapsed().as_micros() as u64;
+            metrics.queue_latency.record(queue_us);
+            metrics.exec_latency.record(exec_us);
+            metrics.substrate_jobs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            match &result {
+                Ok(_) => {
+                    metrics.jobs_completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+                Err(_) => {
+                    metrics.jobs_failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            }
+            if let Reply::Full(tx) = respond {
+                let _ = tx.send(result.map(|out| AttnResponse {
+                    id: job.id,
+                    out,
+                    backend: Backend::Substrate,
+                    queue_us,
+                    exec_us,
+                }));
+            }
+        }
+        Work::ReleasePrefix { key, seq } => {
+            // unpinning only drops the registry's handles; pages still
+            // shared by live forked sessions stay resident with them
+            run_release_prefix(key, seq, ctx);
         }
     }
 }
@@ -736,8 +1000,9 @@ fn engine_loop(
     }
     // any caches still live are dropped here, returning their pages to
     // the pool; a worker holding a checked-out entry simply drops it at
-    // checkin
+    // checkin.  Pinned prefixes release their handles the same way.
     ctx.sessions.lock().unwrap().clear();
+    ctx.prefixes.lock().unwrap().clear();
 }
 
 #[cfg(test)]
@@ -844,6 +1109,7 @@ mod tests {
             pool: PagePool::unbounded(CacheConfig::default().page_elems),
             metrics: Arc::new(Metrics::new()),
             sessions: Arc::new(Mutex::new(HashMap::new())),
+            prefixes: Arc::new(Mutex::new(HashMap::new())),
         }
     }
 
@@ -941,8 +1207,98 @@ mod tests {
         );
         // its pages went back to the pool
         assert_eq!(ctx.pool.stats().outstanding, 0);
-        let g = cache_gauges(&ctx.sessions, &ctx.pool, &ctx.metrics);
+        let g = cache_gauges(&ctx.sessions, &ctx.prefixes, &ctx.pool, &ctx.metrics);
         assert_eq!(g.sessions_reclaimed, 1);
         assert_eq!(g.per_session.len(), 2);
+    }
+
+    /// The prefix registry on the raw engine context: registering pins
+    /// a cache, forked opens charge only the private tail, and the
+    /// gauges count shared pages once.
+    #[test]
+    fn prefix_fork_open_shares_pages() {
+        let mut ctx = test_ctx();
+        // (h=2, d=16) -> 8 rows per page under this page_elems
+        ctx.cache.page_elems = 3 * 2 * 16 * 8;
+        ctx.pool = PagePool::unbounded(ctx.cache.page_elems);
+        let prefix_job = job(20, true, 1); // 20 rows: 2 full pages + 4-row tail
+        run_register_prefix("sys", 1, &prefix_job, RouteKind::Exact, &ctx).unwrap();
+        let after_prefix = ctx.pool.stats().outstanding;
+        assert_eq!(after_prefix, 3);
+        // two sessions fork it with 2-row suffixes
+        let suffix = job(2, true, 2);
+        run_open(1, &suffix, Some("sys"), RouteKind::Exact, &ctx).unwrap();
+        run_open(2, &suffix, Some("sys"), RouteKind::Exact, &ctx).unwrap();
+        let s = ctx.pool.stats();
+        // prefix 3 pages + one COW'd tail page per session
+        assert_eq!(s.outstanding, 5, "shared pages charged once");
+        assert_eq!(s.cows, 2);
+        assert_eq!(s.shared, 2, "the two frozen prefix pages");
+        let g = cache_gauges(&ctx.sessions, &ctx.prefixes, &ctx.pool, &ctx.metrics);
+        assert_eq!(g.pages_shared, 2);
+        assert_eq!(g.cow_copies, 2);
+        assert_eq!(g.per_prefix.len(), 1);
+        assert_eq!(g.per_prefix[0].0, "sys");
+        assert_eq!(g.per_session.len(), 2);
+        // sessions see prefix + suffix rows
+        {
+            let map = ctx.sessions.lock().unwrap();
+            for slot in map.values() {
+                assert_eq!(slot.as_ref().unwrap().cache.len(), 22);
+            }
+        }
+        // unknown / shape-mismatched prefixes are rejected loudly
+        assert!(run_open(3, &suffix, Some("nope"), RouteKind::Exact, &ctx)
+            .unwrap_err()
+            .contains("unknown prefix"));
+        // releasing the prefix frees only the unshared tail page; the
+        // frozen pages live on with the sessions
+        run_release_prefix("sys".into(), 2, &ctx);
+        let s = ctx.pool.stats();
+        assert_eq!(s.outstanding, 4, "prefix tail freed, shared pages survive");
+        assert_eq!(s.shared, 2);
+        // dropping the sessions frees everything
+        ctx.sessions.lock().unwrap().clear();
+        assert_eq!(ctx.pool.stats().outstanding, 0);
+    }
+
+    /// The register/release reordering guard: a release that executes
+    /// BEFORE its register (cross-lane batch reordering) leaves a
+    /// tombstone the older register must not overwrite — no permanently
+    /// pinned pages — while a later register reclaims the key.
+    #[test]
+    fn prefix_release_overtaking_register_leaves_no_pin() {
+        let mut ctx = test_ctx();
+        ctx.cache.page_elems = 3 * 2 * 16 * 8;
+        ctx.pool = PagePool::unbounded(ctx.cache.page_elems);
+        let pjob = job(20, true, 1);
+        // client submitted register (seq 1) then release (seq 2), but
+        // the release executed first
+        run_release_prefix("sys".into(), 2, &ctx);
+        run_register_prefix("sys", 1, &pjob, RouteKind::Exact, &ctx).unwrap();
+        assert_eq!(
+            ctx.pool.stats().outstanding,
+            0,
+            "the superseded register must not pin pages"
+        );
+        assert!(
+            run_open(1, &job(2, true, 3), Some("sys"), RouteKind::Exact, &ctx).is_err(),
+            "tombstoned prefix is not forkable"
+        );
+        let g = cache_gauges(&ctx.sessions, &ctx.prefixes, &ctx.pool, &ctx.metrics);
+        assert!(g.per_prefix.is_empty(), "tombstones are not reported as live");
+        // a NEWER register (seq 3) reclaims the key
+        run_register_prefix("sys", 3, &pjob, RouteKind::Exact, &ctx).unwrap();
+        assert_eq!(ctx.pool.stats().outstanding, 3);
+        run_open(2, &job(2, true, 4), Some("sys"), RouteKind::Exact, &ctx).unwrap();
+        // and a stale release (seq older than the live register) is a no-op
+        run_release_prefix("sys".into(), 2, &ctx);
+        assert_eq!(
+            cache_gauges(&ctx.sessions, &ctx.prefixes, &ctx.pool, &ctx.metrics)
+                .per_prefix
+                .len(),
+            1,
+            "stale release must not unpin a newer register"
+        );
     }
 }

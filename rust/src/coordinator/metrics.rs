@@ -177,8 +177,16 @@ pub struct CacheGauges {
     pub page_elems: usize,
     /// global page budget (None = unbounded)
     pub budget_pages: Option<usize>,
-    /// frames currently resident across all sessions
+    /// frames currently resident across all sessions and pinned
+    /// prefixes — each physical frame counted **once** no matter how
+    /// many forked sessions share it
     pub pages_in_use: usize,
+    /// frames currently shared by more than one owner (prefix pages
+    /// forked sessions still reference)
+    pub pages_shared: usize,
+    /// copy-on-write page materializations (a fork privatizing the
+    /// shared partial tail page before writing into it)
+    pub cow_copies: u64,
     /// recycled frames on the pool free list
     pub pages_free: usize,
     /// high-water mark of resident frames
@@ -196,6 +204,9 @@ pub struct CacheGauges {
     /// per live session: (id, resident pages, logical rows; a
     /// checked-out session reports zeros)
     pub per_session: Vec<(u64, usize, usize)>,
+    /// per pinned prefix: (key, resident pages, rows) — the caches
+    /// sessions fork from in O(pages) refcount bumps
+    pub per_prefix: Vec<(String, usize, usize)>,
 }
 
 impl CacheGauges {
@@ -218,13 +229,20 @@ impl CacheGauges {
             .iter()
             .map(|(id, pages, rows)| format!("{id}:{pages}p/{rows}r"))
             .collect();
+        let prefixes: Vec<String> = self
+            .per_prefix
+            .iter()
+            .map(|(key, pages, rows)| format!("{key}:{pages}p/{rows}r"))
+            .collect();
         format!(
-            "kv cache: pages in_use={} free={} peak={} budget={budget} \
+            "kv cache: pages in_use={} shared={} free={} peak={} budget={budget} \
              util={:.0}% page_elems={}\n\
-             kv pool:  allocs={} reuses={} rejects={}\n\
+             kv pool:  allocs={} reuses={} rejects={} cow_copies={}\n\
              kv admission: lru_evicted={} ttl_reclaimed={} rejects={}\n\
-             kv sessions: [{}]",
+             kv sessions: [{}]\n\
+             kv prefixes: [{}]",
             self.pages_in_use,
+            self.pages_shared,
             self.pages_free,
             self.peak_pages,
             self.utilization() * 100.0,
@@ -232,10 +250,12 @@ impl CacheGauges {
             self.pool_allocs,
             self.pool_reuses,
             self.pool_rejects,
+            self.cow_copies,
             self.sessions_evicted,
             self.sessions_reclaimed,
             self.admission_rejects,
             sessions.join(" "),
+            prefixes.join(" "),
         )
     }
 }
@@ -250,6 +270,8 @@ mod tests {
             page_elems: 1024,
             budget_pages: Some(8),
             pages_in_use: 6,
+            pages_shared: 3,
+            cow_copies: 5,
             pages_free: 1,
             peak_pages: 7,
             pool_allocs: 10,
@@ -259,12 +281,16 @@ mod tests {
             sessions_reclaimed: 4,
             admission_rejects: 2,
             per_session: vec![(1, 4, 200), (2, 2, 90)],
+            per_prefix: vec![("sys".into(), 3, 140)],
         };
         assert!((g.utilization() - 0.75).abs() < 1e-9);
         let r = g.report();
         assert!(r.contains("in_use=6"));
+        assert!(r.contains("shared=3"));
+        assert!(r.contains("cow_copies=5"));
         assert!(r.contains("budget=8"));
         assert!(r.contains("1:4p/200r"));
+        assert!(r.contains("sys:3p/140r"));
         assert!(r.contains("ttl_reclaimed=4"));
         let unbounded = CacheGauges::default();
         assert_eq!(unbounded.utilization(), 0.0);

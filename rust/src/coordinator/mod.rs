@@ -4,22 +4,26 @@
 //! ```text
 //! one-shot jobs ────> Router ──(bucket n, exact|hyper)──┐
 //!                                                       ▼
-//! sessions: open_session ─┐                          Batcher
-//!           decode ───────┼──(shared decode key)──>    │ (max_batch,
-//!           close ────────┘                            │  max_wait)
+//! sessions: open_session[_with_prefix] ─┐            Batcher
+//!           decode ─────────────────────┼──(shared     │ (max_batch,
+//!           close / register_prefix ────┘  decode key) │  max_wait)
 //!              Metrics <── Engine workers <── batch queue
 //!                            │
-//!            ┌───────────────┼────────────────────────┐
-//!            │ PJRT runtime (AOT artifacts)           │ fixed shapes
-//!            │ Rust substrate (AttentionOp)           │ any shape
-//!            │   └─ session table: SessionId →        │
-//!            │      AttnCache (paged KV + sampling)   │
-//!            │         │ pages           ▲ admission: │
-//!            │         ▼                 │ LRU evict /│
-//!            │      PagePool ────────────┘ backpressure
-//!            │      (CacheConfig: budget, sliding-    │
-//!            │       window policy, idle-session TTL) │
-//!            └────────────────────────────────────────┘
+//!            ┌───────────────┼──────────────────────────┐
+//!            │ PJRT runtime (AOT artifacts)             │ fixed shapes
+//!            │ Rust substrate (AttentionOp)             │ any shape
+//!            │   ├─ session table: SessionId →          │
+//!            │   │  AttnCache (paged KV + sampling)     │
+//!            │   └─ prefix registry: key → pinned       │
+//!            │      AttnCache ──fork (refcount bump,    │
+//!            │        │         COW tail)──▶ sessions   │
+//!            │        │ pages           ▲ admission:    │
+//!            │        ▼                 │ LRU evict /   │
+//!            │      PagePool ───────────┘ backpressure  │
+//!            │      (CacheConfig: budget, sliding-      │
+//!            │       window policy, idle TTL; shared    │
+//!            │       frames refcounted, charged once)   │
+//!            └──────────────────────────────────────────┘
 //! ```
 //!
 //! * [`router`] — policy: exact below `hyper_threshold`, hyper above
@@ -51,7 +55,15 @@
 //!   per-session residency, eviction/reclaim/reject counters).
 //! * [`server`] — wiring: submit → route → batch → execute → respond,
 //!   plus the session API ([`Server::open_session`], [`Server::decode`],
-//!   [`Server::close_session`]).
+//!   [`Server::close_session`]) and the shared-prefix API
+//!   ([`Server::register_prefix`] pins a common prompt once;
+//!   [`Server::open_session_with_prefix`] forks it per session in
+//!   O(pages) refcount bumps, copy-on-write on the tail page, so N
+//!   sessions over a P-page prefix cost P + N·tail pages — gauges
+//!   `pages_shared`/`cow_copies` report the sharing).
+//!
+//! [`Server::register_prefix`]: server::Server::register_prefix
+//! [`Server::open_session_with_prefix`]: server::Server::open_session_with_prefix
 //!
 //! [`Server::open_session`]: server::Server::open_session
 //! [`Server::decode`]: server::Server::decode

@@ -10,6 +10,11 @@
 //! a per-session KV cache held by the engine, [`Server::decode`] feeds
 //! one token per call (decode steps from all live sessions coalesce
 //! under one batch key), and [`Server::close_session`] frees the cache.
+//! Shared-prefix traffic registers the common prompt once
+//! ([`Server::register_prefix`]) and opens sessions against the key
+//! ([`Server::open_session_with_prefix`]): each open forks the pinned
+//! cache by refcount bumps (copy-on-write tail), so N sessions over a
+//! P-page prefix cost P + N·(private tail) pages instead of N·P.
 //! Note: decode steps for one session should be submitted sequentially
 //! (wait for each response before the next) — the usual token-streaming
 //! loop — as cross-batch ordering is not otherwise guaranteed.  Clients
@@ -127,9 +132,13 @@ pub struct Server {
     batcher_handle: Option<std::thread::JoinHandle<()>>,
     next_id: AtomicU64,
     next_session: AtomicU64,
+    /// submission order of prefix register/release ops — the engine
+    /// resolves cross-lane reordering by "newest submission wins"
+    prefix_seq: AtomicU64,
     /// introspection handles into the KV memory subsystem
     pool: PagePool,
     sessions: engine::SessionMap,
+    prefixes: engine::PrefixMap,
 }
 
 impl Server {
@@ -146,7 +155,7 @@ impl Server {
             .and_then(|d| Manifest::load(d.join("manifest.json")).ok());
         let router = Router::new(config.router.clone(), manifest.as_ref());
 
-        let (engine_tx, engine_handle, pool, sessions) = engine::spawn(
+        let (engine_tx, engine_handle, pool, sessions, prefixes) = engine::spawn(
             config.artifacts_dir.clone(),
             config.router.clone(),
             config.cache,
@@ -190,16 +199,20 @@ impl Server {
                         Some(sub) => {
                             let route = match &sub.work {
                                 Work::Full(job) => router.route(job),
-                                Work::Open { job, .. } => {
-                                    // sessions are shape-dynamic: always
-                                    // the substrate lane
+                                Work::Open { job, .. }
+                                | Work::RegisterPrefix { job, .. } => {
+                                    // sessions (and the prefix caches
+                                    // they fork from) are shape-dynamic:
+                                    // always the substrate lane
                                     let mut r = router.route(job);
                                     r.artifact = None;
                                     r
                                 }
                                 // decode steps of all live sessions share
                                 // one batch key so they coalesce together
-                                Work::Decode(_) | Work::Close { .. } => Route::decode_key(),
+                                Work::Decode(_)
+                                | Work::Close { .. }
+                                | Work::ReleasePrefix { .. } => Route::decode_key(),
                             };
                             let item = WorkItem {
                                 work: sub.work,
@@ -237,8 +250,10 @@ impl Server {
             batcher_handle: Some(batcher_handle),
             next_id: AtomicU64::new(1),
             next_session: AtomicU64::new(1),
+            prefix_seq: AtomicU64::new(1),
             pool,
             sessions,
+            prefixes,
         }
     }
 
@@ -275,7 +290,25 @@ impl Server {
     /// at a time; [`Server::close_session`] frees the cache.  Wait for
     /// the prefill ticket before submitting decode steps — the session
     /// is registered when the prefill completes.
-    pub fn open_session(&self, mut job: AttnJob) -> Result<(SessionId, Ticket), String> {
+    pub fn open_session(&self, job: AttnJob) -> Result<(SessionId, Ticket), String> {
+        self.open_session_with_prefix(None, job)
+    }
+
+    /// [`Server::open_session`] with an optional registered-prefix key.
+    /// With `Some(key)`, the job's q/k/v rows are the **continuation**
+    /// of the pinned prefix (positions `prefix_len..`): the engine
+    /// forks the prefix cache in O(pages) refcount bumps — no prefix
+    /// row is copied or recomputed, shared pages are charged once — and
+    /// prefills only the suffix.  The prefix must have been registered
+    /// via [`Server::register_prefix`] with the same (heads, d) shape
+    /// and compatible causality/scale; admission control charges the
+    /// session only for its private tail (the copy-on-write split of
+    /// the prefix's partial tail page plus the suffix's fresh pages).
+    pub fn open_session_with_prefix(
+        &self,
+        prefix: Option<&str>,
+        mut job: AttnJob,
+    ) -> Result<(SessionId, Ticket), String> {
         job.validate()?;
         if job.id == 0 {
             job.id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -283,8 +316,47 @@ impl Server {
         let session = self.next_session.fetch_add(1, Ordering::Relaxed);
         self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = sync_channel(1);
-        self.send(Work::Open { session, job }, Reply::Full(tx))?;
+        self.send(
+            Work::Open { session, job, prefix: prefix.map(str::to_string) },
+            Reply::Full(tx),
+        )?;
         Ok((session, Ticket { rx }))
+    }
+
+    /// Ingest a prompt into a pinned, shareable prefix cache under
+    /// `key` — the system-prompt / few-shot-preamble / RAG-scaffold
+    /// path: register the common prefix once, then every
+    /// [`Server::open_session_with_prefix`] call forks it instead of
+    /// re-ingesting it.  Returns a [`Ticket`] for the prefix's own
+    /// attention output; wait for it before opening sessions against
+    /// the key.  Re-registering a key replaces the old cache.  Pinned
+    /// prefixes are exempt from LRU eviction and the TTL sweep; drop
+    /// them with [`Server::release_prefix`].
+    pub fn register_prefix(
+        &self,
+        key: impl Into<String>,
+        mut job: AttnJob,
+    ) -> Result<Ticket, String> {
+        job.validate()?;
+        if job.id == 0 {
+            job.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        }
+        self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        let seq = self.prefix_seq.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = sync_channel(1);
+        self.send(Work::RegisterPrefix { key: key.into(), seq, job }, Reply::Full(tx))?;
+        Ok(Ticket { rx })
+    }
+
+    /// Unpin a registered prefix, releasing the registry's page
+    /// handles.  Fire-and-forget; pages still shared by live forked
+    /// sessions stay resident until those sessions close.  Safe to call
+    /// without waiting on the register ticket: ops are sequence-stamped
+    /// at submission, so even if the release overtakes its register
+    /// across batch lanes, the register will not resurrect the key.
+    pub fn release_prefix(&self, key: impl Into<String>) -> Result<(), String> {
+        let seq = self.prefix_seq.fetch_add(1, Ordering::Relaxed);
+        self.send(Work::ReleasePrefix { key: key.into(), seq }, Reply::None)
     }
 
     /// Submit one decode step for a live session.  Decode steps from
@@ -313,10 +385,11 @@ impl Server {
         &self.metrics
     }
 
-    /// Snapshot of the KV memory subsystem: page-pool counters,
-    /// utilization against the budget, and per-session residency.
+    /// Snapshot of the KV memory subsystem: page-pool counters
+    /// (including shared-page and copy-on-write gauges), utilization
+    /// against the budget, and per-session / per-prefix residency.
     pub fn cache_gauges(&self) -> CacheGauges {
-        engine::cache_gauges(&self.sessions, &self.pool, &self.metrics)
+        engine::cache_gauges(&self.sessions, &self.prefixes, &self.pool, &self.metrics)
     }
 
     /// Graceful shutdown: drain queues, stop both threads.
@@ -672,6 +745,86 @@ mod tests {
             v: vec![0.0; 32],
         };
         assert!(server.decode_wait(dj).is_err(), "reclaimed session is gone");
+        server.shutdown();
+    }
+
+    /// The end-to-end sharing invariant: N sessions opened against a
+    /// registered P-page prefix occupy P + N·(private tail) pages,
+    /// `pages_shared` reports the shared prefix pages, closing N−1
+    /// sessions frees nothing shared, and releasing the prefix plus the
+    /// last session frees everything.
+    #[test]
+    fn prefix_sessions_share_pages_end_to_end() {
+        let mut cfg = ServerConfig::substrate_only();
+        // mk_job shape is (h=2, d=16): 8 rows per page
+        cfg.cache.page_elems = 3 * 2 * 16 * 8;
+        let server = Server::start(cfg);
+        // 20-row prefix: 2 full pages + a 4-row tail page
+        let pre = server
+            .register_prefix("sys", mk_job(20, ModePreference::Exact, true, 7))
+            .unwrap();
+        let out = pre.wait().unwrap();
+        assert_eq!(out.out.len(), 2 * 20 * 16);
+        assert_eq!(server.cache_gauges().pages_in_use, 3);
+
+        // open 3 sessions, each continuing the prefix with 2 rows
+        let n_sessions = 3usize;
+        let mut sids = Vec::new();
+        for s in 0..n_sessions {
+            let (sid, t) = server
+                .open_session_with_prefix(
+                    Some("sys"),
+                    mk_job(2, ModePreference::Exact, true, 100 + s as i32),
+                )
+                .unwrap();
+            let resp = t.wait().unwrap();
+            assert_eq!(resp.out.len(), 2 * 2 * 16, "suffix outputs only");
+            sids.push(sid);
+        }
+        let g = server.cache_gauges();
+        // P=3 prefix pages + one COW'd tail page per session
+        assert_eq!(g.pages_in_use, 3 + n_sessions);
+        assert_eq!(g.pages_shared, 2, "the two frozen prefix pages");
+        assert_eq!(g.cow_copies, n_sessions as u64);
+        assert_eq!(g.per_prefix, vec![("sys".to_string(), 3, 20)]);
+        // sessions decode from position prefix+suffix onward
+        let mut rng = Rng::new(9);
+        let dj = DecodeJob {
+            session: sids[0],
+            heads: 2,
+            d: 16,
+            pos: Some(22),
+            q: rng.normal_vec(32),
+            k: rng.normal_vec(32),
+            v: rng.normal_vec(32),
+        };
+        let resp = server.decode_wait(dj).unwrap();
+        assert_eq!(resp.pos, 22);
+        // closing all but one session frees only private tails
+        for &sid in &sids[..n_sessions - 1] {
+            server.close_session(sid).unwrap();
+        }
+        // close is fire-and-forget: sync on a decode to the survivor
+        let dj = DecodeJob {
+            session: sids[n_sessions - 1],
+            heads: 2,
+            d: 16,
+            pos: Some(22),
+            q: rng.normal_vec(32),
+            k: rng.normal_vec(32),
+            v: rng.normal_vec(32),
+        };
+        server.decode_wait(dj).unwrap();
+        let g = server.cache_gauges();
+        assert_eq!(g.pages_shared, 2, "closing forks must not free shared pages");
+        // unknown prefix is an explicit error
+        let (_, t) = server
+            .open_session_with_prefix(Some("nope"), mk_job(2, ModePreference::Exact, true, 1))
+            .unwrap();
+        assert!(t.wait().unwrap_err().contains("unknown prefix"));
+        // release the prefix and the last session: everything frees
+        server.release_prefix("sys").unwrap();
+        server.close_session(sids[n_sessions - 1]).unwrap();
         server.shutdown();
     }
 

@@ -94,16 +94,27 @@
 //! [`linalg::KvCache`]): fixed-size head-major page frames with
 //! free-list recycling, an optional global page budget, and an
 //! [`attention::op::CachePolicy`] per session (full retention, or a
-//! sliding window with pinned attention-sink rows).  The serving
-//! coordinator exposes the same split as streaming sessions
+//! sliding window with pinned attention-sink rows).  Frames are
+//! **reference-counted** ([`linalg::SharedFrame`]): forking a cache
+//! ([`linalg::KvCache::fork`], [`attention::op::AttnCache::fork`],
+//! [`model::GenCache::fork`]) clones its block table in O(pages)
+//! refcount bumps and diverges **copy-on-write** — only the
+//! partially-filled tail page is ever privatized; frozen full pages
+//! stay shared until their last owner drops them, so N sessions over a
+//! P-page common prefix cost `P + N·tail` pages instead of `N·P`.  The
+//! serving coordinator exposes the same split as streaming sessions
 //! ([`coordinator::Server::open_session`] /
 //! [`coordinator::Server::decode`]) drawing pages from one shared pool
 //! — admission control LRU-evicts idle sessions or applies explicit
 //! backpressure when the pool is dry ([`coordinator::CacheConfig`]),
-//! and [`model::generate`] drives it autoregressively with per-layer
-//! caches ([`model::GenCache::with_policy`]).  (The historical
-//! per-algorithm free functions were removed; the view-based cores
-//! behind `AttentionOp` are the only implementation surface.)
+//! long common prompts are pinned once and forked per session
+//! ([`coordinator::Server::register_prefix`] /
+//! `open_session_with_prefix`, with `pages_shared`/`cow_copies` gauges
+//! in [`coordinator::CacheGauges`]), and [`model::generate`] drives it
+//! autoregressively with per-layer caches
+//! ([`model::GenCache::with_policy`]).  (The historical per-algorithm
+//! free functions were removed; the view-based cores behind
+//! `AttentionOp` are the only implementation surface.)
 //!
 //! ## Kernel dispatch
 //!

@@ -311,6 +311,57 @@ impl std::fmt::Debug for PageFrame {
     }
 }
 
+/// One *ownership handle* on a [`PageFrame`].  Several block tables may
+/// hold handles on the same frame (prefix sharing across forked
+/// caches); the frame returns to the pool's free list only when its
+/// **last** handle is released.  Deliberately not `Clone` — every
+/// duplication goes through [`PagePool::retain`] and every drop through
+/// [`PagePool::release`], so the pool's refcount bookkeeping (the
+/// `pages_shared` gauge, handle conservation) is exact.
+pub struct SharedFrame {
+    inner: Arc<PageFrame>,
+}
+
+impl SharedFrame {
+    /// Stable frame id (survives free-list recycling; equal ids ⇒ the
+    /// same physical page, the observable for sharing tests).
+    #[inline]
+    pub fn id(&self) -> u64 {
+        self.inner.id
+    }
+
+    /// True when this handle is the frame's only owner (writes are
+    /// allowed without a copy).
+    #[inline]
+    pub fn is_unique(&self) -> bool {
+        Arc::strong_count(&self.inner) == 1
+    }
+
+    #[inline]
+    fn data(&self) -> &[f32] {
+        &self.inner.data
+    }
+
+    /// Mutable page contents — available only to a sole owner (the
+    /// copy-on-write contract); shared frames must go through
+    /// [`KvCache`]'s private-copy path first.
+    #[inline]
+    fn data_mut(&mut self) -> Option<&mut [f32]> {
+        Arc::get_mut(&mut self.inner).map(|f| &mut f.data[..])
+    }
+}
+
+impl std::fmt::Debug for SharedFrame {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "SharedFrame(id={}, owners={})",
+            self.inner.id,
+            Arc::strong_count(&self.inner)
+        )
+    }
+}
+
 /// Point-in-time counters of a [`PagePool`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PoolStats {
@@ -318,8 +369,17 @@ pub struct PoolStats {
     pub page_elems: usize,
     /// max outstanding frames (None = unbounded)
     pub budget: Option<usize>,
-    /// frames currently checked out
+    /// frames currently checked out (each counted once no matter how
+    /// many owners share it — the physical-memory number the budget
+    /// bounds)
     pub outstanding: usize,
+    /// ownership handles currently live across all block tables
+    /// (= outstanding when nothing is shared; conservation invariant:
+    /// equals Σ owners per frame)
+    pub handles: usize,
+    /// frames currently held by more than one owner (the
+    /// `pages_shared` gauge)
+    pub shared: usize,
     /// recycled frames waiting on the free list
     pub free: usize,
     /// high-water mark of `outstanding`
@@ -332,6 +392,9 @@ pub struct PoolStats {
     pub reuses: u64,
     /// allocations rejected at the budget
     pub rejects: u64,
+    /// copy-on-write materializations (a shared frame privatized before
+    /// a write — the `cow_copies` gauge)
+    pub cows: u64,
 }
 
 struct PoolInner {
@@ -340,11 +403,14 @@ struct PoolInner {
     free: Vec<PageFrame>,
     next_id: u64,
     outstanding: usize,
+    handles: usize,
+    shared: usize,
     peak: usize,
     allocs: u64,
     frees: u64,
     reuses: u64,
     rejects: u64,
+    cows: u64,
 }
 
 /// Shared fixed-size page allocator: the memory-budget substrate under
@@ -353,8 +419,19 @@ struct PoolInner {
 /// its `[heads, d]` shape; an optional budget caps the total
 /// outstanding frames — [`PagePool::try_alloc`] past it returns an
 /// explicit [`POOL_EXHAUSTED`] error, which is the backpressure signal
-/// the serving layer turns into admission control.  Cheap to clone
-/// (`Arc` handle); all methods are thread-safe.
+/// the serving layer turns into admission control.
+///
+/// **Reference-counted ownership** ([`SharedFrame`]): a frame may be
+/// owned by several block tables at once (prefix sharing across
+/// [`KvCache::fork`]s).  [`PagePool::retain`] adds an owner and
+/// [`PagePool::release`] drops one; the frame returns to the free list
+/// only when its last owner releases it.  Both run under the pool lock,
+/// so the owner counts — and the derived `shared`/`handles` gauges —
+/// are exact.  `outstanding` (what the budget bounds) counts each
+/// physical frame **once** regardless of owners, which is precisely the
+/// "shared pages are charged once" accounting the serving layer's
+/// admission control builds on.  Cheap to clone (`Arc` handle); all
+/// methods are thread-safe.
 #[derive(Clone)]
 pub struct PagePool {
     inner: Arc<Mutex<PoolInner>>,
@@ -376,11 +453,14 @@ impl PagePool {
                 free: Vec::new(),
                 next_id: 0,
                 outstanding: 0,
+                handles: 0,
+                shared: 0,
                 peak: 0,
                 allocs: 0,
                 frees: 0,
                 reuses: 0,
                 rejects: 0,
+                cows: 0,
             })),
         }
     }
@@ -393,10 +473,10 @@ impl PagePool {
         self.inner.lock().unwrap().page_elems
     }
 
-    /// Check one frame out (free list first, then a fresh allocation).
-    /// At the budget this fails with a [`POOL_EXHAUSTED`] error and
-    /// counts a rejection.
-    pub fn try_alloc(&self) -> Result<PageFrame, String> {
+    /// Check one frame out (free list first, then a fresh allocation),
+    /// returning its sole ownership handle.  At the budget this fails
+    /// with a [`POOL_EXHAUSTED`] error and counts a rejection.
+    pub fn try_alloc(&self) -> Result<SharedFrame, String> {
         let mut p = self.inner.lock().unwrap();
         if let Some(b) = p.budget {
             if p.outstanding >= b {
@@ -417,17 +497,59 @@ impl PagePool {
         };
         p.allocs += 1;
         p.outstanding += 1;
+        p.handles += 1;
         p.peak = p.peak.max(p.outstanding);
-        Ok(frame)
+        Ok(SharedFrame { inner: Arc::new(frame) })
     }
 
-    /// Return a frame to the free list.
-    pub fn free(&self, frame: PageFrame) {
+    /// Add one owner to a frame (the O(1)-per-page fork primitive): no
+    /// allocation, no copy, no budget charge — `outstanding` already
+    /// counts the frame once.
+    pub fn retain(&self, frame: &SharedFrame) -> SharedFrame {
         let mut p = self.inner.lock().unwrap();
-        debug_assert_eq!(frame.data.len(), p.page_elems, "frame from another pool");
-        p.outstanding = p.outstanding.saturating_sub(1);
-        p.frees += 1;
-        p.free.push(frame);
+        // all retains/releases serialize on this lock, so the strong
+        // count is stable here: 1 -> 2 is exactly the moment the frame
+        // becomes shared
+        if Arc::strong_count(&frame.inner) == 1 {
+            p.shared += 1;
+        }
+        p.handles += 1;
+        SharedFrame { inner: Arc::clone(&frame.inner) }
+    }
+
+    /// Drop one owner.  The frame returns to the free list only when
+    /// this was its last handle; otherwise the surviving owners keep it
+    /// and only the refcount moves.
+    pub fn release(&self, frame: SharedFrame) {
+        let mut p = self.inner.lock().unwrap();
+        if Arc::strong_count(&frame.inner) == 2 {
+            // dropping from 2 owners to 1: no longer shared
+            p.shared = p.shared.saturating_sub(1);
+        }
+        p.handles = p.handles.saturating_sub(1);
+        match Arc::try_unwrap(frame.inner) {
+            Ok(f) => {
+                debug_assert_eq!(f.data.len(), p.page_elems, "frame from another pool");
+                p.outstanding = p.outstanding.saturating_sub(1);
+                p.frees += 1;
+                p.free.push(f);
+            }
+            Err(_still_shared) => {}
+        }
+    }
+
+    /// Count one copy-on-write materialization (called by the cache
+    /// layer after privatizing a shared frame, so the gauge survives
+    /// individual caches being dropped).
+    pub fn note_cow(&self) {
+        self.inner.lock().unwrap().cows += 1;
+    }
+
+    /// Ids of the frames currently on the free list (test/diagnostic
+    /// observable: a free-listed id must never also be referenced by a
+    /// live block table).
+    pub fn free_frame_ids(&self) -> Vec<u64> {
+        self.inner.lock().unwrap().free.iter().map(|f| f.id).collect()
     }
 
     pub fn stats(&self) -> PoolStats {
@@ -436,12 +558,15 @@ impl PagePool {
             page_elems: p.page_elems,
             budget: p.budget,
             outstanding: p.outstanding,
+            handles: p.handles,
+            shared: p.shared,
             free: p.free.len(),
             peak: p.peak,
             allocs: p.allocs,
             frees: p.frees,
             reuses: p.reuses,
             rejects: p.rejects,
+            cows: p.cows,
         }
     }
 }
@@ -490,6 +615,17 @@ pub struct KvSegment<'a> {
 /// appended row, so prefill chunks, decode steps, and every query tile
 /// stream one shared packed panel (the ROADMAP "packed-panel B reuse"
 /// follow-up).
+///
+/// **Prefix sharing** ([`KvCache::fork`]): the block table holds
+/// reference-counted [`SharedFrame`] handles, so forking a cache clones
+/// the table in O(pages) refcount bumps — no row is copied.  Writes are
+/// **copy-on-write**: the only frame a fork can ever mutate in place is
+/// the partially-filled tail page (appends land there), and
+/// [`KvCache::append`]/[`KvCache::sync_scaled`] privatize exactly that
+/// frame (one page copy, counted in [`PoolStats::cows`]) before
+/// touching it.  Full frozen pages stay shared for as long as any owner
+/// lives; eviction and [`KvCache::clear`] merely release this cache's
+/// handle — the frame is recycled only by its last owner.
 #[derive(Debug)]
 pub struct KvCache {
     heads: usize,
@@ -504,14 +640,14 @@ pub struct KvCache {
     /// frames pinned forever: ceil(sink / rows_page) under a window
     sink_pages: usize,
     /// block table, pinned half: absolute pages [0, sink_pages)
-    sink_frames: Vec<PageFrame>,
+    sink_frames: Vec<SharedFrame>,
     /// absolute page index of `tail_frames[0]`
     tail_base: usize,
     /// block table, evictable half (front = oldest)
-    tail_frames: VecDeque<PageFrame>,
+    tail_frames: VecDeque<SharedFrame>,
     /// frames pre-allocated by [`KvCache::reserve`], consumed before the
-    /// pool is hit again
-    spare: Vec<PageFrame>,
+    /// pool is hit again (always private — never shared by a fork)
+    spare: Vec<SharedFrame>,
     /// absolute rows whose scaled mirror is synced under `scale`
     scaled_abs: usize,
     scale: Option<f32>,
@@ -648,25 +784,46 @@ impl KvCache {
         self.peak_pages
     }
 
+    /// Spare frames pre-allocated by [`KvCache::reserve`] and not yet
+    /// consumed (they count against the pool budget but hold no rows).
+    pub fn spare_pages(&self) -> usize {
+        self.spare.len()
+    }
+
+    /// Ids of the resident frames in resident order (sink pages, then
+    /// tail pages) — the sharing observable: a fresh fork reports the
+    /// identical ids as its parent until copy-on-write diverges them.
+    pub fn resident_frame_ids(&self) -> Vec<u64> {
+        self.frames().map(|(_, f)| f.id()).collect()
+    }
+
+    /// Resident rows belonging to the pinned sink prefix (the leading
+    /// rows whose resident coordinates never shift under eviction).
     #[inline]
-    fn sink_resident_rows(&self) -> usize {
+    pub fn sink_resident_rows(&self) -> usize {
         (self.sink_pages * self.rows_page).min(self.len)
     }
 
     /// Pre-allocate the frames `additional` more rows will need, so the
-    /// following appends cannot fail at the pool.  Spare frames count
-    /// against the pool budget immediately and are freed by
-    /// [`KvCache::clear`]/drop if never used.
+    /// following appends cannot fail at the pool — including the
+    /// copy-on-write split of a currently-shared partial tail page
+    /// (one extra frame; the COW path consumes spares before touching
+    /// the pool).  A fork taken *after* this call can
+    /// still make the next append COW, so re-reserve after forking if
+    /// the guarantee matters.  Spare frames count against the pool
+    /// budget immediately and are freed by [`KvCache::clear`]/drop if
+    /// never used.
     pub fn reserve(&mut self, additional: usize) -> Result<(), String> {
         if additional == 0 {
             return Ok(());
         }
         let rp = self.rows_page;
         let first_new = self.len.div_ceil(rp);
-        let need = (self.len + additional)
-            .div_ceil(rp)
-            .saturating_sub(first_new)
-            .saturating_sub(self.spare.len());
+        let mut need = (self.len + additional).div_ceil(rp).saturating_sub(first_new);
+        if self.len % rp != 0 && !self.frame(self.len / rp).is_unique() {
+            need += 1; // the shared partial tail page will be COWed
+        }
+        let need = need.saturating_sub(self.spare.len());
         for _ in 0..need {
             let f = self.pool.try_alloc()?;
             self.spare.push(f);
@@ -710,10 +867,18 @@ impl KvCache {
             "pre-eviction freed the partial tail page new rows write into"
         );
 
+        // Copy-on-write: the one pre-existing frame this append writes
+        // into is the partially-filled last page; if a fork shares it,
+        // privatize it before acquiring anything else (an exhaustion
+        // here leaves the cache untouched).
+        if self.len % rp != 0 {
+            self.make_private(self.len / rp)?;
+        }
+
         // acquire every frame the new rows need before writing anything
         let first_new = self.len.div_ceil(rp);
         let need = new_len.div_ceil(rp).saturating_sub(first_new);
-        let mut fresh: Vec<PageFrame> = Vec::with_capacity(need);
+        let mut fresh: Vec<SharedFrame> = Vec::with_capacity(need);
         for _ in 0..need {
             if let Some(f) = self.spare.pop() {
                 fresh.push(f);
@@ -755,13 +920,16 @@ impl KvCache {
             } else {
                 &mut self.tail_frames[p - tail_base]
             };
+            let data = fr
+                .data_mut()
+                .expect("write frames are private (fresh, or COWed above)");
             for h in 0..heads {
                 let src = h * x.head_stride + i * d;
                 let kdst = h * hs + slot * d;
                 let vdst = heads * hs + kdst;
                 let span = take * d;
-                fr.data[kdst..kdst + span].copy_from_slice(&x.k[src..src + span]);
-                fr.data[vdst..vdst + span].copy_from_slice(&x.v[src..src + span]);
+                data[kdst..kdst + span].copy_from_slice(&x.k[src..src + span]);
+                data[vdst..vdst + span].copy_from_slice(&x.v[src..src + span]);
             }
             i += take;
         }
@@ -771,16 +939,78 @@ impl KvCache {
         Ok(())
     }
 
+    /// Clone this cache's block table by bumping per-frame refcounts —
+    /// O(resident pages), no row copies, no budget charge (the pool
+    /// counts a shared frame once).  The fork sees the identical
+    /// resident rows, then diverges copy-on-write: its appends privatize
+    /// only the partially-filled tail page; frozen full pages stay
+    /// shared until the last owner drops them.  Policy, logical length,
+    /// positions, and the scaled-mirror watermark carry over; the
+    /// eviction epoch continues from the parent's value and moves
+    /// independently afterwards.  Spare frames are not forked.
+    pub fn fork(&self) -> KvCache {
+        let sink_frames = self.sink_frames.iter().map(|f| self.pool.retain(f)).collect();
+        let tail_frames = self.tail_frames.iter().map(|f| self.pool.retain(f)).collect();
+        KvCache {
+            heads: self.heads,
+            d: self.d,
+            pool: self.pool.clone(),
+            rows_page: self.rows_page,
+            len: self.len,
+            window: self.window,
+            sink_pages: self.sink_pages,
+            sink_frames,
+            tail_base: self.tail_base,
+            tail_frames,
+            spare: Vec::new(),
+            scaled_abs: self.scaled_abs,
+            scale: self.scale,
+            epoch: self.epoch,
+            peak_pages: self.resident_pages(),
+        }
+    }
+
+    /// Ensure page `p` is exclusively owned, materializing a private
+    /// copy of just that frame if a fork shares it (the copy-on-write
+    /// split).  The copy target comes from the [`KvCache::reserve`]d
+    /// spares first, then the pool — so it can fail at the budget only
+    /// when nothing was reserved.  No-op for a sole owner — the fast
+    /// path is a refcount read.
+    fn make_private(&mut self, p: usize) -> Result<(), String> {
+        if self.frame(p).is_unique() {
+            return Ok(());
+        }
+        let mut fresh = match self.spare.pop() {
+            Some(f) => f,
+            None => self.pool.try_alloc()?,
+        };
+        let pool = self.pool.clone();
+        let slot = if p < self.sink_pages {
+            &mut self.sink_frames[p]
+        } else {
+            &mut self.tail_frames[p - self.tail_base]
+        };
+        fresh
+            .data_mut()
+            .expect("freshly allocated frame has one owner")
+            .copy_from_slice(slot.data());
+        let old = std::mem::replace(slot, fresh);
+        pool.release(old);
+        pool.note_cow();
+        Ok(())
+    }
+
     /// Free tail pages that fell fully out of the sliding window.
     fn evict(&mut self) {
         self.evict_to(self.len);
     }
 
-    /// Eviction core: free tail pages whose rows all precede the window
-    /// of a (possibly future) length `target_len`.  The newest tail
-    /// frame is never popped, which also protects a partially-filled
-    /// page the pre-append pass is about to extend (it is by
-    /// construction the last frame).
+    /// Eviction core: drop this cache's handle on tail pages whose rows
+    /// all precede the window of a (possibly future) length
+    /// `target_len` — the frame itself returns to the pool only if no
+    /// fork still owns it.  The newest tail frame is never popped, which
+    /// also protects a partially-filled page the pre-append pass is
+    /// about to extend (it is by construction the last frame).
     fn evict_to(&mut self, target_len: usize) {
         let Some((w, _)) = self.window else { return };
         let rp = self.rows_page;
@@ -788,7 +1018,7 @@ impl KvCache {
         let mut any = false;
         while self.tail_frames.len() > 1 && (self.tail_base + 1) * rp <= keep_from {
             let f = self.tail_frames.pop_front().expect("len > 1");
-            self.pool.free(f);
+            self.pool.release(f);
             self.tail_base += 1;
             any = true;
         }
@@ -801,53 +1031,62 @@ impl KvCache {
     /// the resident rows appended since the last sync (full resident
     /// rebuild if the scale changed).  Callers then read the `ks` plane
     /// of [`KvCache::head_segments`] / [`KvCache::key_row_scaled`].
-    pub fn sync_scaled(&mut self, scale: f32) {
+    /// Pages needing a write are privatized first (copy-on-write) — on
+    /// the steady path (same scale, mirror synced before a fork) no
+    /// shared frame is ever touched, so this returns `Ok` without
+    /// allocating; only a scale change after a fork can hit the pool.
+    pub fn sync_scaled(&mut self, scale: f32) -> Result<(), String> {
         if self.scale != Some(scale) {
             self.scale = Some(scale);
             self.scaled_abs = 0;
         }
         if self.scaled_abs == self.len {
-            return;
+            return Ok(());
         }
         let (rp, d, heads) = (self.rows_page, self.d, self.heads);
         let (len, from) = (self.len, self.scaled_abs);
         let hs = rp * d;
-        for (p, fr) in self.frames_mut() {
+        // walk only the pages intersecting [from, len) — on the decode
+        // hot path that is just the tail page, with no block-table scan
+        // and no allocation; evicted middle pages are skipped by index
+        for p in from / rp..len.div_ceil(rp) {
+            if p >= self.sink_pages && p < self.tail_base {
+                continue; // evicted (or never-tail) middle page
+            }
             let f_lo = p * rp;
             let f_hi = ((p + 1) * rp).min(len);
             let lo = f_lo.max(from);
             if lo >= f_hi {
                 continue;
             }
+            self.make_private(p)?;
+            let fr = if p < self.sink_pages {
+                &mut self.sink_frames[p]
+            } else {
+                &mut self.tail_frames[p - self.tail_base]
+            };
+            let data = fr.data_mut().expect("made private above");
             let (r0, r1) = ((lo - f_lo) * d, (f_hi - f_lo) * d);
             for h in 0..heads {
                 let ksrc = h * hs;
                 let kdst = 2 * heads * hs + h * hs;
-                fr.data.copy_within(ksrc + r0..ksrc + r1, kdst + r0);
-                kernel::scale(&mut fr.data[kdst + r0..kdst + r1], scale);
+                data.copy_within(ksrc + r0..ksrc + r1, kdst + r0);
+                kernel::scale(&mut data[kdst + r0..kdst + r1], scale);
             }
         }
         self.scaled_abs = self.len;
+        Ok(())
     }
 
     /// All resident frames with their absolute page indices, in
     /// resident order (sink pages, then tail pages) — the one place the
     /// block-table shape is spelled out for iteration.
-    fn frames(&self) -> impl Iterator<Item = (usize, &PageFrame)> + '_ {
+    fn frames(&self) -> impl Iterator<Item = (usize, &SharedFrame)> + '_ {
         let tb = self.tail_base;
         self.sink_frames
             .iter()
             .enumerate()
             .chain(self.tail_frames.iter().enumerate().map(move |(i, f)| (tb + i, f)))
-    }
-
-    /// Mutable variant of [`KvCache::frames`].
-    fn frames_mut(&mut self) -> impl Iterator<Item = (usize, &mut PageFrame)> + '_ {
-        let tb = self.tail_base;
-        self.sink_frames
-            .iter_mut()
-            .enumerate()
-            .chain(self.tail_frames.iter_mut().enumerate().map(move |(i, f)| (tb + i, f)))
     }
 
     /// Map a resident-row coordinate to (absolute page, slot in page).
@@ -860,7 +1099,7 @@ impl KvCache {
     }
 
     #[inline]
-    fn frame(&self, p: usize) -> &PageFrame {
+    fn frame(&self, p: usize) -> &SharedFrame {
         if p < self.sink_pages {
             &self.sink_frames[p]
         } else {
@@ -892,12 +1131,13 @@ impl KvCache {
             let ko = h * hs;
             let vo = heads * hs + ko;
             let so = 2 * heads * hs + ko;
+            let data = fr.data();
             out.push(KvSegment {
                 start,
                 abs_start: f_lo,
-                k: MatRef { rows, cols: d, data: &fr.data[ko..ko + rows * d] },
-                v: MatRef { rows, cols: d, data: &fr.data[vo..vo + rows * d] },
-                ks: MatRef { rows, cols: d, data: &fr.data[so..so + rows * d] },
+                k: MatRef { rows, cols: d, data: &data[ko..ko + rows * d] },
+                v: MatRef { rows, cols: d, data: &data[vo..vo + rows * d] },
+                ks: MatRef { rows, cols: d, data: &data[so..so + rows * d] },
             });
             start += rows;
         }
@@ -913,7 +1153,7 @@ impl KvCache {
         let (p, slot) = self.locate(r);
         let hs = self.rows_page * self.d;
         let off = 2 * self.heads * hs + h * hs + slot * self.d;
-        &self.frame(p).data[off..off + self.d]
+        &self.frame(p).data()[off..off + self.d]
     }
 
     /// One resident row of the value plane.
@@ -923,7 +1163,7 @@ impl KvCache {
         let (p, slot) = self.locate(r);
         let hs = self.rows_page * self.d;
         let off = self.heads * hs + h * hs + slot * self.d;
-        &self.frame(p).data[off..off + self.d]
+        &self.frame(p).data()[off..off + self.d]
     }
 
     /// Gather the first `rows` resident raw-key rows of one head into an
@@ -936,7 +1176,7 @@ impl KvCache {
         for r in 0..rows {
             let (p, slot) = self.locate(r);
             let off = h * hs + slot * self.d;
-            out.row_mut(r).copy_from_slice(&self.frame(p).data[off..off + self.d]);
+            out.row_mut(r).copy_from_slice(&self.frame(p).data()[off..off + self.d]);
         }
         out
     }
@@ -956,17 +1196,18 @@ impl KvCache {
         out
     }
 
-    /// Drop the contents, returning every frame (resident and spare) to
-    /// the pool — recycled capacity lives in the pool's free list.
+    /// Drop the contents, releasing this cache's handle on every frame
+    /// (resident and spare) — frames no fork still owns return to the
+    /// pool's free list; shared ones survive with their other owners.
     pub fn clear(&mut self) {
         for f in self.sink_frames.drain(..) {
-            self.pool.free(f);
+            self.pool.release(f);
         }
         while let Some(f) = self.tail_frames.pop_front() {
-            self.pool.free(f);
+            self.pool.release(f);
         }
         for f in self.spare.drain(..) {
-            self.pool.free(f);
+            self.pool.release(f);
         }
         self.len = 0;
         self.tail_base = self.sink_pages;
@@ -1242,30 +1483,65 @@ mod tests {
         assert_eq!((a.id(), b.id(), c.id()), (0, 1, 2), "fresh ids are sequential");
         let s = pool.stats();
         assert_eq!((s.outstanding, s.free, s.peak), (3, 0, 3));
+        assert_eq!((s.handles, s.shared), (3, 0));
         // budget reached: explicit backpressure, counted
         let err = pool.try_alloc().unwrap_err();
         assert!(err.contains(POOL_EXHAUSTED), "{err}");
         assert_eq!(pool.stats().rejects, 1);
-        // freeing recycles through the free list, preserving identity
+        // releasing the last owner recycles through the free list,
+        // preserving identity
         let freed_id = b.id();
-        pool.free(b);
+        pool.release(b);
         let s = pool.stats();
         assert_eq!((s.outstanding, s.free, s.frees), (2, 1, 1));
         let b2 = pool.try_alloc().unwrap();
         assert_eq!(b2.id(), freed_id, "free list must hand the frame back");
         assert_eq!(pool.stats().reuses, 1);
         // peak never decreases
-        pool.free(a);
-        pool.free(b2);
-        pool.free(c);
+        pool.release(a);
+        pool.release(b2);
+        pool.release(c);
         let s = pool.stats();
         assert_eq!((s.outstanding, s.free, s.peak), (0, 3, 3));
         assert_eq!(s.allocs, 4);
+        assert_eq!(s.handles, 0, "every handle returned");
         // clones share the same pool
         let clone = pool.clone();
         let d = clone.try_alloc().unwrap();
         assert_eq!(pool.stats().outstanding, 1);
-        clone.free(d);
+        clone.release(d);
+    }
+
+    /// The refcount layer: retain adds owners without charging the
+    /// budget, a frame frees only on its last release, and the
+    /// shared/handles gauges track the transitions exactly.
+    #[test]
+    fn page_pool_refcounts_free_on_last_owner() {
+        let pool = PagePool::new(16, Some(2));
+        let a = pool.try_alloc().unwrap();
+        let b = pool.try_alloc().unwrap();
+        // at the budget: a retain must still succeed (no new frame)
+        assert!(pool.try_alloc().is_err());
+        let a2 = pool.retain(&a);
+        let a3 = pool.retain(&a2);
+        assert_eq!(a2.id(), a.id());
+        assert!(!a.is_unique());
+        let s = pool.stats();
+        assert_eq!((s.outstanding, s.handles, s.shared), (2, 4, 1));
+        // dropping non-last owners frees nothing
+        pool.release(a3);
+        pool.release(a);
+        let s = pool.stats();
+        assert_eq!((s.outstanding, s.handles, s.shared, s.frees), (2, 2, 0, 0));
+        assert!(a2.is_unique(), "two of three owners dropped");
+        // the last owner's release recycles the frame
+        let id = a2.id();
+        pool.release(a2);
+        let s = pool.stats();
+        assert_eq!((s.outstanding, s.handles, s.free, s.frees), (1, 1, 1, 1));
+        assert_eq!(pool.free_frame_ids(), vec![id]);
+        pool.release(b);
+        assert_eq!(pool.stats().outstanding, 0);
     }
 
     /// Per-head gathered rows of the paged cache must equal, bitwise,
@@ -1304,7 +1580,7 @@ mod tests {
             }
         }
         // segments tile the resident rows exactly, in order
-        cache.sync_scaled(1.0);
+        cache.sync_scaled(1.0).unwrap();
         for head in 0..h {
             let segs = cache.head_segments(head);
             let mut covered = 0usize;
@@ -1389,7 +1665,7 @@ mod tests {
             let v = rng.normal_vec(h * n * d);
             let view = QkvView::new(h, n, d, &q, &k, &v).unwrap();
             cache.append(&view).unwrap();
-            cache.sync_scaled(sc);
+            cache.sync_scaled(sc).unwrap();
             check(&cache, sc);
         }
         // per-row accessor agrees with the segment view
@@ -1403,7 +1679,7 @@ mod tests {
             }
         }
         // scale change forces a full resident rebuild
-        cache.sync_scaled(2.0);
+        cache.sync_scaled(2.0).unwrap();
         check(&cache, 2.0);
     }
 
@@ -1469,7 +1745,7 @@ mod tests {
         assert_eq!(s.outstanding, cache.resident_pages());
         assert!(s.frees > 0 && s.reuses > 0);
         // segments report diverging resident vs absolute coordinates
-        cache.sync_scaled(1.0);
+        cache.sync_scaled(1.0).unwrap();
         let segs = cache.head_segments(0);
         assert!(segs.iter().any(|s| s.abs_start > s.start));
         // window must retain at least one row
@@ -1497,7 +1773,143 @@ mod tests {
         drop(cache);
         assert_eq!(pool.stats().outstanding, 0);
         let fresh = pool.try_alloc().unwrap();
-        pool.free(fresh);
+        pool.release(fresh);
+    }
+
+    fn rand_view_bufs(
+        rng: &mut Rng,
+        h: usize,
+        n: usize,
+        d: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        (
+            rng.normal_vec(h * n * d),
+            rng.normal_vec(h * n * d),
+            rng.normal_vec(h * n * d),
+        )
+    }
+
+    /// Fork shares every resident frame by identity (same ids, zero new
+    /// pages), reads the identical rows, and the pool charges the
+    /// shared pages once.
+    #[test]
+    fn kv_cache_fork_shares_frames_and_rows() {
+        let (h, d, rp) = (2usize, 3usize, 4usize);
+        let pool = PagePool::unbounded(3 * h * d * rp);
+        let mut rng = Rng::new(40);
+        let mut base = KvCache::with_pool(h, d, pool.clone(), None).unwrap();
+        let (q, k, v) = rand_view_bufs(&mut rng, h, 11, d); // 11 rows: partial tail page
+        base.append(&QkvView::new(h, 11, d, &q, &k, &v).unwrap()).unwrap();
+        base.sync_scaled(0.5).unwrap();
+        let before = pool.stats();
+        let fork = base.fork();
+        let s = pool.stats();
+        assert_eq!(s.outstanding, before.outstanding, "fork allocates nothing");
+        assert_eq!(s.shared, 3, "all three resident pages now shared");
+        assert_eq!(s.handles, before.handles + 3);
+        assert_eq!(fork.resident_frame_ids(), base.resident_frame_ids());
+        assert_eq!(fork.len(), 11);
+        for head in 0..h {
+            assert_eq!(fork.gather_head_k(head).data, base.gather_head_k(head).data);
+            assert_eq!(fork.gather_head_v(head).data, base.gather_head_v(head).data);
+            // the scaled mirror carried over too (no re-sync needed)
+            for r in 0..11 {
+                assert_eq!(fork.key_row_scaled(head, r), base.key_row_scaled(head, r));
+            }
+        }
+        // dropping the fork frees nothing (base still owns everything)
+        drop(fork);
+        let s = pool.stats();
+        assert_eq!((s.outstanding, s.shared, s.frees), (3, 0, 0));
+        // dropping the last owner frees all three
+        drop(base);
+        assert_eq!(pool.stats().outstanding, 0);
+    }
+
+    /// Copy-on-write: an append into a fork privatizes only the partial
+    /// tail page (one COW copy); frozen full pages stay shared; the
+    /// parent's rows are untouched.
+    #[test]
+    fn kv_cache_fork_copy_on_write_tail_page() {
+        let (h, d, rp) = (1usize, 4usize, 4usize);
+        let pool = PagePool::unbounded(3 * h * d * rp);
+        let mut rng = Rng::new(41);
+        let mut base = KvCache::with_pool(h, d, pool.clone(), None).unwrap();
+        let (q, k, v) = rand_view_bufs(&mut rng, h, 10, d); // pages: 4+4+2(partial)
+        base.append(&QkvView::new(h, 10, d, &q, &k, &v).unwrap()).unwrap();
+        base.sync_scaled(1.0).unwrap();
+        let base_ids = base.resident_frame_ids();
+        let mut fork = base.fork();
+        let parent_k = base.gather_head_k(0).data.clone();
+
+        // fork appends 1 row into the shared partial tail page
+        let (q1, k1, v1) = rand_view_bufs(&mut rng, h, 1, d);
+        fork.append(&QkvView::new(h, 1, d, &q1, &k1, &v1).unwrap()).unwrap();
+        fork.sync_scaled(1.0).unwrap();
+        let s = pool.stats();
+        assert_eq!(s.cows, 1, "exactly the tail page was copied");
+        assert_eq!(s.outstanding, 4, "3 original + 1 private copy");
+        assert_eq!(s.shared, 2, "the two frozen pages stay shared");
+        let fork_ids = fork.resident_frame_ids();
+        assert_eq!(&fork_ids[..2], &base_ids[..2], "frozen pages shared by identity");
+        assert_ne!(fork_ids[2], base_ids[2], "tail page diverged");
+        // parent sees its original rows; fork sees original + new
+        assert_eq!(base.gather_head_k(0).data, parent_k);
+        assert_eq!(fork.len(), 11);
+        let fk = fork.gather_head_k(0);
+        assert_eq!(&fk.data[..10 * d], &parent_k[..]);
+        assert_eq!(&fk.data[10 * d..], &k1[..]);
+
+        // parent appends too: its tail is unique again (fork left), so
+        // NO second COW for the parent
+        let (q2, k2, v2) = rand_view_bufs(&mut rng, h, 1, d);
+        base.append(&QkvView::new(h, 1, d, &q2, &k2, &v2).unwrap()).unwrap();
+        assert_eq!(pool.stats().cows, 1, "sole owner writes in place");
+        let bk = base.gather_head_k(0);
+        assert_eq!(&bk.data[10 * d..], &k2[..]);
+        // a full-page fork boundary: fork at len % rows_page == 0 never COWs
+        let mut aligned = KvCache::with_pool(h, d, pool.clone(), None).unwrap();
+        let (qa, ka, va) = rand_view_bufs(&mut rng, h, 8, d);
+        aligned.append(&QkvView::new(h, 8, d, &qa, &ka, &va).unwrap()).unwrap();
+        let cows_before = pool.stats().cows;
+        let mut af = aligned.fork();
+        af.append(&QkvView::new(h, 1, d, &q1, &k1, &v1).unwrap()).unwrap();
+        assert_eq!(pool.stats().cows, cows_before, "aligned fork appends copy nothing");
+    }
+
+    /// A windowed fork evicting shared pages only drops its own handle:
+    /// the parent keeps reading the frames, and the frame recycles only
+    /// after every owner lets go.
+    #[test]
+    fn kv_cache_fork_eviction_releases_handle_only() {
+        let (h, d, rp) = (1usize, 3usize, 2usize);
+        let pool = PagePool::unbounded(3 * h * d * rp);
+        let mut rng = Rng::new(42);
+        // window 4, no sink: old pages evict as the fork grows
+        let mut base = KvCache::with_pool(h, d, pool.clone(), Some((4, 0))).unwrap();
+        let (q, k, v) = rand_view_bufs(&mut rng, h, 6, d);
+        base.append(&QkvView::new(h, 6, d, &q, &k, &v).unwrap()).unwrap();
+        let mut fork = base.fork();
+        let parent_rows = base.gather_head_k(0).data.clone();
+        let (parent_epoch, epoch0) = (base.epoch(), fork.epoch());
+        // grow the fork until it evicts the pages it shares with base
+        let (q1, k1, v1) = rand_view_bufs(&mut rng, h, 6, d);
+        fork.append(&QkvView::new(h, 6, d, &q1, &k1, &v1).unwrap()).unwrap();
+        assert!(fork.epoch() > epoch0, "fork evictions move the fork's epoch");
+        assert_eq!(base.epoch(), parent_epoch, "parent epoch is independent");
+        // parent still reads every one of its resident rows
+        assert_eq!(base.gather_head_k(0).data, parent_rows);
+        let s = pool.stats();
+        // no frame both free-listed and referenced
+        let free_ids = pool.free_frame_ids();
+        for id in base.resident_frame_ids().into_iter().chain(fork.resident_frame_ids()) {
+            assert!(!free_ids.contains(&id), "frame {id} free-listed while referenced");
+        }
+        assert_eq!(
+            s.handles,
+            base.resident_pages() + fork.resident_pages(),
+            "handle conservation"
+        );
     }
 
     #[test]

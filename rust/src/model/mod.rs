@@ -368,6 +368,20 @@ impl GenCache {
     pub fn is_empty(&self) -> bool {
         self.pos == 0
     }
+
+    /// Fork the generation state: every layer's KV cache is cloned by
+    /// refcount bumps over its shared page frames
+    /// ([`AttnCache::fork`]) — O(pages per layer), no row copies — and
+    /// diverges copy-on-write from here.  This is the beam / multi-
+    /// continuation primitive: ingest a prompt once, fork per
+    /// candidate continuation, and each fork's decode is bitwise
+    /// identical to a freshly ingested session (pinned by a test).
+    pub fn fork(&self) -> GenCache {
+        GenCache {
+            layers: self.layers.iter().map(|c| c.fork()).collect(),
+            pos: self.pos,
+        }
+    }
 }
 
 /// Incremental forward: run `tokens_new` (a prompt chunk, or a single
@@ -599,6 +613,37 @@ mod tests {
         // invalid policy surfaces as an error, not a panic
         let zero = CachePolicy::SlidingWindow { window: 0, sink: 0 };
         assert!(GenCache::with_policy(&m, zero).is_err());
+    }
+
+    /// Forked generation state decodes bitwise-identically to a
+    /// freshly ingested cache, and the parent's own continuation is
+    /// unaffected by the fork's divergence (copy-on-write isolation
+    /// through every layer).
+    #[test]
+    fn forked_gen_cache_matches_independent_ingest() {
+        let m = tiny();
+        let prompt: Vec<usize> = (0..22).map(|i| (i * 5) % 16).collect();
+        let cont_a: Vec<usize> = (0..6).map(|i| (i * 7 + 1) % 16).collect();
+        let cont_b: Vec<usize> = (0..6).map(|i| (i * 11 + 3) % 16).collect();
+        // parent ingests the prompt once
+        let mut parent = GenCache::new(&m);
+        let lp = forward_cached(&m, &prompt, 1, 0, &mut parent);
+        // independent oracle: fresh cache fed prompt then cont_a
+        let mut indep = GenCache::new(&m);
+        let li = forward_cached(&m, &prompt, 1, 0, &mut indep);
+        assert_eq!(lp, li, "identical ingests must match bitwise");
+        // fork decodes cont_a; parent decodes cont_b (divergence)
+        let mut fork = parent.fork();
+        assert_eq!(fork.len(), prompt.len());
+        for t in 0..cont_a.len() {
+            let lf = forward_cached(&m, &cont_a[t..t + 1], 1, 0, &mut fork);
+            let lo = forward_cached(&m, &cont_a[t..t + 1], 1, 0, &mut indep);
+            assert_eq!(lf, lo, "fork decode diverged from independent ingest at t={t}");
+            // interleave the parent's own (different) continuation
+            let _ = forward_cached(&m, &cont_b[t..t + 1], 1, 0, &mut parent);
+        }
+        assert_eq!(fork.len(), prompt.len() + cont_a.len());
+        assert_eq!(parent.len(), prompt.len() + cont_b.len());
     }
 
     #[test]

@@ -9,12 +9,14 @@ use std::time::{Duration, Instant};
 
 use hyperattention::attention::exact;
 use hyperattention::attention::measure;
-use hyperattention::attention::op::{self, AttnConfig, SeedPolicy};
+use hyperattention::attention::op::{
+    self, AttnCache, AttnConfig, AutoPolicy, CachePolicy, SeedPolicy,
+};
 use hyperattention::coordinator::batcher::{BatchConfig, BatchQueue};
 use hyperattention::coordinator::{
     AttnJob, Backend, DecodeJob, ModePreference, Router, RouterConfig, Server, ServerConfig,
 };
-use hyperattention::linalg::{Mat, QkvView};
+use hyperattention::linalg::{Mat, PagePool, QkvView};
 use hyperattention::rng::Rng;
 use hyperattention::runtime::{Manifest, Runtime};
 
@@ -449,6 +451,195 @@ fn concurrent_streaming_sessions_complete() {
         48
     );
     assert_eq!(m.jobs_failed.load(std::sync::atomic::Ordering::Relaxed), 0);
+}
+
+/// Gather one token's `[heads, d]` slice out of a `[heads, total, d]`
+/// packed buffer.
+fn token_at(buf: &[f32], h: usize, total: usize, d: usize, t: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(h * d);
+    for head in 0..h {
+        out.extend_from_slice(&buf[head * total * d + t * d..head * total * d + (t + 1) * d]);
+    }
+    out
+}
+
+/// Acceptance gate: a session forked from a shared prefix decodes
+/// **bitwise identically** to a session that independently ingested the
+/// same prefix — on every backend (Exact/Flash/Hyper/CausalHyper/Auto,
+/// plus the sampled-decode estimator), at prefix lengths that leave a
+/// partially-filled tail page (so the continuation forces a
+/// copy-on-write split), and while the fork's parent concurrently
+/// diverges with different tokens.
+#[test]
+fn forked_decode_bitwise_matches_independent_ingest_all_backends() {
+    let (h, d, steps) = (2usize, 8usize, 6usize);
+    let rp = 4usize; // small pages: every prefix below spans several
+    let configs: Vec<(&str, AttnConfig)> = vec![
+        (
+            "exact",
+            AttnConfig { backend: op::Backend::Exact, causal: true, ..Default::default() },
+        ),
+        ("flash", AttnConfig::flash(true)),
+        (
+            "hyper",
+            AttnConfig {
+                backend: op::Backend::Hyper,
+                block: 8,
+                samples: 8,
+                seed: SeedPolicy::PerHead(5),
+                ..Default::default()
+            },
+        ),
+        ("causal-hyper", AttnConfig::causal_hyper(8, 8, 16)),
+        (
+            "auto",
+            AttnConfig { backend: op::Backend::Auto, causal: true, ..Default::default() },
+        ),
+        (
+            "sampled-decode",
+            AttnConfig {
+                backend: op::Backend::CausalHyper,
+                causal: true,
+                block: 8,
+                samples: 8,
+                causal_base: 16,
+                seed: SeedPolicy::PerHead(11),
+                auto: AutoPolicy {
+                    decode_hyper_threshold: 1,
+                    decode_resample_interval: 4,
+                    ..AutoPolicy::default()
+                },
+                ..Default::default()
+            },
+        ),
+    ];
+    for (name, cfg) in configs {
+        let attn = cfg.build().unwrap();
+        // 7 and 18: partial tail pages (COW on the first forked append);
+        // 16: page-aligned (no COW at all)
+        for prefix_len in [7usize, 16, 18] {
+            let total = prefix_len + 2 * steps;
+            let mut rng = Rng::new(0x5EED ^ prefix_len as u64);
+            let q = rng.normal_vec(h * total * d);
+            let k = rng.normal_vec(h * total * d);
+            let v = rng.normal_vec(h * total * d);
+            let prefix = QkvView::strided(h, prefix_len, d, total * d, &q, &k, &v).unwrap();
+
+            let pool = PagePool::unbounded(3 * h * d * rp);
+            let mut base = AttnCache::with_pool(h, d, CachePolicy::Full, &pool).unwrap();
+            attn.prefill(&mut base, prefix).unwrap();
+            let mut fork = base.fork();
+            assert_eq!(fork.len(), prefix_len);
+
+            // independent oracle: same prefix ingested into its own pool
+            let ipool = PagePool::unbounded(3 * h * d * rp);
+            let mut indep = AttnCache::with_pool(h, d, CachePolicy::Full, &ipool).unwrap();
+            attn.prefill(&mut indep, prefix).unwrap();
+
+            for t in 0..steps {
+                // the parent diverges FIRST with a different token, so
+                // the fork's reads cross a live COW split
+                let (bq, bk, bv) = (
+                    token_at(&q, h, total, d, prefix_len + steps + t),
+                    token_at(&k, h, total, d, prefix_len + steps + t),
+                    token_at(&v, h, total, d, prefix_len + steps + t),
+                );
+                let bview = QkvView::new(h, 1, d, &bq, &bk, &bv).unwrap();
+                attn.decode_step(&mut base, bview).unwrap();
+
+                let (qt, kt, vt) = (
+                    token_at(&q, h, total, d, prefix_len + t),
+                    token_at(&k, h, total, d, prefix_len + t),
+                    token_at(&v, h, total, d, prefix_len + t),
+                );
+                let fview = QkvView::new(h, 1, d, &qt, &kt, &vt).unwrap();
+                let iview = QkvView::new(h, 1, d, &qt, &kt, &vt).unwrap();
+                let fo = attn.decode_step(&mut fork, fview).unwrap();
+                let io = attn.decode_step(&mut indep, iview).unwrap();
+                assert_eq!(fo.sampled, io.sampled, "{name} prefix={prefix_len} t={t}");
+                assert_eq!(
+                    fo.out, io.out,
+                    "{name} prefix={prefix_len} t={t}: forked decode \
+                     diverged from independent ingest"
+                );
+            }
+            assert_eq!(fork.resamples(), indep.resamples(), "{name} prefix={prefix_len}");
+        }
+    }
+}
+
+/// Fork-then-evict divergence: under a sliding window the fork's own
+/// decode slides pages it still shares with the parent out of its
+/// window (releasing handles, not frames) — and every step stays
+/// bitwise identical to an independently ingested windowed session,
+/// through the sampled path's in-place index remapping too.
+#[test]
+fn forked_windowed_decode_matches_independent_across_eviction() {
+    let (h, d, steps) = (2usize, 8usize, 30usize);
+    let rp = 4usize;
+    let prefix_len = 18usize;
+    let policy = CachePolicy::SlidingWindow { window: 12, sink: 4 };
+    let configs: Vec<(&str, AttnConfig)> = vec![
+        ("flash", AttnConfig::flash(true)),
+        (
+            "sampled-decode",
+            AttnConfig {
+                backend: op::Backend::CausalHyper,
+                causal: true,
+                block: 8,
+                samples: 8,
+                causal_base: 16,
+                seed: SeedPolicy::PerHead(23),
+                auto: AutoPolicy {
+                    decode_hyper_threshold: 1,
+                    decode_resample_interval: 6,
+                    ..AutoPolicy::default()
+                },
+                ..Default::default()
+            },
+        ),
+    ];
+    for (name, cfg) in configs {
+        let attn = cfg.build().unwrap();
+        let total = prefix_len + steps;
+        let mut rng = Rng::new(0xF0F0);
+        let q = rng.normal_vec(h * total * d);
+        let k = rng.normal_vec(h * total * d);
+        let v = rng.normal_vec(h * total * d);
+        let prefix = QkvView::strided(h, prefix_len, d, total * d, &q, &k, &v).unwrap();
+
+        let pool = PagePool::unbounded(3 * h * d * rp);
+        let mut base = AttnCache::with_pool(h, d, policy, &pool).unwrap();
+        attn.prefill(&mut base, prefix).unwrap();
+        let mut fork = base.fork();
+        let ipool = PagePool::unbounded(3 * h * d * rp);
+        let mut indep = AttnCache::with_pool(h, d, policy, &ipool).unwrap();
+        attn.prefill(&mut indep, prefix).unwrap();
+
+        for t in 0..steps {
+            let (qt, kt, vt) = (
+                token_at(&q, h, total, d, prefix_len + t),
+                token_at(&k, h, total, d, prefix_len + t),
+                token_at(&v, h, total, d, prefix_len + t),
+            );
+            let fview = QkvView::new(h, 1, d, &qt, &kt, &vt).unwrap();
+            let iview = QkvView::new(h, 1, d, &qt, &kt, &vt).unwrap();
+            let fo = attn.decode_step(&mut fork, fview).unwrap();
+            let io = attn.decode_step(&mut indep, iview).unwrap();
+            assert_eq!(
+                fo.out, io.out,
+                "{name} t={t}: forked windowed decode diverged from independent"
+            );
+        }
+        assert!(fork.kv().evicted_rows() > 0, "{name}: the window must have evicted");
+        assert_eq!(fork.resident_len(), indep.resident_len(), "{name}");
+        assert_eq!((fork.resamples(), fork.remaps()), (indep.resamples(), indep.remaps()));
+        // the parent still reads its full resident prefix afterwards
+        assert_eq!(base.len(), prefix_len);
+        for head in 0..h {
+            assert!(base.kv().gather_head_k(head).data.iter().all(|x| x.is_finite()));
+        }
+    }
 }
 
 /// Substrate determinism across the full coordinator stack.

@@ -1,0 +1,305 @@
+//! Property-test harness for the paged, prefix-shared KV cache:
+//! seeded randomized interleavings of append / fork / evict (via
+//! windowed appends) / clear / drop across 2–8 caches sharing ONE
+//! `PagePool`, checked after **every** step against a flat unshared
+//! oracle and the pool's conservation invariants:
+//!
+//! * bitwise row equality — every live cache's resident K and V rows
+//!   equal the rows the documented retention rule selects from its flat
+//!   append history;
+//! * refcount conservation — `PoolStats::handles` equals the total
+//!   block-table entries across all live caches (Σ owners per frame);
+//! * identity — `outstanding` counts distinct frames; `shared` counts
+//!   frames with > 1 owner (recomputed independently from frame ids);
+//! * no frame is both free-listed and referenced by a live block table;
+//! * `in_use + free == capacity` — outstanding plus free-listed frames
+//!   equals every frame ever created (`allocs - reuses`), and a budget
+//!   is never exceeded;
+//! * failed appends (budget backpressure) leave the cache unchanged.
+//!
+//! Runs ≥ 200 seeded trials by default in `cargo test -q`; the CI
+//! workflow widens the matrix via `HYPERATTN_PROP_SEEDS`.
+
+use std::collections::HashMap;
+
+use hyperattention::linalg::{KvCache, PagePool, QkvView, POOL_EXHAUSTED};
+use hyperattention::rng::Rng;
+
+const H: usize = 2;
+const D: usize = 3;
+const RP: usize = 4; // rows per page at this (H, D) and page_elems
+
+/// Flat unshared mirror of one cache: the full append history per head,
+/// the retention policy, and the oracle's own tail-base computed from
+/// the documented eviction recurrence (stateful, because a failed
+/// append's pre-eviction pass legitimately trims pages for a length the
+/// cache never reached — the documented retry-converges behavior).
+#[derive(Clone)]
+struct Oracle {
+    hist_k: Vec<Vec<f32>>, // [head][abs_row * D ..]
+    hist_v: Vec<Vec<f32>>,
+    window: Option<(usize, usize)>,
+    /// first non-evicted tail page (the documented rule, tracked here)
+    tb: usize,
+}
+
+impl Oracle {
+    fn sink_pages(window: Option<(usize, usize)>) -> usize {
+        window.map_or(0, |(_, s)| s.div_ceil(RP))
+    }
+
+    fn new(window: Option<(usize, usize)>) -> Self {
+        Oracle {
+            hist_k: vec![Vec::new(); H],
+            hist_v: vec![Vec::new(); H],
+            window,
+            tb: Self::sink_pages(window),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.hist_k[0].len() / D
+    }
+
+    /// The documented eviction recurrence, restated independently: free
+    /// every existing tail page wholly before the window of `target`,
+    /// never popping the newest existing page.
+    fn bump(&mut self, cur_len: usize, target: usize) {
+        let Some((w, _)) = self.window else { return };
+        if cur_len == 0 {
+            return;
+        }
+        let last = (cur_len - 1) / RP;
+        if last <= self.tb {
+            return;
+        }
+        let want = target.saturating_sub(w) / RP;
+        self.tb = self.tb.max(want.min(last));
+    }
+
+    /// Expected resident rows: pinned sink pages plus rows from the
+    /// oracle tail base.
+    fn expected_resident(&self) -> Vec<usize> {
+        let len = self.len();
+        match self.window {
+            None => (0..len).collect(),
+            Some((_, s)) => {
+                let sp = s.div_ceil(RP);
+                let mut rows: Vec<usize> = (0..len.min(sp * RP)).collect();
+                rows.extend((self.tb * RP).min(len)..len);
+                rows
+            }
+        }
+    }
+}
+
+struct Slot {
+    cache: KvCache,
+    oracle: Oracle,
+}
+
+fn new_slot(pool: &PagePool, rng: &mut Rng) -> Slot {
+    let window = match rng.below(3) {
+        0 => None,
+        _ => Some((1 + rng.below(12), rng.below(7))),
+    };
+    let cache = KvCache::with_pool(H, D, pool.clone(), window).expect("valid shape");
+    Slot { cache, oracle: Oracle::new(window) }
+}
+
+fn append_rows(slot: &mut Slot, rng: &mut Rng, n: usize) {
+    let q = rng.normal_vec(H * n * D);
+    let k = rng.normal_vec(H * n * D);
+    let v = rng.normal_vec(H * n * D);
+    let view = QkvView::new(H, n, D, &q, &k, &v).expect("view");
+    let len_before = slot.cache.len();
+    match slot.cache.append(&view) {
+        Ok(()) => {
+            // pre-eviction at the old length targeting the new one,
+            // then the post-append eviction over the new frames
+            slot.oracle.bump(len_before, len_before + n);
+            slot.oracle.bump(len_before + n, len_before + n);
+            for h in 0..H {
+                slot.oracle.hist_k[h].extend_from_slice(&k[h * n * D..(h + 1) * n * D]);
+                slot.oracle.hist_v[h].extend_from_slice(&v[h * n * D..(h + 1) * n * D]);
+            }
+        }
+        Err(e) => {
+            assert!(e.contains(POOL_EXHAUSTED), "only backpressure may fail: {e}");
+            assert_eq!(slot.cache.len(), len_before, "failed append must not grow");
+            // the pre-eviction pass ran before the failure (documented:
+            // it only trims pages the append would have expired anyway)
+            slot.oracle.bump(len_before, len_before + n);
+        }
+    }
+}
+
+/// Every invariant, checked against the live pool and all live caches.
+fn check_all(slots: &[Option<Slot>], pool: &PagePool, seed: u64, step: usize) {
+    let ctx = |what: &str| format!("seed {seed} step {step}: {what}");
+    let mut owners: HashMap<u64, usize> = HashMap::new();
+    let mut table_entries = 0usize;
+    let mut spares = 0usize;
+    for slot in slots.iter().flatten() {
+        let cache = &slot.cache;
+        let oracle = &slot.oracle;
+        assert_eq!(cache.len(), oracle.len(), "{}", ctx("logical length"));
+        let expect = oracle.expected_resident();
+        assert_eq!(cache.resident_len(), expect.len(), "{}", ctx("resident length"));
+        assert_eq!(cache.evicted_rows(), oracle.len() - expect.len(), "{}", ctx("evicted"));
+        for h in 0..H {
+            let got_k = cache.gather_head_k(h);
+            let got_v = cache.gather_head_v(h);
+            for (r, &abs) in expect.iter().enumerate() {
+                assert_eq!(
+                    got_k.row(r),
+                    &oracle.hist_k[h][abs * D..(abs + 1) * D],
+                    "{}",
+                    ctx(&format!("K head {h} resident row {r} (abs {abs})"))
+                );
+                assert_eq!(
+                    got_v.row(r),
+                    &oracle.hist_v[h][abs * D..(abs + 1) * D],
+                    "{}",
+                    ctx(&format!("V head {h} resident row {r} (abs {abs})"))
+                );
+            }
+        }
+        let ids = cache.resident_frame_ids();
+        assert_eq!(ids.len(), cache.resident_pages(), "{}", ctx("block table size"));
+        table_entries += ids.len() + cache.spare_pages();
+        spares += cache.spare_pages();
+        for id in ids {
+            *owners.entry(id).or_insert(0) += 1;
+        }
+    }
+    let s = pool.stats();
+    // refcount conservation: Σ owners per frame == table entries
+    assert_eq!(s.handles, table_entries, "{}", ctx("handle conservation"));
+    // outstanding counts distinct frames once (spares from failed
+    // appends are sole-owned, so each contributes one distinct frame);
+    // shared counts >1-owner frames
+    assert_eq!(
+        s.outstanding,
+        owners.len() + spares,
+        "{}",
+        ctx("distinct outstanding frames")
+    );
+    assert_eq!(
+        s.shared,
+        owners.values().filter(|&&c| c > 1).count(),
+        "{}",
+        ctx("shared-frame gauge")
+    );
+    // no frame both free-listed and referenced
+    let free = pool.free_frame_ids();
+    for id in owners.keys() {
+        assert!(!free.contains(id), "{}", ctx(&format!("frame {id} free while referenced")));
+    }
+    // in_use + free == capacity (frames ever created), budget respected
+    assert_eq!(
+        s.outstanding + s.free,
+        (s.allocs - s.reuses) as usize,
+        "{}",
+        ctx("frame conservation")
+    );
+    if let Some(b) = s.budget {
+        assert!(s.outstanding <= b, "{}", ctx("budget exceeded"));
+    }
+}
+
+fn run_trial(seed: u64) {
+    let mut rng = Rng::new(seed);
+    let budget = if rng.below(4) == 0 { Some(10 + rng.below(24)) } else { None };
+    let pool = PagePool::new(3 * H * D * RP, budget);
+    let n_slots = 2 + rng.below(7); // 2..=8 caches share the pool
+    let mut slots: Vec<Option<Slot>> = (0..n_slots).map(|_| None).collect();
+    slots[0] = Some(new_slot(&pool, &mut rng));
+
+    for step in 0..30 {
+        let live: Vec<usize> = (0..n_slots).filter(|&i| slots[i].is_some()).collect();
+        let empty: Vec<usize> = (0..n_slots).filter(|&i| slots[i].is_none()).collect();
+        match rng.below(100) {
+            // append 1..=6 rows (windowed caches evict as they slide)
+            0..=54 => {
+                if let Some(&i) = live.get(rng.below(live.len().max(1))) {
+                    let n = 1 + rng.below(6);
+                    append_rows(slots[i].as_mut().unwrap(), &mut rng, n);
+                }
+            }
+            // fork a live cache into another slot (block-table sharing)
+            55..=74 => {
+                if !live.is_empty() {
+                    let src = live[rng.below(live.len())];
+                    let dst = if !empty.is_empty() {
+                        empty[rng.below(empty.len())]
+                    } else {
+                        // replace a random other slot (drops its cache)
+                        let others: Vec<usize> =
+                            live.iter().copied().filter(|&i| i != src).collect();
+                        match others.get(rng.below(others.len().max(1))) {
+                            Some(&i) => i,
+                            None => continue,
+                        }
+                    };
+                    let forked = {
+                        let s = slots[src].as_ref().unwrap();
+                        Slot { cache: s.cache.fork(), oracle: s.oracle.clone() }
+                    };
+                    // identity: a fresh fork shares every frame with its source
+                    assert_eq!(
+                        forked.cache.resident_frame_ids(),
+                        slots[src].as_ref().unwrap().cache.resident_frame_ids(),
+                        "seed {seed} step {step}: fork must share frames by identity"
+                    );
+                    slots[dst] = Some(forked);
+                }
+            }
+            // clear: rows gone, handles released, cache reusable
+            75..=84 => {
+                if let Some(&i) = live.get(rng.below(live.len().max(1))) {
+                    let slot = slots[i].as_mut().unwrap();
+                    slot.cache.clear();
+                    let w = slot.oracle.window;
+                    slot.oracle = Oracle::new(w);
+                }
+            }
+            // drop: the cache releases every handle on the way out
+            85..=92 => {
+                if let Some(&i) = live.get(rng.below(live.len().max(1))) {
+                    slots[i] = None;
+                }
+            }
+            // create a fresh cache in an empty slot
+            _ => {
+                if let Some(&i) = empty.get(rng.below(empty.len().max(1))) {
+                    slots[i] = Some(new_slot(&pool, &mut rng));
+                }
+            }
+        }
+        check_all(&slots, &pool, seed, step);
+    }
+
+    // teardown: dropping every cache must drain the pool completely
+    for slot in slots.iter_mut() {
+        *slot = None;
+    }
+    let s = pool.stats();
+    assert_eq!(s.outstanding, 0, "seed {seed}: frames leaked at teardown");
+    assert_eq!(s.handles, 0, "seed {seed}: handles leaked at teardown");
+    assert_eq!(s.free, (s.allocs - s.reuses) as usize, "seed {seed}: frame conservation");
+}
+
+/// ≥ 200 seeded interleavings by default (the acceptance floor);
+/// `HYPERATTN_PROP_SEEDS=N` widens or narrows the matrix (CI runs a
+/// larger one).
+#[test]
+fn paged_cache_properties_hold_across_seeded_interleavings() {
+    let trials: u64 = std::env::var("HYPERATTN_PROP_SEEDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(220);
+    for t in 0..trials {
+        run_trial(0xC0FFEE ^ (t * 0x9E3779B9));
+    }
+}
