@@ -51,7 +51,7 @@ fn main() {
     cfg.batch.max_batch = 8;
     cfg.batch.max_wait = std::time::Duration::from_millis(2);
 
-    let server = Arc::new(Server::start(cfg));
+    let server = Arc::new(Server::start(cfg).unwrap());
     println!(
         "coordinator up ({} mode)",
         if artifacts.is_some() { "artifacts + substrate" } else { "substrate-only" }
@@ -186,7 +186,7 @@ fn main() {
     cfg.router.hyper_threshold = 1024;
     cfg.cache.page_elems = 3 * h * d * 64; // 64 rows per page at this shape
     cfg.cache.budget_pages = Some(80);
-    let server = Server::start(cfg.clone());
+    let server = Server::start(cfg.clone()).unwrap();
     println!("\n=== budgeted sessions: 80-page pool, full-retention caches ===");
     for s in 0..6u32 {
         match open(&server, s) {
@@ -206,7 +206,7 @@ fn main() {
     // rows pinned): every session now fits in ~10 resident pages, so
     // all six coexist inside the same 80-page pool with no evictions.
     cfg.cache.policy = CachePolicy::SlidingWindow { window: 512, sink: 64 };
-    let server = Server::start(cfg);
+    let server = Server::start(cfg).unwrap();
     println!("\n=== same 80-page pool, sliding-window caches (512 + 64 sink) ===");
     for s in 0..6u32 {
         match open(&server, s) {
@@ -222,7 +222,7 @@ fn main() {
     let mut tiny = ServerConfig::substrate_only();
     tiny.cache.page_elems = 3 * h * d * 64;
     tiny.cache.budget_pages = Some(8);
-    let server = Server::start(tiny);
+    let server = Server::start(tiny).unwrap();
     println!("\n=== 8-page pool: explicit backpressure ===");
     match open(&server, 0) {
         Ok(sid) => println!("  unexpected admit: {sid}"),
@@ -242,7 +242,7 @@ fn main() {
     cfg.router.hyper_threshold = 1024;
     cfg.cache.page_elems = 3 * h * d * 64;
     cfg.cache.budget_pages = Some(80);
-    let server = Server::start(cfg);
+    let server = Server::start(cfg).unwrap();
     println!("\n=== same 80-page pool, 24 sessions sharing a 2048-row prefix ===");
     let mut rng = Rng::new(31337);
     let plen = h * n * d;

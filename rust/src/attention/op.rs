@@ -667,6 +667,22 @@ impl AttnCache {
         Ok(())
     }
 
+    /// Degrade this session to a tighter sliding window (the graceful-
+    /// degradation step of the coordinator's overload ladder): the
+    /// retained window becomes `min(existing, window)` rows, sink
+    /// pinning is unchanged, pages outside the new window are freed to
+    /// the pool **now**, and the policy reported by
+    /// [`AttnCache::policy`] reflects the degraded state.  Decode
+    /// continues seamlessly — the eviction bumps the cache epoch, so
+    /// live samplers are remapped (or rebuilt) exactly as for any other
+    /// out-of-band eviction.  Returns the new effective policy.
+    pub fn degrade(&mut self, window: usize) -> Result<CachePolicy, String> {
+        self.kv.tighten_window(window)?;
+        let (window, sink) = self.kv.window().expect("tighten_window installs a window");
+        self.policy = CachePolicy::SlidingWindow { window, sink };
+        Ok(self.policy)
+    }
+
     /// Drop contents and decode state (recycled pages return to the
     /// pool's free list).  Also resets the resample counter, so
     /// [`AttnCache::resamples`] always counts the current sequence only.
@@ -2201,6 +2217,60 @@ mod tests {
             "windowed resample count must honor the interval, not rows_per_page"
         );
         assert!(win_remaps > 0);
+    }
+
+    /// Degrading a live session mid-decode (the coordinator's overload
+    /// ladder step) must free pages immediately and keep decoding —
+    /// the epoch bump routes through the same remap/rebuild path as
+    /// policy-driven eviction, deterministically.
+    #[test]
+    fn degrade_mid_decode_frees_pages_and_keeps_serving() {
+        let (h, d, n) = (1usize, 8usize, 60usize);
+        let cfg = AttnConfig {
+            backend: Backend::CausalHyper,
+            causal: true,
+            block: 8,
+            samples: 8,
+            causal_base: 16,
+            seed: SeedPolicy::PerHead(11),
+            auto: AutoPolicy { decode_hyper_threshold: 1, ..AutoPolicy::default() },
+            ..Default::default()
+        };
+        let op = cfg.build().unwrap();
+        let (q, k, v) = clustered_flat(28, h, n, d);
+        let run = || {
+            let pool = PagePool::unbounded(3 * h * d * 4); // 4 rows per page
+            let mut cache = AttnCache::with_pool(h, d, CachePolicy::Full, &pool).unwrap();
+            let mut outs = Vec::new();
+            let mut freed_at_degrade = 0usize;
+            for t in 0..n {
+                if t == 40 {
+                    let before = cache.kv().resident_pages();
+                    let p = cache.degrade(12).unwrap();
+                    assert_eq!(p, CachePolicy::SlidingWindow { window: 12, sink: 0 });
+                    assert_eq!(cache.policy(), p);
+                    freed_at_degrade = before - cache.kv().resident_pages();
+                }
+                let (qt, kt, vt) = (
+                    token_bufs(&q, h, n, d, t),
+                    token_bufs(&k, h, n, d, t),
+                    token_bufs(&v, h, n, d, t),
+                );
+                let view = QkvView::new(h, 1, d, &qt, &kt, &vt).unwrap();
+                let o = op.decode_step(&mut cache, view).unwrap();
+                assert!(o.out.iter().all(|x| x.is_finite()), "t={t}");
+                outs.push(o.out);
+            }
+            assert!(freed_at_degrade > 0, "degrade must free pages immediately");
+            assert!(cache.kv().evicted_rows() > 0);
+            // degrade is monotone: a looser request never re-grows
+            cache.degrade(100).unwrap();
+            assert_eq!(cache.policy(), CachePolicy::SlidingWindow { window: 12, sink: 0 });
+            outs
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "degraded decode must stay deterministic");
     }
 
     /// The scratch-threaded one-row decode core must be bitwise

@@ -40,13 +40,18 @@
 //! sweep ([`Work::ReleasePrefix`] unpins them).
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
+use std::sync::atomic::Ordering::Relaxed;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use super::failpoint::{self, lock_recover};
 use super::metrics::{CacheGauges, Metrics};
-use super::request::{AttnJob, AttnResponse, Backend, DecodeJob, DecodeResponse, SessionId};
+use super::request::{
+    AttnJob, AttnResponse, Backend, DecodeJob, DecodeResponse, SessionId, DEADLINE_EXPIRED,
+};
 use super::router::{Route, RouteKind, RouterConfig};
 use crate::attention::op::{self, AttnCache, AttnConfig, AttentionOp, CachePolicy, SeedPolicy};
 use crate::linalg::{PagePool, QkvView, POOL_EXHAUSTED};
@@ -73,6 +78,10 @@ pub enum Work {
     /// Unpin a prefix cache.  Pages still shared by live forked
     /// sessions survive until those sessions drop them.
     ReleasePrefix { key: String, seq: u64 },
+    /// Health probe: flows through the full submit → route → batch →
+    /// execute pipeline and answers immediately, so a reply proves the
+    /// whole path is live (not just that a queue accepted the message).
+    Ping,
 }
 
 /// The response channel matching a [`Work`] variant (bounded-1 std
@@ -80,6 +89,8 @@ pub enum Work {
 pub enum Reply {
     Full(SyncSender<Result<AttnResponse, String>>),
     Decode(SyncSender<Result<DecodeResponse, String>>),
+    /// health-probe ack (Err on shutdown flush)
+    Ping(SyncSender<Result<(), String>>),
     /// fire-and-forget (session close)
     None,
 }
@@ -89,6 +100,11 @@ pub struct WorkItem {
     pub work: Work,
     pub route: Route,
     pub submitted: Instant,
+    /// Resolve with [`DEADLINE_EXPIRED`] instead of executing if this
+    /// instant passes while the item is still queued.  `None` = no
+    /// deadline.  Close/release ops ignore it (they must always run —
+    /// skipping them would leak sessions or pinned pages).
+    pub deadline: Option<Instant>,
     pub respond: Reply,
 }
 
@@ -124,6 +140,13 @@ pub struct CacheConfig {
     /// reclaim sessions idle longer than this (None = off, the
     /// default).  The sweep runs on the engine thread at ~ttl/4.
     pub idle_ttl: Option<Duration>,
+    /// Graceful-degradation window: when a decode step keeps hitting
+    /// pool exhaustion after backoff and LRU eviction, the session is
+    /// degraded **once** to a sliding window of at most this many rows
+    /// (sink pinning preserved) and decode resumes — trading context
+    /// for availability before the final admission-reject shed.
+    /// None (the default) disables the degrade rung of the ladder.
+    pub degrade_window: Option<usize>,
 }
 
 impl Default for CacheConfig {
@@ -134,6 +157,7 @@ impl Default for CacheConfig {
             budget_pages: None,
             policy: CachePolicy::Full,
             idle_ttl: None,
+            degrade_window: None,
         }
     }
 }
@@ -147,6 +171,9 @@ pub(crate) struct SessionEntry {
     cache: AttnCache,
     /// last open/decode activity — the LRU-eviction and TTL-sweep key
     last_used: Instant,
+    /// already degraded to the tighter window (each session degrades at
+    /// most once; after that, sustained exhaustion sheds)
+    degraded: bool,
 }
 
 pub(crate) type SessionMap = Arc<Mutex<HashMap<SessionId, Option<SessionEntry>>>>;
@@ -202,10 +229,11 @@ const SESSION_WAIT: std::time::Duration = std::time::Duration::from_secs(10);
 /// another worker has it checked out.  Errors if the session does not
 /// exist or stays checked out past [`SESSION_WAIT`].
 fn checkout(sessions: &SessionMap, id: SessionId) -> Result<SessionEntry, String> {
+    failpoint::hit("session_checkout")?;
     let deadline = Instant::now() + SESSION_WAIT;
     loop {
         {
-            let mut map = sessions.lock().unwrap();
+            let mut map = lock_recover(sessions);
             match map.get_mut(&id) {
                 None => return Err(format!("unknown session {id}")),
                 Some(slot) => {
@@ -225,7 +253,7 @@ fn checkout(sessions: &SessionMap, id: SessionId) -> Result<SessionEntry, String
 /// Return a checked-out entry.  If the session was closed (or the table
 /// cleared on shutdown) while it was out, the entry is dropped.
 fn checkin(sessions: &SessionMap, id: SessionId, entry: SessionEntry) {
-    let mut map = sessions.lock().unwrap();
+    let mut map = lock_recover(sessions);
     if let Some(slot) = map.get_mut(&id) {
         *slot = Some(entry);
     }
@@ -239,7 +267,7 @@ fn close_session(sessions: &SessionMap, id: SessionId) {
     let deadline = Instant::now() + SESSION_WAIT;
     loop {
         {
-            let mut map = sessions.lock().unwrap();
+            let mut map = lock_recover(sessions);
             let checked_out = matches!(map.get(&id), Some(None));
             if !checked_out || Instant::now() >= deadline {
                 // absent (already closed), present-and-idle, or wedged
@@ -293,7 +321,7 @@ fn evict_lru_session(ctx: &EngineCtx, skip: Option<SessionId>) -> bool {
     // per page) after releasing the table — concurrent decode
     // checkouts must not stall behind a large cache teardown
     let victim = {
-        let mut map = ctx.sessions.lock().unwrap();
+        let mut map = lock_recover(&ctx.sessions);
         let id = map
             .iter()
             .filter(|(id, slot)| Some(**id) != skip && slot.is_some())
@@ -304,9 +332,7 @@ fn evict_lru_session(ctx: &EngineCtx, skip: Option<SessionId>) -> bool {
     match victim {
         Some(entry) => {
             drop(entry); // frees its pages back to the pool
-            ctx.metrics
-                .sessions_evicted
-                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            ctx.metrics.sessions_evicted.fetch_add(1, Relaxed);
             true
         }
         None => false,
@@ -321,7 +347,7 @@ fn sweep_idle(ctx: &EngineCtx, ttl: Duration) {
     // collect + detach under the lock; tear the caches down (page
     // frees) after releasing it
     let dead = {
-        let mut map = ctx.sessions.lock().unwrap();
+        let mut map = lock_recover(&ctx.sessions);
         let ids: Vec<SessionId> = map
             .iter()
             .filter(|(_, slot)| {
@@ -334,9 +360,7 @@ fn sweep_idle(ctx: &EngineCtx, ttl: Duration) {
     let n = dead.len() as u64;
     drop(dead); // frees the reclaimed sessions' pages
     if n > 0 {
-        ctx.metrics
-            .sessions_reclaimed
-            .fetch_add(n, std::sync::atomic::Ordering::Relaxed);
+        ctx.metrics.sessions_reclaimed.fetch_add(n, Relaxed);
     }
 }
 
@@ -350,9 +374,8 @@ pub(crate) fn cache_gauges(
     pool: &PagePool,
     metrics: &Metrics,
 ) -> CacheGauges {
-    use std::sync::atomic::Ordering::Relaxed;
     let s = pool.stats();
-    let map = sessions.lock().unwrap();
+    let map = lock_recover(sessions);
     let mut per_session: Vec<(u64, usize, usize)> = map
         .iter()
         .map(|(id, slot)| match slot {
@@ -361,8 +384,12 @@ pub(crate) fn cache_gauges(
         })
         .collect();
     per_session.sort_by_key(|&(id, _, _)| id);
+    let degraded_live = map
+        .values()
+        .filter(|slot| slot.as_ref().is_some_and(|e| e.degraded))
+        .count() as u64;
     drop(map);
-    let pmap = prefixes.lock().unwrap();
+    let pmap = lock_recover(prefixes);
     let mut per_prefix: Vec<(String, usize, usize)> = pmap
         .iter()
         .filter_map(|(key, slot)| match slot {
@@ -390,6 +417,9 @@ pub(crate) fn cache_gauges(
         admission_rejects: metrics.admission_rejects.load(Relaxed),
         per_session,
         per_prefix,
+        degraded_sessions: degraded_live,
+        failpoints: failpoint::counters().into_iter().filter(|(_, n)| *n > 0).collect(),
+        poison_recovered: failpoint::poison_recovered(),
     }
 }
 
@@ -473,13 +503,14 @@ fn run_open(
     kind: RouteKind,
     ctx: &EngineCtx,
 ) -> Result<Vec<f32>, String> {
+    failpoint::hit("open_job")?;
     let cfg = substrate_config(job, kind, &ctx.rc);
     let attn = cfg.build()?;
     let (cache, out) = match prefix {
         None => prefill_with_admission(job, &attn, "prompt", ctx)?,
         Some(key) => fork_prefix_with_admission(job, &attn, key, &cfg, ctx)?,
     };
-    ctx.sessions.lock().unwrap().insert(
+    lock_recover(&ctx.sessions).insert(
         session,
         Some(SessionEntry {
             cfg,
@@ -487,6 +518,7 @@ fn run_open(
             d: job.d,
             cache,
             last_used: Instant::now(),
+            degraded: false,
         }),
     );
     Ok(out)
@@ -508,7 +540,7 @@ fn fork_prefix_with_admission(
 ) -> Result<(AttnCache, Vec<f32>), String> {
     let rows_page = ctx.cache.page_elems / (3 * job.heads * job.d).max(1);
     admit_prefill(job, attn, ctx, || {
-        let map = ctx.prefixes.lock().unwrap();
+        let map = lock_recover(&ctx.prefixes);
         let Some(PrefixSlot::Live(entry)) = map.get(key) else {
             return Err(format!("unknown prefix {key:?}"));
         };
@@ -559,11 +591,12 @@ fn run_register_prefix(
     kind: RouteKind,
     ctx: &EngineCtx,
 ) -> Result<Vec<f32>, String> {
+    failpoint::hit("prefix_register")?;
     let cfg = substrate_config(job, kind, &ctx.rc);
     let attn = cfg.build()?;
     let (cache, out) = prefill_with_admission(job, &attn, "prefix", ctx)?;
     let old = {
-        let mut map = ctx.prefixes.lock().unwrap();
+        let mut map = lock_recover(&ctx.prefixes);
         let superseded = match map.get(key) {
             Some(PrefixSlot::Live(e)) => e.seq > seq,
             Some(PrefixSlot::Released(s)) => *s > seq,
@@ -592,8 +625,11 @@ fn run_register_prefix(
 /// register already landed.  The dropped cache's handles are released
 /// outside the lock.
 fn run_release_prefix(key: String, seq: u64, ctx: &EngineCtx) {
+    // Infallible seam (release must not fail): `err` unwinds instead
+    // and is caught by the per-job isolation.
+    failpoint::hit_unwind("prefix_release");
     let old = {
-        let mut map = ctx.prefixes.lock().unwrap();
+        let mut map = lock_recover(&ctx.prefixes);
         let newer_exists = match map.get(&key) {
             Some(PrefixSlot::Live(e)) => e.seq > seq,
             Some(PrefixSlot::Released(s)) => *s >= seq,
@@ -612,19 +648,33 @@ fn run_release_prefix(key: String, seq: u64, ctx: &EngineCtx) {
 /// whether it came from the feasibility precheck, an empty eviction
 /// candidate list, or the retry bound).
 fn reject_admission(ctx: &EngineCtx, why: String) -> String {
-    ctx.metrics
-        .admission_rejects
-        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    ctx.metrics.admission_rejects.fetch_add(1, Relaxed);
     format!("session admission rejected: {why}")
 }
 
+/// Backoff schedule for transient decode-time pool exhaustion: another
+/// session may be releasing pages (a close or slide in flight), so wait
+/// briefly before escalating.  Bounded and deadline-aware.
+const DECODE_BACKOFFS: [Duration; 3] = [
+    Duration::from_micros(500),
+    Duration::from_millis(1),
+    Duration::from_millis(2),
+];
+
 /// Run one decode step against its session's checked-out cache.  A
 /// decode append can also exhaust the pool (one more page as the window
-/// slides); it retries after LRU-evicting *other* idle sessions.
+/// slides); exhaustion walks the full degradation ladder: bounded
+/// exponential **backoff** (`retries`), then **LRU-evicting** *other*
+/// idle sessions, then — with [`CacheConfig::degrade_window`] set —
+/// **degrading** this session once to a tighter sliding window
+/// (`degraded_sessions`), and only then **shedding** with an admission
+/// reject.
 fn run_decode(
     job: &DecodeJob,
+    deadline: Option<Instant>,
     ctx: &EngineCtx,
 ) -> Result<crate::attention::op::DecodeOutput, String> {
+    failpoint::hit("decode_job")?;
     let mut entry = checkout(&ctx.sessions, job.session)?;
     if job.heads != entry.heads || job.d != entry.d {
         let msg = format!(
@@ -648,19 +698,60 @@ fn run_decode(
             return Err(msg);
         }
     }
-    let attn = entry.cfg.build().expect("session config validated at open");
-    let view = QkvView::new(job.heads, 1, job.d, &job.q, &job.k, &job.v)
-        .expect("decode job validated at submit");
-    let mut attempts = 0usize;
+    // typed errors, not expects: these were "validated at open/submit",
+    // but a fault between then and now (or a buggy caller bypassing the
+    // server) must fail this one ticket, not the worker
+    let attn = match entry.cfg.build() {
+        Ok(a) => a,
+        Err(e) => {
+            let msg = format!("session {} config no longer builds: {e}", job.session);
+            checkin(&ctx.sessions, job.session, entry);
+            return Err(msg);
+        }
+    };
+    let view = match QkvView::new(job.heads, 1, job.d, &job.q, &job.k, &job.v) {
+        Ok(v) => v,
+        Err(e) => {
+            let msg = format!("malformed decode job for session {}: {e}", job.session);
+            checkin(&ctx.sessions, job.session, entry);
+            return Err(msg);
+        }
+    };
+    let mut backoffs = 0usize;
+    let mut evictions = 0usize;
     let res = loop {
         match attn.decode_step(&mut entry.cache, view) {
             Err(e) if e.contains(POOL_EXHAUSTED) => {
-                if attempts < MAX_ADMISSION_EVICTIONS
+                // rung 1: transient — wait for in-flight releases
+                if backoffs < DECODE_BACKOFFS.len() {
+                    let wait = DECODE_BACKOFFS[backoffs];
+                    let fits = match deadline {
+                        Some(dl) => Instant::now() + wait < dl,
+                        None => true,
+                    };
+                    if fits {
+                        backoffs += 1;
+                        ctx.metrics.retries.fetch_add(1, Relaxed);
+                        std::thread::sleep(wait);
+                        continue;
+                    }
+                }
+                // rung 2: reclaim someone else's idle pages
+                if evictions < MAX_ADMISSION_EVICTIONS
                     && evict_lru_session(ctx, Some(job.session))
                 {
-                    attempts += 1;
+                    evictions += 1;
                     continue;
                 }
+                // rung 3: degrade this session (once) and resume
+                if let (Some(w), false) = (ctx.cache.degrade_window, entry.degraded) {
+                    if entry.cache.degrade(w).is_ok() {
+                        entry.degraded = true;
+                        ctx.metrics.degraded_sessions.fetch_add(1, Relaxed);
+                        continue;
+                    }
+                }
+                // rung 4: shed with explicit backpressure
                 break Err(reject_admission(ctx, e));
             }
             other => break other,
@@ -673,14 +764,59 @@ fn run_decode(
 
 /// Run one job on the pure-Rust substrate: one batched multi-head op
 /// call over a zero-copy [`QkvView`] of the job buffers (no per-head
-/// slicing copies).
-pub fn execute_substrate(job: &AttnJob, kind: RouteKind, rc: &RouterConfig) -> Vec<f32> {
-    let view = QkvView::new(job.heads, job.n, job.d, &job.q, &job.k, &job.v)
-        .expect("job validated at submit");
+/// slicing copies).  Malformed jobs and unbuildable configs fail this
+/// job with a typed error instead of panicking the worker.
+pub fn execute_substrate(
+    job: &AttnJob,
+    kind: RouteKind,
+    rc: &RouterConfig,
+) -> Result<Vec<f32>, String> {
+    failpoint::hit("full_job")?;
+    let view = QkvView::new(job.heads, job.n, job.d, &job.q, &job.k, &job.v)?;
     let cfg = substrate_config(job, kind, rc);
-    let attn = cfg.build().expect("substrate config is valid by construction");
+    let attn = cfg.build()?;
     // serving is forward-only: infer() skips backward-state capture
-    attn.infer(view).into_out()
+    Ok(attn.infer(view).into_out())
+}
+
+/// Best-effort text of a panic payload (the common `&str` / `String`
+/// cases; anything else is reported as opaque).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// Run one job body with panic isolation: a panic — injected or real —
+/// resolves this ticket with an explicit `panic:`-prefixed error
+/// instead of killing the worker thread, and bumps `panics_caught`.
+/// Callers decide any additional quarantine from the `panic:` marker.
+fn catch_job<T>(
+    metrics: &Metrics,
+    f: impl FnOnce() -> Result<T, String>,
+) -> Result<T, String> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(payload) => {
+            metrics.panics_caught.fetch_add(1, Relaxed);
+            Err(format!("panic: {}", panic_message(payload.as_ref())))
+        }
+    }
+}
+
+/// Force-close a session whose job panicked.  The unwind already
+/// dropped any checked-out entry (releasing its frames); removing the
+/// slot outright means later decodes get an immediate "unknown
+/// session" instead of wedging on a checkout that can never succeed.
+/// Any entry still in the slot (panic before checkout) is dropped
+/// here, returning its pages to the pool.
+fn quarantine_session(ctx: &EngineCtx, id: SessionId) {
+    let removed = lock_recover(&ctx.sessions).remove(&id);
+    drop(removed);
 }
 
 /// Spawn the engine.  Returns the submit channel and the PJRT-thread
@@ -698,13 +834,16 @@ pub fn spawn(
     cache: CacheConfig,
     metrics: Arc<Metrics>,
     queue_depth: usize,
-) -> (
-    SyncSender<EngineMsg>,
-    std::thread::JoinHandle<()>,
-    PagePool,
-    SessionMap,
-    PrefixMap,
-) {
+) -> Result<
+    (
+        SyncSender<EngineMsg>,
+        std::thread::JoinHandle<()>,
+        PagePool,
+        SessionMap,
+        PrefixMap,
+    ),
+    String,
+> {
     let (tx, rx) = std::sync::mpsc::sync_channel::<EngineMsg>(queue_depth);
     let pool = PagePool::new(cache.page_elems, cache.budget_pages);
     let ctx = EngineCtx {
@@ -728,7 +867,7 @@ pub fn spawn(
         std::thread::Builder::new()
             .name(format!("hyperattn-substrate-{w}"))
             .spawn(move || loop {
-                let msg = { rxw.lock().unwrap().recv() };
+                let msg = { lock_recover(&rxw).recv() };
                 match msg {
                     Ok(EngineMsg::Batch(batch)) => {
                         for item in batch {
@@ -738,14 +877,14 @@ pub fn spawn(
                     Ok(EngineMsg::Shutdown) | Err(_) => break,
                 }
             })
-            .expect("spawn substrate worker");
+            .map_err(|e| format!("spawn substrate worker {w}: {e}"))?;
     }
 
     let handle = std::thread::Builder::new()
         .name("hyperattn-engine".into())
         .spawn(move || engine_loop(rx, artifacts_dir, ctx, sub_tx, n_workers))
-        .expect("spawn engine thread");
-    (tx, handle, pool, sessions, prefixes)
+        .map_err(|e| format!("spawn engine thread: {e}"))?;
+    Ok((tx, handle, pool, sessions, prefixes))
 }
 
 /// Respond to a flushed item with an explicit shutdown error (instead
@@ -754,15 +893,46 @@ fn respond_flush(item: WorkItem, metrics: &Metrics) {
     const MSG: &str = "coordinator shutting down; queued work flushed";
     match item.respond {
         Reply::Full(tx) => {
-            metrics.jobs_failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            metrics.jobs_failed.fetch_add(1, Relaxed);
             let _ = tx.send(Err(MSG.into()));
         }
         Reply::Decode(tx) => {
-            metrics.jobs_failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            metrics.jobs_failed.fetch_add(1, Relaxed);
+            let _ = tx.send(Err(MSG.into()));
+        }
+        Reply::Ping(tx) => {
             let _ = tx.send(Err(MSG.into()));
         }
         Reply::None => {}
     }
+}
+
+/// Resolve an expired item without executing it (and without touching
+/// its session or the pool).  Returns true when the item was consumed.
+/// Items with no reply channel (close, prefix release) always run —
+/// skipping them would leak sessions or pinned pages — and pings
+/// always answer (an expired liveness probe is still a liveness probe).
+fn expire_if_late(item: WorkItem, metrics: &Metrics) -> Option<WorkItem> {
+    let late = match (item.deadline, &item.respond) {
+        (Some(dl), Reply::Full(_) | Reply::Decode(_)) => Instant::now() >= dl,
+        _ => false,
+    };
+    if !late {
+        return Some(item);
+    }
+    metrics.deadline_expired.fetch_add(1, Relaxed);
+    metrics.jobs_failed.fetch_add(1, Relaxed);
+    let msg = format!("{DEADLINE_EXPIRED} (queued {:?})", item.submitted.elapsed());
+    match item.respond {
+        Reply::Full(tx) => {
+            let _ = tx.send(Err(msg));
+        }
+        Reply::Decode(tx) => {
+            let _ = tx.send(Err(msg));
+        }
+        Reply::Ping(_) | Reply::None => unreachable!("filtered above"),
+    }
+    None
 }
 
 /// Execute one work item (on whichever lane) and respond.
@@ -770,54 +940,55 @@ fn execute_one(item: WorkItem, runtime: Option<&Runtime>, ctx: &EngineCtx) {
     let rc = &ctx.rc;
     let metrics = &*ctx.metrics;
     let sessions = &ctx.sessions;
-    let WorkItem { work, route, submitted, respond } = item;
+    let Some(item) = expire_if_late(item, metrics) else { return };
+    let WorkItem { work, route, submitted, respond, deadline } = item;
     let queue_us = submitted.elapsed().as_micros() as u64;
     let exec_start = Instant::now();
 
     match work {
         Work::Full(job) => {
-            let (result, backend) = match (&route.artifact, runtime) {
+            let result = catch_job(metrics, || match (&route.artifact, runtime) {
                 (Some(name), Some(rt)) => {
                     let seed = matches!(route.kind, RouteKind::Hyper).then_some(job.seed);
                     match rt.run_attention(
                         name, job.heads, job.n, job.d, &job.q, &job.k, &job.v, seed,
                     ) {
-                        Ok(out) => (Ok(out), Backend::Artifact(name.clone())),
+                        Ok(out) => Ok((out, Backend::Artifact(name.clone()))),
                         Err(e) => {
                             // artifact failure degrades to substrate
                             eprintln!(
                                 "engine: artifact {name} failed ({e:#}); substrate fallback"
                             );
-                            (Ok(execute_substrate(&job, route.kind, rc)), Backend::Substrate)
+                            execute_substrate(&job, route.kind, rc)
+                                .map(|out| (out, Backend::Substrate))
                         }
                     }
                 }
-                _ => (Ok(execute_substrate(&job, route.kind, rc)), Backend::Substrate),
-            };
+                _ => execute_substrate(&job, route.kind, rc).map(|out| (out, Backend::Substrate)),
+            });
 
             let exec_us = exec_start.elapsed().as_micros() as u64;
             metrics.queue_latency.record(queue_us);
             metrics.exec_latency.record(exec_us);
             metrics.e2e_latency.record(queue_us + exec_us);
-            match backend {
-                Backend::Artifact(_) => {
-                    metrics.artifact_jobs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let response = match result {
+                Ok((out, backend)) => {
+                    match backend {
+                        Backend::Artifact(_) => {
+                            metrics.artifact_jobs.fetch_add(1, Relaxed);
+                        }
+                        Backend::Substrate => {
+                            metrics.substrate_jobs.fetch_add(1, Relaxed);
+                        }
+                    }
+                    metrics.jobs_completed.fetch_add(1, Relaxed);
+                    Ok(AttnResponse { id: job.id, out, backend, queue_us, exec_us })
                 }
-                Backend::Substrate => {
-                    metrics.substrate_jobs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Err(e) => {
+                    metrics.jobs_failed.fetch_add(1, Relaxed);
+                    Err(e)
                 }
-            }
-
-            let response =
-                result.map(|out| AttnResponse { id: job.id, out, backend, queue_us, exec_us });
-            match &response {
-                Ok(_) => {
-                    metrics.jobs_completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                }
-                Err(_) => {
-                    metrics.jobs_failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                }
-            }
+            };
             if let Reply::Full(tx) = respond {
                 let _ = tx.send(response);
             }
@@ -826,19 +997,25 @@ fn execute_one(item: WorkItem, runtime: Option<&Runtime>, ctx: &EngineCtx) {
             // prefill the prompt into a fresh cache on the substrate
             // (streaming sessions are shape-dynamic: no artifact lane);
             // with a prefix key, fork the pinned cache instead
-            let result = run_open(session, &job, prefix.as_deref(), route.kind, ctx);
+            let result = catch_job(metrics, || {
+                run_open(session, &job, prefix.as_deref(), route.kind, ctx)
+            });
+            if matches!(&result, Err(e) if e.starts_with("panic:")) {
+                // a panicked open may have left a half-registered slot
+                quarantine_session(ctx, session);
+            }
             let exec_us = exec_start.elapsed().as_micros() as u64;
             metrics.queue_latency.record(queue_us);
             metrics.exec_latency.record(exec_us);
             metrics.e2e_latency.record(queue_us + exec_us);
-            metrics.substrate_jobs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            metrics.substrate_jobs.fetch_add(1, Relaxed);
             match &result {
                 Ok(_) => {
-                    metrics.sessions_opened.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    metrics.jobs_completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    metrics.sessions_opened.fetch_add(1, Relaxed);
+                    metrics.jobs_completed.fetch_add(1, Relaxed);
                 }
                 Err(_) => {
-                    metrics.jobs_failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    metrics.jobs_failed.fetch_add(1, Relaxed);
                 }
             }
             if let Reply::Full(tx) = respond {
@@ -852,17 +1029,23 @@ fn execute_one(item: WorkItem, runtime: Option<&Runtime>, ctx: &EngineCtx) {
             }
         }
         Work::Decode(job) => {
-            let result = run_decode(&job, ctx);
+            let result = catch_job(metrics, || run_decode(&job, deadline, ctx));
+            if matches!(&result, Err(e) if e.starts_with("panic:")) {
+                // the unwind dropped the checked-out cache (frames are
+                // already back in the pool); removing the slot keeps
+                // later steps from wedging on an impossible checkout
+                quarantine_session(ctx, job.session);
+            }
             let exec_us = exec_start.elapsed().as_micros() as u64;
             metrics.queue_latency.record(queue_us);
             metrics.decode_latency.record(exec_us);
             match &result {
                 Ok(_) => {
-                    metrics.decode_steps.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    metrics.jobs_completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    metrics.decode_steps.fetch_add(1, Relaxed);
+                    metrics.jobs_completed.fetch_add(1, Relaxed);
                 }
                 Err(_) => {
-                    metrics.jobs_failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    metrics.jobs_failed.fetch_add(1, Relaxed);
                 }
             }
             if let Reply::Decode(tx) = respond {
@@ -877,21 +1060,25 @@ fn execute_one(item: WorkItem, runtime: Option<&Runtime>, ctx: &EngineCtx) {
             }
         }
         Work::Close { session } => {
-            close_session(sessions, session);
-            metrics.sessions_closed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let _ = catch_job(metrics, || {
+                close_session(sessions, session);
+                Ok(())
+            });
+            metrics.sessions_closed.fetch_add(1, Relaxed);
         }
         Work::RegisterPrefix { key, seq, job } => {
-            let result = run_register_prefix(&key, seq, &job, route.kind, ctx);
+            let result =
+                catch_job(metrics, || run_register_prefix(&key, seq, &job, route.kind, ctx));
             let exec_us = exec_start.elapsed().as_micros() as u64;
             metrics.queue_latency.record(queue_us);
             metrics.exec_latency.record(exec_us);
-            metrics.substrate_jobs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            metrics.substrate_jobs.fetch_add(1, Relaxed);
             match &result {
                 Ok(_) => {
-                    metrics.jobs_completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    metrics.jobs_completed.fetch_add(1, Relaxed);
                 }
                 Err(_) => {
-                    metrics.jobs_failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    metrics.jobs_failed.fetch_add(1, Relaxed);
                 }
             }
             if let Reply::Full(tx) = respond {
@@ -906,8 +1093,32 @@ fn execute_one(item: WorkItem, runtime: Option<&Runtime>, ctx: &EngineCtx) {
         }
         Work::ReleasePrefix { key, seq } => {
             // unpinning only drops the registry's handles; pages still
-            // shared by live forked sessions stay resident with them
-            run_release_prefix(key, seq, ctx);
+            // shared by live forked sessions stay resident with them.
+            // A panicked release is retried as a tombstone so the key
+            // cannot stay pinned forever.
+            let seq_retry = seq;
+            let key_retry = key.clone();
+            if catch_job(metrics, || {
+                run_release_prefix(key, seq, ctx);
+                Ok(())
+            })
+            .is_err()
+            {
+                let mut map = lock_recover(&ctx.prefixes);
+                let newer = match map.get(&key_retry) {
+                    Some(PrefixSlot::Live(e)) => e.seq > seq_retry,
+                    Some(PrefixSlot::Released(s)) => *s >= seq_retry,
+                    None => false,
+                };
+                if !newer {
+                    map.insert(key_retry, PrefixSlot::Released(seq_retry));
+                }
+            }
+        }
+        Work::Ping => {
+            if let Reply::Ping(tx) = respond {
+                let _ = tx.send(Ok(()));
+            }
         }
     }
 }
@@ -957,6 +1168,9 @@ fn engine_loop(
             }
         }
         let Some(msg) = msg else { continue };
+        // chaos knob for queue-latency pressure; only `delay` actions
+        // apply here (a panic would kill the engine thread, not a job)
+        failpoint::delay_only("engine_recv");
         let batch = match msg {
             EngineMsg::Batch(b) => b,
             EngineMsg::Shutdown => {
@@ -1001,8 +1215,8 @@ fn engine_loop(
     // any caches still live are dropped here, returning their pages to
     // the pool; a worker holding a checked-out entry simply drops it at
     // checkin.  Pinned prefixes release their handles the same way.
-    ctx.sessions.lock().unwrap().clear();
-    ctx.prefixes.lock().unwrap().clear();
+    lock_recover(&ctx.sessions).clear();
+    lock_recover(&ctx.prefixes).clear();
 }
 
 #[cfg(test)]
@@ -1047,7 +1261,7 @@ mod tests {
     fn substrate_exact_matches_reference() {
         let j = job(48, false, 3);
         let rc = RouterConfig::default();
-        let out = execute_substrate(&j, RouteKind::Exact, &rc);
+        let out = execute_substrate(&j, RouteKind::Exact, &rc).unwrap();
         // head 0 vs naive, through zero-copy views of the job buffers
         let per = 48 * 16;
         let m = |x: &[f32]| MatRef::new(48, 16, &x[..per]).to_mat();
@@ -1062,7 +1276,7 @@ mod tests {
         for n in [16usize, 48, 97, 128] {
             for causal in [false, true] {
                 let j = job(n, causal, 1);
-                let out = execute_substrate(&j, RouteKind::Hyper, &rc);
+                let out = execute_substrate(&j, RouteKind::Hyper, &rc).unwrap();
                 assert_eq!(out.len(), 2 * n * 16);
                 assert!(out.iter().all(|x| x.is_finite()), "n={n} causal={causal}");
             }
@@ -1073,8 +1287,8 @@ mod tests {
     fn substrate_deterministic() {
         let rc = RouterConfig { block: 16, samples: 16, ..Default::default() };
         let j = job(64, false, 5);
-        let a = execute_substrate(&j, RouteKind::Hyper, &rc);
-        let b = execute_substrate(&j, RouteKind::Hyper, &rc);
+        let a = execute_substrate(&j, RouteKind::Hyper, &rc).unwrap();
+        let b = execute_substrate(&j, RouteKind::Hyper, &rc).unwrap();
         assert_eq!(a, b);
     }
 
@@ -1084,7 +1298,7 @@ mod tests {
     fn substrate_prime_n_hyper_degrades_to_exact() {
         let rc = RouterConfig { block: 256, samples: 16, ..Default::default() };
         let j = job(97, false, 2);
-        let out = execute_substrate(&j, RouteKind::Hyper, &rc);
+        let out = execute_substrate(&j, RouteKind::Hyper, &rc).unwrap();
         let per = 97 * 16;
         let m = |x: &[f32]| MatRef::new(97, 16, &x[..per]).to_mat();
         let exact = exact::naive_attention(&m(&j.q), &m(&j.k), &m(&j.v), false, None);
@@ -1099,6 +1313,7 @@ mod tests {
             d,
             cache: AttnCache::new(heads, d),
             last_used: Instant::now(),
+            degraded: false,
         }
     }
 
@@ -1183,6 +1398,7 @@ mod tests {
             d: 8,
             cache: AttnCache::with_pool(1, 8, op::CachePolicy::Full, &ctx.pool).unwrap(),
             last_used: Instant::now() - Duration::from_secs(60),
+            degraded: false,
         };
         let buf = rng.normal_vec(8 * 4);
         let view = QkvView::new(1, 4, 8, &buf, &buf, &buf).unwrap();
@@ -1300,5 +1516,179 @@ mod tests {
             1,
             "stale release must not unpin a newer register"
         );
+    }
+
+    fn decode_job(session: SessionId, seed: u64) -> DecodeJob {
+        let (h, d) = (2, 16);
+        let mut rng = Rng::new(seed);
+        DecodeJob {
+            session,
+            heads: h,
+            d,
+            pos: None,
+            q: rng.normal_vec(h * d),
+            k: rng.normal_vec(h * d),
+            v: rng.normal_vec(h * d),
+        }
+    }
+
+    /// The decode overload ladder end to end on a raw context: a full
+    /// budget first backs off (counted retries), finds nothing to
+    /// LRU-evict, **degrades** the session to the configured window
+    /// (freeing its own pages), and resumes decoding — then, with
+    /// degradation disabled, the same pressure sheds with an explicit
+    /// admission reject.
+    #[test]
+    fn decode_ladder_backoff_degrade_shed() {
+        let run = |degrade_window: Option<usize>| {
+            let mut ctx = test_ctx();
+            // (h=2, d=16) -> 4 rows per page; budget 4 pages = 16 rows
+            ctx.cache.page_elems = 3 * 2 * 16 * 4;
+            ctx.cache.budget_pages = Some(4);
+            ctx.cache.degrade_window = degrade_window;
+            ctx.pool = PagePool::new(ctx.cache.page_elems, Some(4));
+            // the prompt fills the budget exactly
+            run_open(1, &job(16, true, 1), None, RouteKind::Exact, &ctx).unwrap();
+            assert_eq!(ctx.pool.stats().outstanding, 4);
+            (run_decode(&decode_job(1, 2), None, &ctx), ctx)
+        };
+        // ladder reaches the degrade rung and the step succeeds
+        let (res, ctx) = run(Some(8));
+        res.unwrap();
+        assert_eq!(ctx.metrics.retries.load(Relaxed), 3, "all three backoffs first");
+        assert_eq!(ctx.metrics.degraded_sessions.load(Relaxed), 1);
+        assert_eq!(ctx.metrics.admission_rejects.load(Relaxed), 0);
+        {
+            let map = ctx.sessions.lock().unwrap();
+            let e = map.get(&1).unwrap().as_ref().unwrap();
+            assert!(e.degraded);
+            assert!(matches!(e.cache.policy(), CachePolicy::SlidingWindow { .. }));
+        }
+        let g = cache_gauges(&ctx.sessions, &ctx.prefixes, &ctx.pool, &ctx.metrics);
+        assert_eq!(g.degraded_sessions, 1);
+        // a later step under the (now windowed) session keeps serving:
+        // the slide recycles its own pages
+        run_decode(&decode_job(1, 3), None, &ctx).unwrap();
+        assert_eq!(ctx.metrics.degraded_sessions.load(Relaxed), 1, "degrade fires once");
+        // without a degrade window the same pressure sheds explicitly
+        let (res, ctx) = run(None);
+        let err = res.unwrap_err();
+        assert!(err.contains("admission rejected"), "{err}");
+        assert!(err.contains(POOL_EXHAUSTED), "{err}");
+        assert_eq!(ctx.metrics.admission_rejects.load(Relaxed), 1);
+        assert_eq!(ctx.metrics.degraded_sessions.load(Relaxed), 0);
+        // the failed step did not grow the cache and the session is
+        // intact (shed is not a close)
+        let map = ctx.sessions.lock().unwrap();
+        assert_eq!(map.get(&1).unwrap().as_ref().unwrap().cache.len(), 16);
+    }
+
+    /// Panic isolation: an injected decode panic resolves as an
+    /// explicit `panic:` error, quarantines only that session (frames
+    /// released), and the engine context keeps serving other sessions.
+    #[test]
+    fn panicking_decode_quarantines_session_only() {
+        let _g = failpoint::test_lock::serial();
+        let mut ctx = test_ctx();
+        ctx.cache.page_elems = 3 * 2 * 16 * 4;
+        ctx.pool = PagePool::unbounded(ctx.cache.page_elems);
+        run_open(1, &job(8, true, 1), None, RouteKind::Exact, &ctx).unwrap();
+        run_open(2, &job(8, true, 2), None, RouteKind::Exact, &ctx).unwrap();
+        let pages_before = ctx.pool.stats().outstanding;
+        assert!(pages_before > 0);
+        failpoint::configure("decode_job=panic", 0).unwrap();
+        let (tx, rx) = std::sync::mpsc::sync_channel(1);
+        execute_one(
+            WorkItem {
+                work: Work::Decode(decode_job(1, 3)),
+                route: Route::decode_key(),
+                submitted: Instant::now(),
+                deadline: None,
+                respond: Reply::Decode(tx),
+            },
+            None,
+            &ctx,
+        );
+        failpoint::clear();
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.starts_with("panic:"), "{err}");
+        assert!(err.contains(failpoint::INJECTED), "{err}");
+        assert_eq!(ctx.metrics.panics_caught.load(Relaxed), 1);
+        {
+            let map = ctx.sessions.lock().unwrap();
+            assert!(map.get(&1).is_none(), "panicking session is quarantined");
+            assert!(map.get(&2).is_some(), "other sessions untouched");
+        }
+        // the quarantined session's frames went back to the pool
+        let s = ctx.pool.stats();
+        assert_eq!(s.outstanding + s.free, (s.allocs - s.reuses) as usize);
+        assert!(s.outstanding < pages_before);
+        // a retry on the dead id errors immediately (no 10s wedge) and
+        // the healthy session still decodes
+        let t0 = Instant::now();
+        assert!(run_decode(&decode_job(1, 4), None, &ctx)
+            .unwrap_err()
+            .contains("unknown session"));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        run_decode(&decode_job(2, 5), None, &ctx).unwrap();
+    }
+
+    /// An expired deadline resolves the ticket with
+    /// [`DEADLINE_EXPIRED`] before any session or pool work; close
+    /// items always run regardless.
+    #[test]
+    fn expired_deadline_resolves_before_work() {
+        let ctx = test_ctx();
+        run_open(1, &job(8, true, 1), None, RouteKind::Exact, &ctx).unwrap();
+        let steps_before = ctx.metrics.decode_steps.load(Relaxed);
+        let (tx, rx) = std::sync::mpsc::sync_channel(1);
+        execute_one(
+            WorkItem {
+                work: Work::Decode(decode_job(1, 2)),
+                route: Route::decode_key(),
+                submitted: Instant::now(),
+                deadline: Some(Instant::now() - Duration::from_millis(1)),
+                respond: Reply::Decode(tx),
+            },
+            None,
+            &ctx,
+        );
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.contains(DEADLINE_EXPIRED), "{err}");
+        assert_eq!(ctx.metrics.deadline_expired.load(Relaxed), 1);
+        assert_eq!(ctx.metrics.decode_steps.load(Relaxed), steps_before, "no work ran");
+        assert_eq!(
+            ctx.sessions.lock().unwrap().get(&1).unwrap().as_ref().unwrap().cache.len(),
+            8,
+            "expired step must not touch the cache"
+        );
+        // a close with an absurd deadline still executes
+        execute_one(
+            WorkItem {
+                work: Work::Close { session: 1 },
+                route: Route::decode_key(),
+                submitted: Instant::now(),
+                deadline: Some(Instant::now() - Duration::from_secs(5)),
+                respond: Reply::None,
+            },
+            None,
+            &ctx,
+        );
+        assert!(ctx.sessions.lock().unwrap().is_empty(), "close is deadline-exempt");
+        // a fresh (unexpired) deadline executes normally
+        run_open(3, &job(8, true, 3), None, RouteKind::Exact, &ctx).unwrap();
+        let (tx, rx) = std::sync::mpsc::sync_channel(1);
+        execute_one(
+            WorkItem {
+                work: Work::Decode(decode_job(3, 4)),
+                route: Route::decode_key(),
+                submitted: Instant::now(),
+                deadline: Some(Instant::now() + Duration::from_secs(30)),
+                respond: Reply::Decode(tx),
+            },
+            None,
+            &ctx,
+        );
+        rx.recv().unwrap().unwrap();
     }
 }

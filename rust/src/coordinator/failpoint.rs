@@ -1,0 +1,480 @@
+//! Fault-injection failpoints and poison-healing lock helpers.
+//!
+//! A failpoint is a **named, seeded, runtime-configured injection site**
+//! compiled into the high-consequence seams of the serving stack
+//! (`PagePool::try_alloc`, `KvCache::append`/`fork`, engine job
+//! execution, session checkout, prefix register/release).  When no
+//! failpoint is configured the per-site check is a single relaxed
+//! atomic load of one process-global flag — provably zero-cost on the
+//! hot path and bitwise-invisible to every parity test.
+//!
+//! # Grammar
+//!
+//! Configured via the `HYPERATTN_FAILPOINTS` environment variable or
+//! the `serve --failpoints` CLI flag:
+//!
+//! ```text
+//! spec     := site '=' action (',' site '=' action)*
+//! site     := pool_alloc | kv_append | kv_fork | open_job | full_job
+//!           | decode_job | session_checkout | prefix_register
+//!           | prefix_release | engine_recv
+//! action   := 'err' [':' prob]          -- return an injected error
+//!           | 'panic' [':' prob]        -- panic! at the site
+//!           | 'delay' ':' millis 'ms' [':' prob]
+//! prob     := float in (0, 1]           -- default 1.0 (always fire)
+//! ```
+//!
+//! Example: `HYPERATTN_FAILPOINTS="pool_alloc=err:0.05,decode_job=panic:0.01,engine_recv=delay:20ms"`.
+//!
+//! Probability draws come from a dedicated seeded [`crate::rng::Rng`]
+//! (`HYPERATTN_FAILPOINT_SEED` / `--failpoint-seed`, default 0), so a
+//! chaos run is reproducible end to end.
+//!
+//! Site classes:
+//! * **fallible** sites call [`hit`] and surface an `err` action as an
+//!   `Err(String)` carrying the [`INJECTED`] marker;
+//! * **infallible** sites (e.g. `kv_fork`, whose seam returns a value,
+//!   not a `Result`) call [`hit_unwind`], which honors `err` as a
+//!   panic — the engine's `catch_unwind` isolation turns it into an
+//!   explicit error reply anyway;
+//! * the **engine receive loop** calls [`delay_only`]: `err`/`panic`
+//!   there would kill the engine thread itself rather than one job, so
+//!   only `delay` actions apply (others are ignored with a trigger
+//!   count so misconfiguration is still observable).
+//!
+//! All injected panic payloads contain [`INJECTED`]; the chaos harness
+//! uses that to distinguish deliberate faults from real bugs.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, Once};
+use std::time::Duration;
+
+use crate::rng::Rng;
+
+/// Marker substring present in every injected error / panic payload.
+pub const INJECTED: &str = "injected failpoint";
+
+/// The fixed set of compiled-in failpoint sites, in counter order.
+pub const SITES: [&str; 10] = [
+    "pool_alloc",
+    "kv_append",
+    "kv_fork",
+    "open_job",
+    "full_job",
+    "decode_job",
+    "session_checkout",
+    "prefix_register",
+    "prefix_release",
+    "engine_recv",
+];
+
+/// What a configured site does when its probability draw fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Action {
+    /// Return an injected error (or panic at infallible sites).
+    Err { prob: f32 },
+    /// Panic with an [`INJECTED`] payload.
+    Panic { prob: f32 },
+    /// Sleep for the given duration, then continue normally.
+    Delay { millis: u64, prob: f32 },
+}
+
+impl Action {
+    fn prob(&self) -> f32 {
+        match *self {
+            Action::Err { prob } | Action::Panic { prob } | Action::Delay { prob, .. } => prob,
+        }
+    }
+}
+
+struct State {
+    /// `actions[i]` configures `SITES[i]`; `None` = site disarmed.
+    actions: [Option<Action>; SITES.len()],
+    rng: Rng,
+}
+
+/// Fast-path flag: one relaxed load decides "no failpoints configured".
+static ARMED: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<State>> = Mutex::new(None);
+/// Per-site fire counters (index-aligned with [`SITES`]); survive
+/// [`clear`] within a process so a serve run can report totals.
+static TRIGGERS: [AtomicU64; SITES.len()] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+/// Poisoned mutexes healed by [`lock_recover`] process-wide.
+static POISON_RECOVERED: AtomicU64 = AtomicU64::new(0);
+static ENV_INIT: Once = Once::new();
+
+fn site_index(name: &str) -> Option<usize> {
+    SITES.iter().position(|s| *s == name)
+}
+
+fn parse_prob(s: &str) -> Result<f32, String> {
+    let p: f32 = s
+        .parse()
+        .map_err(|_| format!("failpoint: bad probability {s:?}"))?;
+    if !(p > 0.0 && p <= 1.0) {
+        return Err(format!("failpoint: probability {p} outside (0, 1]"));
+    }
+    Ok(p)
+}
+
+/// Parse one `action` clause (see module grammar).
+fn parse_action(spec: &str) -> Result<Action, String> {
+    let mut parts = spec.split(':');
+    let kind = parts.next().unwrap_or("");
+    match kind {
+        "err" | "panic" => {
+            let prob = match parts.next() {
+                Some(p) => parse_prob(p)?,
+                None => 1.0,
+            };
+            if parts.next().is_some() {
+                return Err(format!("failpoint: trailing fields in {spec:?}"));
+            }
+            Ok(if kind == "err" {
+                Action::Err { prob }
+            } else {
+                Action::Panic { prob }
+            })
+        }
+        "delay" => {
+            let dur = parts
+                .next()
+                .ok_or_else(|| format!("failpoint: delay needs a duration in {spec:?}"))?;
+            let millis: u64 = dur
+                .strip_suffix("ms")
+                .ok_or_else(|| format!("failpoint: delay duration must end in 'ms': {dur:?}"))?
+                .parse()
+                .map_err(|_| format!("failpoint: bad delay duration {dur:?}"))?;
+            let prob = match parts.next() {
+                Some(p) => parse_prob(p)?,
+                None => 1.0,
+            };
+            if parts.next().is_some() {
+                return Err(format!("failpoint: trailing fields in {spec:?}"));
+            }
+            Ok(Action::Delay { millis, prob })
+        }
+        other => Err(format!(
+            "failpoint: unknown action {other:?} (want err|panic|delay)"
+        )),
+    }
+}
+
+fn parse_spec(spec: &str) -> Result<[Option<Action>; SITES.len()], String> {
+    let mut actions: [Option<Action>; SITES.len()] = [None; SITES.len()];
+    for clause in spec.split(',') {
+        let clause = clause.trim();
+        if clause.is_empty() {
+            continue;
+        }
+        let (name, action) = clause
+            .split_once('=')
+            .ok_or_else(|| format!("failpoint: clause {clause:?} missing '='"))?;
+        let idx = site_index(name.trim()).ok_or_else(|| {
+            format!(
+                "failpoint: unknown site {:?} (known: {})",
+                name.trim(),
+                SITES.join(", ")
+            )
+        })?;
+        actions[idx] = Some(parse_action(action.trim())?);
+    }
+    Ok(actions)
+}
+
+/// Arm failpoints from a spec string (see module grammar) with a seed
+/// for the probability stream.  Replaces any previous configuration.
+pub fn configure(spec: &str, seed: u64) -> Result<(), String> {
+    let actions = parse_spec(spec)?;
+    let any = actions.iter().any(|a| a.is_some());
+    let mut st = lock_recover(&STATE);
+    if any {
+        *st = Some(State {
+            actions,
+            rng: Rng::new(seed ^ 0xfa11_9017),
+        });
+    } else {
+        *st = None;
+    }
+    // Publish after the state is in place so a racing fast-path load
+    // that sees ARMED also sees a locked, initialized State.
+    ARMED.store(any, Ordering::Release);
+    Ok(())
+}
+
+/// Disarm every failpoint.  Trigger counters are preserved.
+pub fn clear() {
+    let mut st = lock_recover(&STATE);
+    *st = None;
+    ARMED.store(false, Ordering::Release);
+}
+
+/// Whether any failpoint is currently armed.
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// One-time arming from `HYPERATTN_FAILPOINTS` /
+/// `HYPERATTN_FAILPOINT_SEED`.  Called from `PagePool::new`,
+/// `Server::start`, and the CLI; later calls are no-ops, and an
+/// explicit [`configure`] always overrides.  A malformed env spec is
+/// reported on stderr and ignored (serving must not fail to boot
+/// because a chaos knob has a typo).
+pub fn init_from_env() {
+    ENV_INIT.call_once(|| {
+        let Ok(spec) = std::env::var("HYPERATTN_FAILPOINTS") else {
+            return;
+        };
+        if spec.trim().is_empty() {
+            return;
+        }
+        let seed = std::env::var("HYPERATTN_FAILPOINT_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0u64);
+        if let Err(e) = configure(&spec, seed) {
+            eprintln!("warning: ignoring HYPERATTN_FAILPOINTS: {e}");
+        }
+    });
+}
+
+/// Per-site fire counts since process start: `(site, count)`,
+/// index-aligned with [`SITES`].
+pub fn counters() -> Vec<(&'static str, u64)> {
+    SITES
+        .iter()
+        .zip(TRIGGERS.iter())
+        .map(|(s, c)| (*s, c.load(Ordering::Relaxed)))
+        .collect()
+}
+
+/// Total fires across all sites.
+pub fn total_triggers() -> u64 {
+    TRIGGERS.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+}
+
+/// Poisoned locks healed by [`lock_recover`] since process start.
+pub fn poison_recovered() -> u64 {
+    POISON_RECOVERED.load(Ordering::Relaxed)
+}
+
+/// Draw the configured action for `name`, if any fires this call.
+fn draw(name: &str) -> Option<Action> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let idx = site_index(name)?;
+    let mut st = lock_recover(&STATE);
+    let state = st.as_mut()?;
+    let action = state.actions[idx]?;
+    if action.prob() < 1.0 && state.rng.next_f32() >= action.prob() {
+        return None;
+    }
+    TRIGGERS[idx].fetch_add(1, Ordering::Relaxed);
+    Some(action)
+}
+
+/// Failpoint check for **fallible** sites: may return an injected
+/// error, panic, or sleep.  No-op (one relaxed load) when disarmed.
+pub fn hit(name: &str) -> Result<(), String> {
+    match draw(name) {
+        None => Ok(()),
+        Some(Action::Err { .. }) => Err(format!("{INJECTED} {name}=err")),
+        Some(Action::Panic { .. }) => panic!("{INJECTED} {name}=panic"),
+        Some(Action::Delay { millis, .. }) => {
+            std::thread::sleep(Duration::from_millis(millis));
+            Ok(())
+        }
+    }
+}
+
+/// Failpoint check for **infallible** sites (seams with no `Result` to
+/// thread an error through): an `err` action is honored as a panic, so
+/// the fault still surfaces through the engine's `catch_unwind`
+/// isolation as an explicit error reply.
+pub fn hit_unwind(name: &str) {
+    match draw(name) {
+        None => {}
+        Some(Action::Err { .. }) => panic!("{INJECTED} {name}=err (infallible site)"),
+        Some(Action::Panic { .. }) => panic!("{INJECTED} {name}=panic"),
+        Some(Action::Delay { millis, .. }) => std::thread::sleep(Duration::from_millis(millis)),
+    }
+}
+
+/// Failpoint check for the engine receive loop: only `delay` actions
+/// apply (an injected panic there would kill the engine thread itself,
+/// not one job).  `err`/`panic` configs still bump the trigger counter
+/// but are otherwise ignored.
+pub fn delay_only(name: &str) {
+    if let Some(Action::Delay { millis, .. }) = draw(name) {
+        std::thread::sleep(Duration::from_millis(millis));
+    }
+}
+
+/// Lock a mutex, **healing poisoning** instead of cascading panics: a
+/// panic caught elsewhere must not convert every later `lock().unwrap()`
+/// into a secondary panic.  Injection sites are placed *before* the
+/// guarded mutations (see `PagePool::try_alloc`), so recovered state is
+/// consistent; a recovery is counted in [`poison_recovered`].
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            POISON_RECOVERED.fetch_add(1, Ordering::Relaxed);
+            poisoned.into_inner()
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_lock {
+    use std::sync::{Mutex, MutexGuard};
+
+    /// Failpoint state is process-global; tests that arm it must
+    /// serialize against each other (cargo runs tests on threads).
+    static GUARD: Mutex<()> = Mutex::new(());
+
+    pub fn serial() -> MutexGuard<'static, ()> {
+        GUARD.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_is_noop() {
+        let _g = test_lock::serial();
+        clear();
+        assert!(!armed());
+        assert!(hit("pool_alloc").is_ok());
+        hit_unwind("kv_fork");
+        delay_only("engine_recv");
+    }
+
+    #[test]
+    fn parse_grammar_roundtrip() {
+        let a = parse_spec("pool_alloc=err:0.05,decode_job=panic:0.01,engine_recv=delay:20ms")
+            .unwrap();
+        assert_eq!(a[site_index("pool_alloc").unwrap()], Some(Action::Err { prob: 0.05 }));
+        assert_eq!(
+            a[site_index("decode_job").unwrap()],
+            Some(Action::Panic { prob: 0.01 })
+        );
+        assert_eq!(
+            a[site_index("engine_recv").unwrap()],
+            Some(Action::Delay { millis: 20, prob: 1.0 })
+        );
+        // defaults and whitespace
+        let a = parse_spec(" kv_append = err , kv_fork = delay:5ms:0.5 ").unwrap();
+        assert_eq!(a[site_index("kv_append").unwrap()], Some(Action::Err { prob: 1.0 }));
+        assert_eq!(
+            a[site_index("kv_fork").unwrap()],
+            Some(Action::Delay { millis: 5, prob: 0.5 })
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(parse_spec("nosuchsite=err").is_err());
+        assert!(parse_spec("pool_alloc=explode").is_err());
+        assert!(parse_spec("pool_alloc=err:1.5").is_err());
+        assert!(parse_spec("pool_alloc=err:0").is_err());
+        assert!(parse_spec("pool_alloc=delay:20").is_err()); // missing ms
+        assert!(parse_spec("pool_alloc=delay").is_err());
+        assert!(parse_spec("pool_alloc").is_err()); // missing '='
+        assert!(parse_spec("pool_alloc=err:0.5:junk").is_err());
+    }
+
+    #[test]
+    fn err_fires_and_counts() {
+        let _g = test_lock::serial();
+        let before = counters()[site_index("pool_alloc").unwrap()].1;
+        configure("pool_alloc=err", 7).unwrap();
+        let e = hit("pool_alloc").unwrap_err();
+        assert!(e.contains(INJECTED));
+        // other sites untouched
+        assert!(hit("kv_append").is_ok());
+        clear();
+        assert!(hit("pool_alloc").is_ok());
+        let after = counters()[site_index("pool_alloc").unwrap()].1;
+        assert_eq!(after, before + 1);
+    }
+
+    #[test]
+    fn probability_is_seeded_and_partial() {
+        let _g = test_lock::serial();
+        let run = |seed: u64| -> Vec<bool> {
+            configure("decode_job=err:0.3", seed).unwrap();
+            let fired: Vec<bool> = (0..64).map(|_| hit("decode_job").is_err()).collect();
+            clear();
+            fired
+        };
+        let a = run(42);
+        let b = run(42);
+        let c = run(43);
+        assert_eq!(a, b, "same seed must reproduce the same fault stream");
+        assert_ne!(a, c, "different seeds should diverge");
+        let fires = a.iter().filter(|f| **f).count();
+        assert!(fires > 0 && fires < 64, "p=0.3 should fire sometimes, not always: {fires}");
+    }
+
+    #[test]
+    fn panic_action_panics_with_marker() {
+        let _g = test_lock::serial();
+        configure("open_job=panic", 0).unwrap();
+        let r = std::panic::catch_unwind(|| hit("open_job").ok());
+        clear();
+        let payload = r.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains(INJECTED), "payload: {msg}");
+    }
+
+    #[test]
+    fn unwind_site_honors_err_as_panic() {
+        let _g = test_lock::serial();
+        configure("kv_fork=err", 0).unwrap();
+        let r = std::panic::catch_unwind(|| hit_unwind("kv_fork"));
+        clear();
+        assert!(r.is_err(), "err at an infallible site must unwind");
+    }
+
+    #[test]
+    fn delay_only_ignores_err_and_panic() {
+        let _g = test_lock::serial();
+        configure("engine_recv=panic", 0).unwrap();
+        delay_only("engine_recv"); // must not panic
+        clear();
+    }
+
+    #[test]
+    fn lock_recover_heals_poison() {
+        let m = std::sync::Arc::new(Mutex::new(17u32));
+        let m2 = m.clone();
+        let before = poison_recovered();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        let g = lock_recover(&m);
+        assert_eq!(*g, 17);
+        assert_eq!(poison_recovered(), before + 1);
+    }
+}

@@ -100,6 +100,18 @@ pub struct Metrics {
     /// opens/decodes rejected because the page pool was exhausted and
     /// nothing was evictable (explicit backpressure to the client)
     pub admission_rejects: AtomicU64,
+    /// job panics caught by the engine's per-job isolation (each one
+    /// resolved its ticket with an explicit error and quarantined the
+    /// offending session; the engine kept serving)
+    pub panics_caught: AtomicU64,
+    /// tickets resolved with `DEADLINE_EXPIRED` before any pool work
+    pub deadline_expired: AtomicU64,
+    /// transient-exhaustion decode retries (bounded exponential backoff
+    /// before the evict → degrade → shed ladder)
+    pub retries: AtomicU64,
+    /// sessions degraded to a tighter sliding window under sustained
+    /// pool pressure (each session counted once)
+    pub degraded_sessions: AtomicU64,
 }
 
 impl Metrics {
@@ -127,6 +139,8 @@ impl Metrics {
             "jobs: submitted={} completed={} failed={}\n\
              sessions: opened={} closed={} decode_steps={} \
              evicted={} reclaimed={} admission_rejects={}\n\
+             faults: panics_caught={} deadline_expired={} retries={} \
+             degraded_sessions={}\n\
              batches: {} (mean size {:.2})\n\
              backend: artifact={} substrate={}\n\
              queue  latency: mean {:.0}us p50 {}us p99 {}us max {}us\n\
@@ -142,6 +156,10 @@ impl Metrics {
             self.sessions_evicted.load(Ordering::Relaxed),
             self.sessions_reclaimed.load(Ordering::Relaxed),
             self.admission_rejects.load(Ordering::Relaxed),
+            self.panics_caught.load(Ordering::Relaxed),
+            self.deadline_expired.load(Ordering::Relaxed),
+            self.retries.load(Ordering::Relaxed),
+            self.degraded_sessions.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.artifact_jobs.load(Ordering::Relaxed),
@@ -207,6 +225,15 @@ pub struct CacheGauges {
     /// per pinned prefix: (key, resident pages, rows) — the caches
     /// sessions fork from in O(pages) refcount bumps
     pub per_prefix: Vec<(String, usize, usize)>,
+    /// live sessions currently running with a degraded (tightened)
+    /// sliding window after sustained pool pressure
+    pub degraded_sessions: u64,
+    /// per-failpoint fire counts since process start (site, count) —
+    /// only sites that fired at least once; empty when chaos is off
+    pub failpoints: Vec<(&'static str, u64)>,
+    /// poisoned mutexes healed by
+    /// [`crate::coordinator::failpoint::lock_recover`]
+    pub poison_recovered: u64,
 }
 
 impl CacheGauges {
@@ -234,11 +261,17 @@ impl CacheGauges {
             .iter()
             .map(|(key, pages, rows)| format!("{key}:{pages}p/{rows}r"))
             .collect();
+        let faults: Vec<String> = self
+            .failpoints
+            .iter()
+            .map(|(site, n)| format!("{site}={n}"))
+            .collect();
         format!(
             "kv cache: pages in_use={} shared={} free={} peak={} budget={budget} \
              util={:.0}% page_elems={}\n\
              kv pool:  allocs={} reuses={} rejects={} cow_copies={}\n\
-             kv admission: lru_evicted={} ttl_reclaimed={} rejects={}\n\
+             kv admission: lru_evicted={} ttl_reclaimed={} rejects={} degraded={}\n\
+             kv faults: poison_recovered={} failpoints=[{}]\n\
              kv sessions: [{}]\n\
              kv prefixes: [{}]",
             self.pages_in_use,
@@ -254,6 +287,9 @@ impl CacheGauges {
             self.sessions_evicted,
             self.sessions_reclaimed,
             self.admission_rejects,
+            self.degraded_sessions,
+            self.poison_recovered,
+            faults.join(" "),
             sessions.join(" "),
             prefixes.join(" "),
         )
@@ -282,6 +318,9 @@ mod tests {
             admission_rejects: 2,
             per_session: vec![(1, 4, 200), (2, 2, 90)],
             per_prefix: vec![("sys".into(), 3, 140)],
+            degraded_sessions: 1,
+            failpoints: vec![("pool_alloc", 9)],
+            poison_recovered: 2,
         };
         assert!((g.utilization() - 0.75).abs() < 1e-9);
         let r = g.report();
@@ -292,6 +331,9 @@ mod tests {
         assert!(r.contains("1:4p/200r"));
         assert!(r.contains("sys:3p/140r"));
         assert!(r.contains("ttl_reclaimed=4"));
+        assert!(r.contains("degraded=1"));
+        assert!(r.contains("poison_recovered=2"));
+        assert!(r.contains("pool_alloc=9"));
         let unbounded = CacheGauges::default();
         assert_eq!(unbounded.utilization(), 0.0);
         assert!(unbounded.report().contains("budget=unbounded"));
@@ -327,6 +369,20 @@ mod tests {
         h.record(0);
         assert_eq!(h.count(), 1);
         assert_eq!(h.quantile_us(0.5), 2); // bucket 0 upper edge
+    }
+
+    #[test]
+    fn metrics_report_includes_fault_counters() {
+        let m = Metrics::new();
+        m.panics_caught.fetch_add(2, Ordering::Relaxed);
+        m.deadline_expired.fetch_add(3, Ordering::Relaxed);
+        m.retries.fetch_add(4, Ordering::Relaxed);
+        m.degraded_sessions.fetch_add(1, Ordering::Relaxed);
+        let r = m.report();
+        assert!(r.contains("panics_caught=2"), "{r}");
+        assert!(r.contains("deadline_expired=3"), "{r}");
+        assert!(r.contains("retries=4"), "{r}");
+        assert!(r.contains("degraded_sessions=1"), "{r}");
     }
 
     #[test]

@@ -65,6 +65,23 @@
 //! [`Server::register_prefix`]: server::Server::register_prefix
 //! [`Server::open_session_with_prefix`]: server::Server::open_session_with_prefix
 //!
+//! # Failure modes & recovery
+//!
+//! The coordinator is built to degrade, not to die.  Every failure
+//! mode below is injectable via [`failpoint`] (the
+//! `HYPERATTN_FAILPOINTS` grammar is documented there) and exercised
+//! by the seeded chaos harness (`rust/tests/chaos_props.rs`):
+//!
+//! | failure | detection | recovery |
+//! |---|---|---|
+//! | job panics (decode step, open, prefix op) | `catch_unwind` around per-job execution | ticket resolves with an explicit `panic:` error; the session is **quarantined** (force-closed, frames released); engine and all other sessions keep serving; `panics_caught` bumps |
+//! | pool exhausted on decode | `POOL_EXHAUSTED` from the paged allocator | bounded exponential backoff (`retries`), then LRU-evict idle sessions, then **degrade** the session to a tighter sliding window (`degraded_sessions`), then shed with an admission reject |
+//! | pool exhausted on open/fork | same | LRU eviction then explicit backpressure (`admission_rejects`) — opens are not degraded, they are cheap to retry client-side |
+//! | deadline missed | per-request `deadline` checked before any pool work | ticket resolves `DEADLINE_EXPIRED` without touching the session (`deadline_expired`) |
+//! | poisoned mutex | a panic unwound through a lock holder | [`failpoint::lock_recover`] heals the lock and counts the recovery instead of cascading panics |
+//! | engine overload | bounded queues everywhere | senders block (backpressure), never unbounded growth |
+//! | shutdown under load | `Shutdown` drains the queue | every queued ticket resolves with an explicit error; all session and prefix pages return to the pool |
+//!
 //! [`Server::open_session`]: server::Server::open_session
 //! [`Server::decode`]: server::Server::decode
 //! [`Server::close_session`]: server::Server::close_session
@@ -72,6 +89,7 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod failpoint;
 pub mod metrics;
 pub mod request;
 pub mod router;

@@ -1,5 +1,11 @@
 //! Job and response types flowing through the coordinator.
 
+/// Error marker for a request whose deadline passed before the engine
+/// did any work for it: the ticket resolves with an error containing
+/// this string, no pool pages are touched, and the session (if any) is
+/// left exactly as it was — the client may retry with a fresh deadline.
+pub const DEADLINE_EXPIRED: &str = "deadline expired";
+
 /// Identifier of a live streaming (prefill/decode) session.  Allocated
 /// by [`crate::coordinator::Server::open_session`]; decode steps and
 /// the close message carry it so the engine can find the session's KV

@@ -128,6 +128,25 @@
 //! passes are expressed as panel GEMMs + fused softmax primitives, so a
 //! faster microkernel drops in without touching the algorithm.
 //!
+//! ## Robustness
+//!
+//! The coordinator is built to degrade, not to die (the full failure
+//! table is in the [`coordinator`] module docs): per-job panics are
+//! caught and quarantine only the offending session; decode-time pool
+//! exhaustion walks a bounded backoff → LRU-evict → degrade-to-window
+//! → shed ladder; per-request deadlines
+//! ([`coordinator::ServerConfig::request_timeout`],
+//! [`coordinator::Server::decode_with_deadline`]) resolve stale queued
+//! work with an explicit error before it burns pool pages; and
+//! [`coordinator::Server::ping`] answers through the live pipeline for
+//! health probes.  Every one of these paths is exercisable via seeded
+//! **fault injection** ([`coordinator::failpoint`]): set
+//! `HYPERATTN_FAILPOINTS="site=action[:prob],..."` (e.g.
+//! `"pool_alloc=err:0.05,decode_job=panic:0.01,engine_recv=delay:20ms"`,
+//! seed via `HYPERATTN_FAILPOINT_SEED`) or the `serve --failpoints`
+//! flag.  Unset, every site compiles to one relaxed atomic load —
+//! bitwise-identical behavior to a build without failpoints.
+//!
 //! ## Environment knobs
 //!
 //! * `HYPERATTN_THREADS=N` — worker-thread count for the [`par`]
@@ -135,6 +154,9 @@
 //! * `HYPERATTN_SIMD=scalar|avx2|neon|auto` — force a kernel backend
 //!   (default: best the CPU supports).  Unsupported choices fall back to
 //!   the best available with a warning.
+//! * `HYPERATTN_FAILPOINTS=spec` / `HYPERATTN_FAILPOINT_SEED=N` —
+//!   seeded fault injection at the coordinator's high-consequence
+//!   seams; grammar and site list in [`coordinator::failpoint`].
 
 pub mod attention;
 pub mod bench;

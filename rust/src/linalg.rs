@@ -26,6 +26,7 @@
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 
+use crate::coordinator::failpoint::lock_recover;
 use crate::kernel;
 use crate::par;
 
@@ -446,6 +447,10 @@ impl std::fmt::Debug for PagePool {
 impl PagePool {
     pub fn new(page_elems: usize, budget: Option<usize>) -> Self {
         assert!(page_elems > 0, "zero-sized page");
+        // First pool construction is the earliest high-consequence seam;
+        // arm env-configured failpoints here so library users (tests,
+        // examples) get them without going through the CLI.
+        crate::coordinator::failpoint::init_from_env();
         PagePool {
             inner: Arc::new(Mutex::new(PoolInner {
                 page_elems,
@@ -470,14 +475,23 @@ impl PagePool {
     }
 
     pub fn page_elems(&self) -> usize {
-        self.inner.lock().unwrap().page_elems
+        lock_recover(&self.inner).page_elems
     }
 
     /// Check one frame out (free list first, then a fresh allocation),
     /// returning its sole ownership handle.  At the budget this fails
     /// with a [`POOL_EXHAUSTED`] error and counts a rejection.
     pub fn try_alloc(&self) -> Result<SharedFrame, String> {
-        let mut p = self.inner.lock().unwrap();
+        // Failpoint before the lock: an injected panic here cannot
+        // poison the pool, and an injected error is shaped like real
+        // exhaustion so callers exercise the same backoff/degrade/shed
+        // ladder as under genuine pool pressure.
+        if let Err(e) = crate::coordinator::failpoint::hit("pool_alloc") {
+            let mut p = lock_recover(&self.inner);
+            p.rejects += 1;
+            return Err(format!("{POOL_EXHAUSTED} ({e})"));
+        }
+        let mut p = lock_recover(&self.inner);
         if let Some(b) = p.budget {
             if p.outstanding >= b {
                 p.rejects += 1;
@@ -506,7 +520,7 @@ impl PagePool {
     /// allocation, no copy, no budget charge — `outstanding` already
     /// counts the frame once.
     pub fn retain(&self, frame: &SharedFrame) -> SharedFrame {
-        let mut p = self.inner.lock().unwrap();
+        let mut p = lock_recover(&self.inner);
         // all retains/releases serialize on this lock, so the strong
         // count is stable here: 1 -> 2 is exactly the moment the frame
         // becomes shared
@@ -521,7 +535,7 @@ impl PagePool {
     /// this was its last handle; otherwise the surviving owners keep it
     /// and only the refcount moves.
     pub fn release(&self, frame: SharedFrame) {
-        let mut p = self.inner.lock().unwrap();
+        let mut p = lock_recover(&self.inner);
         if Arc::strong_count(&frame.inner) == 2 {
             // dropping from 2 owners to 1: no longer shared
             p.shared = p.shared.saturating_sub(1);
@@ -542,18 +556,18 @@ impl PagePool {
     /// layer after privatizing a shared frame, so the gauge survives
     /// individual caches being dropped).
     pub fn note_cow(&self) {
-        self.inner.lock().unwrap().cows += 1;
+        lock_recover(&self.inner).cows += 1;
     }
 
     /// Ids of the frames currently on the free list (test/diagnostic
     /// observable: a free-listed id must never also be referenced by a
     /// live block table).
     pub fn free_frame_ids(&self) -> Vec<u64> {
-        self.inner.lock().unwrap().free.iter().map(|f| f.id).collect()
+        lock_recover(&self.inner).free.iter().map(|f| f.id).collect()
     }
 
     pub fn stats(&self) -> PoolStats {
-        let p = self.inner.lock().unwrap();
+        let p = lock_recover(&self.inner);
         PoolStats {
             page_elems: p.page_elems,
             budget: p.budget,
@@ -842,6 +856,9 @@ impl KvCache {
     /// have trimmed pages that this append would have expired anyway;
     /// retrying the same append converges to the same final state).
     pub fn append(&mut self, x: &QkvView<'_>) -> Result<(), String> {
+        // Failpoint before any mutation, so an injected fault preserves
+        // append's all-or-nothing contract.
+        crate::coordinator::failpoint::hit("kv_append")?;
         if x.heads != self.heads || x.d != self.d {
             return Err(format!(
                 "cache is ({} heads, d={}), view is ({} heads, d={})",
@@ -949,6 +966,10 @@ impl KvCache {
     /// eviction epoch continues from the parent's value and moves
     /// independently afterwards.  Spare frames are not forked.
     pub fn fork(&self) -> KvCache {
+        // Infallible seam: an injected `err` here surfaces as a panic
+        // (before any refcount moves) and is caught by the engine's
+        // per-job isolation.
+        crate::coordinator::failpoint::hit_unwind("kv_fork");
         let sink_frames = self.sink_frames.iter().map(|f| self.pool.retain(f)).collect();
         let tail_frames = self.tail_frames.iter().map(|f| self.pool.retain(f)).collect();
         KvCache {
@@ -997,6 +1018,26 @@ impl KvCache {
         let old = std::mem::replace(slot, fresh);
         pool.release(old);
         pool.note_cow();
+        Ok(())
+    }
+
+    /// Tighten the sliding window in place — the graceful-degradation
+    /// primitive.  The new window is `min(existing, window_rows)` rows
+    /// (a degrade must never *grow* retention) with the sink pinning
+    /// unchanged; a Full-policy cache degrades to `(window_rows, 0)`.
+    /// Pages that fall out of the tighter window are freed immediately
+    /// (epoch bump), which samplers absorb through the same remap path
+    /// as any other out-of-band eviction.
+    pub fn tighten_window(&mut self, window_rows: usize) -> Result<(), String> {
+        if window_rows == 0 {
+            return Err("sliding window must retain at least 1 row".into());
+        }
+        let (w, sink) = match self.window {
+            Some((w, s)) => (w.min(window_rows), s),
+            None => (window_rows, 0),
+        };
+        self.window = Some((w, sink));
+        self.evict();
         Ok(())
     }
 
@@ -1750,6 +1791,56 @@ mod tests {
         assert!(segs.iter().any(|s| s.abs_start > s.start));
         // window must retain at least one row
         assert!(KvCache::with_pool(h, d, PagePool::unbounded(64 * h * d), Some((0, 0))).is_err());
+    }
+
+    /// `tighten_window` — the graceful-degradation primitive: frees
+    /// pages immediately, bumps the epoch, never grows retention, and
+    /// converts a Full-policy cache into a windowed one.
+    #[test]
+    fn kv_cache_tighten_window_degrades_in_place() {
+        let (h, d) = (2usize, 3usize);
+        let rp = 4usize;
+        let pool = PagePool::unbounded(3 * h * d * rp);
+        let mut cache = KvCache::with_pool(h, d, pool.clone(), None).unwrap();
+        let mut rng = Rng::new(31);
+        let mut hist_k: Vec<f32> = Vec::new();
+        for _ in 0..24usize {
+            let q = rng.normal_vec(h * d);
+            let k = rng.normal_vec(h * d);
+            let v = rng.normal_vec(h * d);
+            let view = QkvView::new(h, 1, d, &q, &k, &v).unwrap();
+            cache.append(&view).unwrap();
+            hist_k.extend_from_slice(&k[..d]);
+        }
+        assert_eq!(cache.resident_len(), 24);
+        let pages_before = cache.resident_pages();
+        let epoch_before = cache.epoch();
+        cache.tighten_window(6).unwrap();
+        assert_eq!(cache.window(), Some((6, 0)));
+        assert!(cache.resident_pages() < pages_before, "degrade must free pages now");
+        assert!(cache.epoch() > epoch_before, "eviction must bump the epoch");
+        assert_eq!(cache.len(), 24, "logical length is untouched");
+        // surviving rows are the newest, at the right absolute positions
+        let got = cache.gather_head_k(0);
+        let first = 24 - cache.resident_len();
+        for (r, abs) in (first..24).enumerate() {
+            assert_eq!(got.row(r), &hist_k[abs * d..(abs + 1) * d], "abs row {abs}");
+        }
+        // tightening never grows the window, and freed pages hit the pool
+        cache.tighten_window(100).unwrap();
+        assert_eq!(cache.window(), Some((6, 0)));
+        assert_eq!(pool.stats().outstanding, cache.resident_pages());
+        // a windowed cache keeps its sink pinning across a tighten
+        let mut sunk = KvCache::with_pool(h, d, pool.clone(), Some((12, 5))).unwrap();
+        for _ in 0..20usize {
+            let q = rng.normal_vec(h * d);
+            let view = QkvView::new(h, 1, d, &q, &q, &q).unwrap();
+            sunk.append(&view).unwrap();
+        }
+        sunk.tighten_window(4).unwrap();
+        assert_eq!(sunk.window(), Some((4, 5)));
+        assert!(sunk.resident_len() >= 5 + 1, "sink rows stay resident");
+        assert!(sunk.tighten_window(0).is_err());
     }
 
     #[test]

@@ -94,6 +94,16 @@ COMMANDS:
                                      re-ingesting the prompt
            [--prefix-file PATH]      derive the pinned prefix from a file
                                      (same file => same prefix across runs)
+           [--deadline-ms MS]        per-request deadline (0 = none): work
+                                     still queued past it resolves with an
+                                     explicit deadline-expired error
+           [--kv-degrade-window W]   under sustained pool exhaustion,
+                                     degrade a session once to a W-row
+                                     sliding window before shedding
+           [--failpoints SPEC]       arm fault injection, e.g.
+                                     \"pool_alloc=err:0.05,decode_job=panic:0.01\"
+                                     (same grammar as HYPERATTN_FAILPOINTS)
+           [--failpoint-seed N]      deterministic failpoint draws
   bench    [--json FILE] --sizes 4096,16384,65536 --d D --block B --samples M --reps R
            [--decode-sizes 4096,16384 --decode-steps T]   decode tokens/sec rows
            [--cache-sizes 16384,65536 --kv-window W --kv-sink S] paged-cache rows
@@ -133,7 +143,15 @@ fn main() {
             let text = doc.to_string();
             match args.get_str("json") {
                 Some(path) => {
-                    std::fs::write(path, &text).expect("write bench json");
+                    // atomic publish: a crash (or injected fault) mid-write
+                    // must never leave a truncated JSON where a dashboard
+                    // or CI gate will read it — write aside, then rename
+                    let tmp = format!("{path}.tmp.{}", std::process::id());
+                    std::fs::write(&tmp, &text).expect("write bench json");
+                    if let Err(e) = std::fs::rename(&tmp, path) {
+                        let _ = std::fs::remove_file(&tmp);
+                        panic!("publish bench json to {path}: {e}");
+                    }
                     println!("wrote {path}");
                 }
                 None => println!("{text}"),
@@ -292,7 +310,30 @@ fn cmd_serve(args: &Args) {
     if kv_ttl_ms > 0 {
         cfg.cache.idle_ttl = Some(std::time::Duration::from_millis(kv_ttl_ms));
     }
-    let server = std::sync::Arc::new(Server::start(cfg));
+    let degrade_window = args.get("kv-degrade-window", 0usize);
+    if degrade_window > 0 {
+        cfg.cache.degrade_window = Some(degrade_window);
+    }
+    let deadline_ms = args.get("deadline-ms", 0u64);
+    if deadline_ms > 0 {
+        cfg.request_timeout = Some(std::time::Duration::from_millis(deadline_ms));
+    }
+    // fault injection: CLI spec wins over HYPERATTN_FAILPOINTS
+    if let Some(spec) = args.get_str("failpoints") {
+        let seed = args.get("failpoint-seed", 0u64);
+        if let Err(e) = hyperattention::coordinator::failpoint::configure(spec, seed) {
+            eprintln!("--failpoints: {e}");
+            std::process::exit(2);
+        }
+        println!("failpoints armed: {spec} (seed {seed})");
+    }
+    let server = match Server::start(cfg) {
+        Ok(s) => std::sync::Arc::new(s),
+        Err(e) => {
+            eprintln!("failed to start coordinator: {e}");
+            std::process::exit(1);
+        }
+    };
 
     // optional pinned shared prefix: streaming sessions fork it (COW)
     // instead of re-ingesting a long common prompt per session
@@ -328,11 +369,17 @@ fn cmd_serve(args: &Args) {
             seed: 0,
         };
         let ticket = server.register_prefix("cli-prefix", job).expect("register prefix");
-        ticket.wait().expect("prefix ingest");
-        let g = server.cache_gauges();
-        let pages = g.per_prefix.first().map(|(_, p, _)| *p).unwrap_or(0);
-        println!("pinned {rows}-row shared prefix ({pages} pages) as \"cli-prefix\"");
-        prefix_key = Some("cli-prefix");
+        // a register can fail under armed failpoints or a tight budget;
+        // degrade to independent sessions instead of aborting the serve
+        match ticket.wait() {
+            Ok(_) => {
+                let g = server.cache_gauges();
+                let pages = g.per_prefix.first().map(|(_, p, _)| *p).unwrap_or(0);
+                println!("pinned {rows}-row shared prefix ({pages} pages) as \"cli-prefix\"");
+                prefix_key = Some("cli-prefix");
+            }
+            Err(e) => eprintln!("prefix ingest failed ({e}); sessions will open unshared"),
+        }
     }
 
     // streaming mode: S concurrent prefill/decode sessions of T tokens
@@ -346,7 +393,13 @@ fn cmd_serve(args: &Args) {
         let mut handles = Vec::new();
         for s in 0..stream {
             let srv = server.clone();
+            // fault-tolerant client loop: with failpoints armed (or a
+            // tight budget / deadline) individual steps fail by design —
+            // count them, keep streaming, and report at the end instead
+            // of crashing the load generator
             handles.push(std::thread::spawn(move || {
+                let mut decoded = 0usize;
+                let mut errors = 0usize;
                 let mut rng = Rng::new(1000 + s as u64);
                 let len = heads * n * d;
                 let job = AttnJob {
@@ -361,10 +414,13 @@ fn cmd_serve(args: &Args) {
                     mode: ModePreference::Auto,
                     seed: s as i32,
                 };
-                let (sid, ticket) = srv
-                    .open_session_with_prefix(prefix_key, job)
-                    .expect("open session");
-                ticket.wait().expect("prefill");
+                let (sid, ticket) = match srv.open_session_with_prefix(prefix_key, job) {
+                    Ok(x) => x,
+                    Err(_) => return (decoded, errors + 1),
+                };
+                if ticket.wait().is_err() {
+                    return (decoded, errors + 1);
+                }
                 for _ in 0..tokens {
                     let dj = DecodeJob {
                         session: sid,
@@ -375,19 +431,34 @@ fn cmd_serve(args: &Args) {
                         k: rng.normal_vec(heads * d),
                         v: rng.normal_vec(heads * d),
                     };
-                    srv.decode_wait(dj).expect("decode step");
+                    match srv.decode_wait(dj) {
+                        Ok(_) => decoded += 1,
+                        Err(e) => {
+                            errors += 1;
+                            // a quarantined (panicked) or evicted session
+                            // cannot continue; the stream ends early
+                            if e.contains("unknown session") {
+                                return (decoded, errors);
+                            }
+                        }
+                    }
                 }
-                srv.close_session(sid).expect("close session");
+                let _ = srv.close_session(sid);
+                (decoded, errors)
             }));
         }
+        let (mut decoded, mut errors) = (0usize, 0usize);
         for h in handles {
-            h.join().unwrap();
+            let (d_ok, d_err) = h.join().expect("client thread must not panic");
+            decoded += d_ok;
+            errors += d_err;
         }
         let dt = t0.elapsed().as_secs_f64();
         println!(
-            "{} decode tokens in {dt:.2}s ({:.1} tok/s aggregate)\n{}\n{}",
+            "{decoded}/{} decode tokens in {dt:.2}s ({:.1} tok/s aggregate), \
+             {errors} faulted requests (all resolved explicitly)\n{}\n{}",
             stream * tokens,
-            (stream * tokens) as f64 / dt,
+            decoded as f64 / dt,
             server.metrics().report(),
             server.cache_gauges().report()
         );
@@ -417,13 +488,19 @@ fn cmd_serve(args: &Args) {
             s.submit_wait(job)
         }));
     }
+    let mut ok = 0usize;
+    let mut errors = 0usize;
     for h in handles {
-        h.join().unwrap().unwrap();
+        match h.join().expect("client thread must not panic") {
+            Ok(_) => ok += 1,
+            Err(_) => errors += 1,
+        }
     }
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "{jobs} jobs in {dt:.2}s ({:.1} jobs/s)\n{}\n{}",
-        jobs as f64 / dt,
+        "{ok}/{jobs} jobs in {dt:.2}s ({:.1} jobs/s), {errors} faulted \
+         (all resolved explicitly)\n{}\n{}",
+        ok as f64 / dt,
         server.metrics().report(),
         server.cache_gauges().report()
     );

@@ -1,0 +1,346 @@
+//! Seeded chaos harness for the coordinator's robustness machinery:
+//! every trial arms a randomized failpoint mix (seeded — same seed,
+//! same faults), drives N concurrent streaming sessions over a small
+//! shared page budget, and checks the invariants that define "degrade,
+//! not die":
+//!
+//! * **every ticket resolves** — success, an injected/explicit error,
+//!   or the shutdown flush; never a hang and never a timeout;
+//! * **no panic escapes** — injected `panic` actions are caught at the
+//!   job boundary (quarantining only the offending session); the
+//!   process-level panic hook sees zero non-injected panics;
+//! * **no frame leaks** — after teardown the pool's conservation
+//!   invariant holds (`in_use + free == allocs - reuses`) and closing
+//!   everything returns `pages_in_use` to zero;
+//! * **the health probe answers** mid-chaos ([`Server::ping`] rides the
+//!   live decode lane, not a shortcut);
+//! * **shutdown drains** with decode steps still queued.
+//!
+//! A final pair of trials checks the zero-cost contract: with no spec
+//! armed (and after `clear()`), a seeded workload is bitwise identical
+//! to the never-armed run, and an armed delay-only spec changes timing
+//! but not one output bit.
+//!
+//! Runs a couple dozen seeds by default in `cargo test -q`; CI widens
+//! the matrix via `HYPERATTN_CHAOS_SEEDS` (≥ 300).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use hyperattention::coordinator::failpoint::{self, INJECTED};
+use hyperattention::coordinator::{
+    AttnJob, DecodeJob, ModePreference, Server, ServerConfig, Ticket,
+};
+use hyperattention::rng::Rng;
+
+const H: usize = 2;
+const D: usize = 16;
+/// 8 rows per page at (H, D): page_elems / (3·H·D)
+const PAGE_ELEMS: usize = 3 * H * D * 8;
+/// Hard ceiling on any single wait: a chaos trial may be slow (armed
+/// delays, backoff ladders) but must never wedge.
+const RESOLVE: Duration = Duration::from_secs(30);
+
+/// Failpoint state is process-global: the chaos trials and the parity
+/// test must not interleave (integration tests run on threads).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Panics that unwind past the job boundary would abort the harness's
+/// client threads; panics *inside* the engine are caught and surfaced
+/// as errors.  The hook counts any panic whose payload is not the
+/// injected marker — the count must stay zero — and stays quiet about
+/// injected ones so a 300-seed CI log is readable.
+static ESCAPED_PANICS: AtomicU64 = AtomicU64::new(0);
+
+fn install_quiet_hook() {
+    static HOOK: OnceLock<()> = OnceLock::new();
+    HOOK.get_or_init(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(|s| s.contains(INJECTED))
+                .or_else(|| {
+                    info.payload()
+                        .downcast_ref::<&str>()
+                        .map(|s| s.contains(INJECTED))
+                })
+                .unwrap_or(false);
+            if !injected {
+                ESCAPED_PANICS.fetch_add(1, Ordering::Relaxed);
+                default(info);
+            }
+        }));
+    });
+}
+
+fn prompt(n: usize, seed: u64) -> AttnJob {
+    let mut rng = Rng::new(seed);
+    let len = H * n * D;
+    AttnJob {
+        id: 0,
+        heads: H,
+        n,
+        d: D,
+        q: rng.normal_vec(len),
+        k: rng.normal_vec(len),
+        v: rng.normal_vec(len),
+        causal: true,
+        mode: ModePreference::Exact,
+        seed: seed as i32,
+    }
+}
+
+fn step(session: u64, rng: &mut Rng) -> DecodeJob {
+    DecodeJob {
+        session,
+        heads: H,
+        d: D,
+        pos: None,
+        q: rng.normal_vec(H * D),
+        k: rng.normal_vec(H * D),
+        v: rng.normal_vec(H * D),
+    }
+}
+
+/// Wait on a prefill ticket, distinguishing "resolved with an error"
+/// (fine under chaos) from "never resolved" (a bug).
+fn must_resolve(t: Ticket, what: &str, seed: u64) -> Result<(), String> {
+    match t.wait_timeout(RESOLVE) {
+        Ok(_) => Ok(()),
+        Err(e) => {
+            assert!(!e.contains("timed out"), "seed {seed}: {what} never resolved");
+            Err(e)
+        }
+    }
+}
+
+/// One randomized fault mix.  Seeded: the spec (sites, actions,
+/// probabilities) is a pure function of the trial seed.
+fn chaos_spec(rng: &mut Rng) -> String {
+    let mut parts = Vec::new();
+    if rng.next_f32() < 0.7 {
+        parts.push(format!("pool_alloc=err:{:.2}", 0.05 + 0.15 * rng.next_f32()));
+    }
+    if rng.next_f32() < 0.5 {
+        parts.push(format!("decode_job=err:{:.2}", 0.03 + 0.12 * rng.next_f32()));
+    }
+    if rng.next_f32() < 0.35 {
+        parts.push(format!("decode_job=panic:{:.2}", 0.02 + 0.08 * rng.next_f32()));
+    }
+    if rng.next_f32() < 0.4 {
+        parts.push(format!("kv_append=err:{:.2}", 0.03 + 0.1 * rng.next_f32()));
+    }
+    if rng.next_f32() < 0.3 {
+        parts.push(format!("open_job=err:{:.2}", 0.05 + 0.15 * rng.next_f32()));
+    }
+    if rng.next_f32() < 0.3 {
+        parts.push(format!("session_checkout=err:{:.2}", 0.03 + 0.1 * rng.next_f32()));
+    }
+    if rng.next_f32() < 0.25 {
+        parts.push("prefix_register=err:0.5".to_string());
+    }
+    if rng.next_f32() < 0.4 {
+        parts.push("engine_recv=delay:1ms:0.2".to_string());
+    }
+    if parts.is_empty() {
+        // at least one site armed per trial, or it isn't a chaos trial
+        parts.push("decode_job=err:0.1".to_string());
+    }
+    parts.join(",")
+}
+
+/// One chaos trial: armed failpoints, N streaming clients over a tight
+/// budget, a mid-load health probe, then an orderly teardown with the
+/// faults cleared — every invariant checked.
+fn run_trial(seed: u64) {
+    let mut rng = Rng::new(seed);
+    let spec = chaos_spec(&mut rng);
+    failpoint::configure(&spec, seed).unwrap_or_else(|e| panic!("seed {seed}: {spec:?}: {e}"));
+
+    let mut cfg = ServerConfig::substrate_only();
+    cfg.cache.page_elems = PAGE_ELEMS;
+    // tight: 2 sessions' prompts fill it, so the ladder actually runs
+    cfg.cache.budget_pages = Some(8);
+    cfg.cache.degrade_window = if rng.next_f32() < 0.7 { Some(16) } else { None };
+    if rng.next_f32() < 0.3 {
+        // aggressive deadlines on some trials: expiry is one more path
+        // every ticket must resolve through
+        cfg.request_timeout = Some(Duration::from_millis(40));
+    }
+    let server = Arc::new(Server::start(cfg).unwrap_or_else(|e| panic!("seed {seed}: {e}")));
+
+    let registered = if rng.next_f32() < 0.5 {
+        let t = server.register_prefix("chaos", prompt(20, seed ^ 0xabc)).unwrap();
+        must_resolve(t, "prefix register", seed).is_ok()
+    } else {
+        false
+    };
+
+    let n_sessions = 3 + (rng.next_u64() % 3) as usize; // 3..=5
+    let tokens = 5 + (rng.next_u64() % 4) as usize; // 5..=8
+    let mut clients = Vec::new();
+    for s in 0..n_sessions {
+        let srv = server.clone();
+        let sseed = seed ^ (0x51e5 * (s as u64 + 1));
+        clients.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(sseed);
+            let opened = if registered && s % 2 == 0 {
+                srv.open_session_with_prefix(Some("chaos"), prompt(4, sseed))
+            } else {
+                srv.open_session(prompt(16, sseed))
+            };
+            // report the sid even when the stream dies early: teardown
+            // closes it (close of a quarantined / never-registered /
+            // evicted session is a documented no-op)
+            let Ok((sid, ticket)) = opened else { return (0usize, None) };
+            if must_resolve(ticket, "prefill", sseed).is_err() {
+                return (0, Some(sid));
+            }
+            let mut decoded = 0usize;
+            for _ in 0..tokens {
+                match srv.decode(step(sid, &mut rng)) {
+                    Ok(t) => match t.wait_timeout(RESOLVE) {
+                        Ok(_) => decoded += 1,
+                        Err(e) => {
+                            assert!(
+                                !e.contains("timed out"),
+                                "seed {sseed}: decode never resolved"
+                            );
+                            // quarantined (injected panic) or evicted:
+                            // this stream is over, by design
+                            if e.contains("unknown session") {
+                                return (decoded, Some(sid));
+                            }
+                        }
+                    },
+                    Err(_) => return (decoded, Some(sid)), // shutting down
+                }
+            }
+            (decoded, Some(sid))
+        }));
+    }
+
+    // the health probe answers through the live (chaotic) pipeline
+    server.ping(RESOLVE).unwrap_or_else(|e| panic!("seed {seed}: ping under chaos: {e}"));
+
+    let mut live = Vec::new();
+    for c in clients {
+        let (_, sid) = c.join().expect("client thread must not panic");
+        live.extend(sid);
+    }
+
+    // teardown is deterministic: clear the faults, then close everything
+    failpoint::clear();
+    for sid in live {
+        server.close_session(sid).unwrap();
+    }
+    if registered {
+        server.release_prefix("chaos").unwrap();
+    }
+    // closes/releases share the decode lane FIFO: once a ping answers,
+    // they have all executed
+    server.ping(RESOLVE).unwrap();
+
+    let g = server.cache_gauges();
+    assert_eq!(g.pages_in_use, 0, "seed {seed}: pages leaked: {:?}", g.per_session);
+    assert_eq!(
+        g.pages_in_use + g.pages_free,
+        (g.pool_allocs - g.pool_reuses) as usize,
+        "seed {seed}: frame conservation violated"
+    );
+    assert!(g.per_session.is_empty(), "seed {seed}: sessions leaked");
+    assert!(g.per_prefix.is_empty(), "seed {seed}: prefixes leaked");
+
+    // shutdown drains: queue a last wave of decode steps against dead
+    // sessions and drop the server with them in flight — each resolves
+    let mut tickets = Vec::new();
+    for i in 0..4u64 {
+        if let Ok(t) = server.decode(step(1000 + i, &mut rng)) {
+            tickets.push(t);
+        }
+    }
+    drop(server);
+    for t in tickets {
+        let r = t.wait_timeout(RESOLVE);
+        assert!(
+            r.is_err() && !r.unwrap_err().contains("timed out"),
+            "seed {seed}: shutdown left a ticket unresolved"
+        );
+    }
+}
+
+/// The main chaos matrix.  `HYPERATTN_CHAOS_SEEDS=N` widens it (CI
+/// runs ≥ 300).
+#[test]
+fn chaos_trials_degrade_but_never_die() {
+    install_quiet_hook();
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let trials: u64 = std::env::var("HYPERATTN_CHAOS_SEEDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(24);
+    for t in 0..trials {
+        run_trial(0xC8A05 ^ (t.wrapping_mul(0x9E3779B9)));
+    }
+    failpoint::clear();
+    assert_eq!(
+        ESCAPED_PANICS.load(Ordering::Relaxed),
+        0,
+        "a non-injected panic escaped during chaos trials"
+    );
+}
+
+/// A short deterministic workload: prefill + decode, returning every
+/// output bit that reaches the client.
+fn run_workload(seed: u64) -> Vec<f32> {
+    let mut cfg = ServerConfig::substrate_only();
+    cfg.cache.page_elems = PAGE_ELEMS;
+    let server = Server::start(cfg).unwrap();
+    let (sid, t) = server.open_session(prompt(16, seed)).unwrap();
+    let mut out = t.wait().unwrap().out;
+    let mut rng = Rng::new(seed ^ 7);
+    for _ in 0..6 {
+        out.extend(server.decode_wait(step(sid, &mut rng)).unwrap().out);
+    }
+    server.close_session(sid).unwrap();
+    server.shutdown();
+    out
+}
+
+/// The zero-cost contract: unarmed failpoints are one relaxed load —
+/// the workload is bitwise identical whether the process never armed
+/// them, armed-then-cleared them, or armed a delay-only spec (timing
+/// chaos must not change a single output bit).
+#[test]
+fn unarmed_and_delay_only_failpoints_are_bitwise_invisible() {
+    install_quiet_hook();
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    failpoint::clear();
+    let baseline = run_workload(42);
+    assert!(!baseline.is_empty() && baseline.iter().all(|x| x.is_finite()));
+
+    failpoint::configure("decode_job=err:1.0,pool_alloc=panic:1.0", 9).unwrap();
+    failpoint::clear();
+    let after_clear = run_workload(42);
+    assert_eq!(baseline, after_clear, "cleared failpoints left residue");
+
+    failpoint::configure("engine_recv=delay:1ms", 9).unwrap();
+    let delayed = run_workload(42);
+    failpoint::clear();
+    assert_eq!(baseline, delayed, "a delay-only failpoint changed output bits");
+}
+
+/// Determinism of the chaos itself: the same seed arms the same spec
+/// and draws the same faults, so a CI failure's seed reproduces locally.
+#[test]
+fn chaos_spec_is_a_pure_function_of_the_seed() {
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let a = chaos_spec(&mut Rng::new(1234));
+    let b = chaos_spec(&mut Rng::new(1234));
+    assert_eq!(a, b);
+    assert!(failpoint::configure(&a, 1234).is_ok(), "generated spec must parse: {a}");
+    failpoint::clear();
+}

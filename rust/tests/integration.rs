@@ -54,7 +54,7 @@ fn coordinator_routes_to_artifacts_and_matches_substrate() {
     };
     let mut cfg = ServerConfig::with_artifacts(&dir);
     cfg.router.hyper_threshold = 1 << 20; // force exact routing
-    let server = Server::start(cfg);
+    let server = Server::start(cfg).unwrap();
 
     // exact artifact shape: must be served by PJRT
     let job = mk_job(4, 128, 64, false, ModePreference::Exact, 3);
@@ -93,7 +93,7 @@ fn coordinator_hyper_artifact_roundtrip() {
     };
     let mut cfg = ServerConfig::with_artifacts(&dir);
     cfg.router.hyper_threshold = 0; // everything hyper
-    let server = Server::start(cfg);
+    let server = Server::start(cfg).unwrap();
     for causal in [false, true] {
         let resp = server
             .submit_wait(mk_job(4, 256, 64, causal, ModePreference::Hyper, 5))
@@ -109,7 +109,7 @@ fn coordinator_hyper_artifact_roundtrip() {
 
 #[test]
 fn mixed_concurrent_load_completes() {
-    let server = Arc::new(Server::start(ServerConfig::substrate_only()));
+    let server = Arc::new(Server::start(ServerConfig::substrate_only()).unwrap());
     let mut handles = Vec::new();
     for i in 0..32i32 {
         let s = server.clone();
@@ -300,7 +300,7 @@ fn prop_spectral_guarantee_holds() {
 /// exactly: the engine is a thin zero-copy wrapper over the op.
 #[test]
 fn coordinator_matches_direct_op_call() {
-    let server = Server::start(ServerConfig::substrate_only());
+    let server = Server::start(ServerConfig::substrate_only()).unwrap();
     let job = mk_job(3, 64, 16, false, ModePreference::Hyper, 11);
     let (heads, n, d) = (job.heads, job.n, job.d);
     let (q, k, v) = (job.q.clone(), job.k.clone(), job.v.clone());
@@ -327,7 +327,7 @@ fn coordinator_matches_direct_op_call() {
 /// coordinator stack equals the exact causal oracle, token by token.
 #[test]
 fn streaming_session_decode_matches_oracle() {
-    let server = Server::start(ServerConfig::substrate_only());
+    let server = Server::start(ServerConfig::substrate_only()).unwrap();
     let (h, n, d, steps) = (2usize, 32usize, 16usize, 6usize);
     let total = n + steps;
     let mut rng = Rng::new(0xABCD);
@@ -412,7 +412,7 @@ fn streaming_session_decode_matches_oracle() {
 /// fails, and the session counters add up.
 #[test]
 fn concurrent_streaming_sessions_complete() {
-    let server = Arc::new(Server::start(ServerConfig::substrate_only()));
+    let server = Arc::new(Server::start(ServerConfig::substrate_only()).unwrap());
     let mut handles = Vec::new();
     for s in 0..6i32 {
         let srv = server.clone();
@@ -645,7 +645,7 @@ fn forked_windowed_decode_matches_independent_across_eviction() {
 /// Substrate determinism across the full coordinator stack.
 #[test]
 fn coordinator_deterministic_for_fixed_seed() {
-    let server = Server::start(ServerConfig::substrate_only());
+    let server = Server::start(ServerConfig::substrate_only()).unwrap();
     let job = || mk_job(2, 64, 16, false, ModePreference::Hyper, 42);
     let a = server.submit_wait(job()).unwrap();
     let b = server.submit_wait(job()).unwrap();
