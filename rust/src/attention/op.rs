@@ -719,6 +719,18 @@ impl DecodeOutput {
     }
 }
 
+/// One session's slot in a continuous-batching decode step (see
+/// [`AttentionOp::decode_step_batch`]): the operator that resolves the
+/// session's backend, the session's cache, and its single new-token
+/// view.  Lanes in one batch may differ in op config, head count, and
+/// head dimension — the batch is a scheduling construct, not a shape
+/// constraint.
+pub struct DecodeLane<'a, 'b> {
+    pub op: &'a AttentionOp,
+    pub cache: &'a mut AttnCache,
+    pub x: QkvView<'b>,
+}
+
 /// One sampled decode row: exact over the bucket window and the recent
 /// rows, ratio-estimated over the sampled residual.  Keys and values
 /// are read from the paged cache by **resident-row** index (the
@@ -1047,6 +1059,26 @@ impl AttentionOp {
         cache: &mut AttnCache,
         x: QkvView<'_>,
     ) -> Result<DecodeOutput, String> {
+        // the single-lane case of the batched step: `decode_step_batch`
+        // runs the identical prepare + per-head row code, so serial and
+        // continuous-batched decode are bitwise-identical by
+        // construction, not by parallel maintenance of two paths
+        let mut lanes = [DecodeLane { op: self, cache, x }];
+        AttentionOp::decode_step_batch(&mut lanes).pop().expect("one lane in, one result out")
+    }
+
+    /// The serial half of a decode step: validate shapes, append the
+    /// token's K/V, sync the pre-scaled plane, and maintain the sampled
+    /// estimator state (lazy rebuild / in-place eviction remap).  On
+    /// success the cache is ready for the read-only per-head row pass;
+    /// on failure the cache is unmutated (a failed [`KvCache::append`]
+    /// rolls itself back), so callers may retry or fall back freely.
+    /// Returns `(sampled, pos)` for the row pass.
+    fn decode_prepare(
+        &self,
+        cache: &mut AttnCache,
+        x: &QkvView<'_>,
+    ) -> Result<(bool, usize), String> {
         if x.n != 1 {
             return Err(format!("decode_step takes exactly one new token, got n = {}", x.n));
         }
@@ -1064,7 +1096,7 @@ impl AttentionOp {
         let sampled = self.hyper_family(resident_before + 1)
             && resident_before + 1 >= self.cfg.auto.decode_hyper_threshold;
 
-        cache.kv.append(&x)?;
+        cache.kv.append(x)?;
         cache.kv.sync_scaled(softmax_scale(d, self.cfg.scale))?;
 
         let len = cache.kv.len();
@@ -1113,29 +1145,90 @@ impl AttentionOp {
                 cache.remaps += 1;
             }
         }
+        Ok((sampled, len - 1))
+    }
 
-        let kv = &cache.kv;
-        let per_head: Vec<Vec<f32>> = if sampled {
-            let samplers = cache.samplers.as_ref().expect("built above");
-            let built = cache.built_len;
-            let block = self.cfg.block;
-            par::par_map(h, |head| {
-                let (q, _, _) = x.head(head);
-                decode_row_sampled(q.row(0), kv, head, &samplers[head], built, block)
-            })
-        } else {
-            let block = self.cfg.flash_block;
-            par::par_map(h, |head| {
-                let (q, _, _) = x.head(head);
-                // every resident key is past-or-current: no mask needed
-                attend_resident_row(kv, head, q.row(0), block)
-            })
-        };
-        let mut out = vec![0.0f32; h * d];
-        for (head, o) in per_head.into_iter().enumerate() {
-            out[head * d..(head + 1) * d].copy_from_slice(&o);
+    /// One continuous-batching model step: every lane's decode row in a
+    /// single batched multi-row attention call.
+    ///
+    /// This is iteration-level scheduling's compute half — the
+    /// coordinator's scheduler coalesces all ready sessions into one
+    /// `lanes` slice per tick, so per-step dispatch overhead (thread
+    /// fan-out, pool synchronization) is paid once per *step*, not once
+    /// per *session*.  Lanes are heterogeneous: each carries its own
+    /// op (backend/config), cache, and single-token view, so sessions
+    /// on different backends batch together.
+    ///
+    /// Execution is two-phase:
+    /// 1. **Prepare** (serial, per lane): the append + sampler
+    ///    maintenance of [`AttentionOp::decode_step`].  A lane that
+    ///    fails here keeps its error and contributes no rows; its cache
+    ///    is unmutated, so the caller can retry it through an eviction
+    ///    ladder without affecting the rest of the batch.
+    /// 2. **Rows** (one flat parallel map over every ready
+    ///    `(lane, head)` pair): the same `decode_row_sampled` /
+    ///    `attend_resident_row` calls the serial step makes, now fed to
+    ///    the thread pool as one task list so small-head sessions fill
+    ///    the machine instead of fanning out one-at-a-time.
+    ///
+    /// Returns one result per lane, in lane order.  Bitwise-identical
+    /// to calling `decode_step` per lane in order (pinned by tests):
+    /// phase 1 runs in lane order, and phase 2's rows are pure reads
+    /// with deterministic output placement.
+    pub fn decode_step_batch(
+        lanes: &mut [DecodeLane<'_, '_>],
+    ) -> Vec<Result<DecodeOutput, String>> {
+        // phase 1: serial per-lane prepare (mutates each lane's cache)
+        let slots: Vec<Result<(bool, usize), String>> = lanes
+            .iter_mut()
+            .map(|lane| lane.op.decode_prepare(lane.cache, &lane.x))
+            .collect();
+
+        // phase 2: one flat task list over every ready (lane, head) row
+        let lanes_ro: &[DecodeLane<'_, '_>] = lanes;
+        let mut tasks: Vec<(usize, usize)> = Vec::new();
+        for (li, slot) in slots.iter().enumerate() {
+            if slot.is_ok() {
+                for head in 0..lanes_ro[li].x.heads {
+                    tasks.push((li, head));
+                }
+            }
         }
-        Ok(DecodeOutput { heads: h, d, pos: len - 1, out, sampled })
+        let rows: Vec<Vec<f32>> = par::par_map(tasks.len(), |ti| {
+            let (li, head) = tasks[ti];
+            let lane = &lanes_ro[li];
+            let (sampled, _) = *slots[li].as_ref().expect("tasks only cover ok lanes");
+            let cache = &*lane.cache;
+            let kv = &cache.kv;
+            let (q, _, _) = lane.x.head(head);
+            if sampled {
+                let samplers = cache.samplers.as_ref().expect("built in prepare");
+                let built = cache.built_len;
+                decode_row_sampled(q.row(0), kv, head, &samplers[head], built, lane.op.cfg.block)
+            } else {
+                // every resident key is past-or-current: no mask needed
+                attend_resident_row(kv, head, q.row(0), lane.op.cfg.flash_block)
+            }
+        });
+
+        // scatter rows (lane-major, head-minor — the task build order)
+        // back into per-lane outputs
+        let mut row_iter = rows.into_iter();
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(li, slot)| {
+                let (sampled, pos) = slot?;
+                let lane = &lanes_ro[li];
+                let (h, d) = (lane.x.heads, lane.x.d);
+                let mut out = vec![0.0f32; h * d];
+                for head in 0..h {
+                    let o = row_iter.next().expect("one row per (lane, head) task");
+                    out[head * d..(head + 1) * d].copy_from_slice(&o);
+                }
+                Ok(DecodeOutput { heads: h, d, pos, out, sampled })
+            })
+            .collect()
     }
 
     fn run(&self, x: QkvView<'_>, capture: bool) -> AttnOutput {

@@ -8,14 +8,14 @@ use std::time::Instant;
 use crate::attention::measure;
 use crate::attention::op::{
     fit_block, AttnCache, AttnConfig, AttentionOp, AutoPolicy, Backend, CachePolicy,
-    SeedPolicy,
+    DecodeLane, SeedPolicy,
 };
 use crate::json::Value;
 use crate::kernel;
 use crate::linalg::{Mat, QkvView};
 use crate::model::corpus::{Corpus, CorpusConfig};
 use crate::model::train::train;
-use crate::model::{perplexity, Model, ModelConfig};
+use crate::model::{generate, perplexity, speculative_generate, Model, ModelConfig};
 use crate::par;
 use crate::rng::Rng;
 use crate::tasks::{score_task, task_mixture_batch, TaskKind};
@@ -493,6 +493,168 @@ pub fn run_prefix_bench(
     rows
 }
 
+/// One row of the continuous-batching gate: aggregate decode tokens/sec
+/// for `streams` warmed sessions stepped session-serially (one
+/// `decode_step` per session per token) vs fused (one
+/// [`AttentionOp::decode_step_batch`] call over every lane per token —
+/// the scheduler's tick shape).
+#[derive(Clone, Debug)]
+pub struct SchedBenchRow {
+    pub streams: usize,
+    pub n: usize,
+    pub steps: usize,
+    pub serial_tok_s: f64,
+    pub batched_tok_s: f64,
+}
+
+/// Batched-vs-serial decode at each stream count: warm `streams`
+/// independent KV caches with an `n`-row prefix each, then decode
+/// `steps` tokens per stream twice — session-serial and fused — over
+/// identical inputs (the fused path is bitwise-identical by the op-layer
+/// parity tests; this measures only the scheduling win: one parallel
+/// region per token instead of one per session per token).
+pub fn run_sched_bench(
+    streams_list: &[usize],
+    d: usize,
+    n: usize,
+    steps: usize,
+) -> Vec<SchedBenchRow> {
+    let steps = steps.max(1);
+    let flash = flash_op(true);
+    let mut rows = Vec::new();
+    for &streams in streams_list {
+        let streams = streams.max(1);
+        let data: Vec<(Mat, Mat, Mat)> = (0..streams)
+            .map(|s| clustered_qkv(100 + s as u64, n + steps, d, 32, 0.5))
+            .collect();
+        let warm = |(q, k, v): &(Mat, Mat, Mat)| {
+            let mut cache = AttnCache::new(1, d);
+            let prefix =
+                QkvView::strided(1, n, d, (n + steps) * d, &q.data, &k.data, &v.data)
+                    .expect("prefix window");
+            cache.append_kv(&prefix).expect("warm cache");
+            cache
+        };
+        let step_view = |(q, k, v): &(Mat, Mat, Mat), t: usize| {
+            let lo = (n + t) * d;
+            let hi = lo + d;
+            QkvView::new(1, 1, d, &q.data[lo..hi], &k.data[lo..hi], &v.data[lo..hi])
+                .expect("token window")
+        };
+
+        // session-serial: S separate decode_step calls per token
+        let mut caches: Vec<AttnCache> = data.iter().map(warm).collect();
+        let t0 = Instant::now();
+        for t in 0..steps {
+            for (s, cache) in caches.iter_mut().enumerate() {
+                let _ = flash
+                    .decode_step(cache, step_view(&data[s], t))
+                    .expect("serial decode");
+            }
+        }
+        let serial_s = t0.elapsed().as_secs_f64();
+
+        // fused: ONE decode_step_batch over every lane per token
+        let mut caches: Vec<AttnCache> = data.iter().map(warm).collect();
+        let t0 = Instant::now();
+        for t in 0..steps {
+            let mut lanes: Vec<DecodeLane> = caches
+                .iter_mut()
+                .enumerate()
+                .map(|(s, cache)| DecodeLane {
+                    op: &flash,
+                    cache,
+                    x: step_view(&data[s], t),
+                })
+                .collect();
+            for r in AttentionOp::decode_step_batch(&mut lanes) {
+                let _ = r.expect("batched decode");
+            }
+        }
+        let batched_s = t0.elapsed().as_secs_f64();
+
+        let total = (streams * steps) as f64;
+        rows.push(SchedBenchRow {
+            streams,
+            n,
+            steps,
+            serial_tok_s: total / serial_s.max(1e-12),
+            batched_tok_s: total / batched_s.max(1e-12),
+        });
+    }
+    rows
+}
+
+/// One row of the speculative-decoding gate: greedy vs speculative
+/// generation on the tiny LM at one draft depth (`draft_k`).  The token
+/// streams are identical by construction (pinned by the model-layer
+/// parity test); the row records the accept rate and the effective
+/// throughput of batching accepted target steps.
+#[derive(Clone, Debug)]
+pub struct SpecBenchRow {
+    pub draft_k: usize,
+    pub draft_window: usize,
+    pub tokens: usize,
+    pub serial_tok_s: f64,
+    pub spec_tok_s: f64,
+    pub accept_rate: f64,
+    pub proposed: u64,
+    pub accepted: u64,
+    pub rollbacks: u64,
+}
+
+/// Speculative-vs-greedy generation on a small randomly-initialised LM:
+/// one fixed prompt, `tokens` new tokens, timed with [`generate`] and
+/// with [`speculative_generate`] at each depth in `draft_ks` (the draft
+/// window is fixed at 8 rows — tight enough to differ from the target
+/// on long contexts, roomy enough to propose usefully).
+pub fn run_spec_bench(draft_ks: &[usize], tokens: usize) -> Vec<SpecBenchRow> {
+    let tokens = tokens.max(2);
+    let draft_window = 8usize;
+    let model = Model::init(
+        ModelConfig {
+            vocab: 32,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 64,
+            max_seq: 16 + tokens,
+            hyper_block: 8,
+            hyper_samples: 8,
+            hyper_base: 16,
+        },
+        7,
+    );
+    let prompt: Vec<usize> = (0..12).map(|i| (i * 5) % 32).collect();
+
+    let t0 = Instant::now();
+    let oracle = generate(&model, &prompt, tokens, 0, 7);
+    let serial_s = t0.elapsed().as_secs_f64();
+
+    let mut rows = Vec::new();
+    for &k in draft_ks {
+        let k = k.max(1);
+        let t0 = Instant::now();
+        let (toks, stats) =
+            speculative_generate(&model, &prompt, tokens, 0, 7, k, draft_window)
+                .expect("speculative generation");
+        let spec_s = t0.elapsed().as_secs_f64();
+        assert_eq!(toks, oracle, "speculative stream diverged from greedy");
+        rows.push(SpecBenchRow {
+            draft_k: k,
+            draft_window,
+            tokens,
+            serial_tok_s: tokens as f64 / serial_s.max(1e-12),
+            spec_tok_s: tokens as f64 / spec_s.max(1e-12),
+            accept_rate: stats.accept_rate(),
+            proposed: stats.proposed,
+            accepted: stats.accepted,
+            rollbacks: stats.rollbacks,
+        });
+    }
+    rows
+}
+
 /// One row of the machine-readable attention perf gate.
 #[derive(Clone, Debug)]
 pub struct AttnBenchRow {
@@ -532,6 +694,11 @@ impl AttnBenchRow {
 ///    `prefix_sizes` (default 4k/16k): open-session latency and pool
 ///    residency for `prefix_streams` sessions forking one shared
 ///    P-row prefix vs the same sessions independently ingesting it.
+/// 6. **Decode-batched** — the continuous-batching gate: aggregate
+///    decode tok/s for fused `decode_step_batch` vs session-serial at
+///    each stream count in `sched_streams` (default 4/16/64), plus the
+///    speculative-decode gate (accept rate + effective tok/s at each
+///    draft depth in `draft_ks`, default 2/4).
 ///
 /// Returns the JSON document; timing state (threads, backend) is
 /// restored before returning.
@@ -549,6 +716,10 @@ pub fn run_attention_bench_json(
     kv_sink: usize,
     prefix_sizes: &[usize],
     prefix_streams: usize,
+    sched_streams: &[usize],
+    sched_n: usize,
+    sched_steps: usize,
+    draft_ks: &[usize],
 ) -> Value {
     use std::collections::BTreeMap;
     let mut root = BTreeMap::new();
@@ -692,6 +863,40 @@ pub fn run_attention_bench_json(
         prefix.push(Value::Object(o));
     }
     root.insert("prefix".into(), Value::Array(prefix));
+
+    // ---- 6) continuous-batching + speculative decode gate --------------
+    let mut streams = Vec::new();
+    for r in run_sched_bench(sched_streams, d, sched_n, sched_steps) {
+        let mut o = BTreeMap::new();
+        o.insert("streams".into(), Value::Num(r.streams as f64));
+        o.insert("n".into(), Value::Num(r.n as f64));
+        o.insert("steps".into(), Value::Num(r.steps as f64));
+        o.insert("serial_tok_s".into(), Value::Num(r.serial_tok_s));
+        o.insert("batched_tok_s".into(), Value::Num(r.batched_tok_s));
+        o.insert(
+            "speedup".into(),
+            Value::Num(r.batched_tok_s / r.serial_tok_s.max(1e-12)),
+        );
+        streams.push(Value::Object(o));
+    }
+    let mut speculative = Vec::new();
+    for r in run_spec_bench(draft_ks, 24) {
+        let mut o = BTreeMap::new();
+        o.insert("draft_k".into(), Value::Num(r.draft_k as f64));
+        o.insert("draft_window".into(), Value::Num(r.draft_window as f64));
+        o.insert("tokens".into(), Value::Num(r.tokens as f64));
+        o.insert("serial_tok_s".into(), Value::Num(r.serial_tok_s));
+        o.insert("spec_tok_s".into(), Value::Num(r.spec_tok_s));
+        o.insert("accept_rate".into(), Value::Num(r.accept_rate));
+        o.insert("proposed".into(), Value::Num(r.proposed as f64));
+        o.insert("accepted".into(), Value::Num(r.accepted as f64));
+        o.insert("rollbacks".into(), Value::Num(r.rollbacks as f64));
+        speculative.push(Value::Object(o));
+    }
+    let mut sched = BTreeMap::new();
+    sched.insert("streams".into(), Value::Array(streams));
+    sched.insert("speculative".into(), Value::Array(speculative));
+    root.insert("decode_batched".into(), Value::Object(sched));
 
     root.insert(
         "threads".into(),
@@ -1006,7 +1211,24 @@ mod tests {
 
     #[test]
     fn bench_json_has_prefix_section() {
-        let doc = run_attention_bench_json(&[64], 16, 16, 16, 1, &[64], 2, &[64], 32, 8, &[128], 2);
+        let doc = run_attention_bench_json(
+            &[64],
+            16,
+            16,
+            16,
+            1,
+            &[64],
+            2,
+            &[64],
+            32,
+            8,
+            &[128],
+            2,
+            &[2],
+            64,
+            2,
+            &[2],
+        );
         let prefix = doc.get("prefix").expect("prefix section present");
         let rows = match prefix {
             Value::Array(a) => a,
@@ -1026,7 +1248,24 @@ mod tests {
     #[test]
     fn bench_json_has_cache_section() {
         let doc =
-            run_attention_bench_json(&[64], 16, 16, 16, 1, &[64], 2, &[256], 64, 8, &[128], 2);
+            run_attention_bench_json(
+            &[64],
+            16,
+            16,
+            16,
+            1,
+            &[64],
+            2,
+            &[256],
+            64,
+            8,
+            &[128],
+            2,
+            &[2],
+            64,
+            2,
+            &[2],
+        );
         let cache = doc.get("cache").expect("cache section present");
         let rows = match cache {
             Value::Array(a) => a,
@@ -1045,7 +1284,24 @@ mod tests {
     #[test]
     fn bench_json_has_decode_section() {
         let doc =
-            run_attention_bench_json(&[64], 16, 16, 16, 1, &[64], 2, &[64], 32, 8, &[128], 2);
+            run_attention_bench_json(
+            &[64],
+            16,
+            16,
+            16,
+            1,
+            &[64],
+            2,
+            &[64],
+            32,
+            8,
+            &[128],
+            2,
+            &[2],
+            64,
+            2,
+            &[2],
+        );
         let decode = doc.get("decode").expect("decode section present");
         let rows = match decode {
             Value::Array(a) => a,
@@ -1058,6 +1314,69 @@ mod tests {
             .expect("exact_tok_s");
         assert!(tok > 0.0);
         assert!(rows[0].get("hyper_tok_s").is_some());
+    }
+
+    #[test]
+    fn sched_bench_rows_sane() {
+        let rows = run_sched_bench(&[1, 4], 16, 64, 4);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_eq!((r.n, r.steps), (64, 4));
+            assert!(r.serial_tok_s > 0.0 && r.serial_tok_s.is_finite());
+            assert!(r.batched_tok_s > 0.0 && r.batched_tok_s.is_finite());
+        }
+        assert_eq!(rows[0].streams, 1);
+        assert_eq!(rows[1].streams, 4);
+    }
+
+    #[test]
+    fn spec_bench_rows_sane() {
+        let rows = run_spec_bench(&[2], 8);
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.draft_k, 2);
+        assert!(r.proposed > 0, "draft lane never proposed");
+        assert!(r.accepted <= r.proposed);
+        assert!((0.0..=1.0).contains(&r.accept_rate));
+        assert!(r.spec_tok_s > 0.0 && r.serial_tok_s > 0.0);
+    }
+
+    #[test]
+    fn bench_json_has_decode_batched_section() {
+        let doc = run_attention_bench_json(
+            &[64],
+            16,
+            16,
+            16,
+            1,
+            &[64],
+            2,
+            &[64],
+            32,
+            8,
+            &[128],
+            2,
+            &[2],
+            64,
+            2,
+            &[2],
+        );
+        let sched = doc.get("decode_batched").expect("decode_batched section");
+        let streams = match sched.get("streams").expect("streams rows") {
+            Value::Array(a) => a,
+            _ => panic!("streams must be an array"),
+        };
+        assert_eq!(streams.len(), 1);
+        assert!(streams[0].get("batched_tok_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert!(streams[0].get("serial_tok_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        let spec = match sched.get("speculative").expect("speculative rows") {
+            Value::Array(a) => a,
+            _ => panic!("speculative must be an array"),
+        };
+        assert_eq!(spec.len(), 1);
+        let rate = spec[0].get("accept_rate").and_then(|v| v.as_f64()).unwrap();
+        assert!((0.0..=1.0).contains(&rate));
+        assert!(spec[0].get("spec_tok_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
     }
 
     #[test]

@@ -7,10 +7,14 @@
 //! are directly proptestable without an async runtime.  The async shim
 //! lives in `server.rs`.
 //!
-//! Streaming decode steps ride the same machine: every live session's
-//! decode work shares one batch key (`Route::decode_key()` in
-//! [`super::router`]), so concurrent token streams coalesce into decode
-//! batches here instead of re-entering the queue as full jobs.
+//! Streaming decode steps do **not** ride this machine: the decode lane
+//! (everything keyed `Route::decode_key()` in [`super::router`]) is
+//! forwarded by the server's batcher thread straight to the engine, one
+//! item at a time and in submission order, because cross-session
+//! coalescing for decode is the continuous-batching scheduler's job
+//! ([`super::scheduler`]) and a `max_wait` delay per token would only
+//! add latency.  This queue batches the remaining traffic: one-shot
+//! attention jobs grouped by route.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};

@@ -165,15 +165,15 @@ impl Default for CacheConfig {
 /// A live session: the compiled op config it was opened with plus its
 /// KV cache.  `None` in the table means "checked out by a worker".
 pub(crate) struct SessionEntry {
-    cfg: AttnConfig,
-    heads: usize,
-    d: usize,
-    cache: AttnCache,
+    pub(crate) cfg: AttnConfig,
+    pub(crate) heads: usize,
+    pub(crate) d: usize,
+    pub(crate) cache: AttnCache,
     /// last open/decode activity — the LRU-eviction and TTL-sweep key
-    last_used: Instant,
+    pub(crate) last_used: Instant,
     /// already degraded to the tighter window (each session degrades at
     /// most once; after that, sustained exhaustion sheds)
-    degraded: bool,
+    pub(crate) degraded: bool,
 }
 
 pub(crate) type SessionMap = Arc<Mutex<HashMap<SessionId, Option<SessionEntry>>>>;
@@ -228,7 +228,7 @@ const SESSION_WAIT: std::time::Duration = std::time::Duration::from_secs(10);
 /// Take a session's entry out of the table, waiting (bounded) if
 /// another worker has it checked out.  Errors if the session does not
 /// exist or stays checked out past [`SESSION_WAIT`].
-fn checkout(sessions: &SessionMap, id: SessionId) -> Result<SessionEntry, String> {
+pub(crate) fn checkout(sessions: &SessionMap, id: SessionId) -> Result<SessionEntry, String> {
     failpoint::hit("session_checkout")?;
     let deadline = Instant::now() + SESSION_WAIT;
     loop {
@@ -252,7 +252,7 @@ fn checkout(sessions: &SessionMap, id: SessionId) -> Result<SessionEntry, String
 
 /// Return a checked-out entry.  If the session was closed (or the table
 /// cleared on shutdown) while it was out, the entry is dropped.
-fn checkin(sessions: &SessionMap, id: SessionId, entry: SessionEntry) {
+pub(crate) fn checkin(sessions: &SessionMap, id: SessionId, entry: SessionEntry) {
     let mut map = lock_recover(sessions);
     if let Some(slot) = map.get_mut(&id) {
         *slot = Some(entry);
@@ -420,6 +420,12 @@ pub(crate) fn cache_gauges(
         degraded_sessions: degraded_live,
         failpoints: failpoint::counters().into_iter().filter(|(_, n)| *n > 0).collect(),
         poison_recovered: failpoint::poison_recovered(),
+        batch_mean_occupancy: metrics.batch_occupancy.mean_us(),
+        sched_serial_fallbacks: metrics.sched_serial_fallbacks.load(Relaxed),
+        draft_lanes: metrics.draft_lanes.load(Relaxed) as usize,
+        draft_proposed: metrics.draft_proposed.load(Relaxed),
+        draft_accepted: metrics.draft_accepted.load(Relaxed),
+        draft_rollbacks: metrics.draft_rollbacks.load(Relaxed),
     }
 }
 
@@ -661,21 +667,20 @@ const DECODE_BACKOFFS: [Duration; 3] = [
     Duration::from_millis(2),
 ];
 
-/// Run one decode step against its session's checked-out cache.  A
-/// decode append can also exhaust the pool (one more page as the window
-/// slides); exhaustion walks the full degradation ladder: bounded
-/// exponential **backoff** (`retries`), then **LRU-evicting** *other*
-/// idle sessions, then — with [`CacheConfig::degrade_window`] set —
-/// **degrading** this session once to a tighter sliding window
-/// (`degraded_sessions`), and only then **shedding** with an admission
-/// reject.
-fn run_decode(
+/// Check a decode step's session out of the table and validate
+/// everything that must hold before its row may enter a decode batch:
+/// the `decode_job` failpoint, shape against the session, the pipelined
+/// position guard, a buildable op config, and a well-formed q/k/v view.
+/// Any failure checks the entry back in (if it got that far) and
+/// returns the same typed error the serial path always produced.
+/// Shared by [`run_decode`] and the continuous-batching scheduler's
+/// fused-batch admission, so the two paths cannot drift.
+pub(crate) fn admit_decode(
     job: &DecodeJob,
-    deadline: Option<Instant>,
     ctx: &EngineCtx,
-) -> Result<crate::attention::op::DecodeOutput, String> {
+) -> Result<(SessionEntry, AttentionOp), String> {
     failpoint::hit("decode_job")?;
-    let mut entry = checkout(&ctx.sessions, job.session)?;
+    let entry = checkout(&ctx.sessions, job.session)?;
     if job.heads != entry.heads || job.d != entry.d {
         let msg = format!(
             "decode shape (h={}, d={}) != session shape (h={}, d={})",
@@ -709,14 +714,30 @@ fn run_decode(
             return Err(msg);
         }
     };
-    let view = match QkvView::new(job.heads, 1, job.d, &job.q, &job.k, &job.v) {
-        Ok(v) => v,
-        Err(e) => {
-            let msg = format!("malformed decode job for session {}: {e}", job.session);
-            checkin(&ctx.sessions, job.session, entry);
-            return Err(msg);
-        }
-    };
+    if let Err(e) = QkvView::new(job.heads, 1, job.d, &job.q, &job.k, &job.v) {
+        let msg = format!("malformed decode job for session {}: {e}", job.session);
+        checkin(&ctx.sessions, job.session, entry);
+        return Err(msg);
+    }
+    Ok((entry, attn))
+}
+
+/// Run one decode step against its session's checked-out cache.  A
+/// decode append can also exhaust the pool (one more page as the window
+/// slides); exhaustion walks the full degradation ladder: bounded
+/// exponential **backoff** (`retries`), then **LRU-evicting** *other*
+/// idle sessions, then — with [`CacheConfig::degrade_window`] set —
+/// **degrading** this session once to a tighter sliding window
+/// (`degraded_sessions`), and only then **shedding** with an admission
+/// reject.
+fn run_decode(
+    job: &DecodeJob,
+    deadline: Option<Instant>,
+    ctx: &EngineCtx,
+) -> Result<crate::attention::op::DecodeOutput, String> {
+    let (mut entry, attn) = admit_decode(job, ctx)?;
+    let view = QkvView::new(job.heads, 1, job.d, &job.q, &job.k, &job.v)
+        .expect("shape validated by admit_decode");
     let mut backoffs = 0usize;
     let mut evictions = 0usize;
     let res = loop {
@@ -795,7 +816,7 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 /// resolves this ticket with an explicit `panic:`-prefixed error
 /// instead of killing the worker thread, and bumps `panics_caught`.
 /// Callers decide any additional quarantine from the `panic:` marker.
-fn catch_job<T>(
+pub(crate) fn catch_job<T>(
     metrics: &Metrics,
     f: impl FnOnce() -> Result<T, String>,
 ) -> Result<T, String> {
@@ -814,7 +835,7 @@ fn catch_job<T>(
 /// session" instead of wedging on a checkout that can never succeed.
 /// Any entry still in the slot (panic before checkout) is dropped
 /// here, returning its pages to the pool.
-fn quarantine_session(ctx: &EngineCtx, id: SessionId) {
+pub(crate) fn quarantine_session(ctx: &EngineCtx, id: SessionId) {
     let removed = lock_recover(&ctx.sessions).remove(&id);
     drop(removed);
 }
@@ -832,6 +853,7 @@ pub fn spawn(
     artifacts_dir: Option<PathBuf>,
     router_config: RouterConfig,
     cache: CacheConfig,
+    sched: super::scheduler::SchedConfig,
     metrics: Arc<Metrics>,
     queue_depth: usize,
 ) -> Result<
@@ -880,16 +902,30 @@ pub fn spawn(
             .map_err(|e| format!("spawn substrate worker {w}: {e}"))?;
     }
 
+    // decode lane: a single scheduler thread owning the continuous-
+    // batching loop.  All `Route::decode_key()` traffic (decode steps,
+    // closes, prefix releases, pings) is forwarded here in submission
+    // order, so the scheduler's FIFO queue IS the decode lane's
+    // ordering guarantee (see `scheduler.rs`).
+    let (sched_tx, sched_rx) = std::sync::mpsc::sync_channel::<EngineMsg>(queue_depth);
+    let ctxs = ctx.clone();
+    let sched_handle = std::thread::Builder::new()
+        .name("hyperattn-scheduler".into())
+        .spawn(move || super::scheduler::scheduler_loop(sched_rx, ctxs, sched))
+        .map_err(|e| format!("spawn scheduler thread: {e}"))?;
+
     let handle = std::thread::Builder::new()
         .name("hyperattn-engine".into())
-        .spawn(move || engine_loop(rx, artifacts_dir, ctx, sub_tx, n_workers))
+        .spawn(move || {
+            engine_loop(rx, artifacts_dir, ctx, sub_tx, n_workers, sched_tx, sched_handle)
+        })
         .map_err(|e| format!("spawn engine thread: {e}"))?;
     Ok((tx, handle, pool, sessions, prefixes))
 }
 
 /// Respond to a flushed item with an explicit shutdown error (instead
 /// of silently dropping its oneshot sender).
-fn respond_flush(item: WorkItem, metrics: &Metrics) {
+pub(crate) fn respond_flush(item: WorkItem, metrics: &Metrics) {
     const MSG: &str = "coordinator shutting down; queued work flushed";
     match item.respond {
         Reply::Full(tx) => {
@@ -912,7 +948,7 @@ fn respond_flush(item: WorkItem, metrics: &Metrics) {
 /// Items with no reply channel (close, prefix release) always run —
 /// skipping them would leak sessions or pinned pages — and pings
 /// always answer (an expired liveness probe is still a liveness probe).
-fn expire_if_late(item: WorkItem, metrics: &Metrics) -> Option<WorkItem> {
+pub(crate) fn expire_if_late(item: WorkItem, metrics: &Metrics) -> Option<WorkItem> {
     let late = match (item.deadline, &item.respond) {
         (Some(dl), Reply::Full(_) | Reply::Decode(_)) => Instant::now() >= dl,
         _ => false,
@@ -936,7 +972,7 @@ fn expire_if_late(item: WorkItem, metrics: &Metrics) -> Option<WorkItem> {
 }
 
 /// Execute one work item (on whichever lane) and respond.
-fn execute_one(item: WorkItem, runtime: Option<&Runtime>, ctx: &EngineCtx) {
+pub(crate) fn execute_one(item: WorkItem, runtime: Option<&Runtime>, ctx: &EngineCtx) {
     let rc = &ctx.rc;
     let metrics = &*ctx.metrics;
     let sessions = &ctx.sessions;
@@ -1129,6 +1165,8 @@ fn engine_loop(
     ctx: EngineCtx,
     sub_tx: SyncSender<EngineMsg>,
     n_workers: usize,
+    sched_tx: SyncSender<EngineMsg>,
+    sched_handle: std::thread::JoinHandle<()>,
 ) {
     // Runtime is created lazily on this thread (PjRtClient is !Send).
     let runtime: Option<Runtime> = artifacts_dir.and_then(|dir| match Runtime::open(&dir) {
@@ -1189,14 +1227,28 @@ fn engine_loop(
         };
         ctx.metrics.record_batch(batch.len());
         // route the whole batch to its lane (batch keys are per-route, so
-        // a batch is uniformly artifact or substrate)
+        // a batch is uniformly artifact, decode-lane, or substrate)
         let is_artifact = batch
             .first()
             .map(|i| i.route.artifact.is_some() && runtime.is_some())
             .unwrap_or(false);
+        let is_decode_lane = batch.first().map(|i| i.route.decode).unwrap_or(false);
         if is_artifact {
             for item in batch {
                 execute_one(item, runtime.as_ref(), &ctx);
+            }
+        } else if is_decode_lane {
+            // the continuous-batching scheduler owns the decode lane:
+            // forwarding in receive order preserves the FIFO barrier
+            // (pings resolve only after the steps submitted before
+            // them).  If the scheduler is gone, degrade to inline
+            // session-serial execution rather than dropping tickets.
+            if let Err(e) = sched_tx.send(EngineMsg::Batch(batch)) {
+                if let EngineMsg::Batch(batch) = e.0 {
+                    for item in batch {
+                        execute_one(item, None, &ctx);
+                    }
+                }
             }
         } else {
             // forward to the substrate pool; if it is gone, run inline
@@ -1209,6 +1261,13 @@ fn engine_loop(
             }
         }
     }
+    // stop the scheduler first and JOIN it before tearing the session
+    // table down: the scheduler's draft lanes hold forked caches whose
+    // COW pages must return to the pool before shutdown completes (the
+    // pool-conservation invariant the chaos harness asserts), and its
+    // queued tickets must be flushed before their senders vanish.
+    let _ = sched_tx.send(EngineMsg::Shutdown);
+    let _ = sched_handle.join();
     for _ in 0..n_workers {
         let _ = sub_tx.send(EngineMsg::Shutdown);
     }

@@ -17,7 +17,7 @@
 //! spec     := site '=' action (',' site '=' action)*
 //! site     := pool_alloc | kv_append | kv_fork | open_job | full_job
 //!           | decode_job | session_checkout | prefix_register
-//!           | prefix_release | engine_recv
+//!           | prefix_release | engine_recv | sched_tick
 //! action   := 'err' [':' prob]          -- return an injected error
 //!           | 'panic' [':' prob]        -- panic! at the site
 //!           | 'delay' ':' millis 'ms' [':' prob]
@@ -40,7 +40,11 @@
 //! * the **engine receive loop** calls [`delay_only`]: `err`/`panic`
 //!   there would kill the engine thread itself rather than one job, so
 //!   only `delay` actions apply (others are ignored with a trigger
-//!   count so misconfiguration is still observable).
+//!   count so misconfiguration is still observable);
+//! * **`sched_tick`** fires at the top of every continuous-batching
+//!   scheduler tick: an `err` makes that tick fall back to the
+//!   session-serial decode path (degrade, not die), a `panic` is
+//!   absorbed by the per-item isolation inside the serial path.
 //!
 //! All injected panic payloads contain [`INJECTED`]; the chaos harness
 //! uses that to distinguish deliberate faults from real bugs.
@@ -55,7 +59,7 @@ use crate::rng::Rng;
 pub const INJECTED: &str = "injected failpoint";
 
 /// The fixed set of compiled-in failpoint sites, in counter order.
-pub const SITES: [&str; 10] = [
+pub const SITES: [&str; 11] = [
     "pool_alloc",
     "kv_append",
     "kv_fork",
@@ -66,6 +70,7 @@ pub const SITES: [&str; 10] = [
     "prefix_register",
     "prefix_release",
     "engine_recv",
+    "sched_tick",
 ];
 
 /// What a configured site does when its probability draw fires.
@@ -99,6 +104,7 @@ static STATE: Mutex<Option<State>> = Mutex::new(None);
 /// Per-site fire counters (index-aligned with [`SITES`]); survive
 /// [`clear`] within a process so a serve run can report totals.
 static TRIGGERS: [AtomicU64; SITES.len()] = [
+    AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),

@@ -112,6 +112,23 @@ pub struct Metrics {
     /// sessions degraded to a tighter sliding window under sustained
     /// pool pressure (each session counted once)
     pub degraded_sessions: AtomicU64,
+    /// continuous-batching scheduler: decode rows coalesced per tick
+    /// (one record per scheduler tick that ran at least one row)
+    pub batch_occupancy: Histogram,
+    /// scheduler ticks that fell back to the session-serial decode path
+    /// (a `sched_tick` fault fired, or a lane failed out of the batch)
+    pub sched_serial_fallbacks: AtomicU64,
+    /// speculative draft lane: draft decode steps proposed, draft
+    /// windows fully accepted (argmax agreed with the target for all k
+    /// steps), and draft windows rolled back by dropping the fork
+    pub draft_proposed: AtomicU64,
+    pub draft_accepted: AtomicU64,
+    pub draft_rollbacks: AtomicU64,
+    /// gauge (not a counter): draft lanes currently live — forked
+    /// caches holding COW-shared pages.  Stored by the scheduler at the
+    /// end of every tick so `cache_gauges()` can report it without
+    /// reaching into the scheduler thread's private state.
+    pub draft_lanes: AtomicU64,
 }
 
 impl Metrics {
@@ -133,6 +150,17 @@ impl Metrics {
         }
     }
 
+    /// Fraction of proposed draft windows the target model fully
+    /// accepted (0 when speculation never ran).
+    pub fn draft_accept_rate(&self) -> f64 {
+        let p = self.draft_proposed.load(Ordering::Relaxed);
+        if p == 0 {
+            0.0
+        } else {
+            self.draft_accepted.load(Ordering::Relaxed) as f64 / p as f64
+        }
+    }
+
     /// Human-readable one-page snapshot.
     pub fn report(&self) -> String {
         format!(
@@ -142,6 +170,9 @@ impl Metrics {
              faults: panics_caught={} deadline_expired={} retries={} \
              degraded_sessions={}\n\
              batches: {} (mean size {:.2})\n\
+             sched: occupancy mean {:.2} p50 {} max {} ticks={} \
+             serial_fallbacks={}\n\
+             draft: proposed={} accepted={} rollbacks={} accept_rate={:.2}\n\
              backend: artifact={} substrate={}\n\
              queue  latency: mean {:.0}us p50 {}us p99 {}us max {}us\n\
              exec   latency: mean {:.0}us p50 {}us p99 {}us max {}us\n\
@@ -162,6 +193,15 @@ impl Metrics {
             self.degraded_sessions.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
+            self.batch_occupancy.mean_us(),
+            self.batch_occupancy.quantile_us(0.5),
+            self.batch_occupancy.max_us(),
+            self.batch_occupancy.count(),
+            self.sched_serial_fallbacks.load(Ordering::Relaxed),
+            self.draft_proposed.load(Ordering::Relaxed),
+            self.draft_accepted.load(Ordering::Relaxed),
+            self.draft_rollbacks.load(Ordering::Relaxed),
+            self.draft_accept_rate(),
             self.artifact_jobs.load(Ordering::Relaxed),
             self.substrate_jobs.load(Ordering::Relaxed),
             self.queue_latency.mean_us(),
@@ -234,6 +274,17 @@ pub struct CacheGauges {
     /// poisoned mutexes healed by
     /// [`crate::coordinator::failpoint::lock_recover`]
     pub poison_recovered: u64,
+    /// continuous-batching scheduler: mean decode rows coalesced per
+    /// tick, and ticks that fell back to the session-serial path
+    pub batch_mean_occupancy: f64,
+    pub sched_serial_fallbacks: u64,
+    /// speculative draft lanes currently live (forked caches holding
+    /// COW-shared pages), plus the cumulative proposal/accept/rollback
+    /// counters mirrored from [`Metrics`]
+    pub draft_lanes: usize,
+    pub draft_proposed: u64,
+    pub draft_accepted: u64,
+    pub draft_rollbacks: u64,
 }
 
 impl CacheGauges {
@@ -271,6 +322,8 @@ impl CacheGauges {
              util={:.0}% page_elems={}\n\
              kv pool:  allocs={} reuses={} rejects={} cow_copies={}\n\
              kv admission: lru_evicted={} ttl_reclaimed={} rejects={} degraded={}\n\
+             kv sched: occupancy_mean={:.2} serial_fallbacks={}\n\
+             kv draft: lanes={} proposed={} accepted={} rollbacks={}\n\
              kv faults: poison_recovered={} failpoints=[{}]\n\
              kv sessions: [{}]\n\
              kv prefixes: [{}]",
@@ -288,6 +341,12 @@ impl CacheGauges {
             self.sessions_reclaimed,
             self.admission_rejects,
             self.degraded_sessions,
+            self.batch_mean_occupancy,
+            self.sched_serial_fallbacks,
+            self.draft_lanes,
+            self.draft_proposed,
+            self.draft_accepted,
+            self.draft_rollbacks,
             self.poison_recovered,
             faults.join(" "),
             sessions.join(" "),
@@ -321,6 +380,12 @@ mod tests {
             degraded_sessions: 1,
             failpoints: vec![("pool_alloc", 9)],
             poison_recovered: 2,
+            batch_mean_occupancy: 3.5,
+            sched_serial_fallbacks: 2,
+            draft_lanes: 3,
+            draft_proposed: 12,
+            draft_accepted: 9,
+            draft_rollbacks: 3,
         };
         assert!((g.utilization() - 0.75).abs() < 1e-9);
         let r = g.report();
@@ -334,6 +399,12 @@ mod tests {
         assert!(r.contains("degraded=1"));
         assert!(r.contains("poison_recovered=2"));
         assert!(r.contains("pool_alloc=9"));
+        assert!(r.contains("occupancy_mean=3.50"));
+        assert!(r.contains("serial_fallbacks=2"));
+        assert!(r.contains("lanes=3"));
+        assert!(r.contains("proposed=12"));
+        assert!(r.contains("accepted=9"));
+        assert!(r.contains("rollbacks=3"));
         let unbounded = CacheGauges::default();
         assert_eq!(unbounded.utilization(), 0.0);
         assert!(unbounded.report().contains("budget=unbounded"));
@@ -391,5 +462,26 @@ mod tests {
         m.record_batch(4);
         m.record_batch(8);
         assert!((m.mean_batch_size() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metrics_report_includes_sched_and_draft_counters() {
+        let m = Metrics::new();
+        m.batch_occupancy.record(4);
+        m.batch_occupancy.record(8);
+        m.sched_serial_fallbacks.fetch_add(1, Ordering::Relaxed);
+        m.draft_proposed.fetch_add(10, Ordering::Relaxed);
+        m.draft_accepted.fetch_add(7, Ordering::Relaxed);
+        m.draft_rollbacks.fetch_add(3, Ordering::Relaxed);
+        assert!((m.draft_accept_rate() - 0.7).abs() < 1e-9);
+        let r = m.report();
+        assert!(r.contains("occupancy mean 6.00"), "{r}");
+        assert!(r.contains("serial_fallbacks=1"), "{r}");
+        assert!(r.contains("proposed=10"), "{r}");
+        assert!(r.contains("accepted=7"), "{r}");
+        assert!(r.contains("rollbacks=3"), "{r}");
+        assert!(r.contains("accept_rate=0.70"), "{r}");
+        // no speculation at all reads as rate 0, not NaN
+        assert_eq!(Metrics::new().draft_accept_rate(), 0.0);
     }
 }

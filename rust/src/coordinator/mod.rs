@@ -5,10 +5,10 @@
 //! one-shot jobs ────> Router ──(bucket n, exact|hyper)──┐
 //!                                                       ▼
 //! sessions: open_session[_with_prefix] ─┐            Batcher
-//!           decode ─────────────────────┼──(shared     │ (max_batch,
-//!           close / register_prefix ────┘  decode key) │  max_wait)
-//!              Metrics <── Engine workers <── batch queue
-//!                            │
+//!           decode / ping ──────────────┼──(shared     │ (max_batch,
+//!           close / register_prefix ────┘  decode key) │  max_wait;
+//!              Metrics <── Engine workers <── batch queue  decode lane
+//!                            │                          bypasses the wait)
 //!            ┌───────────────┼──────────────────────────┐
 //!            │ PJRT runtime (AOT artifacts)             │ fixed shapes
 //!            │ Rust substrate (AttentionOp)             │ any shape
@@ -23,6 +23,16 @@
 //!            │      (CacheConfig: budget, sliding-      │
 //!            │       window policy, idle TTL; shared    │
 //!            │       frames refcounted, charged once)   │
+//!            └───────────────┬──────────────────────────┘
+//!                            │ decode lane (FIFO)
+//!            ┌───────────────▼──────────────────────────┐
+//!            │ Scheduler (continuous batching)          │
+//!            │   tick: ≤1 row/session, page-weighted    │
+//!            │   admission ──▶ ONE fused                │
+//!            │   decode_step_batch over all lanes       │
+//!            │   + draft lanes: AttnCache::fork ──COW──▶│
+//!            │     tight-window shadow decode; accept/  │
+//!            │     rollback = keep/drop the fork        │
 //!            └──────────────────────────────────────────┘
 //! ```
 //!
@@ -53,6 +63,18 @@
 //!   latency), throughput counters, and the KV-cache gauges
 //!   ([`metrics::CacheGauges`]: resident/free/peak pages, utilization,
 //!   per-session residency, eviction/reclaim/reject counters).
+//! * [`scheduler`] — the token-level **continuous-batching** loop: one
+//!   thread owns the whole decode lane in submission order; each tick
+//!   coalesces at most one ready row per session into a single fused
+//!   [`crate::attention::op::AttentionOp::decode_step_batch`] call
+//!   (iteration-level scheduling — sessions join/leave between ticks),
+//!   with page-weighted admission under [`scheduler::SchedConfig`]'s
+//!   `max_batch`.  With `draft_k > 0` each session also gets a
+//!   **speculative draft lane**: a COW fork of its cache degraded to
+//!   `draft_window` rows shadows the target, argmax agreement is the
+//!   accept signal, and rejected windows roll back for free by dropping
+//!   the fork.  Clients always get target outputs — batched and
+//!   speculative decode are bitwise-identical to session-serial.
 //! * [`server`] — wiring: submit → route → batch → execute → respond,
 //!   plus the session API ([`Server::open_session`], [`Server::decode`],
 //!   [`Server::close_session`]) and the shared-prefix API
@@ -80,7 +102,10 @@
 //! | deadline missed | per-request `deadline` checked before any pool work | ticket resolves `DEADLINE_EXPIRED` without touching the session (`deadline_expired`) |
 //! | poisoned mutex | a panic unwound through a lock holder | [`failpoint::lock_recover`] heals the lock and counts the recovery instead of cascading panics |
 //! | engine overload | bounded queues everywhere | senders block (backpressure), never unbounded growth |
-//! | shutdown under load | `Shutdown` drains the queue | every queued ticket resolves with an explicit error; all session and prefix pages return to the pool |
+//! | scheduler tick fault (`sched_tick`) | failpoint at the top of every continuous-batching tick | the tick **degrades to the session-serial path** (`sched_serial_fallbacks`); an injected panic there is absorbed the same way — the scheduler thread never dies |
+//! | lane fails out of the fused batch | per-lane `Result` from `decode_step_batch` | the step re-runs on the serial path with its full backoff → evict → degrade → shed ladder; other lanes in the batch are unaffected |
+//! | draft-lane fault (`kv_fork` unwind, pool exhaustion, panicked shadow step) | `catch_unwind` around every draft operation | only the **draft fork is dropped** (pages back to the pool); the parent session never notices; speculation resumes at the next window |
+//! | shutdown under load | `Shutdown` drains the queue | every queued ticket resolves with an explicit error; all session, prefix, and draft-fork pages return to the pool (the engine joins the scheduler before clearing tables) |
 //!
 //! [`Server::open_session`]: server::Server::open_session
 //! [`Server::decode`]: server::Server::decode
@@ -93,10 +118,12 @@ pub mod failpoint;
 pub mod metrics;
 pub mod request;
 pub mod router;
+pub mod scheduler;
 pub mod server;
 
 pub use engine::CacheConfig;
 pub use metrics::CacheGauges;
+pub use scheduler::SchedConfig;
 pub use request::{
     AttnJob, AttnResponse, Backend, DecodeJob, DecodeResponse, ModePreference, SessionId,
 };

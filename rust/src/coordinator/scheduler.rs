@@ -1,0 +1,515 @@
+//! Token-level continuous-batching scheduler for the streaming decode
+//! lane, with an optional fork-based speculative draft lane.
+//!
+//! One dedicated thread (`hyperattn-scheduler`) owns every work item
+//! routed under `Route::decode_key()` — decode steps, session closes,
+//! prefix releases, and pings.  Items arrive in submission order and
+//! enter a FIFO queue; each **tick** then:
+//!
+//! 1. pops and executes any *leading* non-decode items in place (a ping
+//!    or close ahead of the decode steps runs before them — and a ping
+//!    *behind* queued decode steps resolves only after their tokens are
+//!    emitted, because the batch scan below never reaches past a
+//!    non-decode item: the FIFO barrier [`super::server::Server::ping`]
+//!    documents);
+//! 2. scans the queue front-to-barrier and selects at most **one**
+//!    decode step per session (iteration-level scheduling: sessions
+//!    join the running batch the tick after their step arrives and
+//!    leave the tick they stop submitting — there is no batch-boundary
+//!    barrier and no fixed membership);
+//! 3. when more sessions are ready than [`SchedConfig::max_batch`],
+//!    admission is weighted by **resident pages**, not arrival order:
+//!    the lightest sessions run first and page-heavy sessions wait a
+//!    tick, which keeps one long-context tenant from monopolizing every
+//!    fused step (the unselected steps stay queued, in order);
+//! 4. runs every selected row in **one** fused
+//!    [`AttentionOp::decode_step_batch`] call — a single `par` fan-out
+//!    over all (lane, head) rows instead of per-session dispatch.
+//!    Bitwise parity with the serial path is by construction:
+//!    `decode_step` *is* `decode_step_batch` over one lane.
+//!
+//! Failure routing preserves every PR 6 guarantee.  A `sched_tick`
+//! fault (or a panic at that site) degrades the whole tick to the
+//! session-serial path (`sched_serial_fallbacks`); a lane that fails
+//! *out* of the fused call (e.g. pool exhaustion on its append) is
+//! re-run through the serial path, whose backoff → evict → degrade →
+//! shed ladder still applies; a panic *inside* the fused call cannot be
+//! attributed to one lane, so every admitted session in the batch is
+//! quarantined (the conservative choice — chaos cocktails that inject
+//! panics at the inner kv seams exercise exactly this path, and pool
+//! conservation still holds because the dropped entries free their
+//! frames).
+//!
+//! **Speculative draft lane** ([`SchedConfig::draft_k`] > 0): decode
+//! jobs carry raw q/k/v rows (the embedding lives client-side), so the
+//! coordinator cannot invent future tokens; instead each session's
+//! draft lane **shadows** the target.  The lane is a
+//! [`AttnCache::fork`] of the session cache degraded to
+//! [`SchedConfig::draft_window`] rows — O(pages) refcount bumps, COW on
+//! the tail page — and decodes the same row with the cheap tight-window
+//! estimator.  Argmax agreement with the target row is the acceptance
+//! signal: after `draft_k` shadow steps a fully-agreed window counts
+//! `draft_accepted += draft_k` and the lane re-forks from the target
+//! (re-sharing the accepted prefix); any disagreement counts one
+//! `draft_rollbacks` and the rejected tail rolls back for free by
+//! dropping the fork.  Clients always receive the **target** outputs,
+//! so speculative mode is bitwise-identical to non-speculative on every
+//! backend; the draft lane measures (and pays for) what genuine
+//! draft-token speculation would accept — the model-layer
+//! `speculative_generate` is the true propose-then-verify pipeline over
+//! the same fork/rollback primitive.  A fault in the draft lane (fork
+//! unwind via `kv_fork`, pool exhaustion, a panicked draft step)
+//! quarantines **only the draft** — the fork is dropped, the parent
+//! session never notices.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::time::Instant;
+
+use super::engine::{self, EngineCtx, EngineMsg, Reply, SessionEntry, Work, WorkItem};
+use super::failpoint::{self, lock_recover};
+use super::request::{DecodeResponse, SessionId};
+use crate::attention::op::{AttentionOp, AttnCache, DecodeLane, DecodeOutput};
+use crate::linalg::QkvView;
+
+/// Continuous-batching / speculative-decode knobs
+/// ([`super::ServerConfig::sched`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SchedConfig {
+    /// Most decode rows fused into one scheduler tick.  Overflow is
+    /// admitted lightest-resident-pages first; the rest wait a tick.
+    pub max_batch: usize,
+    /// Speculative window length: shadow-draft steps between
+    /// accept/rollback decisions.  0 (the default) disables the draft
+    /// lane entirely.
+    pub draft_k: usize,
+    /// Sliding-window rows the draft fork is degraded to — the knob
+    /// that makes the draft lane cheap relative to the target.
+    pub draft_window: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig { max_batch: 8, draft_k: 0, draft_window: 64 }
+    }
+}
+
+/// One session's live speculative lane: a COW fork of the session cache
+/// degraded to the draft window, the op built once at fork time, and
+/// the agreement state of the current window.
+struct DraftLane {
+    cache: AttnCache,
+    attn: AttentionOp,
+    /// shadow steps taken since the last (re)fork
+    steps: usize,
+    /// argmax agreed with the target on every step so far
+    agreed: bool,
+}
+
+/// Index of the max element (first on ties) — the acceptance signal
+/// compares draft and target rows by this.
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// The scheduler thread body: drain the engine's decode-lane channel
+/// into a FIFO queue and run ticks until shutdown.  On shutdown every
+/// queued ticket is flushed with an explicit error and every draft lane
+/// is dropped (its forked pages return to the pool) before the thread
+/// exits — the engine joins this thread before clearing the session
+/// table, so conservation holds by the time `Server::shutdown` returns.
+pub(crate) fn scheduler_loop(rx: Receiver<EngineMsg>, ctx: EngineCtx, cfg: SchedConfig) {
+    let mut queue: VecDeque<WorkItem> = VecDeque::new();
+    let mut drafts: HashMap<SessionId, DraftLane> = HashMap::new();
+    'run: loop {
+        // block only when idle; otherwise drain whatever has arrived
+        // and run the next tick immediately
+        if queue.is_empty() {
+            match rx.recv() {
+                Ok(EngineMsg::Batch(b)) => queue.extend(b),
+                Ok(EngineMsg::Shutdown) | Err(_) => break 'run,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(EngineMsg::Batch(b)) => queue.extend(b),
+                Ok(EngineMsg::Shutdown) => break 'run,
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => break 'run,
+            }
+        }
+        tick(&mut queue, &mut drafts, &cfg, &ctx);
+        ctx.metrics.draft_lanes.store(drafts.len() as u64, Relaxed);
+    }
+    // shutdown: flush the backlog (this queue plus anything still in
+    // the channel) with the same explicit error the engine uses
+    while let Ok(msg) = rx.try_recv() {
+        if let EngineMsg::Batch(b) = msg {
+            queue.extend(b);
+        }
+    }
+    for item in queue {
+        engine::respond_flush(item, &ctx.metrics);
+    }
+    drafts.clear(); // forked draft pages back to the pool
+    ctx.metrics.draft_lanes.store(0, Relaxed);
+}
+
+/// One scheduler tick: leading non-decode items, then the fused batch.
+fn tick(
+    queue: &mut VecDeque<WorkItem>,
+    drafts: &mut HashMap<SessionId, DraftLane>,
+    cfg: &SchedConfig,
+    ctx: &EngineCtx,
+) {
+    // 1. leading non-decode items run first, in FIFO order (ping
+    //    barrier, closes, prefix releases)
+    while matches!(queue.front(), Some(item) if !matches!(item.work, Work::Decode(_))) {
+        let item = queue.pop_front().expect("front checked above");
+        if let Work::Close { session } = &item.work {
+            drafts.remove(session); // the draft dies with its session
+        }
+        engine::execute_one(item, None, ctx);
+    }
+
+    // 2. scan to the barrier: earliest decode step per session
+    let mut seen: HashSet<SessionId> = HashSet::new();
+    let mut cand: Vec<usize> = Vec::new();
+    for (i, item) in queue.iter().enumerate() {
+        match &item.work {
+            Work::Decode(job) => {
+                if seen.insert(job.session) {
+                    cand.push(i);
+                }
+                // a second step for a selected session stays queued (it
+                // runs next tick, still in arrival order per session)
+            }
+            // anything else is a barrier: items behind a ping/close must
+            // not overtake it
+            _ => break,
+        }
+    }
+    if cand.is_empty() {
+        return;
+    }
+
+    // 3. page-weighted admission: when oversubscribed, the sessions
+    //    holding the fewest resident pages run this tick
+    let max_batch = cfg.max_batch.max(1);
+    if cand.len() > max_batch {
+        let pages: HashMap<SessionId, usize> = {
+            let map = lock_recover(&ctx.sessions);
+            cand.iter()
+                .map(|&i| {
+                    let Work::Decode(job) = &queue[i].work else { unreachable!() };
+                    let p = map
+                        .get(&job.session)
+                        .and_then(|slot| slot.as_ref())
+                        .map(|e| e.cache.kv().resident_pages())
+                        .unwrap_or(0);
+                    (job.session, p)
+                })
+                .collect()
+        };
+        cand.sort_by_key(|&i| {
+            let Work::Decode(job) = &queue[i].work else { unreachable!() };
+            (pages[&job.session], i)
+        });
+        cand.truncate(max_batch);
+        cand.sort_unstable(); // back to arrival order within the batch
+    }
+
+    // 4. detach the selected items (descending removal keeps the
+    //    remaining indices valid; unselected items keep their order)
+    let mut selected: Vec<WorkItem> = Vec::with_capacity(cand.len());
+    for &i in cand.iter().rev() {
+        selected.push(queue.remove(i).expect("scan index in range"));
+    }
+    selected.reverse();
+
+    // 5. sched_tick fault: degrade the tick to the session-serial path
+    //    (an injected panic here must not kill the scheduler thread —
+    //    it degrades exactly like an err)
+    let tick_ok = catch_unwind(AssertUnwindSafe(|| failpoint::hit("sched_tick")))
+        .unwrap_or_else(|_| {
+            ctx.metrics.panics_caught.fetch_add(1, Relaxed);
+            Err("sched_tick panic".into())
+        });
+    if tick_ok.is_err() {
+        ctx.metrics.sched_serial_fallbacks.fetch_add(1, Relaxed);
+        for item in selected {
+            engine::execute_one(item, None, ctx);
+        }
+        return;
+    }
+
+    run_decode_batch(selected, drafts, cfg, ctx);
+}
+
+/// A lane admitted into the fused call: the decode item's pieces plus
+/// its checked-out session entry and built op.
+struct Admitted {
+    job: super::request::DecodeJob,
+    respond: Reply,
+    submitted: Instant,
+    deadline: Option<Instant>,
+    queue_us: u64,
+    entry: SessionEntry,
+    attn: AttentionOp,
+}
+
+/// Run the selected decode steps as one fused multi-lane attention
+/// call, then the shadow draft steps for speculation.
+fn run_decode_batch(
+    selected: Vec<WorkItem>,
+    drafts: &mut HashMap<SessionId, DraftLane>,
+    cfg: &SchedConfig,
+    ctx: &EngineCtx,
+) {
+    let metrics = &*ctx.metrics;
+    let exec_start = Instant::now();
+
+    // admission: check each session out and validate, with the same
+    // guards (and failpoint) as the serial path.  Failures respond
+    // immediately with the serial path's exact error semantics.
+    let mut admitted: Vec<Admitted> = Vec::with_capacity(selected.len());
+    for item in selected {
+        let Some(item) = engine::expire_if_late(item, metrics) else { continue };
+        let WorkItem { work, submitted, deadline, respond, .. } = item;
+        let Work::Decode(job) = work else { unreachable!("selected items are decode steps") };
+        let queue_us = submitted.elapsed().as_micros() as u64;
+        match engine::catch_job(metrics, || engine::admit_decode(&job, ctx)) {
+            Ok((entry, attn)) => admitted.push(Admitted {
+                job,
+                respond,
+                submitted,
+                deadline,
+                queue_us,
+                entry,
+                attn,
+            }),
+            Err(e) => {
+                if e.starts_with("panic:") {
+                    engine::quarantine_session(ctx, job.session);
+                }
+                metrics.queue_latency.record(queue_us);
+                metrics.decode_latency.record(exec_start.elapsed().as_micros() as u64);
+                metrics.jobs_failed.fetch_add(1, Relaxed);
+                if let Reply::Decode(tx) = respond {
+                    let _ = tx.send(Err(e));
+                }
+            }
+        }
+    }
+    if admitted.is_empty() {
+        return;
+    }
+    metrics.batch_occupancy.record(admitted.len() as u64);
+
+    // the fused call: one batched multi-row attention step over every
+    // admitted lane.  Wrapped in catch_unwind because an injected panic
+    // at an inner kv seam unwinds through all lanes at once.
+    let results = {
+        let mut lanes: Vec<DecodeLane<'_, '_>> = admitted
+            .iter_mut()
+            .map(|a| {
+                let Admitted { job, entry, attn, .. } = a;
+                let x = QkvView::new(job.heads, 1, job.d, &job.q, &job.k, &job.v)
+                    .expect("shape validated by admit_decode");
+                DecodeLane { op: &*attn, cache: &mut entry.cache, x }
+            })
+            .collect();
+        catch_unwind(AssertUnwindSafe(|| AttentionOp::decode_step_batch(&mut lanes)))
+    };
+    let results = match results {
+        Ok(r) => r,
+        Err(payload) => {
+            // a panic inside the fused call cannot be pinned on one
+            // lane: quarantine every admitted session (their entries
+            // are dropped here, freeing their frames) and resolve every
+            // ticket with the explicit panic error
+            metrics.panics_caught.fetch_add(1, Relaxed);
+            drop(payload);
+            for a in admitted {
+                engine::quarantine_session(ctx, a.job.session);
+                drop(a.entry);
+                metrics.queue_latency.record(a.queue_us);
+                metrics.decode_latency.record(exec_start.elapsed().as_micros() as u64);
+                metrics.jobs_failed.fetch_add(1, Relaxed);
+                if let Reply::Decode(tx) = a.respond {
+                    let _ = tx.send(Err(format!(
+                        "panic: fused decode batch unwound; session {} quarantined",
+                        a.job.session
+                    )));
+                }
+            }
+            return;
+        }
+    };
+
+    let exec_us = exec_start.elapsed().as_micros() as u64;
+    for (a, res) in admitted.into_iter().zip(results) {
+        let Admitted { job, respond, submitted, deadline, queue_us, mut entry, .. } = a;
+        match res {
+            Ok(out) => {
+                if cfg.draft_k > 0 {
+                    shadow_draft(&job, &entry, &out, drafts, cfg, ctx);
+                }
+                entry.last_used = Instant::now();
+                engine::checkin(&ctx.sessions, job.session, entry);
+                metrics.queue_latency.record(queue_us);
+                metrics.decode_latency.record(exec_us);
+                metrics.decode_steps.fetch_add(1, Relaxed);
+                metrics.jobs_completed.fetch_add(1, Relaxed);
+                if let Reply::Decode(tx) = respond {
+                    let _ = tx.send(Ok(DecodeResponse {
+                        session: job.session,
+                        pos: out.pos,
+                        out: out.out,
+                        sampled: out.sampled,
+                        queue_us,
+                        exec_us,
+                    }));
+                }
+            }
+            Err(_) => {
+                // a failed prepare leaves the cache unmutated (the
+                // append is atomic), so the step can safely re-run on
+                // the serial path — whose pool-exhaustion ladder
+                // (backoff → evict → degrade → shed) the fused call
+                // deliberately does not replicate
+                engine::checkin(&ctx.sessions, job.session, entry);
+                metrics.sched_serial_fallbacks.fetch_add(1, Relaxed);
+                engine::execute_one(
+                    WorkItem {
+                        work: Work::Decode(job),
+                        route: super::router::Route::decode_key(),
+                        submitted,
+                        deadline,
+                        respond,
+                    },
+                    None,
+                    ctx,
+                );
+            }
+        }
+    }
+
+    // reap drafts whose sessions vanished outside Close (LRU eviction,
+    // TTL sweep, quarantine) — their forked pages go back to the pool
+    if !drafts.is_empty() {
+        let map = lock_recover(&ctx.sessions);
+        drafts.retain(|id, _| map.contains_key(id));
+    }
+}
+
+/// One shadow step of a session's speculative draft lane.  Never
+/// touches the parent entry's cache; every failure path drops only the
+/// draft fork.
+fn shadow_draft(
+    job: &super::request::DecodeJob,
+    entry: &SessionEntry,
+    target: &DecodeOutput,
+    drafts: &mut HashMap<SessionId, DraftLane>,
+    cfg: &SchedConfig,
+    ctx: &EngineCtx,
+) {
+    let metrics = &*ctx.metrics;
+    let Some(lane) = drafts.get_mut(&job.session) else {
+        // first sight of this session: open its lane.  The fork already
+        // contains the token the target just decoded, so the window
+        // starts at the next step.
+        if let Some(lane) = fork_draft(entry, cfg, ctx) {
+            drafts.insert(job.session, lane);
+        }
+        return;
+    };
+    let view = QkvView::new(job.heads, 1, job.d, &job.q, &job.k, &job.v)
+        .expect("shape validated by admit_decode");
+    let step = catch_unwind(AssertUnwindSafe(|| lane.attn.decode_step(&mut lane.cache, view)));
+    match step {
+        Ok(Ok(draft_out)) => {
+            metrics.draft_proposed.fetch_add(1, Relaxed);
+            if argmax(&draft_out.out) != argmax(&target.out) {
+                lane.agreed = false;
+            }
+            lane.steps += 1;
+            if lane.steps >= cfg.draft_k {
+                if lane.agreed {
+                    metrics.draft_accepted.fetch_add(cfg.draft_k as u64, Relaxed);
+                } else {
+                    metrics.draft_rollbacks.fetch_add(1, Relaxed);
+                }
+                // window closed: accept and rollback converge on the
+                // same state — re-fork from the target so the lane
+                // re-shares the (accepted) prefix; the old fork's
+                // private tail pages are freed on drop
+                drafts.remove(&job.session);
+                if let Some(fresh) = fork_draft(entry, cfg, ctx) {
+                    drafts.insert(job.session, fresh);
+                }
+            }
+        }
+        Ok(Err(_)) => {
+            // draft append failed (e.g. pool exhaustion): the draft is
+            // opportunistic — drop it, never pressure the parent
+            drafts.remove(&job.session);
+        }
+        Err(_) => {
+            // a panicked draft step (injected or real) quarantines only
+            // the draft; the parent session entry was never touched
+            metrics.panics_caught.fetch_add(1, Relaxed);
+            drafts.remove(&job.session);
+        }
+    }
+}
+
+/// Fork a session's cache into a fresh draft lane (COW refcount bumps)
+/// and degrade it to the draft window.  `None` on any failure —
+/// including an unwind injected at the `kv_fork` seam — and the parent
+/// entry is never affected.
+fn fork_draft(entry: &SessionEntry, cfg: &SchedConfig, ctx: &EngineCtx) -> Option<DraftLane> {
+    let forked = catch_unwind(AssertUnwindSafe(|| {
+        let mut cache = entry.cache.fork();
+        cache.degrade(cfg.draft_window.max(1)).map(|_| cache)
+    }));
+    match forked {
+        Ok(Ok(cache)) => {
+            let attn = entry.cfg.build().ok()?;
+            Some(DraftLane { cache, attn, steps: 0, agreed: true })
+        }
+        Ok(Err(_)) => None,
+        Err(_) => {
+            ctx.metrics.panics_caught.fetch_add(1, Relaxed);
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sched_config_defaults() {
+        let c = SchedConfig::default();
+        assert_eq!(c.max_batch, 8);
+        assert_eq!(c.draft_k, 0, "speculation is opt-in");
+        assert!(c.draft_window >= 1);
+    }
+
+    #[test]
+    fn argmax_first_on_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+        assert_eq!(argmax(&[0.0, 0.0]), 0);
+    }
+}

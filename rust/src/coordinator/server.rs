@@ -15,12 +15,17 @@
 //! ([`Server::open_session_with_prefix`]): each open forks the pinned
 //! cache by refcount bumps (copy-on-write tail), so N sessions over a
 //! P-page prefix cost P + N·(private tail) pages instead of N·P.
-//! Note: decode steps for one session should be submitted sequentially
-//! (wait for each response before the next) — the usual token-streaming
-//! loop — as cross-batch ordering is not otherwise guaranteed.  Clients
-//! that pipeline anyway should set `DecodeJob::pos`: the engine then
-//! rejects any step landing at the wrong cache position instead of
-//! appending it out of order.
+//! The decode lane flows through the continuous-batching scheduler
+//! ([`super::scheduler`]): submissions bypass the batcher's wait (the
+//! scheduler does its own per-tick coalescing) and are processed in
+//! **submission order** — at most one step per session per tick — so
+//! pipelined same-session decode steps now execute in the order they
+//! were submitted, and a [`Server::ping`] submitted after N decode
+//! steps resolves only after those steps' tokens are emitted (the FIFO
+//! barrier).  `DecodeJob::pos` remains the belt-and-braces guard: a
+//! step landing at the wrong cache position is still rejected
+//! explicitly.  [`ServerConfig::sched`] sets the fused-batch width and
+//! the speculative draft-lane knobs (`draft_k`/`draft_window`).
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -33,6 +38,7 @@ use super::engine::{self, CacheConfig, EngineMsg, Reply, Work, WorkItem};
 use super::metrics::{CacheGauges, Metrics};
 use super::request::{AttnJob, AttnResponse, DecodeJob, DecodeResponse, SessionId};
 use super::router::{Route, Router, RouterConfig};
+use super::scheduler::SchedConfig;
 use crate::linalg::PagePool;
 use crate::runtime::Manifest;
 
@@ -44,6 +50,11 @@ pub struct ServerConfig {
     /// KV-cache memory subsystem: shared page pool size/budget,
     /// per-session eviction policy, idle-session TTL
     pub cache: CacheConfig,
+    /// Continuous-batching scheduler: fused decode-batch width
+    /// (`max_batch`) and the speculative draft lane (`draft_k` shadow
+    /// steps per accept/rollback window over a fork degraded to
+    /// `draft_window` rows; `draft_k = 0` disables speculation)
+    pub sched: SchedConfig,
     /// directory with manifest.json + *.hlo.txt; None = substrate only
     pub artifacts_dir: Option<PathBuf>,
     /// bounded queue depths (submit channel & engine channel)
@@ -66,6 +77,7 @@ impl Default for ServerConfig {
             router: RouterConfig::default(),
             batch: BatchConfig::default(),
             cache: CacheConfig::default(),
+            sched: SchedConfig::default(),
             artifacts_dir: None,
             queue_depth: 256,
             request_timeout: None,
@@ -175,6 +187,7 @@ impl Server {
             config.artifacts_dir.clone(),
             config.router.clone(),
             config.cache,
+            config.sched,
             metrics.clone(),
             depth,
         )?;
@@ -226,7 +239,9 @@ impl Server {
                                     r
                                 }
                                 // decode steps of all live sessions share
-                                // one batch key so they coalesce together
+                                // one lane key; coalescing across
+                                // sessions is the scheduler's job, so
+                                // this lane skips the batcher wait below
                                 // (pings ride the same lane: a probe
                                 // measures the real pipeline, not a
                                 // privileged shortcut)
@@ -242,7 +257,20 @@ impl Server {
                                 respond: sub.respond,
                                 deadline: sub.deadline,
                             };
-                            if let Some((_, batch)) = queue.push(route, item, Instant::now()) {
+                            if route.decode {
+                                // The decode lane bypasses the dynamic
+                                // batcher's wait entirely: the scheduler
+                                // does its own per-tick coalescing, and
+                                // forwarding each item immediately keeps
+                                // the lane in strict submission order
+                                // (the ping FIFO barrier) with no
+                                // `max_wait` latency tax per token.
+                                if engine_tx.send(EngineMsg::Batch(vec![item])).is_err() {
+                                    return;
+                                }
+                            } else if let Some((_, batch)) =
+                                queue.push(route, item, Instant::now())
+                            {
                                 if engine_tx.send(EngineMsg::Batch(batch)).is_err() {
                                     return;
                                 }

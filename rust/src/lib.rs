@@ -116,6 +116,30 @@
 //! free functions were removed; the view-based cores behind
 //! `AttentionOp` are the only implementation surface.)
 //!
+//! ## Continuous batching & speculative decode
+//!
+//! The decode lane is **continuously batched**
+//! ([`coordinator::scheduler`]): every model step, the scheduler
+//! coalesces at most one ready row per live session into a single fused
+//! [`attention::op::AttentionOp::decode_step_batch`] call — sessions
+//! join and leave between ticks (iteration-level scheduling, no
+//! batch-boundary barriers), and when more rows are ready than
+//! [`coordinator::SchedConfig::max_batch`], admission prefers the
+//! sessions holding the fewest pool pages (`serve --sched-max-batch`).
+//! Results are bitwise-identical to session-serial decode — batching
+//! changes only the schedule.  With `draft_k > 0` (`serve --draft-k K
+//! --draft-window W`) each session also runs a **speculative draft
+//! lane** over the COW fork primitive: a fork of its cache degraded to
+//! a tight sliding window shadows the target's steps, argmax agreement
+//! over `draft_k`-step windows is counted as accepted draft tokens
+//! (`draft_proposed`/`draft_accepted`/`draft_rollbacks` in
+//! [`coordinator::CacheGauges`]), and a rejected window rolls back for
+//! free by dropping the fork.  The genuine propose-then-verify form —
+//! draft proposes k tokens, the target verifies them in one batched
+//! pass, the accepted prefix stays shared via COW — lives at the model
+//! layer as [`model::speculative_generate`], pinned bitwise-identical
+//! to [`model::generate`].
+//!
 //! ## Kernel dispatch
 //!
 //! Every hot loop bottoms out in [`kernel`] — a runtime-dispatched SIMD

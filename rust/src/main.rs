@@ -100,6 +100,11 @@ COMMANDS:
            [--kv-degrade-window W]   under sustained pool exhaustion,
                                      degrade a session once to a W-row
                                      sliding window before shedding
+           [--sched-max-batch B]     continuous-batching scheduler: fuse up
+                                     to B decode rows per tick (default 8)
+           [--draft-k K]             speculative draft lanes: K shadow steps
+                                     per accept/rollback window (0 = off)
+           [--draft-window W]        sliding window of the draft fork
            [--failpoints SPEC]       arm fault injection, e.g.
                                      \"pool_alloc=err:0.05,decode_job=panic:0.01\"
                                      (same grammar as HYPERATTN_FAILPOINTS)
@@ -109,6 +114,10 @@ COMMANDS:
            [--cache-sizes 16384,65536 --kv-window W --kv-sink S] paged-cache rows
            [--prefix-sizes 4096,16384 --stream N]  prefix-sharing rows (N
                                      forked vs independent session opens)
+           [--sched-streams 4,16,64] batched-vs-serial decode rows (S fused
+                                     lanes per decode_step_batch call)
+           [--draft-k 2,4]           speculative decode rows (accept rate +
+                                     effective tok/s per draft depth)
   fig4     --sizes 4096,8192,... --d D --block B --samples M [--backward] --reps R
   fig3     --steps S --seq-len N
   table1   --steps S --seq-len N --reps R
@@ -139,6 +148,10 @@ fn main() {
                 args.get("kv-sink", 64usize),
                 &args.list("prefix-sizes", &[4096, 16384]),
                 args.get("stream", 8usize),
+                &args.list("sched-streams", &[4, 16, 64]),
+                args.get("sched-n", 2048usize),
+                args.get("sched-steps", 32usize),
+                &args.list("draft-k", &[2, 4]),
             );
             let text = doc.to_string();
             match args.get_str("json") {
@@ -205,6 +218,34 @@ fn main() {
                             g("indep_pages"),
                             g("pages_shared"),
                             g("cow_copies"),
+                        );
+                    }
+                }
+            }
+            if let Some(sched) = doc.get("decode_batched") {
+                if let Some(rows) = sched.get("streams").and_then(|v| v.as_array()) {
+                    for row in rows {
+                        let g = |k: &str| row.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+                        println!(
+                            "sched (S={:.0} streams): batched {:.0} tok/s aggregate vs \
+                             serial {:.0} tok/s ({:.2}x)",
+                            g("streams"),
+                            g("batched_tok_s"),
+                            g("serial_tok_s"),
+                            g("speedup"),
+                        );
+                    }
+                }
+                if let Some(rows) = sched.get("speculative").and_then(|v| v.as_array()) {
+                    for row in rows {
+                        let g = |k: &str| row.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+                        println!(
+                            "speculative (k={:.0}): accept rate {:.2}, {:.0} tok/s \
+                             effective vs {:.0} tok/s greedy",
+                            g("draft_k"),
+                            g("accept_rate"),
+                            g("spec_tok_s"),
+                            g("serial_tok_s"),
                         );
                     }
                 }
@@ -317,6 +358,13 @@ fn cmd_serve(args: &Args) {
     let deadline_ms = args.get("deadline-ms", 0u64);
     if deadline_ms > 0 {
         cfg.request_timeout = Some(std::time::Duration::from_millis(deadline_ms));
+    }
+    // continuous-batching scheduler + speculative draft lanes
+    cfg.sched.max_batch = args.get("sched-max-batch", cfg.sched.max_batch);
+    cfg.sched.draft_k = args.get("draft-k", cfg.sched.draft_k);
+    let draft_window = args.get("draft-window", 0usize);
+    if draft_window > 0 {
+        cfg.sched.draft_window = draft_window;
     }
     // fault injection: CLI spec wins over HYPERATTN_FAILPOINTS
     if let Some(spec) = args.get_str("failpoints") {

@@ -14,7 +14,9 @@
 pub mod corpus;
 pub mod train;
 
-use crate::attention::op::{AttnCache, AttnConfig, Backend, CachePolicy, SeedPolicy};
+use crate::attention::op::{
+    AttentionOp, AttnCache, AttnConfig, Backend, CachePolicy, DecodeLane, SeedPolicy,
+};
 use crate::linalg::{matmul, matmul_nt, Mat, QkvView};
 use crate::rng::Rng;
 
@@ -382,6 +384,23 @@ impl GenCache {
             pos: self.pos,
         }
     }
+
+    /// Fork a **draft lane** for speculative decoding: a COW fork of
+    /// every layer ([`GenCache::fork`]) immediately degraded to a
+    /// `window`-row sliding window ([`AttnCache::degrade`]), so the
+    /// draft attends a short recent context and proposes tokens
+    /// cheaply while the parent keeps full fidelity.  Pages outside
+    /// the window are released right away; pages inside stay shared
+    /// with the parent until the draft writes (copy-on-write).
+    /// Dropping the returned cache is the rollback: shared refcounts
+    /// fall and nothing the parent owns moves.
+    pub fn fork_draft(&self, window: usize) -> Result<GenCache, String> {
+        let mut draft = self.fork();
+        for c in &mut draft.layers {
+            c.degrade(window)?;
+        }
+        Ok(draft)
+    }
 }
 
 /// Incremental forward: run `tokens_new` (a prompt chunk, or a single
@@ -449,6 +468,108 @@ pub fn forward_cached(
     matmul_nt(&x, &model.tok_emb) // weight-tied logits (n_new, vocab)
 }
 
+/// One continuous-batching model step: decode exactly one token for
+/// every lane (each a non-empty [`GenCache`]), coalescing all lanes'
+/// per-layer attention into a single batched
+/// [`AttentionOp::decode_step_batch`] call — the model-level analogue
+/// of the coordinator's iteration-level scheduler.  Returns one
+/// `(1, vocab)` logits matrix per lane, in lane order.
+///
+/// Bitwise-identical to calling [`forward_cached`] once per lane in
+/// lane order (pinned by a test): the batch runs the same serial
+/// per-lane prepare in lane order, and the batched row pass is pure
+/// with deterministic placement.
+pub fn forward_cached_batch(
+    model: &Model,
+    tokens_new: &[usize],
+    n_patched: usize,
+    seed: u64,
+    caches: &mut [&mut GenCache],
+) -> Vec<Mat> {
+    let cfg = &model.cfg;
+    let n_lanes = tokens_new.len();
+    assert_eq!(n_lanes, caches.len(), "one new token per lane");
+    for c in caches.iter() {
+        assert!(!c.is_empty(), "batched decode needs prefilled lanes");
+        assert!(c.pos + 1 <= cfg.max_seq, "sequence too long for max_seq");
+    }
+    let d = cfg.d_model;
+    let dh = cfg.d_head();
+    // per-lane hidden state (1, d)
+    let mut xs: Vec<Mat> = tokens_new
+        .iter()
+        .zip(caches.iter())
+        .map(|(&t, c)| {
+            let mut x = Mat::zeros(1, d);
+            let e = model.tok_emb.row(t);
+            let p = model.pos_emb.row(c.pos);
+            let row = x.row_mut(0);
+            for j in 0..d {
+                row[j] = e[j] + p[j];
+            }
+            x
+        })
+        .collect();
+    let first_patched = cfg.n_layers.saturating_sub(n_patched);
+    for (li, layer) in model.layers.iter().enumerate() {
+        let use_hyper = li >= first_patched;
+        let lseed = seed.wrapping_add(131 * li as u64);
+        // serial per-lane halves: LN + fused QKV projection + head pack
+        let packed: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = xs
+            .iter()
+            .map(|x| {
+                let h = layer_norm(x, &layer.ln1_g, &layer.ln1_b);
+                let qkv = matmul(&h, &layer.wqkv);
+                pack_heads(&qkv, cfg.n_heads, d, dh)
+            })
+            .collect();
+        let ops: Vec<AttentionOp> = caches
+            .iter()
+            .map(|c| {
+                layer_attn_config(cfg, c.pos + 1, use_hyper, lseed)
+                    .build()
+                    .expect("model attention config is valid")
+            })
+            .collect();
+        // one batched attention call across every lane's decode row
+        let mut lanes: Vec<DecodeLane<'_, '_>> = Vec::with_capacity(n_lanes);
+        for ((c, op), (qh, kh, vh)) in caches.iter_mut().zip(&ops).zip(&packed) {
+            let view =
+                QkvView::new(cfg.n_heads, 1, dh, qh, kh, vh).expect("packed head buffers");
+            lanes.push(DecodeLane { op, cache: &mut c.layers[li], x: view });
+        }
+        let outs = AttentionOp::decode_step_batch(&mut lanes);
+        drop(lanes);
+        for (i, out) in outs.into_iter().enumerate() {
+            let out = out.expect("decode shapes validated").out;
+            let cat = unpack_heads(&out, cfg.n_heads, 1, dh);
+            let a = matmul(&cat, &layer.wo);
+            xs[i].add_assign(&a);
+            let h = layer_norm(&xs[i], &layer.ln2_g, &layer.ln2_b);
+            let mut ff = matmul(&h, &layer.w1);
+            let row = ff.row_mut(0);
+            for (j, val) in row.iter_mut().enumerate() {
+                *val = gelu(*val + layer.b1[j]);
+            }
+            let mut ff2 = matmul(&ff, &layer.w2);
+            let row = ff2.row_mut(0);
+            for (j, val) in row.iter_mut().enumerate() {
+                *val += layer.b2[j];
+            }
+            xs[i].add_assign(&ff2);
+        }
+    }
+    for c in caches.iter_mut() {
+        c.pos += 1;
+    }
+    xs.into_iter()
+        .map(|x| {
+            let x = layer_norm(&x, &model.ln_f_g, &model.ln_f_b);
+            matmul_nt(&x, &model.tok_emb)
+        })
+        .collect()
+}
+
 fn argmax(row: &[f32]) -> usize {
     let mut best = 0usize;
     for (i, &v) in row.iter().enumerate() {
@@ -487,6 +608,117 @@ pub fn generate(
         next = argmax(logits.row(0));
     }
     toks
+}
+
+/// Counters from one [`speculative_generate`] run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// draft tokens proposed
+    pub proposed: u64,
+    /// draft tokens the target's verify pass accepted
+    pub accepted: u64,
+    /// verify rounds that rejected a tail (the verify fork was dropped)
+    pub rollbacks: u64,
+}
+
+impl SpecStats {
+    /// Fraction of proposed draft tokens accepted (0 when none proposed).
+    pub fn accept_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+}
+
+/// Greedy speculative decoding over the fork primitive: a cheap
+/// **draft lane** ([`GenCache::fork_draft`] — COW fork degraded to a
+/// `draft_window`-row sliding window) proposes `draft_k` tokens one at
+/// a time, then the full-fidelity target verifies all of them in a
+/// **single batched attention pass** (one multi-row [`forward_cached`]
+/// call on a COW fork of the target).  The accepted prefix stays
+/// shared — on full acceptance the verify fork simply *becomes* the
+/// target state, no pages move — and a rejected tail rolls back for
+/// free by dropping the fork; the accepted prefix is then replayed on
+/// the clean target in one batched pass whose final row yields the
+/// correction token.
+///
+/// Output is target-greedy by construction — every emitted token is an
+/// argmax of the target model's own logits — so the token stream is
+/// identical to [`generate`] with the same arguments (pinned by a
+/// test); the draft only decides how many target steps batch together.
+/// Returns prompt + generated tokens and the proposal/accept counters.
+pub fn speculative_generate(
+    model: &Model,
+    prompt: &[usize],
+    n_new: usize,
+    n_patched: usize,
+    seed: u64,
+    draft_k: usize,
+    draft_window: usize,
+) -> Result<(Vec<usize>, SpecStats), String> {
+    assert!(!prompt.is_empty(), "empty prompt");
+    assert!(draft_k >= 1, "draft_k must be >= 1");
+    assert!(
+        prompt.len() + n_new <= model.cfg.max_seq,
+        "prompt + n_new exceeds max_seq"
+    );
+    let mut stats = SpecStats::default();
+    let mut target = GenCache::new(model);
+    let mut toks = prompt.to_vec();
+    let logits = forward_cached(model, prompt, n_patched, seed, &mut target);
+    if n_new == 0 {
+        return Ok((toks, stats));
+    }
+    toks.push(argmax(logits.row(logits.rows - 1)));
+    let mut emitted = 1usize;
+    while emitted < n_new {
+        let k = draft_k.min(n_new - emitted);
+        // draft lane: propose k tokens against a tight recent window
+        let props = {
+            let mut draft = target.fork_draft(draft_window)?;
+            let mut prev = *toks.last().expect("non-empty");
+            let mut props = Vec::with_capacity(k);
+            for _ in 0..k {
+                let lg = forward_cached(model, &[prev], n_patched, seed, &mut draft);
+                prev = argmax(lg.row(0));
+                props.push(prev);
+            }
+            props
+            // draft dropped here: its pages release by refcount
+        };
+        stats.proposed += k as u64;
+        // verify all k proposals in one batched pass on a target fork
+        let mut vf = target.fork();
+        let mut chunk = Vec::with_capacity(k);
+        chunk.push(*toks.last().expect("non-empty"));
+        chunk.extend_from_slice(&props[..k - 1]);
+        let lg = forward_cached(model, &chunk, n_patched, seed, &mut vf);
+        let mut a = 0usize;
+        while a < k && argmax(lg.row(a)) == props[a] {
+            a += 1;
+        }
+        stats.accepted += a as u64;
+        if a == k {
+            // full accept: the verify fork IS the new target state
+            // (it holds exactly the KV of every token but the last)
+            target = vf;
+            toks.extend_from_slice(&props);
+            emitted += k;
+        } else {
+            // rejected tail: roll back by dropping the fork, replay the
+            // accepted prefix on the clean target in one batched pass,
+            // and take the correction from its final row
+            stats.rollbacks += 1;
+            drop(vf);
+            let lg = forward_cached(model, &chunk[..a + 1], n_patched, seed, &mut target);
+            toks.extend_from_slice(&props[..a]);
+            toks.push(argmax(lg.row(a)));
+            emitted += a + 1;
+        }
+    }
+    Ok((toks, stats))
 }
 
 #[cfg(test)]
@@ -667,6 +899,96 @@ mod tests {
         let out = generate(&m, &prompt, 16, 2, 3);
         assert_eq!(out.len(), 40);
         assert!(out.iter().all(|&t| t < 16));
+    }
+
+    /// Batched multi-lane decode is bitwise-identical to running each
+    /// lane serially through `forward_cached`, including lanes at
+    /// different positions and lanes joining/leaving between steps.
+    #[test]
+    fn batched_decode_matches_serial_lanes() {
+        let m = tiny();
+        // three sessions with different prompts (and lengths)
+        let prompts: Vec<Vec<usize>> = vec![
+            (0..12).map(|i| (i * 3) % 16).collect(),
+            (0..17).map(|i| (i * 5 + 2) % 16).collect(),
+            (0..9).map(|i| (i * 7 + 1) % 16).collect(),
+        ];
+        let mut batched: Vec<GenCache> = Vec::new();
+        let mut serial: Vec<GenCache> = Vec::new();
+        let mut toks: Vec<Vec<usize>> = Vec::new();
+        for p in &prompts {
+            let mut cb = GenCache::new(&m);
+            let lb = forward_cached(&m, p, 1, 3, &mut cb);
+            let mut cs = GenCache::new(&m);
+            let ls = forward_cached(&m, p, 1, 3, &mut cs);
+            assert_eq!(lb, ls);
+            batched.push(cb);
+            serial.push(cs);
+            toks.push(vec![argmax(lb.row(lb.rows - 1))]);
+        }
+        // step 1: all three lanes in one batch; steps 2+: lane 1 leaves
+        // (finished), a re-forked lane joins — membership churn
+        for step in 0..4usize {
+            let members: Vec<usize> =
+                if step == 0 { vec![0, 1, 2] } else { vec![0, 2] };
+            let tokens: Vec<usize> =
+                members.iter().map(|&i| *toks[i].last().unwrap()).collect();
+            let mut lanes: Vec<&mut GenCache> = Vec::new();
+            // indexed split to hand out disjoint &mut on members
+            let mut rest: &mut [GenCache] = &mut batched;
+            let mut base = 0usize;
+            for &i in &members {
+                let (_, r) = rest.split_at_mut(i - base);
+                let (one, r2) = r.split_at_mut(1);
+                lanes.push(&mut one[0]);
+                rest = r2;
+                base = i + 1;
+            }
+            let lg = forward_cached_batch(&m, &tokens, 1, 3, &mut lanes);
+            for (mi, &i) in members.iter().enumerate() {
+                let last = *toks[i].last().unwrap();
+                let ls = forward_cached(&m, &[last], 1, 3, &mut serial[i]);
+                assert_eq!(lg[mi], ls, "lane {i} diverged at step {step}");
+                toks[i].push(argmax(ls.row(0)));
+            }
+        }
+    }
+
+    /// Speculative decode emits the exact token stream of plain greedy
+    /// `generate` — the draft only changes *how* tokens are computed,
+    /// never *which* — for both a roomy draft window (high acceptance)
+    /// and a tight one (forced rollbacks), on plain and patched models.
+    #[test]
+    fn speculative_generate_matches_greedy() {
+        let m = tiny();
+        let prompt: Vec<usize> = (0..12).map(|i| (i * 3) % 16).collect();
+        let mut tight_rollbacks = 0u64;
+        for n_patched in [0usize, 2] {
+            let oracle = generate(&m, &prompt, 20, n_patched, 7);
+            // roomy window: the draft sees everything the target sees,
+            // so greedy proposals should mostly be accepted
+            let (toks, stats) =
+                speculative_generate(&m, &prompt, 20, n_patched, 7, 4, 64).unwrap();
+            assert_eq!(toks, oracle, "roomy-window stream diverged");
+            assert!(stats.proposed > 0);
+            assert!(stats.accepted <= stats.proposed);
+            // tight window: the draft attends (at most a page beyond)
+            // one row — crippled context, rollbacks expected — and the
+            // output still must not change
+            let (toks, stats) =
+                speculative_generate(&m, &prompt, 20, n_patched, 7, 4, 1).unwrap();
+            assert_eq!(toks, oracle, "tight-window stream diverged");
+            tight_rollbacks += stats.rollbacks;
+        }
+        assert!(
+            tight_rollbacks > 0,
+            "a one-row draft window should mispredict at least once \
+             across plain + patched runs"
+        );
+        // k = 1 degenerates gracefully
+        let oracle = generate(&m, &prompt, 6, 0, 7);
+        let (toks, _) = speculative_generate(&m, &prompt, 6, 0, 7, 1, 8).unwrap();
+        assert_eq!(toks, oracle);
     }
 
     #[test]

@@ -16,6 +16,13 @@
 //!   live decode lane, not a shortcut);
 //! * **shutdown drains** with decode steps still queued.
 //!
+//! The cocktail covers the continuous-batching scheduler too:
+//! `sched_tick` faults (err and panic — the tick degrades to
+//! session-serial, the scheduler thread never dies) and `kv_fork`
+//! faults with speculative draft lanes armed on half the trials (a
+//! fork failing mid-speculation drops only the draft; the parent
+//! session keeps decoding and the pool-conservation invariant holds).
+//!
 //! A final pair of trials checks the zero-cost contract: with no spec
 //! armed (and after `clear()`), a seeded workload is bitwise identical
 //! to the never-armed run, and an armed delay-only spec changes timing
@@ -145,6 +152,19 @@ fn chaos_spec(rng: &mut Rng) -> String {
     if rng.next_f32() < 0.4 {
         parts.push("engine_recv=delay:1ms:0.2".to_string());
     }
+    // scheduler faults: a failed (or panicked) tick must degrade to the
+    // session-serial path, never kill the scheduler thread
+    if rng.next_f32() < 0.4 {
+        parts.push(format!("sched_tick=err:{:.2}", 0.05 + 0.2 * rng.next_f32()));
+    }
+    if rng.next_f32() < 0.2 {
+        parts.push(format!("sched_tick=panic:{:.2}", 0.02 + 0.08 * rng.next_f32()));
+    }
+    // draft-lane faults: a failed fork mid-speculation quarantines only
+    // the draft (it is silently dropped), never the parent session
+    if rng.next_f32() < 0.35 {
+        parts.push(format!("kv_fork=err:{:.2}", 0.1 + 0.3 * rng.next_f32()));
+    }
     if parts.is_empty() {
         // at least one site armed per trial, or it isn't a chaos trial
         parts.push("decode_job=err:0.1".to_string());
@@ -165,6 +185,14 @@ fn run_trial(seed: u64) {
     // tight: 2 sessions' prompts fill it, so the ladder actually runs
     cfg.cache.budget_pages = Some(8);
     cfg.cache.degrade_window = if rng.next_f32() < 0.7 { Some(16) } else { None };
+    // scheduler knobs: a small fused-batch cap exercises page-weighted
+    // admission truncation; half the trials run speculative draft lanes
+    // so fork/rollback churn happens under fault injection too
+    cfg.sched.max_batch = 2 + (rng.next_u64() % 7) as usize;
+    if rng.next_f32() < 0.5 {
+        cfg.sched.draft_k = 2;
+        cfg.sched.draft_window = 4;
+    }
     if rng.next_f32() < 0.3 {
         // aggressive deadlines on some trials: expiry is one more path
         // every ticket must resolve through

@@ -1,0 +1,463 @@
+//! Properties of the continuous-batching token scheduler and its
+//! speculative draft lane:
+//!
+//! * **fused ≡ serial, bitwise, on every backend** — at the op layer,
+//!   `decode_step_batch` over any lane set (including lanes joining and
+//!   leaving between steps) produces exactly the bits of per-lane
+//!   `decode_step` calls;
+//! * **N concurrent streams through the server match a local oracle**
+//!   bit for bit — continuous batching changes the schedule, never an
+//!   output — and the scheduler demonstrably ran (batch occupancy was
+//!   recorded, zero serial fallbacks);
+//! * **`Server::ping` is a FIFO barrier**: once a ping submitted after
+//!   a pipeline of decode steps resolves, every one of those steps has
+//!   already resolved, in order;
+//! * **speculative mode is bitwise-invisible**: clients always get
+//!   target outputs; a crippled one-row draft window forces rollbacks
+//!   (counted, fork dropped, no leaked pages) and a roomy window
+//!   accepts whole draft windows;
+//! * **faults stay contained**: `sched_tick=err:1.0` degrades every
+//!   tick to the session-serial path with identical outputs, and
+//!   `kv_fork=err:1.0` starves the draft lane without the parent
+//!   session ever noticing.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use hyperattention::attention::op::{
+    self as op, AttnCache, AttnConfig, AttentionOp, AutoPolicy, DecodeLane, SeedPolicy,
+};
+use hyperattention::coordinator::engine::substrate_config;
+use hyperattention::coordinator::failpoint::{self, INJECTED};
+use hyperattention::coordinator::{
+    AttnJob, DecodeJob, ModePreference, RouteKind, RouterConfig, Server, ServerConfig,
+};
+use hyperattention::linalg::QkvView;
+use hyperattention::rng::Rng;
+
+const H: usize = 2;
+const D: usize = 16;
+const RESOLVE: Duration = Duration::from_secs(30);
+
+/// Failpoint state is process-global: tests that arm specs (or whose
+/// bitwise assertions an armed spec would perturb) must not interleave.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Injected `kv_fork` unwinds are expected noise in the draft-lane
+/// fault test; anything else escaping a job boundary is a bug.
+static ESCAPED_PANICS: AtomicU64 = AtomicU64::new(0);
+
+fn install_quiet_hook() {
+    static HOOK: OnceLock<()> = OnceLock::new();
+    HOOK.get_or_init(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(|s| s.contains(INJECTED))
+                .or_else(|| {
+                    info.payload()
+                        .downcast_ref::<&str>()
+                        .map(|s| s.contains(INJECTED))
+                })
+                .unwrap_or(false);
+            if !injected {
+                ESCAPED_PANICS.fetch_add(1, Ordering::Relaxed);
+                default(info);
+            }
+        }));
+    });
+}
+
+/// One head-major `[h, 1, d]` token slice out of a `[h, total, d]` buffer.
+fn token_at(buf: &[f32], h: usize, total: usize, d: usize, t: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(h * d);
+    for head in 0..h {
+        out.extend_from_slice(&buf[head * total * d + t * d..head * total * d + (t + 1) * d]);
+    }
+    out
+}
+
+/// Op-layer acceptance gate for the scheduler's fused call: over a
+/// churning lane set — lanes join staggered, one leaves halfway —
+/// `decode_step_batch` is bitwise identical to per-lane `decode_step`
+/// on every backend (exact, flash, hyper, causal-hyper, auto, and the
+/// sampled-decode estimator with mid-stream resampling).
+#[test]
+fn batched_decode_bitwise_matches_serial_on_all_backends() {
+    let (h, d) = (2usize, 8usize);
+    let n_lanes = 5usize;
+    let prefix_len = 10usize;
+    let steps = 8usize;
+    let configs: Vec<(&str, AttnConfig)> = vec![
+        (
+            "exact",
+            AttnConfig { backend: op::Backend::Exact, causal: true, ..Default::default() },
+        ),
+        ("flash", AttnConfig::flash(true)),
+        (
+            "hyper",
+            AttnConfig {
+                backend: op::Backend::Hyper,
+                block: 8,
+                samples: 8,
+                seed: SeedPolicy::PerHead(5),
+                ..Default::default()
+            },
+        ),
+        ("causal-hyper", AttnConfig::causal_hyper(8, 8, 16)),
+        (
+            "auto",
+            AttnConfig { backend: op::Backend::Auto, causal: true, ..Default::default() },
+        ),
+        (
+            "sampled-decode",
+            AttnConfig {
+                backend: op::Backend::CausalHyper,
+                causal: true,
+                block: 8,
+                samples: 8,
+                causal_base: 16,
+                seed: SeedPolicy::PerHead(11),
+                auto: AutoPolicy {
+                    decode_hyper_threshold: 1,
+                    decode_resample_interval: 4,
+                    ..AutoPolicy::default()
+                },
+                ..Default::default()
+            },
+        ),
+    ];
+    for (name, cfg) in configs {
+        let attn = cfg.build().unwrap();
+        let total = prefix_len + steps;
+        let data: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..n_lanes)
+            .map(|s| {
+                let mut rng = Rng::new(0x5C4ED ^ ((s as u64) << 8));
+                (
+                    rng.normal_vec(h * total * d),
+                    rng.normal_vec(h * total * d),
+                    rng.normal_vec(h * total * d),
+                )
+            })
+            .collect();
+        let prefill_all = || -> Vec<AttnCache> {
+            data.iter()
+                .map(|(q, k, v)| {
+                    let mut cache = AttnCache::new(h, d);
+                    let view =
+                        QkvView::strided(h, prefix_len, d, total * d, q, k, v).unwrap();
+                    attn.prefill(&mut cache, view).unwrap();
+                    cache
+                })
+                .collect()
+        };
+        let mut serial = prefill_all();
+        let mut batched = prefill_all();
+        let mut taken = vec![0usize; n_lanes];
+
+        for t in 0..steps {
+            // churn: lane s joins at step s; lane 0 leaves at halftime
+            let active: Vec<usize> = (0..n_lanes)
+                .filter(|&s| t >= s && !(s == 0 && t >= steps / 2))
+                .collect();
+            if active.is_empty() {
+                continue;
+            }
+            let toks: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = active
+                .iter()
+                .map(|&s| {
+                    let idx = prefix_len + taken[s];
+                    (
+                        token_at(&data[s].0, h, total, d, idx),
+                        token_at(&data[s].1, h, total, d, idx),
+                        token_at(&data[s].2, h, total, d, idx),
+                    )
+                })
+                .collect();
+
+            let mut want = Vec::new();
+            for (i, &s) in active.iter().enumerate() {
+                let (q, k, v) = &toks[i];
+                let view = QkvView::new(h, 1, d, q, k, v).unwrap();
+                want.push(attn.decode_step(&mut serial[s], view).unwrap());
+            }
+
+            let got = {
+                let mut lanes: Vec<DecodeLane> = Vec::with_capacity(active.len());
+                let mut next = active.iter().peekable();
+                for (s, cache) in batched.iter_mut().enumerate() {
+                    if next.peek() == Some(&&s) {
+                        next.next();
+                        let (q, k, v) = &toks[lanes.len()];
+                        lanes.push(DecodeLane {
+                            op: &attn,
+                            cache,
+                            x: QkvView::new(h, 1, d, q, k, v).unwrap(),
+                        });
+                    }
+                }
+                AttentionOp::decode_step_batch(&mut lanes)
+            };
+            assert_eq!(got.len(), want.len());
+            for ((g, w), &s) in got.into_iter().zip(&want).zip(&active) {
+                let g = g.unwrap_or_else(|e| panic!("{name} t={t} lane={s}: {e}"));
+                assert_eq!(g.pos, w.pos, "{name} t={t} lane={s}");
+                assert_eq!(g.sampled, w.sampled, "{name} t={t} lane={s}");
+                assert_eq!(
+                    g.out, w.out,
+                    "{name} t={t} lane={s}: fused decode diverged from serial"
+                );
+            }
+            for &s in &active {
+                taken[s] += 1;
+            }
+        }
+    }
+}
+
+fn mk_open(n: usize, seed: u64) -> AttnJob {
+    let mut rng = Rng::new(seed);
+    let len = H * n * D;
+    AttnJob {
+        id: 0,
+        heads: H,
+        n,
+        d: D,
+        q: rng.normal_vec(len),
+        k: rng.normal_vec(len),
+        v: rng.normal_vec(len),
+        causal: true,
+        mode: ModePreference::Exact,
+        seed: seed as i32,
+    }
+}
+
+/// A local single-threaded oracle for one server session: the identical
+/// op config the engine derives for this open job, prefilled with the
+/// identical prompt.
+fn oracle(job: &AttnJob) -> (AttentionOp, AttnCache) {
+    let cfg = substrate_config(job, RouteKind::Exact, &RouterConfig::default());
+    let attn = cfg.build().unwrap();
+    let mut cache = AttnCache::new(H, D);
+    let x = QkvView::new(H, job.n, D, &job.q, &job.k, &job.v).unwrap();
+    attn.prefill(&mut cache, x).unwrap();
+    (attn, cache)
+}
+
+/// Drive one session for `steps` tokens, asserting every response is
+/// bitwise identical to the local oracle's `decode_step`.
+fn stream_against_oracle(server: &Server, n: usize, steps: usize, seed: u64) {
+    let job = mk_open(n, seed);
+    let (attn, mut cache) = oracle(&job);
+    let (sid, ticket) = server.open_session(mk_open(n, seed)).unwrap();
+    ticket.wait().unwrap();
+    let mut rng = Rng::new(seed ^ 0xD);
+    for t in 0..steps {
+        let q = rng.normal_vec(H * D);
+        let k = rng.normal_vec(H * D);
+        let v = rng.normal_vec(H * D);
+        let view = QkvView::new(H, 1, D, &q, &k, &v).unwrap();
+        let want = attn.decode_step(&mut cache, view).unwrap();
+        let got = server
+            .decode_wait(DecodeJob { session: sid, heads: H, d: D, pos: Some(n + t), q, k, v })
+            .unwrap_or_else(|e| panic!("seed {seed} step {t}: {e}"));
+        assert_eq!(got.pos, want.pos, "seed {seed} step {t}");
+        assert_eq!(got.sampled, want.sampled, "seed {seed} step {t}");
+        assert_eq!(
+            got.out, want.out,
+            "seed {seed} step {t}: scheduled decode diverged from the oracle"
+        );
+    }
+    server.close_session(sid).unwrap();
+}
+
+/// Tentpole acceptance gate: N concurrent streaming sessions under the
+/// continuous-batching scheduler are bitwise identical to the
+/// session-serial oracle, and the fused path actually ran.
+#[test]
+fn concurrent_streams_under_scheduler_match_local_oracle_bitwise() {
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    failpoint::clear();
+    let mut cfg = ServerConfig::substrate_only();
+    cfg.sched.max_batch = 4; // smaller than the stream count: admission
+                             // truncation (page-weighted) happens too
+    let server = Arc::new(Server::start(cfg).unwrap());
+    let mut clients = Vec::new();
+    for s in 0..6u64 {
+        let srv = server.clone();
+        clients.push(std::thread::spawn(move || {
+            stream_against_oracle(&srv, 12, 10, 0x7001 + s);
+        }));
+    }
+    for c in clients {
+        c.join().expect("stream thread must not panic");
+    }
+    let m = server.metrics();
+    assert!(
+        m.batch_occupancy.count() > 0,
+        "the scheduler never recorded a fused batch"
+    );
+    assert_eq!(
+        m.sched_serial_fallbacks.load(Ordering::Relaxed),
+        0,
+        "a healthy run must not fall back to the serial path"
+    );
+    assert_eq!(m.decode_steps.load(Ordering::Relaxed), 60);
+    server.shutdown();
+}
+
+/// The PR 6 ping guarantee under the scheduler: ping rides the decode
+/// lane FIFO, so once it answers, every decode step submitted before it
+/// has already resolved — pipelined same-session steps included.
+#[test]
+fn ping_is_a_fifo_barrier_over_pipelined_decode_steps() {
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    failpoint::clear();
+    let server = Server::start(ServerConfig::substrate_only()).unwrap();
+    let n = 8usize;
+    let (sid, ticket) = server.open_session(mk_open(n, 21)).unwrap();
+    ticket.wait().unwrap();
+    let mut rng = Rng::new(5);
+    let mut tickets = Vec::new();
+    for i in 0..6usize {
+        let dj = DecodeJob {
+            session: sid,
+            heads: H,
+            d: D,
+            pos: Some(n + i),
+            q: rng.normal_vec(H * D),
+            k: rng.normal_vec(H * D),
+            v: rng.normal_vec(H * D),
+        };
+        tickets.push(server.decode(dj).unwrap());
+    }
+    server.ping(RESOLVE).unwrap();
+    // every pipelined step already resolved (in submission order): its
+    // reply is sitting in the ticket's channel, zero further waiting
+    for (i, t) in tickets.into_iter().enumerate() {
+        let r = t
+            .wait_timeout(Duration::from_millis(0))
+            .unwrap_or_else(|e| panic!("step {i} not resolved when ping answered: {e}"));
+        assert_eq!(r.pos, n + i, "steps resolved out of order");
+    }
+    server.close_session(sid).unwrap();
+    server.shutdown();
+}
+
+/// Speculative mode never changes a client-visible bit.  A one-row
+/// draft window mispredicts (rollbacks counted, forks dropped); after
+/// close the lane is reaped and not one fork page leaks.
+#[test]
+fn speculative_mode_is_bitwise_invisible_and_rolls_back_cleanly() {
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    failpoint::clear();
+    let mut cfg = ServerConfig::substrate_only();
+    cfg.sched.draft_k = 2;
+    cfg.sched.draft_window = 1; // crippled draft: disagreement certain
+    let server = Server::start(cfg).unwrap();
+    stream_against_oracle(&server, 12, 32, 0xBEEF);
+    let m = server.metrics();
+    assert!(
+        m.draft_proposed.load(Ordering::Relaxed) > 0,
+        "the draft lane never shadowed a step"
+    );
+    assert!(
+        m.draft_rollbacks.load(Ordering::Relaxed) >= 1,
+        "a one-row draft window must mispredict at least once in 32 steps"
+    );
+    server.ping(RESOLVE).unwrap();
+    // the close was processed; the reaped draft fork must have returned
+    // its pages (the gauge is stored at tick end — poll briefly)
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let g = server.cache_gauges();
+        if g.draft_lanes == 0 {
+            assert_eq!(g.pages_in_use, 0, "draft fork pages leaked");
+            break;
+        }
+        assert!(Instant::now() < deadline, "draft lane never reaped after close");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    server.shutdown();
+}
+
+/// With a draft window roomier than the stream, the shadow fork sees
+/// exactly the target's context, so whole windows are accepted and
+/// nothing rolls back — the accept-side counter really moves.
+#[test]
+fn roomy_draft_window_accepts_whole_windows() {
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    failpoint::clear();
+    let mut cfg = ServerConfig::substrate_only();
+    cfg.sched.draft_k = 2;
+    cfg.sched.draft_window = 64; // stream stays well inside the window
+    let server = Server::start(cfg).unwrap();
+    stream_against_oracle(&server, 12, 12, 0xACCE);
+    let m = server.metrics();
+    assert!(m.draft_accepted.load(Ordering::Relaxed) > 0, "no window accepted");
+    assert_eq!(
+        m.draft_rollbacks.load(Ordering::Relaxed),
+        0,
+        "a window-covering draft is bitwise the target: it cannot mispredict"
+    );
+    server.shutdown();
+}
+
+/// `sched_tick=err:1.0`: every tick degrades to the session-serial
+/// path.  Decode keeps flowing, outputs stay bitwise identical, and the
+/// fallback counter proves the degraded path ran.
+#[test]
+fn sched_tick_fault_degrades_to_serial_with_identical_outputs() {
+    install_quiet_hook();
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    failpoint::configure("sched_tick=err:1.0", 3).unwrap();
+    let server = Server::start(ServerConfig::substrate_only()).unwrap();
+    stream_against_oracle(&server, 12, 8, 0x5ED1);
+    let m = server.metrics();
+    assert!(
+        m.sched_serial_fallbacks.load(Ordering::Relaxed) > 0,
+        "an always-on sched_tick fault must trip the serial fallback"
+    );
+    failpoint::clear();
+    server.shutdown();
+    assert_eq!(ESCAPED_PANICS.load(Ordering::Relaxed), 0);
+}
+
+/// `kv_fork=err:1.0` with speculation on: every draft fork dies at the
+/// seam.  The parent session never notices — outputs bitwise match, no
+/// draft step is ever proposed, and teardown conserves every page.
+#[test]
+fn draft_fork_fault_quarantines_only_the_draft() {
+    install_quiet_hook();
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    failpoint::configure("kv_fork=err:1.0", 4).unwrap();
+    let mut cfg = ServerConfig::substrate_only();
+    cfg.sched.draft_k = 2;
+    cfg.sched.draft_window = 8;
+    let server = Server::start(cfg).unwrap();
+    stream_against_oracle(&server, 12, 8, 0xF0F0);
+    failpoint::clear();
+    let m = server.metrics();
+    assert_eq!(
+        m.draft_proposed.load(Ordering::Relaxed),
+        0,
+        "no draft can exist when every fork fails"
+    );
+    assert!(
+        m.panics_caught.load(Ordering::Relaxed) > 0,
+        "the injected fork unwinds must have been caught"
+    );
+    server.ping(RESOLVE).unwrap();
+    let g = server.cache_gauges();
+    assert_eq!(g.pages_in_use, 0, "pages leaked: {:?}", g.per_session);
+    assert_eq!(
+        g.pages_in_use + g.pages_free,
+        (g.pool_allocs - g.pool_reuses) as usize,
+        "frame conservation violated"
+    );
+    server.shutdown();
+    assert_eq!(ESCAPED_PANICS.load(Ordering::Relaxed), 0);
+}
