@@ -99,6 +99,30 @@ pub(crate) fn causal_parts_view(
     p11.concat(p2)
 }
 
+/// Self-attention triple of one prefill chunk — the heavy-entry block
+/// primitive of the chunk-appendable prefill path
+/// (`AttentionOp::prefill` over a non-empty cache): the chunk's own
+/// causal triangle runs the Algorithm 4 recursion when the chunk is
+/// long enough (`rows ≥ hyper_min`, the `AutoPolicy::hyper_threshold`)
+/// to amortize the estimator's constant factor, and the exact streaming
+/// kernel otherwise.  Either way the result is an un-normalized
+/// [`Parts`] triple, so the caller can merge it exactly with the
+/// disjoint-key estimator triple over the cached prefix.
+pub(crate) fn chunk_self_parts(
+    q: MatRef<'_>,
+    k: MatRef<'_>,
+    v: MatRef<'_>,
+    p: &CausalParams,
+    hyper_min: usize,
+    rng: &mut Rng,
+) -> Parts {
+    if q.rows >= hyper_min {
+        causal_parts_view(q, k, v, p, rng)
+    } else {
+        exact::flash_parts_view(q, k, v, true, p.hyper.scale, p.flash_block)
+    }
+}
+
 /// The recorded causal recursion: everything the backward pass needs to
 /// replay the identical estimator without recomputing a forward.
 pub(crate) enum CausalPlan {

@@ -268,6 +268,14 @@ pub(crate) fn flash_row_segment(
 /// the saved per-row (max, denom) statistics; never materializes the
 /// full n×n matrix.  `delta_i = dout_i · out_i` is the softmax-Jacobian
 /// correction term.
+///
+/// Tile-blocked like the forward: per (query-tile × key-tile) pair, the
+/// logit and `dout·Vᵀ` panels come from two [`kernel::gemm_nt`] calls,
+/// the p/dl tiles are elementwise, and every gradient row accumulates
+/// through [`kernel::gemm_nn_row`] panel products — no per-row dot
+/// loops.  dq parallelizes over query tiles, dk/dv over key tiles (each
+/// tile owns a disjoint output row range); causal tiles below/above the
+/// diagonal are skipped wholesale.
 pub(crate) fn flash_backward_with_parts_view(
     q: MatRef<'_>,
     k: MatRef<'_>,
@@ -279,6 +287,7 @@ pub(crate) fn flash_backward_with_parts_view(
 ) -> (Mat, Mat, Mat) {
     let (n, d) = (q.rows, q.cols);
     let nk = k.rows;
+    let dvc = v.cols;
     let sc = softmax_scale(d, scale);
     let out = parts.finalize();
     let delta: Vec<f32> = (0..n).map(|i| dot(dout.row(i), out.row(i))).collect();
@@ -287,41 +296,102 @@ pub(crate) fn flash_backward_with_parts_view(
         .map(|i| parts.m[i] + parts.s[i].max(1e-30).ln())
         .collect();
 
-    // dq: parallel over query rows (each row's gradient is independent).
+    const BLK: usize = 64;
+
+    // dq: parallel over query tiles; each tile streams key tiles.
     let mut dq = Mat::zeros(n, d);
-    par::par_rows(&mut dq.data, d, |i, dqr| {
-        let qi = q.row(i);
-        let lim = if causal { (i + 1).min(nk) } else { nk };
-        for j in 0..lim {
-            let p = (dot(qi, k.row(j)) * sc - lse[i]).exp();
-            let dl = p * (dot(dout.row(i), v.row(j)) - delta[i]) * sc;
-            for (o, &kv) in dqr.iter_mut().zip(k.row(j)) {
-                *o += dl * kv;
+    par::par_row_blocks(&mut dq.data, d, BLK, |i0, dq_block| {
+        let i1 = (i0 + BLK).min(n);
+        let rows = i1 - i0;
+        let mut logits = vec![0.0f32; rows * BLK];
+        let mut dov = vec![0.0f32; rows * BLK];
+        for j0 in (0..nk).step_by(BLK) {
+            if causal && j0 > i1 - 1 {
+                break; // tile fully above the diagonal: skip
+            }
+            let j1 = (j0 + BLK).min(nk);
+            let jt = j1 - j0;
+            kernel::gemm_nt(rows, jt, d, &q.data[i0 * d..], d, &k.data[j0 * d..], d, &mut logits, jt);
+            kernel::gemm_nt(
+                rows, jt, dvc, &dout.data[i0 * dvc..], dvc, &v.data[j0 * dvc..], dvc, &mut dov, jt,
+            );
+            for ti in 0..rows {
+                let i = i0 + ti;
+                let jlim = if causal { j1.min(i + 1) } else { j1 };
+                let cnt = jlim.saturating_sub(j0);
+                if cnt == 0 {
+                    continue;
+                }
+                // dl row in place over the live (causal row-prefix) span
+                let lrow = &mut logits[ti * jt..ti * jt + cnt];
+                let dorow = &dov[ti * jt..ti * jt + cnt];
+                for (l, &dov_ij) in lrow.iter_mut().zip(dorow) {
+                    let p = (*l * sc - lse[i]).exp();
+                    *l = p * (dov_ij - delta[i]) * sc;
+                }
+                kernel::gemm_nn_row(lrow, &k.data[j0 * d..], d, &mut dq_block[ti * d..(ti + 1) * d]);
             }
         }
     });
 
-    // dk, dv: parallel over key rows (each key row's grads independent).
+    // dk, dv: parallel over key tiles; each tile streams query tiles
+    // from its causal start, transposing the p/dl tiles once so every
+    // key row's gradient is a panel product over the query tile.
     let mut dk = Mat::zeros(nk, d);
-    let mut dv = Mat::zeros(nk, v.cols);
+    let mut dv = Mat::zeros(nk, dvc);
     let dk_ptr = dk.data.as_mut_ptr() as usize;
     let dv_ptr = dv.data.as_mut_ptr() as usize;
-    let dvc = v.cols;
-    par::par_for(nk, |j| {
-        // SAFETY: each iteration writes only key-row j.
-        let dkr = unsafe { std::slice::from_raw_parts_mut((dk_ptr as *mut f32).add(j * d), d) };
-        let dvr =
-            unsafe { std::slice::from_raw_parts_mut((dv_ptr as *mut f32).add(j * dvc), dvc) };
-        let kj = k.row(j);
-        let start = if causal { j } else { 0 };
-        for i in start..n {
-            let p = (dot(q.row(i), kj) * sc - lse[i]).exp();
-            for (o, &dvv) in dvr.iter_mut().zip(dout.row(i)) {
-                *o += p * dvv;
+    let ktiles: Vec<usize> = (0..nk).step_by(BLK).collect();
+    par::par_for(ktiles.len(), |t| {
+        let j0 = ktiles[t];
+        let j1 = (j0 + BLK).min(nk);
+        let jt = j1 - j0;
+        // SAFETY: key tiles are disjoint row ranges of dk/dv.
+        let dk_tile =
+            unsafe { std::slice::from_raw_parts_mut((dk_ptr as *mut f32).add(j0 * d), jt * d) };
+        let dv_tile = unsafe {
+            std::slice::from_raw_parts_mut((dv_ptr as *mut f32).add(j0 * dvc), jt * dvc)
+        };
+        let mut logits = vec![0.0f32; BLK * jt];
+        let mut dov = vec![0.0f32; BLK * jt];
+        let mut p_t = vec![0.0f32; jt * BLK];
+        let mut dl_t = vec![0.0f32; jt * BLK];
+        let start = if causal { j0 } else { 0 };
+        for i0 in (start..n).step_by(BLK) {
+            let i1 = (i0 + BLK).min(n);
+            let it = i1 - i0;
+            kernel::gemm_nt(it, jt, d, &q.data[i0 * d..], d, &k.data[j0 * d..], d, &mut logits, jt);
+            kernel::gemm_nt(
+                it, jt, dvc, &dout.data[i0 * dvc..], dvc, &v.data[j0 * dvc..], dvc, &mut dov, jt,
+            );
+            for ti in 0..it {
+                let i = i0 + ti;
+                let jlim = if causal { j1.min(i + 1) } else { j1 };
+                let cnt = jlim.saturating_sub(j0);
+                for tj in 0..jt {
+                    let (pv, dlv) = if tj < cnt {
+                        let p = (logits[ti * jt + tj] * sc - lse[i]).exp();
+                        (p, p * (dov[ti * jt + tj] - delta[i]) * sc)
+                    } else {
+                        (0.0, 0.0) // causally masked: contributes nothing
+                    };
+                    p_t[tj * it + ti] = pv;
+                    dl_t[tj * it + ti] = dlv;
+                }
             }
-            let dl = p * (dot(dout.row(i), v.row(j)) - delta[i]) * sc;
-            for (o, &qv) in dkr.iter_mut().zip(q.row(i)) {
-                *o += dl * qv;
+            for tj in 0..jt {
+                kernel::gemm_nn_row(
+                    &p_t[tj * it..(tj + 1) * it],
+                    &dout.data[i0 * dvc..],
+                    dvc,
+                    &mut dv_tile[tj * dvc..(tj + 1) * dvc],
+                );
+                kernel::gemm_nn_row(
+                    &dl_t[tj * it..(tj + 1) * it],
+                    &q.data[i0 * d..],
+                    d,
+                    &mut dk_tile[tj * d..(tj + 1) * d],
+                );
             }
         }
     });

@@ -299,6 +299,12 @@ pub(crate) fn hyper_parts_with_plan_view(
 /// weight), so `∂L/∂l_ij = p̃_ij · (dout_i · (v_j − O_i))` with p̃ the
 /// normalized weights — same structure as exact attention restricted to
 /// the touched entries.  Cost matches the forward: Θ(n(b+m)d).
+///
+/// Tile-blocked like the forward: the block-diagonal part runs one
+/// gathered-panel GEMM pair per sorted block (blocks own disjoint
+/// gradient rows, so they parallelize), the sampled part one GEMM pair
+/// per query panel, and every gradient row accumulates through
+/// [`kernel::gemm_nn_row`] panel products — no per-row dot loops.
 pub(crate) fn hyper_backward_with_parts_view(
     q: MatRef<'_>,
     k: MatRef<'_>,
@@ -332,86 +338,137 @@ pub(crate) fn hyper_backward_with_parts_view(
         .map(|g| samp_block.iter().filter(|&&b| b != g).count())
         .collect();
 
-    // dq is row-parallel; dk/dv accumulate per key, so serialize those
-    // (hyper backward is cheap enough; the op layer parallelizes across
-    // heads).  key lists per sorted block, in original indices
-    let mut block_keys: Vec<Vec<usize>> = vec![Vec::with_capacity(block); nb];
-    for j in 0..n {
-        block_keys[plan.pos_k[j] / block].push(j);
-    }
-
-    par::par_rows(&mut dq.data, d, |i, dqr| {
-        let qi = q.row(i);
-        let gq = plan.pos_q[i] / block;
-        // block-diagonal keys (weight 1)
-        for &j in &block_keys[gq] {
-            let p_ij = (dot(qi, k.row(j)) * sc - lse[i]).exp();
-            let dl = p_ij * (dot(dout.row(i), v.row(j)) - delta[i]) * sc;
-            for (o, &kv) in dqr.iter_mut().zip(k.row(j)) {
-                *o += dl * kv;
+    // ---- block-diagonal part: gathered panels, one GEMM pair per block.
+    // Each query and key belongs to exactly one sorted block, so blocks
+    // own disjoint dq/dk/dv rows and parallelize cleanly.
+    let qs = q.gather_rows(&plan.perm_q);
+    let ks = k.gather_rows(&plan.perm_k);
+    let vs = v.gather_rows(&plan.perm_k);
+    let dos = dout.gather_rows(&plan.perm_q);
+    let dq_ptr = dq.data.as_mut_ptr() as usize;
+    let dk_ptr = dk.data.as_mut_ptr() as usize;
+    let dv_ptr = dvm.data.as_mut_ptr() as usize;
+    par::par_for(nb, |g| {
+        let lo = g * block;
+        let mut logits = vec![0.0f32; block * block];
+        let mut dov = vec![0.0f32; block * block];
+        // logits = Qg·Kgᵀ and dout·Vᵀ tiles in two panel GEMMs
+        kernel::gemm_nt(
+            block, block, d, &qs.data[lo * d..], d, &ks.data[lo * d..], d, &mut logits, block,
+        );
+        kernel::gemm_nt(
+            block, block, dv, &dos.data[lo * dv..], dv, &vs.data[lo * dv..], dv, &mut dov, block,
+        );
+        // p/dl tiles: dl in place over logits (row-major, for dq) plus
+        // transposed p/dl copies (for the per-key panel products)
+        let mut p_t = vec![0.0f32; block * block];
+        let mut dl_t = vec![0.0f32; block * block];
+        for ti in 0..block {
+            let i = plan.perm_q[lo + ti];
+            for tj in 0..block {
+                let p_ij = (logits[ti * block + tj] * sc - lse[i]).exp();
+                let dl = p_ij * (dov[ti * block + tj] - delta[i]) * sc;
+                logits[ti * block + tj] = dl;
+                p_t[tj * block + ti] = p_ij;
+                dl_t[tj * block + ti] = dl;
             }
         }
-        // sampled keys
-        if m > 0 {
-            let uniform_scale = (n - block) as f32 / kept_per_block[gq].max(1) as f32;
-            for t in 0..m {
-                if samp_block[t] == gq {
-                    continue;
-                }
-                let j = plan.sample_idx[t];
-                let w = match plan.mode {
-                    SampleMode::Uniform => uniform_scale,
-                    SampleMode::VNorm => plan.sample_w[t],
-                };
-                let p_ij = w * (dot(qi, k.row(j)) * sc - lse[i]).exp();
-                let dl = p_ij * (dot(dout.row(i), v.row(j)) - delta[i]) * sc;
-                for (o, &kv) in dqr.iter_mut().zip(k.row(j)) {
-                    *o += dl * kv;
-                }
-            }
+        for ti in 0..block {
+            let i = plan.perm_q[lo + ti];
+            // SAFETY: query row i belongs to this block only.
+            let dqr = unsafe {
+                std::slice::from_raw_parts_mut((dq_ptr as *mut f32).add(i * d), d)
+            };
+            kernel::gemm_nn_row(&logits[ti * block..(ti + 1) * block], &ks.data[lo * d..], d, dqr);
+        }
+        for tj in 0..block {
+            let j = plan.perm_k[lo + tj];
+            // SAFETY: key row j belongs to this block only.
+            let dkr = unsafe {
+                std::slice::from_raw_parts_mut((dk_ptr as *mut f32).add(j * d), d)
+            };
+            let dvr = unsafe {
+                std::slice::from_raw_parts_mut((dv_ptr as *mut f32).add(j * dv), dv)
+            };
+            kernel::gemm_nn_row(&p_t[tj * block..(tj + 1) * block], &dos.data[lo * dv..], dv, dvr);
+            kernel::gemm_nn_row(&dl_t[tj * block..(tj + 1) * block], &qs.data[lo * d..], d, dkr);
         }
     });
 
-    // dk/dv: sequential accumulation over the same sparse support.
-    for g in 0..nb {
-        let keys = &block_keys[g];
-        for i in 0..n {
-            if plan.pos_q[i] / block != g {
-                continue;
-            }
-            let qi = q.row(i);
-            for &j in keys {
-                let p_ij = (dot(qi, k.row(j)) * sc - lse[i]).exp();
-                let dl = p_ij * (dot(dout.row(i), v.row(j)) - delta[i]) * sc;
-                for (o, &qv) in dk.row_mut(j).iter_mut().zip(qi) {
-                    *o += dl * qv;
-                }
-                for (o, &dov) in dvm.row_mut(j).iter_mut().zip(dout.row(i)) {
-                    *o += p_ij * dov;
-                }
-            }
-        }
-    }
-    for t in 0..m {
-        let j = plan.sample_idx[t];
-        for i in 0..n {
+    // ---- sampled residual part over the gathered sample panels.
+    if m > 0 {
+        let ksamp = k.gather_rows(&plan.sample_idx);
+        let vsamp = v.gather_rows(&plan.sample_idx);
+        let row_weight = |i: usize, t: usize| -> f32 {
             let gq = plan.pos_q[i] / block;
             if samp_block[t] == gq {
-                continue;
+                return 0.0; // in-block samples are masked in the forward
             }
-            let w = match plan.mode {
-                SampleMode::Uniform => {
-                    (n - block) as f32 / kept_per_block[gq].max(1) as f32
-                }
+            match plan.mode {
+                SampleMode::Uniform => (n - block) as f32 / kept_per_block[gq].max(1) as f32,
                 SampleMode::VNorm => plan.sample_w[t],
-            };
-            let p_ij = w * (dot(q.row(i), k.row(j)) * sc - lse[i]).exp();
-            let dl = p_ij * (dot(dout.row(i), v.row(j)) - delta[i]) * sc;
-            for (o, &qv) in dk.row_mut(j).iter_mut().zip(q.row(i)) {
-                *o += dl * qv;
             }
-            for (o, &dov) in dvm.row_mut(j).iter_mut().zip(dout.row(i)) {
-                *o += p_ij * dov;
+        };
+        const PANEL: usize = 64;
+        // dq: parallel over query panels, dl row × gathered key panel.
+        par::par_row_blocks(&mut dq.data, d, PANEL, |i0, dq_block| {
+            let i1 = (i0 + PANEL).min(n);
+            let rows = i1 - i0;
+            let mut logits = vec![0.0f32; rows * m];
+            let mut dov = vec![0.0f32; rows * m];
+            kernel::gemm_nt(rows, m, d, &q.data[i0 * d..], d, &ksamp.data, d, &mut logits, m);
+            kernel::gemm_nt(
+                rows, m, dv, &dout.data[i0 * dv..], dv, &vsamp.data, dv, &mut dov, m,
+            );
+            for ti in 0..rows {
+                let i = i0 + ti;
+                let lrow = &mut logits[ti * m..(ti + 1) * m];
+                for (t, l) in lrow.iter_mut().enumerate() {
+                    let w = row_weight(i, t);
+                    let p_ij = w * (*l * sc - lse[i]).exp();
+                    *l = p_ij * (dov[ti * m + t] - delta[i]) * sc;
+                }
+                kernel::gemm_nn_row(lrow, &ksamp.data, d, &mut dq_block[ti * d..(ti + 1) * d]);
+            }
+        });
+        // dk/dv: serial over samples (sample_idx draws with replacement,
+        // so duplicate targets forbid a parallel scatter), but each
+        // panel's p/dl tiles come from the same two GEMMs and each
+        // sample row accumulates through panel products.
+        let mut logits = vec![0.0f32; PANEL * m];
+        let mut dov = vec![0.0f32; PANEL * m];
+        let mut p_t = vec![0.0f32; m * PANEL];
+        let mut dl_t = vec![0.0f32; m * PANEL];
+        for i0 in (0..n).step_by(PANEL) {
+            let i1 = (i0 + PANEL).min(n);
+            let rows = i1 - i0;
+            kernel::gemm_nt(rows, m, d, &q.data[i0 * d..], d, &ksamp.data, d, &mut logits, m);
+            kernel::gemm_nt(
+                rows, m, dv, &dout.data[i0 * dv..], dv, &vsamp.data, dv, &mut dov, m,
+            );
+            for ti in 0..rows {
+                let i = i0 + ti;
+                for t in 0..m {
+                    let w = row_weight(i, t);
+                    let p_ij = w * (logits[ti * m + t] * sc - lse[i]).exp();
+                    p_t[t * rows + ti] = p_ij;
+                    dl_t[t * rows + ti] = p_ij * (dov[ti * m + t] - delta[i]) * sc;
+                }
+            }
+            for t in 0..m {
+                let j = plan.sample_idx[t];
+                kernel::gemm_nn_row(
+                    &p_t[t * rows..(t + 1) * rows],
+                    &dout.data[i0 * dv..],
+                    dv,
+                    dvm.row_mut(j),
+                );
+                kernel::gemm_nn_row(
+                    &dl_t[t * rows..(t + 1) * rows],
+                    &q.data[i0 * d..],
+                    d,
+                    dk.row_mut(j),
+                );
             }
         }
     }

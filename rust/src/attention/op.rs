@@ -57,7 +57,7 @@ use super::hyper::{self, HyperParams, HyperPlan, SampleMode};
 use super::{softmax_scale, Parts, NEG_INF};
 use crate::kernel;
 use crate::linalg::{self, KvCache, Mat, MatRef, PagePool, QkvView, DEFAULT_PAGE_ROWS};
-use crate::lsh::Lsh;
+use crate::lsh::{BucketOrder, Lsh};
 use crate::par;
 use crate::rng::Rng;
 
@@ -157,6 +157,23 @@ pub fn fit_block(n: usize, target: usize) -> usize {
 /// `decode_resample_interval` rows past it.  (The divisor-block guard
 /// does not apply to decode: the bucket window is a free-size window,
 /// not an equal-block partition, so prime cache lengths are fine.)
+///
+/// **Chunked prefill** (the [`AttentionOp::prefill`] non-empty-cache
+/// policy):
+///
+/// | condition                                       | prefill path      |
+/// |-------------------------------------------------|-------------------|
+/// | exact family, or total < prefill threshold      | exact streaming   |
+/// | hyper family + causal + `Full` cache + total ≥  | chunked estimator |
+///
+/// The chunked estimator attends the cached prefix through the same
+/// appendable bucket/sample state decode uses (near-linear per chunk)
+/// and the chunk's own causal triangle through the Algorithm 4 / flash
+/// block primitive; the chunk's keys then join the bucket order
+/// incrementally (`HeadSampler::append`), so an `n`-row ingest in `c`-row
+/// chunks costs `O(n·(b+m)·d)` estimator work instead of the exact
+/// pass's `O(n²·d)`.  Non-causal, exact-family, and windowed caches keep
+/// the exact streaming pass (a window already bounds resident work).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct AutoPolicy {
     /// jobs with n >= this use the HyperAttention family
@@ -171,6 +188,10 @@ pub struct AutoPolicy {
     /// many rows past the last build; in between, appended rows join
     /// the exactly-attended recent window
     pub decode_resample_interval: usize,
+    /// chunked prefill over a non-empty `Full` cache switches from the
+    /// exact streaming pass to the chunk-appendable estimator once the
+    /// total sequence (cache + chunk) reaches this length
+    pub prefill_hyper_threshold: usize,
 }
 
 impl Default for AutoPolicy {
@@ -180,6 +201,7 @@ impl Default for AutoPolicy {
             min_block: 8,
             decode_hyper_threshold: 8192,
             decode_resample_interval: 256,
+            prefill_hyper_threshold: 8192,
         }
     }
 }
@@ -384,11 +406,10 @@ impl AttnGrads {
 /// (`remap_samplers_after_eviction`) rather than rebuilt.
 pub(crate) struct HeadSampler {
     lsh: Lsh,
-    /// prefix key indices sorted by bucket id
-    sorted_idx: Vec<usize>,
-    /// bucket id of `sorted_idx[p]` (ascending)
-    sorted_bucket: Vec<u32>,
-    /// sampled residual key indices (uniform over the prefix)
+    /// Hamming-sorted bucket order over the covered prefix — the
+    /// chunk-appendable state ([`BucketOrder`])
+    order: BucketOrder,
+    /// sampled residual key indices (i.i.d. uniform over the prefix)
     sample_idx: Vec<usize>,
     /// position of each sample in the sorted bucket order (for the
     /// per-query window-overlap mask)
@@ -400,16 +421,52 @@ impl HeadSampler {
         let n = k_prefix.rows;
         let lsh = Lsh::new(k_prefix.cols, lsh_bits, rng);
         let buckets = lsh.buckets(k_prefix);
-        let sorted_idx = linalg::argsort(&buckets);
-        let sorted_bucket: Vec<u32> = sorted_idx.iter().map(|&i| buckets[i]).collect();
+        let order = BucketOrder::build(&buckets);
         let mut pos = vec![0usize; n];
-        for (p, &i) in sorted_idx.iter().enumerate() {
+        for (p, &i) in order.sorted_idx.iter().enumerate() {
             pos[i] = p;
         }
         let m = samples.min(n);
         let sample_idx = if m == 0 { Vec::new() } else { rng.sample_uniform(n, m) };
         let sample_pos = sample_idx.iter().map(|&j| pos[j]).collect();
-        HeadSampler { lsh, sorted_idx, sorted_bucket, sample_idx, sample_pos }
+        HeadSampler { lsh, order, sample_idx, sample_pos }
+    }
+
+    /// Extend the state with a chunk of newly appended keys — the
+    /// chunk-appendable half of the near-linear prefill path.  The
+    /// chunk's keys (resident indices `first_idx..first_idx + c`) are
+    /// hashed through the *existing* hyperplanes and stable-merged into
+    /// the bucket order in O(built + c) ([`BucketOrder::append`]); the
+    /// residual sample set is re-uniformized over the grown prefix
+    /// (each slot is an i.i.d. uniform index, so per slot: with
+    /// probability c/(built+c) it redraws into the chunk — the
+    /// ratio-rescale extension), and the sample → sorted-position map is
+    /// recomputed.  No LSH rebuild, no re-sort, no re-gather of the old
+    /// prefix's keys.
+    fn append(&mut self, new_keys: MatRef<'_>, first_idx: usize, samples: usize, rng: &mut Rng) {
+        let c = new_keys.rows;
+        if c == 0 {
+            return;
+        }
+        debug_assert_eq!(first_idx, self.order.len(), "chunk must extend the covered prefix");
+        let buckets: Vec<u32> = (0..c).map(|i| self.lsh.bucket(new_keys.row(i))).collect();
+        self.order.append(first_idx, &buckets);
+        let n = self.order.len();
+        for slot in self.sample_idx.iter_mut() {
+            let j = rng.below(n);
+            if j >= first_idx {
+                *slot = j;
+            }
+        }
+        let m = samples.min(n);
+        while self.sample_idx.len() < m {
+            self.sample_idx.push(rng.below(n));
+        }
+        let mut pos = vec![0usize; n];
+        for (p, &i) in self.order.sorted_idx.iter().enumerate() {
+            pos[i] = p;
+        }
+        self.sample_pos = self.sample_idx.iter().map(|&j| pos[j]).collect();
     }
 }
 
@@ -442,12 +499,12 @@ fn remap_samplers_after_eviction(
     let dropped = evicted.min(built_len.saturating_sub(sink_res));
     let new_built = *built_len - dropped;
     for s in samplers {
-        let mut sorted_idx = Vec::with_capacity(s.sorted_idx.len());
-        let mut sorted_bucket = Vec::with_capacity(s.sorted_bucket.len());
-        for (p, &r) in s.sorted_idx.iter().enumerate() {
+        let mut sorted_idx = Vec::with_capacity(s.order.sorted_idx.len());
+        let mut sorted_bucket = Vec::with_capacity(s.order.sorted_bucket.len());
+        for (p, &r) in s.order.sorted_idx.iter().enumerate() {
             if let Some(nr) = map(r) {
                 sorted_idx.push(nr);
-                sorted_bucket.push(s.sorted_bucket[p]);
+                sorted_bucket.push(s.order.sorted_bucket[p]);
             }
         }
         let mut pos = vec![0usize; new_built];
@@ -456,8 +513,7 @@ fn remap_samplers_after_eviction(
         }
         let sample_idx: Vec<usize> = s.sample_idx.iter().filter_map(|&r| map(r)).collect();
         let sample_pos: Vec<usize> = sample_idx.iter().map(|&r| pos[r]).collect();
-        s.sorted_idx = sorted_idx;
-        s.sorted_bucket = sorted_bucket;
+        s.order = BucketOrder { sorted_idx, sorted_bucket };
         s.sample_idx = sample_idx;
         s.sample_pos = sample_pos;
     }
@@ -731,24 +787,31 @@ pub struct DecodeLane<'a, 'b> {
     pub x: QkvView<'b>,
 }
 
-/// One sampled decode row: exact over the bucket window and the recent
-/// rows, ratio-estimated over the sampled residual.  Keys and values
-/// are read from the paged cache by **resident-row** index (the
-/// pre-scaled plane, so logits need no further scaling); `built` is the
-/// resident prefix the sampler covers; resident rows `built..` are the
-/// recent rows (always including the token itself).  The sampler is
-/// guaranteed eviction-consistent by the caller (its indices are
-/// remapped in place whenever the cache epoch moves), so no index here
-/// can reference a freed page.
-fn decode_row_sampled(
+/// The sampled-estimator streaming-softmax triple of one query row over
+/// resident cache rows `[0, limit)`: exact over the bucket window and
+/// the recent rows `[built, limit)`, ratio-estimated over the sampled
+/// residual.  Returns the **un-normalized** `(m, s, num)` triple so the
+/// caller can merge it with other disjoint-key parts (the chunked
+/// prefill path merges it with the chunk's own causal triangle) before
+/// finalizing.  Decode calls it with `limit = resident_len` (the recent
+/// tail always contains the token itself); chunked prefill with
+/// `limit = built` (the prefix only — the chunk's rows are the
+/// self-block's job).
+///
+/// Keys and values are read from the paged cache by **resident-row**
+/// index (the pre-scaled plane, so logits need no further scaling).
+/// The sampler is guaranteed eviction-consistent by the caller (its
+/// indices are remapped in place whenever the cache epoch moves), so no
+/// index here can reference a freed page.
+fn sampled_row_parts(
     qrow: &[f32],
     kv: &KvCache,
     head: usize,
     s: &HeadSampler,
     built: usize,
+    limit: usize,
     block_target: usize,
-) -> Vec<f32> {
-    let len = kv.resident_len();
+) -> (f32, f32, Vec<f32>) {
     let d = kv.d();
     let w = block_target.min(built);
     // window of sorted positions centred on the query's bucket
@@ -756,16 +819,16 @@ fn decode_row_sampled(
         (0, 0)
     } else {
         let b = s.lsh.bucket(qrow);
-        let p = s.sorted_bucket.partition_point(|&x| x < b);
+        let p = s.order.sorted_bucket.partition_point(|&x| x < b);
         let mut lo = p.saturating_sub(w / 2);
         if lo + w > built {
             lo = built - w;
         }
         (lo, lo + w)
     };
-    // exact candidates: bucket window + recent tail (contains self)
-    let mut idx: Vec<usize> = s.sorted_idx[lo..hi].to_vec();
-    idx.extend(built..len);
+    // exact candidates: bucket window + recent tail
+    let mut idx: Vec<usize> = s.order.sorted_idx[lo..hi].to_vec();
+    idx.extend(built..limit);
     let n_exact = idx.len();
     // residual samples that fall outside the window
     let mut kept = 0usize;
@@ -783,7 +846,7 @@ fn decode_row_sampled(
     for (t, &j) in idx.iter().enumerate() {
         logits[t] = linalg::dot(qrow, kv.key_row_scaled(head, j));
     }
-    let mx = kernel::hmax(&logits);
+    let mx = if logits.is_empty() { NEG_INF } else { kernel::hmax(&logits) };
     let mut num = vec![0.0f32; d];
     let mut den = 0.0f32;
     for (t, &j) in idx.iter().enumerate() {
@@ -795,6 +858,21 @@ fn decode_row_sampled(
         den += p;
         kernel::axpy(p, kv.value_row(head, j), &mut num);
     }
+    (mx, den, num)
+}
+
+/// One sampled decode row (see [`sampled_row_parts`]): the triple over
+/// the whole resident cache, normalized.
+fn decode_row_sampled(
+    qrow: &[f32],
+    kv: &KvCache,
+    head: usize,
+    s: &HeadSampler,
+    built: usize,
+    block_target: usize,
+) -> Vec<f32> {
+    let len = kv.resident_len();
+    let (_, den, mut num) = sampled_row_parts(qrow, kv, head, s, built, len, block_target);
     kernel::scale(&mut num, 1.0 / den.max(1e-30));
     num
 }
@@ -955,13 +1033,25 @@ impl AttentionOp {
     ///   estimators — bitwise for the hyper family, to f32 rounding for
     ///   the streaming exact path).
     /// * On a **non-empty** cache (chunked prefill, follow-up turns) the
-    ///   new queries run the exact streaming pass over the shared
-    ///   pre-scaled cache pages at causal offset `prior_len` (absolute
-    ///   positions, so a sliding-window cache masks correctly; queries
-    ///   attend the *resident* prefix); the hyper-family estimators
-    ///   degrade to this exact pass here — their plans are
-    ///   whole-sequence constructs, and the incremental sampling state
-    ///   belongs to [`AttentionOp::decode_step`].
+    ///   routing follows the chunked-prefill row of the [`AutoPolicy`]
+    ///   table.  Hyper-family causal ops over a [`CachePolicy::Full`]
+    ///   cache whose total length has reached
+    ///   [`AutoPolicy::prefill_hyper_threshold`] run the
+    ///   **chunk-appendable estimator**: the chunk's queries attend the
+    ///   cached prefix through the same per-head bucket/sample state
+    ///   sampled decode uses ([`sampled_row_parts`] — `O((b+m)·d)` per
+    ///   row instead of `O(prior·d)`), the chunk's own causal triangle
+    ///   runs the Algorithm 4 / flash block primitive, and the two
+    ///   disjoint-key triples merge exactly.  The chunk's keys then
+    ///   join the bucket order incrementally
+    ///   (`HeadSampler::append` — no re-sort, no rebuild), so the state
+    ///   carries into the next chunk and into sampled decode.
+    ///   Everything else — exact-family ops, non-causal ops, windowed
+    ///   caches (a window already bounds the resident prefix), or
+    ///   totals below the threshold — runs the exact streaming pass
+    ///   over the shared pre-scaled cache pages at causal offset
+    ///   `prior_len` (absolute positions, so a sliding-window cache
+    ///   masks correctly; queries attend the *resident* prefix).
     ///
     /// The returned session carries no backward state (`backward` on it
     /// errors, as with `infer`).
@@ -997,16 +1087,33 @@ impl AttentionOp {
                 }
             }
         }
+        // Chunked-prefill routing (the AutoPolicy chunked-prefill row):
+        // the appendable estimator needs a stable resident prefix (Full
+        // policy — no eviction can move its indices mid-ingest), a
+        // causal hyper-family op, and a total worth the estimator's
+        // constant factor.
+        let total = prior + x.n;
+        let chunked_est = prior > 0
+            && self.cfg.causal
+            && matches!(cache.policy, CachePolicy::Full)
+            && self.hyper_family(total)
+            && total >= self.cfg.auto.prefill_hyper_threshold;
         cache.kv.append(&x)?;
         cache.kv.sync_scaled(softmax_scale(x.d, self.cfg.scale))?;
-        // decode sampling state is stale after any prefill; it is
-        // rebuilt lazily by the next sampled decode step
-        cache.samplers = None;
+        if !chunked_est {
+            // decode sampling state is stale after an exact prefill; it
+            // is rebuilt lazily by the next sampled decode step (the
+            // chunked-estimator path instead *extends* it in place)
+            cache.samplers = None;
+        }
         if prior == 0 {
             // the chunk's own forward always sees the whole chunk (the
             // window policy governs what is *retained*, not what the
             // prompt's one-shot estimator computes over)
             return Ok(self.run(x, false));
+        }
+        if chunked_est {
+            return self.prefill_chunk_estimated(cache, &x, prior);
         }
         let (h, n, d) = (x.heads, x.n, x.d);
         let causal = self.cfg.causal;
@@ -1027,6 +1134,117 @@ impl AttentionOp {
             d,
             out,
             backend: Backend::Flash,
+            cfg: self.cfg,
+            state: Vec::new(),
+        })
+    }
+
+    /// The chunk-appendable causal-hyper prefill over a non-empty
+    /// `Full` cache (see [`AttentionOp::prefill`]): per head, the
+    /// chunk's queries attend the cached `prior`-row prefix through the
+    /// appendable bucket/sample estimator and their own chunk through
+    /// the causal block primitive, the two disjoint-key triples merge
+    /// exactly, and the chunk's keys join the bucket state.  The cost
+    /// per chunk row is `O((b + m)·d)` estimator work plus the chunk's
+    /// own near-linear triangle — independent of `prior`, where the
+    /// exact streaming pass pays `O(prior·d)` per row.
+    fn prefill_chunk_estimated(
+        &self,
+        cache: &mut AttnCache,
+        x: &QkvView<'_>,
+        prior: usize,
+    ) -> Result<AttnOutput, String> {
+        let (h, c, d) = (x.heads, x.n, x.d);
+        let cfg = &self.cfg;
+        let total = prior + c;
+        // (a) ensure the per-head samplers cover exactly the resident
+        // prefix [0, prior): build fresh when absent or inconsistent
+        // (epoch moved, or a clear/rebuild left them over-covering),
+        // extend incrementally when a previous decode run left them
+        // covering a shorter prefix.
+        let stale = match &cache.samplers {
+            None => true,
+            Some(s) => {
+                cache.built_epoch != cache.kv.epoch()
+                    || cache.built_len > prior
+                    || s.len() != h
+            }
+        };
+        if stale {
+            let kv = &cache.kv;
+            let samplers: Vec<HeadSampler> = par::par_map(h, |head| {
+                let mut rng = cfg.seed.rng_for_head(head).fork(prior as u64);
+                let kp = kv.gather_head_k_prefix(head, prior);
+                HeadSampler::build(kp.view(), cfg.lsh_bits, cfg.samples, &mut rng)
+            });
+            cache.samplers = Some(samplers);
+            cache.built_len = prior;
+            cache.resamples += 1;
+        } else if cache.built_len < prior {
+            // rows appended since the last build (decode tokens, or a
+            // shorter earlier chunk) join the order incrementally
+            let built = cache.built_len;
+            let kv = &cache.kv;
+            let samplers = cache.samplers.as_mut().expect("Some in this branch");
+            for (head, s) in samplers.iter_mut().enumerate() {
+                let mut rng = cfg.seed.rng_for_head(head).fork(prior as u64).fork(7);
+                let kp = kv.gather_head_k_prefix(head, prior);
+                s.append(kp.view().slice_rows(built, prior), built, cfg.samples, &mut rng);
+            }
+            cache.built_len = prior;
+        }
+        cache.built_epoch = cache.kv.epoch();
+        cache.built_evicted = cache.kv.evicted_rows();
+
+        // (b) + (c): estimator over the prefix, causal triangle over
+        // the chunk itself, merged per row.  Heads run serially with
+        // row-parallel estimator work inside (so single-head serving
+        // shapes still fill the machine); the block primitive
+        // parallelizes internally.
+        let cp = self.causal_params(c);
+        let hyper_min = cfg.auto.hyper_threshold;
+        let block = cfg.block;
+        let samplers = cache.samplers.as_ref().expect("ensured above");
+        let kv = &cache.kv;
+        let per = c * d;
+        let mut out = vec![0.0f32; h * per];
+        for head in 0..h {
+            let s = &samplers[head];
+            let (q, k, v) = x.head(head);
+            let triples: Vec<(f32, f32, Vec<f32>)> = par::par_map(c, |i| {
+                sampled_row_parts(q.row(i), kv, head, s, prior, prior, block)
+            });
+            let mut est = Parts::empty(c, d);
+            for (i, (m, den, num)) in triples.into_iter().enumerate() {
+                est.m[i] = m;
+                est.s[i] = den;
+                est.num.row_mut(i).copy_from_slice(&num);
+            }
+            let mut rng = cfg.seed.rng_for_head(head).fork(total as u64);
+            let mut parts = causal::chunk_self_parts(q, k, v, &cp, hyper_min, &mut rng);
+            parts.merge(&est);
+            let o = parts.finalize();
+            out[head * per..(head + 1) * per].copy_from_slice(&o.data);
+        }
+
+        // (d) the chunk's keys join the appendable bucket state, so the
+        // next chunk — and sampled decode — continue from here
+        let samplers = cache.samplers.as_mut().expect("ensured above");
+        for (head, s) in samplers.iter_mut().enumerate() {
+            let (_, k, _) = x.head(head);
+            let mut rng = cfg.seed.rng_for_head(head).fork(total as u64).fork(11);
+            s.append(k, prior, cfg.samples, &mut rng);
+        }
+        cache.built_len = total;
+        cache.built_epoch = cache.kv.epoch();
+        cache.built_evicted = cache.kv.evicted_rows();
+
+        Ok(AttnOutput {
+            heads: h,
+            n: c,
+            d,
+            out,
+            backend: Backend::CausalHyper,
             cfg: self.cfg,
             state: Vec::new(),
         })
@@ -1953,6 +2171,207 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(max_diff < 1e-5, "chunked causal prefill diff {max_diff}");
+    }
+
+    /// With the bucket window and residual sample covering the whole
+    /// prefix (block, samples >= n) and the chunk triangles below the
+    /// hyper threshold, the chunk-appendable estimator degenerates to
+    /// exact causal attention — the end-to-end pin of its incremental
+    /// bucket/sample/merge bookkeeping across an uneven chunk schedule.
+    #[test]
+    fn chunked_hyper_prefill_exact_when_window_covers_prefix() {
+        let (h, n, d) = (2usize, 96usize, 8usize);
+        let (q, k, v) = clustered_flat(29, h, n, d);
+        let flash = AttnConfig::flash(true).build().unwrap();
+        let full = flash.infer(QkvView::new(h, n, d, &q, &k, &v).unwrap());
+        let op = AttnConfig {
+            backend: Backend::CausalHyper,
+            causal: true,
+            block: n,
+            samples: n,
+            causal_base: 128,
+            seed: SeedPolicy::PerHead(7),
+            auto: AutoPolicy { prefill_hyper_threshold: 1, ..AutoPolicy::default() },
+            ..Default::default()
+        }
+        .build()
+        .unwrap();
+        let mut cache = AttnCache::new(h, d);
+        let mut got = vec![0.0f32; h * n * d];
+        let mut row0 = 0usize;
+        for chunk in [16usize, 1, 31, 48] {
+            let cv = QkvView::strided(
+                h,
+                chunk,
+                d,
+                n * d,
+                &q[row0 * d..],
+                &k[row0 * d..],
+                &v[row0 * d..],
+            )
+            .unwrap();
+            let pre = op.prefill(&mut cache, cv).unwrap();
+            for head in 0..h {
+                let src = pre.head_out(head);
+                for i in 0..chunk {
+                    got[head * n * d + (row0 + i) * d..head * n * d + (row0 + i + 1) * d]
+                        .copy_from_slice(src.row(i));
+                }
+            }
+            row0 += chunk;
+        }
+        assert_eq!(row0, n);
+        // the estimator state was built once and extended in place —
+        // never torn down for a rebuild
+        assert!(cache.samplers.is_some(), "appendable state must persist");
+        assert_eq!(cache.built_len, n);
+        assert_eq!(cache.resamples(), 1, "one build, then appends only");
+        let max_diff = full
+            .out
+            .iter()
+            .zip(&got)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-4, "covering chunked estimator diff {max_diff}");
+    }
+
+    /// Realistic estimator parameters, every chunk shape that has bitten
+    /// before (single row, prime, page-aligned) × both seed policies:
+    /// the chunked estimator stays deterministic per seed and its error
+    /// against the exact oracle stays within the one-shot Algorithm 4
+    /// envelope — chunking must not degrade the approximation class.
+    #[test]
+    fn chunked_hyper_prefill_within_estimator_envelope() {
+        let (h, n, d) = (2usize, 128usize, 8usize);
+        let (q, k, v) = clustered_flat(31, h, n, d);
+        let flash = AttnConfig::flash(true).build().unwrap();
+        let oracle = flash.infer(QkvView::new(h, n, d, &q, &k, &v).unwrap());
+        let mae = |a: &[f32], b: &[f32]| {
+            a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).sum::<f64>() / a.len() as f64
+        };
+        for seed in [SeedPolicy::PerHead(42), SeedPolicy::Shared(42)] {
+            let cfg = AttnConfig {
+                backend: Backend::CausalHyper,
+                causal: true,
+                block: 16,
+                samples: 32,
+                causal_base: 32,
+                seed,
+                auto: AutoPolicy { prefill_hyper_threshold: 1, ..AutoPolicy::default() },
+                ..Default::default()
+            };
+            let op = cfg.build().unwrap();
+            let one_shot = op.infer(QkvView::new(h, n, d, &q, &k, &v).unwrap());
+            let err_one = mae(&one_shot.out, &oracle.out);
+            for chunk in [1usize, 17, 31, 64] {
+                let run = || {
+                    let mut cache = AttnCache::new(h, d);
+                    let mut got = vec![0.0f32; h * n * d];
+                    let mut row0 = 0usize;
+                    while row0 < n {
+                        let c = chunk.min(n - row0);
+                        let cv = QkvView::strided(
+                            h,
+                            c,
+                            d,
+                            n * d,
+                            &q[row0 * d..],
+                            &k[row0 * d..],
+                            &v[row0 * d..],
+                        )
+                        .unwrap();
+                        let pre = op.prefill(&mut cache, cv).unwrap();
+                        for head in 0..h {
+                            let src = pre.head_out(head);
+                            for i in 0..c {
+                                got[head * n * d + (row0 + i) * d
+                                    ..head * n * d + (row0 + i + 1) * d]
+                                    .copy_from_slice(src.row(i));
+                            }
+                        }
+                        row0 += c;
+                    }
+                    got
+                };
+                let got = run();
+                assert!(got.iter().all(|x| x.is_finite()), "chunk={chunk}");
+                assert_eq!(got, run(), "chunked estimator must replay per seed");
+                let err_chunk = mae(&got, &oracle.out);
+                assert!(
+                    err_chunk <= 3.0 * err_one + 0.02,
+                    "chunk={chunk} {seed:?}: chunked mae {err_chunk:.4} escaped the \
+                     one-shot envelope (mae {err_one:.4})"
+                );
+            }
+        }
+    }
+
+    /// Below [`AutoPolicy::prefill_hyper_threshold`] the chunked prefill
+    /// must take the exact streaming pass — bitwise the same rows the
+    /// flash op produces over an identical cache — and leave no
+    /// estimator state behind; forcing the threshold on flips both
+    /// observables.
+    #[test]
+    fn below_threshold_prefill_falls_back_bitwise_to_exact_streaming() {
+        let (h, n, d) = (2usize, 48usize, 8usize);
+        let (q, k, v) = clustered_flat(33, h, n, d);
+        let mk = |threshold: usize| {
+            AttnConfig {
+                backend: Backend::CausalHyper,
+                causal: true,
+                block: 8,
+                samples: 8,
+                causal_base: 16,
+                seed: SeedPolicy::PerHead(3),
+                auto: AutoPolicy { prefill_hyper_threshold: threshold, ..AutoPolicy::default() },
+                ..Default::default()
+            }
+            .build()
+            .unwrap()
+        };
+        // default threshold (8192) >> n: every chunk stays exact
+        let below = mk(AutoPolicy::default().prefill_hyper_threshold);
+        let flash = AttnConfig::flash(true).build().unwrap();
+        let mut cache_b = AttnCache::new(h, d);
+        let mut cache_f = AttnCache::new(h, d);
+        let mut row0 = 0usize;
+        for chunk in [16usize, 16, 16] {
+            let lo = row0 * d;
+            let cv = || {
+                QkvView::strided(h, chunk, d, n * d, &q[lo..], &k[lo..], &v[lo..]).unwrap()
+            };
+            let ob = below.prefill(&mut cache_b, cv()).unwrap();
+            let of = flash.prefill(&mut cache_f, cv()).unwrap();
+            if row0 > 0 {
+                // past the first chunk both ops run the identical
+                // streaming pass over identical pages: bitwise equal
+                assert_eq!(ob.out, of.out, "fallback must be the exact streaming pass");
+            }
+            assert!(cache_b.samplers.is_none(), "no estimator state below threshold");
+            row0 += chunk;
+        }
+        assert_eq!(cache_b.resamples(), 0);
+        // threshold forced on: estimator state appears and persists
+        let above = mk(1);
+        let mut cache_a = AttnCache::new(h, d);
+        let mut row0 = 0usize;
+        for chunk in [16usize, 16, 16] {
+            let cv = QkvView::strided(
+                h,
+                chunk,
+                d,
+                n * d,
+                &q[row0 * d..],
+                &k[row0 * d..],
+                &v[row0 * d..],
+            )
+            .unwrap();
+            above.prefill(&mut cache_a, cv).unwrap();
+            row0 += chunk;
+        }
+        assert!(cache_a.samplers.is_some());
+        assert_eq!(cache_a.built_len, n);
+        assert_eq!(cache_a.resamples(), 1);
     }
 
     /// The sampled decode path honors the documented resample interval

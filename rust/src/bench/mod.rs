@@ -655,6 +655,107 @@ pub fn run_spec_bench(draft_ks: &[usize], tokens: usize) -> Vec<SpecBenchRow> {
     rows
 }
 
+/// One row of the chunked long-prompt ingest gate: wall-clock for
+/// feeding an `n`-row causal prompt through [`AttentionOp::prefill`] in
+/// fixed-size chunks, with the chunk-appendable hyper estimator on vs
+/// forced off (exact streaming over the growing prefix).
+#[derive(Clone, Debug)]
+pub struct PrefillBenchRow {
+    pub n: usize,
+    /// rows per prefill chunk (clamped to n)
+    pub chunk: usize,
+    pub d: usize,
+    /// chunked ingest wall-clock with the appendable estimator
+    /// (`O((c+b+m)·d)` per chunk against the cached prefix)
+    pub hyper_s: f64,
+    /// same chunk schedule with the estimator gated off — the exact
+    /// streaming fallback (`O(c·prior·d)` per chunk, quadratic overall)
+    pub exact_s: f64,
+    /// max |chunked-hyper − one-shot CausalHyper| over the full output:
+    /// the fidelity of the incremental bucket/sample state vs computing
+    /// Algorithm 4 over the whole prompt at once
+    pub max_abs_diff: f64,
+}
+
+/// Chunked-ingest bench: feed an `n`-row clustered causal prompt chunk
+/// by chunk through one `AttnCache`, (a) with
+/// [`AutoPolicy::prefill_hyper_threshold`] forced on — every chunk past
+/// the first runs the chunk-appendable estimator — and (b) with it
+/// forced off (`usize::MAX`), which takes the exact streaming path over
+/// the resident prefix: the pre-PR ingest cost.  Identical chunk
+/// schedule, identical inputs; the speedup is the near-linear-vs-
+/// quadratic gap the tentpole exists for, and `max_abs_diff` pins the
+/// estimator's drift against the one-shot Algorithm 4 run.
+pub fn run_prefill_bench(
+    sizes: &[usize],
+    d: usize,
+    block: usize,
+    samples: usize,
+    chunk: usize,
+    reps: usize,
+) -> Vec<PrefillBenchRow> {
+    let mut rows = Vec::new();
+    for &n in sizes {
+        let (q, k, v) = clustered_qkv(42, n, d, 32, 0.5);
+        let c = chunk.max(1).min(n);
+        let mk = |threshold: usize| {
+            AttnConfig {
+                backend: Backend::CausalHyper,
+                causal: true,
+                block: fit_block(n, block),
+                samples: samples.min(n),
+                causal_base: 2048.min(n / 2).max(256),
+                seed: SeedPolicy::Shared(3),
+                auto: AutoPolicy { prefill_hyper_threshold: threshold, ..AutoPolicy::default() },
+                ..Default::default()
+            }
+            .build()
+            .expect("prefill bench config valid")
+        };
+        let hyper = mk(1);
+        let exact = mk(usize::MAX);
+        let ingest = |op: &AttentionOp| -> Vec<f32> {
+            let mut cache = AttnCache::new(1, d);
+            let mut out = vec![0.0f32; n * d];
+            let mut fed = 0usize;
+            while fed < n {
+                let take = c.min(n - fed);
+                let cv = QkvView::strided(
+                    1,
+                    take,
+                    d,
+                    n * d,
+                    &q.data[fed * d..],
+                    &k.data[fed * d..],
+                    &v.data[fed * d..],
+                )
+                .expect("prefill chunk");
+                let r = op.prefill(&mut cache, cv).expect("chunked prefill");
+                out[fed * d..(fed + take) * d].copy_from_slice(&r.out);
+                fed += take;
+            }
+            out
+        };
+        let mut hyper_out = Vec::new();
+        let hyper_s = time_with(|| hyper_out = ingest(&hyper), reps, false);
+        let exact_s = time_with(
+            || {
+                let _ = ingest(&exact);
+            },
+            reps,
+            false,
+        );
+        let oneshot = hyper.infer(QkvView::from_mats(&q, &k, &v));
+        let max_abs_diff = hyper_out
+            .iter()
+            .zip(&oneshot.out)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0, f64::max);
+        rows.push(PrefillBenchRow { n, chunk: c, d, hyper_s, exact_s, max_abs_diff });
+    }
+    rows
+}
+
 /// One row of the machine-readable attention perf gate.
 #[derive(Clone, Debug)]
 pub struct AttnBenchRow {
@@ -699,6 +800,11 @@ impl AttnBenchRow {
 ///    each stream count in `sched_streams` (default 4/16/64), plus the
 ///    speculative-decode gate (accept rate + effective tok/s at each
 ///    draft depth in `draft_ks`, default 2/4).
+/// 7. **Prefill** — the chunked long-prompt ingest gate at each `n` in
+///    `prefill_sizes` (default 16k/64k): chunk-appendable hyper
+///    estimator vs exact-streaming fallback over the same
+///    `prefill_chunk`-row schedule, plus the max output drift vs the
+///    one-shot Algorithm 4 run.
 ///
 /// Returns the JSON document; timing state (threads, backend) is
 /// restored before returning.
@@ -720,6 +826,8 @@ pub fn run_attention_bench_json(
     sched_n: usize,
     sched_steps: usize,
     draft_ks: &[usize],
+    prefill_sizes: &[usize],
+    prefill_chunk: usize,
 ) -> Value {
     use std::collections::BTreeMap;
     let mut root = BTreeMap::new();
@@ -897,6 +1005,22 @@ pub fn run_attention_bench_json(
     sched.insert("streams".into(), Value::Array(streams));
     sched.insert("speculative".into(), Value::Array(speculative));
     root.insert("decode_batched".into(), Value::Object(sched));
+
+    // ---- 7) chunked long-prompt ingest gate -----------------------------
+    let mut prefill = Vec::new();
+    for r in run_prefill_bench(prefill_sizes, d, block, samples, prefill_chunk, reps) {
+        let mut o = BTreeMap::new();
+        o.insert("n".into(), Value::Num(r.n as f64));
+        o.insert("chunk".into(), Value::Num(r.chunk as f64));
+        o.insert("hyper_s".into(), Value::Num(r.hyper_s));
+        o.insert("exact_s".into(), Value::Num(r.exact_s));
+        o.insert("hyper_tok_s".into(), Value::Num(r.n as f64 / r.hyper_s.max(1e-12)));
+        o.insert("exact_tok_s".into(), Value::Num(r.n as f64 / r.exact_s.max(1e-12)));
+        o.insert("speedup".into(), Value::Num(r.exact_s / r.hyper_s.max(1e-12)));
+        o.insert("max_abs_diff".into(), Value::Num(r.max_abs_diff));
+        prefill.push(Value::Object(o));
+    }
+    root.insert("prefill".into(), Value::Array(prefill));
 
     root.insert(
         "threads".into(),
@@ -1228,6 +1352,8 @@ mod tests {
             64,
             2,
             &[2],
+            &[64],
+            16,
         );
         let prefix = doc.get("prefix").expect("prefix section present");
         let rows = match prefix {
@@ -1265,6 +1391,8 @@ mod tests {
             64,
             2,
             &[2],
+            &[64],
+            16,
         );
         let cache = doc.get("cache").expect("cache section present");
         let rows = match cache {
@@ -1301,6 +1429,8 @@ mod tests {
             64,
             2,
             &[2],
+            &[64],
+            16,
         );
         let decode = doc.get("decode").expect("decode section present");
         let rows = match decode {
@@ -1360,6 +1490,8 @@ mod tests {
             64,
             2,
             &[2],
+            &[64],
+            16,
         );
         let sched = doc.get("decode_batched").expect("decode_batched section");
         let streams = match sched.get("streams").expect("streams rows") {
@@ -1377,6 +1509,59 @@ mod tests {
         let rate = spec[0].get("accept_rate").and_then(|v| v.as_f64()).unwrap();
         assert!((0.0..=1.0).contains(&rate));
         assert!(spec[0].get("spec_tok_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn prefill_bench_rows_sane() {
+        let rows = run_prefill_bench(&[96, 128], 16, 16, 16, 32, 1);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_eq!(r.chunk, 32);
+            assert!(r.hyper_s > 0.0 && r.hyper_s.is_finite());
+            assert!(r.exact_s > 0.0 && r.exact_s.is_finite());
+            // the estimator is an approximation, but it must track the
+            // one-shot Algorithm 4 run, not diverge
+            assert!(r.max_abs_diff.is_finite());
+        }
+    }
+
+    #[test]
+    fn bench_json_has_prefill_section() {
+        let doc = run_attention_bench_json(
+            &[64],
+            16,
+            16,
+            16,
+            1,
+            &[64],
+            2,
+            &[64],
+            32,
+            8,
+            &[128],
+            2,
+            &[2],
+            64,
+            2,
+            &[2],
+            &[96],
+            32,
+        );
+        let prefill = doc.get("prefill").expect("prefill section present");
+        let rows = match prefill {
+            Value::Array(a) => a,
+            _ => panic!("prefill section must be an array"),
+        };
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("chunk").and_then(|v| v.as_f64()).unwrap(), 32.0);
+        assert!(rows[0].get("hyper_tok_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert!(rows[0].get("exact_tok_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert!(rows[0].get("speedup").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert!(rows[0]
+            .get("max_abs_diff")
+            .and_then(|v| v.as_f64())
+            .unwrap()
+            .is_finite());
     }
 
     #[test]

@@ -658,6 +658,260 @@ fn reject_admission(ctx: &EngineCtx, why: String) -> String {
     format!("session admission rejected: {why}")
 }
 
+/// A long prompt ingest the scheduler interleaves with decode ticks:
+/// one ≤ `chunk`-row piece per tick through [`AttentionOp::prefill`],
+/// so a 131k-row open no longer stalls the decode lanes for its whole
+/// wall-time.  Above the op's `prefill_hyper_threshold` each chunk runs
+/// the chunk-appendable causal-hyper estimator (near-linear in the
+/// chunk, not the resident prefix); below it the exact streaming path
+/// serves each chunk.  The assembled output is exactly what the same
+/// chunk schedule would produce through the monolithic path.
+///
+/// Failure semantics mirror the monolithic open: validation errors and
+/// admission rejects resolve the ticket at [`ChunkedIngest::begin`];
+/// mid-ingest pool exhaustion LRU-evicts and retries per chunk (the KV
+/// append is atomic on exhaustion); a `prefill_chunk` fault degrades
+/// the ingest to one serial pass over its remaining rows
+/// (`ingest_serial_fallbacks`); a panicked chunk fails only this
+/// ingest's ticket and drops its partial cache.  No session is
+/// registered until [`ChunkedIngest::finish`], so there is never a
+/// half-ingested entry to quarantine.
+pub(crate) struct ChunkedIngest {
+    /// `Some` for [`Work::Open`] (registered at finish), `None` for a
+    /// one-shot [`Work::Full`] (cache dropped at finish)
+    session: Option<SessionId>,
+    job: AttnJob,
+    cfg: AttnConfig,
+    attn: AttentionOp,
+    cache: AttnCache,
+    /// assembled `[heads, n, d]` output, written chunk by chunk
+    out: Vec<f32>,
+    /// rows ingested so far
+    fed: usize,
+    /// target rows per tick (clamped per chunk for sink-less windows)
+    chunk: usize,
+    respond: Reply,
+    deadline: Option<Instant>,
+    queue_us: u64,
+    exec_start: Instant,
+}
+
+impl ChunkedIngest {
+    /// Convert an eligible work item into a chunked ingest.
+    /// `Err(Some(item))` hands back a non-eligible item (pings, closes,
+    /// prefix work, short / non-causal / forked prompts) for in-place
+    /// execution; `Err(None)` means the item was consumed here (expired
+    /// deadline, or a validation/admission failure already resolved the
+    /// ticket).
+    pub(crate) fn begin(
+        item: WorkItem,
+        chunk: usize,
+        ctx: &EngineCtx,
+    ) -> Result<ChunkedIngest, Option<WorkItem>> {
+        let eligible = chunk > 0
+            && match &item.work {
+                Work::Open { job, prefix: None, .. } => job.causal && job.n > chunk,
+                Work::Full(job) => job.causal && job.n > chunk,
+                _ => false,
+            };
+        if !eligible {
+            return Err(Some(item));
+        }
+        let Some(item) = expire_if_late(item, &ctx.metrics) else { return Err(None) };
+        let WorkItem { work, route, submitted, deadline, respond } = item;
+        let queue_us = submitted.elapsed().as_micros() as u64;
+        let (session, job) = match work {
+            Work::Open { session, job, .. } => (Some(session), job),
+            Work::Full(job) => (None, job),
+            _ => unreachable!("eligibility checked above"),
+        };
+        let started = catch_job(&ctx.metrics, || {
+            failpoint::hit(if session.is_some() { "open_job" } else { "full_job" })?;
+            QkvView::new(job.heads, job.n, job.d, &job.q, &job.k, &job.v)?;
+            let cfg = substrate_config(&job, route.kind, &ctx.rc);
+            let attn = cfg.build()?;
+            // same up-front feasibility check as a monolithic open: a
+            // prompt that can never fit under a Full policy is rejected
+            // before evicting anyone
+            let rows_page = ctx.cache.page_elems / (3 * job.heads * job.d).max(1);
+            if let (Some(budget), true, CachePolicy::Full) =
+                (ctx.cache.budget_pages, rows_page > 0, ctx.cache.policy)
+            {
+                let needed = job.n.div_ceil(rows_page);
+                if needed > budget {
+                    return Err(reject_admission(
+                        ctx,
+                        format!("prompt needs {needed} pages, pool budget is {budget}"),
+                    ));
+                }
+            }
+            let cache = AttnCache::with_pool(job.heads, job.d, ctx.cache.policy, &ctx.pool)?;
+            Ok((cfg, attn, cache))
+        });
+        match started {
+            Ok((cfg, attn, cache)) => {
+                ctx.metrics.chunked_ingests.fetch_add(1, Relaxed);
+                let out = vec![0.0f32; job.heads * job.n * job.d];
+                Ok(ChunkedIngest {
+                    session,
+                    job,
+                    cfg,
+                    attn,
+                    cache,
+                    out,
+                    fed: 0,
+                    chunk,
+                    respond,
+                    deadline,
+                    queue_us,
+                    exec_start: Instant::now(),
+                })
+            }
+            Err(e) => {
+                ctx.metrics.jobs_failed.fetch_add(1, Relaxed);
+                if let Reply::Full(tx) = respond {
+                    let _ = tx.send(Err(e));
+                }
+                Err(None)
+            }
+        }
+    }
+
+    /// Feed rows: one ≤ `chunk`-row piece per call normally, or every
+    /// remaining row in one serial pass when a `prefill_chunk` fault
+    /// degrades this ingest.  `Ok(true)` = all rows ingested (call
+    /// [`Self::finish`]).
+    pub(crate) fn step(&mut self, ctx: &EngineCtx) -> Result<bool, String> {
+        if let Some(dl) = self.deadline {
+            if Instant::now() >= dl {
+                ctx.metrics.deadline_expired.fetch_add(1, Relaxed);
+                return Err(format!(
+                    "{DEADLINE_EXPIRED} (ingested {} of {} rows)",
+                    self.fed, self.job.n
+                ));
+            }
+        }
+        let serial = failpoint::hit("prefill_chunk").is_err();
+        if serial {
+            // degradation, not death: finish the prompt in one serial
+            // pass (the PR 6 ladder — shed interleaving, keep serving)
+            ctx.metrics.ingest_serial_fallbacks.fetch_add(1, Relaxed);
+        }
+        loop {
+            let left = self.job.n - self.fed;
+            let mut c = if serial { left } else { left.min(self.chunk) };
+            // a sink-less sliding window rejects an appended chunk
+            // larger than the window (it would evict its own queries'
+            // keys mid-append); clamp so a windowed open of a long
+            // prompt succeeds instead of bouncing off that guard
+            if self.fed > 0 {
+                if let CachePolicy::SlidingWindow { window, sink: 0 } = self.cache.policy() {
+                    c = c.min(window.max(1));
+                }
+            }
+            self.feed(c, ctx)?;
+            if self.fed == self.job.n {
+                return Ok(true);
+            }
+            if !serial {
+                return Ok(false);
+            }
+        }
+    }
+
+    /// Ingest one piece of `c` rows through the op, retrying pool
+    /// exhaustion with LRU eviction (the KV append is atomic on
+    /// exhaustion, so a retry re-runs the identical append).
+    fn feed(&mut self, c: usize, ctx: &EngineCtx) -> Result<(), String> {
+        let (h, n, d) = (self.job.heads, self.job.n, self.job.d);
+        let lo = self.fed * d;
+        let x = QkvView::strided(
+            h,
+            c,
+            d,
+            n * d,
+            &self.job.q[lo..],
+            &self.job.k[lo..],
+            &self.job.v[lo..],
+        )?;
+        let mut evictions = 0usize;
+        let out = loop {
+            match self.attn.prefill(&mut self.cache, x) {
+                Ok(out) => break out.into_out(),
+                Err(e) if e.contains(POOL_EXHAUSTED) => {
+                    if evictions < MAX_ADMISSION_EVICTIONS && evict_lru_session(ctx, None) {
+                        evictions += 1;
+                        continue;
+                    }
+                    return Err(reject_admission(ctx, e));
+                }
+                Err(e) => return Err(e),
+            }
+        };
+        // chunk output is packed [h, c, d]; splice it into the
+        // assembled [h, n, d] buffer at this chunk's row offset
+        for head in 0..h {
+            let src = head * c * d;
+            let dst = head * n * d + lo;
+            self.out[dst..dst + c * d].copy_from_slice(&out[src..src + c * d]);
+        }
+        self.fed += c;
+        ctx.metrics.prefill_chunks.fetch_add(1, Relaxed);
+        Ok(())
+    }
+
+    /// All rows ingested: register the session (opens) and resolve the
+    /// ticket with the assembled output.
+    pub(crate) fn finish(self, ctx: &EngineCtx) {
+        let ChunkedIngest {
+            session, job, cfg, cache, out, respond, queue_us, exec_start, ..
+        } = self;
+        let exec_us = exec_start.elapsed().as_micros() as u64;
+        let metrics = &*ctx.metrics;
+        metrics.queue_latency.record(queue_us);
+        metrics.exec_latency.record(exec_us);
+        metrics.e2e_latency.record(queue_us + exec_us);
+        metrics.substrate_jobs.fetch_add(1, Relaxed);
+        metrics.jobs_completed.fetch_add(1, Relaxed);
+        if let Some(id) = session {
+            lock_recover(&ctx.sessions).insert(
+                id,
+                Some(SessionEntry {
+                    cfg,
+                    heads: job.heads,
+                    d: job.d,
+                    cache,
+                    last_used: Instant::now(),
+                    degraded: false,
+                }),
+            );
+            metrics.sessions_opened.fetch_add(1, Relaxed);
+        }
+        if let Reply::Full(tx) = respond {
+            let _ = tx.send(Ok(AttnResponse {
+                id: job.id,
+                out,
+                backend: Backend::Substrate,
+                queue_us,
+                exec_us,
+            }));
+        }
+    }
+
+    /// Resolve the ticket with `e` and drop the partial cache (its
+    /// pages return to the pool).  No session was registered yet, so
+    /// there is nothing to quarantine.
+    pub(crate) fn fail(self, e: String, ctx: &EngineCtx) {
+        let metrics = &*ctx.metrics;
+        metrics.queue_latency.record(self.queue_us);
+        metrics.exec_latency.record(self.exec_start.elapsed().as_micros() as u64);
+        metrics.jobs_failed.fetch_add(1, Relaxed);
+        if let Reply::Full(tx) = self.respond {
+            let _ = tx.send(Err(e));
+        }
+    }
+}
+
 /// Backoff schedule for transient decode-time pool exhaustion: another
 /// session may be releasing pages (a close or slide in flight), so wait
 /// briefly before escalating.  Bounded and deadline-aware.
@@ -802,7 +1056,7 @@ pub fn execute_substrate(
 
 /// Best-effort text of a panic payload (the common `&str` / `String`
 /// cases; anything else is reported as opaque).
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {

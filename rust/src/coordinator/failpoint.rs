@@ -17,7 +17,7 @@
 //! spec     := site '=' action (',' site '=' action)*
 //! site     := pool_alloc | kv_append | kv_fork | open_job | full_job
 //!           | decode_job | session_checkout | prefix_register
-//!           | prefix_release | engine_recv | sched_tick
+//!           | prefix_release | engine_recv | sched_tick | prefill_chunk
 //! action   := 'err' [':' prob]          -- return an injected error
 //!           | 'panic' [':' prob]        -- panic! at the site
 //!           | 'delay' ':' millis 'ms' [':' prob]
@@ -44,7 +44,12 @@
 //! * **`sched_tick`** fires at the top of every continuous-batching
 //!   scheduler tick: an `err` makes that tick fall back to the
 //!   session-serial decode path (degrade, not die), a `panic` is
-//!   absorbed by the per-item isolation inside the serial path.
+//!   absorbed by the per-item isolation inside the serial path;
+//! * **`prefill_chunk`** fires before each chunk of a scheduler-
+//!   interleaved chunked ingest: an `err` degrades that ingest to one
+//!   serial monolithic prefill of its remaining rows (ladder semantics
+//!   — degrade, not die), a `panic` is caught by the scheduler and
+//!   fails only that ingest's ticket.
 //!
 //! All injected panic payloads contain [`INJECTED`]; the chaos harness
 //! uses that to distinguish deliberate faults from real bugs.
@@ -59,7 +64,7 @@ use crate::rng::Rng;
 pub const INJECTED: &str = "injected failpoint";
 
 /// The fixed set of compiled-in failpoint sites, in counter order.
-pub const SITES: [&str; 11] = [
+pub const SITES: [&str; 12] = [
     "pool_alloc",
     "kv_append",
     "kv_fork",
@@ -71,6 +76,7 @@ pub const SITES: [&str; 11] = [
     "prefix_release",
     "engine_recv",
     "sched_tick",
+    "prefill_chunk",
 ];
 
 /// What a configured site does when its probability draw fires.
@@ -104,6 +110,7 @@ static STATE: Mutex<Option<State>> = Mutex::new(None);
 /// Per-site fire counters (index-aligned with [`SITES`]); survive
 /// [`clear`] within a process so a serve run can report totals.
 static TRIGGERS: [AtomicU64; SITES.len()] = [
+    AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),

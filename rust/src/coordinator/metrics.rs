@@ -129,6 +129,15 @@ pub struct Metrics {
     /// end of every tick so `cache_gauges()` can report it without
     /// reaching into the scheduler thread's private state.
     pub draft_lanes: AtomicU64,
+    /// long prefills the scheduler split into tick-sized chunks instead
+    /// of running as one monolithic ingest (one count per ingest)
+    pub chunked_ingests: AtomicU64,
+    /// individual prefill chunks fed through the decode queue
+    pub prefill_chunks: AtomicU64,
+    /// chunked ingests degraded to one serial monolithic prefill of
+    /// their remaining rows (a `prefill_chunk` fault fired, or a chunk
+    /// hit an unrecoverable transient)
+    pub ingest_serial_fallbacks: AtomicU64,
 }
 
 impl Metrics {
@@ -172,6 +181,7 @@ impl Metrics {
              batches: {} (mean size {:.2})\n\
              sched: occupancy mean {:.2} p50 {} max {} ticks={} \
              serial_fallbacks={}\n\
+             ingest: chunked={} chunks={} serial_fallbacks={}\n\
              draft: proposed={} accepted={} rollbacks={} accept_rate={:.2}\n\
              backend: artifact={} substrate={}\n\
              queue  latency: mean {:.0}us p50 {}us p99 {}us max {}us\n\
@@ -198,6 +208,9 @@ impl Metrics {
             self.batch_occupancy.max_us(),
             self.batch_occupancy.count(),
             self.sched_serial_fallbacks.load(Ordering::Relaxed),
+            self.chunked_ingests.load(Ordering::Relaxed),
+            self.prefill_chunks.load(Ordering::Relaxed),
+            self.ingest_serial_fallbacks.load(Ordering::Relaxed),
             self.draft_proposed.load(Ordering::Relaxed),
             self.draft_accepted.load(Ordering::Relaxed),
             self.draft_rollbacks.load(Ordering::Relaxed),
@@ -285,6 +298,12 @@ pub struct CacheGauges {
     pub draft_proposed: u64,
     pub draft_accepted: u64,
     pub draft_rollbacks: u64,
+    /// scheduler-interleaved chunked prefill: ingests split into
+    /// chunks, chunks fed, and ingests degraded to a serial monolithic
+    /// prefill — mirrored from [`Metrics`]
+    pub chunked_ingests: u64,
+    pub prefill_chunks: u64,
+    pub ingest_serial_fallbacks: u64,
 }
 
 impl CacheGauges {
@@ -323,6 +342,7 @@ impl CacheGauges {
              kv pool:  allocs={} reuses={} rejects={} cow_copies={}\n\
              kv admission: lru_evicted={} ttl_reclaimed={} rejects={} degraded={}\n\
              kv sched: occupancy_mean={:.2} serial_fallbacks={}\n\
+             kv ingest: chunked={} chunks={} serial_fallbacks={}\n\
              kv draft: lanes={} proposed={} accepted={} rollbacks={}\n\
              kv faults: poison_recovered={} failpoints=[{}]\n\
              kv sessions: [{}]\n\
@@ -343,6 +363,9 @@ impl CacheGauges {
             self.degraded_sessions,
             self.batch_mean_occupancy,
             self.sched_serial_fallbacks,
+            self.chunked_ingests,
+            self.prefill_chunks,
+            self.ingest_serial_fallbacks,
             self.draft_lanes,
             self.draft_proposed,
             self.draft_accepted,
@@ -386,6 +409,9 @@ mod tests {
             draft_proposed: 12,
             draft_accepted: 9,
             draft_rollbacks: 3,
+            chunked_ingests: 2,
+            prefill_chunks: 17,
+            ingest_serial_fallbacks: 1,
         };
         assert!((g.utilization() - 0.75).abs() < 1e-9);
         let r = g.report();
@@ -402,6 +428,8 @@ mod tests {
         assert!(r.contains("occupancy_mean=3.50"));
         assert!(r.contains("serial_fallbacks=2"));
         assert!(r.contains("lanes=3"));
+        assert!(r.contains("chunked=2"));
+        assert!(r.contains("chunks=17"));
         assert!(r.contains("proposed=12"));
         assert!(r.contains("accepted=9"));
         assert!(r.contains("rollbacks=3"));
@@ -470,6 +498,9 @@ mod tests {
         m.batch_occupancy.record(4);
         m.batch_occupancy.record(8);
         m.sched_serial_fallbacks.fetch_add(1, Ordering::Relaxed);
+        m.chunked_ingests.fetch_add(2, Ordering::Relaxed);
+        m.prefill_chunks.fetch_add(16, Ordering::Relaxed);
+        m.ingest_serial_fallbacks.fetch_add(1, Ordering::Relaxed);
         m.draft_proposed.fetch_add(10, Ordering::Relaxed);
         m.draft_accepted.fetch_add(7, Ordering::Relaxed);
         m.draft_rollbacks.fetch_add(3, Ordering::Relaxed);
@@ -477,6 +508,7 @@ mod tests {
         let r = m.report();
         assert!(r.contains("occupancy mean 6.00"), "{r}");
         assert!(r.contains("serial_fallbacks=1"), "{r}");
+        assert!(r.contains("ingest: chunked=2 chunks=16 serial_fallbacks=1"), "{r}");
         assert!(r.contains("proposed=10"), "{r}");
         assert!(r.contains("accepted=7"), "{r}");
         assert!(r.contains("rollbacks=3"), "{r}");

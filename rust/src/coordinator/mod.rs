@@ -33,6 +33,10 @@
 //!            │   + draft lanes: AttnCache::fork ──COW──▶│
 //!            │     tight-window shadow decode; accept/  │
 //!            │     rollback = keep/drop the fork        │
+//!            │   + chunked ingests: long causal opens   │
+//!            │     feed ONE prefill chunk per tick      │
+//!            │     (chunk-appendable estimator), so a   │
+//!            │     131k prompt never stalls the lanes   │
 //!            └──────────────────────────────────────────┘
 //! ```
 //!
@@ -74,7 +78,14 @@
 //!   `draft_window` rows shadows the target, argmax agreement is the
 //!   accept signal, and rejected windows roll back for free by dropping
 //!   the fork.  Clients always get target outputs — batched and
-//!   speculative decode are bitwise-identical to session-serial.
+//!   speculative decode are bitwise-identical to session-serial.  With
+//!   `prefill_chunk > 0` the scheduler also owns **chunked ingest**:
+//!   long causal opens and one-shot prefills are rerouted onto the
+//!   decode lane and fed one `prefill_chunk`-row chunk per tick through
+//!   the op layer's chunk-appendable estimator, interleaved with the
+//!   fused decode batches — a long prompt makes progress every tick
+//!   without ever blocking other sessions' tokens
+//!   (`chunked_ingests`/`prefill_chunks` gauges).
 //! * [`server`] — wiring: submit → route → batch → execute → respond,
 //!   plus the session API ([`Server::open_session`], [`Server::decode`],
 //!   [`Server::close_session`]) and the shared-prefix API
@@ -105,6 +116,9 @@
 //! | scheduler tick fault (`sched_tick`) | failpoint at the top of every continuous-batching tick | the tick **degrades to the session-serial path** (`sched_serial_fallbacks`); an injected panic there is absorbed the same way — the scheduler thread never dies |
 //! | lane fails out of the fused batch | per-lane `Result` from `decode_step_batch` | the step re-runs on the serial path with its full backoff → evict → degrade → shed ladder; other lanes in the batch are unaffected |
 //! | draft-lane fault (`kv_fork` unwind, pool exhaustion, panicked shadow step) | `catch_unwind` around every draft operation | only the **draft fork is dropped** (pages back to the pool); the parent session never notices; speculation resumes at the next window |
+//! | chunk fault mid-ingest (`prefill_chunk`) | failpoint checked before each scheduler-fed prefill chunk | the ingest **degrades to one serial prefill** of its remaining rows (`ingest_serial_fallbacks`) — the ticket still resolves with a full answer, later chunks of other ingests are unaffected |
+//! | panic mid-ingest | `catch_unwind` around each chunk advance | the ingest's ticket resolves with an explicit `panic:` error and its partially-filled session cache is discarded (pages back to the pool); the scheduler thread and every other ingest keep running |
+//! | pool exhausted mid-ingest | `POOL_EXHAUSTED` from the chunk's `KvCache::append` (atomic: no partial rows) | LRU-evict idle sessions and retry the same chunk, then explicit backpressure — identical ladder to monolithic opens, just applied per chunk |
 //! | shutdown under load | `Shutdown` drains the queue | every queued ticket resolves with an explicit error; all session, prefix, and draft-fork pages return to the pool (the engine joins the scheduler before clearing tables) |
 //!
 //! [`Server::open_session`]: server::Server::open_session

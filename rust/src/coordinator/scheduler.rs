@@ -61,6 +61,24 @@
 //! unwind via `kv_fork`, pool exhaustion, a panicked draft step)
 //! quarantines **only the draft** — the fork is dropped, the parent
 //! session never notices.
+//!
+//! **Scheduler-interleaved chunked prefill**
+//! ([`SchedConfig::prefill_chunk`] > 0): the server reroutes long
+//! causal opens/fulls through this lane, and step 1 of the tick
+//! converts them into [`engine::ChunkedIngest`]s instead of executing
+//! them inline.  Each tick then advances every live ingest by one
+//! ≤ `prefill_chunk`-row chunk *after* the fused decode batch, so a
+//! 131k-token prompt streams in across many ticks while decode lanes
+//! keep emitting tokens (the occupancy-under-ingest property the tests
+//! pin).  Above the op's `prefill_hyper_threshold` each chunk runs the
+//! chunk-appendable causal-hyper estimator — near-linear in the chunk,
+//! not the resident prefix.  A `prefill_chunk` fault degrades the
+//! ingest to one serial pass over its remaining rows
+//! (`ingest_serial_fallbacks`); a panicked chunk fails only that
+//! ingest's ticket.  Note the ping barrier is measured against the
+//! *queue*: a ping behind a long open resolves once the open has been
+//! admitted as an ingest (its ticket resolves later, when the last
+//! chunk lands).
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -88,11 +106,18 @@ pub struct SchedConfig {
     /// Sliding-window rows the draft fork is degraded to — the knob
     /// that makes the draft lane cheap relative to the target.
     pub draft_window: usize,
+    /// Rows per prefill chunk for scheduler-interleaved long-prompt
+    /// ingest.  0 (the default) disables chunking: opens run
+    /// monolithically on the substrate lane.  With a positive value,
+    /// eligible long causal prompts routed through the decode lane are
+    /// split into ≤ this many rows per tick ([`engine::ChunkedIngest`]),
+    /// so decode steps keep flowing while the prompt streams in.
+    pub prefill_chunk: usize,
 }
 
 impl Default for SchedConfig {
     fn default() -> Self {
-        SchedConfig { max_batch: 8, draft_k: 0, draft_window: 64 }
+        SchedConfig { max_batch: 8, draft_k: 0, draft_window: 64, prefill_chunk: 0 }
     }
 }
 
@@ -129,10 +154,13 @@ fn argmax(xs: &[f32]) -> usize {
 pub(crate) fn scheduler_loop(rx: Receiver<EngineMsg>, ctx: EngineCtx, cfg: SchedConfig) {
     let mut queue: VecDeque<WorkItem> = VecDeque::new();
     let mut drafts: HashMap<SessionId, DraftLane> = HashMap::new();
+    let mut ingests: Vec<engine::ChunkedIngest> = Vec::new();
     'run: loop {
-        // block only when idle; otherwise drain whatever has arrived
-        // and run the next tick immediately
-        if queue.is_empty() {
+        // block only when idle (no queued items AND no ingest mid-
+        // flight); otherwise drain whatever has arrived and run the
+        // next tick immediately — an active ingest keeps the loop live
+        // so its chunks advance even with no decode traffic
+        if queue.is_empty() && ingests.is_empty() {
             match rx.recv() {
                 Ok(EngineMsg::Batch(b)) => queue.extend(b),
                 Ok(EngineMsg::Shutdown) | Err(_) => break 'run,
@@ -146,7 +174,8 @@ pub(crate) fn scheduler_loop(rx: Receiver<EngineMsg>, ctx: EngineCtx, cfg: Sched
                 Err(TryRecvError::Disconnected) => break 'run,
             }
         }
-        tick(&mut queue, &mut drafts, &cfg, &ctx);
+        tick(&mut queue, &mut drafts, &mut ingests, &cfg, &ctx);
+        advance_ingests(&mut ingests, &ctx);
         ctx.metrics.draft_lanes.store(drafts.len() as u64, Relaxed);
     }
     // shutdown: flush the backlog (this queue plus anything still in
@@ -159,25 +188,59 @@ pub(crate) fn scheduler_loop(rx: Receiver<EngineMsg>, ctx: EngineCtx, cfg: Sched
     for item in queue {
         engine::respond_flush(item, &ctx.metrics);
     }
+    for ing in ingests {
+        // partial caches drop with the ingest; pages return to the pool
+        ing.fail("coordinator shutting down; queued work flushed".into(), &ctx);
+    }
     drafts.clear(); // forked draft pages back to the pool
     ctx.metrics.draft_lanes.store(0, Relaxed);
+}
+
+/// Advance every live chunked ingest by one chunk (or all remaining
+/// rows for one a `prefill_chunk` fault degraded to serial).  A
+/// panicked chunk fails only that ingest's ticket; its partial cache
+/// drops with it, so no session is ever half-registered.
+fn advance_ingests(ingests: &mut Vec<engine::ChunkedIngest>, ctx: &EngineCtx) {
+    let mut still: Vec<engine::ChunkedIngest> = Vec::with_capacity(ingests.len());
+    for mut ing in ingests.drain(..) {
+        match catch_unwind(AssertUnwindSafe(|| ing.step(ctx))) {
+            Ok(Ok(true)) => ing.finish(ctx),
+            Ok(Ok(false)) => still.push(ing),
+            Ok(Err(e)) => ing.fail(e, ctx),
+            Err(payload) => {
+                ctx.metrics.panics_caught.fetch_add(1, Relaxed);
+                let msg = format!("panic: {}", engine::panic_message(payload.as_ref()));
+                ing.fail(msg, ctx);
+            }
+        }
+    }
+    *ingests = still;
 }
 
 /// One scheduler tick: leading non-decode items, then the fused batch.
 fn tick(
     queue: &mut VecDeque<WorkItem>,
     drafts: &mut HashMap<SessionId, DraftLane>,
+    ingests: &mut Vec<engine::ChunkedIngest>,
     cfg: &SchedConfig,
     ctx: &EngineCtx,
 ) {
     // 1. leading non-decode items run first, in FIFO order (ping
-    //    barrier, closes, prefix releases)
+    //    barrier, closes, prefix releases).  With `prefill_chunk` set,
+    //    a long causal open/full at the front converts to a chunked
+    //    ingest instead of executing inline — it leaves the queue
+    //    immediately (so decode steps behind it run this very tick) and
+    //    streams in one chunk per tick until done.
     while matches!(queue.front(), Some(item) if !matches!(item.work, Work::Decode(_))) {
         let item = queue.pop_front().expect("front checked above");
         if let Work::Close { session } = &item.work {
             drafts.remove(session); // the draft dies with its session
         }
-        engine::execute_one(item, None, ctx);
+        match engine::ChunkedIngest::begin(item, cfg.prefill_chunk, ctx) {
+            Ok(ing) => ingests.push(ing),
+            Err(Some(item)) => engine::execute_one(item, None, ctx),
+            Err(None) => {} // consumed: expired or failed at begin
+        }
     }
 
     // 2. scan to the barrier: earliest decode step per session
@@ -504,6 +567,7 @@ mod tests {
         assert_eq!(c.max_batch, 8);
         assert_eq!(c.draft_k, 0, "speculation is opt-in");
         assert!(c.draft_window >= 1);
+        assert_eq!(c.prefill_chunk, 0, "chunked ingest is opt-in");
     }
 
     #[test]

@@ -51,9 +51,12 @@ pub struct ServerConfig {
     /// per-session eviction policy, idle-session TTL
     pub cache: CacheConfig,
     /// Continuous-batching scheduler: fused decode-batch width
-    /// (`max_batch`) and the speculative draft lane (`draft_k` shadow
+    /// (`max_batch`), the speculative draft lane (`draft_k` shadow
     /// steps per accept/rollback window over a fork degraded to
-    /// `draft_window` rows; `draft_k = 0` disables speculation)
+    /// `draft_window` rows; `draft_k = 0` disables speculation), and
+    /// scheduler-interleaved chunked prefill (`prefill_chunk` rows per
+    /// tick; 0 disables — long causal opens/fulls above the chunk size
+    /// then stream in alongside decode instead of stalling a worker)
     pub sched: SchedConfig,
     /// directory with manifest.json + *.hlo.txt; None = substrate only
     pub artifacts_dir: Option<PathBuf>,
@@ -194,6 +197,7 @@ impl Server {
 
         let (submit_tx, submit_rx) = sync_channel::<Submission>(depth);
         let batch_cfg = config.batch;
+        let prefill_chunk = config.sched.prefill_chunk;
 
         let engine_tx_failsafe = engine_tx.clone();
         let batcher_spawn = std::thread::Builder::new()
@@ -228,12 +232,43 @@ impl Server {
                     match msg {
                         Some(sub) => {
                             let route = match &sub.work {
-                                Work::Full(job) => router.route(job),
-                                Work::Open { job, .. }
-                                | Work::RegisterPrefix { job, .. } => {
-                                    // sessions (and the prefix caches
-                                    // they fork from) are shape-dynamic:
-                                    // always the substrate lane
+                                Work::Full(job) => {
+                                    let mut r = router.route(job);
+                                    // a long causal one-shot (no artifact
+                                    // lane for it) streams through the
+                                    // scheduler's chunked-ingest path
+                                    // instead of stalling a worker
+                                    if prefill_chunk > 0
+                                        && job.causal
+                                        && job.n > prefill_chunk
+                                        && r.artifact.is_none()
+                                    {
+                                        r.decode = true;
+                                    }
+                                    r
+                                }
+                                Work::Open { job, prefix, .. } => {
+                                    // sessions are shape-dynamic: always
+                                    // the substrate lane.  Long causal
+                                    // plain opens reroute to the decode
+                                    // lane for chunked ingest (prefix
+                                    // forks keep the monolithic path —
+                                    // their validation loop is fork-
+                                    // scoped, and the suffix is short)
+                                    let mut r = router.route(job);
+                                    r.artifact = None;
+                                    if prefill_chunk > 0
+                                        && prefix.is_none()
+                                        && job.causal
+                                        && job.n > prefill_chunk
+                                    {
+                                        r.decode = true;
+                                    }
+                                    r
+                                }
+                                Work::RegisterPrefix { job, .. } => {
+                                    // prefix caches are forked from
+                                    // sessions: substrate lane, monolithic
                                     let mut r = router.route(job);
                                     r.artifact = None;
                                     r
@@ -1099,6 +1134,142 @@ mod tests {
         let s = pool.stats();
         assert_eq!(s.outstanding, 0, "pages leaked through shutdown: {s:?}");
         assert_eq!(s.outstanding + s.free, (s.allocs - s.reuses) as usize);
+    }
+
+    /// A long causal open (and a long causal one-shot) rerouted through
+    /// the scheduler's chunked-ingest path returns the same output as
+    /// the monolithic path, and the session decodes seamlessly after.
+    #[test]
+    fn chunked_open_matches_monolithic_and_decodes() {
+        let n = 72usize;
+        let job = || mk_job(n, ModePreference::Exact, true, 21);
+        let mono = Server::start(ServerConfig::substrate_only()).unwrap();
+        let (_, t) = mono.open_session(job()).unwrap();
+        let want = t.wait().unwrap().out;
+        mono.shutdown();
+
+        let mut cfg = ServerConfig::substrate_only();
+        cfg.sched.prefill_chunk = 16; // 72 rows -> 5 chunks
+        let server = Server::start(cfg).unwrap();
+        let (sid, t) = server.open_session(job()).unwrap();
+        let got = t.wait().unwrap().out;
+        assert_eq!(got.len(), want.len());
+        let max = got.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(max < 1e-4, "chunked vs monolithic prefill diff {max}");
+        // a one-shot Full job takes the same chunked path and agrees too
+        let full = server.submit_wait(job()).unwrap();
+        let max = full.out.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(max < 1e-4, "chunked full vs monolithic diff {max}");
+        let m = server.metrics();
+        assert_eq!(m.chunked_ingests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.prefill_chunks.load(Ordering::Relaxed), 10);
+        assert_eq!(m.sessions_opened.load(Ordering::Relaxed), 1);
+        assert_eq!(m.ingest_serial_fallbacks.load(Ordering::Relaxed), 0);
+        // the session is live at the full prompt position
+        let mut rng = Rng::new(3);
+        let dj = DecodeJob {
+            session: sid,
+            heads: 2,
+            d: 16,
+            pos: Some(n),
+            q: rng.normal_vec(32),
+            k: rng.normal_vec(32),
+            v: rng.normal_vec(32),
+        };
+        let resp = server.decode_wait(dj).unwrap();
+        assert_eq!(resp.pos, n);
+        let g = server.cache_gauges();
+        assert_eq!(g.chunked_ingests, 2);
+        assert_eq!(g.prefill_chunks, 10);
+        server.shutdown();
+    }
+
+    /// Tokens keep flowing while a long prompt streams in: with each
+    /// chunk slowed by an injected delay, decode steps for a live
+    /// session complete BEFORE the big open resolves — the occupancy-
+    /// under-ingest property the chunked path exists for.
+    #[test]
+    fn decode_keeps_flowing_during_chunked_ingest() {
+        let _g = crate::coordinator::failpoint::test_lock::serial();
+        crate::coordinator::failpoint::configure("prefill_chunk=delay:2ms", 1).unwrap();
+        let mut cfg = ServerConfig::substrate_only();
+        cfg.sched.prefill_chunk = 4;
+        let server = Server::start(cfg).unwrap();
+        // a short session first (n == chunk: stays monolithic)
+        let (sid, t) = server
+            .open_session(mk_job(4, ModePreference::Exact, true, 1))
+            .unwrap();
+        t.wait().unwrap();
+        // the long open streams in 4-row chunks, each >= 2ms
+        let (_, t_big) = server
+            .open_session(mk_job(240, ModePreference::Exact, true, 2))
+            .unwrap();
+        let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let waiter = {
+            let done = done.clone();
+            std::thread::spawn(move || {
+                let r = t_big.wait();
+                done.store(true, Ordering::SeqCst);
+                r
+            })
+        };
+        let mut rng = Rng::new(9);
+        let mut decoded_during = 0usize;
+        while !done.load(Ordering::SeqCst) {
+            let dj = DecodeJob {
+                session: sid,
+                heads: 2,
+                d: 16,
+                pos: None,
+                q: rng.normal_vec(32),
+                k: rng.normal_vec(32),
+                v: rng.normal_vec(32),
+            };
+            if server.decode_wait(dj).is_ok() {
+                decoded_during += 1;
+            }
+        }
+        waiter.join().unwrap().unwrap();
+        crate::coordinator::failpoint::clear();
+        assert!(decoded_during > 0, "decode lane starved during the long ingest");
+        let m = server.metrics();
+        assert_eq!(m.chunked_ingests.load(Ordering::Relaxed), 1);
+        assert_eq!(m.prefill_chunks.load(Ordering::Relaxed), 60);
+        server.shutdown();
+    }
+
+    /// A windowed (sink-less) session can now open a prompt much longer
+    /// than its window: the coordinator chunks the ingest and clamps
+    /// each appended chunk to the window, so no chunk trips the op's
+    /// "would evict its own oldest queries" guard.
+    #[test]
+    fn windowed_open_of_long_prompt_succeeds_via_chunking() {
+        use crate::attention::op::CachePolicy;
+        let mut cfg = ServerConfig::substrate_only();
+        cfg.cache.page_elems = 3 * 2 * 16 * 8; // 8 rows/page at (h=2, d=16)
+        cfg.cache.policy = CachePolicy::SlidingWindow { window: 16, sink: 0 };
+        cfg.sched.prefill_chunk = 24; // > window: exercises the per-chunk clamp
+        let server = Server::start(cfg).unwrap();
+        let n = 96usize;
+        let (sid, t) = server
+            .open_session(mk_job(n, ModePreference::Exact, true, 5))
+            .unwrap();
+        let resp = t.wait().unwrap();
+        assert_eq!(resp.out.len(), 2 * n * 16);
+        assert!(resp.out.iter().all(|x| x.is_finite()));
+        // decode continues at the full logical position
+        let mut rng = Rng::new(6);
+        let dj = DecodeJob {
+            session: sid,
+            heads: 2,
+            d: 16,
+            pos: Some(n),
+            q: rng.normal_vec(32),
+            k: rng.normal_vec(32),
+            v: rng.normal_vec(32),
+        };
+        assert_eq!(server.decode_wait(dj).unwrap().pos, n);
+        server.shutdown();
     }
 
     /// Failpoints are configuration, not code: the same binary with the

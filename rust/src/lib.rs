@@ -116,6 +116,33 @@
 //! free functions were removed; the view-based cores behind
 //! `AttentionOp` are the only implementation surface.)
 //!
+//! ## Long-context prefill
+//!
+//! Prompt ingest is **chunk-appendable** end to end.  At the op layer,
+//! [`attention::op::AttentionOp::prefill`] over a non-empty `Full`
+//! cache routes causal hyper-family jobs past
+//! [`attention::op::AutoPolicy::prefill_hyper_threshold`] through the
+//! chunk-appendable estimator: the chunk's queries attend the cached
+//! prefix through the same appendable LSH-bucket/sample state sampled
+//! decode uses (`O((b+m)·d)` per row instead of `O(prior·d)`), the
+//! chunk's own causal triangle runs Algorithm 4, the two disjoint-key
+//! softmax triples merge exactly, and the chunk's keys join the bucket
+//! order incrementally ([`lsh::BucketOrder`] — no re-sort, no rebuild).
+//! An `n`-row prompt fed in `c`-row chunks therefore costs near-linear
+//! `O(n·(b+m)·d)` instead of the exact streaming pass's `O(n²·d)`.
+//! At the serving layer (`serve --prefill-chunk C`,
+//! [`coordinator::SchedConfig::prefill_chunk`]), long causal opens are
+//! admitted through the continuous-batching scheduler as **chunked
+//! ingests**: one chunk is fed per tick between decode batches, so a
+//! 131k-token prompt no longer stalls the decode lanes of every other
+//! live session (`chunked_ingests`/`prefill_chunks` gauges in
+//! [`coordinator::CacheGauges`]).  A chunk-level fault
+//! (`prefill_chunk` failpoint) degrades that ingest to one serial
+//! prefill of its remaining rows — ladder semantics, not a dropped
+//! ticket — and a sink-less sliding-window session's chunks are
+//! clamped to its window, so prompts far longer than the window ingest
+//! cleanly instead of tripping the op-layer self-eviction guard.
+//!
 //! ## Continuous batching & speculative decode
 //!
 //! The decode lane is **continuously batched**

@@ -54,6 +54,82 @@ pub fn collision_probability(theta: f64, r: usize) -> f64 {
     (1.0 - theta / std::f64::consts::PI).powi(r as i32)
 }
 
+/// Incrementally maintained Hamming-sorted bucket order: the
+/// `(sorted_idx, sorted_bucket)` pair that [`Lsh::sort_permutation`]
+/// produces in one shot, but **chunk-appendable** — a new chunk of `c`
+/// hashed rows joins an `n`-row order in `O(n + c)` by a stable
+/// two-finger merge instead of an `O((n+c) log(n+c))` re-sort (or,
+/// worse, an `O(c·n·d)` exact fallback).  This is the bucket state that
+/// makes chunked causal-hyper prefill near-linear: the sorted structure
+/// persists across chunks and across the prefill→decode transition.
+#[derive(Clone, Debug, Default)]
+pub struct BucketOrder {
+    /// original row index of each sorted position (the permutation)
+    pub sorted_idx: Vec<usize>,
+    /// bucket id at each sorted position (non-decreasing)
+    pub sorted_bucket: Vec<u32>,
+}
+
+impl BucketOrder {
+    /// Sorted order of `buckets[i]` for rows `0..buckets.len()`.
+    pub fn build(buckets: &[u32]) -> Self {
+        let sorted_idx = argsort(buckets);
+        let sorted_bucket = sorted_idx.iter().map(|&i| buckets[i]).collect();
+        BucketOrder { sorted_idx, sorted_bucket }
+    }
+
+    /// Number of rows currently in the order.
+    pub fn len(&self) -> usize {
+        self.sorted_idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted_idx.is_empty()
+    }
+
+    /// Merge a chunk of hashed rows into the order.  The chunk's rows
+    /// have original indices `first_idx..first_idx + chunk.len()` and
+    /// bucket ids `chunk`.  Stable: existing rows keep their relative
+    /// order, and within a bucket the chunk's rows land after existing
+    /// rows and in chunk order (equivalent to a stable sort of the
+    /// concatenated id sequence).  O(n + c + c log c).
+    pub fn append(&mut self, first_idx: usize, chunk: &[u32]) {
+        if chunk.is_empty() {
+            return;
+        }
+        // Sort the chunk itself (stable, so equal ids keep chunk order).
+        let chunk_order = argsort(chunk);
+        let n = self.sorted_idx.len();
+        let c = chunk.len();
+        let mut idx = Vec::with_capacity(n + c);
+        let mut bkt = Vec::with_capacity(n + c);
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < n && j < c {
+            let cj = chunk_order[j];
+            // `<=` keeps existing rows first within a bucket: stable.
+            if self.sorted_bucket[i] <= chunk[cj] {
+                idx.push(self.sorted_idx[i]);
+                bkt.push(self.sorted_bucket[i]);
+                i += 1;
+            } else {
+                idx.push(first_idx + cj);
+                bkt.push(chunk[cj]);
+                j += 1;
+            }
+        }
+        for r in i..n {
+            idx.push(self.sorted_idx[r]);
+            bkt.push(self.sorted_bucket[r]);
+        }
+        for r in j..c {
+            idx.push(first_idx + chunk_order[r]);
+            bkt.push(chunk[chunk_order[r]]);
+        }
+        self.sorted_idx = idx;
+        self.sorted_bucket = bkt;
+    }
+}
+
 /// The sortLSH block mask M^H in factored form: the permutations plus the
 /// block size fully determine it (dense form is test-only).
 #[derive(Clone, Debug)]
@@ -210,6 +286,48 @@ mod tests {
             assert_eq!(rs as usize, 16, "row {i}");
         }
         assert_eq!(mask.nnz(), 64 * 16);
+    }
+
+    #[test]
+    fn bucket_order_append_matches_one_shot() {
+        // Any chunking of the id stream must reproduce the one-shot
+        // stable sort — the invariant the chunked prefill path rests on.
+        let mut rng = Rng::new(7);
+        let lsh = Lsh::new(8, 6, &mut rng);
+        let x = Mat::randn(97, 8, &mut rng);
+        let buckets = lsh.buckets(x.view());
+        let oracle = BucketOrder::build(&buckets);
+        for chunk in [1usize, 7, 31, 64, 97] {
+            let mut inc = BucketOrder::default();
+            let mut fed = 0;
+            while fed < buckets.len() {
+                let hi = (fed + chunk).min(buckets.len());
+                inc.append(fed, &buckets[fed..hi]);
+                fed = hi;
+            }
+            assert_eq!(inc.sorted_idx, oracle.sorted_idx, "chunk {chunk}");
+            assert_eq!(inc.sorted_bucket, oracle.sorted_bucket, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn bucket_order_append_is_sorted_and_complete() {
+        let mut rng = Rng::new(8);
+        let lsh = Lsh::new(8, 5, &mut rng);
+        let x = Mat::randn(50, 8, &mut rng);
+        let buckets = lsh.buckets(x.view());
+        let mut ord = BucketOrder::build(&buckets[..20]);
+        ord.append(20, &buckets[20..50]);
+        assert_eq!(ord.len(), 50);
+        for w in ord.sorted_bucket.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        let mut seen = ord.sorted_idx.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..50).collect::<Vec<_>>());
+        for (pos, &i) in ord.sorted_idx.iter().enumerate() {
+            assert_eq!(ord.sorted_bucket[pos], buckets[i]);
+        }
     }
 
     #[test]

@@ -102,6 +102,10 @@ COMMANDS:
                                      sliding window before shedding
            [--sched-max-batch B]     continuous-batching scheduler: fuse up
                                      to B decode rows per tick (default 8)
+           [--prefill-chunk C]       chunked long-prompt ingest: admit
+                                     causal prompts longer than C rows
+                                     through the scheduler C rows per tick
+                                     so decode lanes keep flowing (0 = off)
            [--draft-k K]             speculative draft lanes: K shadow steps
                                      per accept/rollback window (0 = off)
            [--draft-window W]        sliding window of the draft fork
@@ -118,6 +122,8 @@ COMMANDS:
                                      lanes per decode_step_batch call)
            [--draft-k 2,4]           speculative decode rows (accept rate +
                                      effective tok/s per draft depth)
+           [--prefill-sizes 16384,65536 --prefill-chunk 2048]  chunked-hyper
+                                     vs exact-streaming long-prompt ingest
   fig4     --sizes 4096,8192,... --d D --block B --samples M [--backward] --reps R
   fig3     --steps S --seq-len N
   table1   --steps S --seq-len N --reps R
@@ -152,6 +158,8 @@ fn main() {
                 args.get("sched-n", 2048usize),
                 args.get("sched-steps", 32usize),
                 &args.list("draft-k", &[2, 4]),
+                &args.list("prefill-sizes", &[16384, 65536]),
+                args.get("prefill-chunk", 2048usize),
             );
             let text = doc.to_string();
             match args.get_str("json") {
@@ -218,6 +226,23 @@ fn main() {
                             g("indep_pages"),
                             g("pages_shared"),
                             g("cow_copies"),
+                        );
+                    }
+                }
+            }
+            if let Some(prefill) = doc.get("prefill") {
+                if let Some(rows) = prefill.as_array() {
+                    for row in rows {
+                        let g = |k: &str| row.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+                        println!(
+                            "prefill (n={:.0}, chunk={:.0}): chunked-hyper {:.0} tok/s vs \
+                             exact-streaming {:.0} tok/s ({:.2}x), err {:.2e} vs one-shot",
+                            g("n"),
+                            g("chunk"),
+                            g("hyper_tok_s"),
+                            g("exact_tok_s"),
+                            g("speedup"),
+                            g("max_abs_diff"),
                         );
                     }
                 }
@@ -361,6 +386,7 @@ fn cmd_serve(args: &Args) {
     }
     // continuous-batching scheduler + speculative draft lanes
     cfg.sched.max_batch = args.get("sched-max-batch", cfg.sched.max_batch);
+    cfg.sched.prefill_chunk = args.get("prefill-chunk", cfg.sched.prefill_chunk);
     cfg.sched.draft_k = args.get("draft-k", cfg.sched.draft_k);
     let draft_window = args.get("draft-window", 0usize);
     if draft_window > 0 {

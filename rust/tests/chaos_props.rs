@@ -22,6 +22,9 @@
 //! faults with speculative draft lanes armed on half the trials (a
 //! fork failing mid-speculation drops only the draft; the parent
 //! session keeps decoding and the pool-conservation invariant holds).
+//! Half the trials also stream their opens through the scheduler's
+//! chunked-ingest path (`prefill_chunk` faults: an err degrades that
+//! ingest to one serial prefill, a panic fails only its ticket).
 //!
 //! A final pair of trials checks the zero-cost contract: with no spec
 //! armed (and after `clear()`), a seeded workload is bitwise identical
@@ -165,6 +168,15 @@ fn chaos_spec(rng: &mut Rng) -> String {
     if rng.next_f32() < 0.35 {
         parts.push(format!("kv_fork=err:{:.2}", 0.1 + 0.3 * rng.next_f32()));
     }
+    // chunked-ingest faults: an err degrades that ingest to one serial
+    // monolithic prefill of its remaining rows, a panic is caught by
+    // the scheduler and fails only that ingest's ticket
+    if rng.next_f32() < 0.35 {
+        parts.push(format!("prefill_chunk=err:{:.2}", 0.1 + 0.3 * rng.next_f32()));
+    }
+    if rng.next_f32() < 0.2 {
+        parts.push(format!("prefill_chunk=panic:{:.2}", 0.05 + 0.1 * rng.next_f32()));
+    }
     if parts.is_empty() {
         // at least one site armed per trial, or it isn't a chaos trial
         parts.push("decode_job=err:0.1".to_string());
@@ -192,6 +204,12 @@ fn run_trial(seed: u64) {
     if rng.next_f32() < 0.5 {
         cfg.sched.draft_k = 2;
         cfg.sched.draft_window = 4;
+    }
+    // half the trials stream long opens through the scheduler in 4-row
+    // chunks, so decode batches, draft lanes, and chunk feeds interleave
+    // (and prefill_chunk faults have a live site to fire at)
+    if rng.next_f32() < 0.5 {
+        cfg.sched.prefill_chunk = 4;
     }
     if rng.next_f32() < 0.3 {
         // aggressive deadlines on some trials: expiry is one more path
