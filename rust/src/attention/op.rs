@@ -56,7 +56,9 @@ use super::exact;
 use super::hyper::{self, HyperParams, HyperPlan, SampleMode};
 use super::{softmax_scale, Parts, NEG_INF};
 use crate::kernel;
-use crate::linalg::{self, KvCache, Mat, MatRef, PagePool, QkvView, DEFAULT_PAGE_ROWS};
+use crate::linalg::{
+    self, KvCache, KvSegment, Mat, MatRef, PagePool, QkvView, SegStore, DEFAULT_PAGE_ROWS,
+};
 use crate::lsh::{BucketOrder, Lsh};
 use crate::par;
 use crate::rng::Rng;
@@ -841,10 +843,13 @@ fn sampled_row_parts(
     // ratio-estimator rescale to the (built − w) unmasked prefix keys
     let us = if kept == 0 { 0.0 } else { (built - w) as f32 / kept as f32 };
 
-    // one-row streaming softmax over the candidate set
+    // one-row streaming softmax over the candidate set; the scaled-key
+    // dot and the P·V accumulate go through the cache's mixed-precision
+    // row ops (f32 rows take the identical pre-quant kernel calls,
+    // frozen quantized rows stream through the fused dequant kernels)
     let mut logits = vec![0.0f32; idx.len()];
     for (t, &j) in idx.iter().enumerate() {
-        logits[t] = linalg::dot(qrow, kv.key_row_scaled(head, j));
+        logits[t] = kv.dot_key_row(head, j, qrow);
     }
     let mx = if logits.is_empty() { NEG_INF } else { kernel::hmax(&logits) };
     let mut num = vec![0.0f32; d];
@@ -856,7 +861,7 @@ fn sampled_row_parts(
         }
         let p = wgt * (logits[t] - mx).exp();
         den += p;
-        kernel::axpy(p, kv.value_row(head, j), &mut num);
+        kv.axpy_value_row(head, j, p, &mut num);
     }
     (mx, den, num)
 }
@@ -892,15 +897,115 @@ fn attend_resident(
     q_abs_base: usize,
     block: usize,
 ) -> Parts {
-    let mut acc = Parts::empty(q.rows, kv.d());
+    let d = kv.d();
+    let mut acc = Parts::empty(q.rows, d);
+    let mut logits: Vec<f32> = Vec::new(); // lazily sized quant scratch
     for seg in kv.head_segments(head) {
         if causal && seg.abs_start > q_abs_base + q.rows - 1 {
             break; // this and all later pages are fully in the future
         }
         let off = q_abs_base as isize - seg.abs_start as isize;
-        acc.merge(&exact::flash_prefill_view(q, seg.ks, seg.v, causal, off, block));
+        match seg.store {
+            SegStore::F32 { ks, v, .. } => {
+                acc.merge(&exact::flash_prefill_view(q, ks, v, causal, off, block));
+            }
+            _ => {
+                // frozen quantized page: per-row fused dequant streaming
+                // into a segment-local triple, merged exactly like any
+                // other disjoint-key part
+                logits.resize(block.max(1), 0.0);
+                let mut part = Parts::empty(q.rows, d);
+                for i in 0..q.rows {
+                    let (m, s) = quant_row_segment(
+                        q.row(i),
+                        &seg,
+                        causal,
+                        off + i as isize,
+                        block,
+                        part.num.row_mut(i),
+                        &mut logits,
+                    );
+                    part.m[i] = m;
+                    part.s[i] = s;
+                }
+                acc.merge(&part);
+            }
+        }
     }
     acc
+}
+
+/// Single-query-row streaming pass over one **quantized** key/value
+/// segment — the mixed-precision sibling of
+/// [`exact::flash_row_segment`], with the same key-tile loop and online
+/// softmax recurrence but the logit dot and P·V accumulate fused with
+/// dequantization: `logit = dot_q8/f16(q, k_row) · k_const` (the page's
+/// K scale and the softmax scale pre-folded by
+/// [`KvCache::head_segments`]) and `num += (p · v_scale) · v_row` via
+/// `axpy_q8/f16`.  No f32 copy of the page is ever materialized.
+fn quant_row_segment(
+    qrow: &[f32],
+    seg: &KvSegment<'_>,
+    causal: bool,
+    q_offset: isize,
+    block: usize,
+    num: &mut [f32],
+    logits: &mut [f32],
+) -> (f32, f32) {
+    let d = qrow.len();
+    let nk = seg.rows;
+    let block = block.max(1);
+    debug_assert!(logits.len() >= block);
+    let mut m = NEG_INF;
+    let mut s = 0.0f32;
+    num.fill(0.0);
+    for j0 in (0..nk).step_by(block) {
+        if causal && (j0 as isize) > q_offset {
+            break; // tile fully above the diagonal: skip
+        }
+        let j1 = (j0 + block).min(nk);
+        let jlim = if causal { j1.min((q_offset + 1).max(0) as usize) } else { j1 };
+        if jlim <= j0 {
+            continue;
+        }
+        let cnt = jlim - j0;
+        for (t, l) in logits[..cnt].iter_mut().enumerate() {
+            let r = (j0 + t) * d;
+            *l = match seg.store {
+                SegStore::F16 { k, k_const, .. } => {
+                    kernel::dot_f16(qrow, &k[r..r + d]) * k_const
+                }
+                SegStore::Q8 { k, k_const, .. } => {
+                    kernel::dot_q8(qrow, &k[r..r + d]) * k_const
+                }
+                SegStore::F32 { .. } => unreachable!("f32 segments take the exact kernel path"),
+            };
+        }
+        let lrow = &mut logits[..cnt];
+        let bm = kernel::hmax(lrow);
+        let m_new = m.max(bm);
+        let e_old = (m - m_new).exp();
+        s *= e_old;
+        if e_old != 1.0 {
+            kernel::scale(num, e_old);
+        }
+        s += kernel::exp_sub_sum(lrow, m_new);
+        for (t, &p) in lrow.iter().enumerate() {
+            if p == 0.0 {
+                continue;
+            }
+            let r = (j0 + t) * d;
+            match seg.store {
+                SegStore::F16 { v, .. } => kernel::axpy_f16(p, &v[r..r + d], num),
+                SegStore::Q8 { v, v_scale, .. } => {
+                    kernel::axpy_q8(p * v_scale, &v[r..r + d], num)
+                }
+                SegStore::F32 { .. } => unreachable!(),
+            }
+        }
+        m = m_new;
+    }
+    (m, s)
 }
 
 /// The exact one-row decode pass: the same per-page streaming +
@@ -923,9 +1028,12 @@ fn attend_resident_row(kv: &KvCache, head: usize, qrow: &[f32], block: usize) ->
     let mut logits = vec![0.0f32; block.max(1)];
     for seg in kv.head_segments(head) {
         let off = 0isize - seg.abs_start as isize;
-        let (m_l, s_l) = exact::flash_row_segment(
-            qrow, seg.ks, seg.v, false, off, block, &mut loc_num, &mut logits,
-        );
+        let (m_l, s_l) = match seg.store {
+            SegStore::F32 { ks, v, .. } => exact::flash_row_segment(
+                qrow, ks, v, false, off, block, &mut loc_num, &mut logits,
+            ),
+            _ => quant_row_segment(qrow, &seg, false, off, block, &mut loc_num, &mut logits),
+        };
         // the one-row Parts::merge recurrence, applied to the
         // accumulator in place (identical op order, so bitwise-equal)
         let m = acc_m.max(m_l);

@@ -386,6 +386,90 @@ pub fn run_cache_bench(
     rows
 }
 
+/// One row of the quantized-KV gate: exact decode over an `n`-row
+/// frozen prefix with f16/int8 page compression vs the plain f32 cache.
+#[derive(Clone, Debug)]
+pub struct QuantBenchRow {
+    pub n: usize,
+    pub steps: usize,
+    /// "int8" or "f16"
+    pub mode: &'static str,
+    /// decode tokens/sec over the quantized cache
+    pub quant_tok_s: f64,
+    /// decode tokens/sec over the f32 cache
+    pub f32_tok_s: f64,
+    /// resident pool bytes after warmup (quantized vs f32 run)
+    pub quant_bytes: usize,
+    pub f32_bytes: usize,
+    /// resident frames holding a compressed store after warmup
+    pub quant_pages: usize,
+    /// max |quantized − f32| over every decoded output element
+    pub max_abs_err: f64,
+}
+
+/// Quantized-KV decode bench: warm a full-policy paged cache with an
+/// `n`-row prefix (full pages compress at their freeze points), then
+/// time `steps` exact single-token decode steps and compare tokens/sec,
+/// resident pool bytes, and per-element output error against the
+/// identical run over an f32 pool — the numbers behind the "int8 pages
+/// cost ~1/6 the bytes at pinned accuracy" capacity claim.
+pub fn run_quant_bench(sizes: &[usize], d: usize, steps: usize) -> Vec<QuantBenchRow> {
+    use crate::linalg::{PagePool, QuantMode, DEFAULT_PAGE_ROWS};
+    let steps = steps.max(1);
+    let flash = flash_op(true);
+    let mut rows = Vec::new();
+    for &n in sizes {
+        let total = n + steps;
+        let (q, k, v) = clustered_qkv(42, total, d, 32, 0.5);
+        let step_view = |t: usize| {
+            let lo = (n + t) * d;
+            let hi = lo + d;
+            QkvView::new(1, 1, d, &q.data[lo..hi], &k.data[lo..hi], &v.data[lo..hi])
+                .expect("token window")
+        };
+        let run = |quant: QuantMode| -> (f64, usize, usize, Vec<Vec<f32>>) {
+            let pool = PagePool::with_quant(3 * d * DEFAULT_PAGE_ROWS, None, quant);
+            let mut cache =
+                AttnCache::with_pool(1, d, CachePolicy::Full, &pool).expect("valid cache policy");
+            let pv = QkvView::strided(1, n, d, total * d, &q.data, &k.data, &v.data)
+                .expect("prefix window");
+            cache.append_kv(&pv).expect("warm cache");
+            let s = pool.stats();
+            let (bytes, qpages) = (s.bytes_in_use, s.quant_pages);
+            let mut outs = Vec::with_capacity(steps);
+            let t0 = Instant::now();
+            for t in 0..steps {
+                let o = flash.decode_step(&mut cache, step_view(t)).expect("decode step");
+                outs.push(o.out);
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            (steps as f64 / dt.max(1e-12), bytes, qpages, outs)
+        };
+        let (f32_tok_s, f32_bytes, _, base_outs) = run(QuantMode::Off);
+        for (mode, name) in [(QuantMode::Int8, "int8"), (QuantMode::F16, "f16")] {
+            let (quant_tok_s, quant_bytes, quant_pages, outs) = run(mode);
+            let mut max_abs_err = 0.0f64;
+            for (a, b) in outs.iter().zip(&base_outs) {
+                for (x, y) in a.iter().zip(b) {
+                    max_abs_err = max_abs_err.max((x - y).abs() as f64);
+                }
+            }
+            rows.push(QuantBenchRow {
+                n,
+                steps,
+                mode: name,
+                quant_tok_s,
+                f32_tok_s,
+                quant_bytes,
+                f32_bytes,
+                quant_pages,
+                max_abs_err,
+            });
+        }
+    }
+    rows
+}
+
 /// One row of the prefix-sharing gate: N sessions continuing one
 /// shared P-row prefix via [`AttnCache::fork`] (refcount bumps +
 /// copy-on-write tail) vs N sessions each independently ingesting the
@@ -828,6 +912,7 @@ pub fn run_attention_bench_json(
     draft_ks: &[usize],
     prefill_sizes: &[usize],
     prefill_chunk: usize,
+    quant_sizes: &[usize],
 ) -> Value {
     use std::collections::BTreeMap;
     let mut root = BTreeMap::new();
@@ -1021,6 +1106,27 @@ pub fn run_attention_bench_json(
         prefill.push(Value::Object(o));
     }
     root.insert("prefill".into(), Value::Array(prefill));
+
+    // ---- 8) quantized-KV gate: compressed frozen pages ------------------
+    let mut kv_quant = Vec::new();
+    for r in run_quant_bench(quant_sizes, d, decode_steps) {
+        let mut o = BTreeMap::new();
+        o.insert("n".into(), Value::Num(r.n as f64));
+        o.insert("steps".into(), Value::Num(r.steps as f64));
+        o.insert("mode".into(), Value::Str(r.mode.into()));
+        o.insert("quant_tok_s".into(), Value::Num(r.quant_tok_s));
+        o.insert("f32_tok_s".into(), Value::Num(r.f32_tok_s));
+        o.insert("quant_bytes".into(), Value::Num(r.quant_bytes as f64));
+        o.insert("f32_bytes".into(), Value::Num(r.f32_bytes as f64));
+        o.insert("quant_pages".into(), Value::Num(r.quant_pages as f64));
+        o.insert(
+            "bytes_ratio".into(),
+            Value::Num(r.f32_bytes as f64 / (r.quant_bytes as f64).max(1.0)),
+        );
+        o.insert("max_abs_err".into(), Value::Num(r.max_abs_err));
+        kv_quant.push(Value::Object(o));
+    }
+    root.insert("kv_quant".into(), Value::Array(kv_quant));
 
     root.insert(
         "threads".into(),
@@ -1354,6 +1460,7 @@ mod tests {
             &[2],
             &[64],
             16,
+            &[],
         );
         let prefix = doc.get("prefix").expect("prefix section present");
         let rows = match prefix {
@@ -1393,6 +1500,7 @@ mod tests {
             &[2],
             &[64],
             16,
+            &[],
         );
         let cache = doc.get("cache").expect("cache section present");
         let rows = match cache {
@@ -1431,6 +1539,7 @@ mod tests {
             &[2],
             &[64],
             16,
+            &[],
         );
         let decode = doc.get("decode").expect("decode section present");
         let rows = match decode {
@@ -1492,6 +1601,7 @@ mod tests {
             &[2],
             &[64],
             16,
+            &[],
         );
         let sched = doc.get("decode_batched").expect("decode_batched section");
         let streams = match sched.get("streams").expect("streams rows") {
@@ -1546,6 +1656,7 @@ mod tests {
             &[2],
             &[96],
             32,
+            &[],
         );
         let prefill = doc.get("prefill").expect("prefill section present");
         let rows = match prefill {
@@ -1562,6 +1673,71 @@ mod tests {
             .and_then(|v| v.as_f64())
             .unwrap()
             .is_finite());
+    }
+
+    #[test]
+    fn quant_bench_rows_sane() {
+        let rows = run_quant_bench(&[96], 16, 2);
+        assert_eq!(rows.len(), 2); // int8 + f16 against the same f32 baseline
+        for r in &rows {
+            assert_eq!((r.n, r.steps), (96, 2));
+            assert!(r.quant_tok_s > 0.0 && r.quant_tok_s.is_finite());
+            assert!(r.f32_tok_s > 0.0 && r.f32_tok_s.is_finite());
+            // 96 rows at d=16/h=1 fill one 64-row page: it must freeze
+            assert!(r.quant_pages >= 1, "full page must freeze compressed");
+            assert!(
+                r.quant_bytes < r.f32_bytes,
+                "compressed run must hold fewer resident bytes ({} vs {})",
+                r.quant_bytes,
+                r.f32_bytes
+            );
+            assert!(r.max_abs_err.is_finite());
+        }
+        assert_eq!(rows[0].mode, "int8");
+        assert_eq!(rows[1].mode, "f16");
+    }
+
+    #[test]
+    fn bench_json_has_kv_quant_section() {
+        let doc = run_attention_bench_json(
+            &[64],
+            16,
+            16,
+            16,
+            1,
+            &[64],
+            2,
+            &[64],
+            32,
+            8,
+            &[128],
+            2,
+            &[2],
+            64,
+            2,
+            &[2],
+            &[64],
+            16,
+            &[96],
+        );
+        let rows = match doc.get("kv_quant").expect("kv_quant section present") {
+            Value::Array(a) => a,
+            _ => panic!("kv_quant section must be an array"),
+        };
+        assert_eq!(rows.len(), 2);
+        for row in rows {
+            assert!(row.get("quant_tok_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+            assert!(row.get("f32_tok_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+            assert!(
+                row.get("bytes_ratio").and_then(|v| v.as_f64()).unwrap() > 1.0,
+                "frozen-page compression must shrink resident bytes"
+            );
+            assert!(row
+                .get("max_abs_err")
+                .and_then(|v| v.as_f64())
+                .unwrap()
+                .is_finite());
+        }
     }
 
     #[test]

@@ -54,7 +54,7 @@ use super::request::{
 };
 use super::router::{Route, RouteKind, RouterConfig};
 use crate::attention::op::{self, AttnCache, AttnConfig, AttentionOp, CachePolicy, SeedPolicy};
-use crate::linalg::{PagePool, QkvView, POOL_EXHAUSTED};
+use crate::linalg::{PagePool, QkvView, QuantMode, POOL_EXHAUSTED};
 use crate::runtime::Runtime;
 
 /// The unit of engine work.
@@ -147,6 +147,16 @@ pub struct CacheConfig {
     /// for availability before the final admission-reject shed.
     /// None (the default) disables the degrade rung of the ladder.
     pub degrade_window: Option<usize>,
+    /// Frozen-page KV compression mode ([`QuantMode::Off`] by default):
+    /// with `F16`/`Int8`, every full page is compressed at the moment it
+    /// freezes (and its f32 planes — including the pre-scaled K mirror —
+    /// dropped), shrinking its resident footprint to ~1/3 (f16) or ~1/6
+    /// (int8) of the f32 page and multiplying what a byte budget holds.
+    /// Sink pages and the hot partial tail stay f32; decode streams
+    /// quantized pages through fused dequant kernels.  A `page_freeze`
+    /// failpoint fault degrades just that page back to f32
+    /// ([`crate::linalg::PoolStats::quant_fallbacks`]).
+    pub quant: QuantMode,
 }
 
 impl Default for CacheConfig {
@@ -158,6 +168,7 @@ impl Default for CacheConfig {
             policy: CachePolicy::Full,
             idle_ttl: None,
             degrade_window: None,
+            quant: QuantMode::Off,
         }
     }
 }
@@ -412,6 +423,12 @@ pub(crate) fn cache_gauges(
         pool_allocs: s.allocs,
         pool_reuses: s.reuses,
         pool_rejects: s.rejects,
+        kv_quant: s.quant.name(),
+        bytes_in_use: s.bytes_in_use,
+        bytes_peak: s.bytes_peak,
+        bytes_saved_quant: s.bytes_saved_quant,
+        quant_pages: s.quant_pages,
+        quant_fallbacks: s.quant_fallbacks,
         sessions_evicted: metrics.sessions_evicted.load(Relaxed),
         sessions_reclaimed: metrics.sessions_reclaimed.load(Relaxed),
         admission_rejects: metrics.admission_rejects.load(Relaxed),
@@ -426,6 +443,9 @@ pub(crate) fn cache_gauges(
         draft_proposed: metrics.draft_proposed.load(Relaxed),
         draft_accepted: metrics.draft_accepted.load(Relaxed),
         draft_rollbacks: metrics.draft_rollbacks.load(Relaxed),
+        chunked_ingests: metrics.chunked_ingests.load(Relaxed),
+        prefill_chunks: metrics.prefill_chunks.load(Relaxed),
+        ingest_serial_fallbacks: metrics.ingest_serial_fallbacks.load(Relaxed),
     }
 }
 
@@ -1121,7 +1141,7 @@ pub fn spawn(
     String,
 > {
     let (tx, rx) = std::sync::mpsc::sync_channel::<EngineMsg>(queue_depth);
-    let pool = PagePool::new(cache.page_elems, cache.budget_pages);
+    let pool = PagePool::with_quant(cache.page_elems, cache.budget_pages, cache.quant);
     let ctx = EngineCtx {
         rc: router_config,
         cache,

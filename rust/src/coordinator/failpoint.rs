@@ -18,6 +18,7 @@
 //! site     := pool_alloc | kv_append | kv_fork | open_job | full_job
 //!           | decode_job | session_checkout | prefix_register
 //!           | prefix_release | engine_recv | sched_tick | prefill_chunk
+//!           | page_freeze
 //! action   := 'err' [':' prob]          -- return an injected error
 //!           | 'panic' [':' prob]        -- panic! at the site
 //!           | 'delay' ':' millis 'ms' [':' prob]
@@ -64,7 +65,7 @@ use crate::rng::Rng;
 pub const INJECTED: &str = "injected failpoint";
 
 /// The fixed set of compiled-in failpoint sites, in counter order.
-pub const SITES: [&str; 12] = [
+pub const SITES: [&str; 13] = [
     "pool_alloc",
     "kv_append",
     "kv_fork",
@@ -77,6 +78,7 @@ pub const SITES: [&str; 12] = [
     "engine_recv",
     "sched_tick",
     "prefill_chunk",
+    "page_freeze",
 ];
 
 /// What a configured site does when its probability draw fires.
@@ -110,6 +112,7 @@ static STATE: Mutex<Option<State>> = Mutex::new(None);
 /// Per-site fire counters (index-aligned with [`SITES`]); survive
 /// [`clear`] within a process so a serve run can report totals.
 static TRIGGERS: [AtomicU64; SITES.len()] = [
+    AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),

@@ -267,6 +267,19 @@ pub struct CacheGauges {
     pub pool_allocs: u64,
     pub pool_reuses: u64,
     pub pool_rejects: u64,
+    /// frozen-page KV compression mode of the pool ("off"/"f16"/"int8")
+    pub kv_quant: &'static str,
+    /// byte-level pool gauges: resident bytes now, the high-water mark,
+    /// and the cumulative resident bytes currently being saved by
+    /// quantized stores vs. their f32 frames
+    pub bytes_in_use: usize,
+    pub bytes_peak: usize,
+    pub bytes_saved_quant: usize,
+    /// resident frames holding a compressed (f16/int8) store
+    pub quant_pages: usize,
+    /// pages that stayed f32 because a `page_freeze` fault fired at
+    /// their freeze point (the quant rung of the degradation ladder)
+    pub quant_fallbacks: u64,
     /// sessions LRU-evicted for admission, idle sessions reclaimed by
     /// the TTL sweep, and opens/decodes bounced with backpressure
     pub sessions_evicted: u64,
@@ -340,6 +353,8 @@ impl CacheGauges {
             "kv cache: pages in_use={} shared={} free={} peak={} budget={budget} \
              util={:.0}% page_elems={}\n\
              kv pool:  allocs={} reuses={} rejects={} cow_copies={}\n\
+             kv bytes: quant={} in_use={} peak={} saved_quant={} quant_pages={} \
+             quant_fallbacks={}\n\
              kv admission: lru_evicted={} ttl_reclaimed={} rejects={} degraded={}\n\
              kv sched: occupancy_mean={:.2} serial_fallbacks={}\n\
              kv ingest: chunked={} chunks={} serial_fallbacks={}\n\
@@ -357,6 +372,12 @@ impl CacheGauges {
             self.pool_reuses,
             self.pool_rejects,
             self.cow_copies,
+            self.kv_quant,
+            self.bytes_in_use,
+            self.bytes_peak,
+            self.bytes_saved_quant,
+            self.quant_pages,
+            self.quant_fallbacks,
             self.sessions_evicted,
             self.sessions_reclaimed,
             self.admission_rejects,
@@ -395,6 +416,12 @@ mod tests {
             pool_allocs: 10,
             pool_reuses: 3,
             pool_rejects: 2,
+            kv_quant: "int8",
+            bytes_in_use: 40960,
+            bytes_peak: 53248,
+            bytes_saved_quant: 12288,
+            quant_pages: 4,
+            quant_fallbacks: 1,
             sessions_evicted: 1,
             sessions_reclaimed: 4,
             admission_rejects: 2,
@@ -423,6 +450,10 @@ mod tests {
         assert!(r.contains("sys:3p/140r"));
         assert!(r.contains("ttl_reclaimed=4"));
         assert!(r.contains("degraded=1"));
+        assert!(r.contains("quant=int8"));
+        assert!(r.contains("saved_quant=12288"));
+        assert!(r.contains("quant_pages=4"));
+        assert!(r.contains("quant_fallbacks=1"));
         assert!(r.contains("poison_recovered=2"));
         assert!(r.contains("pool_alloc=9"));
         assert!(r.contains("occupancy_mean=3.50"));

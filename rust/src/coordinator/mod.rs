@@ -119,6 +119,7 @@
 //! | chunk fault mid-ingest (`prefill_chunk`) | failpoint checked before each scheduler-fed prefill chunk | the ingest **degrades to one serial prefill** of its remaining rows (`ingest_serial_fallbacks`) — the ticket still resolves with a full answer, later chunks of other ingests are unaffected |
 //! | panic mid-ingest | `catch_unwind` around each chunk advance | the ingest's ticket resolves with an explicit `panic:` error and its partially-filled session cache is discarded (pages back to the pool); the scheduler thread and every other ingest keep running |
 //! | pool exhausted mid-ingest | `POOL_EXHAUSTED` from the chunk's `KvCache::append` (atomic: no partial rows) | LRU-evict idle sessions and retry the same chunk, then explicit backpressure — identical ladder to monolithic opens, just applied per chunk |
+//! | quantize fault at a page freeze (`page_freeze`) | failpoint checked (under `catch_unwind`) before compressing each newly-frozen full KV page | that one page **stays f32** (`quant_fallbacks`) — decode is unaffected, only its byte savings are lost; an injected panic is absorbed at the freeze point, so `panics_caught` stays 0 |
 //! | shutdown under load | `Shutdown` drains the queue | every queued ticket resolves with an explicit error; all session, prefix, and draft-fork pages return to the pool (the engine joins the scheduler before clearing tables) |
 //!
 //! [`Server::open_session`]: server::Server::open_session
@@ -146,3 +147,7 @@ pub use server::{DecodeTicket, Server, ServerConfig, Ticket};
 
 /// Re-export of the op-layer eviction policy for serving callers.
 pub use crate::attention::op::CachePolicy;
+
+/// Re-export of the frozen-page KV compression mode
+/// ([`CacheConfig::quant`] / `serve --kv-quant`).
+pub use crate::linalg::QuantMode;

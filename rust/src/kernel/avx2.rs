@@ -385,3 +385,124 @@ pub unsafe fn gemm_nn_row(acoef: &[f32], b: &[f32], ldb: usize, orow: &mut [f32]
         kk += 1;
     }
 }
+
+/// Widen 8 int8 lanes to 8 f32 lanes in registers (sign-extended).
+#[inline]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn cvt8_i8_f32(p: *const i8) -> __m256 {
+    let q = _mm_loadl_epi64(p as *const __m128i);
+    _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(q))
+}
+
+/// Widen 8 binary16 lanes to 8 f32 lanes in registers, without F16C:
+/// the exponent/mantissa bits shift into f32 position and a single
+/// exact power-of-two multiply (2¹¹²) rebiases the exponent — this
+/// renormalizes subnormal halves too.  Finite inputs only (quantized
+/// KV pages never store inf/NaN: they come from finite f32 rows).
+#[inline]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn cvt8_f16_f32(p: *const u16) -> __m256 {
+    let h = _mm256_cvtepu16_epi32(_mm_loadu_si128(p as *const __m128i));
+    let sign = _mm256_slli_epi32::<16>(_mm256_and_si256(h, _mm256_set1_epi32(0x8000)));
+    let mag = _mm256_slli_epi32::<13>(_mm256_and_si256(h, _mm256_set1_epi32(0x7fff)));
+    // 2^112 = f32 with exponent field (254 − 15) − raw magnitude bits
+    // carry exponent 2^(e−127+…); one exact multiply rebias
+    let magic = _mm256_set1_ps(f32::from_bits((254 - 15) << 23));
+    let val = _mm256_mul_ps(_mm256_castsi256_ps(mag), magic);
+    _mm256_castsi256_ps(_mm256_or_si256(_mm256_castps_si256(val), sign))
+}
+
+/// Fused dequant dot against an int8 row: widen-in-register, FMA into
+/// 2 accumulators — no materialized f32 copy of the quantized row.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot_q8(a: &[f32], b: &[i8]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + 16 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), cvt8_i8_f32(bp.add(i)), acc0);
+        acc1 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i + 8)), cvt8_i8_f32(bp.add(i + 8)), acc1);
+        i += 16;
+    }
+    while i + 8 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), cvt8_i8_f32(bp.add(i)), acc0);
+        i += 8;
+    }
+    let mut s = hsum256(_mm256_add_ps(acc0, acc1));
+    while i < n {
+        s += a[i] * b[i] as f32;
+        i += 1;
+    }
+    s
+}
+
+/// Fused dequant accumulate from an int8 row: `y += alpha * x`.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn axpy_q8(alpha: f32, x: &[i8], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let av = _mm256_set1_ps(alpha);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    let mut i = 0;
+    while i + 8 <= n {
+        let yv = _mm256_fmadd_ps(av, cvt8_i8_f32(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+        _mm256_storeu_ps(yp.add(i), yv);
+        i += 8;
+    }
+    while i < n {
+        y[i] += alpha * x[i] as f32;
+        i += 1;
+    }
+}
+
+/// Fused dequant dot against a binary16 row.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot_f16(a: &[f32], b: &[u16]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + 16 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), cvt8_f16_f32(bp.add(i)), acc0);
+        acc1 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i + 8)), cvt8_f16_f32(bp.add(i + 8)), acc1);
+        i += 16;
+    }
+    while i + 8 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), cvt8_f16_f32(bp.add(i)), acc0);
+        i += 8;
+    }
+    let mut s = hsum256(_mm256_add_ps(acc0, acc1));
+    while i < n {
+        s += a[i] * super::scalar::f16_to_f32(b[i]);
+        i += 1;
+    }
+    s
+}
+
+/// Fused dequant accumulate from a binary16 row: `y += alpha * x`.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn axpy_f16(alpha: f32, x: &[u16], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let av = _mm256_set1_ps(alpha);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    let mut i = 0;
+    while i + 8 <= n {
+        let yv = _mm256_fmadd_ps(av, cvt8_f16_f32(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+        _mm256_storeu_ps(yp.add(i), yv);
+        i += 8;
+    }
+    while i < n {
+        y[i] += alpha * super::scalar::f16_to_f32(x[i]);
+        i += 1;
+    }
+}

@@ -20,7 +20,13 @@
 //! * [`gemm_nn_row`] — one accumulated row of `A·B` (the P·V shape);
 //! * [`exp_sub_sum`] — fused `exp(x − m)` + row sum (softmax numerator);
 //! * [`dot`], [`axpy`], [`hmax`], [`scale`], [`scale_merge`] — the
-//!   streaming-softmax bookkeeping ops.
+//!   streaming-softmax bookkeeping ops;
+//! * [`dot_q8`], [`axpy_q8`], [`dot_f16`], [`axpy_f16`] — fused
+//!   dequant-and-consume rows for quantized KV pages: the second
+//!   operand stays int8 / binary16 in memory and is widened in
+//!   registers (no materialized f32 copy); scales are folded into the
+//!   result / `alpha` by the caller.  [`f32_to_f16`] / [`f16_to_f32`]
+//!   are the (scalar, off-hot-path) storage conversions.
 
 pub mod scalar;
 
@@ -206,6 +212,42 @@ pub fn scale_merge(a: &mut [f32], e1: f32, b: &[f32], e2: f32) {
     dispatch!(scale_merge(a, e1, b, e2))
 }
 
+/// Fused dequant dot against an int8 row (raw quantized units — the
+/// caller multiplies the result by the row's scale).
+#[inline]
+pub fn dot_q8(a: &[f32], b: &[i8]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot_q8 length mismatch");
+    dispatch!(dot_q8(a, b))
+}
+
+/// Fused dequant accumulate from an int8 row: `y += alpha * x` with `x`
+/// in raw quantized units (fold the scale into `alpha`).
+#[inline]
+pub fn axpy_q8(alpha: f32, x: &[i8], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len(), "axpy_q8 length mismatch");
+    dispatch!(axpy_q8(alpha, x, y))
+}
+
+/// Fused dequant dot against a binary16 row (bits in `b`).
+#[inline]
+pub fn dot_f16(a: &[f32], b: &[u16]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot_f16 length mismatch");
+    dispatch!(dot_f16(a, b))
+}
+
+/// Fused dequant accumulate from a binary16 row: `y += alpha * x`.
+#[inline]
+pub fn axpy_f16(alpha: f32, x: &[u16], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len(), "axpy_f16 length mismatch");
+    dispatch!(axpy_f16(alpha, x, y))
+}
+
+/// f32 → binary16 bits (round-to-nearest-even; storage conversion, not
+/// dispatched — quantization runs once per frozen page).
+pub use scalar::f32_to_f16;
+/// binary16 bits → f32 (exact).
+pub use scalar::f16_to_f32;
+
 /// `out = A · Bᵀ` on row-major panels: `a` is m×k with row stride `lda`,
 /// `b` is n×k with row stride `ldb`, `out` is m×n with row stride `ldo`.
 /// Overwrites `out`'s m×n window.
@@ -342,6 +384,86 @@ mod tests {
                     "(k={k},c={c}) col {j}: {} vs {want}",
                     orow[j]
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn f16_conversion_roundtrip_and_edge_cases() {
+        // every binary16 value survives the f32 round trip bitwise
+        // (spot-check a sweep across the exponent range plus edges)
+        for h in (0u16..0x7c00).step_by(7).chain([0u16, 1, 0x3c00, 0x7bff]) {
+            for sign in [0u16, 0x8000] {
+                let bits = h | sign;
+                let back = f32_to_f16(f16_to_f32(bits));
+                assert_eq!(back, bits, "roundtrip failed for {bits:#06x}");
+            }
+        }
+        // conversions at the representable edges
+        assert_eq!(f16_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_to_f32(0xc000), -2.0);
+        assert_eq!(f16_to_f32(0x7c00), f32::INFINITY);
+        assert!(f16_to_f32(0x7e00).is_nan());
+        assert_eq!(f32_to_f16(65504.0), 0x7bff, "max finite half");
+        assert_eq!(f32_to_f16(65520.0), 0x7c00, "overflow saturates to inf");
+        assert_eq!(f32_to_f16(1e-10), 0, "deep underflow flushes to +0");
+        assert!(f32_to_f16(f32::NAN) & 0x7c00 == 0x7c00 && f32_to_f16(f32::NAN) & 0x3ff != 0);
+        // round-to-nearest-even at the halfway point: 1 + 2^-11 is
+        // exactly between 1.0 and the next half; ties go to even (1.0)
+        assert_eq!(f32_to_f16(1.0 + 2.0f32.powi(-11)), 0x3c00);
+        assert_eq!(f32_to_f16(1.0 + 3.0 * 2.0f32.powi(-11)), 0x3c02);
+        // normal → subnormal boundary
+        let min_normal = 2.0f32.powi(-14);
+        assert_eq!(f16_to_f32(f32_to_f16(min_normal)), min_normal);
+        let sub = 2.0f32.powi(-20);
+        assert_eq!(f16_to_f32(f32_to_f16(sub)), sub, "exact subnormal preserved");
+        // within half a ULP everywhere in the normal range
+        let mut rng = Rng::new(11);
+        for x in rng.normal_vec(2000) {
+            let y = f16_to_f32(f32_to_f16(x));
+            assert!((y - x).abs() <= x.abs() * (1.0 / 2048.0) + 1e-7, "{x} → {y}");
+        }
+    }
+
+    #[test]
+    fn dot_q8_and_axpy_q8_match_naive() {
+        let mut rng = Rng::new(12);
+        for n in [0usize, 1, 7, 8, 9, 31, 32, 33, 100, 257] {
+            let a = rng.normal_vec(n);
+            let b: Vec<i8> =
+                (0..n).map(|_| (rng.normal_vec(1)[0] * 40.0).clamp(-127.0, 127.0) as i8).collect();
+            let want: f64 = a.iter().zip(&b).map(|(&x, &q)| x as f64 * q as f64).sum();
+            let got = dot_q8(&a, &b);
+            assert!((got as f64 - want).abs() < 1e-2 * (1.0 + want.abs()), "n={n}: {got} vs {want}");
+
+            let mut y = rng.normal_vec(n);
+            let y0 = y.clone();
+            axpy_q8(0.03, &b, &mut y);
+            for i in 0..n {
+                let w = y0[i] + 0.03 * b[i] as f32;
+                assert!((y[i] - w).abs() < 1e-4, "n={n} i={i}: {} vs {w}", y[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn dot_f16_and_axpy_f16_match_dequantized() {
+        let mut rng = Rng::new(13);
+        for n in [0usize, 1, 7, 8, 9, 31, 32, 33, 100, 257] {
+            let a = rng.normal_vec(n);
+            let raw = rng.normal_vec(n);
+            let b: Vec<u16> = raw.iter().map(|&x| f32_to_f16(x)).collect();
+            let deq: Vec<f32> = b.iter().map(|&h| f16_to_f32(h)).collect();
+            let want: f64 = a.iter().zip(&deq).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let got = dot_f16(&a, &b);
+            assert!((got as f64 - want).abs() < 1e-3 * (1.0 + want.abs()), "n={n}: {got} vs {want}");
+
+            let mut y = rng.normal_vec(n);
+            let y0 = y.clone();
+            axpy_f16(1.5, &b, &mut y);
+            for i in 0..n {
+                let w = y0[i] + 1.5 * deq[i];
+                assert!((y[i] - w).abs() < 1e-4, "n={n} i={i}: {} vs {w}", y[i]);
             }
         }
     }

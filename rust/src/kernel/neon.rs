@@ -319,3 +319,121 @@ pub unsafe fn gemm_nn_row(acoef: &[f32], b: &[f32], ldb: usize, orow: &mut [f32]
         kk += 1;
     }
 }
+
+/// Widen 8 int8 lanes to two 4-lane f32 registers (sign-extended).
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn cvt8_i8_f32(p: *const i8) -> (float32x4_t, float32x4_t) {
+    let w = vmovl_s8(vld1_s8(p));
+    let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(w)));
+    let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(w)));
+    (lo, hi)
+}
+
+/// Widen 4 binary16 lanes to 4 f32 lanes in registers, without relying
+/// on unstable f16 intrinsics: shift the exponent/mantissa bits into
+/// f32 position and rebias with one exact 2¹¹² multiply (renormalizes
+/// subnormal halves too).  Finite inputs only — quantized KV pages
+/// never store inf/NaN.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn cvt4_f16_f32(p: *const u16) -> float32x4_t {
+    let h = vmovl_u16(vld1_u16(p));
+    let sign = vshlq_n_u32::<16>(vandq_u32(h, vdupq_n_u32(0x8000)));
+    let mag = vshlq_n_u32::<13>(vandq_u32(h, vdupq_n_u32(0x7fff)));
+    let magic = vdupq_n_f32(f32::from_bits((254 - 15) << 23));
+    let val = vmulq_f32(vreinterpretq_f32_u32(mag), magic);
+    vreinterpretq_f32_u32(vorrq_u32(vreinterpretq_u32_f32(val), sign))
+}
+
+/// Fused dequant dot against an int8 row: widen-in-register, FMA into
+/// 2 accumulators — no materialized f32 copy of the quantized row.
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_q8(a: &[f32], b: &[i8]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut i = 0;
+    while i + 8 <= n {
+        let (lo, hi) = cvt8_i8_f32(bp.add(i));
+        acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(i)), lo);
+        acc1 = vfmaq_f32(acc1, vld1q_f32(ap.add(i + 4)), hi);
+        i += 8;
+    }
+    let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+    while i < n {
+        s += a[i] * b[i] as f32;
+        i += 1;
+    }
+    s
+}
+
+/// Fused dequant accumulate from an int8 row: `y += alpha * x`.
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy_q8(alpha: f32, x: &[i8], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let av = vdupq_n_f32(alpha);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    let mut i = 0;
+    while i + 8 <= n {
+        let (lo, hi) = cvt8_i8_f32(xp.add(i));
+        vst1q_f32(yp.add(i), vfmaq_f32(vld1q_f32(yp.add(i)), av, lo));
+        vst1q_f32(yp.add(i + 4), vfmaq_f32(vld1q_f32(yp.add(i + 4)), av, hi));
+        i += 8;
+    }
+    while i < n {
+        y[i] += alpha * x[i] as f32;
+        i += 1;
+    }
+}
+
+/// Fused dequant dot against a binary16 row.
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_f16(a: &[f32], b: &[u16]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut i = 0;
+    while i + 8 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(i)), cvt4_f16_f32(bp.add(i)));
+        acc1 = vfmaq_f32(acc1, vld1q_f32(ap.add(i + 4)), cvt4_f16_f32(bp.add(i + 4)));
+        i += 8;
+    }
+    while i + 4 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(i)), cvt4_f16_f32(bp.add(i)));
+        i += 4;
+    }
+    let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+    while i < n {
+        s += a[i] * super::scalar::f16_to_f32(b[i]);
+        i += 1;
+    }
+    s
+}
+
+/// Fused dequant accumulate from a binary16 row: `y += alpha * x`.
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy_f16(alpha: f32, x: &[u16], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let av = vdupq_n_f32(alpha);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    let mut i = 0;
+    while i + 4 <= n {
+        vst1q_f32(yp.add(i), vfmaq_f32(vld1q_f32(yp.add(i)), av, cvt4_f16_f32(xp.add(i))));
+        i += 4;
+    }
+    while i < n {
+        y[i] += alpha * super::scalar::f16_to_f32(x[i]);
+        i += 1;
+    }
+}

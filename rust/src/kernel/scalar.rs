@@ -99,3 +99,121 @@ pub fn gemm_nn_row(acoef: &[f32], b: &[f32], ldb: usize, orow: &mut [f32]) {
         }
     }
 }
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even (no hardware f16
+/// dependency — quantization runs once per frozen page, off the hot
+/// path).  Overflow saturates to ±inf; NaN keeps a quiet payload bit.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / NaN: keep NaN-ness with a quiet bit
+        return sign | 0x7c00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 31 {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflows past subnormal range → ±0
+        }
+        // subnormal half: shift the (restored-implicit-bit) mantissa
+        let m = man | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let midpoint = 1u32 << (shift - 1);
+        let round_up = rem > midpoint || (rem == midpoint && (half & 1) == 1);
+        return sign | (half + round_up as u32) as u16;
+    }
+    let half = ((e as u32) << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    let round_up = rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1);
+    // the carry from rounding propagates into the exponent correctly
+    // (1.111…×2^e rounds up to 1.0×2^{e+1}; 65504 rounds to inf)
+    sign | (half + round_up as u32) as u16
+}
+
+/// IEEE binary16 bits → f32 (exact: every half value is representable).
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // subnormal half: renormalize into an f32 exponent
+            let mut e = 127 - 15 + 1;
+            let mut m = man;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((m & 0x03ff) << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7f80_0000 | (man << 13) // inf / NaN
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Fused dequant dot against an int8 row: `Σ a[i]·b[i]` with `b` in
+/// raw quantized units (the caller folds the scale into the result).
+pub fn dot_q8(a: &[f32], b: &[i8]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        for l in 0..8 {
+            acc[l] += a[i + l] * b[i + l] as f32;
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for i in chunks * 8..a.len() {
+        s += a[i] * b[i] as f32;
+    }
+    s
+}
+
+/// Fused dequant accumulate from an int8 row: `y += alpha * x`, with
+/// `x` in raw quantized units (fold the scale into `alpha`).
+pub fn axpy_q8(alpha: f32, x: &[i8], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (o, &v) in y.iter_mut().zip(x) {
+        *o += alpha * v as f32;
+    }
+}
+
+/// Fused dequant dot against a binary16 row (bits in `b`).
+pub fn dot_f16(a: &[f32], b: &[u16]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        for l in 0..8 {
+            acc[l] += a[i + l] * f16_to_f32(b[i + l]);
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for i in chunks * 8..a.len() {
+        s += a[i] * f16_to_f32(b[i]);
+    }
+    s
+}
+
+/// Fused dequant accumulate from a binary16 row: `y += alpha * x`.
+pub fn axpy_f16(alpha: f32, x: &[u16], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (o, &v) in y.iter_mut().zip(x) {
+        *o += alpha * f16_to_f32(v);
+    }
+}

@@ -116,6 +116,23 @@
 //! free functions were removed; the view-based cores behind
 //! `AttentionOp` are the only implementation surface.)
 //!
+//! Frozen pages can additionally be **quantized in place**
+//! ([`linalg::QuantMode`], `serve --kv-quant {off,f16,int8}`): the
+//! moment an append fills a page, its K/V planes compress to f16
+//! (~1/3 the bytes) or per-(head,plane) max-abs-scaled int8 (~1/6 —
+//! the f32 pre-scaled-K plane is dropped and the scale folds into the
+//! dequant constant), relying on the same COW freeze guarantee that
+//! makes prefix sharing safe — a frozen frame is never rewritten, so
+//! compressing it is invisible to every fork.  Sink pages and the hot
+//! partial tail stay f32; decode streams mixed-precision segments
+//! through fused ISA-dispatched dequant kernels
+//! ([`kernel::dot_q8`]/[`kernel::axpy_f16`] and friends) — no
+//! materialized f32 copy ever exists on the hot path.  The pool budget
+//! is byte-denominated, so compressed pages buy proportionally more
+//! resident sessions (`bytes_in_use`/`bytes_saved_quant` gauges in
+//! [`coordinator::CacheGauges`]); with quantization off, behavior is
+//! bitwise-identical to the f32 cache.
+//!
 //! ## Long-context prefill
 //!
 //! Prompt ingest is **chunk-appendable** end to end.  At the op layer,
@@ -188,9 +205,12 @@
 //! → shed ladder; per-request deadlines
 //! ([`coordinator::ServerConfig::request_timeout`],
 //! [`coordinator::Server::decode_with_deadline`]) resolve stale queued
-//! work with an explicit error before it burns pool pages; and
-//! [`coordinator::Server::ping`] answers through the live pipeline for
-//! health probes.  Every one of these paths is exercisable via seeded
+//! work with an explicit error before it burns pool pages; a fault at
+//! a page-freeze quantization (`page_freeze` failpoint) leaves that
+//! one page f32 (`quant_fallbacks` gauge) instead of failing the
+//! append — even an injected panic is absorbed at the freeze point;
+//! and [`coordinator::Server::ping`] answers through the live pipeline
+//! for health probes.  Every one of these paths is exercisable via seeded
 //! **fault injection** ([`coordinator::failpoint`]): set
 //! `HYPERATTN_FAILPOINTS="site=action[:prob],..."` (e.g.
 //! `"pool_alloc=err:0.05,decode_job=panic:0.01,engine_recv=delay:20ms"`,

@@ -291,12 +291,107 @@ pub const POOL_EXHAUSTED: &str = "kv page pool exhausted";
 /// pool is supplied.
 pub const DEFAULT_PAGE_ROWS: usize = 64;
 
+/// Storage precision for **frozen full** KV pages.  Sink pages and the
+/// hot partial tail always stay f32; a non-sink tail page is quantized
+/// once, at the moment it fills ("freeze" — the COW contract guarantees
+/// nobody writes a full page again), and stays quantized until its last
+/// owner releases it.  Quantized pages drop the scaled-K mirror plane
+/// entirely: the softmax scale folds into the per-page dequant constant
+/// at consumption, so an int8 page costs ~1/6 of the f32 layout's bytes
+/// and an f16 page ~1/3.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QuantMode {
+    /// Three f32 planes per page (bitwise-identical to the layout
+    /// before quantization existed).
+    #[default]
+    Off,
+    /// Frozen pages store K and V as IEEE binary16 (exact scale 1).
+    F16,
+    /// Frozen pages store K and V as symmetric int8 with one f32 scale
+    /// per (head, plane): `scale = max_abs / 127`, zero-point 0.
+    Int8,
+}
+
+impl QuantMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantMode::Off => "off",
+            QuantMode::F16 => "f16",
+            QuantMode::Int8 => "int8",
+        }
+    }
+
+    /// Parse a `--kv-quant` style flag value.
+    pub fn parse(s: &str) -> Result<QuantMode, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "f32" | "none" => Ok(QuantMode::Off),
+            "f16" | "fp16" | "half" => Ok(QuantMode::F16),
+            "int8" | "i8" | "q8" => Ok(QuantMode::Int8),
+            other => Err(format!("unknown kv quant mode {other:?} (off|f16|int8)")),
+        }
+    }
+}
+
+/// The physical contents of one page frame.  `F32` is the live layout
+/// (three planes: K, V, scaled-K); the quantized variants hold **two**
+/// planes (K, V — no scaled-K mirror) in `[plane, head, rows, d]`
+/// order, plus, for int8, one f32 scale per (head, plane) in the frame
+/// header (`scales[h]` = K scale of head `h`, `scales[heads + h]` = V
+/// scale).
+pub enum PageStore {
+    F32(Box<[f32]>),
+    F16(Box<[u16]>),
+    Q8 { data: Box<[i8]>, scales: Box<[f32]> },
+}
+
+impl PageStore {
+    /// Resident bytes of this store (the unit the pool budget charges).
+    #[inline]
+    pub fn bytes(&self) -> usize {
+        match self {
+            PageStore::F32(d) => d.len() * 4,
+            PageStore::F16(d) => d.len() * 2,
+            PageStore::Q8 { data, scales } => data.len() + scales.len() * 4,
+        }
+    }
+
+    /// Storage tag for gauges/tests.
+    #[inline]
+    pub fn mode(&self) -> QuantMode {
+        match self {
+            PageStore::F32(_) => QuantMode::Off,
+            PageStore::F16(_) => QuantMode::F16,
+            PageStore::Q8 { .. } => QuantMode::Int8,
+        }
+    }
+}
+
+/// Symmetric int8 quantization of one (head, plane) span: returns the
+/// quantized values and the dequant scale (`x ≈ q · scale`).  All-zero
+/// input quantizes to scale 0 (dequant is exactly zero).  This is the
+/// single implementation both the freeze path and the test oracles use,
+/// so expected values can be recomputed bitwise.
+pub fn quantize_q8(vals: &[f32], out: &mut [i8]) -> f32 {
+    debug_assert_eq!(vals.len(), out.len());
+    let max_abs = vals.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    if max_abs == 0.0 {
+        out.fill(0);
+        return 0.0;
+    }
+    let scale = max_abs / 127.0;
+    let inv = 127.0 / max_abs;
+    for (o, &x) in out.iter_mut().zip(vals) {
+        *o = (x * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
+}
+
 /// One fixed-size storage page checked out of a [`PagePool`].  The id
 /// is assigned at first allocation and survives free-list recycling, so
 /// reuse is observable.
 pub struct PageFrame {
     id: u64,
-    data: Box<[f32]>,
+    data: PageStore,
 }
 
 impl PageFrame {
@@ -304,11 +399,26 @@ impl PageFrame {
     pub fn id(&self) -> u64 {
         self.id
     }
+
+    #[inline]
+    fn elems(&self) -> usize {
+        match &self.data {
+            PageStore::F32(d) => d.len(),
+            PageStore::F16(d) => d.len(),
+            PageStore::Q8 { data, .. } => data.len(),
+        }
+    }
 }
 
 impl std::fmt::Debug for PageFrame {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "PageFrame(id={}, elems={})", self.id, self.data.len())
+        write!(
+            f,
+            "PageFrame(id={}, elems={}, store={})",
+            self.id,
+            self.elems(),
+            self.data.mode().name()
+        )
     }
 }
 
@@ -338,17 +448,40 @@ impl SharedFrame {
         Arc::strong_count(&self.inner) == 1
     }
 
+    /// The f32 contents — only f32-stored frames have them; quantized
+    /// frames are never read through this accessor (their consumers go
+    /// through [`SharedFrame::store`] and the fused dequant kernels).
     #[inline]
     fn data(&self) -> &[f32] {
+        match &self.inner.data {
+            PageStore::F32(d) => d,
+            _ => panic!("quantized page has no f32 plane"),
+        }
+    }
+
+    /// The raw storage (tag + planes) for mixed-precision readers.
+    #[inline]
+    pub fn store(&self) -> &PageStore {
         &self.inner.data
+    }
+
+    /// True when the frame holds a quantized (frozen) store.
+    #[inline]
+    pub fn is_quant(&self) -> bool {
+        !matches!(self.inner.data, PageStore::F32(_))
     }
 
     /// Mutable page contents — available only to a sole owner (the
     /// copy-on-write contract); shared frames must go through
-    /// [`KvCache`]'s private-copy path first.
+    /// [`KvCache`]'s private-copy path first.  Quantized frames are
+    /// frozen: they are never written (enforced by the freeze-only-
+    /// at-fill design; this returns `None` for them even when unique).
     #[inline]
     fn data_mut(&mut self) -> Option<&mut [f32]> {
-        Arc::get_mut(&mut self.inner).map(|f| &mut f.data[..])
+        Arc::get_mut(&mut self.inner).and_then(|f| match &mut f.data {
+            PageStore::F32(d) => Some(&mut d[..]),
+            _ => None,
+        })
     }
 }
 
@@ -396,11 +529,28 @@ pub struct PoolStats {
     /// copy-on-write materializations (a shared frame privatized before
     /// a write — the `cow_copies` gauge)
     pub cows: u64,
+    /// quantization mode frozen full pages are converted to
+    pub quant: QuantMode,
+    /// bytes resident across outstanding frames (an f32 frame charges
+    /// `page_elems · 4`; a quantized frame its actual store bytes — the
+    /// quantity the byte budget bounds)
+    pub bytes_in_use: usize,
+    /// high-water mark of `bytes_in_use`
+    pub bytes_peak: usize,
+    /// bytes currently saved by live quantized frames
+    /// (Σ `page_bytes − store_bytes`; returns to 0 when they free)
+    pub bytes_saved_quant: usize,
+    /// outstanding frames currently holding a quantized store
+    pub quant_pages: usize,
+    /// freeze-point quantizations skipped by a `page_freeze` fault —
+    /// the page degraded to (stayed) f32, ladder semantics
+    pub quant_fallbacks: u64,
 }
 
 struct PoolInner {
     page_elems: usize,
     budget: Option<usize>,
+    quant: QuantMode,
     free: Vec<PageFrame>,
     next_id: u64,
     outstanding: usize,
@@ -412,6 +562,18 @@ struct PoolInner {
     reuses: u64,
     rejects: u64,
     cows: u64,
+    bytes_in_use: usize,
+    bytes_peak: usize,
+    bytes_saved: usize,
+    quant_pages: usize,
+    quant_fallbacks: u64,
+}
+
+impl PoolInner {
+    #[inline]
+    fn page_bytes(&self) -> usize {
+        self.page_elems * 4
+    }
 }
 
 /// Shared fixed-size page allocator: the memory-budget substrate under
@@ -446,6 +608,16 @@ impl std::fmt::Debug for PagePool {
 
 impl PagePool {
     pub fn new(page_elems: usize, budget: Option<usize>) -> Self {
+        Self::with_quant(page_elems, budget, QuantMode::Off)
+    }
+
+    /// Pool whose caches quantize frozen full pages to `quant`.  The
+    /// budget is interpreted in **bytes** (`budget · page_elems · 4`):
+    /// with quantization off every frame charges exactly one page of
+    /// bytes, so admission behavior is bitwise-identical to the
+    /// page-count budget; with f16/int8 frozen pages charge their
+    /// actual store bytes, so the same budget admits 2.5–4× the frames.
+    pub fn with_quant(page_elems: usize, budget: Option<usize>, quant: QuantMode) -> Self {
         assert!(page_elems > 0, "zero-sized page");
         // First pool construction is the earliest high-consequence seam;
         // arm env-configured failpoints here so library users (tests,
@@ -455,6 +627,7 @@ impl PagePool {
             inner: Arc::new(Mutex::new(PoolInner {
                 page_elems,
                 budget,
+                quant,
                 free: Vec::new(),
                 next_id: 0,
                 outstanding: 0,
@@ -466,6 +639,11 @@ impl PagePool {
                 reuses: 0,
                 rejects: 0,
                 cows: 0,
+                bytes_in_use: 0,
+                bytes_peak: 0,
+                bytes_saved: 0,
+                quant_pages: 0,
+                quant_fallbacks: 0,
             })),
         }
     }
@@ -476,6 +654,12 @@ impl PagePool {
 
     pub fn page_elems(&self) -> usize {
         lock_recover(&self.inner).page_elems
+    }
+
+    /// The freeze-point quantization mode caches drawing from this pool
+    /// apply to full non-sink pages.
+    pub fn quant(&self) -> QuantMode {
+        lock_recover(&self.inner).quant
     }
 
     /// Check one frame out (free list first, then a fresh allocation),
@@ -492,27 +676,41 @@ impl PagePool {
             return Err(format!("{POOL_EXHAUSTED} ({e})"));
         }
         let mut p = lock_recover(&self.inner);
+        // The budget is enforced in bytes: with quantization off every
+        // outstanding frame holds exactly `page_bytes`, so this check is
+        // bitwise-equivalent to `outstanding >= b`; with quantized
+        // frames resident, their savings admit extra frames.
         if let Some(b) = p.budget {
-            if p.outstanding >= b {
+            if p.bytes_in_use + p.page_bytes() > b * p.page_bytes() {
                 p.rejects += 1;
                 return Err(format!("{POOL_EXHAUSTED} (budget {b} pages)"));
             }
         }
         let frame = match p.free.pop() {
-            Some(f) => {
+            Some(mut f) => {
                 p.reuses += 1;
+                // a recycled frame may carry a frozen quantized store
+                // from its previous life; writes need the f32 layout
+                if !matches!(f.data, PageStore::F32(_)) {
+                    f.data = PageStore::F32(vec![0.0f32; p.page_elems].into_boxed_slice());
+                }
                 f
             }
             None => {
                 let id = p.next_id;
                 p.next_id += 1;
-                PageFrame { id, data: vec![0.0f32; p.page_elems].into_boxed_slice() }
+                PageFrame {
+                    id,
+                    data: PageStore::F32(vec![0.0f32; p.page_elems].into_boxed_slice()),
+                }
             }
         };
         p.allocs += 1;
         p.outstanding += 1;
         p.handles += 1;
         p.peak = p.peak.max(p.outstanding);
+        p.bytes_in_use += p.page_bytes();
+        p.bytes_peak = p.bytes_peak.max(p.bytes_in_use);
         Ok(SharedFrame { inner: Arc::new(frame) })
     }
 
@@ -543,13 +741,45 @@ impl PagePool {
         p.handles = p.handles.saturating_sub(1);
         match Arc::try_unwrap(frame.inner) {
             Ok(f) => {
-                debug_assert_eq!(f.data.len(), p.page_elems, "frame from another pool");
+                let store_bytes = f.data.bytes();
+                if matches!(f.data, PageStore::F32(_)) {
+                    debug_assert_eq!(store_bytes, p.page_bytes(), "frame from another pool");
+                } else {
+                    p.quant_pages = p.quant_pages.saturating_sub(1);
+                    p.bytes_saved =
+                        p.bytes_saved.saturating_sub(p.page_bytes().saturating_sub(store_bytes));
+                }
+                p.bytes_in_use = p.bytes_in_use.saturating_sub(store_bytes);
                 p.outstanding = p.outstanding.saturating_sub(1);
                 p.frees += 1;
                 p.free.push(f);
             }
             Err(_still_shared) => {}
         }
+    }
+
+    /// Swap a sole-owner frame's storage for a quantized one (the
+    /// freeze-point conversion) and move the byte accounting: the saved
+    /// bytes leave `bytes_in_use` and show up in `bytes_saved_quant`.
+    /// The caller guarantees uniqueness (it holds the only handle of a
+    /// page it just finished writing).
+    fn install_quant_store(&self, frame: &mut SharedFrame, store: PageStore) {
+        let mut p = lock_recover(&self.inner);
+        let f = Arc::get_mut(&mut frame.inner)
+            .expect("freeze-point frames have a sole owner (COW contract)");
+        debug_assert!(matches!(f.data, PageStore::F32(_)), "page frozen twice");
+        let new_bytes = store.bytes();
+        let saved = p.page_bytes().saturating_sub(new_bytes);
+        f.data = store;
+        p.bytes_in_use = p.bytes_in_use.saturating_sub(saved);
+        p.bytes_saved += saved;
+        p.quant_pages += 1;
+    }
+
+    /// Count one freeze-point quantization skipped by a `page_freeze`
+    /// fault (the page stays f32 — degrade, not die).
+    pub fn note_quant_fallback(&self) {
+        lock_recover(&self.inner).quant_fallbacks += 1;
     }
 
     /// Count one copy-on-write materialization (called by the cache
@@ -581,6 +811,12 @@ impl PagePool {
             reuses: p.reuses,
             rejects: p.rejects,
             cows: p.cows,
+            quant: p.quant,
+            bytes_in_use: p.bytes_in_use,
+            bytes_peak: p.bytes_peak,
+            bytes_saved_quant: p.bytes_saved,
+            quant_pages: p.quant_pages,
+            quant_fallbacks: p.quant_fallbacks,
         }
     }
 }
@@ -590,13 +826,33 @@ impl PagePool {
 /// resident rows (the coordinate system the decode samplers index);
 /// `abs_start` is its absolute sequence position (the coordinate causal
 /// masking uses — under eviction the two diverge).
+///
+/// The payload is **mixed-precision**: an f32 page exposes the three
+/// plane views (including the pre-scaled K mirror), a frozen quantized
+/// page exposes its raw int8/binary16 planes plus the folded dequant
+/// constants — consumers stream either through the fused
+/// dequant-and-consume kernels, never through a materialized f32 copy.
 #[derive(Clone, Copy, Debug)]
 pub struct KvSegment<'a> {
     pub start: usize,
     pub abs_start: usize,
-    pub k: MatRef<'a>,
-    pub v: MatRef<'a>,
-    pub ks: MatRef<'a>,
+    /// rows in this span (== the payload's row count)
+    pub rows: usize,
+    pub store: SegStore<'a>,
+}
+
+/// The per-precision payload of a [`KvSegment`].
+#[derive(Clone, Copy, Debug)]
+pub enum SegStore<'a> {
+    /// Live f32 page: raw K, V, and the pre-scaled K mirror.
+    F32 { k: MatRef<'a>, v: MatRef<'a>, ks: MatRef<'a> },
+    /// Frozen binary16 page: `logit = dot_f16(q, k_row) · k_const`
+    /// (`k_const` is the folded softmax scale); V dequantizes at scale 1.
+    F16 { k: &'a [u16], v: &'a [u16], k_const: f32 },
+    /// Frozen int8 page: `logit = dot_q8(q, k_row) · k_const` (folded
+    /// `k_scale · softmax_scale`); `v_scale` folds into the probability
+    /// weight of the P·V accumulation.
+    Q8 { k: &'a [i8], v: &'a [i8], k_const: f32, v_scale: f32 },
 }
 
 /// Paged per-head key/value cache for incremental (prefill + decode)
@@ -670,6 +926,10 @@ pub struct KvCache {
     epoch: u64,
     /// high-water mark of resident frames
     peak_pages: usize,
+    /// frozen-page compression mode, inherited from the pool: full tail
+    /// pages quantize at the moment they freeze (COW guarantees
+    /// immutability); sink pages and the hot partial tail stay f32
+    quant: QuantMode,
 }
 
 impl KvCache {
@@ -710,6 +970,7 @@ impl KvCache {
             }
             None => 0,
         };
+        let quant = pool.quant();
         Ok(KvCache {
             heads,
             d,
@@ -726,6 +987,7 @@ impl KvCache {
             scale: None,
             epoch: 0,
             peak_pages: 0,
+            quant,
         })
     }
 
@@ -952,8 +1214,70 @@ impl KvCache {
         }
         self.len = new_len;
         self.evict();
+        // Freeze point: pages this append filled are now immutable (the
+        // only in-place-writable page is the partial tail), so compress
+        // them if the pool runs a quant mode.  Sink pages stay f32.
+        if self.quant != QuantMode::Off {
+            for p in base_len / rp..new_len / rp {
+                if p < self.sink_pages || p < self.tail_base {
+                    continue; // pinned sink, or already evicted above
+                }
+                self.freeze_page(p);
+            }
+        }
         self.peak_pages = self.peak_pages.max(self.resident_pages());
         Ok(())
+    }
+
+    /// Compress one newly-frozen full page into the pool's quant store,
+    /// dropping its f32 planes (including the pre-scaled K mirror — the
+    /// scale folds into the dequant constant at consumption).  The frame
+    /// is uniquely owned here: it is either fresh from this append or
+    /// the COW-privatized former partial tail, and no fork can intervene
+    /// mid-append.  An injected `page_freeze` fault (error *or* panic)
+    /// degrades gracefully: the page simply stays f32 and the pool's
+    /// `quant_fallbacks` counter ticks — decode correctness is
+    /// unaffected, only the byte savings for that page are lost.
+    fn freeze_page(&mut self, p: usize) {
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            crate::coordinator::failpoint::hit("page_freeze")
+        }));
+        if !matches!(caught, Ok(Ok(()))) {
+            self.pool.note_quant_fallback();
+            return;
+        }
+        let (rp, d, heads) = (self.rows_page, self.d, self.heads);
+        let hs = rp * d;
+        let n = 2 * heads * hs; // K and V planes; the KS mirror is dropped
+        let store = {
+            let data = self.frame(p).data();
+            match self.quant {
+                QuantMode::Off => return,
+                QuantMode::F16 => {
+                    let mut out = vec![0u16; n].into_boxed_slice();
+                    for (o, &x) in out.iter_mut().zip(&data[..n]) {
+                        *o = kernel::f32_to_f16(x);
+                    }
+                    PageStore::F16(out)
+                }
+                QuantMode::Int8 => {
+                    let mut out = vec![0i8; n].into_boxed_slice();
+                    let mut scales = vec![0.0f32; 2 * heads].into_boxed_slice();
+                    for b in 0..2 * heads {
+                        let off = b * hs;
+                        scales[b] = quantize_q8(&data[off..off + hs], &mut out[off..off + hs]);
+                    }
+                    PageStore::Q8 { data: out, scales }
+                }
+            }
+        };
+        let pool = self.pool.clone();
+        let slot = if p < self.sink_pages {
+            &mut self.sink_frames[p]
+        } else {
+            &mut self.tail_frames[p - self.tail_base]
+        };
+        pool.install_quant_store(slot, store);
     }
 
     /// Clone this cache's block table by bumping per-frame refcounts —
@@ -988,6 +1312,7 @@ impl KvCache {
             scale: self.scale,
             epoch: self.epoch,
             peak_pages: self.resident_pages(),
+            quant: self.quant,
         }
     }
 
@@ -1100,6 +1425,12 @@ impl KvCache {
             if lo >= f_hi {
                 continue;
             }
+            if self.frame(p).is_quant() {
+                // frozen quantized page: no KS plane exists — the scale
+                // folds into the segment's dequant constant at
+                // consumption, so scale changes are free here
+                continue;
+            }
             self.make_private(p)?;
             let fr = if p < self.sink_pages {
                 &mut self.sink_frames[p]
@@ -1161,6 +1492,7 @@ impl KvCache {
         );
         let (rp, d, heads) = (self.rows_page, self.d, self.heads);
         let hs = rp * d;
+        let scale = self.scale.unwrap_or(1.0);
         let mut out = Vec::with_capacity(self.resident_pages());
         let mut start = 0usize;
         for (p, fr) in self.frames() {
@@ -1171,15 +1503,28 @@ impl KvCache {
             }
             let ko = h * hs;
             let vo = heads * hs + ko;
-            let so = 2 * heads * hs + ko;
-            let data = fr.data();
-            out.push(KvSegment {
-                start,
-                abs_start: f_lo,
-                k: MatRef { rows, cols: d, data: &data[ko..ko + rows * d] },
-                v: MatRef { rows, cols: d, data: &data[vo..vo + rows * d] },
-                ks: MatRef { rows, cols: d, data: &data[so..so + rows * d] },
-            });
+            let store = match fr.store() {
+                PageStore::F32(data) => {
+                    let so = 2 * heads * hs + ko;
+                    SegStore::F32 {
+                        k: MatRef { rows, cols: d, data: &data[ko..ko + rows * d] },
+                        v: MatRef { rows, cols: d, data: &data[vo..vo + rows * d] },
+                        ks: MatRef { rows, cols: d, data: &data[so..so + rows * d] },
+                    }
+                }
+                PageStore::F16(data) => SegStore::F16 {
+                    k: &data[ko..ko + rows * d],
+                    v: &data[vo..vo + rows * d],
+                    k_const: scale,
+                },
+                PageStore::Q8 { data, scales } => SegStore::Q8 {
+                    k: &data[ko..ko + rows * d],
+                    v: &data[vo..vo + rows * d],
+                    k_const: scales[h] * scale,
+                    v_scale: scales[heads + h],
+                },
+            };
+            out.push(KvSegment { start, abs_start: f_lo, rows, store });
             start += rows;
         }
         out
@@ -1207,9 +1552,82 @@ impl KvCache {
         &self.frame(p).data()[off..off + self.d]
     }
 
+    /// Scaled-key logit for one resident row against `q` — the
+    /// random-access dot of the sampled decode, transparent over mixed
+    /// precision: an f32 page reads the pre-scaled KS plane (bitwise the
+    /// pre-quant path), a frozen quantized page streams its raw row
+    /// through the fused dequant dot with the scale folded afterwards.
+    #[inline]
+    pub fn dot_key_row(&self, h: usize, r: usize, q: &[f32]) -> f32 {
+        debug_assert!(r < self.resident_len(), "row {r} out of {}", self.resident_len());
+        debug_assert_eq!(self.scaled_abs, self.len, "scaled mirror stale");
+        let (p, slot) = self.locate(r);
+        let (d, hs) = (self.d, self.rows_page * self.d);
+        let off = h * hs + slot * d;
+        match self.frame(p).store() {
+            PageStore::F32(data) => {
+                let so = 2 * self.heads * hs + off;
+                kernel::dot(q, &data[so..so + d])
+            }
+            PageStore::F16(data) => {
+                kernel::dot_f16(q, &data[off..off + d]) * self.scale.unwrap_or(1.0)
+            }
+            PageStore::Q8 { data, scales } => {
+                kernel::dot_q8(q, &data[off..off + d]) * (scales[h] * self.scale.unwrap_or(1.0))
+            }
+        }
+    }
+
+    /// `acc += alpha * V[r]` for one resident row, transparent over
+    /// mixed precision (a quantized page folds its V scale into alpha).
+    #[inline]
+    pub fn axpy_value_row(&self, h: usize, r: usize, alpha: f32, acc: &mut [f32]) {
+        debug_assert!(r < self.resident_len(), "row {r} out of {}", self.resident_len());
+        let (p, slot) = self.locate(r);
+        let (d, hs) = (self.d, self.rows_page * self.d);
+        let off = self.heads * hs + h * hs + slot * d;
+        match self.frame(p).store() {
+            PageStore::F32(data) => kernel::axpy(alpha, &data[off..off + d], acc),
+            PageStore::F16(data) => kernel::axpy_f16(alpha, &data[off..off + d], acc),
+            PageStore::Q8 { data, scales } => {
+                kernel::axpy_q8(alpha * scales[self.heads + h], &data[off..off + d], acc)
+            }
+        }
+    }
+
+    /// Resident frames currently holding a compressed store.
+    pub fn resident_quant_pages(&self) -> usize {
+        self.frames().filter(|(_, f)| f.is_quant()).count()
+    }
+
+    /// Dequantize one row of a frame's plane into `dst` (`off` is the
+    /// element offset into the K/V-plane coordinate space shared by all
+    /// stores; f32 rows copy through untouched).  The gathers' off-hot-
+    /// path materialization seam — segment streaming never calls this.
+    fn read_row(&self, p: usize, off: usize, dst: &mut [f32]) {
+        let d = dst.len();
+        match self.frame(p).store() {
+            PageStore::F32(data) => dst.copy_from_slice(&data[off..off + d]),
+            PageStore::F16(data) => {
+                for (o, &hbits) in dst.iter_mut().zip(&data[off..off + d]) {
+                    *o = kernel::f16_to_f32(hbits);
+                }
+            }
+            PageStore::Q8 { data, scales } => {
+                let hs = self.rows_page * self.d;
+                let s = scales[off / hs];
+                for (o, &qv) in dst.iter_mut().zip(&data[off..off + d]) {
+                    *o = s * qv as f32;
+                }
+            }
+        }
+    }
+
     /// Gather the first `rows` resident raw-key rows of one head into an
     /// owned matrix (the decode samplers' LSH build inherently
     /// materializes; also the test oracle for the paged layout).
+    /// Quantized pages dequantize here — the LSH sketch tolerates the
+    /// rounding, and this path is off the per-token hot loop.
     pub fn gather_head_k_prefix(&self, h: usize, rows: usize) -> Mat {
         assert!(rows <= self.resident_len());
         let mut out = Mat::zeros(rows, self.d);
@@ -1217,7 +1635,7 @@ impl KvCache {
         for r in 0..rows {
             let (p, slot) = self.locate(r);
             let off = h * hs + slot * self.d;
-            out.row_mut(r).copy_from_slice(&self.frame(p).data()[off..off + self.d]);
+            self.read_row(p, off, out.row_mut(r));
         }
         out
     }
@@ -1227,12 +1645,16 @@ impl KvCache {
         self.gather_head_k_prefix(h, self.resident_len())
     }
 
-    /// All resident value rows of one head, gathered.
+    /// All resident value rows of one head, gathered (dequantizing, like
+    /// [`KvCache::gather_head_k_prefix`]).
     pub fn gather_head_v(&self, h: usize) -> Mat {
         let rows = self.resident_len();
         let mut out = Mat::zeros(rows, self.d);
+        let hs = self.rows_page * self.d;
         for r in 0..rows {
-            out.row_mut(r).copy_from_slice(self.value_row(h, r));
+            let (p, slot) = self.locate(r);
+            let off = self.heads * hs + h * hs + slot * self.d;
+            self.read_row(p, off, out.row_mut(r));
         }
         out
     }
@@ -1628,12 +2050,16 @@ mod tests {
             for seg in &segs {
                 assert_eq!(seg.start, covered);
                 assert_eq!(seg.abs_start, covered); // nothing evicted
-                for r in 0..seg.k.rows {
+                let SegStore::F32 { k, v, .. } = seg.store else {
+                    panic!("quant off: every segment is f32");
+                };
+                assert_eq!(seg.rows, k.rows);
+                for r in 0..k.rows {
                     let at = (covered + r) * d;
-                    assert_eq!(seg.k.row(r), &flat_k[head][at..at + d]);
-                    assert_eq!(seg.v.row(r), &flat_v[head][at..at + d]);
+                    assert_eq!(k.row(r), &flat_k[head][at..at + d]);
+                    assert_eq!(v.row(r), &flat_v[head][at..at + d]);
                 }
-                covered += seg.k.rows;
+                covered += seg.rows;
             }
             assert_eq!(covered, 18);
         }
@@ -1694,7 +2120,10 @@ mod tests {
         let check = |cache: &KvCache, sc: f32| {
             for head in 0..h {
                 for seg in cache.head_segments(head) {
-                    for (a, b) in seg.ks.data.iter().zip(seg.k.data) {
+                    let SegStore::F32 { k, ks, .. } = seg.store else {
+                        panic!("quant off: every segment is f32");
+                    };
+                    for (a, b) in ks.data.iter().zip(k.data) {
                         assert!((a - b * sc).abs() < 1e-6);
                     }
                 }

@@ -100,6 +100,10 @@ COMMANDS:
            [--kv-degrade-window W]   under sustained pool exhaustion,
                                      degrade a session once to a W-row
                                      sliding window before shedding
+           [--kv-quant MODE]         frozen-page KV compression: off (default),
+                                     f16 (~1/3 bytes) or int8 (~1/6 bytes);
+                                     full pages compress as they freeze, the
+                                     hot tail and sink pages stay f32
            [--sched-max-batch B]     continuous-batching scheduler: fuse up
                                      to B decode rows per tick (default 8)
            [--prefill-chunk C]       chunked long-prompt ingest: admit
@@ -124,6 +128,8 @@ COMMANDS:
                                      effective tok/s per draft depth)
            [--prefill-sizes 16384,65536 --prefill-chunk 2048]  chunked-hyper
                                      vs exact-streaming long-prompt ingest
+           [--quant-sizes 16384,65536]  quantized-KV decode rows (int8/f16
+                                     vs f32 tok/s, resident bytes, max err)
   fig4     --sizes 4096,8192,... --d D --block B --samples M [--backward] --reps R
   fig3     --steps S --seq-len N
   table1   --steps S --seq-len N --reps R
@@ -160,6 +166,7 @@ fn main() {
                 &args.list("draft-k", &[2, 4]),
                 &args.list("prefill-sizes", &[16384, 65536]),
                 args.get("prefill-chunk", 2048usize),
+                &args.list("quant-sizes", &[16384, 65536]),
             );
             let text = doc.to_string();
             match args.get_str("json") {
@@ -243,6 +250,23 @@ fn main() {
                             g("exact_tok_s"),
                             g("speedup"),
                             g("max_abs_diff"),
+                        );
+                    }
+                }
+            }
+            if let Some(quant) = doc.get("kv_quant") {
+                if let Some(rows) = quant.as_array() {
+                    for row in rows {
+                        let g = |k: &str| row.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+                        let mode = row.get("mode").and_then(|v| v.as_str()).unwrap_or("?");
+                        println!(
+                            "kv quant (n={:.0}, {mode}): {:.0} tok/s vs f32 {:.0} tok/s, \
+                             {:.2}x fewer resident bytes, err {:.2e}",
+                            g("n"),
+                            g("quant_tok_s"),
+                            g("f32_tok_s"),
+                            g("bytes_ratio"),
+                            g("max_abs_err"),
                         );
                     }
                 }
@@ -379,6 +403,15 @@ fn cmd_serve(args: &Args) {
     let degrade_window = args.get("kv-degrade-window", 0usize);
     if degrade_window > 0 {
         cfg.cache.degrade_window = Some(degrade_window);
+    }
+    if let Some(mode) = args.get_str("kv-quant") {
+        match hyperattention::coordinator::QuantMode::parse(mode) {
+            Ok(q) => cfg.cache.quant = q,
+            Err(e) => {
+                eprintln!("--kv-quant: {e}");
+                std::process::exit(2);
+            }
+        }
     }
     let deadline_ms = args.get("deadline-ms", 0u64);
     if deadline_ms > 0 {

@@ -177,6 +177,16 @@ fn chaos_spec(rng: &mut Rng) -> String {
     if rng.next_f32() < 0.2 {
         parts.push(format!("prefill_chunk=panic:{:.2}", 0.05 + 0.1 * rng.next_f32()));
     }
+    // page-freeze faults: a failed (or panicked) quantization leaves
+    // that one page f32 (quant_fallbacks) — the append still succeeds
+    // and decode is unaffected; the panic is absorbed at the freeze
+    // point, so it never shows up in panics_caught
+    if rng.next_f32() < 0.35 {
+        parts.push(format!("page_freeze=err:{:.2}", 0.1 + 0.4 * rng.next_f32()));
+    }
+    if rng.next_f32() < 0.2 {
+        parts.push(format!("page_freeze=panic:{:.2}", 0.05 + 0.25 * rng.next_f32()));
+    }
     if parts.is_empty() {
         // at least one site armed per trial, or it isn't a chaos trial
         parts.push("decode_job=err:0.1".to_string());
@@ -210,6 +220,15 @@ fn run_trial(seed: u64) {
     // (and prefill_chunk faults have a live site to fire at)
     if rng.next_f32() < 0.5 {
         cfg.sched.prefill_chunk = 4;
+    }
+    // half the trials quantize frozen pages, so page_freeze faults have
+    // a live site to fire at (and quantized decode runs under chaos)
+    if rng.next_f32() < 0.5 {
+        cfg.cache.quant = if rng.next_f32() < 0.5 {
+            hyperattention::coordinator::QuantMode::Int8
+        } else {
+            hyperattention::coordinator::QuantMode::F16
+        };
     }
     if rng.next_f32() < 0.3 {
         // aggressive deadlines on some trials: expiry is one more path
@@ -377,6 +396,52 @@ fn unarmed_and_delay_only_failpoints_are_bitwise_invisible() {
     let delayed = run_workload(42);
     failpoint::clear();
     assert_eq!(baseline, delayed, "a delay-only failpoint changed output bits");
+}
+
+/// Deterministic page-freeze degradation: with the failpoint armed at
+/// probability 1 every freeze-point quantization falls back — pages
+/// stay f32 and bitwise-readable, every append still succeeds,
+/// `quant_fallbacks` counts each skipped page, and an injected PANIC
+/// is absorbed at the freeze point rather than unwinding the append.
+#[test]
+fn page_freeze_faults_degrade_to_f32_and_absorb_panics() {
+    use hyperattention::linalg::{KvCache, PagePool, QkvView, QuantMode};
+    install_quiet_hook();
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let (h, d, rp) = (2usize, 4usize, 4usize);
+    let rows = 3 * rp; // three page-aligned full pages
+    let mut rng = Rng::new(77);
+    let q = rng.normal_vec(h * rows * d);
+    let k = rng.normal_vec(h * rows * d);
+    let v = rng.normal_vec(h * rows * d);
+
+    // no fault armed: all three pages freeze compressed
+    failpoint::clear();
+    let pool = PagePool::with_quant(3 * h * d * rp, None, QuantMode::Int8);
+    let mut cache = KvCache::with_pool(h, d, pool.clone(), None).unwrap();
+    cache.append(&QkvView::new(h, rows, d, &q, &k, &v).unwrap()).unwrap();
+    assert_eq!(cache.resident_quant_pages(), 3);
+    assert_eq!(pool.stats().quant_fallbacks, 0);
+    drop(cache);
+
+    for action in ["err", "panic"] {
+        failpoint::configure(&format!("page_freeze={action}:1.0"), 7).unwrap();
+        let pool = PagePool::with_quant(3 * h * d * rp, None, QuantMode::Int8);
+        let mut cache = KvCache::with_pool(h, d, pool.clone(), None).unwrap();
+        cache
+            .append(&QkvView::new(h, rows, d, &q, &k, &v).unwrap())
+            .unwrap_or_else(|e| panic!("{action}: append must survive a freeze fault: {e}"));
+        assert_eq!(cache.resident_quant_pages(), 0, "{action}: every page degraded");
+        let s = pool.stats();
+        assert_eq!(s.quant_fallbacks, 3, "{action}: one fallback per skipped page");
+        assert_eq!((s.quant_pages, s.bytes_saved_quant), (0, 0), "{action}");
+        // degraded pages are still the bitwise f32 rows
+        for hh in 0..h {
+            let got = cache.gather_head_k(hh);
+            assert_eq!(&got.data[..], &k[hh * rows * d..(hh + 1) * rows * d], "{action}");
+        }
+        failpoint::clear();
+    }
 }
 
 /// Determinism of the chaos itself: the same seed arms the same spec

@@ -1,0 +1,302 @@
+//! Acceptance gates for quantized KV pages (f16/int8 frozen-page
+//! compression with fused dequant streaming):
+//!
+//! * decode over a quantized cache tracks the f32 cache within a pinned
+//!   per-element tolerance on every backend (Exact/Flash/Hyper/
+//!   CausalHyper/Auto), through sampled decode (covering parameters
+//!   make the estimator exact, so quantization error is the only
+//!   difference), chunked prefill, and sliding-window eviction;
+//! * with `QuantMode::Off` the quant-capable pool is **bitwise
+//!   identical** to the plain f32 pool — same outputs, same bytes;
+//! * int8 frozen pages store no f32 planes: resident bytes are pinned
+//!   exactly (data + scales, ≥ 5× under the f32 frames they replace)
+//!   and the byte-denominated budget admits proportionally more rows.
+
+use hyperattention::attention::op::{
+    self, AttnCache, AttnConfig, AutoPolicy, CachePolicy, SeedPolicy,
+};
+use hyperattention::linalg::{KvCache, PagePool, QkvView, QuantMode, POOL_EXHAUSTED};
+use hyperattention::rng::Rng;
+
+const H: usize = 2;
+const D: usize = 8;
+const RP: usize = 4; // rows per page at this (H, D) and page_elems
+
+fn pool_with(mode: QuantMode) -> PagePool {
+    PagePool::with_quant(3 * H * D * RP, None, mode)
+}
+
+/// Gather one token's `[heads, d]` slice out of a `[heads, total, d]`
+/// packed buffer.
+fn token_at(buf: &[f32], total: usize, t: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(H * D);
+    for head in 0..H {
+        out.extend_from_slice(&buf[head * total * D + t * D..head * total * D + (t + 1) * D]);
+    }
+    out
+}
+
+/// Every decode backend, plus the sampled-decode estimator with
+/// covering parameters (bucket window and residual sample ≥ any prefix
+/// used here), so its outputs are exact and quantization error is the
+/// only source of drift.
+fn configs() -> Vec<(&'static str, AttnConfig)> {
+    vec![
+        (
+            "exact",
+            AttnConfig { backend: op::Backend::Exact, causal: true, ..Default::default() },
+        ),
+        ("flash", AttnConfig::flash(true)),
+        (
+            "hyper",
+            AttnConfig {
+                backend: op::Backend::Hyper,
+                block: 8,
+                samples: 8,
+                seed: SeedPolicy::PerHead(5),
+                ..Default::default()
+            },
+        ),
+        ("causal-hyper", AttnConfig::causal_hyper(8, 8, 16)),
+        (
+            "auto",
+            AttnConfig { backend: op::Backend::Auto, causal: true, ..Default::default() },
+        ),
+        (
+            "sampled-decode",
+            AttnConfig {
+                backend: op::Backend::CausalHyper,
+                causal: true,
+                block: 512,
+                samples: 512,
+                causal_base: 512,
+                seed: SeedPolicy::PerHead(11),
+                auto: AutoPolicy {
+                    decode_hyper_threshold: 1,
+                    decode_resample_interval: 4,
+                    ..AutoPolicy::default()
+                },
+                ..Default::default()
+            },
+        ),
+    ]
+}
+
+/// Prefill `prefix_len` rows (optionally in `chunk`-row pieces), then
+/// decode `steps` tokens; returns each step's packed output.
+fn drive(
+    attn: &op::AttentionOp,
+    pool: &PagePool,
+    policy: CachePolicy,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    total: usize,
+    prefix_len: usize,
+    chunk: usize,
+    steps: usize,
+) -> Vec<Vec<f32>> {
+    let mut cache = AttnCache::with_pool(H, D, policy, pool).unwrap();
+    let mut fed = 0usize;
+    while fed < prefix_len {
+        let take = chunk.min(prefix_len - fed);
+        let view = QkvView::strided(
+            H,
+            take,
+            D,
+            total * D,
+            &q[fed * D..],
+            &k[fed * D..],
+            &v[fed * D..],
+        )
+        .unwrap();
+        attn.prefill(&mut cache, view).unwrap();
+        fed += take;
+    }
+    let mut outs = Vec::with_capacity(steps);
+    for t in 0..steps {
+        let (qt, kt, vt) = (
+            token_at(q, total, prefix_len + t),
+            token_at(k, total, prefix_len + t),
+            token_at(v, total, prefix_len + t),
+        );
+        let view = QkvView::new(H, 1, D, &qt, &kt, &vt).unwrap();
+        outs.push(attn.decode_step(&mut cache, view).unwrap().out);
+    }
+    outs
+}
+
+fn max_abs_diff(a: &[Vec<f32>], b: &[Vec<f32>]) -> f32 {
+    a.iter()
+        .zip(b)
+        .flat_map(|(x, y)| x.iter().zip(y).map(|(p, q)| (p - q).abs()))
+        .fold(0.0f32, f32::max)
+}
+
+/// Pinned per-element decode tolerances vs the f32 run of the same
+/// backend.  f16 carries ~2^-11 relative error per stored element;
+/// int8's per-(head,plane) max-abs scale bounds each element's error by
+/// `max_abs/254`, which compounds through one softmax.
+const F16_TOL: f32 = 5e-2;
+const INT8_TOL: f32 = 5e-1;
+
+/// Tentpole gate: quantized decode tracks f32 decode within the pinned
+/// tolerance on every backend, at prefix lengths spanning partial-tail
+/// and page-aligned freezes, fed both monolithically and in chunks
+/// (the chunk-appendable prefill path), under full retention and a
+/// sliding window (mixed f32-sink/quant-tail segments + eviction).
+#[test]
+fn quantized_decode_tracks_f32_on_all_backends() {
+    let steps = 6usize;
+    for (mode, tol) in [(QuantMode::F16, F16_TOL), (QuantMode::Int8, INT8_TOL)] {
+        for (name, cfg) in configs() {
+            let attn = cfg.build().unwrap();
+            for prefix_len in [18usize, 24] {
+                let total = prefix_len + steps;
+                let mut rng = Rng::new(0xAB5EED ^ prefix_len as u64);
+                let q = rng.normal_vec(H * total * D);
+                let k = rng.normal_vec(H * total * D);
+                let v = rng.normal_vec(H * total * D);
+                for (policy, chunk) in [
+                    (CachePolicy::Full, prefix_len), // monolithic
+                    (CachePolicy::Full, 5),          // chunked prefill
+                    (CachePolicy::SlidingWindow { window: 12, sink: 4 }, 5),
+                ] {
+                    let base = drive(
+                        &attn,
+                        &pool_with(QuantMode::Off),
+                        policy,
+                        &q,
+                        &k,
+                        &v,
+                        total,
+                        prefix_len,
+                        chunk,
+                        steps,
+                    );
+                    let quant = drive(
+                        &attn, &pool_with(mode), policy, &q, &k, &v, total, prefix_len,
+                        chunk, steps,
+                    );
+                    let diff = max_abs_diff(&base, &quant);
+                    assert!(
+                        diff <= tol,
+                        "{name} {mode:?} prefix={prefix_len} chunk={chunk} \
+                         policy={policy:?}: decode drifted {diff} > {tol}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// `--kv-quant off` is not "roughly the same", it is the same: a
+/// quant-capable pool in `Off` mode produces bitwise-identical decode
+/// outputs to the plain f32 pool, with identical byte accounting.
+#[test]
+fn quant_off_is_bitwise_identical_to_f32_pool() {
+    let (prefix_len, steps) = (18usize, 6usize);
+    let total = prefix_len + steps;
+    let mut rng = Rng::new(0x0FF);
+    let q = rng.normal_vec(H * total * D);
+    let k = rng.normal_vec(H * total * D);
+    let v = rng.normal_vec(H * total * D);
+    for (name, cfg) in configs() {
+        let attn = cfg.build().unwrap();
+        let plain_pool = PagePool::unbounded(3 * H * D * RP);
+        let off_pool = pool_with(QuantMode::Off);
+        for policy in
+            [CachePolicy::Full, CachePolicy::SlidingWindow { window: 12, sink: 4 }]
+        {
+            let a = drive(&attn, &plain_pool, policy, &q, &k, &v, total, prefix_len, 5, steps);
+            let b = drive(&attn, &off_pool, policy, &q, &k, &v, total, prefix_len, 5, steps);
+            assert_eq!(a, b, "{name} {policy:?}: Off mode must be bitwise-identical");
+        }
+        // every cache from drive() has dropped: both pools fully drain
+        assert_eq!(plain_pool.stats().outstanding, 0, "{name}: plain pool drained");
+        let s = off_pool.stats();
+        assert_eq!(s.outstanding, 0, "{name}: off pool drained");
+        assert_eq!((s.quant_pages, s.bytes_in_use), (0, 0), "{name}: no quant frames in Off");
+    }
+}
+
+/// Acceptance pin: int8 frozen pages hold **no f32 planes**.  The
+/// resident bytes of a fully-frozen cache are exactly
+/// `pages · (2·H·RP·D  int8 data + 2·H f32 scales)` — ≥ 5× under the
+/// `pages · page_elems · 4` the f32 frames charged — and
+/// `bytes_saved_quant` accounts for every saved byte.
+#[test]
+fn int8_frozen_pages_store_no_f32_planes() {
+    let pages = 4usize;
+    let rows = pages * RP; // page-aligned: every page freezes
+    let mut rng = Rng::new(0xBEEF);
+    let q = rng.normal_vec(H * rows * D);
+    let k = rng.normal_vec(H * rows * D);
+    let v = rng.normal_vec(H * rows * D);
+    let view = QkvView::new(H, rows, D, &q, &k, &v).unwrap();
+
+    let page_bytes = 3 * H * D * RP * 4;
+    let q8_bytes = 2 * H * RP * D + 2 * H * 4; // data + per-(head,plane) scales
+    let f16_bytes = 2 * H * RP * D * 2;
+
+    for (mode, store_bytes) in [(QuantMode::Int8, q8_bytes), (QuantMode::F16, f16_bytes)] {
+        let pool = pool_with(mode);
+        let mut cache = KvCache::with_pool(H, D, pool.clone(), None).unwrap();
+        cache.append(&view).unwrap();
+        assert_eq!(cache.resident_quant_pages(), pages);
+        let s = pool.stats();
+        assert_eq!(
+            s.bytes_in_use,
+            pages * store_bytes,
+            "{mode:?}: frozen pages must charge exactly their compressed store"
+        );
+        assert_eq!(s.bytes_saved_quant, pages * (page_bytes - store_bytes));
+        assert_eq!(s.quant_pages, pages);
+        if mode == QuantMode::Int8 {
+            assert!(
+                5 * s.bytes_in_use <= pages * page_bytes,
+                "int8 must be a >=5x byte reduction ({} vs {})",
+                s.bytes_in_use,
+                pages * page_bytes
+            );
+        }
+    }
+
+    // f32 reference: same rows, full page charge
+    let pool = pool_with(QuantMode::Off);
+    let mut cache = KvCache::with_pool(H, D, pool.clone(), None).unwrap();
+    cache.append(&view).unwrap();
+    assert_eq!(pool.stats().bytes_in_use, pages * page_bytes);
+    assert_eq!(pool.stats().bytes_saved_quant, 0);
+    assert_eq!(cache.resident_quant_pages(), 0);
+}
+
+/// The pool budget is byte-denominated: the same budget that bounces an
+/// f32 cache at 3 pages of rows admits many more rows of int8 frozen
+/// pages, because compressed pages charge ~1/6 of a page.
+#[test]
+fn byte_budget_admits_more_quantized_rows() {
+    let budget = Some(3usize);
+    let mut rng = Rng::new(0xCAFE);
+    let row = |rng: &mut Rng| {
+        (rng.normal_vec(H * D), rng.normal_vec(H * D), rng.normal_vec(H * D))
+    };
+    let fill = |pool: &PagePool, rows: usize, rng: &mut Rng| -> Result<(), String> {
+        let mut cache = KvCache::with_pool(H, D, pool.clone(), None).unwrap();
+        for _ in 0..rows {
+            let (q, k, v) = row(rng);
+            let view = QkvView::new(H, 1, D, &q, &k, &v).unwrap();
+            cache.append(&view)?;
+        }
+        Ok(())
+    };
+    // f32: 3 pages = 12 rows fit; the 13th needs a 4th page -> bounce
+    let f32_pool = PagePool::with_quant(3 * H * D * RP, budget, QuantMode::Off);
+    let err = fill(&f32_pool, 3 * RP + 1, &mut rng).unwrap_err();
+    assert!(err.contains(POOL_EXHAUSTED), "expected backpressure, got: {err}");
+    // int8: 10 pages of rows fit in the same byte budget (frozen pages
+    // keep returning bytes to the budget as they compress)
+    let q8_pool = PagePool::with_quant(3 * H * D * RP, budget, QuantMode::Int8);
+    fill(&q8_pool, 10 * RP, &mut rng).expect("int8 pages fit the same byte budget");
+    assert!(q8_pool.stats().quant_pages >= 9);
+}

@@ -475,3 +475,221 @@ mod chunked_ingest {
         }
     }
 }
+
+/// Quantized frozen-page fuzz arm: the same seeded append / fork /
+/// clear / drop interleavings, over pools running f16 or int8
+/// frozen-page compression.  Expected rows are recomputed **bitwise**
+/// through the same quantizer the freeze path uses
+/// ([`hyperattention::linalg::quantize_q8`] /
+/// [`hyperattention::kernel::f32_to_f16`]); the arm additionally pins
+/// exactly which pages may be compressed (full ∧ non-sink — frozen
+/// pages are never rewritten, the partial tail and pinned sinks stay
+/// f32), that forks share quantized frames refcount-only (identical
+/// frame ids, `quant_pages` counts each distinct frame once), and the
+/// pool's byte-conservation invariant
+/// `bytes_in_use + bytes_saved_quant == outstanding · page_bytes`.
+mod quant_pages {
+    use std::collections::HashSet;
+
+    use hyperattention::kernel::{f16_to_f32, f32_to_f16};
+    use hyperattention::linalg::{quantize_q8, PagePool, QuantMode};
+    use hyperattention::rng::Rng;
+
+    use super::{append_rows, new_slot, Oracle, Slot, D, H, RP};
+
+    /// Pages the freeze rule must have compressed: full, not a pinned
+    /// sink page, and still resident.
+    fn predicted_quant_pages(slot: &Slot) -> Vec<usize> {
+        let len = slot.oracle.len();
+        let sink = Oracle::sink_pages(slot.oracle.window);
+        let mut pages: Vec<usize> =
+            slot.oracle.expected_resident().iter().map(|&r| r / RP).collect();
+        pages.dedup();
+        pages.retain(|&p| p >= sink && (p + 1) * RP <= len);
+        pages
+    }
+
+    /// One (head, plane) page span pushed through the freeze path's own
+    /// quantizer and back — the bitwise-expected resident values.
+    fn dequant_span(hist: &[f32], mode: QuantMode) -> Vec<f32> {
+        match mode {
+            QuantMode::Off => hist.to_vec(),
+            QuantMode::F16 => hist.iter().map(|&x| f16_to_f32(f32_to_f16(x))).collect(),
+            QuantMode::Int8 => {
+                let mut q = vec![0i8; hist.len()];
+                let s = quantize_q8(hist, &mut q);
+                q.iter().map(|&v| s * v as f32).collect()
+            }
+        }
+    }
+
+    fn check_slot(slot: &Slot, mode: QuantMode, seed: u64, step: usize) {
+        let cache = &slot.cache;
+        let oracle = &slot.oracle;
+        let ctx = |what: &str| format!("seed {seed} step {step}: {what}");
+        assert_eq!(cache.len(), oracle.len(), "{}", ctx("logical length"));
+        let expect = oracle.expected_resident();
+        assert_eq!(cache.resident_len(), expect.len(), "{}", ctx("resident length"));
+        let qpages = predicted_quant_pages(slot);
+        assert_eq!(
+            cache.resident_quant_pages(),
+            qpages.len(),
+            "{}",
+            ctx("quantized-page census (full ∧ non-sink pages, nothing else)")
+        );
+        for h in 0..H {
+            let got_k = cache.gather_head_k(h);
+            let got_v = cache.gather_head_v(h);
+            for (r, &abs) in expect.iter().enumerate() {
+                let p = abs / RP;
+                let quant = qpages.contains(&p);
+                for (plane, hist, got) in
+                    [("K", &oracle.hist_k[h], got_k.row(r)), ("V", &oracle.hist_v[h], got_v.row(r))]
+                {
+                    let want: Vec<f32> = if quant {
+                        let dq = dequant_span(&hist[p * RP * D..(p + 1) * RP * D], mode);
+                        dq[(abs - p * RP) * D..(abs - p * RP + 1) * D].to_vec()
+                    } else {
+                        hist[abs * D..(abs + 1) * D].to_vec()
+                    };
+                    assert_eq!(
+                        got,
+                        &want[..],
+                        "{}",
+                        ctx(&format!(
+                            "{plane} head {h} resident row {r} \
+                             (abs {abs}, page {p}, quant={quant})"
+                        ))
+                    );
+                }
+            }
+        }
+    }
+
+    fn check_pool(pool: &PagePool, slots: &[Option<Slot>], seed: u64, step: usize) {
+        let s = pool.stats();
+        assert_eq!(
+            s.bytes_in_use + s.bytes_saved_quant,
+            s.outstanding * s.page_elems * 4,
+            "seed {seed} step {step}: byte conservation"
+        );
+        assert!(s.bytes_peak >= s.bytes_in_use, "seed {seed} step {step}: bytes peak");
+        if let Some(b) = s.budget {
+            assert!(
+                s.bytes_in_use <= b * s.page_elems * 4,
+                "seed {seed} step {step}: byte budget exceeded"
+            );
+        }
+        // the quant_pages gauge counts distinct compressed frames, no
+        // matter how many forks share them
+        let mut quant_ids = HashSet::new();
+        for slot in slots.iter().flatten() {
+            let frame_ids = slot.cache.resident_frame_ids();
+            let mut pages: Vec<usize> =
+                slot.oracle.expected_resident().iter().map(|&r| r / RP).collect();
+            pages.dedup();
+            assert_eq!(
+                frame_ids.len(),
+                pages.len(),
+                "seed {seed} step {step}: block table vs oracle pages"
+            );
+            let qp = predicted_quant_pages(slot);
+            for (id, p) in frame_ids.iter().zip(&pages) {
+                if qp.contains(p) {
+                    quant_ids.insert(*id);
+                }
+            }
+        }
+        assert_eq!(
+            s.quant_pages,
+            quant_ids.len(),
+            "seed {seed} step {step}: distinct quantized frames"
+        );
+    }
+
+    fn run_trial(seed: u64, mode: QuantMode) {
+        let mut rng = Rng::new(seed);
+        let budget = if rng.below(4) == 0 { Some(10 + rng.below(24)) } else { None };
+        let pool = PagePool::with_quant(3 * H * D * RP, budget, mode);
+        let n_slots = 2 + rng.below(5);
+        let mut slots: Vec<Option<Slot>> = (0..n_slots).map(|_| None).collect();
+        slots[0] = Some(new_slot(&pool, &mut rng));
+
+        for step in 0..30 {
+            let live: Vec<usize> = (0..n_slots).filter(|&i| slots[i].is_some()).collect();
+            let empty: Vec<usize> = (0..n_slots).filter(|&i| slots[i].is_none()).collect();
+            match rng.below(100) {
+                0..=59 => {
+                    if let Some(&i) = live.get(rng.below(live.len().max(1))) {
+                        let n = 1 + rng.below(6);
+                        append_rows(slots[i].as_mut().unwrap(), &mut rng, n);
+                    }
+                }
+                60..=74 => {
+                    if !live.is_empty() {
+                        let src = live[rng.below(live.len())];
+                        let Some(&dst) = empty.first() else { continue };
+                        let forked = {
+                            let s = slots[src].as_ref().unwrap();
+                            Slot { cache: s.cache.fork(), oracle: s.oracle.clone() }
+                        };
+                        assert_eq!(
+                            forked.cache.resident_frame_ids(),
+                            slots[src].as_ref().unwrap().cache.resident_frame_ids(),
+                            "seed {seed} step {step}: fork must share quantized \
+                             frames by identity"
+                        );
+                        slots[dst] = Some(forked);
+                    }
+                }
+                75..=84 => {
+                    if let Some(&i) = live.get(rng.below(live.len().max(1))) {
+                        let slot = slots[i].as_mut().unwrap();
+                        slot.cache.clear();
+                        let w = slot.oracle.window;
+                        slot.oracle = Oracle::new(w);
+                    }
+                }
+                85..=92 => {
+                    if let Some(&i) = live.get(rng.below(live.len().max(1))) {
+                        slots[i] = None;
+                    }
+                }
+                _ => {
+                    if let Some(&i) = empty.get(rng.below(empty.len().max(1))) {
+                        slots[i] = Some(new_slot(&pool, &mut rng));
+                    }
+                }
+            }
+            for slot in slots.iter().flatten() {
+                check_slot(slot, mode, seed, step);
+            }
+            check_pool(&pool, &slots, seed, step);
+        }
+
+        // teardown: every compressed frame's savings return with it
+        for slot in slots.iter_mut() {
+            *slot = None;
+        }
+        let s = pool.stats();
+        assert_eq!(s.outstanding, 0, "seed {seed}: frames leaked at teardown");
+        assert_eq!(s.bytes_in_use, 0, "seed {seed}: bytes leaked at teardown");
+        assert_eq!(s.quant_pages, 0, "seed {seed}: quant frames leaked at teardown");
+        assert_eq!(s.bytes_saved_quant, 0, "seed {seed}: savings leaked at teardown");
+        assert_eq!(s.quant_fallbacks, 0, "seed {seed}: no failpoints armed here");
+    }
+
+    /// Same seed-matrix contract as the f32 harness above, alternating
+    /// int8 and f16 pools per seed.
+    #[test]
+    fn quantized_page_properties_hold_across_seeded_interleavings() {
+        let trials: u64 = std::env::var("HYPERATTN_PROP_SEEDS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(220);
+        for t in 0..trials {
+            let mode = if t % 2 == 0 { QuantMode::Int8 } else { QuantMode::F16 };
+            run_trial(0xDECADE ^ (t * 0x9E3779B9), mode);
+        }
+    }
+}
