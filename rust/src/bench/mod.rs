@@ -58,6 +58,32 @@ fn time_it<F: FnMut()>(f: F, reps: usize) -> f64 {
     time_with(f, reps, true)
 }
 
+/// NaN/Inf-safe throughput: `count` events over `secs` seconds.
+///
+/// Sub-millisecond smoke runs can observe a zero (or denormal) elapsed
+/// time, and `count / 0.0` would push `inf` into the perf-gate JSON —
+/// which downstream compare steps then read as a fake infinite rate.
+/// A non-positive or non-finite denominator reports `0.0` ("no
+/// measurement") instead, which compare logic treats as missing data
+/// rather than an improvement.
+pub fn rate(count: f64, secs: f64) -> f64 {
+    if !count.is_finite() || !secs.is_finite() || secs <= 0.0 {
+        return 0.0;
+    }
+    let r = count / secs;
+    if r.is_finite() {
+        r
+    } else {
+        0.0
+    }
+}
+
+/// NaN/Inf-safe ratio for speedups and byte ratios; same contract as
+/// [`rate`]: a degenerate denominator yields `0.0`, never `inf`/`NaN`.
+pub fn ratio(num: f64, den: f64) -> f64 {
+    rate(num, den)
+}
+
 /// Timing core; `warmup = false` skips the untimed priming call — for
 /// measurements whose working set dwarfs every cache level anyway
 /// (large-n flash), where the warmup only doubles an already long run.
@@ -109,7 +135,7 @@ pub struct Fig4Row {
 
 impl Fig4Row {
     pub fn speedup(&self) -> f64 {
-        self.flash_s / self.hyper_s
+        ratio(self.flash_s, self.hyper_s)
     }
 }
 
@@ -850,10 +876,10 @@ pub struct AttnBenchRow {
 
 impl AttnBenchRow {
     pub fn hyper_tokens_per_s(&self) -> f64 {
-        self.n as f64 / self.hyper_s
+        rate(self.n as f64, self.hyper_s)
     }
     pub fn flash_tokens_per_s(&self) -> f64 {
-        self.n as f64 / self.flash_s
+        rate(self.n as f64, self.flash_s)
     }
 }
 
@@ -952,7 +978,7 @@ pub fn run_attention_bench_json(
     gate.insert("isa".into(), Value::Str(best.name().into()));
     gate.insert("scalar_s".into(), Value::Num(scalar_s));
     gate.insert("simd_s".into(), Value::Num(simd_s));
-    gate.insert("speedup".into(), Value::Num(scalar_s / simd_s));
+    gate.insert("speedup".into(), Value::Num(ratio(scalar_s, simd_s)));
     root.insert("simd_gate".into(), Value::Object(gate));
 
     // ---- 2) hyper-vs-flash tokens/sec sweep ----------------------------
@@ -985,7 +1011,7 @@ pub fn run_attention_bench_json(
         o.insert("flash_s".into(), Value::Num(flash_s));
         o.insert("hyper_tok_s".into(), Value::Num(row.hyper_tokens_per_s()));
         o.insert("flash_tok_s".into(), Value::Num(row.flash_tokens_per_s()));
-        o.insert("speedup".into(), Value::Num(flash_s / hyper_s));
+        o.insert("speedup".into(), Value::Num(ratio(flash_s, hyper_s)));
         sweep.push(Value::Object(o));
     }
     root.insert("sweep".into(), Value::Array(sweep));
@@ -1208,7 +1234,7 @@ pub fn run_fig3(
         let total = l as f64 * per_layer_hyper
             + (model.cfg.n_layers - l) as f64 * per_layer_exact;
         let baseline = model.cfg.n_layers as f64 * per_layer_exact;
-        rows.push(Fig3Row { n_patched: l, ppl, attn_speedup: baseline / total });
+        rows.push(Fig3Row { n_patched: l, ppl, attn_speedup: ratio(baseline, total) });
     }
     (model, curve, rows)
 }
@@ -1350,6 +1376,29 @@ pub fn print_fig5(rows: &[(usize, f32, f32)]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn rate_and_ratio_never_emit_non_finite() {
+        // Degenerate denominators: zero, negative, NaN, inf.
+        assert_eq!(rate(100.0, 0.0), 0.0);
+        assert_eq!(rate(100.0, -1.0), 0.0);
+        assert_eq!(rate(100.0, f64::NAN), 0.0);
+        assert_eq!(rate(100.0, f64::INFINITY), 0.0);
+        // Degenerate numerators.
+        assert_eq!(rate(f64::NAN, 1.0), 0.0);
+        assert_eq!(rate(f64::INFINITY, 1.0), 0.0);
+        // Overflow to inf from a denormal denominator is also clamped.
+        assert_eq!(rate(1e300, 1e-300), 0.0);
+        // The happy path is untouched.
+        assert_eq!(rate(500.0, 2.0), 250.0);
+        assert_eq!(ratio(3.0, 2.0), 1.5);
+        // Row helpers built on them stay finite at zero timings.
+        let row = AttnBenchRow { n: 1024, hyper_s: 0.0, flash_s: 0.0 };
+        assert!(row.hyper_tokens_per_s().is_finite());
+        assert!(row.flash_tokens_per_s().is_finite());
+        let f4 = Fig4Row { n: 1024, causal: false, backward: false, flash_s: 1.0, hyper_s: 0.0 };
+        assert!(f4.speedup().is_finite());
+    }
 
     #[test]
     fn fig4_speedup_grows_with_n() {

@@ -1,0 +1,255 @@
+//! `loadtest` — process-based load harness CLI (ROADMAP open item #2).
+//!
+//! ```text
+//! loadtest [run] --scenarios all --json summary.json   # orchestrate
+//! loadtest agent --addr H:P --scenario NAME --agent-id K   # internal
+//! loadtest compare baseline.json candidate.json [--markdown rep.md]
+//! ```
+//!
+//! `run` spawns the sibling release `hyperattn serve --listen` binary
+//! per scenario plus N agent processes (this same binary with the
+//! `agent` subcommand), merges their per-request samples into a
+//! percentile summary, and writes `summary.json`.  `compare` renders a
+//! markdown delta report between two summaries and exits nonzero on a
+//! threshold regression — the CI perf gate.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::exit;
+
+use hyperattention::loadgen::{
+    agent, compare::CompareConfig, compare_summaries, orchestrator, scenario,
+    OrchestratorConfig, Summary,
+};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.first().map(String::as_str) {
+        Some("agent") => ("agent", &argv[1..]),
+        Some("compare") => ("compare", &argv[1..]),
+        Some("run") => ("run", &argv[1..]),
+        Some("help") | Some("--help") | Some("-h") => {
+            usage();
+            return;
+        }
+        _ => ("run", &argv[..]),
+    };
+    let code = match cmd {
+        "agent" => cmd_agent(rest),
+        "compare" => cmd_compare(rest),
+        _ => cmd_run(rest),
+    };
+    exit(code);
+}
+
+fn usage() {
+    println!(
+        "loadtest: process-based load harness for the hyperattention serving stack\n\
+         \n\
+         loadtest [run] [--scenarios all|a,b,...] [--json FILE] [--serve-bin PATH]\n\
+         loadtest agent --addr HOST:PORT --scenario NAME --agent-id K\n\
+         loadtest compare BASELINE.json CANDIDATE.json\n\
+         \x20                 [--max-p99-ratio R] [--min-tok-ratio R] [--markdown FILE]\n\
+         \n\
+         scenarios: steady, cold_open, prefix_fanout, overload, chaos"
+    );
+}
+
+/// Tiny flag parser: `--key value` pairs plus bare positionals.
+fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
+    let mut kv = HashMap::new();
+    let mut pos = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() {
+                kv.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                kv.insert(key.to_string(), String::new());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (kv, pos)
+}
+
+fn cmd_run(args: &[String]) -> i32 {
+    let (kv, pos) = parse_flags(args);
+    if !pos.is_empty() {
+        eprintln!("loadtest run: unexpected arguments {pos:?}");
+        return 2;
+    }
+    let spec = kv.get("scenarios").map(String::as_str).unwrap_or("all");
+    let scenarios = match scenario::select(spec) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("loadtest: {e}");
+            return 2;
+        }
+    };
+    let serve_bin = match kv.get("serve-bin") {
+        Some(p) => PathBuf::from(p),
+        None => match orchestrator::sibling_serve_bin() {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("loadtest: {e}");
+                return 2;
+            }
+        },
+    };
+    let agent_bin = match std::env::current_exe() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("loadtest: current_exe: {e}");
+            return 2;
+        }
+    };
+    let cfg = OrchestratorConfig { serve_bin, agent_bin, verbose: true };
+    let summary = match orchestrator::run_with_processes(&cfg, &scenarios) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("loadtest: {e}");
+            return 1;
+        }
+    };
+    // structural sanity before anything trusts the artifact
+    for s in &summary.scenarios {
+        if !s.conserved() {
+            eprintln!(
+                "loadtest: scenario {} loses requests: issued {} != {}+{}+{}+{}",
+                s.name, s.issued, s.ok, s.shed, s.expired, s.faulted
+            );
+            return 1;
+        }
+        if !s.monotone() {
+            eprintln!("loadtest: scenario {} has non-monotone percentiles", s.name);
+            return 1;
+        }
+    }
+    let text = summary.to_json();
+    match kv.get("json") {
+        Some(path) => {
+            if let Err(e) = std::fs::write(path, &text) {
+                eprintln!("loadtest: write {path}: {e}");
+                return 1;
+            }
+            eprintln!("[loadtest] wrote {path}");
+        }
+        None => println!("{text}"),
+    }
+    for s in &summary.scenarios {
+        eprintln!(
+            "[loadtest] {}: issued={} ok={} shed={} expired={} faulted={} \
+             p50={}us p95={}us p99={}us max={}us tok/s={:.1}",
+            s.name,
+            s.issued,
+            s.ok,
+            s.shed,
+            s.expired,
+            s.faulted,
+            s.p50_us,
+            s.p95_us,
+            s.p99_us,
+            s.max_us,
+            s.tok_s
+        );
+    }
+    0
+}
+
+fn cmd_agent(args: &[String]) -> i32 {
+    let (kv, _pos) = parse_flags(args);
+    let Some(addr) = kv.get("addr") else {
+        eprintln!("loadtest agent: --addr required");
+        return 2;
+    };
+    let Some(name) = kv.get("scenario") else {
+        eprintln!("loadtest agent: --scenario required");
+        return 2;
+    };
+    let agent_id: usize = match kv.get("agent-id").map(String::as_str).unwrap_or("0").parse() {
+        Ok(v) => v,
+        Err(_) => {
+            eprintln!("loadtest agent: bad --agent-id");
+            return 2;
+        }
+    };
+    let sc = match scenario::select(name) {
+        Ok(mut v) => v.remove(0),
+        Err(e) => {
+            eprintln!("loadtest agent: {e}");
+            return 2;
+        }
+    };
+    match agent::run_agent(addr, &sc, agent_id) {
+        Ok(samples) => {
+            let mut out = String::new();
+            for s in &samples {
+                out.push_str(&s.to_line());
+                out.push('\n');
+            }
+            print!("{out}");
+            0
+        }
+        Err(e) => {
+            eprintln!("loadtest agent: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_compare(args: &[String]) -> i32 {
+    let (kv, pos) = parse_flags(args);
+    if pos.len() != 2 {
+        eprintln!("loadtest compare: expected BASELINE.json CANDIDATE.json");
+        return 2;
+    }
+    let load = |path: &str| -> Result<Summary, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Summary::parse(&text).map_err(|e| format!("{path}: {e}"))
+    };
+    let (baseline, candidate) = match (load(&pos[0]), load(&pos[1])) {
+        (Ok(b), Ok(c)) => (b, c),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("loadtest compare: {e}");
+            return 2;
+        }
+    };
+    let mut cfg = CompareConfig::default();
+    if let Some(v) = kv.get("max-p99-ratio") {
+        match v.parse::<f64>() {
+            Ok(x) if x > 0.0 && x.is_finite() => cfg.max_p99_ratio = x,
+            _ => {
+                eprintln!("loadtest compare: bad --max-p99-ratio {v:?}");
+                return 2;
+            }
+        }
+    }
+    if let Some(v) = kv.get("min-tok-ratio") {
+        match v.parse::<f64>() {
+            Ok(x) if x >= 0.0 && x.is_finite() => cfg.min_tok_ratio = x,
+            _ => {
+                eprintln!("loadtest compare: bad --min-tok-ratio {v:?}");
+                return 2;
+            }
+        }
+    }
+    let report = compare_summaries(&baseline, &candidate, &cfg);
+    if let Some(path) = kv.get("markdown") {
+        if let Err(e) = std::fs::write(path, &report.markdown) {
+            eprintln!("loadtest compare: write {path}: {e}");
+            return 1;
+        }
+    }
+    println!("{}", report.markdown);
+    if report.pass {
+        0
+    } else {
+        1
+    }
+}

@@ -923,8 +923,11 @@ impl ChunkedIngest {
     /// there is nothing to quarantine.
     pub(crate) fn fail(self, e: String, ctx: &EngineCtx) {
         let metrics = &*ctx.metrics;
+        let exec_us = self.exec_start.elapsed().as_micros() as u64;
         metrics.queue_latency.record(self.queue_us);
-        metrics.exec_latency.record(self.exec_start.elapsed().as_micros() as u64);
+        metrics.exec_latency.record(exec_us);
+        // failed ingests (admission sheds included) stay in the e2e tail
+        metrics.e2e_latency.record(self.queue_us + exec_us);
         metrics.jobs_failed.fetch_add(1, Relaxed);
         if let Reply::Full(tx) = self.respond {
             let _ = tx.send(Err(e));
@@ -1222,6 +1225,14 @@ pub(crate) fn respond_flush(item: WorkItem, metrics: &Metrics) {
 /// Items with no reply channel (close, prefix release) always run —
 /// skipping them would leak sessions or pinned pages — and pings
 /// always answer (an expired liveness probe is still a liveness probe).
+///
+/// Overload-accounting contract: the expired request's **queued time
+/// is recorded** into `queue_latency` and `e2e_latency` (exec = 0)
+/// before the ticket resolves.  Shed and expired requests are exactly
+/// the ones that dominate the tail under overload; dropping them from
+/// the histograms made p99 *understate* precisely when the system was
+/// saturated.  The `deadline_expired` counter is surfaced beside the
+/// latency lines in [`Metrics::report`].
 pub(crate) fn expire_if_late(item: WorkItem, metrics: &Metrics) -> Option<WorkItem> {
     let late = match (item.deadline, &item.respond) {
         (Some(dl), Reply::Full(_) | Reply::Decode(_)) => Instant::now() >= dl,
@@ -1230,9 +1241,13 @@ pub(crate) fn expire_if_late(item: WorkItem, metrics: &Metrics) -> Option<WorkIt
     if !late {
         return Some(item);
     }
+    let queued = item.submitted.elapsed();
+    let queue_us = queued.as_micros() as u64;
+    metrics.queue_latency.record(queue_us);
+    metrics.e2e_latency.record(queue_us);
     metrics.deadline_expired.fetch_add(1, Relaxed);
     metrics.jobs_failed.fetch_add(1, Relaxed);
-    let msg = format!("{DEADLINE_EXPIRED} (queued {:?})", item.submitted.elapsed());
+    let msg = format!("{DEADLINE_EXPIRED} (queued {queued:?})");
     match item.respond {
         Reply::Full(tx) => {
             let _ = tx.send(Err(msg));
@@ -1349,6 +1364,11 @@ pub(crate) fn execute_one(item: WorkItem, runtime: Option<&Runtime>, ctx: &Engin
             let exec_us = exec_start.elapsed().as_micros() as u64;
             metrics.queue_latency.record(queue_us);
             metrics.decode_latency.record(exec_us);
+            // decode steps count toward e2e too — shed steps (rung 4 of
+            // the exhaustion ladder) resolve through this same arm, so
+            // overload tail latency lands in the histogram instead of
+            // silently vanishing with the error string
+            metrics.e2e_latency.record(queue_us + exec_us);
             match &result {
                 Ok(_) => {
                     metrics.decode_steps.fetch_add(1, Relaxed);

@@ -363,8 +363,10 @@ fn run_decode_batch(
                 if e.starts_with("panic:") {
                     engine::quarantine_session(ctx, job.session);
                 }
+                let exec_us = exec_start.elapsed().as_micros() as u64;
                 metrics.queue_latency.record(queue_us);
-                metrics.decode_latency.record(exec_start.elapsed().as_micros() as u64);
+                metrics.decode_latency.record(exec_us);
+                metrics.e2e_latency.record(queue_us + exec_us);
                 metrics.jobs_failed.fetch_add(1, Relaxed);
                 if let Reply::Decode(tx) = respond {
                     let _ = tx.send(Err(e));
@@ -404,8 +406,10 @@ fn run_decode_batch(
             for a in admitted {
                 engine::quarantine_session(ctx, a.job.session);
                 drop(a.entry);
+                let exec_us = exec_start.elapsed().as_micros() as u64;
                 metrics.queue_latency.record(a.queue_us);
-                metrics.decode_latency.record(exec_start.elapsed().as_micros() as u64);
+                metrics.decode_latency.record(exec_us);
+                metrics.e2e_latency.record(a.queue_us + exec_us);
                 metrics.jobs_failed.fetch_add(1, Relaxed);
                 if let Reply::Decode(tx) = a.respond {
                     let _ = tx.send(Err(format!(
@@ -430,6 +434,7 @@ fn run_decode_batch(
                 engine::checkin(&ctx.sessions, job.session, entry);
                 metrics.queue_latency.record(queue_us);
                 metrics.decode_latency.record(exec_us);
+                metrics.e2e_latency.record(queue_us + exec_us);
                 metrics.decode_steps.fetch_add(1, Relaxed);
                 metrics.jobs_completed.fetch_add(1, Relaxed);
                 if let Reply::Decode(tx) = respond {

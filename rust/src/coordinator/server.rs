@@ -1035,6 +1035,10 @@ mod tests {
         let err = late.wait().unwrap_err();
         assert!(err.contains(DEADLINE_EXPIRED), "{err}");
         assert_eq!(server.metrics().deadline_expired.load(Ordering::Relaxed), 1);
+        // overload-accounting contract: the expired step's queued time
+        // landed in the latency histograms (open + expired decode = 2)
+        assert_eq!(server.metrics().e2e_latency.count(), 2, "expired step missing from e2e");
+        assert_eq!(server.metrics().queue_latency.count(), 2, "expired step missing from queue");
         // the expired step never touched the cache: a position-checked
         // retry at the prompt length succeeds
         let mut retry = dj();

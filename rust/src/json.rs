@@ -68,7 +68,12 @@ impl fmt::Display for Value {
                 if n.is_finite() {
                     write!(f, "{n}")
                 } else {
-                    write!(f, "null") // JSON has no inf/nan
+                    // JSON has no inf/nan token (RFC 8259 §6).  Emitting
+                    // the Rust Display form would produce invalid JSON
+                    // that silently poisons BENCH artifacts, so non-finite
+                    // numbers serialize as an explicit `null` and round-
+                    // trip back as Value::Null.
+                    write!(f, "null")
                 }
             }
             Value::Str(s) => write_json_string(f, s),
@@ -378,5 +383,28 @@ mod tests {
     fn empty_containers() {
         assert_eq!(parse("[]").unwrap(), Value::Array(vec![]));
         assert_eq!(parse("{}").unwrap(), Value::Object(BTreeMap::new()));
+    }
+
+    #[test]
+    fn non_finite_numbers_round_trip_as_null() {
+        // RFC 8259 has no inf/nan token: serialization must not emit
+        // one, and what it does emit must re-parse as valid JSON.
+        for bad in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let s = Value::Num(bad).to_string();
+            assert_eq!(s, "null", "non-finite must serialize as null, got {s}");
+            assert_eq!(parse(&s).unwrap(), Value::Null);
+        }
+        // Same contract when nested inside an artifact-shaped object.
+        let mut o = BTreeMap::new();
+        o.insert("tok_s".into(), Value::Num(f64::NAN));
+        o.insert("n".into(), Value::Num(128.0));
+        let s = Value::Object(o).to_string();
+        let back = parse(&s).expect("nested non-finite stays valid JSON");
+        assert_eq!(back.get("tok_s"), Some(&Value::Null));
+        assert_eq!(back.get("n").and_then(|v| v.as_f64()), Some(128.0));
+        // The raw inf/nan tokens themselves are rejected on input.
+        assert!(parse("inf").is_err());
+        assert!(parse("nan").is_err());
+        assert!(parse("[1, NaN]").is_err());
     }
 }

@@ -218,6 +218,29 @@
 //! flag.  Unset, every site compiles to one relaxed atomic load —
 //! bitwise-identical behavior to a build without failpoints.
 //!
+//! ## Load testing & perf gating
+//!
+//! The in-process [`bench`] loops measure kernels; the [`loadgen`]
+//! harness measures the *service*.  `loadtest` (its own binary)
+//! spawns the release `hyperattn serve --listen` process per scenario
+//! plus N agent processes, drives open/prefill/decode/close traffic
+//! over a line-delimited JSON TCP protocol ([`loadgen::proto`]), and
+//! merges per-request samples into a percentile-focused
+//! `summary.json` — p50/p95/p99/max, tok/s, and shed/expired/fault
+//! counts per scenario ([`loadgen::summary`]).  Five built-in
+//! scenarios ([`loadgen::scenario`]) cover steady-state decode,
+//! cold-open flood, shared-prefix fan-out, pool-exhaustion overload,
+//! and failpoint chaos.  Latency percentiles deliberately include
+//! shed, expired, and faulted requests (the overload-accounting
+//! contract, mirrored by [`coordinator::metrics::Metrics`]): tail
+//! latency that excludes rejected traffic understates exactly when
+//! the system is overloaded.  `loadtest compare baseline.json
+//! candidate.json` ([`loadgen::compare`]) renders a markdown delta
+//! report and exits nonzero past its p99/tok-s thresholds; CI runs a
+//! smoke-size sweep and compares against the committed
+//! `BENCH_loadtest_baseline.json`, making the perf trajectory a gate
+//! rather than an artifact.
+//!
 //! ## Environment knobs
 //!
 //! * `HYPERATTN_THREADS=N` — worker-thread count for the [`par`]
@@ -235,6 +258,7 @@ pub mod coordinator;
 pub mod json;
 pub mod kernel;
 pub mod linalg;
+pub mod loadgen;
 pub mod lsh;
 pub mod model;
 pub mod par;

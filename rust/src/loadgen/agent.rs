@@ -1,0 +1,155 @@
+//! One traffic generator: drives a scenario's open → decode* → close
+//! pattern over a single protocol connection and records one
+//! [`Sample`] per request.
+//!
+//! Error classification mirrors the coordinator's explicit-resolution
+//! contract: every request resolves with either a payload or an error
+//! string, and the string says *why* — [`classify_error`] folds that
+//! into the shed / expired / fault taxonomy the summary reports.  An
+//! agent never retries and never aborts on a failed request (a chaos
+//! or overload scenario would be unmeasurable otherwise); a failed
+//! open simply skips that session's decodes.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use super::proto::{Request, Response};
+use super::scenario::Scenario;
+pub use super::summary::Outcome;
+use super::summary::Sample;
+use crate::coordinator::request::DEADLINE_EXPIRED;
+
+/// Key the orchestrator registers the shared prefix under (prefix
+/// fan-out scenario).
+pub const PREFIX_KEY: &str = "loadgen-prefix";
+
+/// Fold a coordinator error string into the summary taxonomy.
+pub fn classify_error(err: &str) -> Outcome {
+    if err.contains(DEADLINE_EXPIRED) {
+        Outcome::Expired
+    } else if err.contains("admission rejected") {
+        Outcome::Shed
+    } else {
+        Outcome::Fault
+    }
+}
+
+/// A connected protocol client with request/response timing.
+pub struct Conn {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+    next_id: u64,
+}
+
+impl Conn {
+    pub fn connect(addr: &str) -> Result<Conn, String> {
+        let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        let writer = stream.try_clone().map_err(|e| format!("clone stream: {e}"))?;
+        Ok(Conn { writer, reader: BufReader::new(stream), next_id: 1 })
+    }
+
+    pub fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Send one request, block for its response, measure client-side
+    /// latency.  Transport errors surface as an `Err` response so the
+    /// caller records a fault instead of tearing down the run.
+    pub fn call(&mut self, req: &Request) -> (Result<Response, String>, u64) {
+        let t0 = Instant::now();
+        let resp = self.call_inner(req);
+        (resp, t0.elapsed().as_micros() as u64)
+    }
+
+    fn call_inner(&mut self, req: &Request) -> Result<Response, String> {
+        let line = req.to_line();
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|_| self.writer.write_all(b"\n"))
+            .and_then(|_| self.writer.flush())
+            .map_err(|e| format!("send: {e}"))?;
+        let mut buf = String::new();
+        match self.reader.read_line(&mut buf) {
+            Ok(0) => Err("server closed connection".to_string()),
+            Ok(_) => Response::from_line(buf.trim()),
+            Err(e) => Err(format!("recv: {e}")),
+        }
+    }
+}
+
+/// Record the outcome of one call as a sample.  Returns the session id
+/// on a successful open.
+fn record(
+    samples: &mut Vec<Sample>,
+    op: &str,
+    result: (Result<Response, String>, u64),
+) -> Option<u64> {
+    let (resp, us) = result;
+    let (outcome, session) = match resp {
+        Ok(r) if r.ok => (Outcome::Ok, r.session),
+        Ok(r) => (classify_error(r.err.as_deref().unwrap_or("unknown error")), None),
+        Err(e) => (classify_error(&e), None),
+    };
+    samples.push(Sample { op: op.to_string(), outcome, us });
+    session
+}
+
+/// Drive one agent's share of a scenario over a fresh connection.
+/// `agent_id` seeds the tensor synthesis so agents do not all replay
+/// the same tensors.
+pub fn run_agent(addr: &str, scenario: &Scenario, agent_id: usize) -> Result<Vec<Sample>, String> {
+    let mut conn = Conn::connect(addr)?;
+    let mut samples = Vec::new();
+    let prefix =
+        if scenario.prefix_rows > 0 { Some(PREFIX_KEY.to_string()) } else { None };
+    for open_idx in 0..scenario.opens_per_agent {
+        let seed = 0x5eed_0000 + (agent_id as u64) * 1000 + open_idx as u64;
+        let id = conn.fresh_id();
+        let open = Request::Open {
+            id,
+            heads: scenario.heads,
+            n: scenario.n,
+            d: scenario.d,
+            seed,
+            prefix: prefix.clone(),
+        };
+        let session = record(&mut samples, "open", conn.call(&open));
+        let Some(session) = session else {
+            continue; // failed open: no session to decode against
+        };
+        for step in 0..scenario.decodes_per_open {
+            let id = conn.fresh_id();
+            let dec = Request::Decode {
+                id,
+                session,
+                heads: scenario.heads,
+                d: scenario.d,
+                seed: seed ^ ((step as u64) << 32),
+            };
+            record(&mut samples, "decode", conn.call(&dec));
+        }
+        let id = conn.fresh_id();
+        record(&mut samples, "close", conn.call(&Request::Close { id, session }));
+    }
+    Ok(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_strings_classify_into_the_summary_taxonomy() {
+        assert_eq!(classify_error("deadline expired (queued 12ms)"), Outcome::Expired);
+        assert_eq!(
+            classify_error("session admission rejected: pool exhausted"),
+            Outcome::Shed
+        );
+        assert_eq!(classify_error("injected fault: decode_job"), Outcome::Fault);
+        assert_eq!(classify_error("unknown session 42"), Outcome::Fault);
+        assert_eq!(classify_error("send: broken pipe"), Outcome::Fault);
+    }
+}

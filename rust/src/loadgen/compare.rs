@@ -1,0 +1,234 @@
+//! Baseline-vs-candidate comparison: the perf-regression gate.
+//!
+//! `loadtest compare baseline.json candidate.json` loads two
+//! [`Summary`] artifacts, emits a markdown report with per-metric
+//! deltas, and renders a verdict: **fail** when any scenario's p99
+//! regresses beyond `max_p99_ratio` or its tok/s drops below
+//! `min_tok_ratio` of baseline.  A candidate identical to its baseline
+//! always passes; a scenario present in the baseline but missing from
+//! the candidate always fails (a silently dropped scenario must not
+//! read as green).
+//!
+//! Degenerate baselines are treated as "no signal", not as infinitely
+//! strict: a baseline p99 of 0 µs or tok/s of 0 skips that metric's
+//! threshold (the smoke gate in CI uses generous thresholds anyway —
+//! its job is catching order-of-magnitude cliffs and structural
+//! breakage, not ±10% noise).
+
+use super::summary::Summary;
+use crate::bench::ratio;
+
+/// Gate thresholds.  `max_p99_ratio` bounds `candidate_p99 /
+/// baseline_p99` from above; `min_tok_ratio` bounds `candidate_tok_s /
+/// baseline_tok_s` from below.
+#[derive(Clone, Copy, Debug)]
+pub struct CompareConfig {
+    pub max_p99_ratio: f64,
+    pub min_tok_ratio: f64,
+}
+
+impl Default for CompareConfig {
+    fn default() -> Self {
+        CompareConfig { max_p99_ratio: 2.0, min_tok_ratio: 0.5 }
+    }
+}
+
+/// Comparison result: the rendered markdown report plus the verdict.
+#[derive(Clone, Debug)]
+pub struct CompareReport {
+    pub markdown: String,
+    pub pass: bool,
+    /// human-readable reasons for each failed check
+    pub failures: Vec<String>,
+}
+
+/// Compare `candidate` against `baseline` under `cfg`.
+pub fn compare_summaries(
+    baseline: &Summary,
+    candidate: &Summary,
+    cfg: &CompareConfig,
+) -> CompareReport {
+    let mut failures = Vec::new();
+    let mut md = String::new();
+    md.push_str("# loadtest compare\n\n");
+    md.push_str(&format!(
+        "thresholds: p99 ratio ≤ {:.2}, tok/s ratio ≥ {:.2}\n\n",
+        cfg.max_p99_ratio, cfg.min_tok_ratio
+    ));
+    md.push_str("| scenario | metric | baseline | candidate | ratio | verdict |\n");
+    md.push_str("|---|---|---:|---:|---:|---|\n");
+
+    for base in &baseline.scenarios {
+        let Some(cand) = candidate.get(&base.name) else {
+            failures.push(format!("scenario {} missing from candidate", base.name));
+            md.push_str(&format!(
+                "| {} | (present) | yes | **missing** | — | FAIL |\n",
+                base.name
+            ));
+            continue;
+        };
+
+        // p99: higher is worse.
+        let p99_ratio = ratio(cand.p99_us as f64, base.p99_us as f64);
+        let p99_checked = base.p99_us > 0;
+        let p99_ok = !p99_checked || p99_ratio <= cfg.max_p99_ratio;
+        if !p99_ok {
+            failures.push(format!(
+                "{}: p99 {}µs → {}µs ({}x > {:.2}x allowed)",
+                base.name,
+                base.p99_us,
+                cand.p99_us,
+                fmt_ratio(p99_ratio),
+                cfg.max_p99_ratio
+            ));
+        }
+        md.push_str(&format!(
+            "| {} | p99_us | {} | {} | {} | {} |\n",
+            base.name,
+            base.p99_us,
+            cand.p99_us,
+            fmt_ratio(p99_ratio),
+            verdict(p99_ok, p99_checked)
+        ));
+
+        // tok/s: lower is worse.
+        let tok_ratio = ratio(cand.tok_s, base.tok_s);
+        let tok_checked = base.tok_s > 0.0;
+        let tok_ok = !tok_checked || tok_ratio >= cfg.min_tok_ratio;
+        if !tok_ok {
+            failures.push(format!(
+                "{}: tok/s {:.1} → {:.1} ({}x < {:.2}x required)",
+                base.name, base.tok_s, cand.tok_s, fmt_ratio(tok_ratio), cfg.min_tok_ratio
+            ));
+        }
+        md.push_str(&format!(
+            "| {} | tok_s | {:.1} | {:.1} | {} | {} |\n",
+            base.name,
+            base.tok_s,
+            cand.tok_s,
+            fmt_ratio(tok_ratio),
+            verdict(tok_ok, tok_checked)
+        ));
+
+        // informational rows (no threshold): p50 and shed counts.
+        md.push_str(&format!(
+            "| {} | p50_us | {} | {} | {} | info |\n",
+            base.name,
+            base.p50_us,
+            cand.p50_us,
+            fmt_ratio(ratio(cand.p50_us as f64, base.p50_us as f64))
+        ));
+        md.push_str(&format!(
+            "| {} | shed+expired | {} | {} | — | info |\n",
+            base.name,
+            base.shed + base.expired,
+            cand.shed + cand.expired
+        ));
+    }
+
+    let pass = failures.is_empty();
+    md.push('\n');
+    if pass {
+        md.push_str("**verdict: PASS**\n");
+    } else {
+        md.push_str("**verdict: FAIL**\n\n");
+        for f in &failures {
+            md.push_str(&format!("- {f}\n"));
+        }
+    }
+    CompareReport { markdown: md, pass, failures }
+}
+
+fn verdict(ok: bool, checked: bool) -> &'static str {
+    if !checked {
+        "skip (no baseline signal)"
+    } else if ok {
+        "ok"
+    } else {
+        "**FAIL**"
+    }
+}
+
+fn fmt_ratio(r: f64) -> String {
+    if r > 0.0 {
+        format!("{r:.2}")
+    } else {
+        "—".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loadgen::summary::ScenarioSummary;
+
+    fn scen(name: &str, p99_us: u64, tok_s: f64) -> ScenarioSummary {
+        ScenarioSummary {
+            name: name.to_string(),
+            issued: 100,
+            ok: 100,
+            shed: 0,
+            expired: 0,
+            faulted: 0,
+            p50_us: p99_us / 2,
+            p95_us: p99_us * 9 / 10,
+            p99_us,
+            max_us: p99_us * 2,
+            tok_s,
+            wall_s: 1.0,
+        }
+    }
+
+    #[test]
+    fn identical_baseline_passes() {
+        let s = Summary { scenarios: vec![scen("steady", 1000, 50.0), scen("chaos", 5000, 10.0)] };
+        let r = compare_summaries(&s, &s, &CompareConfig::default());
+        assert!(r.pass, "self-compare must pass: {:?}", r.failures);
+        assert!(r.markdown.contains("PASS"));
+    }
+
+    #[test]
+    fn injected_p99_regression_fails() {
+        let base = Summary { scenarios: vec![scen("steady", 1000, 50.0)] };
+        let bad = Summary { scenarios: vec![scen("steady", 2500, 50.0)] };
+        let r = compare_summaries(&base, &bad, &CompareConfig::default());
+        assert!(!r.pass);
+        assert!(r.failures.iter().any(|f| f.contains("p99")), "{:?}", r.failures);
+        assert!(r.markdown.contains("FAIL"));
+    }
+
+    #[test]
+    fn tok_s_collapse_fails() {
+        let base = Summary { scenarios: vec![scen("steady", 1000, 50.0)] };
+        let bad = Summary { scenarios: vec![scen("steady", 1000, 10.0)] };
+        let r = compare_summaries(&base, &bad, &CompareConfig::default());
+        assert!(!r.pass);
+        assert!(r.failures.iter().any(|f| f.contains("tok/s")), "{:?}", r.failures);
+    }
+
+    #[test]
+    fn missing_scenario_fails_but_zero_baseline_skips() {
+        let base = Summary { scenarios: vec![scen("steady", 1000, 50.0)] };
+        let empty = Summary { scenarios: vec![] };
+        assert!(!compare_summaries(&base, &empty, &CompareConfig::default()).pass);
+
+        // zero-signal baseline: thresholds skip instead of dividing by 0
+        let zero = Summary { scenarios: vec![scen("steady", 0, 0.0)] };
+        let cand = Summary { scenarios: vec![scen("steady", 9999, 0.001)] };
+        let r = compare_summaries(&zero, &cand, &CompareConfig::default());
+        assert!(r.pass, "zero baseline must skip, not fail: {:?}", r.failures);
+        assert!(r.markdown.contains("skip"));
+    }
+
+    #[test]
+    fn generous_thresholds_tolerate_noise() {
+        let base = Summary { scenarios: vec![scen("steady", 1000, 50.0)] };
+        let noisy = Summary { scenarios: vec![scen("steady", 1900, 30.0)] };
+        let r = compare_summaries(
+            &base,
+            &noisy,
+            &CompareConfig { max_p99_ratio: 25.0, min_tok_ratio: 0.04 },
+        );
+        assert!(r.pass, "{:?}", r.failures);
+    }
+}

@@ -1,0 +1,165 @@
+//! The server side of the load-harness wire protocol: a TCP accept
+//! loop that maps [`proto::Request`] lines onto a running
+//! [`Server`].  `hyperattn serve --listen ADDR` runs this after
+//! printing the bound address (`LISTEN <addr>`), which is how the
+//! orchestrator discovers an ephemeral (`:0`) port.
+//!
+//! One thread per connection, strictly request/response — agent-side
+//! concurrency comes from opening multiple connections.  Tensor
+//! payloads never cross the wire: requests carry a seed and the
+//! listener synthesizes the q/k/v deterministically (see
+//! [`synth_open_job`]), so the protocol overhead stays negligible next
+//! to the attention work being measured.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::proto::{Request, Response};
+use crate::coordinator::{AttnJob, DecodeJob, ModePreference, Server};
+use crate::rng::Rng;
+
+/// Bind the listener; `addr` may use port 0 for an OS-assigned port.
+pub fn bind(addr: &str) -> Result<(TcpListener, SocketAddr), String> {
+    let l = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+    let local = l.local_addr().map_err(|e| format!("local_addr: {e}"))?;
+    Ok((l, local))
+}
+
+/// Accept loop.  Polls so it can observe `stop` (set by the in-process
+/// orchestrator); the process-mode serve passes a flag nobody sets and
+/// runs until killed.  Connection threads exit when their peer closes.
+pub fn run(server: Arc<Server>, listener: TcpListener, stop: Arc<AtomicBool>) {
+    listener.set_nonblocking(true).expect("listener nonblocking");
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let srv = server.clone();
+                conns.push(std::thread::spawn(move || handle_conn(srv, stream)));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => break,
+        }
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+fn handle_conn(server: Arc<Server>, stream: TcpStream) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return, // peer closed
+            Ok(_) => {}
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let resp = match Request::from_line(trimmed) {
+            Ok(req) => dispatch(&server, req),
+            Err(e) => Response::failure(0, format!("protocol error: {e}")),
+        };
+        let out = resp.to_line();
+        if writer.write_all(out.as_bytes()).is_err()
+            || writer.write_all(b"\n").is_err()
+            || writer.flush().is_err()
+        {
+            return;
+        }
+    }
+}
+
+/// Map one protocol request onto the coordinator API, blocking until
+/// the coordinator resolves it (every request resolves explicitly —
+/// shed and expired requests come back as error strings, which the
+/// agent classifies; see [`super::agent::classify_error`]).
+pub fn dispatch(server: &Server, req: Request) -> Response {
+    let id = req.id();
+    let done = |r: Result<(), String>| match r {
+        Ok(()) => Response::success(id),
+        Err(e) => Response::failure(id, e),
+    };
+    match req {
+        Request::Ping { .. } => done(server.ping(Duration::from_secs(30))),
+        Request::Open { heads, n, d, seed, prefix, .. } => {
+            let job = synth_open_job(heads, n, d, seed);
+            match server
+                .open_session_with_prefix(prefix.as_deref(), job)
+                .and_then(|(sid, t)| t.wait().map(|_| sid))
+            {
+                Ok(sid) => Response::with_session(id, sid),
+                Err(e) => Response::failure(id, e),
+            }
+        }
+        Request::Full { heads, n, d, seed, .. } => {
+            let job = synth_open_job(heads, n, d, seed);
+            done(server.submit_wait(job).map(|_| ()))
+        }
+        Request::Decode { session, heads, d, seed, .. } => {
+            let mut rng = Rng::new(seed);
+            let job = DecodeJob {
+                session,
+                heads,
+                d,
+                pos: None,
+                q: rng.normal_vec(heads * d),
+                k: rng.normal_vec(heads * d),
+                v: rng.normal_vec(heads * d),
+            };
+            done(server.decode_wait(job).map(|_| ()))
+        }
+        Request::Close { session, .. } => done(server.close_session(session)),
+        Request::RegisterPrefix { key, heads, n, d, seed, .. } => {
+            let job = synth_open_job(heads, n, d, seed);
+            done(server.register_prefix(key, job).and_then(|t| t.wait().map(|_| ())))
+        }
+        Request::ReleasePrefix { key, .. } => done(server.release_prefix(key)),
+        Request::Stats { .. } => {
+            let m = server.metrics();
+            let mut stats = std::collections::BTreeMap::new();
+            let rd = |a: &std::sync::atomic::AtomicU64| a.load(Ordering::Relaxed);
+            stats.insert("jobs_submitted".to_string(), rd(&m.jobs_submitted));
+            stats.insert("jobs_completed".to_string(), rd(&m.jobs_completed));
+            stats.insert("jobs_failed".to_string(), rd(&m.jobs_failed));
+            stats.insert("admission_rejects".to_string(), rd(&m.admission_rejects));
+            stats.insert("deadline_expired".to_string(), rd(&m.deadline_expired));
+            stats.insert("sessions_opened".to_string(), rd(&m.sessions_opened));
+            stats.insert("sessions_closed".to_string(), rd(&m.sessions_closed));
+            stats.insert("decode_steps".to_string(), rd(&m.decode_steps));
+            stats.insert("panics_caught".to_string(), rd(&m.panics_caught));
+            Response::with_stats(id, stats)
+        }
+    }
+}
+
+/// Deterministic synthetic prompt for an open/full/prefix request:
+/// same seed + shape on any host reproduces the same tensors.
+pub fn synth_open_job(heads: usize, n: usize, d: usize, seed: u64) -> AttnJob {
+    let mut rng = Rng::new(seed);
+    let len = heads * n * d;
+    AttnJob {
+        id: 0,
+        heads,
+        n,
+        d,
+        q: rng.normal_vec(len),
+        k: rng.normal_vec(len),
+        v: rng.normal_vec(len),
+        causal: true,
+        mode: ModePreference::Auto,
+        seed: (seed % i32::MAX as u64) as i32,
+    }
+}

@@ -1,0 +1,48 @@
+//! Process-based load harness (ROADMAP open item #2): the measurement
+//! side of the serving stack.
+//!
+//! The in-process [`crate::bench`] loops answer "how fast is the
+//! kernel"; this module answers the question the paper's headline
+//! serving numbers actually make — "what are p50/p95/p99 under
+//! concurrent load, including the requests the system sheds".  The
+//! pieces:
+//!
+//! * [`proto`] — line-delimited JSON wire protocol.  Requests carry a
+//!   seed + shape instead of tensor payloads; the listener synthesizes
+//!   the random q/k/v server-side, so the wire stays tiny while the
+//!   compute stays real.
+//! * [`listener`] — the `hyperattn serve --listen ADDR` side: a TCP
+//!   accept loop that maps protocol requests onto a running
+//!   [`crate::coordinator::Server`], one thread per connection.
+//! * [`scenario`] — the five built-in load shapes (steady-state decode,
+//!   cold-open flood, shared-prefix fan-out, pool-exhaustion overload,
+//!   failpoint chaos), each with the serve flags / [`ServerConfig`]
+//!   that provoke the regime it measures.
+//! * [`agent`] — one traffic generator: drives open → decode* → close
+//!   over a connection and emits one latency [`summary::Sample`] per
+//!   request, classifying errors into shed / expired / fault.
+//! * [`summary`] — merges samples into per-scenario percentile blocks
+//!   (p50/p95/p99/max, tok/s, conservation counts) and the
+//!   `summary.json` artifact.
+//! * [`compare`] — baseline-vs-candidate markdown report with
+//!   threshold verdicts; the CI perf gate calls this.
+//! * [`orchestrator`] — glues it together, either spawning release
+//!   processes (`loadtest` CLI) or running server + agents in-process
+//!   (integration tests).
+//!
+//! [`ServerConfig`]: crate::coordinator::ServerConfig
+
+pub mod agent;
+pub mod compare;
+pub mod listener;
+pub mod orchestrator;
+pub mod proto;
+pub mod scenario;
+pub mod summary;
+
+pub use agent::{classify_error, run_agent, Outcome};
+pub use compare::{compare_summaries, CompareConfig};
+pub use orchestrator::{run_in_process, run_with_processes, OrchestratorConfig};
+pub use proto::{Request, Response};
+pub use scenario::{builtin_scenarios, Scenario};
+pub use summary::{Sample, ScenarioSummary, Summary};

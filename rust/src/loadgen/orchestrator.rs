@@ -1,0 +1,280 @@
+//! Glue: run scenarios end-to-end and merge agent samples into a
+//! [`Summary`].
+//!
+//! Two execution modes share the scenario/agent/summary plumbing:
+//!
+//! * [`run_with_processes`] — the real harness.  Per scenario it spawns
+//!   the release `hyperattn serve --listen 127.0.0.1:0` binary, parses
+//!   the `LISTEN <addr>` line it prints (ephemeral ports), spawns N
+//!   `loadtest agent` processes whose stdout is one JSON sample per
+//!   line, merges their samples, and kills the serve process.  Process
+//!   isolation means an agent crash or a serve panic is a measured
+//!   fault, never a harness crash.
+//! * [`run_in_process`] — same orchestration against an in-process
+//!   [`Server`] + listener thread + agent threads, still over real TCP
+//!   sockets.  This is what the integration test drives: everything
+//!   but `fork/exec` is the production code path.
+//!
+//! One server per scenario keeps regimes isolated (the overload
+//! scenario's evictions must not pollute the steady-state tail) and
+//! matches how the compare gate interprets the blocks.
+
+use std::io::{BufRead, BufReader, Read};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::AtomicBool;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::agent::{self, Conn, PREFIX_KEY};
+use super::listener;
+use super::proto::Request;
+use super::scenario::Scenario;
+use super::summary::{Outcome, Sample, ScenarioSummary, Summary};
+use crate::coordinator::{failpoint, Server};
+
+/// Process-mode knobs (binary discovery + verbosity).
+#[derive(Clone, Debug)]
+pub struct OrchestratorConfig {
+    /// path to the `hyperattn` binary (serve side)
+    pub serve_bin: PathBuf,
+    /// path to the `loadtest` binary (agent side; usually
+    /// `std::env::current_exe()`)
+    pub agent_bin: PathBuf,
+    /// echo per-scenario progress to stderr
+    pub verbose: bool,
+}
+
+/// Register (and wait for) the shared prefix when the scenario uses
+/// one, over a plain protocol connection.
+fn register_prefix_if_needed(addr: &str, scenario: &Scenario) -> Result<(), String> {
+    if scenario.prefix_rows == 0 {
+        return Ok(());
+    }
+    let mut conn = Conn::connect(addr)?;
+    let id = conn.fresh_id();
+    let req = Request::RegisterPrefix {
+        id,
+        key: PREFIX_KEY.to_string(),
+        heads: scenario.heads,
+        n: scenario.prefix_rows,
+        d: scenario.d,
+        seed: 0x90ef17,
+    };
+    let (resp, _us) = conn.call(&req);
+    match resp {
+        Ok(r) if r.ok => Ok(()),
+        Ok(r) => Err(format!(
+            "prefix register rejected: {}",
+            r.err.unwrap_or_else(|| "unknown".into())
+        )),
+        Err(e) => Err(format!("prefix register failed: {e}")),
+    }
+}
+
+// ---------------------------------------------------------------------
+// in-process mode (integration tests)
+// ---------------------------------------------------------------------
+
+/// Run scenarios against in-process servers; see module docs.
+pub fn run_in_process(scenarios: &[Scenario]) -> Result<Summary, String> {
+    let mut out = Vec::new();
+    for sc in scenarios {
+        out.push(run_scenario_in_process(sc)?);
+    }
+    Ok(Summary { scenarios: out })
+}
+
+fn run_scenario_in_process(sc: &Scenario) -> Result<ScenarioSummary, String> {
+    // failpoints are process-global: arm for chaos, clear otherwise.
+    if sc.failpoints.is_empty() {
+        failpoint::clear();
+    } else {
+        failpoint::configure(sc.failpoints, sc.failpoint_seed)?;
+    }
+    let server = Arc::new(Server::start(sc.server_config())?);
+    let (sock, local) = listener::bind("127.0.0.1:0")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let lsrv = server.clone();
+    let lstop = stop.clone();
+    let lthread = std::thread::spawn(move || listener::run(lsrv, sock, lstop));
+    let addr = local.to_string();
+
+    let result = (|| {
+        register_prefix_if_needed(&addr, sc)?;
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for aid in 0..sc.agents {
+            let addr = addr.clone();
+            let sc = sc.clone();
+            handles.push(std::thread::spawn(move || agent::run_agent(&addr, &sc, aid)));
+        }
+        let mut samples = Vec::new();
+        for h in handles {
+            match h.join() {
+                Ok(Ok(s)) => samples.extend(s),
+                Ok(Err(e)) => return Err(format!("agent failed: {e}")),
+                Err(_) => {
+                    // a panicking agent is a measured fault, not a
+                    // harness crash
+                    samples.push(Sample {
+                        op: "agent".to_string(),
+                        outcome: Outcome::Fault,
+                        us: 0,
+                    });
+                }
+            }
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        Ok(ScenarioSummary::from_samples(sc.name, &samples, wall_s))
+    })();
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = lthread.join();
+    failpoint::clear();
+    // dropping the last Arc shuts the coordinator down cleanly
+    drop(server);
+    result
+}
+
+// ---------------------------------------------------------------------
+// process mode (the real harness)
+// ---------------------------------------------------------------------
+
+/// Run scenarios by spawning release serve + agent processes; see
+/// module docs.
+pub fn run_with_processes(
+    cfg: &OrchestratorConfig,
+    scenarios: &[Scenario],
+) -> Result<Summary, String> {
+    let mut out = Vec::new();
+    for sc in scenarios {
+        if cfg.verbose {
+            eprintln!(
+                "[loadtest] scenario {}: {} agents x {} opens x {} decodes (n={})",
+                sc.name, sc.agents, sc.opens_per_agent, sc.decodes_per_open, sc.n
+            );
+        }
+        out.push(run_scenario_with_processes(cfg, sc)?);
+    }
+    Ok(Summary { scenarios: out })
+}
+
+fn run_scenario_with_processes(
+    cfg: &OrchestratorConfig,
+    sc: &Scenario,
+) -> Result<ScenarioSummary, String> {
+    let mut serve = spawn_serve(cfg, sc)?;
+    let result = (|| {
+        let addr = wait_for_listen(&mut serve)?;
+        register_prefix_if_needed(&addr, sc)?;
+
+        let t0 = Instant::now();
+        let mut agents = Vec::new();
+        for aid in 0..sc.agents {
+            let child = Command::new(&cfg.agent_bin)
+                .arg("agent")
+                .arg("--addr")
+                .arg(&addr)
+                .arg("--scenario")
+                .arg(sc.name)
+                .arg("--agent-id")
+                .arg(aid.to_string())
+                .stdout(Stdio::piped())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .map_err(|e| format!("spawn agent {}: {e}", cfg.agent_bin.display()))?;
+            agents.push(child);
+        }
+        let mut samples = Vec::new();
+        for child in agents {
+            let output =
+                child.wait_with_output().map_err(|e| format!("wait for agent: {e}"))?;
+            if !output.status.success() {
+                // a crashed agent process is a measured fault
+                samples.push(Sample { op: "agent".to_string(), outcome: Outcome::Fault, us: 0 });
+            }
+            for line in String::from_utf8_lossy(&output.stdout).lines() {
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                match Sample::from_line(line) {
+                    Ok(s) => samples.push(s),
+                    Err(e) => {
+                        return Err(format!("agent emitted unparseable sample: {e}: {line}"))
+                    }
+                }
+            }
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        if samples.is_empty() {
+            return Err(format!("scenario {}: no samples collected", sc.name));
+        }
+        Ok(ScenarioSummary::from_samples(sc.name, &samples, wall_s))
+    })();
+    // always reap the serve process, success or not
+    let _ = serve.kill();
+    let _ = serve.wait();
+    result
+}
+
+fn spawn_serve(cfg: &OrchestratorConfig, sc: &Scenario) -> Result<Child, String> {
+    Command::new(&cfg.serve_bin)
+        .arg("serve")
+        .arg("--listen")
+        .arg("127.0.0.1:0")
+        .args(sc.serve_flags())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .map_err(|e| format!("spawn serve {}: {e}", cfg.serve_bin.display()))
+}
+
+/// Parse the `LISTEN <addr>` line serve prints once bound.  Serve may
+/// print startup lines first (failpoints armed, prefix pinned, ...);
+/// scan a bounded number of lines so a misbehaving binary cannot hang
+/// the harness forever on a silent pipe.
+fn wait_for_listen(serve: &mut Child) -> Result<String, String> {
+    let stdout = serve.stdout.take().ok_or_else(|| "serve stdout not piped".to_string())?;
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    for _ in 0..64 {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {
+                if let Some(addr) = line.trim().strip_prefix("LISTEN ") {
+                    let addr = addr.trim().to_string();
+                    // keep draining so serve never blocks on a full pipe
+                    std::thread::spawn(move || {
+                        let mut sink = Vec::new();
+                        let _ = reader.read_to_end(&mut sink);
+                    });
+                    return Ok(addr);
+                }
+            }
+            Err(e) => return Err(format!("reading serve stdout: {e}")),
+        }
+    }
+    Err("serve exited (or fell silent) before printing LISTEN <addr>".to_string())
+}
+
+/// Locate the sibling `hyperattn` binary next to the running
+/// `loadtest` binary (both live in `target/<profile>/`).
+pub fn sibling_serve_bin() -> Result<PathBuf, String> {
+    let me = std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?;
+    let dir = me.parent().ok_or_else(|| "current_exe has no parent dir".to_string())?;
+    let name = if cfg!(windows) { "hyperattn.exe" } else { "hyperattn" };
+    let candidate = dir.join(name);
+    if candidate.exists() {
+        Ok(candidate)
+    } else {
+        Err(format!(
+            "serve binary not found at {} (build it with `cargo build --release --bin hyperattn`, \
+             or pass --serve-bin)",
+            candidate.display()
+        ))
+    }
+}

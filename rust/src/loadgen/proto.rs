@@ -1,0 +1,305 @@
+//! Line-delimited JSON wire protocol between load agents and a
+//! `hyperattn serve --listen` process.
+//!
+//! One request object per line, one response object per line, strictly
+//! request/response per connection (concurrency comes from multiple
+//! connections).  Requests carry a `seed` and a shape instead of tensor
+//! payloads — the listener synthesizes the q/k/v deterministically from
+//! the seed, so a decode request is ~100 bytes on the wire while the
+//! server still does real attention work.
+
+use std::collections::BTreeMap;
+
+use crate::json::{parse, Value};
+
+/// A protocol request.  `id` is an agent-chosen correlation id echoed
+/// back in the [`Response`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Ping { id: u64 },
+    /// Open a session by ingesting an `n`-row synthetic prompt
+    /// (optionally forked from a registered `prefix`).
+    Open { id: u64, heads: usize, n: usize, d: usize, seed: u64, prefix: Option<String> },
+    /// One-shot full attention job (no session).
+    Full { id: u64, heads: usize, n: usize, d: usize, seed: u64 },
+    /// One decode step against an open session.
+    Decode { id: u64, session: u64, heads: usize, d: usize, seed: u64 },
+    Close { id: u64, session: u64 },
+    /// Ingest + pin a shareable prefix under `key` (waits for the
+    /// ingest to finish before replying).
+    RegisterPrefix { id: u64, key: String, heads: usize, n: usize, d: usize, seed: u64 },
+    ReleasePrefix { id: u64, key: String },
+    /// Snapshot server-side counters (completed/failed/rejects/...).
+    Stats { id: u64 },
+}
+
+impl Request {
+    pub fn id(&self) -> u64 {
+        match *self {
+            Request::Ping { id }
+            | Request::Open { id, .. }
+            | Request::Full { id, .. }
+            | Request::Decode { id, .. }
+            | Request::Close { id, .. }
+            | Request::RegisterPrefix { id, .. }
+            | Request::ReleasePrefix { id, .. }
+            | Request::Stats { id } => id,
+        }
+    }
+
+    /// Serialize to one JSON line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        let mut o = BTreeMap::new();
+        let num = |x: u64| Value::Num(x as f64);
+        match self {
+            Request::Ping { id } => {
+                o.insert("op".into(), Value::Str("ping".into()));
+                o.insert("id".into(), num(*id));
+            }
+            Request::Open { id, heads, n, d, seed, prefix } => {
+                o.insert("op".into(), Value::Str("open".into()));
+                o.insert("id".into(), num(*id));
+                o.insert("heads".into(), num(*heads as u64));
+                o.insert("n".into(), num(*n as u64));
+                o.insert("d".into(), num(*d as u64));
+                o.insert("seed".into(), num(*seed));
+                if let Some(p) = prefix {
+                    o.insert("prefix".into(), Value::Str(p.clone()));
+                }
+            }
+            Request::Full { id, heads, n, d, seed } => {
+                o.insert("op".into(), Value::Str("full".into()));
+                o.insert("id".into(), num(*id));
+                o.insert("heads".into(), num(*heads as u64));
+                o.insert("n".into(), num(*n as u64));
+                o.insert("d".into(), num(*d as u64));
+                o.insert("seed".into(), num(*seed));
+            }
+            Request::Decode { id, session, heads, d, seed } => {
+                o.insert("op".into(), Value::Str("decode".into()));
+                o.insert("id".into(), num(*id));
+                o.insert("session".into(), num(*session));
+                o.insert("heads".into(), num(*heads as u64));
+                o.insert("d".into(), num(*d as u64));
+                o.insert("seed".into(), num(*seed));
+            }
+            Request::Close { id, session } => {
+                o.insert("op".into(), Value::Str("close".into()));
+                o.insert("id".into(), num(*id));
+                o.insert("session".into(), num(*session));
+            }
+            Request::RegisterPrefix { id, key, heads, n, d, seed } => {
+                o.insert("op".into(), Value::Str("register_prefix".into()));
+                o.insert("id".into(), num(*id));
+                o.insert("key".into(), Value::Str(key.clone()));
+                o.insert("heads".into(), num(*heads as u64));
+                o.insert("n".into(), num(*n as u64));
+                o.insert("d".into(), num(*d as u64));
+                o.insert("seed".into(), num(*seed));
+            }
+            Request::ReleasePrefix { id, key } => {
+                o.insert("op".into(), Value::Str("release_prefix".into()));
+                o.insert("id".into(), num(*id));
+                o.insert("key".into(), Value::Str(key.clone()));
+            }
+            Request::Stats { id } => {
+                o.insert("op".into(), Value::Str("stats".into()));
+                o.insert("id".into(), num(*id));
+            }
+        }
+        Value::Object(o).to_string()
+    }
+
+    /// Parse one JSON line into a request.
+    pub fn from_line(line: &str) -> Result<Request, String> {
+        let v = parse(line).map_err(|e| format!("bad request json: {e:?}"))?;
+        let op =
+            v.get("op").and_then(Value::as_str).ok_or_else(|| "missing op".to_string())?.to_string();
+        let id = get_u64(&v, "id")?;
+        let req = match op.as_str() {
+            "ping" => Request::Ping { id },
+            "open" => Request::Open {
+                id,
+                heads: get_usize(&v, "heads")?,
+                n: get_usize(&v, "n")?,
+                d: get_usize(&v, "d")?,
+                seed: get_u64(&v, "seed")?,
+                prefix: v.get("prefix").and_then(Value::as_str).map(str::to_string),
+            },
+            "full" => Request::Full {
+                id,
+                heads: get_usize(&v, "heads")?,
+                n: get_usize(&v, "n")?,
+                d: get_usize(&v, "d")?,
+                seed: get_u64(&v, "seed")?,
+            },
+            "decode" => Request::Decode {
+                id,
+                session: get_u64(&v, "session")?,
+                heads: get_usize(&v, "heads")?,
+                d: get_usize(&v, "d")?,
+                seed: get_u64(&v, "seed")?,
+            },
+            "close" => Request::Close { id, session: get_u64(&v, "session")? },
+            "register_prefix" => Request::RegisterPrefix {
+                id,
+                key: get_str(&v, "key")?,
+                heads: get_usize(&v, "heads")?,
+                n: get_usize(&v, "n")?,
+                d: get_usize(&v, "d")?,
+                seed: get_u64(&v, "seed")?,
+            },
+            "release_prefix" => Request::ReleasePrefix { id, key: get_str(&v, "key")? },
+            "stats" => Request::Stats { id },
+            other => return Err(format!("unknown op {other:?}")),
+        };
+        Ok(req)
+    }
+}
+
+/// A protocol response; `err` is set iff `ok` is false, `session` only
+/// on successful opens, `stats` only for [`Request::Stats`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub ok: bool,
+    pub err: Option<String>,
+    pub session: Option<u64>,
+    pub stats: Option<BTreeMap<String, u64>>,
+}
+
+impl Response {
+    pub fn success(id: u64) -> Self {
+        Response { id, ok: true, err: None, session: None, stats: None }
+    }
+    pub fn with_session(id: u64, session: u64) -> Self {
+        Response { id, ok: true, err: None, session: Some(session), stats: None }
+    }
+    pub fn with_stats(id: u64, stats: BTreeMap<String, u64>) -> Self {
+        Response { id, ok: true, err: None, session: None, stats: Some(stats) }
+    }
+    pub fn failure(id: u64, err: impl Into<String>) -> Self {
+        Response { id, ok: false, err: Some(err.into()), session: None, stats: None }
+    }
+
+    pub fn to_line(&self) -> String {
+        let mut o = BTreeMap::new();
+        o.insert("id".into(), Value::Num(self.id as f64));
+        o.insert("ok".into(), Value::Bool(self.ok));
+        if let Some(e) = &self.err {
+            o.insert("err".into(), Value::Str(e.clone()));
+        }
+        if let Some(s) = self.session {
+            o.insert("session".into(), Value::Num(s as f64));
+        }
+        if let Some(stats) = &self.stats {
+            let mut so = BTreeMap::new();
+            for (k, v) in stats {
+                so.insert(k.clone(), Value::Num(*v as f64));
+            }
+            o.insert("stats".into(), Value::Object(so));
+        }
+        Value::Object(o).to_string()
+    }
+
+    pub fn from_line(line: &str) -> Result<Response, String> {
+        let v = parse(line).map_err(|e| format!("bad response json: {e:?}"))?;
+        let stats = match v.get("stats") {
+            Some(Value::Object(so)) => {
+                let mut m = BTreeMap::new();
+                for (k, sv) in so {
+                    m.insert(
+                        k.clone(),
+                        sv.as_f64().ok_or_else(|| format!("stat {k} not a number"))? as u64,
+                    );
+                }
+                Some(m)
+            }
+            _ => None,
+        };
+        Ok(Response {
+            id: get_u64(&v, "id")?,
+            ok: v.get("ok").and_then(Value::as_bool).ok_or_else(|| "missing ok".to_string())?,
+            err: v.get("err").and_then(Value::as_str).map(str::to_string),
+            session: v.get("session").and_then(Value::as_f64).map(|x| x as u64),
+            stats,
+        })
+    }
+}
+
+fn get_u64(v: &Value, key: &str) -> Result<u64, String> {
+    v.get(key)
+        .and_then(Value::as_f64)
+        .filter(|x| x.is_finite() && *x >= 0.0)
+        .map(|x| x as u64)
+        .ok_or_else(|| format!("missing/invalid field {key:?}"))
+}
+
+fn get_usize(v: &Value, key: &str) -> Result<usize, String> {
+    get_u64(v, key).map(|x| x as usize)
+}
+
+fn get_str(v: &Value, key: &str) -> Result<String, String> {
+    v.get(key)
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing/invalid field {key:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requests_round_trip() {
+        let reqs = vec![
+            Request::Ping { id: 1 },
+            Request::Open { id: 2, heads: 2, n: 128, d: 16, seed: 7, prefix: None },
+            Request::Open {
+                id: 3,
+                heads: 2,
+                n: 64,
+                d: 16,
+                seed: 8,
+                prefix: Some("sys".into()),
+            },
+            Request::Full { id: 4, heads: 1, n: 256, d: 32, seed: 9 },
+            Request::Decode { id: 5, session: 11, heads: 2, d: 16, seed: 10 },
+            Request::Close { id: 6, session: 11 },
+            Request::RegisterPrefix { id: 7, key: "sys".into(), heads: 2, n: 512, d: 16, seed: 1 },
+            Request::ReleasePrefix { id: 8, key: "sys".into() },
+            Request::Stats { id: 9 },
+        ];
+        for r in reqs {
+            let line = r.to_line();
+            assert!(!line.contains('\n'), "one request per line: {line}");
+            assert_eq!(Request::from_line(&line).unwrap(), r, "round-trip of {line}");
+        }
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        let mut stats = BTreeMap::new();
+        stats.insert("jobs_completed".to_string(), 42u64);
+        let resps = vec![
+            Response::success(1),
+            Response::with_session(2, 99),
+            Response::failure(3, "session admission rejected: pool exhausted"),
+            Response::with_stats(4, stats),
+        ];
+        for r in resps {
+            let line = r.to_line();
+            assert!(!line.contains('\n'));
+            assert_eq!(Response::from_line(&line).unwrap(), r, "round-trip of {line}");
+        }
+    }
+
+    #[test]
+    fn malformed_lines_are_errors_not_panics() {
+        assert!(Request::from_line("{}").is_err());
+        assert!(Request::from_line("not json").is_err());
+        assert!(Request::from_line(r#"{"op":"warp","id":1}"#).is_err());
+        assert!(Request::from_line(r#"{"op":"open","id":1}"#).is_err());
+        assert!(Response::from_line(r#"{"id":1}"#).is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! The five built-in load shapes.  Each scenario pairs an agent-side
+//! traffic pattern (opens per agent, decode steps per open, prompt
+//! rows) with the server-side configuration that provokes the regime
+//! it measures — a tight page budget for the overload scenario, armed
+//! failpoints for chaos, a registered shared prefix for fan-out.
+//!
+//! One serve process (or in-process [`Server`]) is started per
+//! scenario, so the regimes cannot contaminate each other's tails.
+//!
+//! [`Server`]: crate::coordinator::Server
+
+use std::time::Duration;
+
+use crate::coordinator::ServerConfig;
+
+/// One load scenario: traffic shape + the server config that matches.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: &'static str,
+    /// concurrent agent connections driving traffic
+    pub agents: usize,
+    /// sessions each agent opens (sequentially)
+    pub opens_per_agent: usize,
+    /// decode steps per opened session
+    pub decodes_per_open: usize,
+    /// prompt rows ingested per open
+    pub n: usize,
+    pub heads: usize,
+    pub d: usize,
+    /// rows of shared prefix registered once by the orchestrator and
+    /// forked by every open (0 = no shared prefix)
+    pub prefix_rows: usize,
+    /// global page budget (0 = unbounded)
+    pub kv_pages: usize,
+    /// per-request deadline in ms (0 = none)
+    pub deadline_ms: u64,
+    /// failpoint spec + seed armed for this scenario ("" = none)
+    pub failpoints: &'static str,
+    pub failpoint_seed: u64,
+}
+
+impl Scenario {
+    /// Extra `hyperattn serve` flags reproducing [`Self::server_config`]
+    /// in process mode.
+    pub fn serve_flags(&self) -> Vec<String> {
+        let mut f = Vec::new();
+        if self.kv_pages > 0 {
+            f.push("--kv-pages".to_string());
+            f.push(self.kv_pages.to_string());
+        }
+        if self.deadline_ms > 0 {
+            f.push("--deadline-ms".to_string());
+            f.push(self.deadline_ms.to_string());
+        }
+        if !self.failpoints.is_empty() {
+            f.push("--failpoints".to_string());
+            f.push(self.failpoints.to_string());
+            f.push("--failpoint-seed".to_string());
+            f.push(self.failpoint_seed.to_string());
+        }
+        f
+    }
+
+    /// The in-process mirror of [`Self::serve_flags`] (failpoints are
+    /// process-global and armed by the orchestrator, not here).
+    pub fn server_config(&self) -> ServerConfig {
+        let mut cfg = ServerConfig::substrate_only();
+        if self.kv_pages > 0 {
+            cfg.cache.budget_pages = Some(self.kv_pages);
+        }
+        if self.deadline_ms > 0 {
+            cfg.request_timeout = Some(Duration::from_millis(self.deadline_ms));
+        }
+        cfg
+    }
+
+    /// Requests this scenario issues per agent (open + decodes + close
+    /// per session), used for conservation checks and progress output.
+    pub fn requests_per_agent(&self) -> usize {
+        self.opens_per_agent * (2 + self.decodes_per_open)
+    }
+}
+
+/// The five built-in scenarios at smoke sizes (a laptop-sized CI run;
+/// ROADMAP keeps the 131k headline-scale sweep as an open item).
+pub fn builtin_scenarios() -> Vec<Scenario> {
+    let base = Scenario {
+        name: "steady",
+        agents: 4,
+        opens_per_agent: 2,
+        decodes_per_open: 16,
+        n: 192,
+        heads: 2,
+        d: 16,
+        prefix_rows: 0,
+        kv_pages: 0,
+        deadline_ms: 0,
+        failpoints: "",
+        failpoint_seed: 0,
+    };
+    vec![
+        // 1) steady-state decode: few long-lived sessions, decode-heavy.
+        base.clone(),
+        // 2) cold-open flood: session churn dominated by prefill admission.
+        Scenario {
+            name: "cold_open",
+            opens_per_agent: 8,
+            decodes_per_open: 2,
+            n: 96,
+            ..base.clone()
+        },
+        // 3) shared-prefix fan-out: every open forks a pinned prefix
+        //    (PR 5 registry) and appends a short suffix.
+        Scenario {
+            name: "prefix_fanout",
+            opens_per_agent: 4,
+            decodes_per_open: 8,
+            n: 32,
+            prefix_rows: 384,
+            ..base.clone()
+        },
+        // 4) pool-exhaustion overload: a page budget far below the
+        //    offered load plus a deadline, so the interesting outputs
+        //    are the reject/expired counts and the p99 *including*
+        //    shed traffic — not tok/s.
+        Scenario {
+            name: "overload",
+            agents: 6,
+            opens_per_agent: 4,
+            decodes_per_open: 8,
+            n: 256,
+            kv_pages: 3,
+            deadline_ms: 200,
+            ..base.clone()
+        },
+        // 5) chaos: PR 6 failpoints as the fault source; measures that
+        //    injected faults resolve explicitly and the tail they cost.
+        Scenario {
+            name: "chaos",
+            opens_per_agent: 3,
+            decodes_per_open: 12,
+            n: 128,
+            failpoints: "open_job=err:0.1,decode_job=err:0.15",
+            failpoint_seed: 7,
+            ..base
+        },
+    ]
+}
+
+/// Resolve a `--scenarios` CLI value ("all" or a comma list of names).
+pub fn select(spec: &str) -> Result<Vec<Scenario>, String> {
+    let all = builtin_scenarios();
+    if spec == "all" {
+        return Ok(all);
+    }
+    let mut out = Vec::new();
+    for name in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        match all.iter().find(|s| s.name == name) {
+            Some(s) => out.push(s.clone()),
+            None => {
+                let known: Vec<_> = all.iter().map(|s| s.name).collect();
+                return Err(format!("unknown scenario {name:?}; known: {known:?}"));
+            }
+        }
+    }
+    if out.is_empty() {
+        return Err("no scenarios selected".to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_builtin_scenarios_with_distinct_regimes() {
+        let all = builtin_scenarios();
+        assert_eq!(all.len(), 5);
+        let names: Vec<_> = all.iter().map(|s| s.name).collect();
+        assert_eq!(names, vec!["steady", "cold_open", "prefix_fanout", "overload", "chaos"]);
+        let overload = &all[3];
+        assert!(overload.kv_pages > 0 && overload.deadline_ms > 0);
+        assert!(!all[4].failpoints.is_empty());
+        assert!(all[2].prefix_rows > 0);
+        // flags round-trip the regime knobs into serve argv
+        let flags = overload.serve_flags();
+        assert!(flags.contains(&"--kv-pages".to_string()));
+        assert!(flags.contains(&"--deadline-ms".to_string()));
+    }
+
+    #[test]
+    fn select_parses_lists_and_rejects_unknown() {
+        assert_eq!(select("all").unwrap().len(), 5);
+        let two = select("steady,chaos").unwrap();
+        assert_eq!(two.len(), 2);
+        assert_eq!(two[1].name, "chaos");
+        assert!(select("warpspeed").is_err());
+        assert!(select("").is_err());
+    }
+}

@@ -1,0 +1,324 @@
+//! Per-request samples and their reduction into the percentile-focused
+//! `summary.json` artifact.
+//!
+//! Percentiles here are **exact** (sorted raw samples, nearest-rank),
+//! not the log₂-bucket estimates of
+//! [`crate::coordinator::metrics::Histogram`] — the harness holds every
+//! sample anyway, so there is no reason to pay the bucket error in the
+//! artifact CI gates on.  Latency percentiles include shed, expired,
+//! and faulted requests (the overload-accounting contract): a rejected
+//! request still cost its caller the measured wall time.
+
+use std::collections::BTreeMap;
+
+use crate::bench::rate;
+use crate::json::{parse, Value};
+
+/// How a request resolved, from the agent's point of view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// resolved successfully
+    Ok,
+    /// admission-rejected (load shed) by the degradation ladder
+    Shed,
+    /// resolved with `DEADLINE_EXPIRED`
+    Expired,
+    /// any other error (injected fault, evicted session, protocol error)
+    Fault,
+}
+
+impl Outcome {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Outcome::Ok => "ok",
+            Outcome::Shed => "shed",
+            Outcome::Expired => "expired",
+            Outcome::Fault => "fault",
+        }
+    }
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "ok" => Ok(Outcome::Ok),
+            "shed" => Ok(Outcome::Shed),
+            "expired" => Ok(Outcome::Expired),
+            "fault" => Ok(Outcome::Fault),
+            other => Err(format!("unknown outcome {other:?}")),
+        }
+    }
+}
+
+/// One request's latency record, as emitted by an agent (one JSON line
+/// per sample in process mode).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    /// request kind: "open" | "decode" | "close" | "full"
+    pub op: String,
+    pub outcome: Outcome,
+    /// client-observed latency (send → response)
+    pub us: u64,
+}
+
+impl Sample {
+    pub fn to_line(&self) -> String {
+        let mut o = BTreeMap::new();
+        o.insert("op".into(), Value::Str(self.op.clone()));
+        o.insert("outcome".into(), Value::Str(self.outcome.as_str().into()));
+        o.insert("us".into(), Value::Num(self.us as f64));
+        Value::Object(o).to_string()
+    }
+
+    pub fn from_line(line: &str) -> Result<Sample, String> {
+        let v = parse(line).map_err(|e| format!("bad sample json: {e:?}"))?;
+        let op = v
+            .get("op")
+            .and_then(Value::as_str)
+            .ok_or_else(|| "sample missing op".to_string())?
+            .to_string();
+        let outcome = Outcome::parse(
+            v.get("outcome")
+                .and_then(Value::as_str)
+                .ok_or_else(|| "sample missing outcome".to_string())?,
+        )?;
+        let us = v
+            .get("us")
+            .and_then(Value::as_f64)
+            .filter(|x| x.is_finite() && *x >= 0.0)
+            .ok_or_else(|| "sample missing us".to_string())? as u64;
+        Ok(Sample { op, outcome, us })
+    }
+}
+
+/// Exact nearest-rank quantile over raw samples: the smallest value
+/// with at least `ceil(q·len)` samples at or below it.
+pub fn exact_quantile_us(sorted_us: &[u64], q: f64) -> u64 {
+    if sorted_us.is_empty() {
+        return 0;
+    }
+    let len = sorted_us.len() as f64;
+    let rank = ((len * q).ceil() as usize).clamp(1, sorted_us.len());
+    sorted_us[rank - 1]
+}
+
+/// One scenario's merged result block.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSummary {
+    pub name: String,
+    pub issued: u64,
+    pub ok: u64,
+    pub shed: u64,
+    pub expired: u64,
+    pub faulted: u64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+    /// successful decode steps per second of scenario wall time
+    pub tok_s: f64,
+    pub wall_s: f64,
+}
+
+impl ScenarioSummary {
+    /// Reduce an agent-merged sample set.  Latency percentiles span
+    /// *all* outcomes (see module docs); tok/s counts only successful
+    /// decode steps.
+    pub fn from_samples(name: impl Into<String>, samples: &[Sample], wall_s: f64) -> Self {
+        let mut us: Vec<u64> = samples.iter().map(|s| s.us).collect();
+        us.sort_unstable();
+        let count = |o: Outcome| samples.iter().filter(|s| s.outcome == o).count() as u64;
+        let decode_ok =
+            samples.iter().filter(|s| s.op == "decode" && s.outcome == Outcome::Ok).count();
+        ScenarioSummary {
+            name: name.into(),
+            issued: samples.len() as u64,
+            ok: count(Outcome::Ok),
+            shed: count(Outcome::Shed),
+            expired: count(Outcome::Expired),
+            faulted: count(Outcome::Fault),
+            p50_us: exact_quantile_us(&us, 0.50),
+            p95_us: exact_quantile_us(&us, 0.95),
+            p99_us: exact_quantile_us(&us, 0.99),
+            max_us: us.last().copied().unwrap_or(0),
+            tok_s: rate(decode_ok as f64, wall_s),
+            wall_s: if wall_s.is_finite() && wall_s >= 0.0 { wall_s } else { 0.0 },
+        }
+    }
+
+    /// `issued == ok + shed + expired + faulted` — nothing vanished.
+    pub fn conserved(&self) -> bool {
+        self.issued == self.ok + self.shed + self.expired + self.faulted
+    }
+
+    /// `p50 ≤ p95 ≤ p99 ≤ max`.
+    pub fn monotone(&self) -> bool {
+        self.p50_us <= self.p95_us && self.p95_us <= self.p99_us && self.p99_us <= self.max_us
+    }
+
+    fn to_value(&self) -> Value {
+        let mut o = BTreeMap::new();
+        let num = |x: u64| Value::Num(x as f64);
+        o.insert("issued".into(), num(self.issued));
+        o.insert("ok".into(), num(self.ok));
+        o.insert("shed".into(), num(self.shed));
+        o.insert("expired".into(), num(self.expired));
+        o.insert("faulted".into(), num(self.faulted));
+        o.insert("p50_us".into(), num(self.p50_us));
+        o.insert("p95_us".into(), num(self.p95_us));
+        o.insert("p99_us".into(), num(self.p99_us));
+        o.insert("max_us".into(), num(self.max_us));
+        o.insert("tok_s".into(), Value::Num(self.tok_s));
+        o.insert("wall_s".into(), Value::Num(self.wall_s));
+        Value::Object(o)
+    }
+
+    fn from_value(name: &str, v: &Value) -> Result<Self, String> {
+        let u = |key: &str| -> Result<u64, String> {
+            v.get(key)
+                .and_then(Value::as_f64)
+                .filter(|x| x.is_finite() && *x >= 0.0)
+                .map(|x| x as u64)
+                .ok_or_else(|| format!("scenario {name}: missing/invalid {key}"))
+        };
+        let f = |key: &str| -> Result<f64, String> {
+            v.get(key)
+                .and_then(Value::as_f64)
+                .filter(|x| x.is_finite())
+                .ok_or_else(|| format!("scenario {name}: missing/non-finite {key}"))
+        };
+        Ok(ScenarioSummary {
+            name: name.to_string(),
+            issued: u("issued")?,
+            ok: u("ok")?,
+            shed: u("shed")?,
+            expired: u("expired")?,
+            faulted: u("faulted")?,
+            p50_us: u("p50_us")?,
+            p95_us: u("p95_us")?,
+            p99_us: u("p99_us")?,
+            max_us: u("max_us")?,
+            tok_s: f("tok_s")?,
+            wall_s: f("wall_s")?,
+        })
+    }
+}
+
+/// The whole `summary.json` artifact: one block per scenario, in run
+/// order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Summary {
+    pub scenarios: Vec<ScenarioSummary>,
+}
+
+impl Summary {
+    pub fn to_json(&self) -> String {
+        let mut scen = BTreeMap::new();
+        for s in &self.scenarios {
+            scen.insert(s.name.clone(), s.to_value());
+        }
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), Value::Str("loadtest-summary-v1".into()));
+        root.insert("scenarios".into(), Value::Object(scen));
+        Value::Object(root).to_string()
+    }
+
+    pub fn parse(text: &str) -> Result<Summary, String> {
+        let v = parse(text).map_err(|e| format!("summary not valid json: {e:?}"))?;
+        let scen = match v.get("scenarios") {
+            Some(Value::Object(m)) => m,
+            _ => return Err("summary missing scenarios object".to_string()),
+        };
+        let mut out = Vec::new();
+        for (name, sv) in scen {
+            out.push(ScenarioSummary::from_value(name, sv)?);
+        }
+        Ok(Summary { scenarios: out })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ScenarioSummary> {
+        self.scenarios.iter().find(|s| s.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(op: &str, outcome: Outcome, us: u64) -> Sample {
+        Sample { op: op.to_string(), outcome, us }
+    }
+
+    #[test]
+    fn samples_round_trip_as_lines() {
+        for s in [
+            sample("open", Outcome::Ok, 1200),
+            sample("decode", Outcome::Shed, 90),
+            sample("decode", Outcome::Expired, 50_000),
+            sample("close", Outcome::Fault, 7),
+        ] {
+            assert_eq!(Sample::from_line(&s.to_line()).unwrap(), s);
+        }
+        assert!(Sample::from_line("{}").is_err());
+    }
+
+    #[test]
+    fn exact_quantiles_are_nearest_rank() {
+        let us: Vec<u64> = (1..=100).collect();
+        assert_eq!(exact_quantile_us(&us, 0.50), 50);
+        assert_eq!(exact_quantile_us(&us, 0.95), 95);
+        assert_eq!(exact_quantile_us(&us, 0.99), 99);
+        assert_eq!(exact_quantile_us(&us, 1.0), 100);
+        assert_eq!(exact_quantile_us(&[], 0.5), 0);
+        assert_eq!(exact_quantile_us(&[7], 0.01), 7);
+    }
+
+    #[test]
+    fn summary_reduction_counts_and_percentiles() {
+        let mut samples = Vec::new();
+        for us in 1..=98 {
+            samples.push(sample("decode", Outcome::Ok, us));
+        }
+        samples.push(sample("decode", Outcome::Shed, 200));
+        samples.push(sample("open", Outcome::Expired, 500));
+        let s = ScenarioSummary::from_samples("overload", &samples, 2.0);
+        assert_eq!(s.issued, 100);
+        assert_eq!(s.ok, 98);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.expired, 1);
+        assert_eq!(s.faulted, 0);
+        assert!(s.conserved());
+        assert!(s.monotone());
+        // the shed/expired tail is *in* the percentiles
+        assert_eq!(s.max_us, 500);
+        assert_eq!(s.p99_us, 200);
+        // tok/s counts only ok decodes: 98 over 2 s
+        assert!((s.tok_s - 49.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_json_round_trips() {
+        let s = ScenarioSummary::from_samples(
+            "steady",
+            &[sample("decode", Outcome::Ok, 120), sample("open", Outcome::Fault, 80)],
+            1.5,
+        );
+        let sum = Summary { scenarios: vec![s] };
+        let text = sum.to_json();
+        let back = Summary::parse(&text).unwrap();
+        assert_eq!(back, sum);
+        assert!(Summary::parse("{\"scenarios\": 3}").is_err());
+        assert!(Summary::parse("nope").is_err());
+    }
+
+    #[test]
+    fn zero_wall_time_yields_finite_rates() {
+        let s = ScenarioSummary::from_samples(
+            "steady",
+            &[sample("decode", Outcome::Ok, 10)],
+            0.0,
+        );
+        assert!(s.tok_s.is_finite());
+        assert_eq!(s.tok_s, 0.0);
+        // and the artifact stays parseable end-to-end
+        let text = Summary { scenarios: vec![s] }.to_json();
+        assert!(Summary::parse(&text).is_ok());
+    }
+}

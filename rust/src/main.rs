@@ -117,6 +117,11 @@ COMMANDS:
                                      \"pool_alloc=err:0.05,decode_job=panic:0.01\"
                                      (same grammar as HYPERATTN_FAILPOINTS)
            [--failpoint-seed N]      deterministic failpoint draws
+           [--listen HOST:PORT]      serve the loadtest wire protocol on a
+                                     TCP socket instead of running synthetic
+                                     in-process load; prints \"LISTEN <addr>\"
+                                     once bound (port 0 = OS-assigned) and
+                                     runs until killed
   bench    [--json FILE] --sizes 4096,16384,65536 --d D --block B --samples M --reps R
            [--decode-sizes 4096,16384 --decode-steps T]   decode tokens/sec rows
            [--cache-sizes 16384,65536 --kv-window W --kv-sink S] paged-cache rows
@@ -316,11 +321,15 @@ fn main() {
             let cfg = ModelConfig { max_seq: seq_len, ..Default::default() };
             let (_, curve, rows) =
                 bench::run_fig3(cfg, args.get("steps", 150usize), seq_len, 8, true);
-            println!(
-                "final training loss {:.4} (ppl {:.2})",
-                curve.last().unwrap(),
-                curve.last().unwrap().exp()
-            );
+            match fig3_final_loss(&curve) {
+                Some(loss) => {
+                    println!("final training loss {:.4} (ppl {:.2})", loss, loss.exp())
+                }
+                None => {
+                    eprintln!("fig3: training produced an empty loss curve (steps=0?)");
+                    std::process::exit(1);
+                }
+            }
             bench::print_fig3(&rows);
         }
         "table1" => {
@@ -489,6 +498,28 @@ fn cmd_serve(args: &Args) {
         }
     }
 
+    // --listen: serve the load-harness wire protocol (loadgen::proto)
+    // instead of generating synthetic in-process load.  The printed
+    // "LISTEN <addr>" line is the orchestrator's discovery handshake —
+    // with port 0 it is the only way to learn the bound port.
+    if let Some(addr) = args.get_str("listen") {
+        use std::io::Write as _;
+        let (sock, local) = match hyperattention::loadgen::listener::bind(addr) {
+            Ok(x) => x,
+            Err(e) => {
+                eprintln!("--listen: {e}");
+                std::process::exit(1);
+            }
+        };
+        println!("LISTEN {local}");
+        // stdout is block-buffered on a pipe; the orchestrator blocks
+        // until this line actually arrives
+        let _ = std::io::stdout().flush();
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        hyperattention::loadgen::listener::run(server.clone(), sock, stop);
+        return;
+    }
+
     // streaming mode: S concurrent prefill/decode sessions of T tokens
     let stream = args.get("stream", 0usize);
     if stream > 0 {
@@ -555,20 +586,25 @@ fn cmd_serve(args: &Args) {
             }));
         }
         let (mut decoded, mut errors) = (0usize, 0usize);
-        for h in handles {
-            let (d_ok, d_err) = h.join().expect("client thread must not panic");
+        let (results, panicked) = join_clients(handles);
+        for (d_ok, d_err) in results {
             decoded += d_ok;
             errors += d_err;
         }
+        errors += panicked;
         let dt = t0.elapsed().as_secs_f64();
         println!(
             "{decoded}/{} decode tokens in {dt:.2}s ({:.1} tok/s aggregate), \
              {errors} faulted requests (all resolved explicitly)\n{}\n{}",
             stream * tokens,
-            decoded as f64 / dt,
+            bench::rate(decoded as f64, dt),
             server.metrics().report(),
             server.cache_gauges().report()
         );
+        if panicked > 0 {
+            eprintln!("serve: {panicked} client stream(s) panicked; counted as faulted");
+            std::process::exit(1);
+        }
         return;
     }
 
@@ -597,18 +633,68 @@ fn cmd_serve(args: &Args) {
     }
     let mut ok = 0usize;
     let mut errors = 0usize;
-    for h in handles {
-        match h.join().expect("client thread must not panic") {
+    let (results, panicked) = join_clients(handles);
+    for r in results {
+        match r {
             Ok(_) => ok += 1,
             Err(_) => errors += 1,
         }
     }
+    errors += panicked;
     let dt = t0.elapsed().as_secs_f64();
     println!(
         "{ok}/{jobs} jobs in {dt:.2}s ({:.1} jobs/s), {errors} faulted \
          (all resolved explicitly)\n{}\n{}",
-        ok as f64 / dt,
+        bench::rate(ok as f64, dt),
         server.metrics().report(),
         server.cache_gauges().report()
     );
+    if panicked > 0 {
+        eprintln!("serve: {panicked} client thread(s) panicked; counted as faulted");
+        std::process::exit(1);
+    }
+}
+
+/// Final loss of a fig3 training curve; `None` (instead of a panic)
+/// when the curve is empty — e.g. `steps=0`.
+fn fig3_final_loss(curve: &[f32]) -> Option<f32> {
+    curve.last().copied()
+}
+
+/// Join client threads, converting panics into a count instead of
+/// propagating them: one panicking client must not take down the whole
+/// CLI run — it becomes a faulted stream and a nonzero exit.
+fn join_clients<T>(handles: Vec<std::thread::JoinHandle<T>>) -> (Vec<T>, usize) {
+    let mut out = Vec::with_capacity(handles.len());
+    let mut panicked = 0usize;
+    for h in handles {
+        match h.join() {
+            Ok(v) => out.push(v),
+            Err(_) => panicked += 1,
+        }
+    }
+    (out, panicked)
+}
+
+#[cfg(test)]
+mod cli_tests {
+    use super::*;
+
+    #[test]
+    fn fig3_empty_curve_is_an_explicit_error_not_a_panic() {
+        assert_eq!(fig3_final_loss(&[]), None);
+        assert_eq!(fig3_final_loss(&[1.5, 0.5]), Some(0.5));
+    }
+
+    #[test]
+    fn panicking_client_threads_are_counted_not_propagated() {
+        let handles = vec![
+            std::thread::spawn(|| 1usize),
+            std::thread::spawn(|| panic!("injected client panic")),
+            std::thread::spawn(|| 3usize),
+        ];
+        let (results, panicked) = join_clients(handles);
+        assert_eq!(results, vec![1, 3]);
+        assert_eq!(panicked, 1);
+    }
 }

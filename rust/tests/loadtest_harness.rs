@@ -1,0 +1,113 @@
+//! Integration test for the load-harness plumbing (ISSUE 10): run the
+//! orchestrator in-process — real TCP listener, real protocol, real
+//! agent loops, everything but `fork/exec` — against tiny scenarios,
+//! then assert the structural properties the CI perf gate relies on:
+//!
+//! * `summary.json` parses back into what was produced;
+//! * every scenario block has monotone p50 ≤ p95 ≤ p99 ≤ max;
+//! * counts conserve: `issued == ok + shed + expired + faulted`;
+//! * `compare` flags an injected 2× p99 regression and passes an
+//!   identical baseline.
+
+use hyperattention::loadgen::{
+    builtin_scenarios, compare_summaries, run_in_process, CompareConfig, Scenario, Summary,
+};
+
+/// Two tiny scenarios: a steady-shaped one and an overload-shaped one
+/// (tight page budget + deadline so shed/expired paths are reachable).
+fn tiny_scenarios() -> Vec<Scenario> {
+    let all = builtin_scenarios();
+    let steady = all.iter().find(|s| s.name == "steady").unwrap();
+    let overload = all.iter().find(|s| s.name == "overload").unwrap();
+    vec![
+        Scenario {
+            agents: 2,
+            opens_per_agent: 2,
+            decodes_per_open: 4,
+            n: 64,
+            ..steady.clone()
+        },
+        Scenario {
+            agents: 2,
+            opens_per_agent: 3,
+            decodes_per_open: 4,
+            n: 96,
+            kv_pages: 2,
+            deadline_ms: 100,
+            ..overload.clone()
+        },
+    ]
+}
+
+#[test]
+fn in_process_orchestrator_produces_a_sound_summary() {
+    let scenarios = tiny_scenarios();
+    let summary = run_in_process(&scenarios).expect("orchestrator must complete");
+    assert_eq!(summary.scenarios.len(), 2);
+
+    // the artifact round-trips through its JSON form
+    let text = summary.to_json();
+    let parsed = Summary::parse(&text).expect("summary.json must parse");
+    assert_eq!(parsed.scenarios.len(), 2);
+
+    for sc in &scenarios {
+        let s = parsed.get(sc.name).expect("scenario block present");
+        // conservation: nothing issued may vanish from the books
+        assert!(
+            s.conserved(),
+            "{}: issued {} != ok {} + shed {} + expired {} + faulted {}",
+            s.name,
+            s.issued,
+            s.ok,
+            s.shed,
+            s.expired,
+            s.faulted
+        );
+        // at least the opens were issued (agents made real requests)
+        assert!(
+            s.issued >= (sc.agents * sc.opens_per_agent) as u64,
+            "{}: only {} requests issued",
+            s.name,
+            s.issued
+        );
+        // monotone percentile ladder
+        assert!(
+            s.monotone(),
+            "{}: p50 {} p95 {} p99 {} max {} not monotone",
+            s.name,
+            s.p50_us,
+            s.p95_us,
+            s.p99_us,
+            s.max_us
+        );
+        // finiteness of the rates the compare gate reads
+        assert!(s.tok_s.is_finite() && s.tok_s >= 0.0);
+        assert!(s.wall_s.is_finite() && s.wall_s >= 0.0);
+    }
+}
+
+#[test]
+fn compare_gate_passes_self_and_flags_injected_p99_regression() {
+    let scenarios = tiny_scenarios();
+    let baseline = run_in_process(&scenarios).expect("orchestrator must complete");
+
+    // identical baseline: must pass under default thresholds
+    let self_cmp = compare_summaries(&baseline, &baseline, &CompareConfig::default());
+    assert!(self_cmp.pass, "self-compare must pass: {:?}", self_cmp.failures);
+
+    // inject a 2x p99 regression into a copy of the first scenario
+    let mut worse = baseline.clone();
+    {
+        let s = &mut worse.scenarios[0];
+        s.p99_us = s.p99_us.max(1) * 2 + 1; // strictly past the 2.0 threshold
+        s.max_us = s.max_us.max(s.p99_us);
+    }
+    let cmp = compare_summaries(&baseline, &worse, &CompareConfig::default());
+    assert!(!cmp.pass, "a >2x p99 regression must fail the gate");
+    assert!(
+        cmp.failures.iter().any(|f| f.contains("p99")),
+        "failure must name p99: {:?}",
+        cmp.failures
+    );
+    assert!(cmp.markdown.contains("FAIL"));
+}
